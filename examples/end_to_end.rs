@@ -1,0 +1,128 @@
+//! END-TO-END DRIVER — proves all layers compose on a real workload.
+//!
+//! Pipeline exercised (and cross-checked) in one run:
+//!
+//! 1. **Mapper (L3)**: (mapping, layout) co-search for a real FHE-BConv
+//!    GEMM shape on FEATHER+ 4×4 — §V.
+//! 2. **Lowering → MINISA trace**: deterministic Eq.-(1) lowering — §V-B7.
+//! 3. **Functional simulation**: the trace executes on real int8 operands
+//!    through buffers / NEST / BIRRD / OB — §IV-G semantics.
+//! 4. **AOT oracle (L1+L2 via PJRT)**: the same GEMM runs through the
+//!    JAX/Pallas-lowered HLO artifact on the PJRT CPU client — Python is
+//!    not involved at runtime.
+//! 5. **Cross-check**: simulator output == naive GEMM == PJRT oracle.
+//! 6. **Headline metrics**: the paper's instruction-traffic reduction and
+//!    speedup on a suite slice, per config — the Fig. 10/12 numbers at
+//!    example scale, recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use minisa::arch::ArchConfig;
+use minisa::coordinator::{evaluate_suite, summarize_by_config};
+use minisa::functional::naive_gemm;
+use minisa::mapper::exec::execute_program;
+use minisa::mapper::search::{search, MapperOptions};
+use minisa::mapper::lower_gemm;
+use minisa::report::{eng, f2, pct, Table};
+use minisa::runtime::{gemm_via_tiles, Runtime};
+use minisa::util::Lcg;
+use minisa::workloads::{self, Gemm};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== MINISA / FEATHER+ end-to-end driver ===\n");
+
+    // ------------------------------------------------------------------
+    // Stage 1-3: mapper → trace → functional simulation on real data.
+    // A BConv-shaped slice (K=40, N=88 — the Table I workload's tile).
+    let cfg = ArchConfig::paper(4, 4);
+    let g = Gemm::new("bconv_slice", "FHE-BConv", 64, 40, 88);
+    let opts = MapperOptions::default();
+    let d = search(&cfg, &g, &opts).ok_or_else(|| anyhow::anyhow!("no mapping"))?;
+    let prog = lower_gemm(&cfg, &g, &d.choice, d.i_order, d.w_order, d.o_order);
+    println!(
+        "[1] mapper: {g} on {} → df {:?}, tile ({},{},{}), nbc {}, dup {}",
+        cfg.name(), d.choice.df, d.choice.m_t, d.choice.k_t, d.choice.n_t,
+        d.choice.nbc, d.choice.dup
+    );
+    println!(
+        "[2] lowering: {} MINISA instructions = {} bytes (micro twin: {} bytes, {}×)",
+        prog.trace.len(),
+        prog.minisa_bytes(),
+        prog.micro_bytes(),
+        eng(prog.instr_reduction())
+    );
+
+    let mut rng = Lcg::new(2026);
+    let iv: Vec<i32> = (0..g.m * g.k).map(|_| rng.range(0, 9) as i32 - 4).collect();
+    let wv: Vec<i32> = (0..g.k * g.n).map(|_| rng.range(0, 9) as i32 - 4).collect();
+    let sim_out = execute_program(&cfg, &g, &prog, &iv, &wv)
+        .map_err(|e| anyhow::anyhow!("functional sim: {e}"))?;
+    let reference = naive_gemm(&iv, &wv, g.m, g.k, g.n);
+    anyhow::ensure!(sim_out == reference, "simulator disagrees with naive GEMM");
+    println!("[3] functional simulation: {} outputs exact vs naive GEMM ✓", sim_out.len());
+
+    // ------------------------------------------------------------------
+    // Stage 4-5: the AOT JAX/Pallas oracle through PJRT.
+    match Runtime::open(std::path::Path::new("artifacts")) {
+        Ok(rt) => {
+            println!(
+                "[4] PJRT runtime up on '{}' with {} artifacts",
+                rt.platform(),
+                rt.artifacts().len()
+            );
+            let xf: Vec<f32> = iv.iter().map(|&v| v as f32).collect();
+            let wf: Vec<f32> = wv.iter().map(|&v| v as f32).collect();
+            let oracle = gemm_via_tiles(&rt, g.m, g.k, g.n, &xf, &wf)?;
+            let mut max_err = 0f64;
+            for (a, b) in oracle.iter().zip(&reference) {
+                max_err = max_err.max((*a as f64 - *b as f64).abs());
+            }
+            anyhow::ensure!(
+                max_err < 1e-3,
+                "PJRT oracle mismatch: max |err| = {max_err}"
+            );
+            println!(
+                "[5] cross-check: functional sim == naive GEMM == Pallas/JAX HLO oracle \
+                 (max |err| {max_err:.1e}) ✓"
+            );
+        }
+        Err(e) => {
+            println!("[4] PJRT oracle skipped (artifacts not built?): {e:#}");
+            println!("    run `make artifacts` first for the full cross-check");
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Stage 6: headline metrics on a suite slice × three scales.
+    println!("\n[6] headline metrics (suite slice — full run: `minisa evaluate`):\n");
+    let ws = workloads::suite_small();
+    let cfgs = vec![
+        ArchConfig::paper(4, 4),
+        ArchConfig::paper(8, 32),
+        ArchConfig::paper(16, 256),
+    ];
+    let fast = MapperOptions { full_layout_search: false, ..Default::default() };
+    let rows = evaluate_suite(&cfgs, &ws, &fast, 8);
+    let mut t = Table::new(
+        "MINISA vs micro-instruction control (geomean over suite slice)",
+        &["config", "speedup", "instr_reduction", "micro_stall", "minisa_stall", "utilization"],
+    );
+    for s in summarize_by_config(&rows) {
+        t.row(vec![
+            s.config,
+            f2(s.geo_speedup),
+            eng(s.geo_instr_reduction),
+            pct(s.mean_stall_micro),
+            pct(s.mean_stall_minisa),
+            pct(s.mean_utilization),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "Shape check vs paper: speedup ≈1× at 4×4 growing to tens of × at 16×256 (Fig. 10);\n\
+         instruction reduction grows to ~10⁴–10⁵× (Fig. 12); micro stalls ~97% at 16×256 (Tab. I)."
+    );
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Domain example — FHE & ZKP kernels (§VI workloads).
+//!
+//! NTT and BConv GEMMs have shapes that rigid accelerators hate (K=40,
+//! N=88, tall-skinny NTT matrices). This example sweeps the cryptography
+//! workloads over three FEATHER+ scales and reports what the paper's
+//! evaluation reports: utilization, MINISA-vs-micro speedup and
+//! instruction-traffic reduction, plus the rigid-systolic comparison.
+//!
+//! ```sh
+//! cargo run --release --example fhe_ntt
+//! ```
+
+use minisa::arch::ArchConfig;
+use minisa::baselines;
+use minisa::coordinator::evaluate_one;
+use minisa::mapper::search::MapperOptions;
+use minisa::report::{eng, f2, pct, Table};
+use minisa::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let mut ws = workloads::fhe_bconv().into_iter().step_by(10).collect::<Vec<_>>();
+    ws.extend(workloads::fhe_ntt());
+    ws.extend(workloads::zkp_ntt().into_iter().take(2));
+    let opts = MapperOptions { full_layout_search: false, ..Default::default() };
+
+    for (ah, aw) in [(4usize, 16usize), (8, 32), (16, 64)] {
+        let cfg = ArchConfig::paper(ah, aw);
+        let mut t = Table::new(
+            &format!("FHE/ZKP kernels on FEATHER+ {}", cfg.name()),
+            &["workload", "M", "K", "N", "util(F+)", "util(systolic)", "speedup", "instr_red"],
+        );
+        for g in &ws {
+            let Some(row) = evaluate_one(&cfg, g, &opts) else { continue };
+            t.row(vec![
+                g.name.clone(),
+                g.m.to_string(),
+                g.k.to_string(),
+                g.n.to_string(),
+                pct(row.decision.report.utilization()),
+                pct(baselines::rigid_systolic().utilization(g)),
+                f2(row.speedup()),
+                eng(row.instr_reduction()),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    println!(
+        "Takeaway (§VI-C2): FEATHER+ sustains high utilization on K=40/N=88-class shapes\n\
+         where a rigid 256×256 systolic array drops to a few percent; MINISA keeps the\n\
+         flexibility essentially free of instruction traffic."
+    );
+    Ok(())
+}

@@ -1,0 +1,93 @@
+"""AOT lowering: JAX/Pallas (Layers 1-2) -> HLO text artifacts for the Rust
+PJRT runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# Artifact registry: name -> (fn, example args). Shapes are compute-tile
+# sized; the Rust coordinator tiles larger problems onto these executables.
+ARTIFACTS = {
+    # Square aligned tile (the quickstart / serving path).
+    "gemm_64x64x64": (model.gemm_tile, [spec(64, 64), spec(64, 64)]),
+    # Irregular FHE-BConv-shaped tile (Table I workload tile: K=40, N=88).
+    "gemm_64x40x88": (model.gemm_tile, [spec(64, 40), spec(40, 88)]),
+    # Wider serving tile for batched requests.
+    "gemm_128x64x64": (model.gemm_tile, [spec(128, 64), spec(64, 64)]),
+    # One full layer with activation.
+    "layer_relu_64x64x64": (model.layer_relu, [spec(64, 64), spec(64, 64)]),
+    # Consecutive-layer chain (SIV-G2).
+    "chain_32x64x48x32": (
+        model.two_layer_chain,
+        [spec(32, 64), spec(64, 48), spec(48, 32)],
+    ),
+    # Attention scores (dynamic-operand workload class).
+    "attn_64x64": (model.attention_scores, [spec(64, 64), spec(64, 64)]),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {}
+    for name, (fn, specs) in ARTIFACTS.items():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [list(s.shape) for s in specs],
+            "dtype": "f32",
+            "hlo_chars": len(text),
+        }
+        print(f"lowered {name}: {len(text)} chars -> {path}")
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    # Merge with an existing manifest when lowering a single artifact.
+    if args.only and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        old.update(manifest)
+        manifest = old
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Layer 1 — the NEST compute atom as a Pallas kernel.
+
+The kernel mirrors FEATHER+'s execution structure (§III-A / §IV):
+
+* the grid walks (M-tile, N-tile) pairs — one grid step is one *compute
+  tile* (an ExecuteMapping/ExecuteStreaming invocation group);
+* each step keeps a ``(BM, K)`` streamed block and a ``(K, BN)`` stationary
+  block resident in VMEM (the scratchpad analogue of the streaming /
+  stationary buffers feeding PE-local registers);
+* inside the kernel the reduction axis is consumed in AH-element Virtual
+  Neuron chunks via ``jax.lax.fori_loop``, accumulating partial sums exactly
+  like the per-PE AH-element dot product + output-buffer temporal reduction
+  (three-level reduction, §III-C1a).
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): FEATHER+'s
+streaming/stationary buffers map to VMEM-resident blocks via BlockSpec; the
+per-PE dot-product atom maps to an MXU-shaped ``jnp.dot`` over the VN chunk;
+BIRRD's reorder-in-reduction has no MXU analogue so layout flexibility is
+realized at the BlockSpec index level. ``interpret=True`` everywhere: the
+CPU PJRT plugin cannot execute Mosaic custom-calls (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _nest_kernel(x_ref, w_ref, o_ref, *, vn: int, k: int):
+    """One compute tile: (BM, K) × (K, BN) → (BM, BN).
+
+    The fori_loop consumes the reduction axis VN-by-VN: iteration ``g``
+    computes the AH-element dot product every PE would perform for VN row
+    ``g`` and accumulates into the output tile (OB temporal reduction).
+    """
+    kg = (k + vn - 1) // vn
+
+    def body(g, acc):
+        x_vn = jax.lax.dynamic_slice_in_dim(x_ref[...], g * vn, vn, axis=1)
+        w_vn = jax.lax.dynamic_slice_in_dim(w_ref[...], g * vn, vn, axis=0)
+        # The VN atom: AH-length dot product, MXU-friendly f32 accumulate.
+        return acc + jnp.dot(
+            x_vn.astype(jnp.float32),
+            w_vn.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    acc0 = jnp.zeros(o_ref.shape, jnp.float32)
+    o_ref[...] = jax.lax.fori_loop(0, kg, body, acc0)
+
+
+def nest_gemm(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    vn: int = 16,
+    block_m: int = 64,
+    block_n: int = 64,
+) -> jax.Array:
+    """FEATHER+-structured GEMM: ``O[M, N] = x[M, K] · w[K, N]``.
+
+    ``vn`` is the Virtual Neuron length (AH); ``block_m``/``block_n`` are the
+    compute-tile extents (the mapper's M_t / N_t knobs). K must already be a
+    multiple of ``vn`` or it is zero-padded here (the ISA's implicit
+    zero-padding rule, §IV-C2).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"reduction mismatch {k} vs {k2}"
+    pad_k = (-k) % vn
+    pad_m = (-m) % block_m
+    pad_n = (-n) % block_n
+    xp = jnp.pad(x, ((0, pad_m), (0, pad_k)))
+    wp = jnp.pad(w, ((0, pad_k), (0, pad_n)))
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // block_m, np_ // block_n)
+    out = pl.pallas_call(
+        functools.partial(_nest_kernel, vn=vn, k=kp),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=grid,
+        in_specs=[
+            # Streamed block: new M-tile per grid row, full K resident.
+            pl.BlockSpec((block_m, kp), lambda i, j: (i, 0)),
+            # Stationary block: full K × N-tile, reused across the M walk —
+            # the weight-stationary reuse of WO-S.
+            pl.BlockSpec((kp, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        interpret=True,  # CPU path; real-TPU lowering emits Mosaic calls
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def nest_gemm_relu(x: jax.Array, w: jax.Array, **kw) -> jax.Array:
+    """GEMM + ReLU (the Activation supporting instruction)."""
+    return jnp.maximum(nest_gemm(x, w, **kw), 0.0)
+
+
+def vmem_footprint_bytes(
+    k: int, *, block_m: int = 64, block_n: int = 64, elem_bytes: int = 4
+) -> int:
+    """Estimated VMEM residency of one grid step: streamed block +
+    stationary block + output tile. Used by the §Perf structural analysis
+    (interpret mode has no real VMEM)."""
+    return elem_bytes * (block_m * k + k * block_n + block_m * block_n)

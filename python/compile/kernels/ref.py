@@ -1,0 +1,47 @@
+"""Pure-jnp reference oracle for the NEST GEMM kernel.
+
+This is the correctness ground truth for Layer 1: ``nest_gemm`` (the Pallas
+kernel) must match ``ref_gemm`` exactly (integer inputs) / to float tolerance
+on every shape the test sweep generates, and the Rust functional simulator is
+cross-checked against the same semantics through the AOT artifacts.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_gemm(x, w):
+    """O[M, N] = I[M, K] . W[K, N] with f32 accumulation."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def ref_gemm_relu(x, w):
+    """GEMM followed by the Activation instruction's ReLU."""
+    return jnp.maximum(ref_gemm(x, w), 0.0)
+
+
+def ref_two_layer(x, w1, w2):
+    """Two chained layers (SIV-G2 consecutive-layer trace): the output of
+    layer 1 (post-ReLU) is the input of layer 2, exactly the OB->operand
+    buffer path of FEATHER+."""
+    return ref_gemm(ref_gemm_relu(x, w1), w2)
+
+
+def ref_vn_decomposed(x, w, vn: int):
+    """GEMM computed the way FEATHER+ does: the reduction axis is split into
+    AH-element Virtual Neurons, each VN contributes one partial sum, and
+    psums accumulate in the output buffer. Must equal ``ref_gemm`` exactly -
+    this *is* the VN abstraction's correctness claim (SIV-B)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    pad = (-k) % vn
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, pad)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, pad), (0, 0)))
+    kg = (k + pad) // vn
+    # One dot product per (m, n, VN row) - the per-PE atom.
+    xr = xp.reshape(m, kg, vn)
+    wr = wp.reshape(kg, vn, n)
+    psums = jnp.einsum("mgv,gvn->gmn", xr, wr)
+    return psums.sum(axis=0)

@@ -1,0 +1,45 @@
+"""Layer 2 - the JAX compute graph lowered to the AOT artifacts.
+
+Three exported entry points (all calling the Layer-1 Pallas kernel):
+
+* ``gemm_tile``      - one GEMM compute tile (the runtime oracle for the
+                       functional simulator's outputs);
+* ``layer_relu``     - GEMM + ReLU (one FEATHER+ layer incl. Activation);
+* ``two_layer_chain``- two chained layers, the SIV-G2 consecutive-layer
+                       execution (output of layer i = input of layer i+1,
+                       OB -> operand-buffer commit path).
+
+Python runs only at build time; the Rust runtime executes the lowered HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.nest_gemm import nest_gemm, nest_gemm_relu
+
+
+def gemm_tile(x, w):
+    """One compute tile executed with the NEST kernel structure."""
+    return (nest_gemm(x, w, vn=16, block_m=64, block_n=64),)
+
+
+def layer_relu(x, w):
+    """One full layer: GEMM + Activation(ReLU)."""
+    return (nest_gemm_relu(x, w, vn=16, block_m=64, block_n=64),)
+
+
+def two_layer_chain(x, w1, w2):
+    """Consecutive layers: SetOVNLayout of layer 1 doubles as SetIVNLayout
+    of layer 2 (SIV-G2); numerically this is layer2(relu(layer1(x)))."""
+    h = nest_gemm_relu(x, w1, vn=16, block_m=64, block_n=64)
+    return (nest_gemm(h, w2, vn=16, block_m=64, block_n=64),)
+
+
+def attention_scores(q, kmat):
+    """GPT-oss-style attention-score GEMM (Q . K^T scaled): the workload
+    class motivating dynamic-input support in FEATHER+ (SII-C) - both
+    operands arrive at runtime, neither can be offline-reordered."""
+    d = q.shape[-1]
+    return (nest_gemm(q, kmat.T, vn=16, block_m=64, block_n=64) / jnp.sqrt(jnp.float32(d)),)

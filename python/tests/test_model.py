@@ -1,0 +1,41 @@
+"""Layer-2 model tests: shapes, chaining semantics, attention scaling."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import ref_gemm, ref_two_layer
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+def test_gemm_tile_matches_ref():
+    x, w = rand((64, 64), 0), rand((64, 64), 1)
+    (o,) = model.gemm_tile(x, w)
+    np.testing.assert_allclose(o, ref_gemm(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_layer_relu_nonnegative():
+    x, w = rand((64, 64), 2), rand((64, 64), 3)
+    (o,) = model.layer_relu(x, w)
+    assert (np.asarray(o) >= 0).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_two_layer_chain_semantics(seed):
+    """Chain == layer2(relu(layer1(x))) — the SIV-G2 trace semantics."""
+    x, w1, w2 = rand((32, 64), seed), rand((64, 48), seed + 1), rand((48, 32), seed + 2)
+    (o,) = model.two_layer_chain(x, w1, w2)
+    np.testing.assert_allclose(o, ref_two_layer(x, w1, w2), rtol=1e-4, atol=1e-4)
+
+
+def test_attention_scores_scaled():
+    q, k = rand((64, 64), 5), rand((64, 64), 6)
+    (s,) = model.attention_scores(q, k)
+    expect = np.asarray(ref_gemm(q, k.T)) / np.sqrt(64.0)
+    np.testing.assert_allclose(s, expect, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,47 @@
+//! Regenerates the **§VI-D1 AW-scaling ablation**: with AH=16, scaling AW
+//! 64 → 256 should deliver near-linear speedup (~4×) at almost unchanged
+//! utilization (columns are independent parallelism), with interconnect
+//! cost growing subquadratically.
+
+use minisa::arch::ArchConfig;
+use minisa::arch::area::area;
+use minisa::coordinator::evaluate_suite;
+use minisa::mapper::search::MapperOptions;
+use minisa::report::{f2, pct, Table};
+use minisa::util::geomean;
+use minisa::workloads;
+
+fn main() {
+    let ws = workloads::suite_small();
+    let opts = MapperOptions { full_layout_search: false, ..Default::default() };
+    let mut t = Table::new(
+        "§VI-D1: scaling AW at AH=16",
+        &["AW", "geo cycles", "speedup vs 64", "mean util", "area µm² (F+)", "area ratio"],
+    );
+    let mut base_cycles = None;
+    let mut base_area = None;
+    for aw in [64usize, 128, 256] {
+        let cfg = ArchConfig::paper(16, aw);
+        let rows = evaluate_suite(&[cfg.clone()], &ws, &opts, 16);
+        let cycles: Vec<f64> = rows.iter().map(|r| r.decision.report.total_cycles).collect();
+        let utils: Vec<f64> = rows.iter().map(|r| r.decision.report.utilization()).collect();
+        let g = geomean(&cycles);
+        let a = area(&cfg, true).total_um2;
+        let speedup = base_cycles.map(|b: f64| b / g).unwrap_or(1.0);
+        let aratio = base_area.map(|b: f64| a / b).unwrap_or(1.0);
+        if base_cycles.is_none() {
+            base_cycles = Some(g);
+            base_area = Some(a);
+        }
+        t.row(vec![
+            aw.to_string(),
+            format!("{g:.0}"),
+            f2(speedup),
+            pct(minisa::util::mean(&utils)),
+            format!("{a:.0}"),
+            f2(aratio),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("Paper: AW 64→256 gives ~4× speedup at ~flat utilization; cost O(AW)–O(AW log AW).");
+}

@@ -1,0 +1,46 @@
+//! Regenerates **Fig. 10**: end-to-end speedup of MINISA over the
+//! micro-instruction baseline and the stall analysis, across the nine
+//! (AH, AW) configurations on the workload suite.
+//!
+//! Paper reference: geomean speedup 1× (≤64 PEs) → 1.9× (16×16) → 7.5×
+//! (16×64) → 31.6× (16×256); MINISA stall ≈ 0 everywhere.
+//!
+//! Full suite by default; set MINISA_BENCH_SMALL=1 for the fast slice.
+
+use minisa::arch::ArchConfig;
+use minisa::coordinator::{evaluate_suite, summarize_by_config};
+use minisa::mapper::search::MapperOptions;
+use minisa::report::{f2, pct, Table};
+use minisa::workloads;
+
+fn main() {
+    let small = std::env::var("MINISA_BENCH_SMALL").is_ok();
+    let ws = if small { workloads::suite_small() } else { workloads::suite50() };
+    let opts = MapperOptions { full_layout_search: false, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let rows = evaluate_suite(&ArchConfig::paper_sweep(), &ws, &opts, 16);
+    eprintln!(
+        "fig10: {} points in {:.1}s ({} workloads × 9 configs)",
+        rows.len(),
+        t0.elapsed().as_secs_f64(),
+        ws.len()
+    );
+    let paper: &[(&str, f64)] =
+        &[("16x16", 1.9), ("16x64", 7.5), ("16x256", 31.6), ("4x4", 1.0), ("8x8", 1.0)];
+    let mut t = Table::new(
+        "Fig. 10: geomean end-to-end speedup + stall analysis",
+        &["config", "geo_speedup", "paper", "micro_stall", "minisa_stall"],
+    );
+    for s in summarize_by_config(&rows) {
+        let p = paper.iter().find(|p| p.0 == s.config).map(|p| f2(p.1)).unwrap_or_default();
+        t.row(vec![
+            s.config,
+            f2(s.geo_speedup),
+            p,
+            pct(s.mean_stall_micro),
+            pct(s.mean_stall_minisa),
+        ]);
+    }
+    println!("\n{}", t.render());
+    let _ = t.write_csv(std::path::Path::new("results/bench_fig10.csv"));
+}

@@ -1,0 +1,59 @@
+//! Regenerates **Fig. 11**: iso-power (575 W) latency comparison —
+//! FEATHER+ (64 × 16×256 mesh) vs RTX 5090 vs TPU v6e-8 — with the
+//! compute-utilization line.
+//!
+//! Paper reference: geomean 23.7× vs the GPU and 7.8× vs the TPU; >60%
+//! FEATHER+ utilization on irregular shapes; ~30% slower than the TPU on
+//! perfectly-aligned GEMMs.
+
+use minisa::coordinator::compare_devices;
+use minisa::mapper::search::MapperOptions;
+use minisa::report::{f2, pct, Table};
+use minisa::util::geomean;
+use minisa::workloads;
+
+fn main() {
+    let small = std::env::var("MINISA_BENCH_SMALL").is_ok();
+    let ws = if small { workloads::suite_small() } else { workloads::suite50() };
+    let opts = MapperOptions { full_layout_search: false, ..Default::default() };
+    let rows = compare_devices(&ws, &opts, 16);
+    let mut t = Table::new(
+        "Fig. 11: latency (µs) and utilization at iso-575W",
+        &["workload", "category", "FEATHER+ µs", "GPU µs", "TPU µs", "util", "vs GPU", "vs TPU"],
+    );
+    let mut vs_gpu = Vec::new();
+    let mut vs_tpu = Vec::new();
+    let mut irregular_utils = Vec::new();
+    for r in &rows {
+        let g = r.gpu_us / r.feather_us.max(1e-9);
+        let p = r.tpu_us / r.feather_us.max(1e-9);
+        vs_gpu.push(g);
+        vs_tpu.push(p);
+        if r.workload.is_irregular() {
+            irregular_utils.push(r.feather_utilization);
+        }
+        t.row(vec![
+            r.workload.name.clone(),
+            r.workload.category.clone(),
+            f2(r.feather_us),
+            f2(r.gpu_us),
+            f2(r.tpu_us),
+            pct(r.feather_utilization),
+            f2(g),
+            f2(p),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "geomean: {}x vs RTX5090 (paper 23.7x), {}x vs TPUv6e-8 (paper 7.8x)",
+        f2(geomean(&vs_gpu)),
+        f2(geomean(&vs_tpu))
+    );
+    if !irregular_utils.is_empty() {
+        println!(
+            "mean FEATHER+ utilization on irregular shapes: {} (paper: >60%)",
+            pct(minisa::util::mean(&irregular_utils))
+        );
+    }
+    let _ = t.write_csv(std::path::Path::new("results/bench_fig11.csv"));
+}

@@ -1,0 +1,63 @@
+//! Regenerates **Fig. 12**: off-chip instruction bytes, MINISA vs
+//! micro-instructions, and the instruction-to-data byte ratios (black/red
+//! lines), per workload at 16×256 and as geomeans per config.
+//!
+//! Paper reference: micro-instructions reach ~100× the data bytes; MINISA
+//! reduces instruction bytes by geomean ~2·10⁴–2·10⁵× at 16×256 (max
+//! 4.4·10⁵×), making the ratio negligible (<0.1%).
+
+use minisa::arch::ArchConfig;
+use minisa::coordinator::{evaluate_suite, summarize_by_config};
+use minisa::mapper::search::MapperOptions;
+use minisa::report::{eng, Table};
+use minisa::util::geomean;
+use minisa::workloads;
+
+fn main() {
+    let small = std::env::var("MINISA_BENCH_SMALL").is_ok();
+    let ws = if small { workloads::suite_small() } else { workloads::suite50() };
+    let opts = MapperOptions { full_layout_search: false, ..Default::default() };
+
+    // Per-workload detail at the largest scale.
+    let big = ArchConfig::paper(16, 256);
+    let rows = evaluate_suite(&[big.clone()], &ws, &opts, 16);
+    let mut t = Table::new(
+        "Fig. 12 @16x256: instruction bytes and instruction:data ratios",
+        &["workload", "micro_B", "minisa_B", "reduction", "i:d micro", "i:d MINISA"],
+    );
+    let mut reductions = Vec::new();
+    let mut max_red = 0f64;
+    for r in &rows {
+        reductions.push(r.instr_reduction());
+        max_red = max_red.max(r.instr_reduction());
+        t.row(vec![
+            r.workload.name.clone(),
+            r.micro_bytes.to_string(),
+            r.minisa_bytes.to_string(),
+            eng(r.instr_reduction()),
+            format!("{:.1}", r.micro_instr_to_data()),
+            format!("{:.2e}", r.minisa_instr_to_data()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "geomean reduction @16x256: {} (paper ~2e4–2e5), max {} (paper 4.4e5)",
+        eng(geomean(&reductions)),
+        eng(max_red)
+    );
+    let micro_ratio_max = rows.iter().map(|r| r.micro_instr_to_data()).fold(0.0, f64::max);
+    println!("max micro instruction:data ratio: {micro_ratio_max:.1}× (paper: up to ~100×)");
+
+    // Geomeans per config.
+    let all = evaluate_suite(&ArchConfig::paper_sweep(), &ws, &opts, 16);
+    let mut s = Table::new(
+        "Fig. 12: geomean instruction-byte reduction per config",
+        &["config", "geo_reduction"],
+    );
+    for c in summarize_by_config(&all) {
+        s.row(vec![c.config, eng(c.geo_instr_reduction)]);
+    }
+    println!("{}", s.render());
+    let _ = t.write_csv(std::path::Path::new("results/bench_fig12_detail.csv"));
+    let _ = s.write_csv(std::path::Path::new("results/bench_fig12_summary.csv"));
+}

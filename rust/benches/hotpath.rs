@@ -1,0 +1,125 @@
+//! Hot-path micro/macro timings for the §Perf optimization pass:
+//!
+//! * mapper candidate scoring (the evaluate inner loop),
+//! * full single-shape mapper search,
+//! * trace lowering,
+//! * functional simulation throughput (MACs/s),
+//! * 5-engine pipeline simulation,
+//! * ISA encode throughput.
+//!
+//! Run before/after optimization; EXPERIMENTS.md §Perf records the deltas.
+
+use minisa::arch::ArchConfig;
+use minisa::functional::FunctionalSim;
+use minisa::isa::encode::Codec;
+use minisa::isa::inst::Inst;
+use minisa::mapper::exec::execute_program;
+use minisa::mapper::lower_gemm;
+use minisa::mapper::search::{candidates, estimate, search, MapperOptions};
+use minisa::mapping::{Dataflow, MappingCfg, StreamCfg};
+use minisa::perf::{simulate, TilePlan};
+use minisa::util::bench::bench;
+use minisa::util::Lcg;
+use minisa::workloads::Gemm;
+
+fn main() {
+    let opts = MapperOptions::default();
+
+    // --- Mapper scoring (per-candidate cost) ---
+    let cfg = ArchConfig::paper(16, 256);
+    let g = Gemm::new("gpt", "GPT-oss", 2048, 2880, 5120);
+    let cands = candidates(&cfg, &g, &opts);
+    println!("candidates for {g} @ {}: {}", cfg.name(), cands.len());
+    bench("mapper/score one candidate (16x256)", 10, 2000, || {
+        estimate(&cfg, &g, &cands[cands.len() / 2], 4, 0, true)
+    });
+
+    // --- Full search ---
+    bench("mapper/full search gpt@16x256", 1, 5, || search(&cfg, &g, &opts).unwrap());
+    let small_cfg = ArchConfig::paper(4, 16);
+    let small_g = Gemm::new("bconv", "FHE", 65536, 40, 88);
+    bench("mapper/full search bconv@4x16", 1, 5, || {
+        search(&small_cfg, &small_g, &opts).unwrap()
+    });
+
+    // --- Lowering ---
+    let cfg44 = ArchConfig::paper(4, 4);
+    let gl = Gemm::new("low", "t", 256, 40, 88);
+    let d = search(&cfg44, &gl, &opts).unwrap();
+    let prog = bench("lower/256x40x88@4x4", 2, 50, || {
+        lower_gemm(&cfg44, &gl, &d.choice, d.i_order, d.w_order, d.o_order)
+    });
+    println!("  trace: {} insts, {} invocations", prog.trace.len(), prog.invocations);
+
+    // --- Functional simulation throughput ---
+    let mut rng = Lcg::new(5);
+    let iv: Vec<i32> = (0..gl.m * gl.k).map(|_| rng.range(0, 15) as i32 - 7).collect();
+    let wv: Vec<i32> = (0..gl.k * gl.n).map(|_| rng.range(0, 15) as i32 - 7).collect();
+    let (out, t) = minisa::util::bench::time(1, 10, || {
+        execute_program(&cfg44, &gl, &prog, &iv, &wv).unwrap()
+    });
+    t.report("funcsim/256x40x88@4x4");
+    let macs = gl.macs() as f64;
+    println!(
+        "  functional sim rate: {:.1} MMAC/s ({} outputs)",
+        macs / (t.median_ns / 1e9) / 1e6,
+        out.len()
+    );
+
+    // --- Pipeline model ---
+    let plans: Vec<TilePlan> = (0..100_000)
+        .map(|i| TilePlan {
+            instr_bits: 180,
+            compute_cycles: 512 + (i % 7) as u64,
+            drain_cycles: 20,
+            macs_used: 1 << 16,
+            ..Default::default()
+        })
+        .collect();
+    bench("perf/pipeline sim 100k tiles", 2, 30, || simulate(&cfg, &plans));
+
+    // --- ISA encode throughput ---
+    let codec = Codec::new(&cfg);
+    let insts: Vec<Inst> = (0..1000)
+        .map(|i| {
+            if i % 2 == 0 {
+                Inst::ExecuteMapping(MappingCfg {
+                    r0: i % 64,
+                    c0: (i * 7) % 128,
+                    g_r: 1 + (i % 16),
+                    g_c: 1 + (i % 8),
+                    s_r: 1,
+                    s_c: 16,
+                })
+            } else {
+                Inst::ExecuteStreaming(StreamCfg {
+                    df: Dataflow::WoS,
+                    m0: 0,
+                    s_m: 1 + (i % 4),
+                    t: 64,
+                    vn_size: 16,
+                })
+            }
+        })
+        .collect();
+    let (bytes, t) = minisa::util::bench::time(5, 200, || codec.encode_all(&insts).unwrap());
+    t.report("isa/encode 1000 instructions");
+    println!(
+        "  encode rate: {:.1} Minst/s ({} bytes)",
+        1000.0 / (t.median_ns / 1e9) / 1e6,
+        bytes.len()
+    );
+
+    // --- Functional-sim raw wave loop ---
+    let mut sim = FunctionalSim::new(&cfg44);
+    let a = sim.hbm_alloc(1024);
+    sim.hbm_write(a, &vec![1i32; 1024]);
+    bench("funcsim/load 256 rows", 5, 500, || {
+        sim.exec(&Inst::Load {
+            target: minisa::isa::inst::BufTarget::Streaming,
+            hbm_addr: a,
+            rows: 256,
+        })
+        .unwrap()
+    });
+}

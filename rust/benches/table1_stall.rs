@@ -1,0 +1,37 @@
+//! Regenerates **Table I**: explicit instruction-fetch stall of the
+//! micro-instruction baseline on `I[65536×40] · W[40×88]` across six
+//! FEATHER+ sizes, plus the MINISA column (always ~0%).
+//!
+//! Paper reference row: 4×4→0, 8×8→0, 4×64→75.3%, 16×16→65.2%,
+//! 8×128→90.4%, 16×256→96.9%.
+
+use minisa::arch::ArchConfig;
+use minisa::coordinator::evaluate_one;
+use minisa::mapper::search::MapperOptions;
+use minisa::report::{pct, Table};
+use minisa::util::bench::bench;
+use minisa::workloads::table1_workload;
+
+fn main() {
+    let g = table1_workload();
+    let opts = MapperOptions { full_layout_search: false, ..Default::default() };
+    let paper = [0.0, 0.0, 0.753, 0.652, 0.904, 0.969];
+    let mut t = Table::new(
+        "Table I: fetch stall for I[65536x40]·W[40x88] (micro-instruction baseline)",
+        &["FEATHER+", "stall(model)", "stall(paper)", "stall(MINISA)", "speedup"],
+    );
+    for (cfg, p) in ArchConfig::table1_sweep().into_iter().zip(paper) {
+        let row = bench(&format!("table1/{}", cfg.name()), 0, 3, || {
+            evaluate_one(&cfg, &g, &opts).expect("feasible")
+        });
+        t.row(vec![
+            cfg.name(),
+            pct(row.micro.instr_stall_fraction()),
+            pct(p),
+            pct(row.decision.report.instr_stall_fraction()),
+            format!("{:.2}", row.speedup()),
+        ]);
+    }
+    println!("\n{}", t.render());
+    let _ = t.write_csv(std::path::Path::new("results/bench_table1.csv"));
+}

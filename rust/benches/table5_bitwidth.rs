@@ -1,0 +1,64 @@
+//! Regenerates **Table V**: MINISA instruction bitwidths per architecture
+//! configuration, next to the published values, and times the bit-level
+//! codec (encode+decode roundtrip) since it sits on the trace-generation
+//! path.
+
+use minisa::arch::ArchConfig;
+use minisa::isa::bitwidth::table_v;
+use minisa::isa::encode::Codec;
+use minisa::isa::inst::Inst;
+use minisa::mapping::{Dataflow, MappingCfg, StreamCfg};
+use minisa::report::Table;
+use minisa::util::bench::bench;
+
+fn main() {
+    // Published Table V (Set*VNLayout, E.Mapping, E.Streaming) per config.
+    let paper: &[(&str, u32, u32, u32)] = &[
+        ("4x4", 42, 81, 57),
+        ("4x16", 40, 83, 51),
+        ("4x64", 38, 85, 45),
+        ("8x8", 43, 86, 58),
+        ("8x32", 41, 88, 52),
+        ("8x128", 39, 90, 46),
+        ("16x16", 44, 91, 59),
+        ("16x64", 42, 93, 53),
+        ("16x256", 40, 95, 47),
+    ];
+    let mut t = Table::new(
+        "Table V: ISA bitwidths (model | paper)",
+        &["config", "Set*VNLayout", "E.Mapping", "E.Streaming"],
+    );
+    for row in table_v() {
+        let p = paper.iter().find(|p| p.0 == row.config);
+        let fmt = |m: u32, pv: Option<u32>| match pv {
+            Some(v) => format!("{m} | {v}"),
+            None => m.to_string(),
+        };
+        t.row(vec![
+            row.config.clone(),
+            fmt(row.set_layout_bits, p.map(|p| p.1)),
+            fmt(row.execute_mapping_bits, p.map(|p| p.2)),
+            fmt(row.execute_streaming_bits, p.map(|p| p.3)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Codec hot path: encode + decode a compute-trigger pair.
+    let cfg = ArchConfig::paper(16, 256);
+    let codec = Codec::new(&cfg);
+    let prog = [
+        Inst::ExecuteMapping(MappingCfg { r0: 3, c0: 128, g_r: 8, g_c: 4, s_r: 1, s_c: 16 }),
+        Inst::ExecuteStreaming(StreamCfg {
+            df: Dataflow::WoS,
+            m0: 0,
+            s_m: 2,
+            t: 512,
+            vn_size: 16,
+        }),
+    ];
+    bench("codec/encode+decode EM+ES pair", 100, 10_000, || {
+        let bytes = codec.encode_all(&prog).unwrap();
+        codec.decode_n(&bytes, 2).unwrap()
+    });
+    let _ = t.write_csv(std::path::Path::new("results/bench_table5.csv"));
+}

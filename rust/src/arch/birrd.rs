@@ -1,0 +1,291 @@
+//! BIRRD — the multistage reordering-in-reduction network (§III-A).
+//!
+//! BIRRD sits between the NEST column outputs and the output buffer. In one
+//! traversal it (a) spatially reduces psums from PE columns that target the
+//! same output element and (b) reorders surviving values to arbitrary
+//! output-buffer banks. Topologically it is a Benes-class network:
+//! `2·log2(AW) − 1` stages of `AW/2` 2×2 switches, which is rearrangeably
+//! non-blocking — any output permutation is routable.
+//!
+//! The functional simulator uses `reduce_and_route` (semantic model);
+//! `Benes::route_permutation` implements the classic looping algorithm so
+//! tests can verify the rearrangeability claim the micro-instruction cost
+//! model depends on (every switch = 2 control bits per cycle).
+
+use crate::util::is_pow2;
+
+/// Semantic result of one BIRRD traversal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReduceResult {
+    /// (bank, value) pairs written to the output buffer this cycle.
+    pub writes: Vec<(usize, i64)>,
+    /// Number of pairwise additions performed in-network.
+    pub adds: usize,
+}
+
+/// Benes network over `n = 2^k` ports (the BIRRD topology skeleton).
+#[derive(Debug, Clone)]
+pub struct Benes {
+    pub n: usize,
+}
+
+impl Benes {
+    pub fn new(n: usize) -> Self {
+        assert!(is_pow2(n) && n >= 2, "Benes needs power-of-two ports");
+        Self { n }
+    }
+
+    pub fn stages(&self) -> usize {
+        2 * (self.n.trailing_zeros() as usize) - 1
+    }
+
+    pub fn switches(&self) -> usize {
+        self.stages() * self.n / 2
+    }
+
+    /// Route a permutation with the recursive looping algorithm.
+    /// `perm[i] = o` sends input `i` to output `o`. Returns per-stage swap
+    /// bits (stage-major; within a stage, blocks upper-first).
+    /// Panics if `perm` is not a permutation.
+    pub fn route_permutation(&self, perm: &[usize]) -> Vec<Vec<bool>> {
+        assert_eq!(perm.len(), self.n);
+        let mut seen = vec![false; self.n];
+        for &p in perm {
+            assert!(p < self.n && !seen[p], "not a permutation");
+            seen[p] = true;
+        }
+        let mut plan: Vec<Vec<bool>> = vec![Vec::new(); self.stages()];
+        route_rec(perm, 0, self.stages(), &mut plan);
+        plan
+    }
+
+    /// Apply a routing plan to values; `out[perm[i]] == values[i]`.
+    pub fn apply(&self, plan: &[Vec<bool>], values: &[i64]) -> Vec<i64> {
+        assert_eq!(values.len(), self.n);
+        let total = self.stages();
+        let mut v = values.to_vec();
+        for (s, swaps) in plan.iter().enumerate() {
+            // Benes stage "level": 0,1,…,k-1,…,1,0 — block size n>>level.
+            let level = s.min(total - 1 - s);
+            let half = self.n >> (level + 1);
+            let blocks = 1usize << level;
+            let mut idx = 0;
+            for b in 0..blocks {
+                let base = b * (half * 2);
+                for i in 0..half {
+                    if swaps[idx] {
+                        v.swap(base + i, base + i + half);
+                    }
+                    idx += 1;
+                }
+            }
+            debug_assert_eq!(idx, swaps.len(), "stage {s} switch count");
+        }
+        v
+    }
+}
+
+#[inline]
+fn pair(i: usize, half: usize) -> usize {
+    if i < half { i + half } else { i - half }
+}
+
+/// Recursive looping algorithm. Emits this sub-network's first stage at
+/// `plan[depth]`, its last at `plan[total-1-depth]`, and recurses (upper
+/// sub-network before lower, so blocks order left-to-right per stage).
+fn route_rec(perm: &[usize], depth: usize, total: usize, plan: &mut [Vec<bool>]) {
+    let n = perm.len();
+    if n == 2 {
+        plan[depth].push(perm[0] == 1);
+        return;
+    }
+    let half = n / 2;
+    let mut inv = vec![0usize; n];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p] = i;
+    }
+    // 2-color inputs: paired inputs differ; inputs feeding paired outputs
+    // differ. The constraint graph is a union of even cycles, so the greedy
+    // cycle walk below always succeeds.
+    const UNSET: usize = usize::MAX;
+    let mut color = vec![UNSET; n];
+    for start in 0..n {
+        if color[start] != UNSET {
+            continue;
+        }
+        let mut i = start;
+        let c = 0usize;
+        loop {
+            color[i] = c;
+            color[pair(i, half)] = 1 - c;
+            // pair(i) (color 1−c) produces output perm[pair(i)] in subnet
+            // 1−c; its partner output must come from subnet c, i.e. the
+            // input feeding it takes color c.
+            let j = inv[pair(perm[pair(i, half)], half)];
+            if color[j] != UNSET {
+                break;
+            }
+            i = j; // c unchanged
+        }
+    }
+    // First stage: switch i crosses iff input i goes to the lower subnet.
+    for i in 0..half {
+        plan[depth].push(color[i] == 1);
+    }
+    // Last stage: switch o crosses iff output o is produced by the lower
+    // subnet.
+    let mut last = Vec::with_capacity(half);
+    for o in 0..half {
+        last.push(color[inv[o]] == 1);
+    }
+    // Sub-permutations.
+    let mut upper = vec![0usize; half];
+    let mut lower = vec![0usize; half];
+    for i in 0..n {
+        let sub_in = i % half;
+        let sub_out = perm[i] % half;
+        if color[i] == 0 {
+            upper[sub_in] = sub_out;
+        } else {
+            lower[sub_in] = sub_out;
+        }
+    }
+    route_rec(&upper, depth + 1, total, plan);
+    route_rec(&lower, depth + 1, total, plan);
+    plan[total - 1 - depth].extend(last);
+}
+
+/// Semantic BIRRD traversal used by the functional simulator: psums from the
+/// AW column outputs carry their destination OB bank; values sharing a bank
+/// reduce in-network (spatial reduction), then one write per bank issues.
+/// Returns `None` only for out-of-range banks — BIRRD is rearrangeable, so
+/// any ≤AW-bank pattern routes.
+pub fn reduce_and_route(dests: &[(usize, i64)], aw: usize) -> Option<ReduceResult> {
+    let mut by_bank: std::collections::BTreeMap<usize, i64> = std::collections::BTreeMap::new();
+    for &(bank, v) in dests {
+        if bank >= aw {
+            return None;
+        }
+        *by_bank.entry(bank).or_insert(0) += v;
+    }
+    let adds = dests.len() - by_bank.len();
+    Some(ReduceResult { writes: by_bank.into_iter().collect(), adds })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::Lcg;
+
+    #[test]
+    fn benes_counts() {
+        assert_eq!(Benes::new(2).stages(), 1);
+        assert_eq!(Benes::new(4).stages(), 3);
+        assert_eq!(Benes::new(8).stages(), 5);
+        assert_eq!(Benes::new(256).stages(), 15);
+        assert_eq!(Benes::new(4).switches(), 6);
+        assert_eq!(Benes::new(256).switches(), 15 * 128);
+    }
+
+    fn check_perm(b: &Benes, perm: &[usize]) {
+        let plan = b.route_permutation(perm);
+        assert_eq!(plan.len(), b.stages());
+        let vals: Vec<i64> = (0..b.n as i64).map(|x| x * 10 + 1).collect();
+        let out = b.apply(&plan, &vals);
+        for (i, &p) in perm.iter().enumerate() {
+            assert_eq!(out[p], vals[i], "input {i} → output {p} (perm {perm:?})");
+        }
+    }
+
+    #[test]
+    fn identity_and_reverse_route() {
+        for n in [2usize, 4, 8, 16, 32] {
+            let b = Benes::new(n);
+            check_perm(&b, &(0..n).collect::<Vec<_>>());
+            check_perm(&b, &(0..n).rev().collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn all_permutations_of_4_route() {
+        // Exhaustive rearrangeability check at n=4 (24 perms).
+        let b = Benes::new(4);
+        let mut perm = [0usize, 1, 2, 3];
+        // Heap's algorithm, iterative.
+        let mut c = [0usize; 4];
+        check_perm(&b, &perm);
+        let mut i = 0;
+        while i < 4 {
+            if c[i] < i {
+                if i % 2 == 0 {
+                    perm.swap(0, i);
+                } else {
+                    perm.swap(c[i], i);
+                }
+                check_perm(&b, &perm);
+                c[i] += 1;
+                i = 0;
+            } else {
+                c[i] = 0;
+                i += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn random_permutations_route() {
+        // Rearrangeability property: every permutation is realizable.
+        forall("benes-rearrangeable", 150, |g| {
+            let n = g.pow2(1, 6); // 2..64 ports
+            let b = Benes::new(n);
+            let mut perm: Vec<usize> = (0..n).collect();
+            for i in (1..n).rev() {
+                let j = g.usize(0, i);
+                perm.swap(i, j);
+            }
+            check_perm(&b, &perm);
+        });
+    }
+
+    #[test]
+    fn switch_count_matches_plan() {
+        let mut rng = Lcg::new(3);
+        for n in [4usize, 8, 16, 32, 256] {
+            let b = Benes::new(n);
+            let mut perm: Vec<usize> = (0..n).collect();
+            for i in (1..n).rev() {
+                let j = rng.below(i + 1);
+                perm.swap(i, j);
+            }
+            let plan = b.route_permutation(&perm);
+            let total: usize = plan.iter().map(|s| s.len()).sum();
+            assert_eq!(total, b.switches());
+        }
+    }
+
+    #[test]
+    fn reduce_and_route_sums_shared_banks() {
+        let r = reduce_and_route(&[(0, 5), (0, 7), (2, 1)], 4).unwrap();
+        assert_eq!(r.writes, vec![(0, 12), (2, 1)]);
+        assert_eq!(r.adds, 1);
+    }
+
+    #[test]
+    fn reduce_and_route_rejects_oob_bank() {
+        assert!(reduce_and_route(&[(4, 1)], 4).is_none());
+    }
+
+    #[test]
+    fn reduce_preserves_total() {
+        forall("birrd-reduce-conserves-sum", 100, |g| {
+            let aw = g.pow2(1, 4);
+            let n = g.usize(1, 2 * aw);
+            let dests: Vec<(usize, i64)> =
+                (0..n).map(|_| (g.usize(0, aw - 1), g.usize(0, 100) as i64 - 50)).collect();
+            let total: i64 = dests.iter().map(|d| d.1).sum();
+            let r = reduce_and_route(&dests, aw).unwrap();
+            assert_eq!(r.writes.iter().map(|w| w.1).sum::<i64>(), total);
+        });
+    }
+}

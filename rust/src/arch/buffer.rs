@@ -1,0 +1,195 @@
+//! On-chip buffer models (§III-A).
+//!
+//! * Streaming buffer — single bank in FEATHER+ (simplified banking,
+//!   §III-B), holds the streamed tensor.
+//! * Stationary buffer — holds the tensor pinned in PE local registers.
+//! * Output buffer (OB) — the only multi-bank buffer, with per-bank address
+//!   generation, accumulating partial sums (temporal reduction level 3).
+//!
+//! Buffers are `D × AW` element grids; VN layouts place `vn_size`-element
+//! VNs in contiguous rows of one column (see `layout`).
+
+use crate::layout::VnLayout;
+
+/// A `depth × width` scratchpad of elements `T`.
+#[derive(Debug, Clone)]
+pub struct DataBuffer<T> {
+    pub depth: usize,
+    pub width: usize,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> DataBuffer<T> {
+    pub fn new(depth: usize, width: usize) -> Self {
+        Self { depth, width, data: vec![T::default(); depth * width] }
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> T {
+        debug_assert!(row < self.depth && col < self.width);
+        self.data[row * self.width + col]
+    }
+
+    #[inline]
+    pub fn set(&mut self, row: usize, col: usize, v: T) {
+        debug_assert!(row < self.depth && col < self.width);
+        self.data[row * self.width + col] = v;
+    }
+
+    pub fn clear(&mut self) {
+        self.data.iter_mut().for_each(|v| *v = T::default());
+    }
+
+    /// Write VN (r, c) of a layout. Returns false (no-op) if the VN does not
+    /// fit the buffer.
+    pub fn write_vn(&mut self, layout: &VnLayout, r: usize, c: usize, elems: &[T]) -> bool {
+        debug_assert_eq!(elems.len(), layout.vn_size);
+        match layout.addr(r, c, self.width) {
+            Some((row0, col)) if row0 + layout.vn_size <= self.depth => {
+                for (i, &e) in elems.iter().enumerate() {
+                    self.set(row0 + i, col, e);
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Read VN (r, c); `None` when unmapped or out of capacity.
+    pub fn read_vn(&self, layout: &VnLayout, r: usize, c: usize) -> Option<Vec<T>> {
+        let (row0, col) = layout.addr(r, c, self.width)?;
+        if row0 + layout.vn_size > self.depth {
+            return None;
+        }
+        Some((0..layout.vn_size).map(|i| self.get(row0 + i, col)).collect())
+    }
+
+    /// Allocation-free variant of `read_vn`: fills `out` (resized to
+    /// `vn_size`) and returns `true`, or returns `false` when unmapped.
+    /// Used on the functional simulator's wave loop (§Perf).
+    pub fn read_vn_into(&self, layout: &VnLayout, r: usize, c: usize, out: &mut Vec<T>) -> bool {
+        match layout.addr(r, c, self.width) {
+            Some((row0, col)) if row0 + layout.vn_size <= self.depth => {
+                out.clear();
+                out.extend((0..layout.vn_size).map(|i| self.get(row0 + i, col)));
+                true
+            }
+            _ => false,
+        }
+    }
+
+    pub fn rows(&self) -> impl Iterator<Item = &[T]> {
+        self.data.chunks(self.width)
+    }
+}
+
+/// Multi-bank accumulator output buffer. Banks correspond to columns; each
+/// bank has its own address generator (the architectural feature that makes
+/// flexible output layouts possible, §III-A).
+#[derive(Debug, Clone)]
+pub struct OutputBuffer {
+    pub depth: usize,
+    pub banks: usize,
+    data: Vec<i64>,
+    /// Per-cycle bank-conflict counter (two different addresses to one bank
+    /// in one accumulation group).
+    pub conflicts: u64,
+}
+
+impl OutputBuffer {
+    pub fn new(depth: usize, banks: usize) -> Self {
+        Self { depth, banks, data: vec![0; depth * banks], conflicts: 0 }
+    }
+
+    #[inline]
+    pub fn get(&self, row: usize, bank: usize) -> i64 {
+        self.data[row * self.banks + bank]
+    }
+
+    /// Accumulate into (row, bank).
+    #[inline]
+    pub fn accumulate(&mut self, row: usize, bank: usize, v: i64) {
+        debug_assert!(row < self.depth && bank < self.banks);
+        self.data[row * self.banks + bank] += v;
+    }
+
+    /// Accumulate a group of same-cycle writes, counting bank conflicts
+    /// (more than one distinct row per bank in the group).
+    pub fn accumulate_group(&mut self, writes: &[(usize, usize, i64)]) {
+        let mut seen: Vec<Option<usize>> = vec![None; self.banks];
+        for &(row, bank, v) in writes {
+            match seen[bank] {
+                None => seen[bank] = Some(row),
+                Some(prev) if prev != row => self.conflicts += 1,
+                _ => {}
+            }
+            self.accumulate(row, bank, v);
+        }
+    }
+
+    /// Clear for a new output tile (SetOVNLayout lifecycle, §IV-G1).
+    pub fn clear(&mut self) {
+        self.data.iter_mut().for_each(|v| *v = 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::VnLayout;
+
+    #[test]
+    fn databuffer_rw() {
+        let mut b: DataBuffer<i8> = DataBuffer::new(8, 4);
+        b.set(3, 2, 42);
+        assert_eq!(b.get(3, 2), 42);
+        assert_eq!(b.get(0, 0), 0);
+        b.clear();
+        assert_eq!(b.get(3, 2), 0);
+    }
+
+    #[test]
+    fn vn_rw_roundtrip() {
+        let mut b: DataBuffer<i8> = DataBuffer::new(16, 4);
+        let l = VnLayout::row_major(2, 4, 4);
+        assert!(b.write_vn(&l, 1, 2, &[1, 2, 3, 4]));
+        assert_eq!(b.read_vn(&l, 1, 2), Some(vec![1, 2, 3, 4]));
+        // Unwritten VN reads zeros (not None) when mapped.
+        assert_eq!(b.read_vn(&l, 0, 0), Some(vec![0, 0, 0, 0]));
+        // Outside layout extents → None.
+        assert!(b.read_vn(&l, 5, 0).is_none());
+    }
+
+    #[test]
+    fn vn_write_checks_capacity() {
+        let mut b: DataBuffer<i8> = DataBuffer::new(4, 2); // 2 VNs of 4 fit
+        let l = VnLayout::row_major(2, 2, 4); // needs 8 rows
+        assert!(b.write_vn(&l, 0, 0, &[1, 1, 1, 1]));
+        assert!(b.write_vn(&l, 0, 1, &[2, 2, 2, 2]));
+        // VN slot L=2 → row 4: out of capacity.
+        assert!(!b.write_vn(&l, 1, 0, &[3, 3, 3, 3]));
+        assert!(b.read_vn(&l, 1, 0).is_none());
+    }
+
+    #[test]
+    fn output_buffer_accumulates() {
+        let mut ob = OutputBuffer::new(8, 4);
+        ob.accumulate(2, 1, 10);
+        ob.accumulate(2, 1, -3);
+        assert_eq!(ob.get(2, 1), 7);
+        ob.clear();
+        assert_eq!(ob.get(2, 1), 0);
+    }
+
+    #[test]
+    fn output_buffer_conflict_counting() {
+        let mut ob = OutputBuffer::new(8, 2);
+        // Same bank, two rows in one group → conflict.
+        ob.accumulate_group(&[(0, 0, 1), (1, 0, 1)]);
+        assert_eq!(ob.conflicts, 1);
+        // Same bank same row → fine.
+        ob.accumulate_group(&[(0, 1, 1), (0, 1, 2)]);
+        assert_eq!(ob.conflicts, 1);
+        assert_eq!(ob.get(0, 1), 3);
+    }
+}

@@ -1,0 +1,285 @@
+//! FEATHER+ architectural configuration (§VI-A, Table V).
+//!
+//! An `ArchConfig` fixes the NEST dimensions (AH × AW), on-chip buffer
+//! capacities, off-chip bandwidths and the instruction-fetch interface.
+//! All ISA bitwidths, cost models and the mapper derive from this struct.
+
+use crate::util::{ceil_div, clog2};
+
+/// Which hardware generation a config models. FEATHER (baseline, ISCA'24)
+/// uses point-to-point buffer→NEST links and multi-bank streaming buffers;
+/// FEATHER+ adds the all-to-all distribution crossbars, single-bank
+/// streaming buffer and OB→stationary links (§III-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HwGen {
+    Feather,
+    FeatherPlus,
+}
+
+/// Full architecture configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    /// PE rows per column == local dot-product length (VN size upper bound).
+    pub ah: usize,
+    /// Number of independent PE columns.
+    pub aw: usize,
+    /// Hardware generation (affects distribution network + duplication).
+    pub gen: HwGen,
+    /// Element width of input/weight operands in bytes (paper: INT8 → 1).
+    pub elem_bytes: usize,
+    /// Partial-sum / output element width in bytes (32-bit accumulators).
+    pub acc_bytes: usize,
+    /// Streaming-buffer capacity in bytes.
+    pub str_bytes: usize,
+    /// Stationary-buffer capacity in bytes.
+    pub sta_bytes: usize,
+    /// Output-buffer capacity in bytes.
+    pub ob_bytes: usize,
+    /// Dedicated instruction-buffer capacity in bytes.
+    pub instr_bytes: usize,
+    /// Off-chip instruction interface, bytes per cycle (paper: 9 B/cyc).
+    pub instr_bw: f64,
+    /// Off-chip input/weight bandwidth, bytes per cycle (paper: AW B/cyc).
+    pub data_bw_in: f64,
+    /// Off-chip output bandwidth, bytes per cycle (paper: 4·AW B/cyc).
+    pub data_bw_out: f64,
+    /// HBM address-space size in bytes (sets Load/Store address width).
+    pub hbm_bytes: u64,
+    /// Clock in GHz, used only to convert cycles → µs in reports.
+    pub clock_ghz: f64,
+}
+
+impl ArchConfig {
+    /// The paper's experimental setup for a given (AH, AW) — Table V.
+    ///
+    /// On-chip SRAM scales with AH and is split streaming 40% / stationary
+    /// 40% / output 20%; Table V lists (StrB/StaB, OB, Instr) in MB as
+    /// (1.6, 0.8, 0.5) for AH=4, (6.4, 3.2, 1.0) for AH=8 and
+    /// (25.6, 12.8, 2.0) for AH=16, where the first entry is the *combined*
+    /// streaming+stationary capacity (40% + 40% of the data SRAM).
+    pub fn paper(ah: usize, aw: usize) -> Self {
+        let (data_mb, instr_mb) = match ah {
+            4 => (1.6 + 0.8, 0.5),
+            8 => (6.4 + 3.2, 1.0),
+            16 => (25.6 + 12.8, 2.0),
+            // Geometric interpolation for non-paper heights.
+            _ => ((ah * ah) as f64 * 0.15, 0.5 * (ah as f64 / 4.0)),
+        };
+        let mb = 1_000_000.0;
+        let data = data_mb * mb;
+        Self {
+            ah,
+            aw,
+            gen: HwGen::FeatherPlus,
+            elem_bytes: 1,
+            acc_bytes: 4,
+            str_bytes: (data * 0.4) as usize,
+            sta_bytes: (data * 0.4) as usize,
+            ob_bytes: (data * 0.2) as usize,
+            instr_bytes: (instr_mb * mb) as usize,
+            instr_bw: 9.0,
+            data_bw_in: aw as f64,
+            data_bw_out: 4.0 * aw as f64,
+            hbm_bytes: 32 << 30, // 32 GiB
+            clock_ghz: 1.0,
+        }
+    }
+
+    /// All nine (AH, AW) configurations swept by the paper's evaluation.
+    pub fn paper_sweep() -> Vec<Self> {
+        let mut v = Vec::new();
+        for &(ah, aws) in &[(4usize, [4usize, 16, 64]), (8, [8, 32, 128]), (16, [16, 64, 256])] {
+            for &aw in &aws {
+                v.push(Self::paper(ah, aw));
+            }
+        }
+        v
+    }
+
+    /// The six configurations of Table I.
+    pub fn table1_sweep() -> Vec<Self> {
+        [(4, 4), (8, 8), (4, 64), (16, 16), (8, 128), (16, 256)]
+            .iter()
+            .map(|&(ah, aw)| Self::paper(ah, aw))
+            .collect()
+    }
+
+    /// FEATHER (baseline generation) twin of this config.
+    pub fn as_feather(mut self) -> Self {
+        self.gen = HwGen::Feather;
+        self
+    }
+
+    /// Streaming-buffer depth D_str in rows of AW elements.
+    pub fn d_str(&self) -> usize {
+        self.str_bytes / (self.aw * self.elem_bytes)
+    }
+
+    /// Stationary-buffer depth D_sta in rows of AW elements.
+    pub fn d_sta(&self) -> usize {
+        self.sta_bytes / (self.aw * self.elem_bytes)
+    }
+
+    /// The ISA's D parameter: the paper sets D = D_sta = D_str (Fig. 5);
+    /// we take the min so encodings are always in range for both buffers.
+    pub fn d(&self) -> usize {
+        self.d_str().min(self.d_sta())
+    }
+
+    /// Output-buffer depth in rows of AW accumulators.
+    pub fn d_ob(&self) -> usize {
+        self.ob_bytes / (self.aw * self.acc_bytes)
+    }
+
+    /// Max number of VNs (of size AH) resident per data buffer: ⌊D/AH⌋·AW.
+    pub fn max_vns(&self) -> usize {
+        (self.d() / self.ah) * self.aw
+    }
+
+    /// Number of PEs.
+    pub fn pes(&self) -> usize {
+        self.ah * self.aw
+    }
+
+    /// Peak MACs per cycle.
+    pub fn peak_macs_per_cycle(&self) -> usize {
+        self.pes()
+    }
+
+    /// BIRRD stage count. BIRRD is a butterfly-like reduce-and-reorder
+    /// network over AW ports: `2·log2(AW) − 1` stages of AW/2 two-input
+    /// switches (Benes-equivalent rearrangeability, §III-A / FEATHER §IV).
+    pub fn birrd_stages(&self) -> usize {
+        if self.aw <= 1 {
+            return 0;
+        }
+        2 * clog2(self.aw) as usize - 1
+    }
+
+    /// Total BIRRD 2×2 switches: stages × AW/2.
+    pub fn birrd_switches(&self) -> usize {
+        self.birrd_stages() * (self.aw / 2)
+    }
+
+    /// Pipeline fill/drain latency of one NEST invocation: array depth +
+    /// BIRRD stages + OB write.
+    pub fn drain_cycles(&self) -> usize {
+        self.ah + self.birrd_stages() + 1
+    }
+
+    /// Cycles to load one full stationary tile (AH regs × AW cols) from the
+    /// stationary buffer. One buffer row (AW elements) per cycle through the
+    /// distribution network; double-buffered local registers hide this for
+    /// all but the first tile (§III-A).
+    pub fn stationary_fill_cycles(&self, vn_size: usize) -> usize {
+        // AH·AW elements arrive AW per cycle → AH cycles (vn_size rows when
+        // VN is shorter than AH).
+        vn_size.min(self.ah)
+    }
+
+    /// Convert cycles to microseconds at the configured clock.
+    pub fn cycles_to_us(&self, cycles: f64) -> f64 {
+        cycles / (self.clock_ghz * 1e3)
+    }
+
+    /// Sanity-check invariants; used by tests and the CLI.
+    pub fn validate(&self) -> Result<(), String> {
+        if !crate::util::is_pow2(self.aw) {
+            return Err(format!("AW={} must be a power of two (BIRRD)", self.aw));
+        }
+        if self.ah == 0 || self.aw == 0 {
+            return Err("AH/AW must be nonzero".into());
+        }
+        if self.d() < self.ah {
+            return Err(format!("buffer depth D={} < AH={}", self.d(), self.ah));
+        }
+        if self.d_ob() == 0 {
+            return Err("output buffer too small".into());
+        }
+        Ok(())
+    }
+
+    /// Short display name, e.g. "16x256".
+    pub fn name(&self) -> String {
+        format!("{}x{}", self.ah, self.aw)
+    }
+
+    /// Number of VN rows (r-index range) a K-length reduction needs.
+    pub fn k_tiles(&self, k: usize) -> usize {
+        ceil_div(k, self.ah)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs_validate() {
+        for c in ArchConfig::paper_sweep() {
+            c.validate().unwrap_or_else(|e| panic!("{}: {e}", c.name()));
+        }
+        for c in ArchConfig::table1_sweep() {
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn paper_sweep_has_nine() {
+        assert_eq!(ArchConfig::paper_sweep().len(), 9);
+        assert_eq!(ArchConfig::table1_sweep().len(), 6);
+    }
+
+    #[test]
+    fn capacities_match_table_v() {
+        let c = ArchConfig::paper(16, 256);
+        // 25.6 + 12.8 MB data: 40/40/20 split.
+        assert_eq!(c.str_bytes, 15_360_000);
+        assert_eq!(c.sta_bytes, 15_360_000);
+        assert_eq!(c.ob_bytes, 7_680_000);
+        assert_eq!(c.instr_bytes, 2_000_000);
+        assert_eq!(c.instr_bw, 9.0);
+        assert_eq!(c.data_bw_in, 256.0);
+        assert_eq!(c.data_bw_out, 1024.0);
+    }
+
+    #[test]
+    fn depths_consistent() {
+        let c = ArchConfig::paper(4, 4);
+        assert_eq!(c.d_str(), c.str_bytes / 4);
+        assert!(c.d() >= c.ah);
+        assert_eq!(c.max_vns(), (c.d() / 4) * 4);
+    }
+
+    #[test]
+    fn birrd_counts() {
+        let c = ArchConfig::paper(4, 4);
+        assert_eq!(c.birrd_stages(), 3); // 2*2-1
+        assert_eq!(c.birrd_switches(), 6);
+        let c = ArchConfig::paper(16, 256);
+        assert_eq!(c.birrd_stages(), 15); // 2*8-1
+        assert_eq!(c.birrd_switches(), 15 * 128);
+    }
+
+    #[test]
+    fn feather_twin_keeps_dims() {
+        let c = ArchConfig::paper(8, 32).as_feather();
+        assert_eq!(c.gen, HwGen::Feather);
+        assert_eq!((c.ah, c.aw), (8, 32));
+    }
+
+    #[test]
+    fn rejects_non_pow2_aw() {
+        let mut c = ArchConfig::paper(4, 4);
+        c.aw = 6;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn k_tiles_rounding() {
+        let c = ArchConfig::paper(16, 16);
+        assert_eq!(c.k_tiles(40), 3);
+        assert_eq!(c.k_tiles(16), 1);
+        assert_eq!(c.k_tiles(17), 2);
+    }
+}

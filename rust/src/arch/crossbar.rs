@@ -1,0 +1,119 @@
+//! Distribution networks from buffers to NEST (§III-B).
+//!
+//! FEATHER uses rigid per-column point-to-point links: buffer column `c`
+//! feeds PE column `c` only, so any value needed by several columns must be
+//! *duplicated* in the buffer, and the stationary tensor must be pre-known
+//! and offline-reordered into its preferred layout.
+//!
+//! FEATHER+ replaces these with two all-to-all crossbars (streaming- and
+//! stationary-side), letting one resident copy be multicast to arbitrary PE
+//! columns — eliminating on-chip duplication and the pre-known-weights
+//! assumption.
+
+use super::config::HwGen;
+
+/// A distribution request for one cycle: for each PE column, which buffer
+/// column it wants to read (or `None` for idle).
+pub type DistRequest = Vec<Option<usize>>;
+
+/// Outcome of distributing one cycle's requests.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DistOutcome {
+    /// Requests that can be served this cycle.
+    pub served: usize,
+    /// Requests that would require an on-chip duplicate under this
+    /// generation's network (FEATHER point-to-point only).
+    pub needs_duplication: usize,
+}
+
+/// Check a distribution pattern against a hardware generation.
+///
+/// * `FeatherPlus`: all-to-all crossbar — every pattern is served in one
+///   cycle (a single buffer column may fan out to any set of PE columns).
+/// * `Feather`: point-to-point — PE column `i` can only read buffer column
+///   `i`; any other source requires the value to have been duplicated into
+///   buffer column `i` ahead of time.
+pub fn distribute(gen: HwGen, req: &DistRequest) -> DistOutcome {
+    match gen {
+        HwGen::FeatherPlus => DistOutcome {
+            served: req.iter().filter(|r| r.is_some()).count(),
+            needs_duplication: 0,
+        },
+        HwGen::Feather => {
+            let mut served = 0;
+            let mut dup = 0;
+            for (pe_col, r) in req.iter().enumerate() {
+                match r {
+                    Some(src) if *src == pe_col => served += 1,
+                    Some(_) => dup += 1,
+                    None => {}
+                }
+            }
+            DistOutcome { served, needs_duplication: dup }
+        }
+    }
+}
+
+/// Count distinct buffer columns multicast to >1 PE column — the data that
+/// FEATHER would have to physically replicate in its buffers (the on-chip
+/// duplication FEATHER+ removes, §III-B).
+pub fn duplication_factor(req: &DistRequest) -> usize {
+    use std::collections::HashMap;
+    let mut fanout: HashMap<usize, usize> = HashMap::new();
+    for r in req.iter().flatten() {
+        *fanout.entry(*r).or_insert(0) += 1;
+    }
+    fanout.values().filter(|&&f| f > 1).map(|&f| f - 1).sum()
+}
+
+/// Crossbar hardware cost in 2:1 mux-equivalents: an AW×AW crossbar of
+/// `width`-bit ports costs ~AW·AW·width muxes (the O(AW²) term of §VI-D1).
+pub fn crossbar_mux_cost(aw: usize, width_bits: usize) -> u64 {
+    (aw * aw * width_bits) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn featherplus_serves_everything() {
+        let req: DistRequest = vec![Some(0), Some(0), Some(0), None];
+        let out = distribute(HwGen::FeatherPlus, &req);
+        assert_eq!(out.served, 3);
+        assert_eq!(out.needs_duplication, 0);
+    }
+
+    #[test]
+    fn feather_needs_duplicates_for_multicast() {
+        // All four PE columns want buffer column 0: FEATHER must duplicate
+        // it into columns 1..3.
+        let req: DistRequest = vec![Some(0), Some(0), Some(0), Some(0)];
+        let out = distribute(HwGen::Feather, &req);
+        assert_eq!(out.served, 1);
+        assert_eq!(out.needs_duplication, 3);
+        assert_eq!(duplication_factor(&req), 3);
+    }
+
+    #[test]
+    fn feather_identity_pattern_is_free() {
+        let req: DistRequest = (0..8).map(Some).collect();
+        let out = distribute(HwGen::Feather, &req);
+        assert_eq!(out.served, 8);
+        assert_eq!(out.needs_duplication, 0);
+        assert_eq!(duplication_factor(&req), 0);
+    }
+
+    #[test]
+    fn duplication_counts_per_source() {
+        // col0 fanout 2 (+1 dup), col3 fanout 3 (+2 dups).
+        let req: DistRequest = vec![Some(0), Some(0), Some(3), Some(3), Some(3), None];
+        assert_eq!(duplication_factor(&req), 3);
+    }
+
+    #[test]
+    fn crossbar_cost_quadratic() {
+        assert_eq!(crossbar_mux_cost(4, 8), 128);
+        assert_eq!(crossbar_mux_cost(8, 8), 512); // 4× for 2× ports
+    }
+}

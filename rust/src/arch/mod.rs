@@ -1,0 +1,15 @@
+//! FEATHER+ architectural model (§III): configuration, buffers, the NEST PE
+//! array, the BIRRD reduce-and-reorder network, the all-to-all distribution
+//! crossbars and the post-PnR area/power model.
+
+pub mod area;
+pub mod birrd;
+pub mod buffer;
+pub mod config;
+pub mod crossbar;
+pub mod dedup;
+pub mod nest;
+pub mod vn;
+
+pub use config::{ArchConfig, HwGen};
+pub use vn::{Operand, VnGrid};

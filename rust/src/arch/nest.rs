@@ -1,0 +1,135 @@
+//! NEST — the column-wise independent AH × AW PE array (§III-A).
+//!
+//! Each PE holds `2 × AH` local registers (double-buffered so the next
+//! tile's stationary VN loads while the current one computes) and performs
+//! an AH-element dot product between its stationary registers and the
+//! streaming operand pipelining top→bottom through its column.
+//!
+//! This module is the *functional* PE model used by the trace simulator;
+//! timing lives in `perf`.
+
+/// One processing element: double-buffered stationary registers + MAC.
+#[derive(Debug, Clone)]
+pub struct Pe {
+    /// Two register banks of AH elements each.
+    regs: [Vec<i32>; 2],
+    /// Bank used by compute; `1 - active` is the load target.
+    active: usize,
+}
+
+impl Pe {
+    pub fn new(ah: usize) -> Self {
+        Self { regs: [vec![0; ah], vec![0; ah]], active: 0 }
+    }
+
+    /// Load a stationary VN into the shadow bank.
+    pub fn load_shadow(&mut self, vn: &[i32]) {
+        let shadow = 1 - self.active;
+        self.regs[shadow][..vn.len()].copy_from_slice(vn);
+        for v in self.regs[shadow][vn.len()..].iter_mut() {
+            *v = 0;
+        }
+    }
+
+    /// Swap shadow → active (tile boundary; hides load latency, §III-A).
+    pub fn swap(&mut self) {
+        self.active = 1 - self.active;
+    }
+
+    /// AH-element dot product with the streamed VN (Constraint 1: all AH
+    /// registers participate in one dot product).
+    pub fn dot(&self, streamed: &[i32]) -> i64 {
+        self.regs[self.active]
+            .iter()
+            .zip(streamed)
+            .map(|(&a, &b)| a as i64 * b as i64)
+            .sum()
+    }
+
+    pub fn active_regs(&self) -> &[i32] {
+        &self.regs[self.active]
+    }
+}
+
+/// The PE array. Columns are fully independent (Constraint 2: the streaming
+/// operand is reused by every PE of a column; columns never interact except
+/// through BIRRD reduction).
+#[derive(Debug, Clone)]
+pub struct Nest {
+    pub ah: usize,
+    pub aw: usize,
+    pes: Vec<Pe>,
+}
+
+impl Nest {
+    pub fn new(ah: usize, aw: usize) -> Self {
+        Self { ah, aw, pes: (0..ah * aw).map(|_| Pe::new(ah)).collect() }
+    }
+
+    pub fn pe(&self, a_h: usize, a_w: usize) -> &Pe {
+        &self.pes[a_h * self.aw + a_w]
+    }
+
+    pub fn pe_mut(&mut self, a_h: usize, a_w: usize) -> &mut Pe {
+        &mut self.pes[a_h * self.aw + a_w]
+    }
+
+    /// Swap all PEs' register banks (start of a new compute tile).
+    pub fn swap_all(&mut self) {
+        self.pes.iter_mut().for_each(Pe::swap);
+    }
+
+    /// One streaming step for a column: every PE row computes its dot
+    /// product against the shared streamed VN, yielding AH psums
+    /// (one per PE), bottom-of-column order.
+    pub fn column_step(&self, a_w: usize, streamed: &[i32]) -> Vec<i64> {
+        (0..self.ah).map(|a_h| self.pe(a_h, a_w).dot(streamed)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pe_dot_product() {
+        let mut pe = Pe::new(4);
+        pe.load_shadow(&[1, 2, 3, 4]);
+        pe.swap();
+        assert_eq!(pe.dot(&[1, 1, 1, 1]), 10);
+        assert_eq!(pe.dot(&[0, 0, 0, 2]), 8);
+    }
+
+    #[test]
+    fn double_buffering_isolation() {
+        let mut pe = Pe::new(2);
+        pe.load_shadow(&[5, 5]);
+        pe.swap(); // active = [5,5]
+        pe.load_shadow(&[9, 9]); // shadow load must not affect compute
+        assert_eq!(pe.dot(&[1, 1]), 10);
+        pe.swap();
+        assert_eq!(pe.dot(&[1, 1]), 18);
+    }
+
+    #[test]
+    fn shadow_load_zero_pads() {
+        let mut pe = Pe::new(4);
+        pe.load_shadow(&[7, 7, 7, 7]);
+        pe.swap();
+        pe.load_shadow(&[1]); // short VN → rest zeroed
+        pe.swap();
+        assert_eq!(pe.dot(&[1, 1, 1, 1]), 1);
+    }
+
+    #[test]
+    fn column_step_independent_rows() {
+        let mut nest = Nest::new(2, 2);
+        nest.pe_mut(0, 0).load_shadow(&[1, 0]);
+        nest.pe_mut(1, 0).load_shadow(&[0, 1]);
+        nest.pe_mut(0, 1).load_shadow(&[2, 2]);
+        nest.pe_mut(1, 1).load_shadow(&[3, 3]);
+        nest.swap_all();
+        assert_eq!(nest.column_step(0, &[10, 20]), vec![10, 20]);
+        assert_eq!(nest.column_step(1, &[1, 1]), vec![4, 6]);
+    }
+}

@@ -1,0 +1,195 @@
+//! The Virtual Neuron (VN) abstraction (§IV-B).
+//!
+//! A VN is the minimal hardware dot-product atom: `vn_size ≤ AH` consecutive
+//! elements of an operand along its reduction rank. Operand-specific VNs:
+//!
+//! * `I_VN(m, j)` — input row `m`, reduction tile `j` (rank J, size K)
+//! * `W_VN(r, c)` — reduction tile `r` (rank K), output column `c` (rank N)
+//! * `O_VN(r, c)` — next-layer reduction tile `r` over rank Q(=N), output
+//!   row `c` (rank P = M)
+//!
+//! VNs falling (partially) outside tensor bounds are implicitly zero-padded
+//! (§IV-C2), which the accessors here implement.
+
+use crate::workloads::Gemm;
+use crate::util::ceil_div;
+
+/// Operand kinds an on-chip buffer can hold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Operand {
+    Input,
+    Weight,
+    Output,
+}
+
+/// A logical 2-D VN array view over a row-major matrix.
+///
+/// For weights (K×N): rows index the reduction tile `r = k/vn`, columns
+/// index `n`. For inputs (M×K): the VN grid is transposed relative to the
+/// matrix — rows index `m`, columns index `j = k/vn`; we normalize both to
+/// the `(r, c)` convention used by the ISA: `r` = reduction tile, `c` =
+/// non-reduction index.
+#[derive(Debug, Clone)]
+pub struct VnGrid {
+    /// Reduction-rank length (K for weights, K for inputs, N for outputs).
+    pub red_len: usize,
+    /// Non-reduction rank length (N for weights, M for inputs/outputs).
+    pub non_red_len: usize,
+    /// VN length (≤ AH).
+    pub vn_size: usize,
+}
+
+impl VnGrid {
+    pub fn new(red_len: usize, non_red_len: usize, vn_size: usize) -> Self {
+        assert!(vn_size > 0);
+        Self { red_len, non_red_len, vn_size }
+    }
+
+    /// Weight-operand VN grid of a GEMM.
+    pub fn weights(g: &Gemm, vn: usize) -> Self {
+        Self::new(g.k, g.n, vn)
+    }
+
+    /// Input-operand VN grid of a GEMM.
+    pub fn inputs(g: &Gemm, vn: usize) -> Self {
+        Self::new(g.k, g.m, vn)
+    }
+
+    /// Output-operand VN grid of a GEMM (reduction rank = N = next layer J).
+    pub fn outputs(g: &Gemm, vn: usize) -> Self {
+        Self::new(g.n, g.m, vn)
+    }
+
+    /// Number of reduction tiles (`r` range).
+    pub fn rows(&self) -> usize {
+        ceil_div(self.red_len, self.vn_size)
+    }
+
+    /// `c` range.
+    pub fn cols(&self) -> usize {
+        self.non_red_len
+    }
+
+    /// Total VN count.
+    pub fn count(&self) -> usize {
+        self.rows() * self.cols()
+    }
+
+    /// Whether VN (r, c) overlaps the tensor at all.
+    pub fn in_bounds(&self, r: usize, c: usize) -> bool {
+        r < self.rows() && c < self.cols()
+    }
+
+    /// Elements of W_VN(r, c) from a row-major K×N matrix, zero-padded to
+    /// `vn_size`. Element i is `W[r·vn + i, c]`.
+    pub fn gather_weight<T: Copy + Default>(&self, w: &[T], r: usize, c: usize) -> Vec<T> {
+        debug_assert_eq!(w.len(), self.red_len * self.non_red_len);
+        let mut out = vec![T::default(); self.vn_size];
+        if c >= self.non_red_len {
+            return out;
+        }
+        for (i, o) in out.iter_mut().enumerate() {
+            let k = r * self.vn_size + i;
+            if k < self.red_len {
+                *o = w[k * self.non_red_len + c];
+            }
+        }
+        out
+    }
+
+    /// Elements of I_VN(m=c, j=r) from a row-major M×K matrix, zero-padded.
+    /// Element i is `I[c, r·vn + i]`.
+    pub fn gather_input<T: Copy + Default>(&self, inp: &[T], r: usize, c: usize) -> Vec<T> {
+        debug_assert_eq!(inp.len(), self.non_red_len * self.red_len);
+        let mut out = vec![T::default(); self.vn_size];
+        if c >= self.non_red_len {
+            return out;
+        }
+        for (i, o) in out.iter_mut().enumerate() {
+            let k = r * self.vn_size + i;
+            if k < self.red_len {
+                *o = inp[c * self.red_len + k];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Gemm;
+
+    fn gemm(m: usize, k: usize, n: usize) -> Gemm {
+        Gemm::new("t", "test", m, k, n)
+    }
+
+    #[test]
+    fn grid_counts() {
+        let g = gemm(6, 10, 8);
+        let w = VnGrid::weights(&g, 4);
+        assert_eq!(w.rows(), 3); // ceil(10/4)
+        assert_eq!(w.cols(), 8);
+        assert_eq!(w.count(), 24);
+        let i = VnGrid::inputs(&g, 4);
+        assert_eq!(i.rows(), 3);
+        assert_eq!(i.cols(), 6);
+        let o = VnGrid::outputs(&g, 4);
+        assert_eq!(o.rows(), 2); // ceil(8/4)
+        assert_eq!(o.cols(), 6);
+    }
+
+    #[test]
+    fn gather_weight_values_and_padding() {
+        // W is 3x2: [[1,2],[3,4],[5,6]] with K=3, N=2, vn=2.
+        let g = gemm(1, 3, 2);
+        let grid = VnGrid::weights(&g, 2);
+        let w: Vec<i32> = vec![1, 2, 3, 4, 5, 6];
+        assert_eq!(grid.gather_weight(&w, 0, 0), vec![1, 3]);
+        assert_eq!(grid.gather_weight(&w, 0, 1), vec![2, 4]);
+        // r=1 covers k=2..4 → k=3 padded.
+        assert_eq!(grid.gather_weight(&w, 1, 0), vec![5, 0]);
+        // fully out-of-bounds column → zeros.
+        assert_eq!(grid.gather_weight(&w, 0, 7), vec![0, 0]);
+        assert_eq!(grid.gather_weight(&w, 9, 0), vec![0, 0]);
+    }
+
+    #[test]
+    fn gather_input_values_and_padding() {
+        // I is 2x3: [[1,2,3],[4,5,6]], M=2, K=3, vn=2.
+        let g = gemm(2, 3, 1);
+        let grid = VnGrid::inputs(&g, 2);
+        let i: Vec<i32> = vec![1, 2, 3, 4, 5, 6];
+        assert_eq!(grid.gather_input(&i, 0, 0), vec![1, 2]);
+        assert_eq!(grid.gather_input(&i, 1, 0), vec![3, 0]);
+        assert_eq!(grid.gather_input(&i, 0, 1), vec![4, 5]);
+        assert_eq!(grid.gather_input(&i, 1, 1), vec![6, 0]);
+        assert_eq!(grid.gather_input(&i, 0, 5), vec![0, 0]);
+    }
+
+    #[test]
+    fn dot_of_gathers_matches_matmul_entry() {
+        // Property-style check on a fixed case: sum over r of
+        // dot(I_VN(m=c_i, r), W_VN(r, c_w)) == (I·W)[c_i, c_w].
+        let g = gemm(3, 5, 4);
+        let mut rng = crate::util::Lcg::new(11);
+        let iv: Vec<i32> = (0..g.m * g.k).map(|_| rng.range(0, 9) as i32).collect();
+        let wv: Vec<i32> = (0..g.k * g.n).map(|_| rng.range(0, 9) as i32).collect();
+        let gi = VnGrid::inputs(&g, 2);
+        let gw = VnGrid::weights(&g, 2);
+        for m in 0..g.m {
+            for n in 0..g.n {
+                let mut acc = 0i64;
+                for r in 0..gw.rows() {
+                    let a = gi.gather_input(&iv, r, m);
+                    let b = gw.gather_weight(&wv, r, n);
+                    acc += a.iter().zip(&b).map(|(&x, &y)| x as i64 * y as i64).sum::<i64>();
+                }
+                let expect: i64 = (0..g.k)
+                    .map(|k| iv[m * g.k + k] as i64 * wv[k * g.n + n] as i64)
+                    .sum();
+                assert_eq!(acc, expect, "mismatch at ({m},{n})");
+            }
+        }
+    }
+}

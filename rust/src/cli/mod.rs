@@ -1,0 +1,544 @@
+//! Command-line interface mirroring the paper artifact's entry points
+//! (Appendix D): `evaluate`, `compare`, `analyze`, `search`, `trace`,
+//! `bitwidth`, `area`, `workloads`, `serve`.
+//!
+//! Hand-rolled argument parsing (offline substitute for clap, DESIGN.md).
+
+pub mod animate;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::arch::config::ArchConfig;
+use crate::coordinator::{compare_devices, evaluate_suite, summarize_by_config};
+use crate::mapper::search::{search as mapper_search, MapperOptions};
+use crate::report::{eng, f1, f2, pct, Table};
+use crate::workloads::{self, Gemm};
+
+/// Parsed command line: subcommand + flags.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub cmd: String,
+    pub flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Self {
+        let mut a = Args::default();
+        let mut it = argv.iter();
+        if let Some(c) = it.next() {
+            a.cmd = c.clone();
+        }
+        // Name of the most recent bare `--flag` awaiting a value.
+        let mut pending: Option<String> = None;
+        for tok in it {
+            if let Some(name) = tok.strip_prefix("--") {
+                pending = None;
+                // --flag value | --flag=value | bare --flag (boolean)
+                if let Some((k, v)) = name.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    a.flags.insert(name.to_string(), "true".to_string());
+                    pending = Some(name.to_string());
+                }
+            } else if let Some(key) = pending.take() {
+                a.flags.insert(key, tok.clone());
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        a
+    }
+
+    pub fn usize_flag(&self, k: &str, default: usize) -> usize {
+        self.flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn str_flag(&self, k: &str, default: &str) -> String {
+        self.flags.get(k).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn bool_flag(&self, k: &str) -> bool {
+        self.flags.get(k).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+}
+
+fn load_workloads(args: &Args) -> Vec<Gemm> {
+    if let Some(csv) = args.flags.get("csv") {
+        match workloads::from_csv(&PathBuf::from(csv)) {
+            Ok(w) => return w,
+            Err(e) => {
+                eprintln!("warning: {e}; falling back to built-in suite");
+            }
+        }
+    }
+    if args.bool_flag("small") {
+        workloads::suite_small()
+    } else {
+        workloads::suite50()
+    }
+}
+
+fn configs(args: &Args) -> Vec<ArchConfig> {
+    if let (Some(ah), Some(aw)) = (args.flags.get("ah"), args.flags.get("aw")) {
+        let ah: usize = ah.parse().unwrap_or(16);
+        let aw: usize = if aw == "same" { ah } else { aw.parse().unwrap_or(256) };
+        vec![ArchConfig::paper(ah, aw)]
+    } else if args.bool_flag("small") {
+        vec![ArchConfig::paper(4, 4), ArchConfig::paper(4, 16), ArchConfig::paper(8, 8)]
+    } else {
+        ArchConfig::paper_sweep()
+    }
+}
+
+fn opts(args: &Args) -> MapperOptions {
+    MapperOptions {
+        full_layout_search: !args.bool_flag("fast"),
+        threads: args.usize_flag("jobs", 4),
+        ..Default::default()
+    }
+}
+
+fn out_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_flag("out", "results"))
+}
+
+/// `minisa evaluate` — Fig. 10/12 data: full (mapping, layout) co-search for
+/// every workload × config, MINISA vs micro-instructions.
+pub fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
+    let ws = load_workloads(args);
+    let cfgs = configs(args);
+    let o = opts(args);
+    let jobs = args.usize_flag("jobs", 8);
+    eprintln!("evaluating {} workloads × {} configs on {jobs} jobs...", ws.len(), cfgs.len());
+    let t0 = std::time::Instant::now();
+    let rows = evaluate_suite(&cfgs, &ws, &o, jobs);
+    eprintln!("done in {:.1}s ({} points)", t0.elapsed().as_secs_f64(), rows.len());
+
+    let mut t = Table::new(
+        "Per-workload evaluation (Fig. 10 / Fig. 12 data)",
+        &[
+            "config", "workload", "speedup", "instr_reduction", "micro_stall",
+            "minisa_stall", "utilization", "minisa_B", "micro_B", "instr:data(micro)",
+            "instr:data(minisa)",
+        ],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.config.clone(),
+            r.workload.name.clone(),
+            f2(r.speedup()),
+            eng(r.instr_reduction()),
+            pct(r.micro.instr_stall_fraction()),
+            pct(r.decision.report.instr_stall_fraction()),
+            pct(r.decision.report.utilization()),
+            r.minisa_bytes.to_string(),
+            r.micro_bytes.to_string(),
+            f2(r.micro_instr_to_data()),
+            format!("{:.2e}", r.minisa_instr_to_data()),
+        ]);
+    }
+    let dir = out_dir(args);
+    t.write_csv(&dir.join("evaluate.csv"))?;
+
+    let mut s = Table::new(
+        "Geomean by config (Fig. 10 headline)",
+        &["config", "geo_speedup", "geo_instr_reduction", "micro_stall", "minisa_stall", "utilization"],
+    );
+    for c in summarize_by_config(&rows) {
+        s.row(vec![
+            c.config,
+            f2(c.geo_speedup),
+            eng(c.geo_instr_reduction),
+            pct(c.mean_stall_micro),
+            pct(c.mean_stall_minisa),
+            pct(c.mean_utilization),
+        ]);
+    }
+    s.write_csv(&dir.join("evaluate_summary.csv"))?;
+    println!("{}", s.render());
+    println!("wrote {}/evaluate.csv and evaluate_summary.csv", dir.display());
+    Ok(())
+}
+
+/// `minisa compare` — Table I + instruction-byte comparison.
+pub fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+    let o = opts(args);
+    let g = workloads::table1_workload();
+    let mut t = Table::new(
+        "Table I: instruction-fetch stall, micro-instruction baseline",
+        &["FEATHER+", "stall(micro)", "stall(MINISA)", "speedup", "minisa_B", "micro_B"],
+    );
+    for cfg in ArchConfig::table1_sweep() {
+        if let Some(row) = crate::coordinator::evaluate_one(&cfg, &g, &o) {
+            t.row(vec![
+                cfg.name(),
+                pct(row.micro.instr_stall_fraction()),
+                pct(row.decision.report.instr_stall_fraction()),
+                f2(row.speedup()),
+                row.minisa_bytes.to_string(),
+                row.micro_bytes.to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    t.write_csv(&out_dir(args).join("table1.csv"))?;
+    Ok(())
+}
+
+/// `minisa analyze` — Fig. 11 GPU/TPU comparison (+ Fig. 13 breakdown with
+/// `--breakdown`).
+pub fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
+    let ws = load_workloads(args);
+    let o = opts(args);
+    let jobs = args.usize_flag("jobs", 8);
+    let rows = compare_devices(&ws, &o, jobs);
+    let mut t = Table::new(
+        "Fig. 11: latency (µs) — FEATHER+ 64×(16×256) mesh vs RTX5090 vs TPUv6e-8",
+        &["workload", "feather_us", "gpu_us", "tpu_us", "feather_util", "vs_gpu", "vs_tpu"],
+    );
+    let mut vs_gpu = Vec::new();
+    let mut vs_tpu = Vec::new();
+    for r in &rows {
+        vs_gpu.push(r.gpu_us / r.feather_us.max(1e-9));
+        vs_tpu.push(r.tpu_us / r.feather_us.max(1e-9));
+        t.row(vec![
+            r.workload.name.clone(),
+            f1(r.feather_us),
+            f1(r.gpu_us),
+            f1(r.tpu_us),
+            pct(r.feather_utilization),
+            f2(*vs_gpu.last().unwrap()),
+            f2(*vs_tpu.last().unwrap()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "geomean speedup: vs GPU {}x, vs TPU {}x",
+        f2(crate::util::geomean(&vs_gpu)),
+        f2(crate::util::geomean(&vs_tpu))
+    );
+    t.write_csv(&out_dir(args).join("gpu_tpu_compare.csv"))?;
+
+    if args.bool_flag("breakdown") {
+        cmd_breakdown(args)?;
+    }
+    Ok(())
+}
+
+/// Fig. 13: latency breakdown for representative workloads.
+pub fn cmd_breakdown(args: &Args) -> anyhow::Result<()> {
+    let o = opts(args);
+    let reps: Vec<Gemm> = {
+        let mut v = vec![workloads::table1_workload()];
+        v.push(workloads::fhe_ntt().swap_remove(0));
+        v.push(workloads::gpt_oss().swap_remove(0));
+        v.push(workloads::zkp_ntt().swap_remove(0));
+        v
+    };
+    let mut t = Table::new(
+        "Fig. 13: cycle breakdown + utilization",
+        &["config", "workload", "compute", "load_in", "load_w", "out_stream", "store",
+          "fetch", "total", "utilization"],
+    );
+    for (ah, aw) in [(4usize, 64usize), (16, 64), (16, 256)] {
+        let cfg = ArchConfig::paper(ah, aw);
+        for g in &reps {
+            if let Some(d) = mapper_search(&cfg, g, &o) {
+                let r = &d.report;
+                t.row(vec![
+                    cfg.name(),
+                    g.name.clone(),
+                    f1(r.compute_cycles),
+                    f1(r.load_in_cycles),
+                    f1(r.load_w_cycles),
+                    f1(r.out_stream_cycles),
+                    f1(r.store_out_cycles),
+                    f1(r.fetch_cycles),
+                    f1(r.total_cycles),
+                    pct(r.utilization()),
+                ]);
+            }
+        }
+    }
+    println!("{}", t.render());
+    t.write_csv(&out_dir(args).join("breakdown.csv"))?;
+    Ok(())
+}
+
+/// `minisa search` — single-shape (mapping, layout) co-search.
+pub fn cmd_search(args: &Args) -> anyhow::Result<()> {
+    let m = args.usize_flag("m", 1024);
+    let k = args.usize_flag("k", 40);
+    let n = args.usize_flag("n", 88);
+    let cfg = configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(16, 64));
+    let g = Gemm::new("custom", "cli", m, k, n);
+    let mut o = opts(args);
+    if args.bool_flag("layout-constrained") {
+        o.full_layout_search = false;
+    }
+    let d = mapper_search(&cfg, &g, &o)
+        .ok_or_else(|| anyhow::anyhow!("no feasible mapping for {g} on {}", cfg.name()))?;
+    println!("workload: {g}");
+    println!("config:   {} (D={}, VN≤{})", cfg.name(), cfg.d(), cfg.ah);
+    println!(
+        "decision: df={:?} vn={} tile=({},{},{}) nbc={} dup={} orders(i,w,o)=({},{},{})",
+        d.choice.df, d.choice.vn, d.choice.m_t, d.choice.k_t, d.choice.n_t,
+        d.choice.nbc, d.choice.dup, d.i_order, d.w_order, d.o_order
+    );
+    println!(
+        "estimate: {} cycles ({} µs @1GHz), utilization {}, instr stall {}",
+        f1(d.report.total_cycles),
+        f2(d.report.latency_us(&cfg)),
+        pct(d.report.utilization()),
+        pct(d.report.instr_stall_fraction())
+    );
+    Ok(())
+}
+
+/// `minisa trace` — lower a shape and dump the MINISA program.
+pub fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let m = args.usize_flag("m", 16);
+    let k = args.usize_flag("k", 16);
+    let n = args.usize_flag("n", 16);
+    let cfg = configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(4, 4));
+    let g = Gemm::new("custom", "cli", m, k, n);
+    let o = opts(args);
+    let d = mapper_search(&cfg, &g, &o)
+        .ok_or_else(|| anyhow::anyhow!("no feasible mapping"))?;
+    let prog = crate::mapper::lower_gemm(&cfg, &g, &d.choice, d.i_order, d.w_order, d.o_order);
+    println!("{}", prog.trace.disassemble());
+    println!(
+        "{} instructions, {} bytes MINISA vs {} bytes micro ({}× reduction), {} invocations, {} waves",
+        prog.trace.len(),
+        prog.minisa_bytes(),
+        prog.micro_bytes(),
+        eng(prog.instr_reduction()),
+        prog.invocations,
+        prog.waves
+    );
+    if args.bool_flag("validate") {
+        let (got, expect) = crate::mapper::exec::validate_decision(&cfg, &g, &prog, 42)
+            .map_err(|e| anyhow::anyhow!("functional sim: {e}"))?;
+        anyhow::ensure!(got == expect, "functional mismatch!");
+        println!("functional simulation matches naive GEMM ✓");
+    }
+    Ok(())
+}
+
+/// `minisa bitwidth` — Table V.
+pub fn cmd_bitwidth(_args: &Args) -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "Table V: MINISA ISA bitwidths",
+        &["config", "Set*VNLayout", "E.Mapping", "E.Streaming"],
+    );
+    for row in crate::isa::bitwidth::table_v() {
+        t.row(vec![
+            row.config,
+            format!("{} bits", row.set_layout_bits),
+            format!("{} bits", row.execute_mapping_bits),
+            format!("{} bits", row.execute_streaming_bits),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// `minisa area` — Table VI.
+pub fn cmd_area(_args: &Args) -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "Table VI: area/power, FEATHER vs FEATHER+ (model vs published)",
+        &["setup", "F µm²", "F+ µm²", "Δarea", "F mW", "F+ mW", "Δpower", "paper F µm²", "paper Δ"],
+    );
+    for row in crate::arch::area::table_vi() {
+        let paper = crate::arch::area::PAPER_TABLE_VI
+            .iter()
+            .find(|p| p.0 == row.config);
+        t.row(vec![
+            row.config.clone(),
+            format!("{:.0}", row.feather_um2),
+            format!("{:.0}", row.featherplus_um2),
+            format!("{:.2}%", row.area_increase_pct),
+            f2(row.feather_mw),
+            f2(row.featherplus_mw),
+            format!("{:.2}%", row.power_increase_pct),
+            paper.map(|p| format!("{:.0}", p.1)).unwrap_or_default(),
+            paper
+                .map(|p| format!("{:.2}%", (p.2 / p.1 - 1.0) * 100.0))
+                .unwrap_or_default(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// `minisa workloads` — dump the suite as CSV.
+pub fn cmd_workloads(args: &Args) -> anyhow::Result<()> {
+    let ws = load_workloads(args);
+    print!("{}", workloads::to_csv(&ws));
+    Ok(())
+}
+
+/// `minisa serve` — run the PJRT-backed serving loop on a synthetic trace.
+pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use crate::coordinator::serve::{spawn, NaiveExecutor, Request, TileExecutor};
+    use std::sync::Arc;
+
+    let cfg = configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(16, 64));
+    let requests = args.usize_flag("requests", 64);
+    let dir = PathBuf::from(args.str_flag("artifacts", "artifacts"));
+    let executor: Arc<dyn TileExecutor> = match crate::runtime::PjrtExecutor::start(&dir) {
+        Ok(exe) => {
+            eprintln!("PJRT runtime on {}", exe.platform());
+            Arc::new(exe)
+        }
+        Err(e) => {
+            eprintln!("PJRT unavailable ({e:#}); using naive executor");
+            Arc::new(NaiveExecutor)
+        }
+    };
+    let backend = executor.name().to_string();
+    let (tx, rx, h) = spawn(&cfg, executor);
+    let mut rng = crate::util::Lcg::new(7);
+    let wall = std::time::Instant::now();
+    let weight = rng.f32_matrix(64, 64);
+    for id in 0..requests as u64 {
+        tx.send(Request {
+            id,
+            m: 64,
+            k: 64,
+            n: 64,
+            input: rng.f32_matrix(64, 64),
+            weight: weight.clone(),
+        })?;
+    }
+    let mut served = 0;
+    let mut lat = Vec::new();
+    while served < requests {
+        let r = rx.recv()?;
+        lat.push(r.service_us);
+        served += 1;
+    }
+    drop(tx);
+    let stats = h.join().map_err(|_| anyhow::anyhow!("server panicked"))?;
+    let wall_us = wall.elapsed().as_secs_f64() * 1e6;
+    println!(
+        "served {} requests on '{}' in {:.1} ms: p50 {:.1} µs, p99 {:.1} µs, {:.0} req/s, {} batches (max {})",
+        stats.served,
+        backend,
+        wall_us / 1e3,
+        crate::util::percentile(&lat, 50.0),
+        crate::util::percentile(&lat, 99.0),
+        stats.throughput_per_s(wall_us),
+        stats.batches,
+        stats.max_batch,
+    );
+    Ok(())
+}
+
+pub fn usage() -> &'static str {
+    "MINISA / FEATHER+ toolchain (paper reproduction)\n\
+     \n\
+     USAGE: minisa <command> [flags]\n\
+     \n\
+     COMMANDS\n\
+       evaluate   (mapping, layout) co-search, MINISA vs micro — Fig. 10/12\n\
+                  [--small] [--jobs N] [--csv file] [--ah N --aw N|same] [--out dir]\n\
+       compare    instruction overhead + stalls on the Table I workload\n\
+       analyze    FEATHER+ vs RTX5090 vs TPUv6e-8 — Fig. 11 [--breakdown]\n\
+       search     single-shape mapper search [--m --k --n --ah --aw]\n\
+                  [--layout-constrained]\n\
+       trace      dump the lowered MINISA program [--m --k --n --validate]\n\
+       bitwidth   Table V ISA bitwidths\n\
+       area       Table VI area/power model\n\
+       workloads  dump the 50-workload suite CSV [--small]\n\
+       serve      run the serving loop on the PJRT runtime [--requests N]\n\
+       animate    cycle-by-cycle NEST/BIRRD/OB animation [--m --k --n --waves]\n"
+}
+
+/// Dispatch. Returns process exit code.
+pub fn run(argv: &[String]) -> i32 {
+    let args = Args::parse(argv);
+    let r = match args.cmd.as_str() {
+        "evaluate" => cmd_evaluate(&args),
+        "compare" => cmd_compare(&args),
+        "analyze" => cmd_analyze(&args),
+        "breakdown" => cmd_breakdown(&args),
+        "search" => cmd_search(&args),
+        "trace" => cmd_trace(&args),
+        "bitwidth" => cmd_bitwidth(&args),
+        "area" => cmd_area(&args),
+        "workloads" => cmd_workloads(&args),
+        "animate" => {
+            let m = args.usize_flag("m", 8);
+            let k = args.usize_flag("k", 8);
+            let n = args.usize_flag("n", 8);
+            let cfg = configs(&args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(4, 4));
+            let g = Gemm::new("animate", "cli", m, k, n);
+            match animate::animate(&cfg, &g, args.usize_flag("waves", 4)) {
+                Ok(s) => {
+                    println!("{s}");
+                    Ok(())
+                }
+                Err(e) => Err(anyhow::anyhow!(e)),
+            }
+        }
+        "serve" => cmd_serve(&args),
+        "help" | "" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{}", usage());
+            return 2;
+        }
+    };
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_flags() {
+        let argv: Vec<String> =
+            ["search", "--m", "128", "--k=40", "--fast", "--ah", "4", "--aw", "16"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let a = Args::parse(&argv);
+        assert_eq!(a.cmd, "search");
+        assert_eq!(a.usize_flag("m", 0), 128);
+        assert_eq!(a.usize_flag("k", 0), 40);
+        assert_eq!(a.usize_flag("ah", 0), 4);
+    }
+
+    #[test]
+    fn bitwidth_and_area_commands_run() {
+        assert!(cmd_bitwidth(&Args::default()).is_ok());
+        assert!(cmd_area(&Args::default()).is_ok());
+    }
+
+    #[test]
+    fn search_command_runs() {
+        let argv: Vec<String> = ["search", "--m", "64", "--k", "40", "--n", "24", "--ah", "4", "--aw", "4", "--fast"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(run(&argv), 0);
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        let argv = vec!["frobnicate".to_string()];
+        assert_eq!(run(&argv), 2);
+    }
+}

@@ -1,0 +1,236 @@
+//! Evaluation coordinator — the L3 orchestrator that drives the paper's
+//! experiment matrix (50 workloads × 9 array configurations) across worker
+//! threads, plus the GEMM-serving request loop (`serve` module) that
+//! exercises the PJRT runtime.
+
+pub mod serve;
+
+use crate::arch::config::ArchConfig;
+use crate::baselines;
+use crate::mapper::search::{estimate, MapperOptions};
+use crate::mapper::{search, Decision};
+use crate::perf::PerfReport;
+use crate::util::geomean;
+use crate::workloads::Gemm;
+
+/// One evaluation point: a workload on a configuration, mapped by the
+/// FEATHER+ mapper, costed under both instruction regimes.
+#[derive(Debug, Clone)]
+pub struct EvalRow {
+    pub workload: Gemm,
+    pub config: String,
+    pub decision: Decision,
+    /// Same mapping, micro-instruction control.
+    pub micro: PerfReport,
+    pub minisa_bytes: u64,
+    pub micro_bytes: u64,
+    pub data_bytes: u64,
+}
+
+impl EvalRow {
+    /// Fig. 10: end-to-end speedup of MINISA over micro-instructions.
+    pub fn speedup(&self) -> f64 {
+        self.micro.total_cycles / self.decision.report.total_cycles.max(1.0)
+    }
+    /// Fig. 12: off-chip instruction-byte reduction.
+    pub fn instr_reduction(&self) -> f64 {
+        self.micro_bytes as f64 / self.minisa_bytes.max(1) as f64
+    }
+    /// Fig. 12 lines: instruction-to-data byte ratios.
+    pub fn micro_instr_to_data(&self) -> f64 {
+        self.micro_bytes as f64 / self.data_bytes.max(1) as f64
+    }
+    pub fn minisa_instr_to_data(&self) -> f64 {
+        self.minisa_bytes as f64 / self.data_bytes.max(1) as f64
+    }
+}
+
+/// Evaluate one (workload, config) point.
+pub fn evaluate_one(cfg: &ArchConfig, g: &Gemm, opts: &MapperOptions) -> Option<EvalRow> {
+    let decision = search(cfg, g, opts)?;
+    let micro =
+        estimate(cfg, g, &decision.choice, decision.i_order, decision.o_order, false)?;
+    let (minisa_bits, micro_bits) =
+        crate::mapper::search::instr_traffic(cfg, g, &decision.choice)?;
+    Some(EvalRow {
+        workload: g.clone(),
+        config: cfg.name(),
+        decision,
+        micro,
+        minisa_bytes: minisa_bits.div_ceil(8),
+        micro_bytes: micro_bits.div_ceil(8),
+        data_bytes: g.data_bytes(cfg.elem_bytes, cfg.acc_bytes),
+    })
+}
+
+/// Evaluate a workload suite across configurations on `threads` workers
+/// (the artifact's `--jobs` knob).
+pub fn evaluate_suite(
+    cfgs: &[ArchConfig],
+    workloads: &[Gemm],
+    opts: &MapperOptions,
+    threads: usize,
+) -> Vec<EvalRow> {
+    let points: Vec<(ArchConfig, Gemm)> = cfgs
+        .iter()
+        .flat_map(|c| workloads.iter().map(move |w| (c.clone(), w.clone())))
+        .collect();
+    let threads = threads.max(1).min(points.len().max(1));
+    let chunk = crate::util::ceil_div(points.len().max(1), threads);
+    let inner = MapperOptions { threads: 1, ..opts.clone() };
+    let mut rows: Vec<EvalRow> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for part in points.chunks(chunk.max(1)) {
+            let inner = inner.clone();
+            handles.push(s.spawn(move || {
+                part.iter()
+                    .filter_map(|(c, w)| evaluate_one(c, w, &inner))
+                    .collect::<Vec<_>>()
+            }));
+        }
+        handles.into_iter().flat_map(|h| h.join().expect("eval worker")).collect()
+    });
+    rows.sort_by(|a, b| (a.config.clone(), a.workload.name.clone())
+        .cmp(&(b.config.clone(), b.workload.name.clone())));
+    rows
+}
+
+/// Geometric-mean summary of a set of rows (per config).
+#[derive(Debug, Clone)]
+pub struct ConfigSummary {
+    pub config: String,
+    pub geo_speedup: f64,
+    pub geo_instr_reduction: f64,
+    pub mean_stall_micro: f64,
+    pub mean_stall_minisa: f64,
+    pub mean_utilization: f64,
+}
+
+pub fn summarize_by_config(rows: &[EvalRow]) -> Vec<ConfigSummary> {
+    let mut configs: Vec<String> = rows.iter().map(|r| r.config.clone()).collect();
+    configs.sort();
+    configs.dedup();
+    configs
+        .into_iter()
+        .map(|c| {
+            let rs: Vec<&EvalRow> = rows.iter().filter(|r| r.config == c).collect();
+            let sp: Vec<f64> = rs.iter().map(|r| r.speedup()).collect();
+            let ir: Vec<f64> = rs.iter().map(|r| r.instr_reduction()).collect();
+            let stall_mi: Vec<f64> =
+                rs.iter().map(|r| r.micro.instr_stall_fraction()).collect();
+            let stall_mn: Vec<f64> =
+                rs.iter().map(|r| r.decision.report.instr_stall_fraction()).collect();
+            let util: Vec<f64> = rs.iter().map(|r| r.decision.report.utilization()).collect();
+            ConfigSummary {
+                config: c,
+                geo_speedup: geomean(&sp),
+                geo_instr_reduction: geomean(&ir),
+                mean_stall_micro: crate::util::mean(&stall_mi),
+                mean_stall_minisa: crate::util::mean(&stall_mn),
+                mean_utilization: crate::util::mean(&util),
+            }
+        })
+        .collect()
+}
+
+/// Fig. 11 comparison row: FEATHER+ (64× 16×256 mesh) vs GPU vs TPU.
+#[derive(Debug, Clone)]
+pub struct CompareRow {
+    pub workload: Gemm,
+    pub feather_us: f64,
+    pub gpu_us: f64,
+    pub tpu_us: f64,
+    pub feather_utilization: f64,
+}
+
+/// Run the Fig. 11 comparison for a workload set.
+pub fn compare_devices(workloads: &[Gemm], opts: &MapperOptions, threads: usize) -> Vec<CompareRow> {
+    let cfg = ArchConfig::paper(16, 256);
+    let rows = evaluate_suite(&[cfg.clone()], workloads, opts, threads);
+    rows.into_iter()
+        .map(|r| {
+            let single = r.decision.report.latency_us(&cfg);
+            CompareRow {
+                feather_us: baselines::featherplus_mesh_latency_us(single, r.workload.m, 64),
+                gpu_us: baselines::gpu_latency_us(&r.workload),
+                tpu_us: baselines::tpu_latency_us(&r.workload),
+                feather_utilization: r.decision.report.utilization(),
+                workload: r.workload,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> MapperOptions {
+        MapperOptions { full_layout_search: false, ..Default::default() }
+    }
+
+    #[test]
+    fn evaluate_one_point() {
+        let cfg = ArchConfig::paper(4, 16);
+        let g = Gemm::new("t", "test", 1024, 40, 88);
+        let row = evaluate_one(&cfg, &g, &opts()).unwrap();
+        assert!(row.speedup() >= 1.0 || row.speedup() > 0.5); // sane
+        assert!(row.instr_reduction() > 10.0);
+        assert!(row.minisa_bytes < row.micro_bytes);
+    }
+
+    #[test]
+    fn suite_eval_parallel_deterministic() {
+        let cfgs = vec![ArchConfig::paper(4, 4), ArchConfig::paper(4, 16)];
+        let ws = crate::workloads::suite_small()[..3].to_vec();
+        let a = evaluate_suite(&cfgs, &ws, &opts(), 1);
+        let b = evaluate_suite(&cfgs, &ws, &opts(), 8);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.workload.name, y.workload.name);
+            assert_eq!(x.config, y.config);
+            assert_eq!(x.minisa_bytes, y.minisa_bytes);
+        }
+    }
+
+    #[test]
+    fn summaries_cover_all_configs() {
+        let cfgs = vec![ArchConfig::paper(4, 4), ArchConfig::paper(8, 8)];
+        let ws = vec![Gemm::new("a", "t", 512, 40, 88), Gemm::new("b", "t", 512, 64, 64)];
+        let rows = evaluate_suite(&cfgs, &ws, &opts(), 4);
+        let sums = summarize_by_config(&rows);
+        assert_eq!(sums.len(), 2);
+        for s in sums {
+            assert!(s.geo_instr_reduction > 1.0, "{}: {}", s.config, s.geo_instr_reduction);
+        }
+    }
+
+    #[test]
+    fn speedup_grows_with_array_scale() {
+        // Fig. 10's headline: geomean speedup increases with scale.
+        let ws = vec![Gemm::new("t1", "t", 8192, 40, 88)];
+        let small = evaluate_suite(&[ArchConfig::paper(4, 4)], &ws, &opts(), 1);
+        let large = evaluate_suite(&[ArchConfig::paper(16, 256)], &ws, &opts(), 1);
+        assert!(large[0].speedup() > small[0].speedup());
+        assert!(large[0].speedup() > 5.0, "16x256 speedup {}", large[0].speedup());
+    }
+
+    #[test]
+    fn device_compare_shapes() {
+        let ws = vec![
+            Gemm::new("irr", "FHE-BConv", 65536, 40, 88),
+            Gemm::new("reg", "FHE-NTT", 256, 2048, 2048),
+        ];
+        let rows = compare_devices(&ws, &opts(), 2);
+        assert_eq!(rows.len(), 2);
+        let irr = &rows[0];
+        // Irregular shape: FEATHER+ beats the TPU (padding-bound).
+        assert!(
+            irr.feather_us < irr.tpu_us,
+            "feather {} vs tpu {}",
+            irr.feather_us,
+            irr.tpu_us
+        );
+        assert!(irr.feather_utilization > 0.3);
+    }
+}

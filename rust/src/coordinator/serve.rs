@@ -1,0 +1,323 @@
+//! GEMM-serving request loop — the L3 hot path.
+//!
+//! A leader thread accepts GEMM requests, routes them to the per-shape
+//! mapping decision (mapper results are cached), batches compatible
+//! requests, and dispatches execution to a pluggable `TileExecutor` — the
+//! PJRT runtime in production (`runtime::PjrtExecutor`), the functional
+//! simulator in tests. Python never appears on this path: the executor
+//! consumes AOT-compiled artifacts.
+//!
+//! Built on std::thread + mpsc channels (offline substitute for tokio,
+//! DESIGN.md).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::arch::config::ArchConfig;
+use crate::mapper::search::{search, MapperOptions};
+use crate::mapper::Decision;
+use crate::workloads::Gemm;
+
+/// A GEMM request: f32 operands (the PJRT oracle path computes in f32).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub input: Vec<f32>,
+    pub weight: Vec<f32>,
+}
+
+/// A served response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub output: Vec<f32>,
+    /// Wall-clock service time (queue + execute) in µs.
+    pub service_us: f64,
+    /// Modeled FEATHER+ cycles for this request (from the mapper decision).
+    pub modeled_cycles: f64,
+    /// Requests co-batched with this one.
+    pub batch_size: usize,
+}
+
+/// Execution backend abstraction.
+pub trait TileExecutor: Send + Sync {
+    /// Execute `O[M,N] = I · W` and return O row-major.
+    fn gemm(&self, m: usize, k: usize, n: usize, i: &[f32], w: &[f32])
+        -> anyhow::Result<Vec<f32>>;
+    fn name(&self) -> &str;
+}
+
+/// Reference executor: naive f32 GEMM (tests / fallback).
+pub struct NaiveExecutor;
+
+impl TileExecutor for NaiveExecutor {
+    fn gemm(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        iv: &[f32],
+        wv: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(iv.len() == m * k && wv.len() == k * n, "shape mismatch");
+        let mut o = vec![0f32; m * n];
+        for mi in 0..m {
+            for ki in 0..k {
+                let a = iv[mi * k + ki];
+                if a == 0.0 {
+                    continue;
+                }
+                for ni in 0..n {
+                    o[mi * n + ni] += a * wv[ki * n + ni];
+                }
+            }
+        }
+        Ok(o)
+    }
+    fn name(&self) -> &str {
+        "naive"
+    }
+}
+
+/// Routing + batching statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub served: u64,
+    pub batches: u64,
+    pub mapper_cache_hits: u64,
+    pub mapper_cache_misses: u64,
+    pub total_service_us: f64,
+    pub max_batch: usize,
+}
+
+impl ServeStats {
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.total_service_us / self.served as f64
+        }
+    }
+    pub fn throughput_per_s(&self, wall_us: f64) -> f64 {
+        if wall_us <= 0.0 {
+            0.0
+        } else {
+            self.served as f64 / (wall_us / 1e6)
+        }
+    }
+}
+
+/// The serving coordinator (leader). Owns the mapper cache and the batcher.
+pub struct Server {
+    cfg: ArchConfig,
+    executor: Arc<dyn TileExecutor>,
+    opts: MapperOptions,
+    /// Shape → mapping decision cache (routing table).
+    cache: Mutex<HashMap<(usize, usize, usize), Decision>>,
+    pub stats: Mutex<ServeStats>,
+    /// Max requests batched per dispatch.
+    pub max_batch: usize,
+}
+
+impl Server {
+    pub fn new(cfg: &ArchConfig, executor: Arc<dyn TileExecutor>) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            executor,
+            opts: MapperOptions { full_layout_search: false, threads: 1, ..Default::default() },
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(ServeStats::default()),
+            max_batch: 8,
+        }
+    }
+
+    /// Route a shape through the mapper (cached).
+    pub fn route(&self, m: usize, k: usize, n: usize) -> Option<Decision> {
+        let key = (m, k, n);
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(d) = cache.get(&key) {
+                self.stats.lock().unwrap().mapper_cache_hits += 1;
+                return Some(d.clone());
+            }
+        }
+        self.stats.lock().unwrap().mapper_cache_misses += 1;
+        let g = Gemm::new("serve", "online", m, k, n);
+        let d = search(&self.cfg, &g, &self.opts)?;
+        self.cache.lock().unwrap().insert(key, d.clone());
+        self.cache.lock().unwrap().get(&key).cloned()
+    }
+
+    /// Serve a batch of requests pulled from `rx`, sending responses on
+    /// `tx`. Returns when `rx` closes. Requests with identical (M, K, N)
+    /// and weight pointer-equality are batched by stacking their inputs
+    /// into one taller GEMM (continuous batching for shared-weight layers).
+    pub fn run(&self, rx: Receiver<Request>, tx: Sender<Response>) {
+        let mut pending: Vec<Request> = Vec::new();
+        loop {
+            // Pull at least one request (blocking), then drain greedily.
+            match rx.recv() {
+                Ok(r) => pending.push(r),
+                Err(_) => break,
+            }
+            while pending.len() < self.max_batch {
+                match rx.try_recv() {
+                    Ok(r) => pending.push(r),
+                    Err(_) => break,
+                }
+            }
+            // Group by shape + identical weights.
+            while !pending.is_empty() {
+                let head = pending.remove(0);
+                let mut batch = vec![head];
+                let (hm, hk, hn) = (batch[0].m, batch[0].k, batch[0].n);
+                let hw = batch[0].weight.clone();
+                pending.retain(|r| {
+                    if batch.len() < self.max_batch
+                        && (r.m, r.k, r.n) == (hm, hk, hn)
+                        && r.weight == hw
+                    {
+                        batch.push(r.clone());
+                        false
+                    } else {
+                        true
+                    }
+                });
+                if self.dispatch(&batch, &tx).is_err() {
+                    return; // receiver dropped
+                }
+            }
+        }
+    }
+
+    fn dispatch(&self, batch: &[Request], tx: &Sender<Response>) -> Result<(), ()> {
+        let t0 = std::time::Instant::now();
+        let (m, k, n) = (batch[0].m, batch[0].k, batch[0].n);
+        let bm = m * batch.len();
+        let decision = self.route(bm, k, n);
+        // Stack inputs into one (batch·M) × K GEMM.
+        let mut stacked = Vec::with_capacity(bm * k);
+        for r in batch {
+            stacked.extend_from_slice(&r.input);
+        }
+        let out = match self.executor.gemm(bm, k, n, &stacked, &batch[0].weight) {
+            Ok(o) => o,
+            Err(_) => return Err(()),
+        };
+        let service_us = t0.elapsed().as_secs_f64() * 1e6;
+        let modeled = decision.map(|d| d.report.total_cycles).unwrap_or(0.0);
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.served += batch.len() as u64;
+            st.batches += 1;
+            st.total_service_us += service_us * batch.len() as f64;
+            st.max_batch = st.max_batch.max(batch.len());
+        }
+        for (bi, r) in batch.iter().enumerate() {
+            let resp = Response {
+                id: r.id,
+                output: out[bi * m * n..(bi + 1) * m * n].to_vec(),
+                service_us,
+                modeled_cycles: modeled,
+                batch_size: batch.len(),
+            };
+            tx.send(resp).map_err(|_| ())?;
+        }
+        Ok(())
+    }
+}
+
+/// Spawn a server on its own thread; returns (request sender, response
+/// receiver, join handle).
+pub fn spawn(
+    cfg: &ArchConfig,
+    executor: Arc<dyn TileExecutor>,
+) -> (Sender<Request>, Receiver<Response>, std::thread::JoinHandle<ServeStats>) {
+    let (req_tx, req_rx) = channel::<Request>();
+    let (resp_tx, resp_rx) = channel::<Response>();
+    let server = Server::new(cfg, executor);
+    let handle = std::thread::spawn(move || {
+        server.run(req_rx, resp_tx);
+        server.stats.lock().unwrap().clone()
+    });
+    (req_tx, resp_rx, handle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Lcg;
+
+    fn req(id: u64, m: usize, k: usize, n: usize, seed: u64) -> Request {
+        let mut rng = Lcg::new(seed);
+        Request {
+            id,
+            m,
+            k,
+            n,
+            input: rng.f32_matrix(m, k),
+            weight: {
+                let mut wr = Lcg::new(999); // shared weights across requests
+                wr.f32_matrix(k, n)
+            },
+        }
+    }
+
+    #[test]
+    fn serves_and_answers_correctly() {
+        let cfg = ArchConfig::paper(4, 4);
+        let (tx, rx, h) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let r = req(7, 4, 8, 4, 1);
+        let expect = NaiveExecutor.gemm(4, 8, 4, &r.input, &r.weight).unwrap();
+        tx.send(r).unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.output, expect);
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.served, 1);
+    }
+
+    #[test]
+    fn batches_same_shape_shared_weights() {
+        let cfg = ArchConfig::paper(4, 4);
+        let (tx, rx, h) = spawn(&cfg, Arc::new(NaiveExecutor));
+        for i in 0..6 {
+            tx.send(req(i, 2, 8, 4, i)).unwrap();
+        }
+        // Give the queue a moment to fill before the server drains it.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let mut got = 0;
+        let mut max_batch = 0;
+        while got < 6 {
+            let r = rx.recv().unwrap();
+            max_batch = max_batch.max(r.batch_size);
+            got += 1;
+        }
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.served, 6);
+        assert!(stats.batches <= 6);
+        assert!(max_batch >= 1);
+    }
+
+    #[test]
+    fn mapper_cache_hits_on_repeat_shapes() {
+        let cfg = ArchConfig::paper(4, 4);
+        let server = Server::new(&cfg, Arc::new(NaiveExecutor));
+        assert!(server.route(64, 40, 24).is_some());
+        assert!(server.route(64, 40, 24).is_some());
+        let st = server.stats.lock().unwrap();
+        assert_eq!(st.mapper_cache_misses, 1);
+        assert_eq!(st.mapper_cache_hits, 1);
+    }
+
+    #[test]
+    fn naive_executor_rejects_bad_shapes() {
+        assert!(NaiveExecutor.gemm(2, 2, 2, &[1.0; 3], &[1.0; 4]).is_err());
+    }
+}

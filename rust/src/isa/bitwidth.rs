@@ -1,0 +1,180 @@
+//! ISA bitwidth analysis (§IV-C2, Figs. 3 & 5 → Table V).
+//!
+//! Field widths are sized for the *maximum ratio* between on-chip buffer
+//! capacity and architectural dimensions, so any workload that fits on chip
+//! is encodable. `D` is the stationary/streaming buffer depth.
+
+use crate::arch::config::ArchConfig;
+use crate::util::clog2;
+
+pub const OPCODE_BITS: u32 = 3;
+pub const ORDER_BITS: u32 = 3; // ⌈log2 3!⌉
+pub const DF_BITS: u32 = 1;
+
+/// Per-instruction field widths for one architecture configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IsaBitwidths {
+    /// ⌈log2 AW⌉ — G_r / G_c and level-0 non-reduction factors.
+    pub aw_bits: u32,
+    /// ⌈log2(D/AH·AW)⌉ — r0/c0 (VN slot indices).
+    pub slot_bits: u32,
+    /// ⌈log2(D/AH)⌉ — strides s_r/s_c, level-1 factors, T, m0, s_m.
+    pub stride_bits: u32,
+    /// log2(AH) — VN_SIZE field.
+    pub vn_bits: u32,
+    /// ⌈log2 HBM bytes⌉ — Load/Store address.
+    pub hbm_bits: u32,
+    /// ⌈log2 D⌉ — row counts for Load/Store/Activation.
+    pub rows_bits: u32,
+}
+
+impl IsaBitwidths {
+    pub fn for_config(cfg: &ArchConfig) -> Self {
+        let d = cfg.d();
+        let vn_rows = (d / cfg.ah).max(1); // D/AH
+        Self {
+            aw_bits: clog2(cfg.aw).max(1),
+            slot_bits: clog2(vn_rows * cfg.aw).max(1),
+            stride_bits: clog2(vn_rows).max(1),
+            vn_bits: clog2(cfg.ah).max(1),
+            hbm_bits: clog2(cfg.hbm_bytes as usize).max(1),
+            rows_bits: clog2(d).max(1),
+        }
+    }
+
+    /// ExecuteMapping width (Fig. 3):
+    /// opcode + G_r + G_c + r0 + c0 + s_r + s_c.
+    pub fn execute_mapping(&self) -> u32 {
+        OPCODE_BITS + 2 * self.aw_bits + 2 * self.slot_bits + 2 * self.stride_bits
+    }
+
+    /// ExecuteStreaming width (Fig. 3):
+    /// opcode + df + m0 + s_m + VN_SIZE + T ("value−1" encoding keeps the
+    /// m0/s_m fields one bit narrower — Fig. 3 shows ⌈log2(D/AH)⌉−1).
+    pub fn execute_streaming(&self) -> u32 {
+        OPCODE_BITS
+            + DF_BITS
+            + (self.stride_bits.saturating_sub(1))
+            + (self.stride_bits.saturating_sub(1))
+            + self.vn_bits
+            + self.stride_bits
+    }
+
+    /// Set*VNLayout width (Fig. 5): opcode + order + L0 + L1 + R_L1.
+    pub fn set_layout(&self) -> u32 {
+        OPCODE_BITS + ORDER_BITS + self.aw_bits + 2 * self.stride_bits
+    }
+
+    /// Load/Store width (Fig. 5): opcode + HBM address + target + rows.
+    pub fn load_store(&self) -> u32 {
+        OPCODE_BITS + self.hbm_bits + 1 + self.rows_bits
+    }
+
+    /// Activation width: opcode + func(2) + target + rows.
+    pub fn activation(&self) -> u32 {
+        OPCODE_BITS + 2 + 1 + self.rows_bits
+    }
+
+    /// Width of the widest instruction — the fetch unit's record size.
+    pub fn max_width(&self) -> u32 {
+        self.execute_mapping()
+            .max(self.execute_streaming())
+            .max(self.set_layout())
+            .max(self.load_store())
+            .max(self.activation())
+    }
+}
+
+/// One row of Table V for reporting.
+#[derive(Debug, Clone)]
+pub struct TableVRow {
+    pub config: String,
+    pub set_layout_bits: u32,
+    pub execute_mapping_bits: u32,
+    pub execute_streaming_bits: u32,
+}
+
+/// Regenerate Table V for the paper's nine configurations.
+pub fn table_v() -> Vec<TableVRow> {
+    ArchConfig::paper_sweep()
+        .iter()
+        .map(|cfg| {
+            let bw = IsaBitwidths::for_config(cfg);
+            TableVRow {
+                config: cfg.name(),
+                set_layout_bits: bw.set_layout(),
+                execute_mapping_bits: bw.execute_mapping(),
+                execute_streaming_bits: bw.execute_streaming(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths_monotone_in_depth() {
+        // Wider arrays at fixed capacity → shallower buffers → narrower
+        // stride/slot fields; Table V shows Set*VNLayout shrinking with AW.
+        let a = IsaBitwidths::for_config(&ArchConfig::paper(16, 16));
+        let b = IsaBitwidths::for_config(&ArchConfig::paper(16, 64));
+        let c = IsaBitwidths::for_config(&ArchConfig::paper(16, 256));
+        assert!(a.set_layout() > b.set_layout());
+        assert!(b.set_layout() > c.set_layout());
+        // E.Mapping never shrinks with AW (slot indices span D/AH·AW, which
+        // is capacity-invariant, while G_r/G_c widen).
+        assert!(a.execute_mapping() <= c.execute_mapping());
+    }
+
+    #[test]
+    fn table_v_shape_matches_paper() {
+        // Paper Table V: Set*VNLayout 38–44 bits, E.Mapping 81–95 bits,
+        // E.Streaming 45–59 bits across the nine setups. Our derivation
+        // from first principles should land in the same bands (±4 bits —
+        // the paper's exact buffer-depth rounding isn't published).
+        for row in table_v() {
+            assert!(
+                (34..=48).contains(&row.set_layout_bits),
+                "{}: set_layout {}",
+                row.config,
+                row.set_layout_bits
+            );
+            assert!(
+                (75..=99).contains(&row.execute_mapping_bits),
+                "{}: e.mapping {}",
+                row.config,
+                row.execute_mapping_bits
+            );
+            assert!(
+                (38..=63).contains(&row.execute_streaming_bits),
+                "{}: e.streaming {}",
+                row.config,
+                row.execute_streaming_bits
+            );
+        }
+    }
+
+    #[test]
+    fn mapping_is_widest_compute_inst() {
+        for cfg in ArchConfig::paper_sweep() {
+            let bw = IsaBitwidths::for_config(&cfg);
+            assert!(bw.execute_mapping() > bw.execute_streaming());
+            assert!(bw.execute_mapping() > bw.set_layout());
+        }
+    }
+
+    #[test]
+    fn load_store_has_hbm_width() {
+        let cfg = ArchConfig::paper(4, 4);
+        let bw = IsaBitwidths::for_config(&cfg);
+        assert_eq!(bw.hbm_bits, 35); // 32 GiB
+        assert!(bw.load_store() > bw.hbm_bits);
+    }
+
+    #[test]
+    fn nine_rows() {
+        assert_eq!(table_v().len(), 9);
+    }
+}

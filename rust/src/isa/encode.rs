@@ -1,0 +1,311 @@
+//! Bit-level MINISA encoding/decoding.
+//!
+//! Instructions pack MSB-first into the byte stream the fetch unit reads at
+//! 9 B/cycle. Count fields (G_r, G_c, s_m, T, VN_SIZE, layout factors) use
+//! the "value − 1" encoding of Fig. 3 ("all fields encode value-1 omitting
+//! zero"); index and stride fields (r0, c0, s_r, s_c, m0) encode directly.
+
+use super::bitwidth::{IsaBitwidths, DF_BITS, OPCODE_BITS, ORDER_BITS};
+use super::inst::{ActFn, BufTarget, Inst, LayoutInst, Opcode};
+use crate::arch::config::ArchConfig;
+use crate::layout::VnLayout;
+use crate::mapping::{Dataflow, MappingCfg, StreamCfg};
+use crate::util::{BitReader, BitWriter};
+
+/// Encoding error.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum EncodeError {
+    #[error("field {field} value {value} exceeds {bits}-bit range")]
+    FieldOverflow { field: &'static str, value: u64, bits: u32 },
+    #[error("truncated instruction stream")]
+    Truncated,
+    #[error("invalid opcode bits")]
+    BadOpcode,
+}
+
+/// Stateless encoder/decoder bound to one architecture's field widths.
+#[derive(Debug, Clone, Copy)]
+pub struct Codec {
+    pub bw: IsaBitwidths,
+}
+
+impl Codec {
+    pub fn new(cfg: &ArchConfig) -> Self {
+        Self { bw: IsaBitwidths::for_config(cfg) }
+    }
+
+    fn put(
+        w: &mut BitWriter,
+        field: &'static str,
+        value: u64,
+        bits: u32,
+    ) -> Result<(), EncodeError> {
+        if bits < 64 && value >= (1u64 << bits) {
+            return Err(EncodeError::FieldOverflow { field, value, bits });
+        }
+        w.put(value, bits);
+        Ok(())
+    }
+
+    /// Encode one instruction, appending to `w`. Returns the bit width.
+    pub fn encode_into(&self, inst: &Inst, w: &mut BitWriter) -> Result<u32, EncodeError> {
+        let start = w.len_bits();
+        let bw = &self.bw;
+        Self::put(w, "opcode", inst.opcode() as u64, OPCODE_BITS)?;
+        match inst {
+            Inst::SetIVNLayout(l) | Inst::SetWVNLayout(l) | Inst::SetOVNLayout(l) => {
+                let v = &l.layout;
+                Self::put(w, "order", v.order as u64, ORDER_BITS)?;
+                Self::put(w, "n_l0", v.n_l0 as u64 - 1, bw.aw_bits)?;
+                Self::put(w, "n_l1", v.n_l1 as u64 - 1, bw.stride_bits)?;
+                Self::put(w, "r_l1", v.r_l1 as u64 - 1, bw.stride_bits)?;
+            }
+            Inst::ExecuteMapping(m) => {
+                Self::put(w, "g_r", m.g_r as u64 - 1, bw.aw_bits)?;
+                Self::put(w, "g_c", m.g_c as u64 - 1, bw.aw_bits)?;
+                Self::put(w, "r0", m.r0 as u64, bw.slot_bits)?;
+                Self::put(w, "c0", m.c0 as u64, bw.slot_bits)?;
+                Self::put(w, "s_r", m.s_r as u64, bw.stride_bits)?;
+                Self::put(w, "s_c", m.s_c as u64, bw.stride_bits)?;
+            }
+            Inst::ExecuteStreaming(s) => {
+                Self::put(w, "df", s.df.bit(), DF_BITS)?;
+                Self::put(w, "m0", s.m0 as u64, bw.stride_bits.saturating_sub(1).max(1))?;
+                Self::put(w, "s_m", s.s_m as u64 - 1, bw.stride_bits.saturating_sub(1).max(1))?;
+                Self::put(w, "vn_size", s.vn_size as u64 - 1, bw.vn_bits)?;
+                Self::put(w, "t", s.t as u64 - 1, bw.stride_bits)?;
+            }
+            Inst::Load { target, hbm_addr, rows } | Inst::Store { target, hbm_addr, rows } => {
+                Self::put(w, "hbm_addr", *hbm_addr, bw.hbm_bits)?;
+                Self::put(w, "target", target.bit(), 1)?;
+                Self::put(w, "rows", *rows as u64 - 1, bw.rows_bits)?;
+            }
+            Inst::Activation { func, target, rows } => {
+                Self::put(w, "func", *func as u64, 2)?;
+                Self::put(w, "target", target.bit(), 1)?;
+                Self::put(w, "rows", *rows as u64 - 1, bw.rows_bits)?;
+            }
+        }
+        Ok((w.len_bits() - start) as u32)
+    }
+
+    /// Encode a full instruction sequence into a byte stream.
+    pub fn encode_all(&self, insts: &[Inst]) -> Result<Vec<u8>, EncodeError> {
+        let mut w = BitWriter::new();
+        for i in insts {
+            self.encode_into(i, &mut w)?;
+        }
+        Ok(w.into_bytes())
+    }
+
+    /// Exact bit length of one instruction under this codec.
+    pub fn width_bits(&self, inst: &Inst) -> u32 {
+        let bw = &self.bw;
+        match inst {
+            Inst::SetIVNLayout(_) | Inst::SetWVNLayout(_) | Inst::SetOVNLayout(_) => {
+                bw.set_layout()
+            }
+            Inst::ExecuteMapping(_) => bw.execute_mapping(),
+            Inst::ExecuteStreaming(_) => bw.execute_streaming(),
+            Inst::Load { .. } | Inst::Store { .. } => bw.load_store(),
+            Inst::Activation { .. } => bw.activation(),
+        }
+    }
+
+    fn get(r: &mut BitReader, bits: u32) -> Result<u64, EncodeError> {
+        r.get(bits).ok_or(EncodeError::Truncated)
+    }
+
+    /// Decode one instruction from the cursor.
+    pub fn decode_one(&self, r: &mut BitReader) -> Result<Inst, EncodeError> {
+        let bw = &self.bw;
+        let op = Opcode::from_bits(Self::get(r, OPCODE_BITS)?).ok_or(EncodeError::BadOpcode)?;
+        let inst = match op {
+            Opcode::SetIVNLayout | Opcode::SetWVNLayout | Opcode::SetOVNLayout => {
+                let order = Self::get(r, ORDER_BITS)? as u8;
+                let n_l0 = Self::get(r, bw.aw_bits)? as usize + 1;
+                let n_l1 = Self::get(r, bw.stride_bits)? as usize + 1;
+                let r_l1 = Self::get(r, bw.stride_bits)? as usize + 1;
+                // Decoded VN size is the architectural AH implied by vn_bits.
+                let vn = 1usize << bw.vn_bits;
+                let li = LayoutInst { layout: VnLayout::new(order.min(5), n_l0, n_l1, r_l1, vn) };
+                match op {
+                    Opcode::SetIVNLayout => Inst::SetIVNLayout(li),
+                    Opcode::SetWVNLayout => Inst::SetWVNLayout(li),
+                    _ => Inst::SetOVNLayout(li),
+                }
+            }
+            Opcode::ExecuteMapping => Inst::ExecuteMapping(MappingCfg {
+                g_r: Self::get(r, bw.aw_bits)? as usize + 1,
+                g_c: Self::get(r, bw.aw_bits)? as usize + 1,
+                r0: Self::get(r, bw.slot_bits)? as usize,
+                c0: Self::get(r, bw.slot_bits)? as usize,
+                s_r: Self::get(r, bw.stride_bits)? as usize,
+                s_c: Self::get(r, bw.stride_bits)? as usize,
+            }),
+            Opcode::ExecuteStreaming => Inst::ExecuteStreaming(StreamCfg {
+                df: Dataflow::from_bit(Self::get(r, DF_BITS)?),
+                m0: Self::get(r, bw.stride_bits.saturating_sub(1).max(1))? as usize,
+                s_m: Self::get(r, bw.stride_bits.saturating_sub(1).max(1))? as usize + 1,
+                vn_size: Self::get(r, bw.vn_bits)? as usize + 1,
+                t: Self::get(r, bw.stride_bits)? as usize + 1,
+            }),
+            Opcode::Load | Opcode::Store => {
+                let hbm_addr = Self::get(r, bw.hbm_bits)?;
+                let target = BufTarget::from_bit(Self::get(r, 1)?);
+                let rows = Self::get(r, bw.rows_bits)? as u32 + 1;
+                if op == Opcode::Load {
+                    Inst::Load { target, hbm_addr, rows }
+                } else {
+                    Inst::Store { target, hbm_addr, rows }
+                }
+            }
+            Opcode::Activation => Inst::Activation {
+                func: ActFn::from_bits(Self::get(r, 2)?),
+                target: BufTarget::from_bit(Self::get(r, 1)?),
+                rows: Self::get(r, bw.rows_bits)? as u32 + 1,
+            },
+        };
+        Ok(inst)
+    }
+
+    /// Decode exactly `n` instructions from a byte stream.
+    pub fn decode_n(&self, bytes: &[u8], n: usize) -> Result<Vec<Inst>, EncodeError> {
+        let mut r = BitReader::new(bytes);
+        (0..n).map(|_| self.decode_one(&mut r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn codec(ah: usize, aw: usize) -> (ArchConfig, Codec) {
+        let cfg = ArchConfig::paper(ah, aw);
+        let c = Codec::new(&cfg);
+        (cfg, c)
+    }
+
+    fn sample_insts(cfg: &ArchConfig) -> Vec<Inst> {
+        let vn = cfg.ah;
+        vec![
+            Inst::Load { target: BufTarget::Streaming, hbm_addr: 0x1234, rows: 64 },
+            Inst::Load { target: BufTarget::Stationary, hbm_addr: 0xBEEF00, rows: 32 },
+            Inst::SetIVNLayout(LayoutInst { layout: VnLayout::new(1, 2, 3, 4, vn) }),
+            Inst::SetWVNLayout(LayoutInst { layout: VnLayout::new(2, 4, 1, 2, vn) }),
+            Inst::SetOVNLayout(LayoutInst { layout: VnLayout::new(0, 1, 8, 1, vn) }),
+            Inst::ExecuteMapping(MappingCfg { r0: 0, c0: 8, g_r: 2, g_c: 1, s_r: 1, s_c: 0 }),
+            Inst::ExecuteStreaming(StreamCfg {
+                df: Dataflow::WoS,
+                m0: 0,
+                s_m: 2,
+                t: 16,
+                vn_size: vn,
+            }),
+            Inst::Activation { func: ActFn::Relu, target: BufTarget::Streaming, rows: 16 },
+            Inst::Store { target: BufTarget::Streaming, hbm_addr: 0xAB00, rows: 8 },
+        ]
+    }
+
+    #[test]
+    fn roundtrip_sample_program() {
+        for (ah, aw) in [(4, 4), (8, 32), (16, 256)] {
+            let (cfg, c) = codec(ah, aw);
+            let prog = sample_insts(&cfg);
+            let bytes = c.encode_all(&prog).unwrap();
+            let decoded = c.decode_n(&bytes, prog.len()).unwrap();
+            for (a, b) in prog.iter().zip(&decoded) {
+                match (a, b) {
+                    // Layout VN size is implicit in the encoding; compare
+                    // the explicit fields only.
+                    (Inst::SetIVNLayout(x), Inst::SetIVNLayout(y))
+                    | (Inst::SetWVNLayout(x), Inst::SetWVNLayout(y))
+                    | (Inst::SetOVNLayout(x), Inst::SetOVNLayout(y)) => {
+                        assert_eq!(x.layout.order, y.layout.order);
+                        assert_eq!(x.layout.n_l0, y.layout.n_l0);
+                        assert_eq!(x.layout.n_l1, y.layout.n_l1);
+                        assert_eq!(x.layout.r_l1, y.layout.r_l1);
+                    }
+                    _ => assert_eq!(a, b),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn encoded_width_matches_analysis() {
+        let (cfg, c) = codec(16, 64);
+        for inst in sample_insts(&cfg) {
+            let mut w = BitWriter::new();
+            let bits = c.encode_into(&inst, &mut w).unwrap();
+            assert_eq!(bits, c.width_bits(&inst), "{inst:?}");
+        }
+    }
+
+    #[test]
+    fn field_overflow_rejected() {
+        let (_, c) = codec(4, 4);
+        // G_r beyond AW must fail to encode.
+        let bad = Inst::ExecuteMapping(MappingCfg {
+            r0: 0,
+            c0: 0,
+            g_r: 4096,
+            g_c: 1,
+            s_r: 0,
+            s_c: 0,
+        });
+        assert!(matches!(
+            c.encode_all(&[bad]),
+            Err(EncodeError::FieldOverflow { field: "g_r", .. })
+        ));
+    }
+
+    #[test]
+    fn truncated_stream_detected() {
+        let (cfg, c) = codec(4, 16);
+        let bytes = c.encode_all(&sample_insts(&cfg)[..1]).unwrap();
+        assert!(c.decode_n(&bytes, 2).is_err());
+    }
+
+    #[test]
+    fn roundtrip_randomized() {
+        forall("isa-roundtrip", 150, |g| {
+            let configs = [(4usize, 4usize), (8, 32), (16, 64)];
+            let &(ah, aw) = g.pick(&configs);
+            let cfg = ArchConfig::paper(ah, aw);
+            let c = Codec::new(&cfg);
+            let d_ah = (cfg.d() / cfg.ah).max(2);
+            let em = MappingCfg {
+                r0: g.usize(0, 63),
+                c0: g.usize(0, 63),
+                g_r: g.usize(1, aw),
+                g_c: g.usize(1, aw),
+                s_r: g.usize(0, (d_ah - 1).min(1 << 10)),
+                s_c: g.usize(0, (d_ah - 1).min(1 << 10)),
+            };
+            let es = StreamCfg {
+                df: if g.bool() { Dataflow::WoS } else { Dataflow::IoS },
+                m0: g.usize(0, 100),
+                s_m: g.usize(1, 64),
+                t: g.usize(1, 512),
+                vn_size: g.usize(1, ah),
+            };
+            let prog = [Inst::ExecuteMapping(em), Inst::ExecuteStreaming(es)];
+            let bytes = c.encode_all(&prog).unwrap();
+            let dec = c.decode_n(&bytes, 2).unwrap();
+            assert_eq!(dec[0], prog[0]);
+            assert_eq!(dec[1], prog[1]);
+        });
+    }
+
+    #[test]
+    fn trace_byte_budget_is_tight() {
+        // Stream length in bytes == ceil(sum of widths / 8).
+        let (cfg, c) = codec(8, 8);
+        let prog = sample_insts(&cfg);
+        let total_bits: u32 = prog.iter().map(|i| c.width_bits(i)).sum();
+        let bytes = c.encode_all(&prog).unwrap();
+        assert_eq!(bytes.len(), (total_bits as usize).div_ceil(8));
+    }
+}

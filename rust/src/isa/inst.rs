@@ -1,0 +1,216 @@
+//! MINISA instruction definitions (Tab. II, Figs. 3 & 5).
+
+use crate::layout::VnLayout;
+use crate::mapping::{MappingCfg, StreamCfg};
+
+/// 3-bit opcodes. Values follow Fig. 3/5 where given (`ExecuteStreaming` =
+/// 011, `ExecuteMapping` = 111, SetWVN = 000, SetIVN = 001, SetOVN = 010,
+/// Load = 101, Store = 100); `Activation` takes the remaining code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Opcode {
+    SetWVNLayout = 0b000,
+    SetIVNLayout = 0b001,
+    SetOVNLayout = 0b010,
+    ExecuteStreaming = 0b011,
+    Store = 0b100,
+    Load = 0b101,
+    Activation = 0b110,
+    ExecuteMapping = 0b111,
+}
+
+impl Opcode {
+    pub fn from_bits(b: u64) -> Option<Self> {
+        Some(match b {
+            0b000 => Opcode::SetWVNLayout,
+            0b001 => Opcode::SetIVNLayout,
+            0b010 => Opcode::SetOVNLayout,
+            0b011 => Opcode::ExecuteStreaming,
+            0b100 => Opcode::Store,
+            0b101 => Opcode::Load,
+            0b110 => Opcode::Activation,
+            0b111 => Opcode::ExecuteMapping,
+            _ => return None,
+        })
+    }
+}
+
+/// Which on-chip buffer a Load/Store/Activation targets (1-bit field:
+/// 0 = stationary, 1 = streaming — Fig. 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BufTarget {
+    Stationary,
+    Streaming,
+}
+
+impl BufTarget {
+    pub fn bit(self) -> u64 {
+        match self {
+            BufTarget::Stationary => 0,
+            BufTarget::Streaming => 1,
+        }
+    }
+    pub fn from_bit(b: u64) -> Self {
+        if b == 0 { BufTarget::Stationary } else { BufTarget::Streaming }
+    }
+}
+
+/// Activation functions applied in-buffer (supporting ISA, Tab. II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum ActFn {
+    None = 0,
+    Relu = 1,
+    Gelu = 2,
+    Softmax = 3,
+}
+
+impl ActFn {
+    pub fn from_bits(b: u64) -> Self {
+        match b {
+            1 => ActFn::Relu,
+            2 => ActFn::Gelu,
+            3 => ActFn::Softmax,
+            _ => ActFn::None,
+        }
+    }
+}
+
+/// A layout-setting instruction body: the Tab. III order id plus the three
+/// partition factors (Fig. 5 fields). The reduction-L0 factor is implicit
+/// (= VN size).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LayoutInst {
+    pub layout: VnLayout,
+}
+
+/// One MINISA instruction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Inst {
+    SetIVNLayout(LayoutInst),
+    SetWVNLayout(LayoutInst),
+    /// Also initializes the output tile for accumulation and commits the
+    /// finished tile at tile boundaries (§IV-G1).
+    SetOVNLayout(LayoutInst),
+    ExecuteMapping(MappingCfg),
+    ExecuteStreaming(StreamCfg),
+    Load {
+        target: BufTarget,
+        hbm_addr: u64,
+        /// Buffer rows transferred (AW elements each).
+        rows: u32,
+    },
+    Store {
+        target: BufTarget,
+        hbm_addr: u64,
+        rows: u32,
+    },
+    Activation {
+        func: ActFn,
+        target: BufTarget,
+        rows: u32,
+    },
+}
+
+impl Inst {
+    pub fn opcode(&self) -> Opcode {
+        match self {
+            Inst::SetIVNLayout(_) => Opcode::SetIVNLayout,
+            Inst::SetWVNLayout(_) => Opcode::SetWVNLayout,
+            Inst::SetOVNLayout(_) => Opcode::SetOVNLayout,
+            Inst::ExecuteMapping(_) => Opcode::ExecuteMapping,
+            Inst::ExecuteStreaming(_) => Opcode::ExecuteStreaming,
+            Inst::Load { .. } => Opcode::Load,
+            Inst::Store { .. } => Opcode::Store,
+            Inst::Activation { .. } => Opcode::Activation,
+        }
+    }
+
+    /// Configuration-only instructions program state registers without
+    /// moving data or triggering compute (§IV-G1).
+    pub fn is_config_only(&self) -> bool {
+        matches!(
+            self,
+            Inst::SetIVNLayout(_) | Inst::SetWVNLayout(_)
+        )
+    }
+
+    /// Compute-trigger instructions (§IV-G1): FEATHER+ only starts on-chip
+    /// activity when it receives the E.Mapping/E.Streaming pair.
+    pub fn is_compute_trigger(&self) -> bool {
+        matches!(self, Inst::ExecuteMapping(_) | Inst::ExecuteStreaming(_))
+    }
+
+    /// Memory-movement instructions (§IV-G1). SetOVNLayout manages the
+    /// output-buffer lifecycle, so it belongs to this class.
+    pub fn is_memory(&self) -> bool {
+        matches!(
+            self,
+            Inst::Load { .. } | Inst::Store { .. } | Inst::SetOVNLayout(_)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::VnLayout;
+    use crate::mapping::Dataflow;
+
+    #[test]
+    fn opcode_roundtrip() {
+        for b in 0..8u64 {
+            let op = Opcode::from_bits(b).unwrap();
+            assert_eq!(op as u64, b);
+        }
+        assert!(Opcode::from_bits(8).is_none());
+    }
+
+    #[test]
+    fn opcode_values_match_figures() {
+        // Fig. 3: ExecuteMapping = 111, ExecuteStreaming = 011.
+        assert_eq!(Opcode::ExecuteMapping as u8, 0b111);
+        assert_eq!(Opcode::ExecuteStreaming as u8, 0b011);
+        // Fig. 5: SetWVN 000, SetIVN 001, SetOVN 010, Load 101 / Store 100.
+        assert_eq!(Opcode::SetWVNLayout as u8, 0b000);
+        assert_eq!(Opcode::SetIVNLayout as u8, 0b001);
+        assert_eq!(Opcode::SetOVNLayout as u8, 0b010);
+        assert_eq!(Opcode::Load as u8, 0b101);
+        assert_eq!(Opcode::Store as u8, 0b100);
+    }
+
+    #[test]
+    fn instruction_classes() {
+        let lay = LayoutInst { layout: VnLayout::row_major(1, 1, 4) };
+        assert!(Inst::SetIVNLayout(lay).is_config_only());
+        assert!(Inst::SetWVNLayout(lay).is_config_only());
+        assert!(Inst::SetOVNLayout(lay).is_memory());
+        assert!(Inst::Load { target: BufTarget::Streaming, hbm_addr: 0, rows: 1 }.is_memory());
+        let em = Inst::ExecuteMapping(crate::mapping::MappingCfg {
+            r0: 0,
+            c0: 0,
+            g_r: 1,
+            g_c: 1,
+            s_r: 0,
+            s_c: 0,
+        });
+        assert!(em.is_compute_trigger());
+        let es = Inst::ExecuteStreaming(crate::mapping::StreamCfg {
+            df: Dataflow::WoS,
+            m0: 0,
+            s_m: 1,
+            t: 1,
+            vn_size: 4,
+        });
+        assert!(es.is_compute_trigger());
+        assert!(!es.is_memory());
+    }
+
+    #[test]
+    fn target_and_act_bits() {
+        assert_eq!(BufTarget::from_bit(0), BufTarget::Stationary);
+        assert_eq!(BufTarget::from_bit(1), BufTarget::Streaming);
+        assert_eq!(ActFn::from_bits(ActFn::Softmax as u64), ActFn::Softmax);
+        assert_eq!(ActFn::from_bits(0), ActFn::None);
+    }
+}

@@ -1,0 +1,16 @@
+//! MINISA — the minimal VN-level instruction set (§IV, Tab. II).
+//!
+//! Eight instructions:
+//! three layout setters (`SetIVNLayout`, `SetWVNLayout`, `SetOVNLayout`),
+//! two compute triggers (`ExecuteMapping`, `ExecuteStreaming`),
+//! two memory movers (`Load`, `Write`/Store) and `Activation`.
+
+pub mod bitwidth;
+pub mod encode;
+pub mod inst;
+pub mod opt;
+pub mod trace;
+
+pub use bitwidth::IsaBitwidths;
+pub use inst::{ActFn, BufTarget, Inst, LayoutInst, Opcode};
+pub use trace::Trace;

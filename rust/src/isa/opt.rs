@@ -1,0 +1,220 @@
+//! Peephole trace optimizer.
+//!
+//! The mapper's lowering is deliberately canonical (one Set*VNLayout per
+//! k-tile, loads per operand); across tiles and layers many of those
+//! instructions are redundant. These passes shrink traces further without
+//! changing semantics — the functional simulator is the equivalence oracle
+//! (see `optimizer_preserves_semantics` below and the integration tests):
+//!
+//! 1. **Redundant layout elimination** — a Set{I,W}VNLayout whose layout
+//!    equals the one already in effect is dropped (configuration-only
+//!    instructions are idempotent, §IV-G1). SetOVNLayout is *not* elidable:
+//!    it clears/commits the output tile (lifecycle side effects).
+//! 2. **Dead load elimination** — a Load into a buffer that is overwritten
+//!    by another Load into the same target before any compute trigger or
+//!    Store consumes it.
+//! 3. **Inter-layer elision** — re-export of `Trace::elide_interlayer_layouts`
+//!    (§IV-G2) for fused multi-layer traces.
+
+use super::inst::Inst;
+use super::trace::Trace;
+use crate::layout::VnLayout;
+
+/// Statistics from one optimization run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OptStats {
+    pub redundant_layouts: usize,
+    pub dead_loads: usize,
+    pub interlayer_elided: usize,
+}
+
+impl OptStats {
+    pub fn total(&self) -> usize {
+        self.redundant_layouts + self.dead_loads + self.interlayer_elided
+    }
+}
+
+/// Pass 1: drop Set{I,W}VNLayout instructions that re-program the current
+/// layout.
+pub fn eliminate_redundant_layouts(trace: &mut Trace) -> usize {
+    let mut cur_i: Option<VnLayout> = None;
+    let mut cur_w: Option<VnLayout> = None;
+    let mut drop = vec![false; trace.insts.len()];
+    for (idx, inst) in trace.insts.iter().enumerate() {
+        match inst {
+            Inst::SetIVNLayout(l) => {
+                if cur_i == Some(l.layout) {
+                    drop[idx] = true;
+                } else {
+                    cur_i = Some(l.layout);
+                }
+            }
+            Inst::SetWVNLayout(l) => {
+                if cur_w == Some(l.layout) {
+                    drop[idx] = true;
+                } else {
+                    cur_w = Some(l.layout);
+                }
+            }
+            _ => {}
+        }
+    }
+    apply_drops(trace, &drop)
+}
+
+/// Pass 2: drop Loads whose data is overwritten before any use. A "use" is
+/// any compute trigger (ExecuteStreaming reads both buffers), Store or
+/// Activation on the same target.
+pub fn eliminate_dead_loads(trace: &mut Trace) -> usize {
+    let mut drop = vec![false; trace.insts.len()];
+    let mut pending: [Option<usize>; 2] = [None, None]; // per BufTarget
+    let idx_of = |t: crate::isa::inst::BufTarget| match t {
+        crate::isa::inst::BufTarget::Stationary => 0usize,
+        crate::isa::inst::BufTarget::Streaming => 1usize,
+    };
+    for (idx, inst) in trace.insts.iter().enumerate() {
+        match inst {
+            Inst::Load { target, .. } => {
+                if let Some(prev) = pending[idx_of(*target)] {
+                    drop[prev] = true; // overwritten before use
+                }
+                pending[idx_of(*target)] = Some(idx);
+            }
+            Inst::ExecuteStreaming(_) => {
+                // Consumes both buffers.
+                pending = [None, None];
+            }
+            Inst::Store { target, .. } | Inst::Activation { target, .. } => {
+                pending[idx_of(*target)] = None;
+            }
+            // SetOVNLayout commits OB into an operand buffer → treats both
+            // as potentially read by the commit's write-back pattern.
+            Inst::SetOVNLayout(_) => {
+                pending = [None, None];
+            }
+            _ => {}
+        }
+    }
+    apply_drops(trace, &drop)
+}
+
+fn apply_drops(trace: &mut Trace, drop: &[bool]) -> usize {
+    let n = drop.iter().filter(|&&d| d).count();
+    if n == 0 {
+        return 0;
+    }
+    let mut kept = Vec::with_capacity(trace.insts.len() - n);
+    let mut new_starts = Vec::with_capacity(trace.layer_starts.len());
+    let mut removed = 0usize;
+    let mut next_layer = 0usize;
+    for (idx, inst) in trace.insts.iter().enumerate() {
+        while next_layer < trace.layer_starts.len() && trace.layer_starts[next_layer] == idx {
+            new_starts.push(idx - removed);
+            next_layer += 1;
+        }
+        if drop[idx] {
+            removed += 1;
+        } else {
+            kept.push(*inst);
+        }
+    }
+    trace.insts = kept;
+    trace.layer_starts = new_starts;
+    n
+}
+
+/// Run all passes to a fixed point.
+pub fn optimize(trace: &mut Trace) -> OptStats {
+    let mut stats = OptStats::default();
+    loop {
+        let a = eliminate_redundant_layouts(trace);
+        let b = eliminate_dead_loads(trace);
+        let c = trace.elide_interlayer_layouts();
+        stats.redundant_layouts += a;
+        stats.dead_loads += b;
+        stats.interlayer_elided += c;
+        if a + b + c == 0 {
+            return stats;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ArchConfig;
+    use crate::mapper::exec::execute_program;
+    use crate::mapper::search::{search, MapperOptions};
+    use crate::util::Lcg;
+    use crate::workloads::Gemm;
+
+    #[test]
+    fn redundant_layouts_removed() {
+        let cfg = ArchConfig::paper(4, 4);
+        let g = Gemm::new("o", "t", 16, 24, 16); // multiple k-tiles →
+                                                  // repeated identical layouts
+        let opts = MapperOptions { full_layout_search: false, ..Default::default() };
+        let d = search(&cfg, &g, &opts).unwrap();
+        let mut prog =
+            crate::mapper::lower_gemm(&cfg, &g, &d.choice, d.i_order, d.w_order, d.o_order);
+        let before = prog.trace.len();
+        let stats = optimize(&mut prog.trace);
+        assert!(prog.trace.len() <= before);
+        // Whatever was removed is reflected in the stats.
+        assert_eq!(before - prog.trace.len(), stats.total());
+    }
+
+    #[test]
+    fn optimizer_preserves_semantics() {
+        // The defining property: optimized traces compute identical outputs.
+        let cfg = ArchConfig::paper(4, 4);
+        let opts = MapperOptions { full_layout_search: false, ..Default::default() };
+        for (m, k, n) in [(16usize, 24usize, 16usize), (10, 20, 14), (32, 8, 32)] {
+            let g = Gemm::new("o", "t", m, k, n);
+            let d = search(&cfg, &g, &opts).unwrap();
+            let mut prog =
+                crate::mapper::lower_gemm(&cfg, &g, &d.choice, d.i_order, d.w_order, d.o_order);
+            let mut rng = Lcg::new(1);
+            let iv: Vec<i32> = (0..m * k).map(|_| rng.range(0, 9) as i32 - 4).collect();
+            let wv: Vec<i32> = (0..k * n).map(|_| rng.range(0, 9) as i32 - 4).collect();
+            let base = execute_program(&cfg, &g, &prog, &iv, &wv).unwrap();
+            let stats = optimize(&mut prog.trace);
+            let opt = execute_program(&cfg, &g, &prog, &iv, &wv).unwrap();
+            assert_eq!(base, opt, "({m},{k},{n}) after removing {}", stats.total());
+        }
+    }
+
+    #[test]
+    fn dead_load_detected() {
+        use crate::isa::inst::{BufTarget, Inst};
+        let mut t = Trace::new();
+        t.push(Inst::Load { target: BufTarget::Streaming, hbm_addr: 0, rows: 1 });
+        t.push(Inst::Load { target: BufTarget::Streaming, hbm_addr: 64, rows: 1 });
+        assert_eq!(eliminate_dead_loads(&mut t), 1);
+        // The surviving load is the second one.
+        assert!(matches!(t.insts[0], Inst::Load { hbm_addr: 64, .. }));
+    }
+
+    #[test]
+    fn load_used_by_store_is_live() {
+        use crate::isa::inst::{BufTarget, Inst};
+        let mut t = Trace::new();
+        t.push(Inst::Load { target: BufTarget::Streaming, hbm_addr: 0, rows: 1 });
+        t.push(Inst::Store { target: BufTarget::Streaming, hbm_addr: 128, rows: 1 });
+        t.push(Inst::Load { target: BufTarget::Streaming, hbm_addr: 64, rows: 1 });
+        assert_eq!(eliminate_dead_loads(&mut t), 0);
+    }
+
+    #[test]
+    fn layer_starts_remap_after_drops() {
+        use crate::isa::inst::{BufTarget, Inst};
+        let mut t = Trace::new();
+        t.begin_layer();
+        t.push(Inst::Load { target: BufTarget::Streaming, hbm_addr: 0, rows: 1 });
+        t.push(Inst::Load { target: BufTarget::Streaming, hbm_addr: 64, rows: 1 });
+        t.begin_layer();
+        t.push(Inst::Load { target: BufTarget::Stationary, hbm_addr: 0, rows: 1 });
+        eliminate_dead_loads(&mut t);
+        assert_eq!(t.layer_starts, vec![0, 1]);
+    }
+}

@@ -1,0 +1,273 @@
+//! MINISA program traces (§IV-G).
+//!
+//! The canonical trace for one layer is
+//! `Set*VNLayout → {E.Mapping / E.Streaming}^T` plus Load/Store around it.
+//! For consecutive layers, layer i's `SetOVNLayout` doubles as layer i+1's
+//! `SetIVNLayout`, which is therefore skipped (§IV-G2).
+
+use super::encode::Codec;
+use super::inst::Inst;
+use crate::arch::config::ArchConfig;
+
+/// A MINISA instruction trace with byte accounting.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub insts: Vec<Inst>,
+    /// Layer boundaries (index of first instruction of each layer).
+    pub layer_starts: Vec<usize>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, inst: Inst) {
+        self.insts.push(inst);
+    }
+
+    pub fn extend(&mut self, insts: impl IntoIterator<Item = Inst>) {
+        self.insts.extend(insts);
+    }
+
+    /// Mark the start of a new layer at the current position.
+    pub fn begin_layer(&mut self) {
+        self.layer_starts.push(self.insts.len());
+    }
+
+    pub fn len(&self) -> usize {
+        self.insts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.insts.is_empty()
+    }
+
+    /// Total encoded size in bits under a config's codec.
+    pub fn size_bits(&self, cfg: &ArchConfig) -> u64 {
+        let c = Codec::new(cfg);
+        self.insts.iter().map(|i| c.width_bits(i) as u64).sum()
+    }
+
+    /// Total encoded size in bytes (the off-chip instruction traffic).
+    pub fn size_bytes(&self, cfg: &ArchConfig) -> u64 {
+        self.size_bits(cfg).div_ceil(8)
+    }
+
+    /// Count instructions of each class: (config, compute-trigger, memory,
+    /// activation).
+    pub fn class_counts(&self) -> (usize, usize, usize, usize) {
+        let mut cfg_only = 0;
+        let mut compute = 0;
+        let mut memory = 0;
+        let mut act = 0;
+        for i in &self.insts {
+            if i.is_config_only() {
+                cfg_only += 1;
+            } else if i.is_compute_trigger() {
+                compute += 1;
+            } else if matches!(i, Inst::Activation { .. }) {
+                act += 1;
+            } else {
+                memory += 1;
+            }
+        }
+        (cfg_only, compute, memory, act)
+    }
+
+    /// Number of compute tiles = number of E.Mapping/E.Streaming pairs.
+    pub fn tile_count(&self) -> usize {
+        self.insts.iter().filter(|i| matches!(i, Inst::ExecuteMapping(_))).count()
+    }
+
+    /// Inter-layer elision (§IV-G2): remove each layer's `SetIVNLayout` when
+    /// the previous layer ended with a `SetOVNLayout` describing the same
+    /// layout (output of layer i *is* the input of layer i+1). Returns the
+    /// number of instructions elided.
+    pub fn elide_interlayer_layouts(&mut self) -> usize {
+        let mut drop = vec![false; self.insts.len()];
+        let mut elided = 0;
+        for (li, &start) in self.layer_starts.iter().enumerate().skip(1) {
+            let prev_range = self.layer_starts[li - 1]..start;
+            let prev_ovn = self.insts[prev_range]
+                .iter()
+                .rev()
+                .find_map(|i| match i {
+                    Inst::SetOVNLayout(l) => Some(l.layout),
+                    _ => None,
+                });
+            let end = self.layer_starts.get(li + 1).copied().unwrap_or(self.insts.len());
+            if let Some(prev) = prev_ovn {
+                for idx in start..end {
+                    if let Inst::SetIVNLayout(l) = &self.insts[idx] {
+                        if l.layout == prev {
+                            drop[idx] = true;
+                            elided += 1;
+                        }
+                        break; // only the leading SetIVNLayout is elidable
+                    }
+                }
+            }
+        }
+        if elided > 0 {
+            let mut kept = Vec::with_capacity(self.insts.len() - elided);
+            let mut new_starts = Vec::with_capacity(self.layer_starts.len());
+            let mut removed_before = 0usize;
+            let mut next_layer = 0usize;
+            for (idx, inst) in self.insts.iter().enumerate() {
+                while next_layer < self.layer_starts.len()
+                    && self.layer_starts[next_layer] == idx
+                {
+                    new_starts.push(idx - removed_before);
+                    next_layer += 1;
+                }
+                if drop[idx] {
+                    removed_before += 1;
+                } else {
+                    kept.push(*inst);
+                }
+            }
+            self.insts = kept;
+            self.layer_starts = new_starts;
+        }
+        elided
+    }
+
+    /// Human-readable disassembly.
+    pub fn disassemble(&self) -> String {
+        let mut s = String::new();
+        let mut layer = 0usize;
+        for (idx, inst) in self.insts.iter().enumerate() {
+            if self.layer_starts.get(layer) == Some(&idx) {
+                s.push_str(&format!("; ---- layer {layer} ----\n"));
+                layer += 1;
+            }
+            s.push_str(&format!("{idx:6}: {}\n", disasm_one(inst)));
+        }
+        s
+    }
+}
+
+fn disasm_one(inst: &Inst) -> String {
+    match inst {
+        Inst::SetIVNLayout(l) => format!(
+            "SetIVNLayout  order={} M_L0={} M_L1={} J_L1={}",
+            l.layout.order, l.layout.n_l0, l.layout.n_l1, l.layout.r_l1
+        ),
+        Inst::SetWVNLayout(l) => format!(
+            "SetWVNLayout  order={} N_L0={} N_L1={} K_L1={}",
+            l.layout.order, l.layout.n_l0, l.layout.n_l1, l.layout.r_l1
+        ),
+        Inst::SetOVNLayout(l) => format!(
+            "SetOVNLayout  order={} P_L0={} P_L1={} Q_L1={}",
+            l.layout.order, l.layout.n_l0, l.layout.n_l1, l.layout.r_l1
+        ),
+        Inst::ExecuteMapping(m) => format!(
+            "E.Mapping     r0={} c0={} G_r={} G_c={} s_r={} s_c={}",
+            m.r0, m.c0, m.g_r, m.g_c, m.s_r, m.s_c
+        ),
+        Inst::ExecuteStreaming(s) => format!(
+            "E.Streaming   df={:?} m0={} s_m={} T={} VN={}",
+            s.df, s.m0, s.s_m, s.t, s.vn_size
+        ),
+        Inst::Load { target, hbm_addr, rows } => {
+            format!("Load          {target:?} hbm={hbm_addr:#x} rows={rows}")
+        }
+        Inst::Store { target, hbm_addr, rows } => {
+            format!("Write         {target:?} hbm={hbm_addr:#x} rows={rows}")
+        }
+        Inst::Activation { func, target, rows } => {
+            format!("Activation    {func:?} {target:?} rows={rows}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::inst::{BufTarget, LayoutInst};
+    use crate::layout::VnLayout;
+    use crate::mapping::{Dataflow, MappingCfg, StreamCfg};
+
+    fn layer(t: &mut Trace, ivn: VnLayout, ovn: VnLayout, tiles: usize) {
+        t.begin_layer();
+        t.push(Inst::SetIVNLayout(LayoutInst { layout: ivn }));
+        t.push(Inst::SetWVNLayout(LayoutInst { layout: VnLayout::row_major(2, 8, 4) }));
+        t.push(Inst::SetOVNLayout(LayoutInst { layout: ovn }));
+        for i in 0..tiles {
+            t.push(Inst::ExecuteMapping(MappingCfg {
+                r0: i,
+                c0: 0,
+                g_r: 1,
+                g_c: 1,
+                s_r: 1,
+                s_c: 0,
+            }));
+            t.push(Inst::ExecuteStreaming(StreamCfg {
+                df: Dataflow::WoS,
+                m0: 0,
+                s_m: 1,
+                t: 4,
+                vn_size: 4,
+            }));
+        }
+    }
+
+    #[test]
+    fn canonical_layer_structure() {
+        let mut t = Trace::new();
+        layer(&mut t, VnLayout::row_major(1, 4, 4), VnLayout::row_major(1, 4, 4), 3);
+        let (cfg_only, compute, memory, act) = t.class_counts();
+        assert_eq!(cfg_only, 2); // IVN + WVN layouts
+        assert_eq!(compute, 6); // 3 pairs
+        assert_eq!(memory, 1); // OVN layout
+        assert_eq!(act, 0);
+        assert_eq!(t.tile_count(), 3);
+    }
+
+    #[test]
+    fn interlayer_elision_drops_matching_ivn() {
+        let shared = VnLayout::new(1, 4, 2, 2, 4);
+        let mut t = Trace::new();
+        layer(&mut t, VnLayout::row_major(1, 4, 4), shared, 2);
+        layer(&mut t, shared, VnLayout::row_major(2, 2, 4), 2);
+        let before = t.len();
+        let elided = t.elide_interlayer_layouts();
+        assert_eq!(elided, 1);
+        assert_eq!(t.len(), before - 1);
+        // Layer 1 must no longer start with a SetIVNLayout.
+        let l1 = t.layer_starts[1];
+        assert!(!matches!(t.insts[l1], Inst::SetIVNLayout(_)));
+    }
+
+    #[test]
+    fn elision_keeps_mismatched_layouts() {
+        let mut t = Trace::new();
+        layer(&mut t, VnLayout::row_major(1, 4, 4), VnLayout::new(1, 4, 2, 2, 4), 1);
+        layer(&mut t, VnLayout::new(3, 2, 2, 2, 4), VnLayout::row_major(2, 2, 4), 1);
+        assert_eq!(t.elide_interlayer_layouts(), 0);
+    }
+
+    #[test]
+    fn size_accounting() {
+        let cfg = ArchConfig::paper(4, 4);
+        let mut t = Trace::new();
+        layer(&mut t, VnLayout::row_major(1, 4, 4), VnLayout::row_major(1, 4, 4), 2);
+        t.push(Inst::Load { target: BufTarget::Streaming, hbm_addr: 0, rows: 4 });
+        let bits = t.size_bits(&cfg);
+        assert!(bits > 0);
+        assert_eq!(t.size_bytes(&cfg), bits.div_ceil(8));
+    }
+
+    #[test]
+    fn disassembly_mentions_layers() {
+        let mut t = Trace::new();
+        layer(&mut t, VnLayout::row_major(1, 4, 4), VnLayout::row_major(1, 4, 4), 1);
+        layer(&mut t, VnLayout::row_major(1, 4, 4), VnLayout::row_major(1, 4, 4), 1);
+        let d = t.disassemble();
+        assert!(d.contains("layer 0"));
+        assert!(d.contains("layer 1"));
+        assert!(d.contains("E.Mapping"));
+        assert!(d.contains("SetWVNLayout"));
+    }
+}

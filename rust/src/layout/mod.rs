@@ -1,0 +1,299 @@
+//! VN-granularity buffer layouts (§IV-F, Tab. III).
+//!
+//! A layout places a logical 2-rank tensor into a physical `D × AW` on-chip
+//! buffer. Each rank is split into two levels (`K = K_L1·K_L0` etc.); the
+//! innermost reduction-level factor is pinned to the VN size, leaving three
+//! free ranks `{R_L1, N_L0, N_L1}` whose ordering (3! = 6 permutations,
+//! 3-bit `order_id`) plus the level-0/level-1 partition factors fully
+//! describe the layout.
+//!
+//! Address generation: VNs are flattened by the chosen loop order into a 1-D
+//! index `L`, then folded row-major over the buffer:
+//! `col = L mod AW`, starting row `= (L / AW) · vn_size` — every VN occupies
+//! `vn_size` contiguous rows at one column (elements of a VN are read
+//! serially over cycles, §IV-F2).
+
+use crate::util::ceil_div;
+
+/// The three free ranks after pinning the reduction L0 factor.
+/// `R1` is the level-1 reduction rank (k_L1 / j_L1 / q_L1); `N0`/`N1` are
+/// the level-0/level-1 non-reduction ranks (n / m / p).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rank {
+    R1,
+    N0,
+    N1,
+}
+
+/// Loop order, outermost → innermost (Tab. III encoding).
+pub const ORDERS: [[Rank; 3]; 6] = [
+    [Rank::R1, Rank::N0, Rank::N1], // 000: r1 → n0 → n1
+    [Rank::R1, Rank::N1, Rank::N0], // 001
+    [Rank::N0, Rank::R1, Rank::N1], // 010
+    [Rank::N0, Rank::N1, Rank::R1], // 011
+    [Rank::N1, Rank::R1, Rank::N0], // 100
+    [Rank::N1, Rank::N0, Rank::R1], // 101
+];
+
+/// A concrete VN-granularity layout for one operand buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VnLayout {
+    /// Tab. III order id in [0, 5].
+    pub order: u8,
+    /// Level-0 non-reduction partition factor (≤ AW by the ISA cap).
+    pub n_l0: usize,
+    /// Level-1 non-reduction partition factor.
+    pub n_l1: usize,
+    /// Level-1 reduction partition factor (number of VN rows resident).
+    pub r_l1: usize,
+    /// VN size (elements per VN, ≤ AH). Reduction L0 factor.
+    pub vn_size: usize,
+}
+
+impl VnLayout {
+    pub fn new(order: u8, n_l0: usize, n_l1: usize, r_l1: usize, vn_size: usize) -> Self {
+        assert!(order < 6, "order id {order} out of range");
+        assert!(n_l0 >= 1 && n_l1 >= 1 && r_l1 >= 1 && vn_size >= 1);
+        Self { order, n_l0, n_l1, r_l1, vn_size }
+    }
+
+    /// Canonical row-major layout for a VN grid of `rows × cols`
+    /// (order 000 with no level-1/level-0 split of the non-reduction rank):
+    /// VNs laid out r-major then c.
+    pub fn row_major(rows: usize, cols: usize, vn_size: usize) -> Self {
+        Self::new(0, cols.max(1), 1, rows.max(1), vn_size)
+    }
+
+    /// Total non-reduction extent covered.
+    pub fn non_red(&self) -> usize {
+        self.n_l0 * self.n_l1
+    }
+
+    /// Total VN slots described.
+    pub fn vn_slots(&self) -> usize {
+        self.non_red() * self.r_l1
+    }
+
+    /// Ordered rank extents, outermost → innermost.
+    fn extents(&self) -> [usize; 3] {
+        let e = |r: Rank| match r {
+            Rank::R1 => self.r_l1,
+            Rank::N0 => self.n_l0,
+            Rank::N1 => self.n_l1,
+        };
+        let o = ORDERS[self.order as usize];
+        [e(o[0]), e(o[1]), e(o[2])]
+    }
+
+    /// Flattened VN index `L` of VN (r, c); `None` if outside this layout's
+    /// extents (caller treats as not-resident).
+    pub fn flatten(&self, r: usize, c: usize) -> Option<usize> {
+        if r >= self.r_l1 || c >= self.non_red() {
+            return None;
+        }
+        let n_l1 = c / self.n_l0;
+        let n_l0 = c % self.n_l0;
+        let v = |rank: Rank| match rank {
+            Rank::R1 => r,
+            Rank::N0 => n_l0,
+            Rank::N1 => n_l1,
+        };
+        let o = ORDERS[self.order as usize];
+        let e = self.extents();
+        Some(v(o[0]) * e[1] * e[2] + v(o[1]) * e[2] + v(o[2]))
+    }
+
+    /// Inverse of `flatten`.
+    pub fn unflatten(&self, l: usize) -> Option<(usize, usize)> {
+        if l >= self.vn_slots() {
+            return None;
+        }
+        let e = self.extents();
+        let o = ORDERS[self.order as usize];
+        let vals = [l / (e[1] * e[2]), (l / e[2]) % e[1], l % e[2]];
+        let mut r = 0;
+        let mut n0 = 0;
+        let mut n1 = 0;
+        for (rank, v) in o.iter().zip(vals) {
+            match rank {
+                Rank::R1 => r = v,
+                Rank::N0 => n0 = v,
+                Rank::N1 => n1 = v,
+            }
+        }
+        Some((r, n1 * self.n_l0 + n0))
+    }
+
+    /// Physical placement of VN (r, c) in a width-`aw` buffer:
+    /// `(first_row, col)`; the VN occupies rows
+    /// `first_row .. first_row + vn_size` at `col`.
+    pub fn addr(&self, r: usize, c: usize, aw: usize) -> Option<(usize, usize)> {
+        let l = self.flatten(r, c)?;
+        Some(((l / aw) * self.vn_size, l % aw))
+    }
+
+    /// Buffer rows needed to hold all VNs of this layout.
+    pub fn rows_needed(&self, aw: usize) -> usize {
+        ceil_div(self.vn_slots(), aw) * self.vn_size
+    }
+
+    /// Capacity legality (Fig. 5 value-range row): all VNs must fit in a
+    /// `d × aw` buffer.
+    pub fn fits(&self, d: usize, aw: usize) -> bool {
+        self.rows_needed(aw) <= d
+    }
+
+    /// ISA-level legality (Fig. 5): `N_L0 ≤ AW` (larger values are
+    /// performance-equivalent, §IV-F4b) and capacity.
+    pub fn is_legal(&self, d: usize, aw: usize) -> bool {
+        self.n_l0 <= aw && self.fits(d, aw)
+    }
+}
+
+/// Bank-conflict analysis: would reading the VN set `vns` (as one parallel
+/// access group, e.g. the AW stationary VNs loaded in one cycle-row) hit the
+/// same buffer column twice? FEATHER+'s all-to-all crossbar can *multicast*
+/// one resident copy to many PE columns, so duplicate requests to the same
+/// VN are free; distinct VNs mapping to the same column conflict.
+pub fn conflicting_columns(
+    layout: &VnLayout,
+    aw: usize,
+    vns: &[(usize, usize)],
+) -> usize {
+    let mut cols: Vec<Option<(usize, usize)>> = vec![None; aw];
+    let mut conflicts = 0;
+    for &(r, c) in vns {
+        if let Some((_, col)) = layout.addr(r, c, aw) {
+            match cols[col] {
+                None => cols[col] = Some((r, c)),
+                Some(prev) if prev == (r, c) => {} // multicast, free
+                Some(_) => conflicts += 1,
+            }
+        }
+    }
+    conflicts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    /// Fig. 6 case study: K=8, N=8, AH=AW=4 ⇒ vn=4, K_L1=2, N_L0=4, N_L1=2,
+    /// order n_L0 → k_L1 → n_L1 (id 010 = index 2). First buffer row must be
+    /// W_VN(0,0), W_VN(0,4), W_VN(1,0), W_VN(1,4).
+    #[test]
+    fn fig6_case_study() {
+        let l = VnLayout::new(2, 4, 2, 2, 4);
+        let aw = 4;
+        assert_eq!(l.addr(0, 0, aw), Some((0, 0)));
+        assert_eq!(l.addr(0, 4, aw), Some((0, 1)));
+        assert_eq!(l.addr(1, 0, aw), Some((0, 2)));
+        assert_eq!(l.addr(1, 4, aw), Some((0, 3)));
+        // Second VN row (L = 4..8) starts at buffer row vn_size = 4 and is
+        // the n_L0 = 1 pattern: W_VN(0,1), W_VN(0,5), W_VN(1,1), W_VN(1,5).
+        assert_eq!(l.addr(0, 1, aw), Some((4, 0)));
+        assert_eq!(l.addr(0, 5, aw), Some((4, 1)));
+        assert_eq!(l.addr(1, 1, aw), Some((4, 2)));
+        assert_eq!(l.addr(1, 5, aw), Some((4, 3)));
+    }
+
+    #[test]
+    fn row_major_is_sequential() {
+        let l = VnLayout::row_major(3, 5, 4);
+        let mut expect = 0;
+        for r in 0..3 {
+            for c in 0..5 {
+                assert_eq!(l.flatten(r, c), Some(expect));
+                expect += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_extent_is_none() {
+        let l = VnLayout::new(0, 4, 2, 3, 4);
+        assert_eq!(l.flatten(3, 0), None);
+        assert_eq!(l.flatten(0, 8), None);
+        assert!(l.flatten(2, 7).is_some());
+    }
+
+    #[test]
+    fn flatten_bijective_all_orders() {
+        // Property: flatten is a bijection [0, r_l1) × [0, n) → [0, slots).
+        forall("layout-bijection", 200, |g| {
+            let order = g.usize(0, 5) as u8;
+            let n_l0 = g.usize(1, 8);
+            let n_l1 = g.usize(1, 8);
+            let r_l1 = g.usize(1, 8);
+            let vn = g.pow2(0, 4);
+            let l = VnLayout::new(order, n_l0, n_l1, r_l1, vn);
+            let mut seen = vec![false; l.vn_slots()];
+            for r in 0..r_l1 {
+                for c in 0..l.non_red() {
+                    let idx = l.flatten(r, c).unwrap();
+                    assert!(idx < l.vn_slots());
+                    assert!(!seen[idx], "duplicate L={idx}");
+                    seen[idx] = true;
+                    assert_eq!(l.unflatten(idx), Some((r, c)));
+                }
+            }
+            assert!(seen.iter().all(|&b| b));
+        });
+    }
+
+    #[test]
+    fn addr_no_two_vns_share_slot() {
+        // Property: distinct VNs never collide on (row, col).
+        forall("layout-addr-disjoint", 120, |g| {
+            let order = g.usize(0, 5) as u8;
+            let l = VnLayout::new(order, g.usize(1, 6), g.usize(1, 6), g.usize(1, 6), g.pow2(1, 3));
+            let aw = g.pow2(1, 4);
+            let mut slots = std::collections::HashSet::new();
+            for r in 0..l.r_l1 {
+                for c in 0..l.non_red() {
+                    let a = l.addr(r, c, aw).unwrap();
+                    assert!(slots.insert(a), "VN ({r},{c}) collided at {a:?}");
+                    assert_eq!(a.0 % l.vn_size, 0, "rows are vn-aligned");
+                    assert!(a.1 < aw);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn rows_needed_and_fits() {
+        let l = VnLayout::new(0, 4, 1, 2, 4); // 8 VNs
+        assert_eq!(l.rows_needed(4), 8); // 2 VN-rows of 4 cols × vn 4
+        assert!(l.fits(8, 4));
+        assert!(!l.fits(7, 4));
+        assert!(l.is_legal(8, 4));
+        // N_L0 > AW is ISA-illegal even if capacity is fine.
+        let l2 = VnLayout::new(0, 8, 1, 1, 4);
+        assert!(!l2.is_legal(100, 4));
+    }
+
+    #[test]
+    fn conflict_detection() {
+        let l = VnLayout::row_major(2, 4, 4);
+        let aw = 4;
+        // VNs (0,0) and (0,1) land in cols 0 and 1 → no conflict.
+        assert_eq!(conflicting_columns(&l, aw, &[(0, 0), (0, 1)]), 0);
+        // (0,0) and (1,0): L = 0 and 4 → both col 0 → conflict.
+        assert_eq!(conflicting_columns(&l, aw, &[(0, 0), (1, 0)]), 1);
+        // Same VN twice = multicast, free.
+        assert_eq!(conflicting_columns(&l, aw, &[(0, 2), (0, 2)]), 0);
+    }
+
+    #[test]
+    fn orders_are_all_permutations() {
+        use std::collections::HashSet;
+        let set: HashSet<_> = ORDERS.iter().map(|o| format!("{o:?}")).collect();
+        assert_eq!(set.len(), 6);
+        for o in ORDERS {
+            let mut ranks = o.to_vec();
+            ranks.sort_by_key(|r| format!("{r:?}"));
+            assert_eq!(ranks, vec![Rank::N0, Rank::N1, Rank::R1]);
+        }
+    }
+}

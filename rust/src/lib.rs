@@ -1,0 +1,29 @@
+//! # MINISA — Minimal ISA for the FEATHER+ reconfigurable inference accelerator
+//!
+//! Full-system reproduction of *MINISA: Minimal Instruction Set Architecture
+//! for Next-gen Reconfigurable Inference Accelerator* (CS.AR 2026): the
+//! eight-instruction VN-granularity ISA, the FEATHER+ architectural model,
+//! a functional trace simulator, a cycle-level 5-engine performance model,
+//! the micro-instruction baseline, the FEATHER+ mapper (mapping-first /
+//! layout-second co-search), the 50-workload evaluation suite, GPU/TPU
+//! baseline models and a PJRT runtime that executes AOT-compiled JAX/Pallas
+//! GEMM oracles for numerical cross-validation.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured results.
+
+pub mod arch;
+pub mod functional;
+pub mod isa;
+pub mod layout;
+pub mod mapping;
+pub mod util;
+pub mod workloads;
+pub mod mapper;
+pub mod microinst;
+pub mod perf;
+pub mod baselines;
+pub mod coordinator;
+pub mod report;
+pub mod cli;
+pub mod runtime;

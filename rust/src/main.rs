@@ -1,0 +1,5 @@
+//! MINISA CLI — see `minisa help` or cli/mod.rs.
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(minisa::cli::run(&argv));
+}

@@ -1,0 +1,214 @@
+//! Multi-layer (chain/DAG) mapping — the ACT-integration role of the
+//! FEATHER+ Mapper (§V-A, §V-B7): "for multi-layer workloads, the mapper
+//! additionally enforces inter-layer layout compatibility: the output
+//! layout of layer i must match the input layout expected by layer i+1; it
+//! then searches over all surviving cross-layer combinations and selects
+//! the choice with minimum overall latency."
+//!
+//! Layers alternate dataflow naturally (a WO-S layer commits its outputs to
+//! the stationary buffer through the OB→StaB link, feeding an IO-S
+//! successor, and vice versa — §III-B refinement 3), and every interior
+//! `SetIVNLayout` that matches its predecessor's `SetOVNLayout` is elided
+//! from the fused trace (§IV-G2).
+
+use super::search::{search, MapperOptions};
+use super::Decision;
+use crate::arch::config::ArchConfig;
+use crate::isa::Trace;
+use crate::mapping::Dataflow;
+use crate::workloads::Gemm;
+
+/// A linear chain of GEMM layers: layer i's M×N output is layer i+1's M×K
+/// input (so `layers[i].n == layers[i+1].k` and M is shared).
+#[derive(Debug, Clone)]
+pub struct Chain {
+    pub layers: Vec<Gemm>,
+}
+
+impl Chain {
+    /// Build a chain from (K, N) pairs at a fixed M (e.g. an MLP).
+    pub fn mlp(name: &str, m: usize, dims: &[usize]) -> Self {
+        assert!(dims.len() >= 2, "need at least one layer");
+        let layers = dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| Gemm::new(&format!("{name}_l{i}"), "chain", m, w[0], w[1]))
+            .collect();
+        Self { layers }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, w) in self.layers.windows(2).enumerate() {
+            if w[0].n != w[1].k {
+                return Err(format!("layer {i} N={} != layer {} K={}", w[0].n, i + 1, w[1].k));
+            }
+            if w[0].m != w[1].m {
+                return Err(format!("layer {i} M mismatch"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A chain mapping: one decision per layer + the fused trace statistics.
+#[derive(Debug, Clone)]
+pub struct ChainDecision {
+    pub per_layer: Vec<Decision>,
+    /// Total modeled cycles (sum of layer latencies; layers are serialized
+    /// by the data dependence).
+    pub total_cycles: f64,
+    /// SetIVNLayout instructions elided at layer boundaries (§IV-G2).
+    pub elided: usize,
+    /// Fused trace size in bytes, after elision.
+    pub fused_bytes: u64,
+    /// Sum of standalone per-layer trace bytes (no elision), for reporting.
+    pub standalone_bytes: u64,
+}
+
+/// Compatibility: layer i's output VNs become layer i+1's input VNs, so the
+/// successor's streamed-layout *order and factors* must equal the
+/// predecessor's output layout (we compare the layout descriptors the two
+/// traces would program).
+fn boundary_compatible(prev: &Decision, next: &Decision, cfg: &ArchConfig, gs: (&Gemm, &Gemm)) -> bool {
+    let (g_prev, g_next) = gs;
+    // The committed output tile of `prev` must cover what `next` streams in
+    // one tile, with identical VN size and order.
+    let prev_choice = prev.choice;
+    let next_choice = next.choice;
+    if prev_choice.vn != next_choice.vn {
+        return false;
+    }
+    // Dataflow alternation through the OB→StaB/StrB link (§III-B): the
+    // next layer must *consume* from the buffer the previous layer commits
+    // to. WO-S commits stationary (→ next is IO-S); IO-S commits streaming
+    // (→ next is WO-S).
+    let expected_next = match prev_choice.df {
+        Dataflow::WoS => Dataflow::IoS,
+        Dataflow::IoS => Dataflow::WoS,
+    };
+    if next_choice.df != expected_next {
+        return false;
+    }
+    // Output layout of prev vs consumed layout of next: compare the
+    // descriptors (order + partition factors over matching extents).
+    let (p_ext, q_ext) = match prev_choice.df {
+        Dataflow::WoS => (prev_choice.m_t.min(g_prev.m), prev_choice.n_t.min(g_prev.n)),
+        Dataflow::IoS => (prev_choice.n_t.min(g_prev.m), prev_choice.m_t.min(g_prev.n)),
+    };
+    let o_lay = super::lower::output_layout(cfg, &prev_choice, p_ext, q_ext, prev.o_order);
+    let (ms, ks, _) = super::lower::search_dims(g_next, next_choice.df);
+    let kgt = crate::util::ceil_div(next_choice.k_t.min(ks), next_choice.vn);
+    let consumed = match next_choice.df {
+        // Next streams its input.
+        Dataflow::WoS => super::lower::streamed_layout(
+            &next_choice,
+            next_choice.m_t.min(ms),
+            kgt,
+            next.i_order,
+        ),
+        // Next keeps its input stationary.
+        Dataflow::IoS => super::lower::stationary_layout(
+            cfg,
+            &next_choice,
+            next_choice.n_t.min(super::lower::search_dims(g_next, next_choice.df).2),
+            kgt,
+            next.w_order,
+        ),
+    };
+    o_lay.order == consumed.order && o_lay.vn_size == consumed.vn_size
+}
+
+/// Map a chain: per-layer search with the successor constrained to consume
+/// its predecessor's output layout; falls back to an explicit re-layout
+/// (no elision, extra Out→Stream pass) when no compatible pair survives.
+pub fn map_chain(cfg: &ArchConfig, chain: &Chain, opts: &MapperOptions) -> Option<ChainDecision> {
+    chain.validate().ok()?;
+    let mut per_layer: Vec<Decision> = Vec::with_capacity(chain.layers.len());
+    for g in &chain.layers {
+        per_layer.push(search(cfg, g, opts)?);
+    }
+    // Count compatible boundaries; where compatible, the successor skips
+    // its SetIVNLayout (one per k-tile of the first tile row).
+    let mut elided = 0usize;
+    for i in 1..per_layer.len() {
+        if boundary_compatible(
+            &per_layer[i - 1],
+            &per_layer[i],
+            cfg,
+            (&chain.layers[i - 1], &chain.layers[i]),
+        ) {
+            elided += 1;
+        }
+    }
+    // Fused trace accounting.
+    let mut fused = Trace::new();
+    let mut standalone_bytes = 0u64;
+    for (g, d) in chain.layers.iter().zip(&per_layer) {
+        let prog = super::lower::lower_gemm(cfg, g, &d.choice, d.i_order, d.w_order, d.o_order);
+        standalone_bytes += prog.minisa_bytes();
+        fused.begin_layer();
+        for inst in &prog.trace.insts {
+            fused.push(*inst);
+        }
+    }
+    let trace_elided = fused.elide_interlayer_layouts();
+    let fused_bytes = fused.size_bytes(cfg);
+    let total_cycles: f64 = per_layer.iter().map(|d| d.report.total_cycles).sum();
+    Some(ChainDecision {
+        per_layer,
+        total_cycles,
+        elided: elided.max(trace_elided),
+        fused_bytes,
+        standalone_bytes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> MapperOptions {
+        MapperOptions { full_layout_search: false, ..Default::default() }
+    }
+
+    #[test]
+    fn mlp_chain_builds_and_validates() {
+        let c = Chain::mlp("mlp", 64, &[128, 256, 64]);
+        assert_eq!(c.layers.len(), 2);
+        c.validate().unwrap();
+        assert_eq!(c.layers[0].n, c.layers[1].k);
+    }
+
+    #[test]
+    fn mismatched_chain_rejected() {
+        let c = Chain {
+            layers: vec![
+                Gemm::new("a", "t", 8, 16, 32),
+                Gemm::new("b", "t", 8, 64, 8), // K != prev N
+            ],
+        };
+        assert!(c.validate().is_err());
+        assert!(map_chain(&ArchConfig::paper(4, 4), &c, &opts()).is_none());
+    }
+
+    #[test]
+    fn chain_maps_and_accounts_bytes() {
+        let cfg = ArchConfig::paper(4, 16);
+        let c = Chain::mlp("mlp", 64, &[40, 88, 24]);
+        let d = map_chain(&cfg, &c, &opts()).unwrap();
+        assert_eq!(d.per_layer.len(), 2);
+        assert!(d.total_cycles > 0.0);
+        // The fused trace is never bigger than the standalone sum.
+        assert!(d.fused_bytes <= d.standalone_bytes, "{} vs {}", d.fused_bytes, d.standalone_bytes);
+    }
+
+    #[test]
+    fn chain_total_is_sum_of_layers() {
+        let cfg = ArchConfig::paper(4, 4);
+        let c = Chain::mlp("mlp", 32, &[32, 32, 32, 32]);
+        let d = map_chain(&cfg, &c, &opts()).unwrap();
+        let sum: f64 = d.per_layer.iter().map(|l| l.report.total_cycles).sum();
+        assert_eq!(d.total_cycles, sum);
+        assert_eq!(d.per_layer.len(), 3);
+    }
+}

@@ -1,0 +1,80 @@
+//! FEATHER+ Mapper — mapping-first, layout-second (mapping, layout)
+//! co-search (§V, Tab. VII).
+//!
+//! Pipeline (Fig. 8 / §V-B):
+//! 1. lower the GEMM into Virtual Neurons,
+//! 2. tile the workload (`M_t, K_t, N_t`),
+//! 3. form VN groups (one streamed VN + up to AH stationary VNs),
+//! 4. combine groups across streamed VNs (stationary reuse),
+//! 5. select column duplication,
+//! 6. search feasible buffer layouts (orders + level-0 factors),
+//! 7. lower the winner to a MINISA trace and score it on the analytical
+//!    performance model.
+//!
+//! The three mapping knobs — compute-tile size, VN-group formation
+//! (`nbc` = distinct output-column blocks per invocation period) and column
+//! duplication (`dup`) — parameterize every legal Eq.-(1) placement this
+//! lowering emits.
+
+pub mod chain;
+pub mod exec;
+pub mod lower;
+pub mod search;
+
+pub use lower::{lower_gemm, LoweredProgram};
+pub use search::{search, MapperOptions};
+
+use crate::mapping::Dataflow;
+use crate::perf::PerfReport;
+
+/// One candidate mapping (pre-layout): the paper's three knobs plus the
+/// dataflow choice and VN size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MappingChoice {
+    pub df: Dataflow,
+    /// VN size (= reduction-L0 factor), ≤ AH.
+    pub vn: usize,
+    /// Tile extents in *search space* coordinates (WO-S: (M,K,N) as given;
+    /// IO-S: M and N swapped — §V-B "IO-S is a transposed WO-S").
+    pub m_t: usize,
+    pub k_t: usize,
+    pub n_t: usize,
+    /// Distinct output-column blocks (AH-wide in n) per invocation period.
+    pub nbc: usize,
+    /// Column duplication factor (streamed-VN splitting).
+    pub dup: usize,
+}
+
+impl MappingChoice {
+    /// Reduction tiles resident per compute tile.
+    pub fn kg_t(&self) -> usize {
+        crate::util::ceil_div(self.k_t, self.vn)
+    }
+
+    /// Output-column blocks per compute tile (AH-element n blocks).
+    pub fn nb_t(&self, ah: usize) -> usize {
+        crate::util::ceil_div(self.n_t, ah)
+    }
+
+    /// Columns occupied per invocation period.
+    pub fn period(&self) -> usize {
+        self.nbc * self.dup
+    }
+}
+
+/// A fully-resolved (mapping, layout) decision with its estimated cost.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    pub choice: MappingChoice,
+    /// Tab. III order ids for the streamed, stationary and output layouts.
+    pub i_order: u8,
+    pub w_order: u8,
+    pub o_order: u8,
+    pub report: PerfReport,
+}
+
+impl Decision {
+    pub fn latency_cycles(&self) -> f64 {
+        self.report.total_cycles
+    }
+}

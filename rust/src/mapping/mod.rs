@@ -1,0 +1,353 @@
+//! ExecuteMapping / ExecuteStreaming semantics (§IV-D, §IV-E).
+//!
+//! `ExecuteMapping` places stationary VNs onto the NEST PE array with six
+//! parameters θ_EM = (r0, c0, G_r, G_c, s_r, s_c) — Eq. (1):
+//!
+//! ```text
+//! r = r0 + ⌊a_w / G_r⌋
+//! c = c0 + s_r·a_h + s_c·(a_w mod G_c)
+//! ```
+//!
+//! `ExecuteStreaming` reuses θ_EM and adds θ_ES = (m0, s_m, T, VN_size, df);
+//! the streamed VN entering column `a_w` at step `t` is:
+//!
+//! ```text
+//! j = r0 + ⌊a_w / G_r⌋
+//! m = m0 + s_m·t + ⌊(a_w mod G_r) / G_c⌋
+//! ```
+//!
+//! Under WO-S the stationary operand is W and the streamed operand is I;
+//! under IO-S the roles swap (the math is identical on the transposed GEMM).
+
+use crate::arch::config::ArchConfig;
+
+/// Dataflow selector (1-bit `df` field of ExecuteStreaming).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Dataflow {
+    /// Input-Output stationary: inputs reside in PEs, weights stream.
+    IoS,
+    /// Weight-Output stationary: weights reside in PEs, inputs stream.
+    #[default]
+    WoS,
+}
+
+impl Dataflow {
+    pub fn bit(self) -> u64 {
+        match self {
+            Dataflow::IoS => 0,
+            Dataflow::WoS => 1,
+        }
+    }
+
+    pub fn from_bit(b: u64) -> Self {
+        if b == 0 { Dataflow::IoS } else { Dataflow::WoS }
+    }
+}
+
+/// θ_EM — ExecuteMapping parameters (Eq. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MappingCfg {
+    /// Starting stationary-VN row index.
+    pub r0: usize,
+    /// Starting stationary-VN column index.
+    pub c0: usize,
+    /// Consecutive PE columns sharing one VN row index; 1 ≤ G_r ≤ AW.
+    pub g_r: usize,
+    /// Replication period of the VN column pattern across PE columns.
+    pub g_c: usize,
+    /// Stride of VN column index across PE rows (temporal stride).
+    pub s_r: usize,
+    /// Spacing of VN column index between distinct PE-column patterns.
+    pub s_c: usize,
+}
+
+impl MappingCfg {
+    /// Stationary VN (r, c) held by PE (a_h, a_w) — Eq. (1).
+    #[inline]
+    pub fn stationary_vn(&self, a_h: usize, a_w: usize) -> (usize, usize) {
+        let r = self.r0 + a_w / self.g_r;
+        let c = self.c0 + self.s_r * a_h + self.s_c * (a_w % self.g_c);
+        (r, c)
+    }
+
+    /// ISA legality under a config (Fig. 3 value ranges).
+    pub fn validate(&self, cfg: &ArchConfig) -> Result<(), String> {
+        let max_vn_slots = cfg.max_vns();
+        if self.g_r < 1 || self.g_r > cfg.aw {
+            return Err(format!("G_r={} out of [1, {}]", self.g_r, cfg.aw));
+        }
+        if self.g_c < 1 || self.g_c > cfg.aw {
+            return Err(format!("G_c={} out of [1, {}]", self.g_c, cfg.aw));
+        }
+        if self.r0 >= max_vn_slots || self.c0 >= max_vn_slots {
+            return Err(format!("r0/c0 {}/{} exceed {}", self.r0, self.c0, max_vn_slots));
+        }
+        let s_max = cfg.d() / cfg.ah;
+        if self.s_r > s_max || self.s_c > s_max {
+            return Err(format!("strides {}/{} exceed D/AH={}", self.s_r, self.s_c, s_max));
+        }
+        Ok(())
+    }
+}
+
+/// θ_ES — ExecuteStreaming parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StreamCfg {
+    pub df: Dataflow,
+    /// Starting streamed-row index.
+    pub m0: usize,
+    /// Temporal stride of streamed VN row index.
+    pub s_m: usize,
+    /// Number of streamed VNs injected per PE column.
+    pub t: usize,
+    /// VN size for this invocation (≤ AH).
+    pub vn_size: usize,
+}
+
+impl StreamCfg {
+    /// Streamed VN (m, j) entering column `a_w` at step `t` (§IV-E1).
+    #[inline]
+    pub fn streamed_vn(&self, em: &MappingCfg, a_w: usize, t: usize) -> (usize, usize) {
+        let j = em.r0 + a_w / em.g_r;
+        let m = self.m0 + self.s_m * t + (a_w % em.g_r) / em.g_c;
+        (m, j)
+    }
+
+    pub fn validate(&self, cfg: &ArchConfig) -> Result<(), String> {
+        if self.vn_size < 1 || self.vn_size > cfg.ah {
+            return Err(format!("VN_size={} out of [1, {}]", self.vn_size, cfg.ah));
+        }
+        let t_max = crate::util::ceil_div(cfg.d(), cfg.ah).max(1);
+        if self.t < 1 {
+            return Err("T must be ≥ 1".into());
+        }
+        if self.t > t_max * cfg.aw {
+            // Generous cap: T is bounded by resident streamed VNs; with
+            // column-parallel splitting one column sees at most all of them.
+            return Err(format!("T={} exceeds resident VN bound {}", self.t, t_max * cfg.aw));
+        }
+        Ok(())
+    }
+}
+
+/// One compute-tile invocation: the (ExecuteMapping, ExecuteStreaming) pair
+/// that triggers NEST (§IV-G1 "compute-trigger").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Invocation {
+    pub em: MappingCfg,
+    pub es: StreamCfg,
+}
+
+impl Invocation {
+    /// Enumerate all (PE, step) work items: `(a_h, a_w, t, stationary (r,c),
+    /// streamed (m, j))`. The caller filters out-of-bounds VNs (zero-pad).
+    pub fn work_items(&self, cfg: &ArchConfig) -> impl Iterator<Item = WorkItem> + '_ {
+        let ah = cfg.ah.min(self.es.vn_size.max(1));
+        let aw = cfg.aw;
+        let t_total = self.es.t;
+        let em = self.em;
+        let es = self.es;
+        // When VN_size < AH only VN_size PE rows are active (§VI-D2).
+        let active_rows = if es.vn_size < cfg.ah { es.vn_size } else { cfg.ah };
+        let _ = ah;
+        (0..aw).flat_map(move |a_w| {
+            (0..t_total).flat_map(move |t| {
+                let (m, j) = es.streamed_vn(&em, a_w, t);
+                (0..active_rows).map(move |a_h| {
+                    let (r, c) = em.stationary_vn(a_h, a_w);
+                    WorkItem { a_h, a_w, t, sta_r: r, sta_c: c, str_m: m, str_j: j }
+                })
+            })
+        })
+    }
+
+    /// Reduction-consistency invariant: the streamed VN's reduction tile
+    /// always equals the stationary VN's row index (they meet in a dot
+    /// product over the same K-chunk). Holds by construction of the two
+    /// equations; checked in tests and by the functional simulator.
+    pub fn reduction_consistent(&self, cfg: &ArchConfig) -> bool {
+        for a_w in 0..cfg.aw {
+            let (_, j) = self.es.streamed_vn(&self.em, a_w, 0);
+            let (r, _) = self.em.stationary_vn(0, a_w);
+            if j != r {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// One PE-step of work within an invocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkItem {
+    pub a_h: usize,
+    pub a_w: usize,
+    pub t: usize,
+    /// Stationary VN coordinates (r, c).
+    pub sta_r: usize,
+    pub sta_c: usize,
+    /// Streamed VN coordinates (m, j).
+    pub str_m: usize,
+    pub str_j: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn cfg44() -> ArchConfig {
+        ArchConfig::paper(4, 4)
+    }
+
+    /// §IV-E2 case study: AH×4 array, (r0, G_r, G_c) = (0, 2, 1),
+    /// (m0, s_m, T) = (0, 3, 3). Columns 0-1 are reduction group j=0,
+    /// columns 2-3 are j=1; within a group the two columns split the stream.
+    #[test]
+    fn streaming_case_study() {
+        let em = MappingCfg { r0: 0, c0: 0, g_r: 2, g_c: 1, s_r: 1, s_c: 0 };
+        let es =
+            StreamCfg { df: Dataflow::WoS, m0: 0, s_m: 3, t: 3, vn_size: 4 };
+        // j per column: 0,0,1,1.
+        for (a_w, expect_j) in [(0, 0), (1, 0), (2, 1), (3, 1)] {
+            let (_, j) = es.streamed_vn(&em, a_w, 0);
+            assert_eq!(j, expect_j, "col {a_w}");
+        }
+        // m over three steps: col0: 0,3,6 ; col1: 1,4,7 ; col2: 0,3,6 ; col3: 1,4,7.
+        let expect_m = [[0, 3, 6], [1, 4, 7], [0, 3, 6], [1, 4, 7]];
+        for a_w in 0..4 {
+            for t in 0..3 {
+                let (m, _) = es.streamed_vn(&em, a_w, t);
+                assert_eq!(m, expect_m[a_w][t], "col {a_w} step {t}");
+            }
+        }
+    }
+
+    /// Fig. 4 mapping case (1): replicate the same W_VNs across all columns.
+    #[test]
+    fn mapping_replicate_all_columns() {
+        let em = MappingCfg { r0: 0, c0: 0, g_r: 4, g_c: 1, s_r: 1, s_c: 0 };
+        for a_w in 0..4 {
+            for a_h in 0..4 {
+                assert_eq!(em.stationary_vn(a_h, a_w), (0, a_h));
+            }
+        }
+    }
+
+    /// Fig. 4 case (2): two replicated groups of two columns.
+    #[test]
+    fn mapping_two_groups() {
+        let em = MappingCfg { r0: 0, c0: 0, g_r: 2, g_c: 1, s_r: 1, s_c: 0 };
+        assert_eq!(em.stationary_vn(0, 0), (0, 0));
+        assert_eq!(em.stationary_vn(0, 1), (0, 0));
+        assert_eq!(em.stationary_vn(0, 2), (1, 0));
+        assert_eq!(em.stationary_vn(0, 3), (1, 0));
+    }
+
+    /// Fig. 4 case (3): each column a different W_VN column set.
+    #[test]
+    fn mapping_distinct_columns() {
+        let em = MappingCfg { r0: 0, c0: 0, g_r: 4, g_c: 4, s_r: 1, s_c: 4 };
+        for a_w in 0..4 {
+            for a_h in 0..4 {
+                assert_eq!(em.stationary_vn(a_h, a_w), (0, a_h + 4 * a_w));
+            }
+        }
+    }
+
+    #[test]
+    fn reduction_consistency_property() {
+        // j == r for row 0 of every column, for any legal θ.
+        forall("reduction-consistent", 300, |g| {
+            let cfg = cfg44();
+            let em = MappingCfg {
+                r0: g.usize(0, 10),
+                c0: g.usize(0, 10),
+                g_r: g.usize(1, 4),
+                g_c: g.usize(1, 4),
+                s_r: g.usize(0, 3),
+                s_c: g.usize(0, 3),
+            };
+            let es = StreamCfg {
+                df: Dataflow::WoS,
+                m0: g.usize(0, 5),
+                s_m: g.usize(1, 4),
+                t: g.usize(1, 6),
+                vn_size: g.usize(1, 4),
+            };
+            let inv = Invocation { em, es };
+            assert!(inv.reduction_consistent(&cfg));
+        });
+    }
+
+    #[test]
+    fn intra_column_reuse_constraint() {
+        // Constraint 2 (§III-C2 / §IV-B3): within a column, every PE row
+        // sees the same streamed VN — work items in one (a_w, t) share
+        // (str_m, str_j).
+        forall("intra-column-reuse", 100, |g| {
+            let cfg = cfg44();
+            let em = MappingCfg {
+                r0: g.usize(0, 4),
+                c0: g.usize(0, 4),
+                g_r: g.usize(1, 4),
+                g_c: g.usize(1, 4),
+                s_r: g.usize(0, 2),
+                s_c: g.usize(0, 2),
+            };
+            let es = StreamCfg {
+                df: Dataflow::WoS,
+                m0: 0,
+                s_m: g.usize(1, 3),
+                t: g.usize(1, 4),
+                vn_size: 4,
+            };
+            let inv = Invocation { em, es };
+            let items: Vec<_> = inv.work_items(&cfg).collect();
+            for w in &items {
+                let (m, j) = es.streamed_vn(&em, w.a_w, w.t);
+                assert_eq!((w.str_m, w.str_j), (m, j));
+            }
+            // 4 rows × 4 cols × T items.
+            assert_eq!(items.len(), 4 * 4 * es.t);
+        });
+    }
+
+    #[test]
+    fn small_vn_disables_rows() {
+        let cfg = cfg44();
+        let em = MappingCfg { r0: 0, c0: 0, g_r: 4, g_c: 1, s_r: 1, s_c: 0 };
+        let es = StreamCfg { df: Dataflow::WoS, m0: 0, s_m: 1, t: 2, vn_size: 2 };
+        let inv = Invocation { em, es };
+        let items: Vec<_> = inv.work_items(&cfg).collect();
+        // Only vn_size=2 rows active.
+        assert_eq!(items.len(), 2 * 4 * 2);
+        assert!(items.iter().all(|w| w.a_h < 2));
+    }
+
+    #[test]
+    fn validation_bounds() {
+        let cfg = cfg44();
+        let mut em = MappingCfg { r0: 0, c0: 0, g_r: 1, g_c: 1, s_r: 1, s_c: 1 };
+        assert!(em.validate(&cfg).is_ok());
+        em.g_r = 5;
+        assert!(em.validate(&cfg).is_err());
+        em.g_r = 1;
+        em.s_r = cfg.d(); // way over D/AH
+        assert!(em.validate(&cfg).is_err());
+
+        let mut es = StreamCfg { df: Dataflow::WoS, m0: 0, s_m: 1, t: 1, vn_size: 4 };
+        assert!(es.validate(&cfg).is_ok());
+        es.vn_size = 5;
+        assert!(es.validate(&cfg).is_err());
+        es.vn_size = 4;
+        es.t = 0;
+        assert!(es.validate(&cfg).is_err());
+    }
+
+    #[test]
+    fn dataflow_bits_roundtrip() {
+        assert_eq!(Dataflow::from_bit(Dataflow::WoS.bit()), Dataflow::WoS);
+        assert_eq!(Dataflow::from_bit(Dataflow::IoS.bit()), Dataflow::IoS);
+    }
+}

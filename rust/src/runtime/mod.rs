@@ -1,0 +1,351 @@
+//! PJRT runtime — loads AOT-compiled HLO-text artifacts (produced once by
+//! `python/compile/aot.py`) and executes them on the request path. Python
+//! never runs here; the binary is self-contained once `artifacts/` exists.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`, with tuple-return unwrapping.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+/// Artifact manifest entry (mirrors `aot.py`'s JSON).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// Argument shapes, row-major.
+    pub args: Vec<Vec<usize>>,
+}
+
+/// Parse `manifest.json` (minimal JSON parsing — offline build has no serde
+/// feature-complete stack; the format is fixed and machine-generated).
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactMeta>> {
+    let mut out = Vec::new();
+    // Entries look like: "name": { "args": [[64, 64], [64, 64]], "file": "name.hlo.txt", ... }
+    let mut rest = text;
+    while let Some(start) = rest.find('"') {
+        let after = &rest[start + 1..];
+        let Some(endq) = after.find('"') else { break };
+        let key = &after[..endq];
+        let after_key = &after[endq + 1..];
+        let Some(colon) = after_key.find(':') else { break };
+        let body = after_key[colon + 1..].trim_start();
+        if !body.starts_with('{') {
+            rest = &after_key[colon + 1..];
+            continue;
+        }
+        let Some(close) = body.find('}') else { break };
+        let obj = &body[..close + 1];
+        let file = extract_string(obj, "file").unwrap_or_else(|| format!("{key}.hlo.txt"));
+        let args = extract_args(obj).unwrap_or_default();
+        out.push(ArtifactMeta { name: key.to_string(), file, args });
+        rest = &body[close + 1..];
+    }
+    if out.is_empty() {
+        bail!("no artifacts parsed from manifest");
+    }
+    Ok(out)
+}
+
+fn extract_string(obj: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\"");
+    let i = obj.find(&pat)?;
+    let after = &obj[i + pat.len()..];
+    let q1 = after.find('"')? + 1;
+    let q2 = after[q1..].find('"')? + q1;
+    Some(after[q1..q2].to_string())
+}
+
+fn extract_args(obj: &str) -> Option<Vec<Vec<usize>>> {
+    let i = obj.find("\"args\"")?;
+    let after = &obj[i..];
+    let open = after.find('[')?;
+    // Find the matching close bracket of the outer array.
+    let mut depth = 0usize;
+    let mut end = open;
+    for (j, ch) in after[open..].char_indices() {
+        match ch {
+            '[' => depth += 1,
+            ']' => {
+                depth -= 1;
+                if depth == 0 {
+                    end = open + j;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let body = &after[open + 1..end];
+    let mut args = Vec::new();
+    let mut rest = body;
+    while let Some(s) = rest.find('[') {
+        let e = rest[s..].find(']')? + s;
+        let dims: Vec<usize> = rest[s + 1..e]
+            .split(',')
+            .filter_map(|t| t.trim().parse().ok())
+            .collect();
+        args.push(dims);
+        rest = &rest[e + 1..];
+    }
+    Some(args)
+}
+
+/// A compiled executable plus its metadata.
+struct LoadedExe {
+    exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+}
+
+/// The runtime: a PJRT CPU client with a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Vec<ArtifactMeta>,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedExe>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (default `artifacts/`).
+    pub fn open(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let mtext = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("{}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let manifest = parse_manifest(&mtext)?;
+        Ok(Self { client, dir: dir.to_path_buf(), manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts(&self) -> &[ArtifactMeta] {
+        &self.manifest
+    }
+
+    fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedExe>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .iter()
+            .find(|m| m.name == name)
+            .with_context(|| format!("unknown artifact '{name}'"))?
+            .clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+        let loaded = std::sync::Arc::new(LoadedExe { exe, meta });
+        self.cache.lock().unwrap().insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Execute an artifact on f32 row-major inputs. Returns the first tuple
+    /// element flattened row-major (all our artifacts return 1-tuples).
+    pub fn execute_f32(&self, name: &str, args: &[&[f32]]) -> Result<Vec<f32>> {
+        let loaded = self.load(name)?;
+        if args.len() != loaded.meta.args.len() {
+            bail!("{name}: expected {} args, got {}", loaded.meta.args.len(), args.len());
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (a, shape) in args.iter().zip(&loaded.meta.args) {
+            let expect: usize = shape.iter().product();
+            if a.len() != expect {
+                bail!("{name}: arg size {} != shape {:?}", a.len(), shape);
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(a).reshape(&dims)?);
+        }
+        let result = loaded.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Number of compiled executables resident.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Pick a *pure GEMM* artifact matching (m, k, n) exactly, if any.
+    /// Filters by the `gemm_` naming convention: other artifacts (attention,
+    /// relu layers) can share the two-matrix signature but compute different
+    /// functions.
+    pub fn find_gemm(&self, m: usize, k: usize, n: usize) -> Option<String> {
+        self.manifest
+            .iter()
+            .find(|a| {
+                a.name.starts_with("gemm_")
+                    && a.args.len() == 2
+                    && a.args[0] == vec![m, k]
+                    && a.args[1] == vec![k, n]
+            })
+            .map(|a| a.name.clone())
+    }
+}
+
+/// Tile a (possibly mismatched) GEMM onto fixed-shape artifact executions:
+/// pad blocks up to the tile shape, run, slice back. Shared by the worker
+/// thread below and single-threaded users.
+pub fn gemm_via_tiles(
+    rt: &Runtime,
+    m: usize,
+    k: usize,
+    n: usize,
+    iv: &[f32],
+    wv: &[f32],
+) -> Result<Vec<f32>> {
+    // Exact match first.
+    if let Some(name) = rt.find_gemm(m, k, n) {
+        return rt.execute_f32(&name, &[iv, wv]);
+    }
+    let tiles: Vec<(String, usize, usize, usize)> = rt
+        .artifacts()
+        .iter()
+        .filter(|a| a.name.starts_with("gemm_"))
+        .filter(|a| a.args.len() == 2 && a.args[0].len() == 2 && a.args[1].len() == 2)
+        .filter(|a| a.args[0][1] == a.args[1][0])
+        .map(|a| (a.name.clone(), a.args[0][0], a.args[0][1], a.args[1][1]))
+        .collect();
+    let tile = tiles
+        .iter()
+        .filter(|t| t.2 >= k)
+        .min_by_key(|t| (t.2, t.1, t.3))
+        .or_else(|| tiles.iter().max_by_key(|t| t.2))
+        .context("no GEMM artifacts available")?;
+    let (name, tm, tk, tn) = (tile.0.clone(), tile.1, tile.2, tile.3);
+    if tk < k {
+        bail!("no artifact covers K={k} (max {tk}); add a variant to aot.py");
+    }
+    let mut out = vec![0f32; m * n];
+    let mut xpad = vec![0f32; tm * tk];
+    let mut wpad = vec![0f32; tk * tn];
+    for m0 in (0..m).step_by(tm) {
+        let mh = tm.min(m - m0);
+        xpad.iter_mut().for_each(|v| *v = 0.0);
+        for r in 0..mh {
+            xpad[r * tk..r * tk + k].copy_from_slice(&iv[(m0 + r) * k..(m0 + r) * k + k]);
+        }
+        for n0 in (0..n).step_by(tn) {
+            let nh = tn.min(n - n0);
+            wpad.iter_mut().for_each(|v| *v = 0.0);
+            for r in 0..k {
+                wpad[r * tn..r * tn + nh].copy_from_slice(&wv[r * n + n0..r * n + n0 + nh]);
+            }
+            let o = rt.execute_f32(&name, &[&xpad, &wpad])?;
+            for r in 0..mh {
+                out[(m0 + r) * n + n0..(m0 + r) * n + n0 + nh]
+                    .copy_from_slice(&o[r * tn..r * tn + nh]);
+            }
+        }
+    }
+    Ok(out)
+}
+
+type Reply = std::sync::mpsc::Sender<Result<Vec<f32>>>;
+struct Job {
+    m: usize,
+    k: usize,
+    n: usize,
+    iv: Vec<f32>,
+    wv: Vec<f32>,
+    reply: Reply,
+}
+
+/// A `coordinator::serve::TileExecutor` backed by the PJRT runtime.
+///
+/// PJRT client handles are `!Send` (Rc + raw pointers inside the xla
+/// crate), so the runtime lives on a dedicated worker thread; `gemm` calls
+/// marshal over a channel. This also serializes device access, which the
+/// single CPU PJRT device requires anyway.
+pub struct PjrtExecutor {
+    tx: Mutex<std::sync::mpsc::Sender<Job>>,
+    platform: String,
+}
+
+impl PjrtExecutor {
+    /// Start the worker; fails fast if the artifact dir or PJRT is broken.
+    pub fn start(dir: &Path) -> Result<Self> {
+        let (tx, rx) = std::sync::mpsc::channel::<Job>();
+        let (boot_tx, boot_rx) = std::sync::mpsc::channel::<Result<String>>();
+        let dir = dir.to_path_buf();
+        std::thread::Builder::new()
+            .name("pjrt-worker".into())
+            .spawn(move || {
+                let rt = match Runtime::open(&dir) {
+                    Ok(rt) => {
+                        let _ = boot_tx.send(Ok(rt.platform()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    let r = gemm_via_tiles(&rt, job.m, job.k, job.n, &job.iv, &job.wv);
+                    let _ = job.reply.send(r);
+                }
+            })
+            .context("spawn pjrt worker")?;
+        let platform = boot_rx.recv().context("pjrt worker died")??;
+        Ok(Self { tx: Mutex::new(tx), platform })
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+}
+
+impl crate::coordinator::serve::TileExecutor for PjrtExecutor {
+    fn gemm(&self, m: usize, k: usize, n: usize, iv: &[f32], wv: &[f32]) -> Result<Vec<f32>> {
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Job { m, k, n, iv: iv.to_vec(), wv: wv.to_vec(), reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("pjrt worker gone"))?;
+        reply_rx.recv().context("pjrt worker dropped reply")?
+    }
+
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+  "chain_32x64x48x32": { "args": [[32, 64], [64, 48], [48, 32]], "dtype": "f32", "file": "chain_32x64x48x32.hlo.txt", "hlo_chars": 123 },
+  "gemm_64x64x64": { "args": [[64, 64], [64, 64]], "dtype": "f32", "file": "gemm_64x64x64.hlo.txt", "hlo_chars": 456 }
+}"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = parse_manifest(SAMPLE).unwrap();
+        assert_eq!(m.len(), 2);
+        let chain = &m[0];
+        assert_eq!(chain.name, "chain_32x64x48x32");
+        assert_eq!(chain.args, vec![vec![32, 64], vec![64, 48], vec![48, 32]]);
+        assert_eq!(m[1].file, "gemm_64x64x64.hlo.txt");
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(parse_manifest("{}").is_err());
+        assert!(parse_manifest("not json").is_err());
+    }
+
+    // PJRT-dependent tests live in rust/tests/runtime_integration.rs and
+    // are gated on artifacts/ existing.
+}

@@ -1,0 +1,95 @@
+//! Tiny benchmarking harness for the `harness = false` bench targets
+//! (offline substitute for criterion, DESIGN.md): warmup + N timed
+//! iterations, reporting min/median/mean.
+
+use std::time::Instant;
+
+/// Timing summary in nanoseconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub iters: usize,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl Timing {
+    pub fn report(&self, name: &str) {
+        println!(
+            "{name:<44} {:>12} min {:>12} median {:>12} mean  ({} iters)",
+            fmt_ns(self.min_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            self.iters
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Time `f`, returning (result of last call, timing). `iters >= 1`.
+pub fn time<R>(warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> (R, Timing) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    let mut last = None;
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        last = Some(std::hint::black_box(f()));
+        samples.push(t0.elapsed().as_secs_f64() * 1e9);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let t = Timing {
+        iters: samples.len(),
+        min_ns: samples[0],
+        median_ns: samples[samples.len() / 2],
+        mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+    };
+    (last.unwrap(), t)
+}
+
+/// Run-and-report convenience.
+pub fn bench<R>(name: &str, warmup: usize, iters: usize, f: impl FnMut() -> R) -> R {
+    let (r, t) = time(warmup, iters, f);
+    t.report(name);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_sane() {
+        let (v, t) = time(1, 5, || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert_eq!(v, (0..1000u64).map(|i| i * i).fold(0u64, u64::wrapping_add));
+        assert!(t.min_ns > 0.0);
+        assert!(t.min_ns <= t.median_ns);
+        assert_eq!(t.iters, 5);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.0e9), "3.00 s");
+    }
+}

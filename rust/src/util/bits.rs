@@ -1,0 +1,180 @@
+//! MSB-first bit packing used by the MINISA instruction encoder.
+//!
+//! Instructions are variable-width bit records (Table V widths range from
+//! ~38 to ~95 bits); `BitWriter`/`BitReader` pack them into byte streams the
+//! way the accelerator's instruction fetch unit would see them.
+
+/// Append-only MSB-first bit buffer.
+#[derive(Debug, Default, Clone)]
+pub struct BitWriter {
+    bytes: Vec<u8>,
+    /// Number of valid bits in the buffer.
+    len_bits: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `width` bits of `value`, MSB first. `width <= 64`.
+    /// Panics (debug) if `value` does not fit in `width` bits.
+    pub fn put(&mut self, value: u64, width: u32) {
+        debug_assert!(width <= 64);
+        debug_assert!(
+            width == 64 || value < (1u64 << width),
+            "value {value} does not fit in {width} bits"
+        );
+        for i in (0..width).rev() {
+            let bit = (value >> i) & 1;
+            let byte_idx = self.len_bits / 8;
+            let bit_idx = 7 - (self.len_bits % 8);
+            if byte_idx == self.bytes.len() {
+                self.bytes.push(0);
+            }
+            if bit == 1 {
+                self.bytes[byte_idx] |= 1 << bit_idx;
+            }
+            self.len_bits += 1;
+        }
+    }
+
+    pub fn len_bits(&self) -> usize {
+        self.len_bits
+    }
+
+    /// Length in whole bytes (final partial byte zero-padded).
+    pub fn len_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+}
+
+/// MSB-first bit cursor over a byte slice.
+#[derive(Debug, Clone)]
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos_bits: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos_bits: 0 }
+    }
+
+    /// Read `width` bits MSB-first. Returns `None` past end of buffer.
+    pub fn get(&mut self, width: u32) -> Option<u64> {
+        debug_assert!(width <= 64);
+        if self.pos_bits + width as usize > self.bytes.len() * 8 {
+            return None;
+        }
+        let mut v = 0u64;
+        for _ in 0..width {
+            let byte_idx = self.pos_bits / 8;
+            let bit_idx = 7 - (self.pos_bits % 8);
+            let bit = (self.bytes[byte_idx] >> bit_idx) & 1;
+            v = (v << 1) | bit as u64;
+            self.pos_bits += 1;
+        }
+        Some(v)
+    }
+
+    pub fn pos_bits(&self) -> usize {
+        self.pos_bits
+    }
+
+    pub fn remaining_bits(&self) -> usize {
+        self.bytes.len() * 8 - self.pos_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Lcg;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut w = BitWriter::new();
+        w.put(0b101, 3);
+        w.put(0xAB, 8);
+        w.put(1, 1);
+        assert_eq!(w.len_bits(), 12);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(3), Some(0b101));
+        assert_eq!(r.get(8), Some(0xAB));
+        assert_eq!(r.get(1), Some(1));
+    }
+
+    #[test]
+    fn zero_width_is_noop() {
+        let mut w = BitWriter::new();
+        w.put(0, 0);
+        assert_eq!(w.len_bits(), 0);
+        w.put(3, 2);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(0), Some(0));
+        assert_eq!(r.get(2), Some(3));
+    }
+
+    #[test]
+    fn read_past_end_returns_none() {
+        let mut w = BitWriter::new();
+        w.put(0xF, 4);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(4), Some(0xF));
+        // Remaining 4 zero-pad bits of the byte are readable...
+        assert_eq!(r.get(4), Some(0));
+        // ...but beyond the buffer is not.
+        assert_eq!(r.get(1), None);
+    }
+
+    #[test]
+    fn roundtrip_randomized_records() {
+        // Property: any sequence of (value, width) fields round-trips.
+        let mut rng = Lcg::new(0xBEEF);
+        for _ in 0..200 {
+            let n = rng.range(1, 24);
+            let fields: Vec<(u64, u32)> = (0..n)
+                .map(|_| {
+                    let width = rng.range(1, 48) as u32;
+                    let value = rng.next_u64() & ((1u64 << width) - 1);
+                    (value, width)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, wd) in &fields {
+                w.put(v, wd);
+            }
+            let total: usize = fields.iter().map(|&(_, wd)| wd as usize).sum();
+            assert_eq!(w.len_bits(), total);
+            let bytes = w.into_bytes();
+            assert_eq!(bytes.len(), total.div_ceil(8));
+            let mut r = BitReader::new(&bytes);
+            for &(v, wd) in &fields {
+                assert_eq!(r.get(wd), Some(v));
+            }
+        }
+    }
+
+    #[test]
+    fn full_64bit_values() {
+        let mut w = BitWriter::new();
+        w.put(u64::MAX, 64);
+        w.put(u64::MAX >> 1, 63);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(64), Some(u64::MAX));
+        assert_eq!(r.get(63), Some(u64::MAX >> 1));
+    }
+}

@@ -1,0 +1,88 @@
+//! Small self-contained utilities: deterministic RNG, statistics helpers,
+//! bit-packing, and a miniature property-testing harness.
+//!
+//! The build environment is fully offline (only the `xla` crate's vendored
+//! dependency set is available), so `rand`, `proptest` and `criterion` are
+//! replaced by the deterministic equivalents in this module. DESIGN.md
+//! documents the substitution.
+
+pub mod bench;
+pub mod bits;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use bits::{BitReader, BitWriter};
+pub use prop::Gen;
+pub use rng::Lcg;
+pub use stats::{geomean, mean, median, percentile};
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0, "ceil_div by zero");
+    a.div_ceil(b)
+}
+
+/// `ceil(log2(x))` for x >= 1; number of bits needed to represent values in
+/// `[0, x)`. `clog2(1) == 0`.
+#[inline]
+pub fn clog2(x: usize) -> u32 {
+    debug_assert!(x >= 1, "clog2 of zero");
+    usize::BITS - (x - 1).leading_zeros()
+}
+
+/// Round `x` up to the next multiple of `m`.
+#[inline]
+pub fn round_up(x: usize, m: usize) -> usize {
+    ceil_div(x, m) * m
+}
+
+/// `true` iff `x` is a power of two (and nonzero).
+#[inline]
+pub fn is_pow2(x: usize) -> bool {
+    x != 0 && x & (x - 1) == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(65536, 16), 4096);
+    }
+
+    #[test]
+    fn clog2_matches_definition() {
+        assert_eq!(clog2(1), 0);
+        assert_eq!(clog2(2), 1);
+        assert_eq!(clog2(3), 2);
+        assert_eq!(clog2(4), 2);
+        assert_eq!(clog2(5), 3);
+        assert_eq!(clog2(256), 8);
+        assert_eq!(clog2(257), 9);
+    }
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn is_pow2_basic() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(2));
+        assert!(is_pow2(1024));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(3));
+        assert!(!is_pow2(255));
+    }
+}

@@ -1,0 +1,136 @@
+//! Deterministic 64-bit LCG + xorshift mix. Replaces `rand` in this offline
+//! build; quality is more than sufficient for synthetic-operand generation
+//! and property-test case generation.
+
+/// Deterministic pseudo-random generator (splitmix64-style).
+#[derive(Debug, Clone)]
+pub struct Lcg {
+    state: u64,
+}
+
+impl Lcg {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero fixed point.
+        Self { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    /// Next raw 64-bit value (splitmix64 output function).
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`; `n` must be nonzero.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Signed int8-ranged value, the element type used by FEATHER+ operands.
+    pub fn i8val(&mut self) -> i8 {
+        (self.next_u64() & 0xFF) as u8 as i8
+    }
+
+    /// Fill a matrix (row-major `rows * cols`) with small signed values.
+    pub fn i8_matrix(&mut self, rows: usize, cols: usize) -> Vec<i8> {
+        (0..rows * cols).map(|_| self.i8val()).collect()
+    }
+
+    /// f32 in [-1, 1).
+    pub fn f32val(&mut self) -> f32 {
+        (self.f64() * 2.0 - 1.0) as f32
+    }
+
+    pub fn f32_matrix(&mut self, rows: usize, cols: usize) -> Vec<f32> {
+        (0..rows * cols).map(|_| self.f32val()).collect()
+    }
+
+    /// Random boolean.
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Pick a random element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Lcg::new(7);
+        let mut b = Lcg::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Lcg::new(1);
+        let mut b = Lcg::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Lcg::new(42);
+        for _ in 0..1000 {
+            let v = r.below(17);
+            assert!(v < 17);
+        }
+    }
+
+    #[test]
+    fn range_inclusive() {
+        let mut r = Lcg::new(42);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..2000 {
+            let v = r.range(3, 6);
+            assert!((3..=6).contains(&v));
+            seen_lo |= v == 3;
+            seen_hi |= v == 6;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Lcg::new(9);
+        for _ in 0..1000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn matrix_shapes() {
+        let mut r = Lcg::new(3);
+        assert_eq!(r.i8_matrix(4, 5).len(), 20);
+        assert_eq!(r.f32_matrix(2, 3).len(), 6);
+    }
+}

@@ -1,0 +1,198 @@
+//! Convolution support via im2col (paper Fig. 1): a convolution
+//! `O[P,Q,C_out] = Conv(I[H,W,C_in], K[R,S,C_in,C_out])` is rewritten as a
+//! GEMM `O[(P·Q) × C_out] = I_col[(P·Q) × (R·S·C_in)] · K_col[(R·S·C_in) × C_out]`,
+//! which the FEATHER+ mapper then schedules like any other workload
+//! (the artifact's "(mapping, layout) co-search for GEMM/conv" entry).
+
+use super::Gemm;
+
+/// A 2-D convolution layer (NHWC, valid padding unless `pad` set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2d {
+    pub h: usize,
+    pub w: usize,
+    pub c_in: usize,
+    pub r: usize,
+    pub s: usize,
+    pub c_out: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Conv2d {
+    pub fn new(h: usize, w: usize, c_in: usize, r: usize, s: usize, c_out: usize) -> Self {
+        Self { h, w, c_in, r, s, c_out, stride: 1, pad: 0 }
+    }
+
+    pub fn with_stride(mut self, stride: usize) -> Self {
+        self.stride = stride;
+        self
+    }
+
+    pub fn with_pad(mut self, pad: usize) -> Self {
+        self.pad = pad;
+        self
+    }
+
+    /// Output spatial extents.
+    pub fn out_hw(&self) -> (usize, usize) {
+        let oh = (self.h + 2 * self.pad - self.r) / self.stride + 1;
+        let ow = (self.w + 2 * self.pad - self.s) / self.stride + 1;
+        (oh, ow)
+    }
+
+    /// The equivalent GEMM shape (extended-einsum of Fig. 1):
+    /// `M = P·Q`, `K = R·S·C_in`, `N = C_out`.
+    pub fn as_gemm(&self, name: &str) -> Gemm {
+        let (oh, ow) = self.out_hw();
+        Gemm::new(name, "Conv-im2col", oh * ow, self.r * self.s * self.c_in, self.c_out)
+    }
+
+    /// im2col expansion of an input tensor (row-major H×W×C_in) into the
+    /// `M × K` GEMM operand. Out-of-image taps are zero (padding).
+    pub fn im2col(&self, input: &[i32]) -> Vec<i32> {
+        assert_eq!(input.len(), self.h * self.w * self.c_in, "input shape");
+        let (oh, ow) = self.out_hw();
+        let k = self.r * self.s * self.c_in;
+        let mut out = vec![0i32; oh * ow * k];
+        for op in 0..oh {
+            for oq in 0..ow {
+                let row = op * ow + oq;
+                for kr in 0..self.r {
+                    for ks in 0..self.s {
+                        let ih = (op * self.stride + kr) as isize - self.pad as isize;
+                        let iw = (oq * self.stride + ks) as isize - self.pad as isize;
+                        if ih < 0 || iw < 0 || ih >= self.h as isize || iw >= self.w as isize {
+                            continue; // zero pad
+                        }
+                        let src = ((ih as usize) * self.w + iw as usize) * self.c_in;
+                        let dst = row * k + (kr * self.s + ks) * self.c_in;
+                        out[dst..dst + self.c_in]
+                            .copy_from_slice(&input[src..src + self.c_in]);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Reshape a kernel tensor (row-major R×S×C_in×C_out) to the `K × N`
+    /// GEMM operand — already contiguous in that order, so this is a copy
+    /// with a shape check.
+    pub fn kernel_matrix(&self, kernel: &[i32]) -> Vec<i32> {
+        assert_eq!(kernel.len(), self.r * self.s * self.c_in * self.c_out, "kernel shape");
+        kernel.to_vec()
+    }
+
+    /// Direct (reference) convolution for validation.
+    pub fn direct(&self, input: &[i32], kernel: &[i32]) -> Vec<i64> {
+        let (oh, ow) = self.out_hw();
+        let mut out = vec![0i64; oh * ow * self.c_out];
+        for op in 0..oh {
+            for oq in 0..ow {
+                for co in 0..self.c_out {
+                    let mut acc = 0i64;
+                    for kr in 0..self.r {
+                        for ks in 0..self.s {
+                            let ih = (op * self.stride + kr) as isize - self.pad as isize;
+                            let iw = (oq * self.stride + ks) as isize - self.pad as isize;
+                            if ih < 0 || iw < 0 || ih >= self.h as isize || iw >= self.w as isize
+                            {
+                                continue;
+                            }
+                            for ci in 0..self.c_in {
+                                let iv =
+                                    input[((ih as usize) * self.w + iw as usize) * self.c_in + ci];
+                                let kv = kernel
+                                    [((kr * self.s + ks) * self.c_in + ci) * self.c_out + co];
+                                acc += iv as i64 * kv as i64;
+                            }
+                        }
+                    }
+                    out[(op * ow + oq) * self.c_out + co] = acc;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functional::naive_gemm;
+    use crate::util::prop::forall;
+    use crate::util::Lcg;
+
+    #[test]
+    fn shapes_match_fig1() {
+        let c = Conv2d::new(8, 8, 3, 3, 3, 16);
+        assert_eq!(c.out_hw(), (6, 6));
+        let g = c.as_gemm("conv");
+        assert_eq!((g.m, g.k, g.n), (36, 27, 16));
+    }
+
+    #[test]
+    fn im2col_gemm_equals_direct_conv() {
+        let c = Conv2d::new(6, 5, 2, 3, 2, 4);
+        let mut rng = Lcg::new(1);
+        let input: Vec<i32> = (0..c.h * c.w * c.c_in).map(|_| rng.range(0, 9) as i32 - 4).collect();
+        let kernel: Vec<i32> =
+            (0..c.r * c.s * c.c_in * c.c_out).map(|_| rng.range(0, 9) as i32 - 4).collect();
+        let g = c.as_gemm("t");
+        let icol = c.im2col(&input);
+        let kmat = c.kernel_matrix(&kernel);
+        let via_gemm = naive_gemm(&icol, &kmat, g.m, g.k, g.n);
+        assert_eq!(via_gemm, c.direct(&input, &kernel));
+    }
+
+    #[test]
+    fn padding_and_stride_variants() {
+        forall("conv-im2col-equiv", 30, |gen| {
+            let c = Conv2d::new(
+                gen.usize(3, 8),
+                gen.usize(3, 8),
+                gen.usize(1, 3),
+                gen.usize(1, 3),
+                gen.usize(1, 3),
+                gen.usize(1, 4),
+            )
+            .with_stride(gen.usize(1, 2))
+            .with_pad(gen.usize(0, 1));
+            if c.h + 2 * c.pad < c.r || c.w + 2 * c.pad < c.s {
+                return;
+            }
+            let mut rng = Lcg::new(7);
+            let input: Vec<i32> =
+                (0..c.h * c.w * c.c_in).map(|_| rng.range(0, 5) as i32 - 2).collect();
+            let kernel: Vec<i32> =
+                (0..c.r * c.s * c.c_in * c.c_out).map(|_| rng.range(0, 5) as i32 - 2).collect();
+            let g = c.as_gemm("p");
+            let got = naive_gemm(&c.im2col(&input), &c.kernel_matrix(&kernel), g.m, g.k, g.n);
+            assert_eq!(got, c.direct(&input, &kernel));
+        });
+    }
+
+    #[test]
+    fn conv_through_full_mapper_stack() {
+        // conv → im2col GEMM → mapper → MINISA trace → functional sim.
+        let c = Conv2d::new(6, 6, 2, 3, 3, 4);
+        let g = c.as_gemm("conv_e2e");
+        let cfg = crate::arch::ArchConfig::paper(4, 4);
+        let opts = crate::mapper::search::MapperOptions {
+            full_layout_search: false,
+            ..Default::default()
+        };
+        let d = crate::mapper::search::search(&cfg, &g, &opts).unwrap();
+        let prog =
+            crate::mapper::lower_gemm(&cfg, &g, &d.choice, d.i_order, d.w_order, d.o_order);
+        let mut rng = Lcg::new(3);
+        let input: Vec<i32> = (0..c.h * c.w * c.c_in).map(|_| rng.range(0, 7) as i32 - 3).collect();
+        let kernel: Vec<i32> =
+            (0..c.r * c.s * c.c_in * c.c_out).map(|_| rng.range(0, 7) as i32 - 3).collect();
+        let icol = c.im2col(&input);
+        let kmat = c.kernel_matrix(&kernel);
+        let sim = crate::mapper::exec::execute_program(&cfg, &g, &prog, &icol, &kmat).unwrap();
+        assert_eq!(sim, c.direct(&input, &kernel));
+    }
+}

@@ -1,0 +1,164 @@
+//! PJRT runtime integration: loads the AOT artifacts produced by
+//! `make artifacts` and cross-checks them against the functional simulator
+//! and naive references. Skips (with a loud message) when artifacts are
+//! missing, so `cargo test` works pre-`make artifacts`.
+
+use std::path::Path;
+
+use minisa::arch::ArchConfig;
+use minisa::coordinator::serve::TileExecutor;
+use minisa::runtime::{gemm_via_tiles, PjrtExecutor, Runtime};
+use minisa::util::Lcg;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` for runtime tests");
+        None
+    }
+}
+
+fn naive(m: usize, k: usize, n: usize, iv: &[f32], wv: &[f32]) -> Vec<f32> {
+    let mut o = vec![0f32; m * n];
+    for mi in 0..m {
+        for ki in 0..k {
+            for ni in 0..n {
+                o[mi * n + ni] += iv[mi * k + ki] * wv[ki * n + ni];
+            }
+        }
+    }
+    o
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= tol * (1.0 + y.abs()), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+#[test]
+fn artifacts_all_load_and_execute() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::open(dir).expect("runtime");
+    assert!(rt.artifacts().len() >= 6, "expected all aot.py artifacts");
+    let mut rng = Lcg::new(3);
+    for meta in rt.artifacts().to_vec() {
+        let args: Vec<Vec<f32>> = meta
+            .args
+            .iter()
+            .map(|s| rng.f32_matrix(s[0], s[1]))
+            .collect();
+        let refs: Vec<&[f32]> = args.iter().map(|a| a.as_slice()).collect();
+        let out = rt.execute_f32(&meta.name, &refs).unwrap_or_else(|e| {
+            panic!("{}: {e:#}", meta.name);
+        });
+        assert!(!out.is_empty(), "{}", meta.name);
+        assert!(out.iter().all(|v| v.is_finite()), "{}: non-finite", meta.name);
+    }
+}
+
+#[test]
+fn gemm_artifact_matches_naive_exactly_for_ints() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::open(dir).expect("runtime");
+    let mut rng = Lcg::new(7);
+    // Integer-valued f32 operands → Pallas/XLA result must be bit-exact.
+    let iv: Vec<f32> = (0..64 * 64).map(|_| (rng.range(0, 15) as i32 - 7) as f32).collect();
+    let wv: Vec<f32> = (0..64 * 64).map(|_| (rng.range(0, 15) as i32 - 7) as f32).collect();
+    let out = rt.execute_f32("gemm_64x64x64", &[&iv, &wv]).unwrap();
+    let expect = naive(64, 64, 64, &iv, &wv);
+    assert_eq!(out, expect);
+}
+
+#[test]
+fn irregular_tile_artifact_matches() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::open(dir).expect("runtime");
+    let mut rng = Lcg::new(8);
+    let iv = rng.f32_matrix(64, 40);
+    let wv = rng.f32_matrix(40, 88);
+    let out = rt.execute_f32("gemm_64x40x88", &[&iv, &wv]).unwrap();
+    assert_close(&out, &naive(64, 40, 88, &iv, &wv), 1e-4, "gemm_64x40x88");
+}
+
+#[test]
+fn tiled_execution_covers_mismatched_shapes() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::open(dir).expect("runtime");
+    let mut rng = Lcg::new(9);
+    // 100×50×70 has no exact artifact → the tiler must pad and slice.
+    let (m, k, n) = (100usize, 50usize, 70usize);
+    let iv = rng.f32_matrix(m, k);
+    let wv = rng.f32_matrix(k, n);
+    let out = gemm_via_tiles(&rt, m, k, n, &iv, &wv).unwrap();
+    assert_close(&out, &naive(m, k, n, &iv, &wv), 1e-4, "tiled 100x50x70");
+}
+
+#[test]
+fn chain_artifact_matches_two_layer_reference() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::open(dir).expect("runtime");
+    let mut rng = Lcg::new(10);
+    let x = rng.f32_matrix(32, 64);
+    let w1 = rng.f32_matrix(64, 48);
+    let w2 = rng.f32_matrix(48, 32);
+    let out = rt.execute_f32("chain_32x64x48x32", &[&x, &w1, &w2]).unwrap();
+    // Reference: layer2(relu(layer1(x))).
+    let h: Vec<f32> = naive(32, 64, 48, &x, &w1).iter().map(|v| v.max(0.0)).collect();
+    let expect = naive(32, 48, 32, &h, &w2);
+    assert_close(&out, &expect, 1e-4, "chain");
+}
+
+#[test]
+fn pjrt_executor_thread_isolated() {
+    let Some(dir) = artifacts() else { return };
+    let exe = PjrtExecutor::start(dir).expect("executor");
+    assert_eq!(exe.platform(), "cpu");
+    let mut rng = Lcg::new(11);
+    let iv = rng.f32_matrix(64, 64);
+    let wv = rng.f32_matrix(64, 64);
+    let out = exe.gemm(64, 64, 64, &iv, &wv).unwrap();
+    assert_close(&out, &naive(64, 64, 64, &iv, &wv), 1e-4, "executor");
+    // Callable from several threads concurrently.
+    std::thread::scope(|s| {
+        for t in 0..4 {
+            let exe = &exe;
+            s.spawn(move || {
+                let mut rng = Lcg::new(100 + t);
+                let iv = rng.f32_matrix(64, 64);
+                let wv = rng.f32_matrix(64, 64);
+                let out = exe.gemm(64, 64, 64, &iv, &wv).unwrap();
+                assert_close(&out, &naive(64, 64, 64, &iv, &wv), 1e-4, "mt");
+            });
+        }
+    });
+}
+
+#[test]
+fn functional_sim_matches_pjrt_oracle() {
+    // The headline cross-layer check: mapper-lowered MINISA trace executed
+    // in the functional simulator == the JAX/Pallas HLO oracle on PJRT.
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::open(dir).expect("runtime");
+    let cfg = ArchConfig::paper(4, 4);
+    let g = minisa::workloads::Gemm::new("xcheck", "t", 64, 40, 88);
+    let opts = minisa::mapper::search::MapperOptions {
+        full_layout_search: false,
+        ..Default::default()
+    };
+    let d = minisa::mapper::search::search(&cfg, &g, &opts).unwrap();
+    let prog = minisa::mapper::lower_gemm(&cfg, &g, &d.choice, d.i_order, d.w_order, d.o_order);
+    let mut rng = Lcg::new(12);
+    let iv: Vec<i32> = (0..g.m * g.k).map(|_| rng.range(0, 9) as i32 - 4).collect();
+    let wv: Vec<i32> = (0..g.k * g.n).map(|_| rng.range(0, 9) as i32 - 4).collect();
+    let sim = minisa::mapper::exec::execute_program(&cfg, &g, &prog, &iv, &wv).unwrap();
+    let xf: Vec<f32> = iv.iter().map(|&v| v as f32).collect();
+    let wf: Vec<f32> = wv.iter().map(|&v| v as f32).collect();
+    let oracle = gemm_via_tiles(&rt, g.m, g.k, g.n, &xf, &wf).unwrap();
+    for (i, (s, o)) in sim.iter().zip(&oracle).enumerate() {
+        assert_eq!(*s as f32, *o, "element {i}");
+    }
+}
