@@ -1,28 +1,34 @@
 //! Hot-path micro/macro timings for the §Perf optimization pass:
 //!
 //! * mapper candidate scoring (the evaluate inner loop),
-//! * full single-shape mapper search,
+//! * full single-shape mapper search — **before** (seed serial phase-2
+//!   layout refinement) and **after** (parallel bounded refinement),
 //! * trace lowering,
-//! * functional simulation throughput (MACs/s),
+//! * functional simulation throughput (MACs/s) — **before** (reference
+//!   per-wave interpreter) and **after** (compiled `WavePlan` execution),
 //! * 5-engine pipeline simulation,
 //! * ISA encode throughput.
 //!
-//! Run before/after optimization; EXPERIMENTS.md §Perf records the deltas.
+//! EXPERIMENTS.md §Perf records the deltas; this binary also emits the
+//! machine-readable `BENCH_hotpath.json` (run from `rust/`:
+//! `cargo bench --bench hotpath`) so the perf trajectory is tracked
+//! across PRs.
 
 use minisa::arch::ArchConfig;
 use minisa::functional::FunctionalSim;
 use minisa::isa::encode::Codec;
 use minisa::isa::inst::Inst;
-use minisa::mapper::exec::execute_program;
+use minisa::mapper::exec::{execute_program, execute_program_on};
 use minisa::mapper::lower_gemm;
 use minisa::mapper::search::{candidates, estimate, search, MapperOptions};
 use minisa::mapping::{Dataflow, MappingCfg, StreamCfg};
 use minisa::perf::{simulate, TilePlan};
-use minisa::util::bench::bench;
+use minisa::util::bench::{time, BenchLog};
 use minisa::util::Lcg;
 use minisa::workloads::Gemm;
 
 fn main() {
+    let mut log = BenchLog::new();
     let opts = MapperOptions::default();
 
     // --- Mapper scoring (per-candidate cost) ---
@@ -30,15 +36,29 @@ fn main() {
     let g = Gemm::new("gpt", "GPT-oss", 2048, 2880, 5120);
     let cands = candidates(&cfg, &g, &opts);
     println!("candidates for {g} @ {}: {}", cfg.name(), cands.len());
-    bench("mapper/score one candidate (16x256)", 10, 2000, || {
+    log.bench("mapper/score one candidate (16x256)", 10, 2000, || {
         estimate(&cfg, &g, &cands[cands.len() / 2], 4, 0, true)
     });
 
-    // --- Full search ---
-    bench("mapper/full search gpt@16x256", 1, 5, || search(&cfg, &g, &opts).unwrap());
+    // --- Full search: seed-equivalent serial phase-2 vs parallel bounded ---
+    // Baseline isolates the phase-2 change: seed phase-1 already ran at the
+    // default thread count, so only `refine_serial` differs from `opts`.
+    let serial_opts = MapperOptions { refine_serial: true, ..Default::default() };
+    let (_, t_before) = log.bench("mapper/full search gpt@16x256 (serial phase2)", 1, 5, || {
+        search(&cfg, &g, &serial_opts).unwrap()
+    });
+    let (_, t_after) = log.bench("mapper/full search gpt@16x256", 1, 5, || {
+        search(&cfg, &g, &opts).unwrap()
+    });
+    let search_speedup = t_before.median_ns / t_after.median_ns;
+    println!("  mapper search speedup (serial → parallel phase-2): {search_speedup:.2}x");
+    log.metric("mapper_search_gpt_16x256_before_median_ms", t_before.median_ns / 1e6);
+    log.metric("mapper_search_gpt_16x256_after_median_ms", t_after.median_ns / 1e6);
+    log.metric("mapper_search_gpt_16x256_speedup", search_speedup);
+
     let small_cfg = ArchConfig::paper(4, 16);
     let small_g = Gemm::new("bconv", "FHE", 65536, 40, 88);
-    bench("mapper/full search bconv@4x16", 1, 5, || {
+    log.bench("mapper/full search bconv@4x16", 1, 5, || {
         search(&small_cfg, &small_g, &opts).unwrap()
     });
 
@@ -46,25 +66,38 @@ fn main() {
     let cfg44 = ArchConfig::paper(4, 4);
     let gl = Gemm::new("low", "t", 256, 40, 88);
     let d = search(&cfg44, &gl, &opts).unwrap();
-    let prog = bench("lower/256x40x88@4x4", 2, 50, || {
+    let (prog, _) = log.bench("lower/256x40x88@4x4", 2, 50, || {
         lower_gemm(&cfg44, &gl, &d.choice, d.i_order, d.w_order, d.o_order)
     });
     println!("  trace: {} insts, {} invocations", prog.trace.len(), prog.invocations);
 
-    // --- Functional simulation throughput ---
+    // --- Functional simulation throughput: reference vs compiled plans ---
     let mut rng = Lcg::new(5);
     let iv: Vec<i32> = (0..gl.m * gl.k).map(|_| rng.range(0, 15) as i32 - 7).collect();
     let wv: Vec<i32> = (0..gl.k * gl.n).map(|_| rng.range(0, 15) as i32 - 7).collect();
-    let (out, t) = minisa::util::bench::time(1, 10, || {
-        execute_program(&cfg44, &gl, &prog, &iv, &wv).unwrap()
-    });
-    t.report("funcsim/256x40x88@4x4");
     let macs = gl.macs() as f64;
+    let (ref_out, t_ref) = time(1, 10, || {
+        let mut sim = FunctionalSim::new(&cfg44);
+        sim.use_plans = false;
+        execute_program_on(&mut sim, &gl, &prog, &iv, &wv).unwrap()
+    });
+    t_ref.report("funcsim/256x40x88@4x4 (reference)");
+    log.record("funcsim/256x40x88@4x4 (reference)", t_ref);
+    let (out, t_plan) = time(1, 10, || execute_program(&cfg44, &gl, &prog, &iv, &wv).unwrap());
+    t_plan.report("funcsim/256x40x88@4x4 (wave plans)");
+    log.record("funcsim/256x40x88@4x4 (wave plans)", t_plan);
+    assert_eq!(ref_out, out, "plan path must be bit-identical");
+    let rate_before = macs / (t_ref.median_ns / 1e9) / 1e6;
+    let rate_after = macs / (t_plan.median_ns / 1e9) / 1e6;
     println!(
-        "  functional sim rate: {:.1} MMAC/s ({} outputs)",
-        macs / (t.median_ns / 1e9) / 1e6,
+        "  functional sim rate: {rate_before:.1} → {rate_after:.1} MMAC/s \
+         ({:.2}x, {} outputs)",
+        rate_after / rate_before,
         out.len()
     );
+    log.metric("funcsim_mmacs_per_s_before", rate_before);
+    log.metric("funcsim_mmacs_per_s_after", rate_after);
+    log.metric("funcsim_speedup", t_ref.median_ns / t_plan.median_ns);
 
     // --- Pipeline model ---
     let plans: Vec<TilePlan> = (0..100_000)
@@ -76,7 +109,7 @@ fn main() {
             ..Default::default()
         })
         .collect();
-    bench("perf/pipeline sim 100k tiles", 2, 30, || simulate(&cfg, &plans));
+    log.bench("perf/pipeline sim 100k tiles", 2, 30, || simulate(&cfg, &plans));
 
     // --- ISA encode throughput ---
     let codec = Codec::new(&cfg);
@@ -102,8 +135,9 @@ fn main() {
             }
         })
         .collect();
-    let (bytes, t) = minisa::util::bench::time(5, 200, || codec.encode_all(&insts).unwrap());
-    t.report("isa/encode 1000 instructions");
+    let (bytes, t) = log.bench("isa/encode 1000 instructions", 5, 200, || {
+        codec.encode_all(&insts).unwrap()
+    });
     println!(
         "  encode rate: {:.1} Minst/s ({} bytes)",
         1000.0 / (t.median_ns / 1e9) / 1e6,
@@ -114,7 +148,7 @@ fn main() {
     let mut sim = FunctionalSim::new(&cfg44);
     let a = sim.hbm_alloc(1024);
     sim.hbm_write(a, &vec![1i32; 1024]);
-    bench("funcsim/load 256 rows", 5, 500, || {
+    log.bench("funcsim/load 256 rows", 5, 500, || {
         sim.exec(&Inst::Load {
             target: minisa::isa::inst::BufTarget::Streaming,
             hbm_addr: a,
@@ -122,4 +156,9 @@ fn main() {
         })
         .unwrap()
     });
+
+    match log.write_json("BENCH_hotpath.json") {
+        Ok(()) => println!("\nwrote BENCH_hotpath.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_hotpath.json: {e}"),
+    }
 }

@@ -81,6 +81,14 @@ impl<T: Copy + Default> DataBuffer<T> {
     pub fn rows(&self) -> impl Iterator<Item = &[T]> {
         self.data.chunks(self.width)
     }
+
+    /// Raw row-major backing words — the compiled-plan interpreter indexes
+    /// precomputed word offsets directly instead of going through
+    /// `addr()`-based VN reads (§Perf).
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
 }
 
 /// Multi-bank accumulator output buffer. Banks correspond to columns; each

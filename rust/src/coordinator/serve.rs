@@ -12,7 +12,7 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use crate::arch::config::ArchConfig;
 use crate::mapper::search::{search, MapperOptions};
@@ -111,13 +111,26 @@ impl ServeStats {
     }
 }
 
+/// Per-shape cache slot. `done` is the published decision (lock-free reads
+/// once set); `build` is the in-flight guard that makes concurrent misses
+/// on one shape run the mapper exactly once.
+#[derive(Default)]
+struct ShapeSlot {
+    done: OnceLock<Option<Decision>>,
+    build: Mutex<()>,
+}
+
 /// The serving coordinator (leader). Owns the mapper cache and the batcher.
 pub struct Server {
     cfg: ArchConfig,
     executor: Arc<dyn TileExecutor>,
     opts: MapperOptions,
-    /// Shape → mapping decision cache (routing table).
-    cache: Mutex<HashMap<(usize, usize, usize), Decision>>,
+    /// Shape → mapping decision routing table. `RwLock` so concurrent hits
+    /// on *different* shapes share a read lock (the seed's `Mutex<HashMap>`
+    /// serialized every lookup); per-shape `ShapeSlot`s de-duplicate
+    /// concurrent mapper runs. Infeasible shapes cache `None` so repeat
+    /// requests don't re-run a search that cannot succeed.
+    cache: RwLock<HashMap<(usize, usize, usize), Arc<ShapeSlot>>>,
     pub stats: Mutex<ServeStats>,
     /// Max requests batched per dispatch.
     pub max_batch: usize,
@@ -129,27 +142,49 @@ impl Server {
             cfg: cfg.clone(),
             executor,
             opts: MapperOptions { full_layout_search: false, threads: 1, ..Default::default() },
-            cache: Mutex::new(HashMap::new()),
+            cache: RwLock::new(HashMap::new()),
             stats: Mutex::new(ServeStats::default()),
             max_batch: 8,
         }
     }
 
-    /// Route a shape through the mapper (cached).
+    /// Route a shape through the mapper (cached). Hot path: one shared
+    /// cache read lock plus a lock-free `OnceLock` read and a single
+    /// `Decision` clone (the seed took the exclusive cache mutex twice and
+    /// cloned twice on a miss). The stats counter still takes the global
+    /// stats mutex — held for one increment; fold it into atomics if it
+    /// ever shows up in a profile.
     pub fn route(&self, m: usize, k: usize, n: usize) -> Option<Decision> {
         let key = (m, k, n);
-        {
-            let cache = self.cache.lock().unwrap();
-            if let Some(d) = cache.get(&key) {
-                self.stats.lock().unwrap().mapper_cache_hits += 1;
-                return Some(d.clone());
+        let slot = {
+            let cache = self.cache.read().unwrap();
+            cache.get(&key).cloned()
+        };
+        let slot = match slot {
+            Some(s) => s,
+            None => {
+                let mut cache = self.cache.write().unwrap();
+                Arc::clone(cache.entry(key).or_default())
             }
+        };
+        if let Some(d) = slot.done.get() {
+            self.stats.lock().unwrap().mapper_cache_hits += 1;
+            return d.clone();
+        }
+        // In-flight guard: first arrival builds, racers block here and then
+        // read the published result. A panic inside a previous build only
+        // poisons the guard, not any data (`done` is a OnceLock), so clear
+        // the poison and retry rather than wedging this shape forever.
+        let _build = slot.build.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(d) = slot.done.get() {
+            self.stats.lock().unwrap().mapper_cache_hits += 1;
+            return d.clone();
         }
         self.stats.lock().unwrap().mapper_cache_misses += 1;
         let g = Gemm::new("serve", "online", m, k, n);
-        let d = search(&self.cfg, &g, &self.opts)?;
-        self.cache.lock().unwrap().insert(key, d.clone());
-        self.cache.lock().unwrap().get(&key).cloned()
+        let d = search(&self.cfg, &g, &self.opts);
+        let _ = slot.done.set(d.clone());
+        d
     }
 
     /// Serve a batch of requests pulled from `rx`, sending responses on
@@ -319,5 +354,46 @@ mod tests {
     #[test]
     fn naive_executor_rejects_bad_shapes() {
         assert!(NaiveExecutor.gemm(2, 2, 2, &[1.0; 3], &[1.0; 4]).is_err());
+    }
+
+    /// Concurrent misses on one shape run the mapper exactly once: the
+    /// in-flight guard turns N racing routes into 1 miss + N−1 hits, and
+    /// every caller gets the same decision.
+    #[test]
+    fn concurrent_misses_run_mapper_once() {
+        let cfg = ArchConfig::paper(4, 4);
+        let server = Arc::new(Server::new(&cfg, Arc::new(NaiveExecutor)));
+        let n_threads: u64 = 8;
+        let decisions: Vec<Option<f64>> = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for _ in 0..n_threads {
+                let srv = Arc::clone(&server);
+                handles.push(s.spawn(move || {
+                    srv.route(64, 40, 24).map(|d| d.report.total_cycles)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(decisions.iter().all(|d| d.is_some()));
+        assert!(decisions.windows(2).all(|w| w[0] == w[1]), "identical decisions");
+        let st = server.stats.lock().unwrap();
+        assert_eq!(st.mapper_cache_misses, 1, "mapper ran once");
+        assert_eq!(st.mapper_cache_hits, n_threads - 1);
+    }
+
+    /// Infeasible shapes cache their `None` so repeats don't re-search.
+    #[test]
+    fn infeasible_shape_cached_as_none() {
+        let mut cfg = ArchConfig::paper(4, 4);
+        // Shrink buffers so no candidate fits.
+        cfg.str_bytes = 4;
+        cfg.sta_bytes = 4;
+        cfg.ob_bytes = 16;
+        let server = Server::new(&cfg, Arc::new(NaiveExecutor));
+        assert!(server.route(1 << 20, 1 << 12, 1 << 12).is_none());
+        assert!(server.route(1 << 20, 1 << 12, 1 << 12).is_none());
+        let st = server.stats.lock().unwrap();
+        assert_eq!(st.mapper_cache_misses, 1);
+        assert_eq!(st.mapper_cache_hits, 1);
     }
 }

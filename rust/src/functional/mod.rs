@@ -12,31 +12,62 @@
 //! reproduce a naive GEMM exactly, and integration tests additionally
 //! cross-check against the PJRT-executed JAX/Pallas oracle.
 
+pub mod plan;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
 use crate::arch::buffer::{DataBuffer, OutputBuffer};
 use crate::arch::config::ArchConfig;
 use crate::isa::inst::{ActFn, BufTarget, Inst};
 use crate::layout::VnLayout;
 use crate::mapping::{Dataflow, MappingCfg, StreamCfg};
 
+pub use plan::{PlanKey, WavePlan};
+
+/// Compiled-plan cache bound: distinct (θ_EM, θ_ES, layouts) tuples per
+/// lowered program are small (one per chunk pattern per tile shape), so the
+/// cap only guards against pathological generated traces.
+const PLAN_CACHE_CAP: usize = 512;
+
 /// Simulator errors — each corresponds to an illegal program, not a
 /// simulator limitation.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum SimError {
-    #[error("HBM access out of range: addr {addr} len {len}")]
     HbmOutOfRange { addr: u64, len: usize },
-    #[error("{buf:?} buffer overflow: need {need} rows, have {have}")]
     BufferOverflow { buf: BufTarget, need: usize, have: usize },
-    #[error("ExecuteStreaming without a preceding ExecuteMapping")]
     NoMapping,
-    #[error("execute before {0} layout was set")]
     NoLayout(&'static str),
-    #[error("nonzero psum for output ({m}, {n}) outside the OVN layout")]
     OrphanPsum { m: usize, n: usize },
-    #[error("output buffer overflow: row {row} >= depth {depth}")]
     ObOverflow { row: usize, depth: usize },
-    #[error("instruction validation: {0}")]
     Invalid(String),
 }
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::HbmOutOfRange { addr, len } => {
+                write!(f, "HBM access out of range: addr {addr} len {len}")
+            }
+            SimError::BufferOverflow { buf, need, have } => {
+                write!(f, "{buf:?} buffer overflow: need {need} rows, have {have}")
+            }
+            SimError::NoMapping => {
+                write!(f, "ExecuteStreaming without a preceding ExecuteMapping")
+            }
+            SimError::NoLayout(which) => write!(f, "execute before {which} layout was set"),
+            SimError::OrphanPsum { m, n } => {
+                write!(f, "nonzero psum for output ({m}, {n}) outside the OVN layout")
+            }
+            SimError::ObOverflow { row, depth } => {
+                write!(f, "output buffer overflow: row {row} >= depth {depth}")
+            }
+            SimError::Invalid(msg) => write!(f, "instruction validation: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 /// Execution statistics accumulated over a trace.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -108,6 +139,13 @@ pub struct FunctionalSim {
     cur_em: Option<MappingCfg>,
     last_df: Dataflow,
     pub stats: SimStats,
+    /// Execute tiles through compiled [`WavePlan`]s (default). Disable to
+    /// run the reference per-wave interpreter — kept for the bit-exactness
+    /// tests and as the semantic ground truth.
+    pub use_plans: bool,
+    /// Compiled plans keyed by (θ_EM, θ_ES, layouts); reused across the
+    /// M/K/N tile loops of a lowered program.
+    plans: HashMap<PlanKey, Arc<WavePlan>>,
 }
 
 impl FunctionalSim {
@@ -125,7 +163,14 @@ impl FunctionalSim {
             cur_em: None,
             last_df: Dataflow::WoS,
             stats: SimStats::default(),
+            use_plans: true,
+            plans: HashMap::new(),
         }
+    }
+
+    /// Number of compiled plans currently cached.
+    pub fn plan_cache_len(&self) -> usize {
+        self.plans.len()
     }
 
     /// Bump-allocate `words` of HBM; returns the word address.
@@ -291,7 +336,69 @@ impl FunctionalSim {
     }
 
     /// One compute tile: Eq. (1) placement + streaming + reduction.
+    ///
+    /// Hot path: look up (or compile) the [`WavePlan`] for this
+    /// (θ_EM, θ_ES, layouts) tuple and interpret it — all address
+    /// translation, BIRRD merge grouping and OB conflict accounting were
+    /// resolved at compile time, once, instead of once per wave.
     fn run_tile(&mut self, em: &MappingCfg, es: &StreamCfg) -> Result<(), SimError> {
+        if !self.use_plans {
+            return self.run_tile_reference(em, es);
+        }
+        // Layout resolution order matches the reference (stationary, then
+        // streamed, then output) so `NoLayout` errors are identical.
+        let (sta_layout, str_layout) = match es.df {
+            Dataflow::WoS => (
+                self.w_layout.ok_or(SimError::NoLayout("WVN"))?,
+                self.i_layout.ok_or(SimError::NoLayout("IVN"))?,
+            ),
+            Dataflow::IoS => (
+                self.i_layout.ok_or(SimError::NoLayout("IVN"))?,
+                self.w_layout.ok_or(SimError::NoLayout("WVN"))?,
+            ),
+        };
+        let o_layout = self.o_layout.ok_or(SimError::NoLayout("OVN"))?;
+        // Pathological mismatch (stationary layout VNs shorter than the
+        // invocation's VN size) panics in the reference register fill; the
+        // compiled fill would over-read instead. Delegate to the reference
+        // so behavior stays bit-identical for this illegal-program class.
+        if sta_layout.vn_size < es.vn_size {
+            return self.run_tile_reference(em, es);
+        }
+        let key = PlanKey { em: *em, es: *es, sta_layout, str_layout, o_layout };
+        let plan = match self.plans.get(&key) {
+            Some(p) => Arc::clone(p),
+            None => {
+                if self.plans.len() >= PLAN_CACHE_CAP {
+                    // Evict one arbitrary entry: keeps the memory bound
+                    // without the recompile-everything thrash a full clear
+                    // would cause for working sets just over the cap.
+                    if let Some(k) = self.plans.keys().next().copied() {
+                        self.plans.remove(&k);
+                    }
+                }
+                let p = Arc::new(WavePlan::compile(
+                    &self.cfg,
+                    em,
+                    es,
+                    &sta_layout,
+                    &str_layout,
+                    &o_layout,
+                    self.stationary.depth,
+                    self.streaming.depth,
+                    self.ob.depth,
+                ));
+                self.plans.insert(key, Arc::clone(&p));
+                p
+            }
+        };
+        plan.execute(&self.streaming, &self.stationary, &mut self.ob, &mut self.stats)
+    }
+
+    /// Reference per-wave interpreter (the seed semantics): re-derives
+    /// placement and addressing every wave. Kept as the ground truth the
+    /// compiled path is tested against (`tests/plan_equivalence.rs`).
+    fn run_tile_reference(&mut self, em: &MappingCfg, es: &StreamCfg) -> Result<(), SimError> {
         let cfg = self.cfg.clone();
         let vn = es.vn_size;
         let active_rows = vn.min(cfg.ah);
@@ -659,6 +766,28 @@ mod tests {
             (0..4).map(|i| sim.peek(BufTarget::Streaming, 0, i)).collect::<Vec<_>>(),
             vec![0, 3, 0, 0]
         );
+    }
+
+    #[test]
+    fn plan_and_reference_paths_agree() {
+        // The compiled-plan default path and the reference per-wave
+        // interpreter must be bit-identical: outputs and SimStats.
+        let (m, k, n) = (4usize, 4usize, 4usize);
+        let mut rng = Lcg::new(7);
+        let iv: Vec<i32> = (0..m * k).map(|_| rng.range(0, 16) as i32 - 8).collect();
+        let wv: Vec<i32> = (0..k * n).map(|_| rng.range(0, 16) as i32 - 8).collect();
+        let c = cfg();
+        let mut fast = FunctionalSim::new(&c);
+        let prog = single_tile_program(&mut fast, &iv, &wv, m, k, n);
+        fast.exec_trace(&prog).unwrap();
+        let mut slow = FunctionalSim::new(&c);
+        slow.use_plans = false;
+        let prog = single_tile_program(&mut slow, &iv, &wv, m, k, n);
+        slow.exec_trace(&prog).unwrap();
+        assert_eq!(fast.read_output_tile(m, n), slow.read_output_tile(m, n));
+        assert_eq!(fast.stats, slow.stats);
+        assert_eq!(fast.plan_cache_len(), 1);
+        assert_eq!(slow.plan_cache_len(), 0);
     }
 
     #[test]

@@ -1,0 +1,460 @@
+//! Compiled wave plans — the functional simulator's hot-path compiler
+//! (§Perf; the software mirror of the paper's control-elimination story).
+//!
+//! MINISA's headline is that per-wave control work disappears from the
+//! hardware hot path: one `ExecuteMapping`/`ExecuteStreaming` pair triggers
+//! `T` waves with zero instruction fetches. The seed simulator nevertheless
+//! *re-derived* all of that control state in software on every wave: Eq.-(1)
+//! placement, streamed-VN address translation through `VnLayout::flatten`,
+//! output-VN addressing, a per-wave `sort_unstable_by_key` to group BIRRD
+//! merges, and per-wave `Vec` allocations in `accumulate_group`.
+//!
+//! A [`WavePlan`] compiles all of that **once** per
+//! (θ_EM, θ_ES, streamed/stationary/output layout) tuple into flat arrays:
+//!
+//! * `reg_fills` — stationary-register loads: (PE register base, buffer
+//!   word offset) pairs, resolved through the stationary layout;
+//! * per wave, a list of column groups carrying the streamed-VN source
+//!   word offset;
+//! * per (column, PE-row) op, the stationary register base and the
+//!   *pre-merged* OB destination slot (or the orphan/overflow outcome);
+//! * per wave, the merged OB slot list in BIRRD order plus precomputed
+//!   `birrd_adds` / bank-conflict counts (both are data-independent).
+//!
+//! Executing a plan is then a tight interpreter: contiguous-slice dot
+//! products into per-slot accumulators, one bucketed OB flush per wave — no
+//! layout math, no sorting, no allocation on the wave loop. Plans are cached
+//! in the simulator keyed by the config tuple, so the M/K/N tile loops of a
+//! lowered program (`mapper::exec`) compile each distinct invocation shape
+//! exactly once.
+//!
+//! Bit-exactness contract: `WavePlan::execute` reproduces the reference
+//! per-wave interpreter (`FunctionalSim::run_tile` with `use_plans = false`)
+//! exactly — identical outputs, identical `SimStats` (including partial
+//! `macs_used` counts on error paths) and identical `SimError` values raised
+//! at the same (wave, column, row) position. `tests/plan_equivalence.rs` and
+//! the unit tests below enforce this.
+
+use crate::arch::buffer::{DataBuffer, OutputBuffer};
+use crate::arch::config::ArchConfig;
+use crate::layout::VnLayout;
+use crate::mapping::{Dataflow, MappingCfg, StreamCfg};
+
+use super::{SimError, SimStats};
+
+/// Cache key: everything a plan's addressing depends on. Buffer geometry
+/// (depths, width) is fixed per simulator, so it stays out of the key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub em: MappingCfg,
+    pub es: StreamCfg,
+    pub sta_layout: VnLayout,
+    pub str_layout: VnLayout,
+    pub o_layout: VnLayout,
+}
+
+/// One stationary-register load: copy `vn` elements from the stationary
+/// buffer (word offset `src`, row stride = buffer width) into `regs[dst..]`.
+#[derive(Debug, Clone, Copy)]
+struct RegFill {
+    dst: u32,
+    src: u32,
+}
+
+/// What happens to one (column, PE-row) psum.
+#[derive(Debug, Clone, Copy)]
+enum OpKind {
+    /// Accumulate into the wave-local merged slot with this index.
+    Slot(u32),
+    /// Outside the OVN layout: legal only while the psum stays zero.
+    Orphan { p: u32, q: u32 },
+    /// Mapped beyond OB depth: always an error when reached.
+    Overflow { row: u32 },
+}
+
+/// One PE-row's work within a column group.
+#[derive(Debug, Clone, Copy)]
+struct Op {
+    /// Base index into the stationary register file.
+    reg_base: u32,
+    kind: OpKind,
+}
+
+/// One streamed-VN gather plus the contiguous run of ops consuming it.
+#[derive(Debug, Clone, Copy)]
+struct ColGroup {
+    /// Word offset of the streamed VN's first element (row stride = width).
+    str_src: u32,
+    op_start: u32,
+    op_end: u32,
+}
+
+/// One wave's slice of the flat arrays plus its precomputed statistics.
+#[derive(Debug, Clone, Copy)]
+struct Wave {
+    cg_start: u32,
+    cg_end: u32,
+    slot_start: u32,
+    slot_end: u32,
+    /// In-network pairwise additions (merged psums − distinct slots).
+    birrd_adds: u32,
+    /// OB bank conflicts of the merged write group.
+    ob_conflicts: u32,
+}
+
+/// A merged OB destination, ordered the way the reference sorts psums.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct Slot {
+    row: u32,
+    bank: u32,
+}
+
+/// A fully compiled invocation: `T` waves of pre-resolved work.
+#[derive(Debug, Clone)]
+pub struct WavePlan {
+    /// VN size of the invocation (stationary register elements per PE).
+    vn: usize,
+    /// Dot-product length actually used: `vn.min(str_layout.vn_size)`
+    /// (the reference zips the streamed VN against the first `vn` register
+    /// elements, truncating to the shorter side).
+    dot_len: usize,
+    macs_possible_per_wave: u64,
+    reg_fills: Vec<RegFill>,
+    /// Register file size: `active_rows · AW · vn` elements.
+    regs_len: usize,
+    waves: Vec<Wave>,
+    col_groups: Vec<ColGroup>,
+    ops: Vec<Op>,
+    slots: Vec<Slot>,
+    /// Largest per-wave slot count (sizes the accumulator scratch).
+    max_slots: usize,
+}
+
+impl WavePlan {
+    /// Resolve every wave of (θ_EM, θ_ES) against the three layouts and the
+    /// buffer geometry. Pure control-plane work: no operand data involved.
+    #[allow(clippy::too_many_arguments)]
+    pub fn compile(
+        cfg: &ArchConfig,
+        em: &MappingCfg,
+        es: &StreamCfg,
+        sta_layout: &VnLayout,
+        str_layout: &VnLayout,
+        o_layout: &VnLayout,
+        sta_depth: usize,
+        str_depth: usize,
+        ob_depth: usize,
+    ) -> Self {
+        let (ah, aw) = (cfg.ah, cfg.aw);
+        let vn = es.vn_size;
+        let active_rows = vn.min(ah);
+
+        // Stationary register placement (the once-per-invocation NEST fill).
+        // reg_c[a_h·AW + a_w] records the VN column index for PEs holding an
+        // in-bounds stationary VN; the reference gathers in (a_w, a_h) order.
+        let mut reg_fills = Vec::new();
+        let mut reg_c: Vec<Option<usize>> = vec![None; active_rows * aw];
+        for a_w in 0..aw {
+            for a_h in 0..active_rows {
+                let (r, c) = em.stationary_vn(a_h, a_w);
+                if let Some((row0, col)) = sta_layout.addr(r, c, aw) {
+                    if row0 + sta_layout.vn_size <= sta_depth {
+                        reg_fills.push(RegFill {
+                            dst: ((a_h * aw + a_w) * vn) as u32,
+                            src: (row0 * aw + col) as u32,
+                        });
+                        reg_c[a_h * aw + a_w] = Some(c);
+                    }
+                }
+            }
+        }
+
+        let mut waves = Vec::with_capacity(es.t);
+        let mut col_groups: Vec<ColGroup> = Vec::new();
+        let mut ops: Vec<Op> = Vec::new();
+        let mut slots: Vec<Slot> = Vec::new();
+        let mut max_slots = 0usize;
+        // Per-wave scratch, reused across waves.
+        let mut dests: Vec<Slot> = Vec::new();
+        let mut pending: Vec<(usize, Slot)> = Vec::new(); // (op index, dest)
+        let mut seen_row: Vec<Option<u32>> = vec![None; aw];
+
+        for t in 0..es.t {
+            let cg_start = col_groups.len() as u32;
+            let slot_start = slots.len() as u32;
+            dests.clear();
+            pending.clear();
+            for a_w in 0..aw {
+                let (m, j) = es.streamed_vn(em, a_w, t);
+                let Some((row0, col)) = str_layout.addr(j, m, aw) else {
+                    continue; // zero-padded streamed VN: contributes 0
+                };
+                if row0 + str_layout.vn_size > str_depth {
+                    continue;
+                }
+                let op_start = ops.len() as u32;
+                for a_h in 0..active_rows {
+                    let Some(c) = reg_c[a_h * aw + a_w] else {
+                        continue; // zero-padded stationary VN
+                    };
+                    // Output element (p, q): the streamed index supplies one
+                    // rank, the stationary the other (transposed under IO-S).
+                    let (p, q) = match es.df {
+                        Dataflow::WoS => (m, c),
+                        Dataflow::IoS => (c, m),
+                    };
+                    let (r_o, off, c_o) =
+                        (q / o_layout.vn_size, q % o_layout.vn_size, p);
+                    let kind = match o_layout.addr(r_o, c_o, aw) {
+                        Some((orow0, bank)) => {
+                            let row = orow0 + off;
+                            if row >= ob_depth {
+                                OpKind::Overflow { row: row as u32 }
+                            } else {
+                                let s = Slot { row: row as u32, bank: bank as u32 };
+                                dests.push(s);
+                                pending.push((ops.len(), s));
+                                OpKind::Slot(u32::MAX) // patched below
+                            }
+                        }
+                        None => OpKind::Orphan { p: p as u32, q: q as u32 },
+                    };
+                    ops.push(Op { reg_base: ((a_h * aw + a_w) * vn) as u32, kind });
+                }
+                let op_end = ops.len() as u32;
+                if op_end > op_start {
+                    col_groups.push(ColGroup {
+                        str_src: (row0 * aw + col) as u32,
+                        op_start,
+                        op_end,
+                    });
+                }
+            }
+
+            // BIRRD merge grouping, resolved at compile time: the reference
+            // sorts this wave's psums by (row, bank) and folds equal keys.
+            let n_contrib = dests.len();
+            dests.sort_unstable();
+            dests.dedup();
+            let birrd_adds = (n_contrib - dests.len()) as u32;
+            for (op_idx, dest) in &pending {
+                let idx = dests.binary_search(dest).expect("merged slot present");
+                ops[*op_idx].kind = OpKind::Slot(idx as u32);
+            }
+            // Bank conflicts of the merged write group, mirroring
+            // `OutputBuffer::accumulate_group` over the sorted merged writes.
+            seen_row.iter_mut().for_each(|s| *s = None);
+            let mut ob_conflicts = 0u32;
+            for s in &dests {
+                match seen_row[s.bank as usize] {
+                    None => seen_row[s.bank as usize] = Some(s.row),
+                    Some(prev) if prev != s.row => ob_conflicts += 1,
+                    _ => {}
+                }
+            }
+
+            max_slots = max_slots.max(dests.len());
+            slots.extend_from_slice(&dests);
+            waves.push(Wave {
+                cg_start,
+                cg_end: col_groups.len() as u32,
+                slot_start,
+                slot_end: slots.len() as u32,
+                birrd_adds,
+                ob_conflicts,
+            });
+        }
+
+        Self {
+            vn,
+            dot_len: vn.min(str_layout.vn_size),
+            macs_possible_per_wave: (ah * aw * vn) as u64,
+            reg_fills,
+            regs_len: active_rows * aw * vn,
+            waves,
+            col_groups,
+            ops,
+            slots,
+            max_slots,
+        }
+    }
+
+    /// Number of compiled waves (`T`).
+    pub fn wave_count(&self) -> usize {
+        self.waves.len()
+    }
+
+    /// Total compiled (column, PE-row) ops across all waves.
+    pub fn op_count(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Execute the plan against live buffer contents. Allocation pattern:
+    /// three scratch vectors per *invocation* (exactly like the reference's
+    /// register fill), zero allocations per wave.
+    pub fn execute(
+        &self,
+        streaming: &DataBuffer<i32>,
+        stationary: &DataBuffer<i32>,
+        ob: &mut OutputBuffer,
+        stats: &mut SimStats,
+    ) -> Result<(), SimError> {
+        let width = streaming.width;
+        let sta_width = stationary.width;
+        let str_data = streaming.data();
+        let sta_data = stationary.data();
+        let vn = self.vn;
+        let dot_len = self.dot_len;
+
+        // Stationary register fill (double-buffered NEST load).
+        let mut regs: Vec<i32> = vec![0; self.regs_len];
+        for f in &self.reg_fills {
+            let (dst, src) = (f.dst as usize, f.src as usize);
+            for i in 0..vn {
+                regs[dst + i] = sta_data[src + i * sta_width];
+            }
+        }
+
+        let mut streamed: Vec<i32> = vec![0; dot_len];
+        let mut slot_acc: Vec<i64> = vec![0; self.max_slots];
+        let mut macs_local: u64 = 0;
+
+        for w in &self.waves {
+            stats.waves += 1;
+            stats.macs_possible += self.macs_possible_per_wave;
+            let wave_slots = &self.slots[w.slot_start as usize..w.slot_end as usize];
+            slot_acc[..wave_slots.len()].iter_mut().for_each(|v| *v = 0);
+
+            for cg in &self.col_groups[w.cg_start as usize..w.cg_end as usize] {
+                let base = cg.str_src as usize;
+                for (i, s) in streamed.iter_mut().enumerate() {
+                    *s = str_data[base + i * width];
+                }
+                for op in &self.ops[cg.op_start as usize..cg.op_end as usize] {
+                    macs_local += vn as u64;
+                    let rb = op.reg_base as usize;
+                    let mut psum = 0i64;
+                    for i in 0..dot_len {
+                        psum += streamed[i] as i64 * regs[rb + i] as i64;
+                    }
+                    match op.kind {
+                        OpKind::Slot(s) => slot_acc[s as usize] += psum,
+                        OpKind::Orphan { p, q } => {
+                            if psum != 0 {
+                                stats.macs_used += macs_local;
+                                return Err(SimError::OrphanPsum {
+                                    m: p as usize,
+                                    n: q as usize,
+                                });
+                            }
+                        }
+                        OpKind::Overflow { row } => {
+                            stats.macs_used += macs_local;
+                            return Err(SimError::ObOverflow {
+                                row: row as usize,
+                                depth: ob.depth,
+                            });
+                        }
+                    }
+                }
+            }
+
+            // Banked OB flush of the pre-merged write group.
+            for (acc, s) in slot_acc.iter().zip(wave_slots) {
+                ob.accumulate(s.row as usize, s.bank as usize, *acc);
+            }
+            ob.conflicts += w.ob_conflicts as u64;
+            stats.ob_conflicts += w.ob_conflicts as u64;
+            stats.birrd_adds += w.birrd_adds as u64;
+        }
+        stats.macs_used += macs_local;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functional::FunctionalSim;
+    use crate::mapper::exec::execute_program_on;
+    use crate::mapper::lower_gemm;
+    use crate::mapper::MappingChoice;
+    use crate::util::Lcg;
+    use crate::workloads::Gemm;
+
+    /// Compiled and reference interpreters agree bit-exactly on a lowered
+    /// program: outputs AND the full `SimStats`.
+    #[test]
+    fn plan_matches_reference_on_lowered_program() {
+        let cfg = ArchConfig::paper(4, 4);
+        let g = Gemm::new("t", "test", 12, 20, 10);
+        let ch = MappingChoice {
+            df: Dataflow::WoS,
+            vn: 4,
+            m_t: 8,
+            k_t: 8,
+            n_t: 8,
+            nbc: 2,
+            dup: 2,
+        };
+        let prog = lower_gemm(&cfg, &g, &ch, 4, 0, 2);
+        let mut rng = Lcg::new(9);
+        let iv: Vec<i32> = (0..g.m * g.k).map(|_| rng.range(0, 15) as i32 - 7).collect();
+        let wv: Vec<i32> = (0..g.k * g.n).map(|_| rng.range(0, 15) as i32 - 7).collect();
+
+        let mut fast = FunctionalSim::new(&cfg);
+        let mut slow = FunctionalSim::new(&cfg);
+        slow.use_plans = false;
+        let a = execute_program_on(&mut fast, &g, &prog, &iv, &wv).unwrap();
+        let b = execute_program_on(&mut slow, &g, &prog, &iv, &wv).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(fast.stats, slow.stats);
+        assert!(fast.plan_cache_len() > 0, "plans were compiled");
+        assert!(
+            fast.plan_cache_len() < prog.invocations as usize || prog.invocations <= 1,
+            "tile loops reuse cached plans: {} plans for {} invocations",
+            fast.plan_cache_len(),
+            prog.invocations
+        );
+    }
+
+    /// The plan compiler's precomputed wave statistics are internally
+    /// consistent: ops cover every column group, slot indices are in range.
+    #[test]
+    fn compiled_plan_structure_is_consistent() {
+        let cfg = ArchConfig::paper(4, 8);
+        let em = MappingCfg { r0: 0, c0: 0, g_r: 4, g_c: 2, s_r: 1, s_c: 4 };
+        let es = StreamCfg { df: Dataflow::WoS, m0: 0, s_m: 2, t: 6, vn_size: 4 };
+        let sta = VnLayout::row_major(4, 16, 4);
+        let strl = VnLayout::row_major(4, 16, 4);
+        let o = VnLayout::row_major(4, 16, 4);
+        let plan = WavePlan::compile(
+            &cfg,
+            &em,
+            &es,
+            &sta,
+            &strl,
+            &o,
+            cfg.d_sta(),
+            cfg.d_str(),
+            cfg.d_ob(),
+        );
+        assert_eq!(plan.wave_count(), es.t);
+        for w in &plan.waves {
+            assert!(w.cg_start <= w.cg_end);
+            assert!(w.slot_start <= w.slot_end);
+            let nslots = (w.slot_end - w.slot_start) as u32;
+            for cg in &plan.col_groups[w.cg_start as usize..w.cg_end as usize] {
+                assert!(cg.op_start < cg.op_end, "no empty column groups");
+                for op in &plan.ops[cg.op_start as usize..cg.op_end as usize] {
+                    if let OpKind::Slot(s) = op.kind {
+                        assert!(s < nslots, "slot index {s} within wave");
+                    }
+                }
+            }
+            // Merged slots are strictly sorted (deduped) per wave.
+            let ws = &plan.slots[w.slot_start as usize..w.slot_end as usize];
+            assert!(ws.windows(2).all(|p| p[0] < p[1]));
+        }
+    }
+}

@@ -13,15 +13,26 @@ use crate::mapping::{Dataflow, MappingCfg, StreamCfg};
 use crate::util::{BitReader, BitWriter};
 
 /// Encoding error.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum EncodeError {
-    #[error("field {field} value {value} exceeds {bits}-bit range")]
     FieldOverflow { field: &'static str, value: u64, bits: u32 },
-    #[error("truncated instruction stream")]
     Truncated,
-    #[error("invalid opcode bits")]
     BadOpcode,
 }
+
+impl std::fmt::Display for EncodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EncodeError::FieldOverflow { field, value, bits } => {
+                write!(f, "field {field} value {value} exceeds {bits}-bit range")
+            }
+            EncodeError::Truncated => write!(f, "truncated instruction stream"),
+            EncodeError::BadOpcode => write!(f, "invalid opcode bits"),
+        }
+    }
+}
+
+impl std::error::Error for EncodeError {}
 
 /// Stateless encoder/decoder bound to one architecture's field widths.
 #[derive(Debug, Clone, Copy)]

@@ -56,11 +56,26 @@ pub fn execute_program(
     iv: &[i32],
     wv: &[i32],
 ) -> Result<Vec<i64>, SimError> {
+    let mut sim = FunctionalSim::new(cfg);
+    execute_program_on(&mut sim, g, prog, iv, wv)
+}
+
+/// `execute_program` against a caller-provided simulator. Lets callers
+/// reuse one simulator (and its compiled [`crate::functional::WavePlan`]
+/// cache) across programs, or flip `sim.use_plans` to run the reference
+/// interpreter (the plan-equivalence tests do both).
+pub fn execute_program_on(
+    sim: &mut FunctionalSim,
+    g: &Gemm,
+    prog: &LoweredProgram,
+    iv: &[i32],
+    wv: &[i32],
+) -> Result<Vec<i64>, SimError> {
     assert_eq!(iv.len(), g.m * g.k, "input operand shape");
     assert_eq!(wv.len(), g.k * g.n, "weight operand shape");
-    let mut sim = FunctionalSim::new(cfg);
+    let aw = sim.cfg.aw;
     for s in &prog.staging {
-        let img = stage_image(g, prog.choice.df, s, iv, wv, cfg.aw);
+        let img = stage_image(g, prog.choice.df, s, iv, wv, aw);
         debug_assert_eq!(img.len(), s.words);
         sim.hbm_write(s.hbm_addr, &img);
     }

@@ -28,18 +28,50 @@ pub struct MapperOptions {
     /// Search all 6×6 streamed/output order pairs for the finalists
     /// (otherwise a fixed good pair).
     pub full_layout_search: bool,
-    /// Worker threads for candidate scoring.
+    /// Worker threads for candidate scoring and layout refinement.
     pub threads: usize,
     /// Instruction mode for the latency estimate: MINISA (true) or the
     /// micro-instruction baseline (false) — used for Fig. 10 comparisons.
     pub minisa: bool,
+    /// Branch-and-bound pruning in phase-1 candidate scoring (default on;
+    /// the `pruning_never_changes_winner` test runs with it off).
+    pub phase1_prune: bool,
+    /// Run phase-2 layout refinement with the seed's serial full-`estimate`
+    /// loop instead of the parallel bounded search. Kept for the
+    /// before/after hot-path benchmark and the determinism tests.
+    pub refine_serial: bool,
 }
 
 impl Default for MapperOptions {
     fn default() -> Self {
-        Self { both_dataflows: true, full_layout_search: true, threads: 4, minisa: true }
+        Self {
+            both_dataflows: true,
+            full_layout_search: true,
+            threads: 4,
+            minisa: true,
+            phase1_prune: true,
+            refine_serial: false,
+        }
     }
 }
+
+/// Phase-1 branch-and-bound slack. The seed pruned against `4 × best`,
+/// which is sound for finding the *single* best candidate but not for
+/// building the phase-2 finalist *pool*: a pruned candidate can hold a
+/// top-16 phase-1 score and its absence reshuffles pool membership, so
+/// pruning could change the selected winner. The bound is therefore taken
+/// against the thread-local **16th-best** score (`FINALISTS`-th): a pruned
+/// candidate has `score ≥ lb > slack · 16th ≥ 16th`, so it can never enter
+/// the pool, making pruning provably winner-preserving (see
+/// `pruning_never_changes_winner`). The 4× slack on top is intentional
+/// headroom: phase-2 layout refinement can close modeled serialization
+/// (stream-block / OB-pressure factors) that the fixed phase-1 layout pair
+/// overestimates, and the slack keeps such candidates' scores exact rather
+/// than lower-bounded.
+pub const PHASE1_BOUND_SLACK: f64 = 4.0;
+
+/// Finalist-pool size carried from phase 1 into phase-2 layout refinement.
+pub const FINALISTS: usize = 16;
 
 /// Closed-form pipeline estimate for one candidate (steady-state bound of
 /// the engine pipeline in `perf::simulate`; exact for uniform tiles).
@@ -251,23 +283,42 @@ pub fn candidates(cfg: &ArchConfig, g: &Gemm, opts: &MapperOptions) -> Vec<Mappi
 pub fn search(cfg: &ArchConfig, g: &Gemm, opts: &MapperOptions) -> Option<Decision> {
     let cands = candidates(cfg, g, opts);
     // Phase 1 (mapping-first): score every candidate with a fixed good
-    // layout pair; parallel across threads.
+    // layout pair; parallel across threads. `sort_by` is stable and the
+    // scored vector preserves candidate enumeration order, so ties resolve
+    // deterministically regardless of thread count.
     let scored = score_parallel(cfg, g, &cands, opts, 4, 0);
     let mut best: Vec<(f64, MappingChoice)> = scored;
     best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    best.truncate(16);
+    best.truncate(FINALISTS);
     if best.is_empty() {
         return None;
     }
     // Phase 2 (layout-second): refine the finalists over Tab. III orders.
+    let orders: Vec<(u8, u8)> = if opts.full_layout_search {
+        (0..6u8).flat_map(|i| (0..6u8).map(move |o| (i, o))).collect()
+    } else {
+        vec![(4, 0)]
+    };
+    if opts.refine_serial {
+        refine_serial(cfg, g, &best, &orders, opts)
+    } else {
+        refine_parallel(cfg, g, &best, &orders, opts)
+    }
+}
+
+/// Seed phase-2: serial full-`estimate` sweep over finalists × orders.
+/// Kept verbatim as the reference for the parallel refinement's
+/// determinism tests and the before/after benchmark.
+fn refine_serial(
+    cfg: &ArchConfig,
+    g: &Gemm,
+    finalists: &[(f64, MappingChoice)],
+    orders: &[(u8, u8)],
+    opts: &MapperOptions,
+) -> Option<Decision> {
     let mut winner: Option<Decision> = None;
-    for (_, ch) in &best {
-        let orders: Vec<(u8, u8)> = if opts.full_layout_search {
-            (0..6u8).flat_map(|i| (0..6u8).map(move |o| (i, o))).collect()
-        } else {
-            vec![(4, 0)]
-        };
-        for (io, oo) in orders {
+    for (_, ch) in finalists {
+        for &(io, oo) in orders {
             if let Some(rep) = estimate(cfg, g, ch, io, oo, opts.minisa) {
                 let better = winner
                     .as_ref()
@@ -288,6 +339,93 @@ pub fn search(cfg: &ArchConfig, g: &Gemm, opts: &MapperOptions) -> Option<Decisi
     winner
 }
 
+/// Next representable `f64` above a positive finite value; `INFINITY` maps
+/// to itself. Used to turn `estimate_bounded`'s `lb >= bound` prune test
+/// into a *strict* `lb > incumbent`, which is what makes parallel pruning
+/// deterministic: any (finalist, order) whose true cost ties the global
+/// minimum has `lb <= min <= incumbent` and therefore always survives, so
+/// the deterministic (cost, finalist, order) reduction sees every minimum
+/// achiever no matter how threads interleave incumbent updates.
+fn next_up(x: f64) -> f64 {
+    if x.is_infinite() {
+        x
+    } else {
+        f64::from_bits(x.to_bits() + 1)
+    }
+}
+
+/// Parallel phase-2 layout refinement (§Perf): finalists are scored across
+/// worker threads with `estimate_bounded` against a *shared* incumbent
+/// (lock-free `AtomicU64` over the cost's bit pattern — totals are positive,
+/// so bit order equals numeric order), instead of the seed's serial
+/// 16 × 36 full-`estimate` sweep. The winner is reduced deterministically
+/// by (cost, finalist index, order index).
+fn refine_parallel(
+    cfg: &ArchConfig,
+    g: &Gemm,
+    finalists: &[(f64, MappingChoice)],
+    orders: &[(u8, u8)],
+    opts: &MapperOptions,
+) -> Option<Decision> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let incumbent = AtomicU64::new(f64::INFINITY.to_bits());
+    let threads = opts.threads.max(1).min(finalists.len().max(1));
+    let chunk = ceil_div(finalists.len().max(1), threads).max(1);
+    let minisa = opts.minisa;
+    let per_thread: Vec<Option<(f64, usize, usize, Decision)>> = std::thread::scope(|s| {
+        let incumbent = &incumbent;
+        let mut handles = Vec::new();
+        for (ci, part) in finalists.chunks(chunk).enumerate() {
+            handles.push(s.spawn(move || {
+                let mut best: Option<(f64, usize, usize, Decision)> = None;
+                for (fi, (_, ch)) in part.iter().enumerate() {
+                    let fidx = ci * chunk + fi;
+                    for (oi, &(io, oo)) in orders.iter().enumerate() {
+                        let bound =
+                            next_up(f64::from_bits(incumbent.load(Ordering::Relaxed)));
+                        let Some(rep) =
+                            estimate_bounded(cfg, g, ch, io, oo, minisa, bound)
+                        else {
+                            continue;
+                        };
+                        let t = rep.total_cycles;
+                        incumbent.fetch_min(t.to_bits(), Ordering::Relaxed);
+                        let better = best
+                            .as_ref()
+                            .map(|b| (t, fidx, oi) < (b.0, b.1, b.2))
+                            .unwrap_or(true);
+                        if better {
+                            best = Some((
+                                t,
+                                fidx,
+                                oi,
+                                Decision {
+                                    choice: *ch,
+                                    i_order: io,
+                                    w_order: 0,
+                                    o_order: oo,
+                                    report: rep,
+                                },
+                            ));
+                        }
+                    }
+                }
+                best
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("refiner panicked")).collect()
+    });
+    let mut winner: Option<(f64, usize, usize, Decision)> = None;
+    for r in per_thread.into_iter().flatten() {
+        let better =
+            winner.as_ref().map(|w| (r.0, r.1, r.2) < (w.0, w.1, w.2)).unwrap_or(true);
+        if better {
+            winner = Some(r);
+        }
+    }
+    winner.map(|w| w.3)
+}
+
 fn score_parallel(
     cfg: &ArchConfig,
     g: &Gemm,
@@ -298,6 +436,7 @@ fn score_parallel(
 ) -> Vec<(f64, MappingChoice)> {
     let threads = opts.threads.max(1).min(cands.len().max(1));
     let chunk = ceil_div(cands.len().max(1), threads);
+    let prune = opts.phase1_prune;
     std::thread::scope(|s| {
         let mut handles = Vec::new();
         for part in cands.chunks(chunk.max(1)) {
@@ -305,15 +444,28 @@ fn score_parallel(
             let g = g.clone();
             let minisa = opts.minisa;
             handles.push(s.spawn(move || {
-                // Thread-local incumbent for branch-and-bound pruning.
-                let mut best = f64::INFINITY;
+                // Thread-local top-FINALISTS scores for branch-and-bound
+                // pruning: the bound is PHASE1_BOUND_SLACK × the 16th-best
+                // score, which provably cannot evict a pool member (see the
+                // PHASE1_BOUND_SLACK docs).
+                let mut top: Vec<f64> = Vec::with_capacity(FINALISTS + 1);
                 let mut out: Vec<(f64, MappingChoice)> = Vec::new();
                 for ch in part {
+                    let bound = if prune && top.len() == FINALISTS {
+                        top[FINALISTS - 1] * PHASE1_BOUND_SLACK
+                    } else {
+                        f64::INFINITY
+                    };
                     if let Some(r) =
-                        estimate_bounded(&cfg, &g, ch, i_order, o_order, minisa, best * 4.0)
+                        estimate_bounded(&cfg, &g, ch, i_order, o_order, minisa, bound)
                     {
-                        best = best.min(r.total_cycles);
-                        out.push((r.total_cycles, *ch));
+                        let t = r.total_cycles;
+                        let at = top.partition_point(|&x| x <= t);
+                        if at < FINALISTS {
+                            top.insert(at, t);
+                            top.truncate(FINALISTS);
+                        }
+                        out.push((t, *ch));
                     }
                 }
                 out
@@ -406,5 +558,62 @@ mod tests {
         let b = search(&cfg, &g, &MapperOptions { threads: 8, ..Default::default() }).unwrap();
         assert_eq!(a.report.total_cycles, b.report.total_cycles);
         assert_eq!(a.choice, b.choice);
+        // The parallel phase-2 refinement must also pick identical layouts.
+        assert_eq!((a.i_order, a.w_order, a.o_order), (b.i_order, b.w_order, b.o_order));
+    }
+
+    /// Parallel bounded phase-2 refinement is a pure optimization: it picks
+    /// the same (choice, orders, cost) as the seed's serial full-`estimate`
+    /// sweep, at any thread count.
+    #[test]
+    fn parallel_refinement_matches_serial_reference() {
+        for (ah, aw, m, k, n) in
+            [(4usize, 8usize, 256usize, 40usize, 24usize), (4, 16, 64, 40, 88), (8, 8, 96, 33, 17)]
+        {
+            let cfg = ArchConfig::paper(ah, aw);
+            let g = Gemm::new("t", "test", m, k, n);
+            let serial = search(
+                &cfg,
+                &g,
+                &MapperOptions { refine_serial: true, threads: 1, ..Default::default() },
+            )
+            .unwrap();
+            for threads in [1usize, 4, 16] {
+                let par =
+                    search(&cfg, &g, &MapperOptions { threads, ..Default::default() }).unwrap();
+                assert_eq!(par.report.total_cycles, serial.report.total_cycles, "{g} t{threads}");
+                assert_eq!(par.choice, serial.choice, "{g} t{threads}");
+                assert_eq!(
+                    (par.i_order, par.w_order, par.o_order),
+                    (serial.i_order, serial.w_order, serial.o_order),
+                    "{g} t{threads}"
+                );
+            }
+        }
+    }
+
+    /// Branch-and-bound pruning (phase-1 slack bound and the phase-2 shared
+    /// incumbent) never changes the selected winner relative to an
+    /// exhaustive unpruned search.
+    #[test]
+    fn pruning_never_changes_winner() {
+        for (m, k, n) in [(64usize, 40usize, 24usize), (512, 64, 8), (96, 33, 17)] {
+            let cfg = ArchConfig::paper(4, 8);
+            let g = Gemm::new("t", "test", m, k, n);
+            let pruned = search(&cfg, &g, &MapperOptions::default()).unwrap();
+            let exhaustive = search(
+                &cfg,
+                &g,
+                &MapperOptions {
+                    phase1_prune: false,
+                    refine_serial: true,
+                    threads: 1,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            assert_eq!(pruned.report.total_cycles, exhaustive.report.total_cycles, "({m},{k},{n})");
+            assert_eq!(pruned.choice, exhaustive.choice, "({m},{k},{n})");
+        }
     }
 }

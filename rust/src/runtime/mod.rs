@@ -5,12 +5,24 @@
 //! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `client.compile` → `execute`, with tuple-return unwrapping.
+//!
+//! The `xla` bindings only exist in images that ship the vendored crate,
+//! so everything touching PJRT is gated behind the off-by-default `pjrt`
+//! cargo feature. Without it, the same public API compiles to stubs that
+//! return a descriptive error — callers (CLI `serve --executor pjrt`, the
+//! examples, the artifact-gated integration tests) degrade gracefully.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::{bail, Result};
 
 /// Artifact manifest entry (mirrors `aot.py`'s JSON).
 #[derive(Debug, Clone, PartialEq)]
@@ -96,12 +108,14 @@ fn extract_args(obj: &str) -> Option<Vec<Vec<usize>>> {
 }
 
 /// A compiled executable plus its metadata.
+#[cfg(feature = "pjrt")]
 struct LoadedExe {
     exe: xla::PjRtLoadedExecutable,
     meta: ArtifactMeta,
 }
 
 /// The runtime: a PJRT CPU client with a compiled-executable cache.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -109,6 +123,7 @@ pub struct Runtime {
     cache: Mutex<HashMap<String, std::sync::Arc<LoadedExe>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Open the artifact directory (default `artifacts/`).
     pub fn open(dir: &Path) -> Result<Self> {
@@ -195,6 +210,7 @@ impl Runtime {
 /// Tile a (possibly mismatched) GEMM onto fixed-shape artifact executions:
 /// pad blocks up to the tile shape, run, slice back. Shared by the worker
 /// thread below and single-threaded users.
+#[cfg(feature = "pjrt")]
 pub fn gemm_via_tiles(
     rt: &Runtime,
     m: usize,
@@ -250,7 +266,9 @@ pub fn gemm_via_tiles(
     Ok(out)
 }
 
+#[cfg(feature = "pjrt")]
 type Reply = std::sync::mpsc::Sender<Result<Vec<f32>>>;
+#[cfg(feature = "pjrt")]
 struct Job {
     m: usize,
     k: usize,
@@ -266,11 +284,13 @@ struct Job {
 /// crate), so the runtime lives on a dedicated worker thread; `gemm` calls
 /// marshal over a channel. This also serializes device access, which the
 /// single CPU PJRT device requires anyway.
+#[cfg(feature = "pjrt")]
 pub struct PjrtExecutor {
     tx: Mutex<std::sync::mpsc::Sender<Job>>,
     platform: String,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtExecutor {
     /// Start the worker; fails fast if the artifact dir or PJRT is broken.
     pub fn start(dir: &Path) -> Result<Self> {
@@ -305,6 +325,7 @@ impl PjrtExecutor {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl crate::coordinator::serve::TileExecutor for PjrtExecutor {
     fn gemm(&self, m: usize, k: usize, n: usize, iv: &[f32], wv: &[f32]) -> Result<Vec<f32>> {
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
@@ -316,6 +337,83 @@ impl crate::coordinator::serve::TileExecutor for PjrtExecutor {
         reply_rx.recv().context("pjrt worker dropped reply")?
     }
 
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stubs: same public surface without the `pjrt` feature. Every entry point
+// fails fast with a descriptive error; artifact-gated tests skip before
+// reaching them.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "pjrt"))]
+const NO_PJRT: &str =
+    "built without the `pjrt` feature: enable it (with the vendored `xla` crate) for PJRT execution";
+
+/// Stub runtime (crate built without the `pjrt` feature).
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    manifest: Vec<ArtifactMeta>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn open(_dir: &Path) -> Result<Self> {
+        bail!(NO_PJRT)
+    }
+    pub fn platform(&self) -> String {
+        "unavailable".into()
+    }
+    pub fn artifacts(&self) -> &[ArtifactMeta] {
+        &self.manifest
+    }
+    pub fn execute_f32(&self, _name: &str, _args: &[&[f32]]) -> Result<Vec<f32>> {
+        bail!(NO_PJRT)
+    }
+    pub fn cached(&self) -> usize {
+        0
+    }
+    pub fn find_gemm(&self, _m: usize, _k: usize, _n: usize) -> Option<String> {
+        None
+    }
+}
+
+/// Stub tiler (crate built without the `pjrt` feature).
+#[cfg(not(feature = "pjrt"))]
+pub fn gemm_via_tiles(
+    _rt: &Runtime,
+    _m: usize,
+    _k: usize,
+    _n: usize,
+    _iv: &[f32],
+    _wv: &[f32],
+) -> Result<Vec<f32>> {
+    bail!(NO_PJRT)
+}
+
+/// Stub executor (crate built without the `pjrt` feature).
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtExecutor {
+    _private: (),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtExecutor {
+    pub fn start(_dir: &Path) -> Result<Self> {
+        bail!(NO_PJRT)
+    }
+    pub fn platform(&self) -> &str {
+        "unavailable"
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl crate::coordinator::serve::TileExecutor for PjrtExecutor {
+    fn gemm(&self, _m: usize, _k: usize, _n: usize, _iv: &[f32], _wv: &[f32]) -> Result<Vec<f32>> {
+        bail!(NO_PJRT)
+    }
     fn name(&self) -> &str {
         "pjrt"
     }

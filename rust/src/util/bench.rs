@@ -66,6 +66,101 @@ pub fn bench<R>(name: &str, warmup: usize, iters: usize, f: impl FnMut() -> R) -
     r
 }
 
+/// Machine-readable benchmark log: collects named [`Timing`]s plus derived
+/// scalar metrics and serializes them as JSON (hand-rolled — the offline
+/// build has no serde). `benches/hotpath.rs` writes `BENCH_hotpath.json`
+/// with it so the perf trajectory is tracked across PRs (EXPERIMENTS.md
+/// §Perf).
+#[derive(Debug, Default)]
+pub struct BenchLog {
+    timings: Vec<(String, Timing)>,
+    metrics: Vec<(String, f64)>,
+}
+
+/// JSON-safe f64 formatting (NaN/inf are not valid JSON numbers).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+impl BenchLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a timing under `name` (later records with the same name are
+    /// kept as separate entries; names are expected unique per run).
+    pub fn record(&mut self, name: &str, t: Timing) {
+        self.timings.push((name.to_string(), t));
+    }
+
+    /// Record a derived scalar metric (throughput, speedup, ...).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    /// Time `f` like [`bench`] and record the result under `name`.
+    pub fn bench<R>(
+        &mut self,
+        name: &str,
+        warmup: usize,
+        iters: usize,
+        f: impl FnMut() -> R,
+    ) -> (R, Timing) {
+        let (r, t) = time(warmup, iters, f);
+        t.report(name);
+        self.record(name, t);
+        (r, t)
+    }
+
+    /// Serialize as a JSON object string.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"benches\": {");
+        for (i, (name, t)) in self.timings.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n    \"{}\": {{\"min_ns\": {}, \"median_ns\": {}, \"mean_ns\": {}, \"iters\": {}}}",
+                json_escape(name),
+                json_num(t.min_ns),
+                json_num(t.median_ns),
+                json_num(t.mean_ns),
+                t.iters
+            ));
+        }
+        s.push_str("\n  },\n  \"metrics\": {");
+        for (i, (name, v)) in self.metrics.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\n    \"{}\": {}", json_escape(name), json_num(*v)));
+        }
+        s.push_str("\n  }\n}\n");
+        s
+    }
+
+    /// Write the JSON log to `path`.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,6 +178,23 @@ mod tests {
         assert!(t.min_ns > 0.0);
         assert!(t.min_ns <= t.median_ns);
         assert_eq!(t.iters, 5);
+    }
+
+    #[test]
+    fn bench_log_emits_valid_shape() {
+        let mut log = BenchLog::new();
+        let (_, t) = log.bench("unit/smoke \"quoted\"", 0, 3, || 1 + 1);
+        log.record("second", t);
+        log.metric("speedup", 2.5);
+        log.metric("bad", f64::INFINITY);
+        let j = log.to_json();
+        assert!(j.contains("\"benches\""));
+        assert!(j.contains("\"metrics\""));
+        assert!(j.contains("\\\"quoted\\\""));
+        assert!(j.contains("\"speedup\": 2.5"));
+        assert!(j.contains("\"bad\": null"));
+        // Balanced braces — cheap structural sanity without a JSON parser.
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! Compiled-plan equivalence suite: `FunctionalSim` with `use_plans = true`
+//! (the default, interpreting compiled `WavePlan`s) must be **bit-identical**
+//! to the reference per-wave interpreter (`use_plans = false`, the seed
+//! semantics) — same outputs, same `SimStats` (macs_used, birrd_adds,
+//! ob_conflicts, ...), and same `SimError` on illegal programs.
+
+use minisa::arch::vn::VnGrid;
+use minisa::arch::ArchConfig;
+use minisa::functional::{pack_image, FunctionalSim, SimError, SimStats};
+use minisa::isa::inst::{BufTarget, Inst, LayoutInst};
+use minisa::layout::VnLayout;
+use minisa::mapper::exec::execute_program_on;
+use minisa::mapper::lower_gemm;
+use minisa::mapper::MappingChoice;
+use minisa::mapping::{Dataflow, MappingCfg, StreamCfg};
+use minisa::util::prop::forall;
+use minisa::util::Lcg;
+use minisa::workloads::Gemm;
+
+/// Run one lowered program through both interpreters; returns
+/// (plan result, reference result, plan stats, reference stats).
+#[allow(clippy::type_complexity)]
+fn run_both(
+    cfg: &ArchConfig,
+    g: &Gemm,
+    ch: &MappingChoice,
+    orders: (u8, u8, u8),
+    seed: u64,
+) -> (Result<Vec<i64>, SimError>, Result<Vec<i64>, SimError>, SimStats, SimStats) {
+    let prog = lower_gemm(cfg, g, ch, orders.0, orders.1, orders.2);
+    let mut rng = Lcg::new(seed);
+    let iv: Vec<i32> = (0..g.m * g.k).map(|_| rng.range(0, 15) as i32 - 7).collect();
+    let wv: Vec<i32> = (0..g.k * g.n).map(|_| rng.range(0, 15) as i32 - 7).collect();
+    let mut fast = FunctionalSim::new(cfg);
+    assert!(fast.use_plans, "plans are the default execution mode");
+    let mut slow = FunctionalSim::new(cfg);
+    slow.use_plans = false;
+    let a = execute_program_on(&mut fast, g, &prog, &iv, &wv);
+    let b = execute_program_on(&mut slow, g, &prog, &iv, &wv);
+    (a, b, fast.stats.clone(), slow.stats.clone())
+}
+
+/// Randomized equivalence over mapper-generated programs: both dataflows,
+/// non-power-of-two M/K/N, random layout orders and mapping knobs.
+#[test]
+fn randomized_plan_equivalence() {
+    forall("plan-equivalence", 60, |gen| {
+        let (ah, aw) = *gen.pick(&[(4usize, 4usize), (4, 8), (8, 8)]);
+        let cfg = ArchConfig::paper(ah, aw);
+        // usize(1, 24) covers plenty of non-powers-of-two; both dataflows.
+        let m = gen.usize(1, 24);
+        let k = gen.usize(1, 24);
+        let n = gen.usize(1, 24);
+        let g = Gemm::new("p", "prop", m, k, n);
+        let vn = ah.min(k).max(1);
+        let df = if gen.bool() { Dataflow::WoS } else { Dataflow::IoS };
+        let (ms, ks, ns) = minisa::mapper::lower::search_dims(&g, df);
+        let m_t = gen.pick(&[ah, 2 * ah, 4 * ah]).min(&ms.max(1)).to_owned().max(1);
+        let k_t = (*gen.pick(&[vn, 2 * vn, 4 * vn])).min(ks.max(1)).max(1);
+        let n_t = (*gen.pick(&[1usize, 2, ah, 2 * ah])).min(ns.max(1)).max(1);
+        let nbc = gen.pow2(0, 2).min(aw);
+        let dup = gen.pow2(0, 2).min(aw / nbc).max(1);
+        let ch = MappingChoice { df, vn, m_t, k_t, n_t, nbc, dup };
+        let io = gen.usize(0, 5) as u8;
+        let oo = gen.usize(0, 5) as u8;
+        let seed = gen.usize(0, 1 << 20) as u64;
+        let (a, b, sa, sb) = run_both(&cfg, &g, &ch, (io, 0, oo), seed);
+        assert_eq!(a, b, "{g} {ch:?} orders ({io},0,{oo})");
+        assert_eq!(sa, sb, "stats diverged: {g} {ch:?} orders ({io},0,{oo})");
+    });
+}
+
+/// Fixed awkward shapes (prime-ish dims, every layout order pair) — the
+/// cases most likely to hit padding and remainder paths.
+#[test]
+fn fixed_odd_shapes_all_orders() {
+    let cfg = ArchConfig::paper(4, 4);
+    for (m, k, n) in [(7usize, 13usize, 11usize), (5, 9, 3), (12, 20, 10), (1, 1, 1)] {
+        let g = Gemm::new("t", "test", m, k, n);
+        for df in [Dataflow::WoS, Dataflow::IoS] {
+            let ch = MappingChoice { df, vn: 4, m_t: 8, k_t: 8, n_t: 8, nbc: 2, dup: 1 };
+            for io in 0..6u8 {
+                for oo in 0..6u8 {
+                    let (a, b, sa, sb) = run_both(&cfg, &g, &ch, (io, 0, oo), 17);
+                    assert_eq!(a, b, "({m},{k},{n}) {df:?} orders ({io},{oo})");
+                    assert_eq!(sa, sb, "stats: ({m},{k},{n}) {df:?} orders ({io},{oo})");
+                }
+            }
+        }
+    }
+}
+
+/// Hand-built single-invocation trace against a config with a tiny output
+/// buffer; `mapping` chooses the Eq.-(1) placement, `o_lay` the OVN layout.
+fn single_tile_trace(
+    sim: &mut FunctionalSim,
+    cfg: &ArchConfig,
+    n: usize,
+    em: MappingCfg,
+    o_lay: VnLayout,
+) -> Vec<Inst> {
+    let (m, k, vn) = (4usize, 4usize, 4usize);
+    let gi = VnGrid::new(k, m, vn);
+    let gw = VnGrid::new(k, n, vn);
+    let i_lay = VnLayout::row_major(gi.rows(), m, vn);
+    let w_lay = VnLayout::row_major(gw.rows(), n, vn);
+    let iv: Vec<i32> = vec![1; m * k];
+    let wv: Vec<i32> = vec![1; k * n];
+    let i_img = pack_image(&i_lay, cfg.aw, |r, c| gi.gather_input(&iv, r, c));
+    let w_img = pack_image(&w_lay, cfg.aw, |r, c| gw.gather_weight(&wv, r, c));
+    let ia = sim.hbm_alloc(i_img.len());
+    sim.hbm_write(ia, &i_img);
+    let wa = sim.hbm_alloc(w_img.len());
+    sim.hbm_write(wa, &w_img);
+    vec![
+        Inst::Load {
+            target: BufTarget::Streaming,
+            hbm_addr: ia,
+            rows: i_lay.rows_needed(cfg.aw) as u32,
+        },
+        Inst::Load {
+            target: BufTarget::Stationary,
+            hbm_addr: wa,
+            rows: w_lay.rows_needed(cfg.aw) as u32,
+        },
+        Inst::SetIVNLayout(LayoutInst { layout: i_lay }),
+        Inst::SetWVNLayout(LayoutInst { layout: w_lay }),
+        Inst::SetOVNLayout(LayoutInst { layout: o_lay }),
+        Inst::ExecuteMapping(em),
+        Inst::ExecuteStreaming(StreamCfg {
+            df: Dataflow::WoS,
+            m0: 0,
+            s_m: 4,
+            t: 1,
+            vn_size: vn,
+        }),
+    ]
+}
+
+fn run_error_case(
+    cfg: &ArchConfig,
+    n: usize,
+    em: MappingCfg,
+    o_lay: VnLayout,
+) -> (Result<(), SimError>, Result<(), SimError>, SimStats, SimStats) {
+    let mut fast = FunctionalSim::new(cfg);
+    let trace = single_tile_trace(&mut fast, cfg, n, em, o_lay);
+    let a = fast.exec_trace(&trace);
+    let mut slow = FunctionalSim::new(cfg);
+    slow.use_plans = false;
+    let trace = single_tile_trace(&mut slow, cfg, n, em, o_lay);
+    let b = slow.exec_trace(&trace);
+    (a, b, fast.stats.clone(), slow.stats.clone())
+}
+
+/// OB overflow raises the identical `SimError` (same row, same depth) at
+/// the identical point, with identical partial `SimStats`, in both modes.
+#[test]
+fn ob_overflow_identical_in_both_modes() {
+    let mut cfg = ArchConfig::paper(4, 4);
+    cfg.ob_bytes = 4 * 4 * 8; // d_ob = 8 rows
+    assert_eq!(cfg.d_ob(), 8);
+    // Distinct stationary columns per PE column (Fig. 4 case 3): q reaches
+    // 15, so OVN rows reach 12..16 ≥ depth 8 → overflow mid-wave.
+    let em = MappingCfg { r0: 0, c0: 0, g_r: 4, g_c: 4, s_r: 1, s_c: 4 };
+    let o_lay = VnLayout::row_major(4, 4, 4);
+    let (a, b, sa, sb) = run_error_case(&cfg, 16, em, o_lay);
+    assert!(matches!(a, Err(SimError::ObOverflow { .. })), "got {a:?}");
+    assert_eq!(a, b);
+    assert_eq!(sa, sb, "stats at error point must match");
+}
+
+/// Orphan-psum shapes (outputs falling outside the OVN layout with nonzero
+/// partial sums) raise the identical error with identical stats.
+#[test]
+fn orphan_psum_identical_in_both_modes() {
+    let cfg = ArchConfig::paper(4, 4);
+    // Replicated stationary VNs; OVN layout only covers p < 2 of 4.
+    let em = MappingCfg { r0: 0, c0: 0, g_r: 4, g_c: 1, s_r: 1, s_c: 0 };
+    let o_lay = VnLayout::row_major(1, 2, 4);
+    let (a, b, sa, sb) = run_error_case(&cfg, 4, em, o_lay);
+    assert!(matches!(a, Err(SimError::OrphanPsum { .. })), "got {a:?}");
+    assert_eq!(a, b);
+    assert_eq!(sa, sb, "stats at error point must match");
+}
+
+/// A healthy single-tile trace on the same harness stays error-free and
+/// identical in both modes (guards the harness itself).
+#[test]
+fn healthy_trace_identical_in_both_modes() {
+    let cfg = ArchConfig::paper(4, 4);
+    let em = MappingCfg { r0: 0, c0: 0, g_r: 4, g_c: 1, s_r: 1, s_c: 0 };
+    let o_lay = VnLayout::row_major(1, 4, 4);
+    let (a, b, sa, sb) = run_error_case(&cfg, 4, em, o_lay);
+    assert_eq!(a, Ok(()));
+    assert_eq!(a, b);
+    assert_eq!(sa, sb);
+}
