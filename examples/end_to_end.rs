@@ -2,12 +2,17 @@
 //!
 //! Pipeline exercised (and cross-checked) in one run:
 //!
-//! 1. **Mapper (L3)**: (mapping, layout) co-search for a real FHE-BConv
-//!    GEMM shape on FEATHER+ 4×4 — §V.
-//! 2. **Lowering → MINISA trace**: deterministic Eq.-(1) lowering — §V-B7.
-//! 3. **Functional simulation**: the trace executes on real int8 operands
-//!    through buffers / NEST / BIRRD / OB — §IV-G semantics.
-//! 4. **AOT oracle (L1+L2 via PJRT)**: the same GEMM runs through the
+//! 1. **Program compilation (L3)**: a 2-layer FHE-BConv chain (the Table I
+//!    tile shape feeding a projection) compiled into a model Program —
+//!    chain-aware (mapping, layout) co-search with §V-A boundary
+//!    compatibility, fused §IV-G trace, precompiled wave plans.
+//! 2. **Lowering → MINISA traces**: deterministic Eq.-(1) lowering per
+//!    layer, fused with the §IV-G2 elision accounting.
+//! 3. **Whole-program functional simulation**: the compiled program runs on
+//!    real int8 operands through buffers / NEST / BIRRD / OB — every tile
+//!    through the program's precompiled wave plans (zero runtime plan
+//!    compiles) — and must equal the chained naive reference exactly.
+//! 4. **AOT oracle (L1+L2 via PJRT)**: layer 0 runs through the
 //!    JAX/Pallas-lowered HLO artifact on the PJRT CPU client — Python is
 //!    not involved at runtime.
 //! 5. **Cross-check**: simulator output == naive GEMM == PJRT oracle.
@@ -21,50 +26,71 @@
 
 use minisa::arch::ArchConfig;
 use minisa::coordinator::{evaluate_suite, summarize_by_config};
-use minisa::functional::naive_gemm;
-use minisa::mapper::exec::execute_program;
-use minisa::mapper::search::{search, MapperOptions};
-use minisa::mapper::lower_gemm;
+use minisa::functional::{naive_gemm, FunctionalSim};
+use minisa::mapper::chain::Chain;
+use minisa::mapper::search::MapperOptions;
+use minisa::program::Program;
 use minisa::report::{eng, f2, pct, Table};
 use minisa::runtime::{gemm_via_tiles, Runtime};
 use minisa::util::Lcg;
-use minisa::workloads::{self, Gemm};
+use minisa::workloads;
 
 fn main() -> anyhow::Result<()> {
     println!("=== MINISA / FEATHER+ end-to-end driver ===\n");
 
     // ------------------------------------------------------------------
-    // Stage 1-3: mapper → trace → functional simulation on real data.
-    // A BConv-shaped slice (K=40, N=88 — the Table I workload's tile).
+    // Stage 1-3: chain program → fused trace → whole-program simulation.
+    // A BConv-shaped slice (K=40, N=88 — the Table I workload's tile)
+    // feeding an 88→24 projection.
     let cfg = ArchConfig::paper(4, 4);
-    let g = Gemm::new("bconv_slice", "FHE-BConv", 64, 40, 88);
+    let chain = Chain::mlp("bconv_chain", 64, &[40, 88, 24]);
     let opts = MapperOptions::default();
-    let d = search(&cfg, &g, &opts).ok_or_else(|| anyhow::anyhow!("no mapping"))?;
-    let prog = lower_gemm(&cfg, &g, &d.choice, d.i_order, d.w_order, d.o_order);
+    let program = Program::compile(&cfg, &chain, &opts)
+        .ok_or_else(|| anyhow::anyhow!("no mapping for the chain"))?;
+    for l in &program.layers {
+        println!(
+            "[1] mapper: {} on {} → df {:?}, tile ({},{},{}), nbc {}, dup {}",
+            l.gemm, cfg.name(), l.decision.choice.df, l.decision.choice.m_t,
+            l.decision.choice.k_t, l.decision.choice.n_t, l.decision.choice.nbc,
+            l.decision.choice.dup
+        );
+    }
     println!(
-        "[1] mapper: {g} on {} → df {:?}, tile ({},{},{}), nbc {}, dup {}",
-        cfg.name(), d.choice.df, d.choice.m_t, d.choice.k_t, d.choice.n_t,
-        d.choice.nbc, d.choice.dup
-    );
-    println!(
-        "[2] lowering: {} MINISA instructions = {} bytes (micro twin: {} bytes, {}×)",
-        prog.trace.len(),
-        prog.minisa_bytes(),
-        prog.micro_bytes(),
-        eng(prog.instr_reduction())
+        "[2] lowering: {} fused MINISA instructions = {} bytes ({} B standalone, {} SetIVNLayout \
+         elided §IV-G2; micro twin: {} bytes)",
+        program.fused.len(),
+        program.fused_bytes,
+        program.standalone_bytes,
+        program.elided,
+        program.layers.iter().map(|l| l.lowered.micro_bytes()).sum::<u64>(),
     );
 
     let mut rng = Lcg::new(2026);
-    let iv: Vec<i32> = (0..g.m * g.k).map(|_| rng.range(0, 9) as i32 - 4).collect();
-    let wv: Vec<i32> = (0..g.k * g.n).map(|_| rng.range(0, 9) as i32 - 4).collect();
-    let sim_out = execute_program(&cfg, &g, &prog, &iv, &wv)
+    let input: Vec<i32> =
+        (0..program.rows() * program.in_features()).map(|_| rng.range(0, 9) as i32 - 4).collect();
+    let weights: Vec<Vec<i32>> = chain
+        .layers
+        .iter()
+        .map(|g| (0..g.k * g.n).map(|_| rng.range(0, 9) as i32 - 4).collect())
+        .collect();
+    let mut sim = FunctionalSim::new(&cfg);
+    let sim_out = program
+        .execute_i32(&mut sim, &input, &weights)
         .map_err(|e| anyhow::anyhow!("functional sim: {e}"))?;
-    let reference = naive_gemm(&iv, &wv, g.m, g.k, g.n);
-    anyhow::ensure!(sim_out == reference, "simulator disagrees with naive GEMM");
-    println!("[3] functional simulation: {} outputs exact vs naive GEMM ✓", sim_out.len());
+    let reference = program.reference_i32(&input, &weights);
+    anyhow::ensure!(sim_out == reference, "simulator disagrees with chained naive GEMM");
+    anyhow::ensure!(sim.plan_compiles == 0, "program plans were not reused");
+    println!(
+        "[3] whole-program simulation: {} outputs exact vs chained naive GEMM, {} precompiled \
+         wave plans, 0 runtime plan compiles ✓",
+        sim_out.len(),
+        program.plan_count()
+    );
 
     // ------------------------------------------------------------------
-    // Stage 4-5: the AOT JAX/Pallas oracle through PJRT.
+    // Stage 4-5: the AOT JAX/Pallas oracle through PJRT (layer 0).
+    let g0 = &chain.layers[0];
+    let l0_ref = naive_gemm(&input, &weights[0], g0.m, g0.k, g0.n);
     match Runtime::open(std::path::Path::new("artifacts")) {
         Ok(rt) => {
             println!(
@@ -72,11 +98,11 @@ fn main() -> anyhow::Result<()> {
                 rt.platform(),
                 rt.artifacts().len()
             );
-            let xf: Vec<f32> = iv.iter().map(|&v| v as f32).collect();
-            let wf: Vec<f32> = wv.iter().map(|&v| v as f32).collect();
-            let oracle = gemm_via_tiles(&rt, g.m, g.k, g.n, &xf, &wf)?;
+            let xf: Vec<f32> = input.iter().map(|&v| v as f32).collect();
+            let wf: Vec<f32> = weights[0].iter().map(|&v| v as f32).collect();
+            let oracle = gemm_via_tiles(&rt, g0.m, g0.k, g0.n, &xf, &wf)?;
             let mut max_err = 0f64;
-            for (a, b) in oracle.iter().zip(&reference) {
+            for (a, b) in oracle.iter().zip(&l0_ref) {
                 max_err = max_err.max((*a as f64 - *b as f64).abs());
             }
             anyhow::ensure!(

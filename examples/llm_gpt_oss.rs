@@ -2,11 +2,11 @@
 //! dynamic-operand case FEATHER+ was refined for: both operands arrive at
 //! runtime, so FEATHER's pre-known-weight offline reorder does not apply.
 //!
-//! Builds the multi-layer MINISA trace for a 3-layer MLP slice of the
-//! model, demonstrates the §IV-G2 consecutive-layer optimization (layer i's
-//! SetOVNLayout doubles as layer i+1's SetIVNLayout), then serves batched
-//! GEMM requests through the serving coordinator (PJRT runtime when
-//! artifacts are available).
+//! Compiles the 3-layer MLP slice of the model into a **Program** — one
+//! chain-aware mapper pass, the fused §IV-G multi-layer trace with the
+//! consecutive-layer `SetIVNLayout` elision (§IV-G2), and precompiled wave
+//! plans — then serves decode-style activation-only requests through a
+//! registered model session (PJRT runtime when artifacts are available).
 //!
 //! ```sh
 //! cargo run --release --example llm_gpt_oss
@@ -16,73 +16,51 @@ use std::sync::Arc;
 
 use minisa::arch::ArchConfig;
 use minisa::coordinator::serve::{spawn, NaiveExecutor, Request, TileExecutor};
-use minisa::isa::inst::{Inst, LayoutInst};
-use minisa::isa::Trace;
-use minisa::mapper::search::{search, MapperOptions};
-use minisa::mapper::lower_gemm;
+use minisa::mapper::chain::Chain;
+use minisa::mapper::search::MapperOptions;
+use minisa::program::Program;
 use minisa::util::{percentile, Lcg};
-use minisa::workloads::Gemm;
+use minisa::workloads;
 
 fn main() -> anyhow::Result<()> {
     let cfg = ArchConfig::paper(16, 64);
-    // A GPT-oss-like MLP slice: 2880 → 5120 → 2880 (Tab. IV shapes), with a
-    // short sequence so the example runs quickly.
-    let layers = [
-        Gemm::new("qkv_proj", "GPT-oss", 256, 2880, 5120),
-        Gemm::new("mlp_down", "GPT-oss", 256, 5120, 2880),
-        Gemm::new("lm_head_slice", "GPT-oss", 256, 2880, 2048),
-    ];
+    // A GPT-oss-like MLP slice: 2880 → 5120 → 2880 → 2048 (Tab. IV shapes),
+    // with a short sequence so the example runs quickly.
+    let chain = Chain::mlp("gpt_oss_mlp", 256, &workloads::gpt_oss_mlp_dims());
     let opts = MapperOptions { full_layout_search: false, ..Default::default() };
 
-    // 1. Per-layer mapping + one fused multi-layer trace.
-    let mut chain = Trace::new();
-    let mut total_minisa = 0u64;
-    let mut total_micro = 0u64;
-    for g in &layers {
-        let d = search(&cfg, g, &opts).ok_or_else(|| anyhow::anyhow!("no mapping for {g}"))?;
-        let prog = lower_gemm(&cfg, g, &d.choice, d.i_order, d.w_order, d.o_order);
+    // 1. Compile the whole chain once: per-layer decisions under the §V-A
+    // boundary-compatibility rule, fused trace, wave plans.
+    let program = Program::compile(&cfg, &chain, &opts)
+        .ok_or_else(|| anyhow::anyhow!("no mapping for the GPT-oss chain"))?;
+    for l in &program.layers {
+        let (g, d) = (&l.gemm, &l.decision);
         println!(
-            "{:<14} M={} K={} N={}: df {:?}, tile ({},{},{}), util {:.1}%, {} insts, {} B MINISA / {} B micro",
+            "{:<16} M={} K={} N={}: df {:?}, tile ({},{},{}), util {:.1}%, {} insts, {} B MINISA / {} B micro",
             g.name, g.m, g.k, g.n, d.choice.df, d.choice.m_t, d.choice.k_t, d.choice.n_t,
             d.report.utilization() * 100.0,
-            prog.trace.len(),
-            prog.minisa_bytes(),
-            prog.micro_bytes(),
+            l.lowered.trace.len(),
+            l.lowered.minisa_bytes(),
+            l.lowered.micro_bytes(),
         );
-        total_minisa += prog.minisa_bytes();
-        total_micro += prog.micro_bytes();
-        chain.begin_layer();
-        // Splice the per-layer program into the chain trace.
-        for inst in &prog.trace.insts {
-            chain.push(*inst);
-        }
     }
-    // 2. §IV-G2: consecutive layers can skip SetIVNLayout when the previous
-    // layer's SetOVNLayout already describes the layout. (For illustration,
-    // make the layouts agree, then elide.)
-    let mut demo = Trace::new();
-    let shared = minisa::layout::VnLayout::new(1, 16, 16, 8, 16);
-    for li in 0..3 {
-        demo.begin_layer();
-        demo.push(Inst::SetIVNLayout(LayoutInst { layout: shared }));
-        demo.push(Inst::SetWVNLayout(LayoutInst { layout: shared }));
-        demo.push(Inst::SetOVNLayout(LayoutInst { layout: shared }));
-        let _ = li;
-    }
-    let before = demo.len();
-    let elided = demo.elide_interlayer_layouts();
+    // 2. §IV-G2 in the compiled artifact: consecutive layers alternate
+    // dataflow, so layer i's committed output layout is what layer i+1
+    // consumes — the successor's SetIVNLayout is redundant and elided.
     println!(
-        "\nconsecutive-layer elision: {before} → {} instructions ({elided} SetIVNLayout skipped, §IV-G2)",
-        demo.len()
+        "\nprogram: {} layers fused into one {}-instruction trace, {} SetIVNLayout elided (§IV-G2)",
+        program.layer_count(),
+        program.fused.len(),
+        program.elided,
     );
     println!(
-        "chain totals: {} B MINISA vs {} B micro-instructions ({:.0}×)\n",
-        total_minisa,
-        total_micro,
-        total_micro as f64 / total_minisa.max(1) as f64
+        "chain totals: {} B fused MINISA ({} B standalone), {} wave plans precompiled, modeled {:.0} cycles/pass\n",
+        program.fused_bytes, program.standalone_bytes, program.plan_count(), program.total_cycles,
     );
 
-    // 3. Serve decode-style batched requests through the runtime.
+    // 3. Serve decode-style batched requests through a model session: the
+    // chain compiles once at registration; every request carries only its
+    // activation and batches with same-program neighbours.
     let executor: Arc<dyn TileExecutor> =
         match minisa::runtime::PjrtExecutor::start(std::path::Path::new("artifacts")) {
             Ok(e) => {
@@ -94,37 +72,38 @@ fn main() -> anyhow::Result<()> {
                 Arc::new(NaiveExecutor)
             }
         };
-    let (tx, rx, h) = spawn(&cfg, executor);
+    let (tx, rx, h, server) = spawn(&cfg, executor);
     let mut rng = Lcg::new(17);
-    let weight = rng.f32_matrix(64, 64); // shared per-layer weight (decode)
+    // A decode-scale session (16 rows/request) so the naive fallback stays
+    // fast; the registration-time compile is the same machinery as above.
+    let decode = Chain::mlp("decode_mlp", 16, &[64, 128, 64]);
+    let weights: Vec<Vec<f32>> = decode.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect();
+    let pid = server.register_chain(&decode, weights)?;
     let n_req = 32;
     let wall = std::time::Instant::now();
     for id in 0..n_req {
-        tx.send(Request {
-            id,
-            m: 16, // one decode micro-batch row block
-            k: 64,
-            n: 64,
-            input: rng.f32_matrix(16, 64),
-            weight: weight.clone(),
-        })?;
+        tx.send(Request::for_program(id, pid, 16, rng.f32_matrix(16, 64)))?;
     }
     let mut lat = Vec::new();
     for _ in 0..n_req {
-        lat.push(rx.recv()?.service_us);
+        let r = rx.recv()?;
+        anyhow::ensure!(r.error.is_none(), "request {}: {}", r.id, r.error.unwrap_or_default());
+        lat.push(r.service_us);
     }
     drop(tx);
     let stats = h.join().unwrap();
     let wall_us = wall.elapsed().as_secs_f64() * 1e6;
     println!(
-        "served {} requests in {:.1} ms: p50 {:.0} µs, p99 {:.0} µs, {} batches (max batch {}), {:.0} req/s",
-        stats.served,
+        "served {} program requests in {:.1} ms: p50 {:.0} µs, p99 {:.0} µs, {} batches (max batch {}), \
+         {:.0} req/s, {} chain compile(s)",
+        stats.program_served,
         wall_us / 1e3,
         percentile(&lat, 50.0),
         percentile(&lat, 99.0),
         stats.batches,
         stats.max_batch,
         stats.throughput_per_s(wall_us),
+        stats.program_compiles,
     );
     Ok(())
 }

@@ -380,15 +380,12 @@ pub fn cmd_workloads(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `minisa serve` — run the PJRT-backed serving loop on a synthetic trace.
-pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    use crate::coordinator::serve::{spawn, NaiveExecutor, Request, TileExecutor};
+/// Pick the PJRT executor when artifacts are available, else the naive one.
+fn serving_executor(args: &Args) -> std::sync::Arc<dyn crate::coordinator::serve::TileExecutor> {
+    use crate::coordinator::serve::NaiveExecutor;
     use std::sync::Arc;
-
-    let cfg = configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(16, 64));
-    let requests = args.usize_flag("requests", 64);
     let dir = PathBuf::from(args.str_flag("artifacts", "artifacts"));
-    let executor: Arc<dyn TileExecutor> = match crate::runtime::PjrtExecutor::start(&dir) {
+    match crate::runtime::PjrtExecutor::start(&dir) {
         Ok(exe) => {
             eprintln!("PJRT runtime on {}", exe.platform());
             Arc::new(exe)
@@ -397,31 +394,41 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             eprintln!("PJRT unavailable ({e:#}); using naive executor");
             Arc::new(NaiveExecutor)
         }
-    };
+    }
+}
+
+/// `minisa serve` — run the serving loop on ad-hoc single-GEMM requests.
+pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use crate::coordinator::serve::{spawn, Request};
+    use std::sync::Arc;
+
+    let cfg = configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(16, 64));
+    let requests = args.usize_flag("requests", 64);
+    let executor = serving_executor(args);
     let backend = executor.name().to_string();
-    let (tx, rx, h) = spawn(&cfg, executor);
+    let (tx, rx, h, _server) = spawn(&cfg, executor);
     let mut rng = crate::util::Lcg::new(7);
     let wall = std::time::Instant::now();
-    let weight = rng.f32_matrix(64, 64);
+    let weight = Arc::new(rng.f32_matrix(64, 64)); // shared → batches by identity
     for id in 0..requests as u64 {
-        tx.send(Request {
-            id,
-            m: 64,
-            k: 64,
-            n: 64,
-            input: rng.f32_matrix(64, 64),
-            weight: weight.clone(),
-        })?;
+        tx.send(Request::gemm(id, 64, 64, 64, rng.f32_matrix(64, 64), Arc::clone(&weight)))?;
     }
     let mut served = 0;
+    let mut failed = 0;
     let mut lat = Vec::new();
-    while served < requests {
+    while served + failed < requests {
         let r = rx.recv()?;
-        lat.push(r.service_us);
-        served += 1;
+        if let Some(e) = r.error {
+            eprintln!("request {} failed: {e}", r.id);
+            failed += 1;
+        } else {
+            lat.push(r.service_us);
+            served += 1;
+        }
     }
     drop(tx);
     let stats = h.join().map_err(|_| anyhow::anyhow!("server panicked"))?;
+    anyhow::ensure!(failed == 0, "{failed}/{requests} requests failed");
     let wall_us = wall.elapsed().as_secs_f64() * 1e6;
     println!(
         "served {} requests on '{}' in {:.1} ms: p50 {:.1} µs, p99 {:.1} µs, {:.0} req/s, {} batches (max {})",
@@ -433,6 +440,75 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         stats.throughput_per_s(wall_us),
         stats.batches,
         stats.max_batch,
+    );
+    Ok(())
+}
+
+/// `minisa serve-model` — the compile-once/serve-many path: register a
+/// model chain as a program session, then stream activation-only requests
+/// at it. `--dims k0,k1,...` sets the feature ladder (default: a small MLP;
+/// `--gpt` uses the Tab. IV GPT-oss MLP slice), `--m` the rows per request.
+pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
+    use crate::coordinator::serve::{spawn, Request};
+    use crate::mapper::chain::Chain;
+
+    let cfg = configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(16, 64));
+    let m = args.usize_flag("m", 16);
+    let requests = args.usize_flag("requests", 32);
+    let dims: Vec<usize> = if args.bool_flag("gpt") {
+        workloads::gpt_oss_mlp_dims()
+    } else {
+        let spec = args.str_flag("dims", "256,512,256");
+        let parsed: Result<Vec<usize>, _> = spec.split(',').map(|t| t.trim().parse()).collect();
+        parsed.map_err(|e| anyhow::anyhow!("--dims '{spec}': {e}"))?
+    };
+    anyhow::ensure!(dims.len() >= 2, "--dims needs at least two widths");
+    let chain = Chain::mlp("serve_model", m, &dims);
+
+    let executor = serving_executor(args);
+    let backend = executor.name().to_string();
+    let (tx, rx, h, server) = spawn(&cfg, executor);
+    let mut rng = crate::util::Lcg::new(23);
+    let weights: Vec<Vec<f32>> = chain.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect();
+    let pid = server.register_chain(&chain, weights)?;
+    let prog = server.program(pid).expect("just registered");
+    println!(
+        "program {:?}: {} layers, modeled {:.0} cycles/pass, fused trace {} B vs {} B standalone \
+         ({} SetIVNLayout elided, §IV-G2), {} wave plans precompiled",
+        pid,
+        prog.layer_count(),
+        prog.total_cycles,
+        prog.fused_bytes,
+        prog.standalone_bytes,
+        prog.elided,
+        prog.plan_count(),
+    );
+
+    let wall = std::time::Instant::now();
+    for id in 0..requests as u64 {
+        tx.send(Request::for_program(id, pid, m, rng.f32_matrix(m, dims[0])))?;
+    }
+    let mut lat = Vec::new();
+    for _ in 0..requests {
+        let r = rx.recv()?;
+        anyhow::ensure!(r.error.is_none(), "request {}: {}", r.id, r.error.unwrap_or_default());
+        lat.push(r.service_us);
+    }
+    drop(tx);
+    let stats = h.join().map_err(|_| anyhow::anyhow!("server panicked"))?;
+    let wall_us = wall.elapsed().as_secs_f64() * 1e6;
+    println!(
+        "served {} program requests on '{}' in {:.1} ms: p50 {:.1} µs, p99 {:.1} µs, \
+         {:.0} req/s, {} batches (max {}), {} chain compile(s)",
+        stats.program_served,
+        backend,
+        wall_us / 1e3,
+        crate::util::percentile(&lat, 50.0),
+        crate::util::percentile(&lat, 99.0),
+        stats.throughput_per_s(wall_us),
+        stats.batches,
+        stats.max_batch,
+        stats.program_compiles,
     );
     Ok(())
 }
@@ -453,7 +529,9 @@ pub fn usage() -> &'static str {
        bitwidth   Table V ISA bitwidths\n\
        area       Table VI area/power model\n\
        workloads  dump the 50-workload suite CSV [--small]\n\
-       serve      run the serving loop on the PJRT runtime [--requests N]\n\
+       serve      serving loop, ad-hoc single-GEMM requests [--requests N]\n\
+       serve-model  compile-once/serve-many model sessions (§IV-G programs)\n\
+                  [--dims k0,k1,... | --gpt] [--m N] [--requests N]\n\
        animate    cycle-by-cycle NEST/BIRRD/OB animation [--m --k --n --waves]\n"
 }
 
@@ -485,6 +563,7 @@ pub fn run(argv: &[String]) -> i32 {
             }
         }
         "serve" => cmd_serve(&args),
+        "serve-model" => cmd_serve_model(&args),
         "help" | "" => {
             println!("{}", usage());
             Ok(())
@@ -540,5 +619,26 @@ mod tests {
     fn unknown_command_fails() {
         let argv = vec!["frobnicate".to_string()];
         assert_eq!(run(&argv), 2);
+    }
+
+    #[test]
+    fn serve_model_command_runs() {
+        let argv: Vec<String> = [
+            "serve-model", "--dims", "16,24,16", "--m", "4", "--requests", "6", "--ah", "4",
+            "--aw", "4",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(run(&argv), 0);
+    }
+
+    #[test]
+    fn serve_model_rejects_bad_dims() {
+        let argv: Vec<String> = ["serve-model", "--dims", "16", "--ah", "4", "--aw", "4"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(run(&argv), 1);
     }
 }

@@ -1,7 +1,8 @@
 //! Evaluation coordinator — the L3 orchestrator that drives the paper's
 //! experiment matrix (50 workloads × 9 array configurations) across worker
-//! threads, plus the GEMM-serving request loop (`serve` module) that
-//! exercises the PJRT runtime.
+//! threads, plus the model-serving request loop (`serve` module): compiled
+//! program sessions (compile-once/serve-many, `crate::program`) and ad-hoc
+//! GEMM requests over the PJRT runtime.
 
 pub mod serve;
 

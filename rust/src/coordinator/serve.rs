@@ -1,33 +1,75 @@
-//! GEMM-serving request loop — the L3 hot path.
+//! Model-serving request loop — the L3 hot path.
 //!
-//! A leader thread accepts GEMM requests, routes them to the per-shape
-//! mapping decision (mapper results are cached), batches compatible
-//! requests, and dispatches execution to a pluggable `TileExecutor` — the
-//! PJRT runtime in production (`runtime::PjrtExecutor`), the functional
-//! simulator in tests. Python never appears on this path: the executor
+//! A leader thread accepts requests, batches compatible ones, and
+//! dispatches execution to a pluggable `TileExecutor` — the PJRT runtime in
+//! production (`runtime::PjrtExecutor`), the functional simulator or the
+//! naive executor in tests. Python never appears on this path: the executor
 //! consumes AOT-compiled artifacts.
+//!
+//! Two request kinds coexist:
+//!
+//! * **Program requests** (the compile-once/serve-many path): a model chain
+//!   is registered once (`Server::register_chain`) — one chain-aware mapper
+//!   run, one trace fusion, one wave-plan compilation, all captured in an
+//!   immutable `Arc<Program>` session — and every subsequent request
+//!   references the session by [`ProgramId`], carrying only its activation.
+//!   Batching stacks activations of the *same program* (true shared-weight
+//!   continuous batching: the weights live in the session, not the
+//!   request).
+//! * **Ad-hoc GEMM requests** (the pre-Program path, kept for one-off
+//!   shapes and as the equivalence baseline): per-shape mapping decisions
+//!   are cached; batching keys on (shape, weight identity) where weight
+//!   identity is `Arc` pointer equality — no weight cloning or per-element
+//!   comparison on the dispatch path.
 //!
 //! Built on std::thread + mpsc channels (offline substitute for tokio,
 //! DESIGN.md).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use crate::arch::config::ArchConfig;
+use crate::mapper::chain::Chain;
 use crate::mapper::search::{search, MapperOptions};
 use crate::mapper::Decision;
+use crate::program::Program;
 use crate::workloads::Gemm;
 
-/// A GEMM request: f32 operands (the PJRT oracle path computes in f32).
+/// Handle to a registered model session (a compiled [`Program`] plus its
+/// resident weights).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ProgramId(pub u64);
+
+/// What a request asks for.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// One ad-hoc GEMM carrying its own operands. The weight is shared by
+    /// `Arc` so identical-weight requests batch by pointer identity.
+    Gemm { m: usize, k: usize, n: usize, input: Vec<f32>, weight: Arc<Vec<f32>> },
+    /// An activation (`rows × in_features`, row-major) for a registered
+    /// program; weights live in the session.
+    Program { program: ProgramId, rows: usize, input: Vec<f32> },
+}
+
+/// A serving request: f32 operands (the PJRT oracle path computes in f32).
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
-    pub m: usize,
-    pub k: usize,
-    pub n: usize,
-    pub input: Vec<f32>,
-    pub weight: Vec<f32>,
+    pub payload: Payload,
+}
+
+impl Request {
+    /// An ad-hoc single-GEMM request.
+    pub fn gemm(id: u64, m: usize, k: usize, n: usize, input: Vec<f32>, weight: Arc<Vec<f32>>) -> Self {
+        Self { id, payload: Payload::Gemm { m, k, n, input, weight } }
+    }
+
+    /// An activation for a registered program.
+    pub fn for_program(id: u64, program: ProgramId, rows: usize, input: Vec<f32>) -> Self {
+        Self { id, payload: Payload::Program { program, rows, input } }
+    }
 }
 
 /// A served response.
@@ -37,10 +79,17 @@ pub struct Response {
     pub output: Vec<f32>,
     /// Wall-clock service time (queue + execute) in µs.
     pub service_us: f64,
-    /// Modeled FEATHER+ cycles for this request (from the mapper decision).
+    /// Modeled FEATHER+ cycles for this request. Single-GEMM: the mapper
+    /// decision for the *stacked* batch shape. Program: the chain's
+    /// compile-time total for its registered shape — deliberately not
+    /// re-modeled per batched row count, since avoiding per-request mapper
+    /// work is what sessions exist for.
     pub modeled_cycles: f64,
     /// Requests co-batched with this one.
     pub batch_size: usize,
+    /// Set when the request could not be served (unknown program, shape
+    /// mismatch, executor failure); `output` is empty then.
+    pub error: Option<String>,
 }
 
 /// Execution backend abstraction.
@@ -49,6 +98,35 @@ pub trait TileExecutor: Send + Sync {
     fn gemm(&self, m: usize, k: usize, n: usize, i: &[f32], w: &[f32])
         -> anyhow::Result<Vec<f32>>;
     fn name(&self) -> &str;
+
+    /// Execute a whole compiled program on `rows` activation rows
+    /// (`input.len() == rows · program.in_features()`), returning
+    /// `rows × program.out_features()` row-major. The weights arrive as the
+    /// session's shared `Arc` so backends can retain them without copying
+    /// the (potentially hundreds of MB of) matrices per dispatch.
+    ///
+    /// The default walks the chain layer by layer through [`Self::gemm`],
+    /// so every executor (naive, PJRT, …) serves programs out of the box;
+    /// backends with a fused whole-chain path override it.
+    fn run_program(
+        &self,
+        program: &Program,
+        rows: usize,
+        input: &[f32],
+        weights: &Arc<Vec<Vec<f32>>>,
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(
+            weights.len() == program.layer_count(),
+            "program expects {} weight matrices, got {}",
+            program.layer_count(),
+            weights.len()
+        );
+        let mut act = input.to_vec();
+        for (layer, w) in program.layers.iter().zip(weights.iter()) {
+            act = self.gemm(rows, layer.gemm.k, layer.gemm.n, &act, w)?;
+        }
+        Ok(act)
+    }
 }
 
 /// Reference executor: naive f32 GEMM (tests / fallback).
@@ -90,6 +168,14 @@ pub struct ServeStats {
     pub batches: u64,
     pub mapper_cache_hits: u64,
     pub mapper_cache_misses: u64,
+    /// Chains compiled into programs (`register_chain` calls that ran the
+    /// chain-aware mapper). Program *requests* never bump this: compile
+    /// once, serve many.
+    pub program_compiles: u64,
+    /// Requests served through a registered program.
+    pub program_served: u64,
+    /// Requests answered with an error.
+    pub errors: u64,
     pub total_service_us: f64,
     pub max_batch: usize,
 }
@@ -120,17 +206,45 @@ struct ShapeSlot {
     build: Mutex<()>,
 }
 
-/// The serving coordinator (leader). Owns the mapper cache and the batcher.
+/// A registered model session: compiled program + resident weights.
+#[derive(Clone)]
+struct Session {
+    program: Arc<Program>,
+    weights: Arc<Vec<Vec<f32>>>,
+}
+
+/// How requests group into one executor dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BatchKey {
+    /// Shape plus weight identity (the `Arc` pointer, not its contents).
+    Gemm { m: usize, k: usize, n: usize, weight: usize },
+    Program(ProgramId),
+}
+
+fn batch_key(r: &Request) -> BatchKey {
+    match &r.payload {
+        Payload::Gemm { m, k, n, weight, .. } => {
+            BatchKey::Gemm { m: *m, k: *k, n: *n, weight: Arc::as_ptr(weight) as usize }
+        }
+        Payload::Program { program, .. } => BatchKey::Program(*program),
+    }
+}
+
+/// The serving coordinator (leader). Owns the model sessions, the per-shape
+/// mapper cache and the batcher.
 pub struct Server {
     cfg: ArchConfig,
     executor: Arc<dyn TileExecutor>,
     opts: MapperOptions,
-    /// Shape → mapping decision routing table. `RwLock` so concurrent hits
-    /// on *different* shapes share a read lock (the seed's `Mutex<HashMap>`
-    /// serialized every lookup); per-shape `ShapeSlot`s de-duplicate
-    /// concurrent mapper runs. Infeasible shapes cache `None` so repeat
-    /// requests don't re-run a search that cannot succeed.
+    /// Shape → mapping decision routing table for ad-hoc GEMMs. `RwLock` so
+    /// concurrent hits on *different* shapes share a read lock; per-shape
+    /// `ShapeSlot`s de-duplicate concurrent mapper runs. Infeasible shapes
+    /// cache `None` so repeat requests don't re-run a search that cannot
+    /// succeed.
     cache: RwLock<HashMap<(usize, usize, usize), Arc<ShapeSlot>>>,
+    /// Registered model sessions (compile-once/serve-many).
+    sessions: RwLock<HashMap<ProgramId, Session>>,
+    next_program: AtomicU64,
     pub stats: Mutex<ServeStats>,
     /// Max requests batched per dispatch.
     pub max_batch: usize,
@@ -143,17 +257,64 @@ impl Server {
             executor,
             opts: MapperOptions { full_layout_search: false, threads: 1, ..Default::default() },
             cache: RwLock::new(HashMap::new()),
+            sessions: RwLock::new(HashMap::new()),
+            next_program: AtomicU64::new(1),
             stats: Mutex::new(ServeStats::default()),
             max_batch: 8,
         }
     }
 
+    /// Register a model chain: runs the chain-aware mapper, fuses the
+    /// trace, precompiles wave plans — exactly once — and pins the weights
+    /// in the session. Requests then reference the returned [`ProgramId`].
+    pub fn register_chain(&self, chain: &Chain, weights: Vec<Vec<f32>>) -> anyhow::Result<ProgramId> {
+        chain.validate().map_err(anyhow::Error::msg)?;
+        anyhow::ensure!(
+            weights.len() == chain.layers.len(),
+            "chain has {} layers, got {} weight matrices",
+            chain.layers.len(),
+            weights.len()
+        );
+        for (g, w) in chain.layers.iter().zip(&weights) {
+            anyhow::ensure!(
+                w.len() == g.k * g.n,
+                "layer {} weight is {} elements, expected {}×{}",
+                g.name,
+                w.len(),
+                g.k,
+                g.n
+            );
+        }
+        let program = Program::compile(&self.cfg, chain, &self.opts)
+            .ok_or_else(|| anyhow::anyhow!("no feasible mapping for chain on {}", self.cfg.name()))?;
+        let id = ProgramId(self.next_program.fetch_add(1, Ordering::Relaxed));
+        self.sessions
+            .write()
+            .unwrap()
+            .insert(id, Session { program: Arc::new(program), weights: Arc::new(weights) });
+        self.stats.lock().unwrap().program_compiles += 1;
+        Ok(id)
+    }
+
+    /// The compiled program behind a session, if registered.
+    pub fn program(&self, id: ProgramId) -> Option<Arc<Program>> {
+        self.sessions.read().unwrap().get(&id).map(|s| Arc::clone(&s.program))
+    }
+
+    /// Drop a model session, releasing its program and resident weights
+    /// (sessions pin potentially large weight matrices, so long-lived
+    /// servers must unregister models they stop serving). In-flight
+    /// requests already holding the session finish normally; later
+    /// requests for the id get an `unknown program` error response.
+    pub fn unregister(&self, id: ProgramId) -> bool {
+        self.sessions.write().unwrap().remove(&id).is_some()
+    }
+
     /// Route a shape through the mapper (cached). Hot path: one shared
     /// cache read lock plus a lock-free `OnceLock` read and a single
-    /// `Decision` clone (the seed took the exclusive cache mutex twice and
-    /// cloned twice on a miss). The stats counter still takes the global
-    /// stats mutex — held for one increment; fold it into atomics if it
-    /// ever shows up in a profile.
+    /// `Decision` clone. The stats counter still takes the global stats
+    /// mutex — held for one increment; fold it into atomics if it ever
+    /// shows up in a profile.
     pub fn route(&self, m: usize, k: usize, n: usize) -> Option<Decision> {
         let key = (m, k, n);
         let slot = {
@@ -187,10 +348,10 @@ impl Server {
         d
     }
 
-    /// Serve a batch of requests pulled from `rx`, sending responses on
-    /// `tx`. Returns when `rx` closes. Requests with identical (M, K, N)
-    /// and weight pointer-equality are batched by stacking their inputs
-    /// into one taller GEMM (continuous batching for shared-weight layers).
+    /// Serve requests pulled from `rx`, sending responses on `tx`. Returns
+    /// when `rx` closes. Requests batch by [`BatchKey`]: same-program
+    /// activations stack into one taller pass through the chain; ad-hoc
+    /// GEMMs stack when shape and weight identity agree.
     pub fn run(&self, rx: Receiver<Request>, tx: Sender<Response>) {
         let mut pending: Vec<Request> = Vec::new();
         loop {
@@ -205,23 +366,19 @@ impl Server {
                     Err(_) => break,
                 }
             }
-            // Group by shape + identical weights.
             while !pending.is_empty() {
                 let head = pending.remove(0);
+                let key = batch_key(&head);
                 let mut batch = vec![head];
-                let (hm, hk, hn) = (batch[0].m, batch[0].k, batch[0].n);
-                let hw = batch[0].weight.clone();
-                pending.retain(|r| {
-                    if batch.len() < self.max_batch
-                        && (r.m, r.k, r.n) == (hm, hk, hn)
-                        && r.weight == hw
-                    {
-                        batch.push(r.clone());
-                        false
+                let mut rest = Vec::with_capacity(pending.len());
+                for r in pending.drain(..) {
+                    if batch.len() < self.max_batch && batch_key(&r) == key {
+                        batch.push(r);
                     } else {
-                        true
+                        rest.push(r);
                     }
-                });
+                }
+                pending = rest;
                 if self.dispatch(&batch, &tx).is_err() {
                     return; // receiver dropped
                 }
@@ -230,36 +387,178 @@ impl Server {
     }
 
     fn dispatch(&self, batch: &[Request], tx: &Sender<Response>) -> Result<(), ()> {
+        match &batch[0].payload {
+            Payload::Gemm { .. } => self.dispatch_gemm(batch, tx),
+            Payload::Program { .. } => self.dispatch_program(batch, tx),
+        }
+    }
+
+    /// Answer the given request ids with the same error.
+    fn fail(&self, ids: &[u64], batch_size: usize, msg: &str, tx: &Sender<Response>) -> Result<(), ()> {
+        self.stats.lock().unwrap().errors += ids.len() as u64;
+        for &id in ids {
+            tx.send(Response {
+                id,
+                output: Vec::new(),
+                service_us: 0.0,
+                modeled_cycles: 0.0,
+                batch_size,
+                error: Some(msg.to_string()),
+            })
+            .map_err(|_| ())?;
+        }
+        Ok(())
+    }
+
+    fn dispatch_gemm(&self, batch: &[Request], tx: &Sender<Response>) -> Result<(), ()> {
         let t0 = std::time::Instant::now();
-        let (m, k, n) = (batch[0].m, batch[0].k, batch[0].n);
-        let bm = m * batch.len();
+        let Payload::Gemm { m, k, n, weight, .. } = &batch[0].payload else { unreachable!() };
+        let (m, k, n) = (*m, *k, *n);
+        // The weight is shared across the batch (it is part of the batch
+        // key), so one check covers every request.
+        if weight.len() != k * n {
+            let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+            let msg = format!("weight is {} elements, expected {k}×{n}", weight.len());
+            return self.fail(&ids, batch.len(), &msg, tx);
+        }
+        // Reject malformed inputs individually — a bad co-batched request
+        // must not poison (or, via an out-of-bounds slice in a backend,
+        // kill) its neighbours' valid ones.
+        let mut valid: Vec<&Request> = Vec::with_capacity(batch.len());
+        for r in batch {
+            let Payload::Gemm { input, .. } = &r.payload else { unreachable!() };
+            if input.len() != m * k {
+                let msg = format!("input is {} elements, expected {m}×{k}", input.len());
+                self.fail(&[r.id], 1, &msg, tx)?;
+            } else {
+                valid.push(r);
+            }
+        }
+        if valid.is_empty() {
+            return Ok(());
+        }
+        let bm = m * valid.len();
         let decision = self.route(bm, k, n);
         // Stack inputs into one (batch·M) × K GEMM.
         let mut stacked = Vec::with_capacity(bm * k);
-        for r in batch {
-            stacked.extend_from_slice(&r.input);
+        for r in &valid {
+            let Payload::Gemm { input, .. } = &r.payload else { unreachable!() };
+            stacked.extend_from_slice(input);
         }
-        let out = match self.executor.gemm(bm, k, n, &stacked, &batch[0].weight) {
+        let out = match self.executor.gemm(bm, k, n, &stacked, weight) {
             Ok(o) => o,
-            Err(_) => return Err(()),
+            Err(e) => {
+                let ids: Vec<u64> = valid.iter().map(|r| r.id).collect();
+                return self.fail(&ids, valid.len(), &e.to_string(), tx);
+            }
         };
+        // A backend returning the wrong amount of output must surface as an
+        // error response, not an out-of-bounds panic of the leader thread.
+        if out.len() != bm * n {
+            let ids: Vec<u64> = valid.iter().map(|r| r.id).collect();
+            let msg = format!("executor returned {} elements, expected {}", out.len(), bm * n);
+            return self.fail(&ids, valid.len(), &msg, tx);
+        }
         let service_us = t0.elapsed().as_secs_f64() * 1e6;
         let modeled = decision.map(|d| d.report.total_cycles).unwrap_or(0.0);
         {
             let mut st = self.stats.lock().unwrap();
-            st.served += batch.len() as u64;
+            st.served += valid.len() as u64;
             st.batches += 1;
-            st.total_service_us += service_us * batch.len() as f64;
-            st.max_batch = st.max_batch.max(batch.len());
+            st.total_service_us += service_us * valid.len() as f64;
+            st.max_batch = st.max_batch.max(valid.len());
         }
-        for (bi, r) in batch.iter().enumerate() {
+        for (bi, r) in valid.iter().enumerate() {
             let resp = Response {
                 id: r.id,
                 output: out[bi * m * n..(bi + 1) * m * n].to_vec(),
                 service_us,
                 modeled_cycles: modeled,
-                batch_size: batch.len(),
+                batch_size: valid.len(),
+                error: None,
             };
+            tx.send(resp).map_err(|_| ())?;
+        }
+        Ok(())
+    }
+
+    fn dispatch_program(&self, batch: &[Request], tx: &Sender<Response>) -> Result<(), ()> {
+        let t0 = std::time::Instant::now();
+        let Payload::Program { program: pid, .. } = &batch[0].payload else { unreachable!() };
+        let session = self.sessions.read().unwrap().get(pid).cloned();
+        let Some(session) = session else {
+            let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+            return self.fail(&ids, batch.len(), &format!("unknown program {pid:?}"), tx);
+        };
+        let kf = session.program.in_features();
+        let nf = session.program.out_features();
+        // Reject malformed activations individually — a bad co-batched
+        // request must not poison its neighbours' perfectly valid ones.
+        let mut valid: Vec<&Request> = Vec::with_capacity(batch.len());
+        for r in batch {
+            let Payload::Program { rows, input, .. } = &r.payload else { unreachable!() };
+            if input.len() != *rows * kf {
+                let msg =
+                    format!("activation is {} elements, expected {}×{}", input.len(), rows, kf);
+                self.fail(&[r.id], 1, &msg, tx)?;
+            } else {
+                valid.push(r);
+            }
+        }
+        if valid.is_empty() {
+            return Ok(());
+        }
+        // Stack same-program activations into one taller chain pass (the
+        // weights are already resident in the session — nothing to compare
+        // or copy per candidate).
+        let mut total_rows = 0usize;
+        let mut stacked: Vec<f32> = Vec::new();
+        for r in &valid {
+            let Payload::Program { rows, input, .. } = &r.payload else { unreachable!() };
+            total_rows += *rows;
+            stacked.extend_from_slice(input);
+        }
+        let out = match self.executor.run_program(
+            &session.program,
+            total_rows,
+            &stacked,
+            &session.weights,
+        ) {
+            Ok(o) => o,
+            Err(e) => {
+                let ids: Vec<u64> = valid.iter().map(|r| r.id).collect();
+                return self.fail(&ids, valid.len(), &e.to_string(), tx);
+            }
+        };
+        // A backend returning the wrong amount of output must surface as an
+        // error response, not an out-of-bounds panic of the leader thread.
+        if out.len() != total_rows * nf {
+            let ids: Vec<u64> = valid.iter().map(|r| r.id).collect();
+            let msg =
+                format!("executor returned {} elements, expected {}", out.len(), total_rows * nf);
+            return self.fail(&ids, valid.len(), &msg, tx);
+        }
+        let service_us = t0.elapsed().as_secs_f64() * 1e6;
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.served += valid.len() as u64;
+            st.program_served += valid.len() as u64;
+            st.batches += 1;
+            st.total_service_us += service_us * valid.len() as f64;
+            st.max_batch = st.max_batch.max(valid.len());
+        }
+        let mut row0 = 0usize;
+        for r in &valid {
+            let Payload::Program { rows, .. } = &r.payload else { unreachable!() };
+            let resp = Response {
+                id: r.id,
+                output: out[row0 * nf..(row0 + *rows) * nf].to_vec(),
+                service_us,
+                modeled_cycles: session.program.total_cycles,
+                batch_size: valid.len(),
+                error: None,
+            };
+            row0 += *rows;
             tx.send(resp).map_err(|_| ())?;
         }
         Ok(())
@@ -267,19 +566,22 @@ impl Server {
 }
 
 /// Spawn a server on its own thread; returns (request sender, response
-/// receiver, join handle).
+/// receiver, join handle, server). The `Arc<Server>` registers model
+/// sessions (`register_chain`) and reads stats while the loop runs.
 pub fn spawn(
     cfg: &ArchConfig,
     executor: Arc<dyn TileExecutor>,
-) -> (Sender<Request>, Receiver<Response>, std::thread::JoinHandle<ServeStats>) {
+) -> (Sender<Request>, Receiver<Response>, std::thread::JoinHandle<ServeStats>, Arc<Server>) {
     let (req_tx, req_rx) = channel::<Request>();
     let (resp_tx, resp_rx) = channel::<Response>();
-    let server = Server::new(cfg, executor);
+    let server = Arc::new(Server::new(cfg, executor));
+    let srv = Arc::clone(&server);
     let handle = std::thread::spawn(move || {
-        server.run(req_rx, resp_tx);
-        server.stats.lock().unwrap().clone()
+        srv.run(req_rx, resp_tx);
+        let stats = srv.stats.lock().unwrap();
+        stats.clone()
     });
-    (req_tx, resp_rx, handle)
+    (req_tx, resp_rx, handle, server)
 }
 
 #[cfg(test)]
@@ -287,31 +589,29 @@ mod tests {
     use super::*;
     use crate::util::Lcg;
 
-    fn req(id: u64, m: usize, k: usize, n: usize, seed: u64) -> Request {
+    fn shared_weight(k: usize, n: usize) -> Arc<Vec<f32>> {
+        let mut wr = Lcg::new(999);
+        Arc::new(wr.f32_matrix(k, n))
+    }
+
+    fn req(id: u64, m: usize, k: usize, n: usize, seed: u64, w: &Arc<Vec<f32>>) -> Request {
         let mut rng = Lcg::new(seed);
-        Request {
-            id,
-            m,
-            k,
-            n,
-            input: rng.f32_matrix(m, k),
-            weight: {
-                let mut wr = Lcg::new(999); // shared weights across requests
-                wr.f32_matrix(k, n)
-            },
-        }
+        Request::gemm(id, m, k, n, rng.f32_matrix(m, k), Arc::clone(w))
     }
 
     #[test]
     fn serves_and_answers_correctly() {
         let cfg = ArchConfig::paper(4, 4);
-        let (tx, rx, h) = spawn(&cfg, Arc::new(NaiveExecutor));
-        let r = req(7, 4, 8, 4, 1);
-        let expect = NaiveExecutor.gemm(4, 8, 4, &r.input, &r.weight).unwrap();
-        tx.send(r).unwrap();
+        let (tx, rx, h, _srv) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let w = shared_weight(8, 4);
+        let r = req(7, 4, 8, 4, 1, &w);
+        let Payload::Gemm { input, .. } = &r.payload else { unreachable!() };
+        let expect = NaiveExecutor.gemm(4, 8, 4, input, &w).unwrap();
+        tx.send(r.clone()).unwrap();
         let resp = rx.recv().unwrap();
         assert_eq!(resp.id, 7);
         assert_eq!(resp.output, expect);
+        assert!(resp.error.is_none());
         drop(tx);
         let stats = h.join().unwrap();
         assert_eq!(stats.served, 1);
@@ -320,9 +620,10 @@ mod tests {
     #[test]
     fn batches_same_shape_shared_weights() {
         let cfg = ArchConfig::paper(4, 4);
-        let (tx, rx, h) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let (tx, rx, h, _srv) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let w = shared_weight(8, 4);
         for i in 0..6 {
-            tx.send(req(i, 2, 8, 4, i)).unwrap();
+            tx.send(req(i, 2, 8, 4, i, &w)).unwrap();
         }
         // Give the queue a moment to fill before the server drains it.
         std::thread::sleep(std::time::Duration::from_millis(30));
@@ -338,6 +639,49 @@ mod tests {
         assert_eq!(stats.served, 6);
         assert!(stats.batches <= 6);
         assert!(max_batch >= 1);
+    }
+
+    /// A malformed GEMM input in a batch is rejected alone; co-batched
+    /// valid requests still get served.
+    #[test]
+    fn bad_gemm_input_rejected_individually() {
+        let cfg = ArchConfig::paper(4, 4);
+        let (tx, rx, h, _srv) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let w = shared_weight(8, 4);
+        tx.send(req(0, 2, 8, 4, 0, &w)).unwrap();
+        tx.send(Request::gemm(1, 2, 8, 4, vec![0.0; 3], Arc::clone(&w))).unwrap();
+        tx.send(req(2, 2, 8, 4, 2, &w)).unwrap();
+        let mut ok = 0;
+        let mut bad = 0;
+        for _ in 0..3 {
+            let r = rx.recv().unwrap();
+            if r.id == 1 {
+                assert!(r.error.is_some());
+                bad += 1;
+            } else {
+                assert!(r.error.is_none(), "{:?}", r.error);
+                assert_eq!(r.output.len(), 2 * 4);
+                ok += 1;
+            }
+        }
+        assert_eq!((ok, bad), (2, 1));
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.served, 2);
+        assert_eq!(stats.errors, 1);
+    }
+
+    /// Distinct weight objects never batch, even with equal contents: the
+    /// key is identity, not value.
+    #[test]
+    fn distinct_weight_objects_do_not_batch() {
+        let cfg = ArchConfig::paper(4, 4);
+        let server = Server::new(&cfg, Arc::new(NaiveExecutor));
+        let w1 = shared_weight(8, 4);
+        let w2 = Arc::new(w1.as_ref().clone());
+        assert_ne!(batch_key(&req(0, 2, 8, 4, 0, &w1)), batch_key(&req(1, 2, 8, 4, 1, &w2)));
+        assert_eq!(batch_key(&req(2, 2, 8, 4, 2, &w1)), batch_key(&req(3, 2, 8, 4, 3, &w1)));
+        let _ = server;
     }
 
     #[test]
@@ -395,5 +739,146 @@ mod tests {
         let st = server.stats.lock().unwrap();
         assert_eq!(st.mapper_cache_misses, 1);
         assert_eq!(st.mapper_cache_hits, 1);
+    }
+
+    /// Program sessions: register once, serve many — outputs equal a
+    /// hand-chained naive pass, the chain compiles exactly once, and the
+    /// per-shape mapper cache is never touched.
+    #[test]
+    fn program_requests_serve_registered_chain() {
+        let cfg = ArchConfig::paper(4, 4);
+        let (tx, rx, h, server) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let chain = Chain::mlp("mlp", 4, &[8, 12, 8]);
+        let mut rng = Lcg::new(3);
+        let weights: Vec<Vec<f32>> =
+            chain.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect();
+        let pid = server.register_chain(&chain, weights.clone()).unwrap();
+        let n_req = 5u64;
+        let mut expects = HashMap::new();
+        for id in 0..n_req {
+            let input = rng.f32_matrix(4, 8);
+            let mut act = input.clone();
+            for (g, w) in chain.layers.iter().zip(&weights) {
+                act = NaiveExecutor.gemm(4, g.k, g.n, &act, w).unwrap();
+            }
+            expects.insert(id, act);
+            tx.send(Request::for_program(id, pid, 4, input)).unwrap();
+        }
+        for _ in 0..n_req {
+            let resp = rx.recv().unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            assert_eq!(&resp.output, &expects[&resp.id]);
+            assert!(resp.modeled_cycles > 0.0);
+        }
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.program_compiles, 1, "chain compiled exactly once");
+        assert_eq!(stats.program_served, n_req);
+        assert_eq!(stats.mapper_cache_misses, 0, "program path skips the shape cache");
+    }
+
+    /// Same-program activations batch together (continuous batching keyed
+    /// by ProgramId), and row bookkeeping splits the stacked output back.
+    #[test]
+    fn program_requests_batch_by_id() {
+        let cfg = ArchConfig::paper(4, 4);
+        let (tx, rx, h, server) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let chain = Chain::mlp("mlp", 2, &[8, 8]);
+        let mut rng = Lcg::new(4);
+        let weights: Vec<Vec<f32>> =
+            chain.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect();
+        let pid = server.register_chain(&chain, weights).unwrap();
+        for id in 0..6u64 {
+            tx.send(Request::for_program(id, pid, 2, rng.f32_matrix(2, 8))).unwrap();
+        }
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let mut got = 0;
+        let mut max_batch = 0;
+        while got < 6 {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none());
+            assert_eq!(r.output.len(), 2 * 8);
+            max_batch = max_batch.max(r.batch_size);
+            got += 1;
+        }
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.program_served, 6);
+        assert!(stats.batches <= 6);
+        assert!(max_batch >= 1);
+    }
+
+    #[test]
+    fn unknown_program_answers_with_error() {
+        let cfg = ArchConfig::paper(4, 4);
+        let (tx, rx, h, _srv) = spawn(&cfg, Arc::new(NaiveExecutor));
+        tx.send(Request::for_program(9, ProgramId(777), 2, vec![0.0; 16])).unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, 9);
+        assert!(resp.error.as_deref().unwrap_or("").contains("unknown program"));
+        assert!(resp.output.is_empty());
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.errors, 1);
+        assert_eq!(stats.served, 0);
+    }
+
+    /// A malformed activation in a batch is rejected alone; co-batched
+    /// valid requests still get served.
+    #[test]
+    fn bad_activation_does_not_poison_batch() {
+        let cfg = ArchConfig::paper(4, 4);
+        let (tx, rx, h, server) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let chain = Chain::mlp("mlp", 2, &[8, 8]);
+        let mut rng = Lcg::new(6);
+        let weights: Vec<Vec<f32>> =
+            chain.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect();
+        let pid = server.register_chain(&chain, weights).unwrap();
+        tx.send(Request::for_program(0, pid, 2, rng.f32_matrix(2, 8))).unwrap();
+        tx.send(Request::for_program(1, pid, 2, vec![0.0; 3])).unwrap(); // wrong size
+        tx.send(Request::for_program(2, pid, 2, rng.f32_matrix(2, 8))).unwrap();
+        let mut ok = 0;
+        let mut bad = 0;
+        for _ in 0..3 {
+            let r = rx.recv().unwrap();
+            if r.id == 1 {
+                assert!(r.error.is_some());
+                assert!(r.output.is_empty());
+                bad += 1;
+            } else {
+                assert!(r.error.is_none(), "{:?}", r.error);
+                assert_eq!(r.output.len(), 2 * 8);
+                ok += 1;
+            }
+        }
+        assert_eq!((ok, bad), (2, 1));
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.program_served, 2);
+        assert_eq!(stats.errors, 1);
+    }
+
+    #[test]
+    fn register_chain_validates_weights() {
+        let cfg = ArchConfig::paper(4, 4);
+        let server = Server::new(&cfg, Arc::new(NaiveExecutor));
+        let chain = Chain::mlp("mlp", 4, &[8, 8]);
+        // Wrong count.
+        assert!(server.register_chain(&chain, vec![]).is_err());
+        // Wrong size.
+        assert!(server.register_chain(&chain, vec![vec![0.0; 7]]).is_err());
+        assert_eq!(server.stats.lock().unwrap().program_compiles, 0);
+    }
+
+    #[test]
+    fn unregister_releases_session() {
+        let cfg = ArchConfig::paper(4, 4);
+        let server = Server::new(&cfg, Arc::new(NaiveExecutor));
+        let chain = Chain::mlp("mlp", 4, &[8, 8]);
+        let pid = server.register_chain(&chain, vec![vec![0.5; 64]]).unwrap();
+        assert!(server.program(pid).is_some());
+        assert!(server.unregister(pid));
+        assert!(server.program(pid).is_none());
+        assert!(!server.unregister(pid));
     }
 }

@@ -143,9 +143,20 @@ pub struct FunctionalSim {
     /// run the reference per-wave interpreter — kept for the bit-exactness
     /// tests and as the semantic ground truth.
     pub use_plans: bool,
-    /// Compiled plans keyed by (θ_EM, θ_ES, layouts); reused across the
-    /// M/K/N tile loops of a lowered program.
+    /// Plans compiled *by this simulator* (cache misses). Stays at zero when
+    /// every tile hits a plan installed up-front via [`Self::seed_plans`] —
+    /// the compile-once/serve-many invariant `crate::program` tests assert.
+    /// Lives outside [`SimStats`] so plan-vs-reference stat equality holds.
+    pub plan_compiles: u64,
+    /// Plans compiled on demand, keyed by (θ_EM, θ_ES, layouts); reused
+    /// across the M/K/N tile loops of a lowered program. Bounded by
+    /// `PLAN_CACHE_CAP` with arbitrary eviction.
     plans: HashMap<PlanKey, Arc<WavePlan>>,
+    /// Plans installed via [`Self::seed_plans`] (a compiled program's plan
+    /// set). Kept apart from the dynamic cache so cap eviction can never
+    /// silently un-compile a program — the compile-once invariant. Bounded
+    /// by the caller: a program's plan set is small by construction.
+    seeded: HashMap<PlanKey, Arc<WavePlan>>,
 }
 
 impl FunctionalSim {
@@ -164,13 +175,31 @@ impl FunctionalSim {
             last_df: Dataflow::WoS,
             stats: SimStats::default(),
             use_plans: true,
+            plan_compiles: 0,
             plans: HashMap::new(),
+            seeded: HashMap::new(),
         }
     }
 
-    /// Number of compiled plans currently cached.
+    /// Number of compiled plans currently resident (dynamic + seeded).
     pub fn plan_cache_len(&self) -> usize {
-        self.plans.len()
+        self.plans.len() + self.seeded.len()
+    }
+
+    /// Install pre-compiled wave plans (e.g. a [`crate::program::Program`]'s
+    /// compile-time plan set). Seeded plans live outside the capped dynamic
+    /// cache, so its eviction can never drop them. Existing entries win, so
+    /// seeding is idempotent and never invalidates plans already in use.
+    pub fn seed_plans<I>(&mut self, plans: I)
+    where
+        I: IntoIterator<Item = (PlanKey, Arc<WavePlan>)>,
+    {
+        for (k, p) in plans {
+            // A key compiled on demand before seeding moves to the seeded
+            // tier: no double-resident plan, no double-counted cache entry.
+            self.plans.remove(&k);
+            self.seeded.entry(k).or_insert(p);
+        }
     }
 
     /// Bump-allocate `words` of HBM; returns the word address.
@@ -326,7 +355,7 @@ impl FunctionalSim {
                 continue;
             }
             let vals: Vec<i32> = (0..layout.vn_size)
-                .map(|i| clamp_i32(self.ob.get(row0 + i, col)))
+                .map(|i| clamp_acc(self.ob.get(row0 + i, col)))
                 .collect();
             writes.push((r, c, vals));
         }
@@ -366,7 +395,7 @@ impl FunctionalSim {
             return self.run_tile_reference(em, es);
         }
         let key = PlanKey { em: *em, es: *es, sta_layout, str_layout, o_layout };
-        let plan = match self.plans.get(&key) {
+        let plan = match self.seeded.get(&key).or_else(|| self.plans.get(&key)) {
             Some(p) => Arc::clone(p),
             None => {
                 if self.plans.len() >= PLAN_CACHE_CAP {
@@ -388,6 +417,7 @@ impl FunctionalSim {
                     self.streaming.depth,
                     self.ob.depth,
                 ));
+                self.plan_compiles += 1;
                 self.plans.insert(key, Arc::clone(&p));
                 p
             }
@@ -550,7 +580,10 @@ impl FunctionalSim {
     }
 }
 
-fn clamp_i32(v: i64) -> i32 {
+/// Narrow an i64 accumulator to the i32 element width, saturating — the
+/// conversion the OB→operand-buffer commit applies, and therefore the one
+/// chained-layer execution (`crate::program`) applies between layers.
+pub fn clamp_acc(v: i64) -> i32 {
     v.clamp(i32::MIN as i64, i32::MAX as i64) as i32
 }
 

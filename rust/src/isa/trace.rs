@@ -35,12 +35,32 @@ impl Trace {
         self.layer_starts.push(self.insts.len());
     }
 
+    /// Append another trace's instructions as one new layer (the §IV-G
+    /// multi-layer fusion primitive). The other trace's own layer marks are
+    /// ignored: per-layer lowered programs are single-layer traces.
+    pub fn splice_layer(&mut self, other: &Trace) {
+        self.begin_layer();
+        self.insts.extend(other.insts.iter().copied());
+    }
+
     pub fn len(&self) -> usize {
         self.insts.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.insts.is_empty()
+    }
+
+    /// Number of layers marked in this trace.
+    pub fn layer_count(&self) -> usize {
+        self.layer_starts.len()
+    }
+
+    /// Instruction index range of layer `li`, if marked.
+    pub fn layer_range(&self, li: usize) -> Option<std::ops::Range<usize>> {
+        let start = *self.layer_starts.get(li)?;
+        let end = self.layer_starts.get(li + 1).copied().unwrap_or(self.insts.len());
+        Some(start..end)
     }
 
     /// Total encoded size in bits under a config's codec.
@@ -246,6 +266,22 @@ mod tests {
         layer(&mut t, VnLayout::row_major(1, 4, 4), VnLayout::new(1, 4, 2, 2, 4), 1);
         layer(&mut t, VnLayout::new(3, 2, 2, 2, 4), VnLayout::row_major(2, 2, 4), 1);
         assert_eq!(t.elide_interlayer_layouts(), 0);
+    }
+
+    #[test]
+    fn splice_layer_marks_boundaries() {
+        let mut a = Trace::new();
+        layer(&mut a, VnLayout::row_major(1, 4, 4), VnLayout::row_major(1, 4, 4), 2);
+        let mut b = Trace::new();
+        layer(&mut b, VnLayout::row_major(1, 4, 4), VnLayout::row_major(2, 2, 4), 1);
+        let mut fused = Trace::new();
+        fused.splice_layer(&a);
+        fused.splice_layer(&b);
+        assert_eq!(fused.layer_count(), 2);
+        assert_eq!(fused.len(), a.len() + b.len());
+        assert_eq!(fused.layer_range(0), Some(0..a.len()));
+        assert_eq!(fused.layer_range(1), Some(a.len()..a.len() + b.len()));
+        assert_eq!(fused.layer_range(2), None);
     }
 
     #[test]

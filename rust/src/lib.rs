@@ -21,6 +21,7 @@ pub mod util;
 pub mod workloads;
 pub mod mapper;
 pub mod microinst;
+pub mod program;
 pub mod perf;
 pub mod baselines;
 pub mod coordinator;

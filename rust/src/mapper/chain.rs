@@ -11,10 +11,9 @@
 //! `SetIVNLayout` that matches its predecessor's `SetOVNLayout` is elided
 //! from the fused trace (§IV-G2).
 
-use super::search::{search, MapperOptions};
+use super::search::MapperOptions;
 use super::Decision;
 use crate::arch::config::ArchConfig;
-use crate::isa::Trace;
 use crate::mapping::Dataflow;
 use crate::workloads::Gemm;
 
@@ -69,7 +68,12 @@ pub struct ChainDecision {
 /// successor's streamed-layout *order and factors* must equal the
 /// predecessor's output layout (we compare the layout descriptors the two
 /// traces would program).
-fn boundary_compatible(prev: &Decision, next: &Decision, cfg: &ArchConfig, gs: (&Gemm, &Gemm)) -> bool {
+pub(crate) fn boundary_compatible(
+    prev: &Decision,
+    next: &Decision,
+    cfg: &ArchConfig,
+    gs: (&Gemm, &Gemm),
+) -> bool {
     let (g_prev, g_next) = gs;
     // The committed output tile of `prev` must cover what `next` streams in
     // one tile, with identical VN size and order.
@@ -118,49 +122,15 @@ fn boundary_compatible(prev: &Decision, next: &Decision, cfg: &ArchConfig, gs: (
     o_lay.order == consumed.order && o_lay.vn_size == consumed.vn_size
 }
 
-/// Map a chain: per-layer search with the successor constrained to consume
-/// its predecessor's output layout; falls back to an explicit re-layout
-/// (no elision, extra Out→Stream pass) when no compatible pair survives.
+/// Map a chain: the chain-aware mapper pass of [`crate::program`] — each
+/// layer searched under both dataflows, the cheaper §V-A alternating
+/// assignment selected, boundary layout orders aligned; layers whose
+/// required dataflow is infeasible fall back to an explicit re-layout (no
+/// elision at that boundary). This is a reporting view over
+/// [`crate::program::Program::compile`]; serve-path callers should compile
+/// (and keep) the full `Program` instead.
 pub fn map_chain(cfg: &ArchConfig, chain: &Chain, opts: &MapperOptions) -> Option<ChainDecision> {
-    chain.validate().ok()?;
-    let mut per_layer: Vec<Decision> = Vec::with_capacity(chain.layers.len());
-    for g in &chain.layers {
-        per_layer.push(search(cfg, g, opts)?);
-    }
-    // Count compatible boundaries; where compatible, the successor skips
-    // its SetIVNLayout (one per k-tile of the first tile row).
-    let mut elided = 0usize;
-    for i in 1..per_layer.len() {
-        if boundary_compatible(
-            &per_layer[i - 1],
-            &per_layer[i],
-            cfg,
-            (&chain.layers[i - 1], &chain.layers[i]),
-        ) {
-            elided += 1;
-        }
-    }
-    // Fused trace accounting.
-    let mut fused = Trace::new();
-    let mut standalone_bytes = 0u64;
-    for (g, d) in chain.layers.iter().zip(&per_layer) {
-        let prog = super::lower::lower_gemm(cfg, g, &d.choice, d.i_order, d.w_order, d.o_order);
-        standalone_bytes += prog.minisa_bytes();
-        fused.begin_layer();
-        for inst in &prog.trace.insts {
-            fused.push(*inst);
-        }
-    }
-    let trace_elided = fused.elide_interlayer_layouts();
-    let fused_bytes = fused.size_bytes(cfg);
-    let total_cycles: f64 = per_layer.iter().map(|d| d.report.total_cycles).sum();
-    Some(ChainDecision {
-        per_layer,
-        total_cycles,
-        elided: elided.max(trace_elided),
-        fused_bytes,
-        standalone_bytes,
-    })
+    Some(crate::program::Program::compile(cfg, chain, opts)?.chain_decision())
 }
 
 #[cfg(test)]
@@ -189,6 +159,49 @@ mod tests {
         };
         assert!(c.validate().is_err());
         assert!(map_chain(&ArchConfig::paper(4, 4), &c, &opts()).is_none());
+    }
+
+    #[test]
+    fn validate_reports_dimension_errors_precisely() {
+        // N/K mismatch names both layers and extents.
+        let nk = Chain {
+            layers: vec![Gemm::new("a", "t", 8, 16, 32), Gemm::new("b", "t", 8, 48, 8)],
+        };
+        let msg = nk.validate().unwrap_err();
+        assert!(msg.contains("N=32") && msg.contains("K=48"), "{msg}");
+        // M mismatch is its own error.
+        let m = Chain {
+            layers: vec![Gemm::new("a", "t", 8, 16, 32), Gemm::new("b", "t", 16, 32, 8)],
+        };
+        let msg = m.validate().unwrap_err();
+        assert!(msg.contains("M mismatch"), "{msg}");
+        // Single-layer chains are trivially valid (no boundary).
+        Chain { layers: vec![Gemm::new("a", "t", 8, 16, 32)] }.validate().unwrap();
+    }
+
+    /// The chain-aware mapper alternates dataflows across layers — the
+    /// §III-B buffer hand-off that makes §V-A boundary compatibility (and
+    /// with it §IV-G2 elision) possible at all.
+    #[test]
+    fn chain_dataflows_alternate() {
+        let cfg = ArchConfig::paper(4, 4);
+        let c = Chain::mlp("mlp", 32, &[32, 32, 32, 32]);
+        let d = map_chain(&cfg, &c, &opts()).unwrap();
+        assert_eq!(d.per_layer.len(), 3);
+        let dfs: Vec<_> = d.per_layer.iter().map(|l| l.choice.df).collect();
+        assert!(dfs.windows(2).all(|w| w[0] != w[1]), "alternating dataflows: {dfs:?}");
+    }
+
+    /// §IV-G2 on a 3-layer MLP: at least one interior `SetIVNLayout` is
+    /// elidable because the predecessor's committed output layout already
+    /// describes it.
+    #[test]
+    fn three_layer_mlp_elides_interlayer_layout() {
+        let cfg = ArchConfig::paper(4, 4);
+        let c = Chain::mlp("mlp", 32, &[32, 32, 32, 32]);
+        let d = map_chain(&cfg, &c, &opts()).unwrap();
+        assert!(d.elided >= 1, "elided {}", d.elided);
+        assert!(d.fused_bytes <= d.standalone_bytes);
     }
 
     #[test]

@@ -238,14 +238,21 @@ fn pow2_upto(limit: usize, base: usize) -> Vec<usize> {
 
 /// Enumerate mapping candidates (pre-layout) per Tab. VII.
 pub fn candidates(cfg: &ArchConfig, g: &Gemm, opts: &MapperOptions) -> Vec<MappingChoice> {
-    let mut out = Vec::new();
     let dataflows: Vec<Dataflow> = if opts.both_dataflows {
         vec![Dataflow::WoS, Dataflow::IoS]
     } else {
         // §III-C heuristic: IO-S when M > N, else WO-S.
         vec![if g.m > g.n { Dataflow::IoS } else { Dataflow::WoS }]
     };
-    for df in dataflows {
+    candidates_for_dataflows(cfg, g, &dataflows)
+}
+
+/// Tab. VII enumeration restricted to the given dataflows (one per chain
+/// constraint, both for the free search — avoids enumerating a dataflow's
+/// candidates only to discard them).
+fn candidates_for_dataflows(cfg: &ArchConfig, g: &Gemm, dataflows: &[Dataflow]) -> Vec<MappingChoice> {
+    let mut out = Vec::new();
+    for &df in dataflows {
         let (ms, ks, ns) = search_dims(g, df);
         let vn = cfg.ah.min(ks).max(1);
         // Tile extents (Tab. VII): pow2 ladders capped by buffer capacity.
@@ -281,7 +288,25 @@ pub fn candidates(cfg: &ArchConfig, g: &Gemm, opts: &MapperOptions) -> Vec<Mappi
 
 /// Full mapping-first / layout-second search. Returns the best decision.
 pub fn search(cfg: &ArchConfig, g: &Gemm, opts: &MapperOptions) -> Option<Decision> {
-    let cands = candidates(cfg, g, opts);
+    search_constrained(cfg, g, opts, None)
+}
+
+/// `search` with an optional dataflow constraint. Chain compilation
+/// (`crate::program`) maps each layer under both dataflows and picks the
+/// alternating assignment that satisfies the §V-A inter-layer layout
+/// compatibility rule; `df = None` reproduces the unconstrained search.
+pub fn search_constrained(
+    cfg: &ArchConfig,
+    g: &Gemm,
+    opts: &MapperOptions,
+    df: Option<Dataflow>,
+) -> Option<Decision> {
+    // A constraint overrides the M/N-heuristic restriction the caller's
+    // options might impose: enumerate exactly the requested dataflow.
+    let cands = match df {
+        Some(df) => candidates_for_dataflows(cfg, g, &[df]),
+        None => candidates(cfg, g, opts),
+    };
     // Phase 1 (mapping-first): score every candidate with a fixed good
     // layout pair; parallel across threads. `sort_by` is stable and the
     // scored vector preserves candidate enumeration order, so ties resolve

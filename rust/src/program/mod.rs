@@ -1,0 +1,487 @@
+//! Compiled model **Programs** — compile a whole layer chain once, serve it
+//! many times (§IV-G, §V-A).
+//!
+//! MINISA's headline win is amortized control: traces span *layers* (layer
+//! i's `SetOVNLayout` doubles as layer i+1's `SetIVNLayout`, §IV-G2), yet a
+//! per-request serving path that re-runs the mapper and re-derives wave
+//! control per GEMM throws that away. A [`Program`] is the compile-once
+//! artifact the serving stack executes instead:
+//!
+//! * **Per-layer decisions** from a chain-aware mapper pass: every layer is
+//!   searched under *both* dataflows ([`search_constrained`]) and the two
+//!   dataflow-alternating assignments are compared — alternation is what
+//!   makes layer i's committed output land in exactly the buffer layer i+1
+//!   consumes from (§III-B refinement 3), i.e. the §V-A "inter-layer layout
+//!   compatibility" rule. The cheaper alternating assignment wins; a layer
+//!   whose required dataflow is infeasible falls back to its free best,
+//!   breaking compatibility only at that boundary.
+//! * **Boundary-aligned layout orders**: where alternation alone leaves the
+//!   producer's output order disagreeing with the consumer's expected
+//!   order, the order is re-tuned (never at a latency cost) so the §IV-G2
+//!   `SetIVNLayout` elision applies.
+//! * **The fused trace** with elision accounting ([`Program::elided`],
+//!   fused vs standalone byte totals).
+//! * **Per-layer staging plans** from [`lower_gemm`] (HBM images, harvests,
+//!   per-invocation schedules).
+//! * **Pre-built wave plans**: every (θ_EM, θ_ES, layouts) tuple the fused
+//!   trace will execute is compiled to a [`WavePlan`] at program-compile
+//!   time; [`Program::seed_sim`] installs them so functional execution of
+//!   the whole program performs **zero** plan compiles per request.
+//!
+//! Programs are immutable and shareable (`Arc<Program>`): the serving
+//! coordinator registers one per model session
+//! ([`crate::coordinator::serve::Server::register_chain`]) and every request
+//! references it by [`crate::coordinator::serve::ProgramId`] instead of
+//! carrying weights inline.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::arch::config::ArchConfig;
+use crate::functional::{clamp_acc, naive_gemm, FunctionalSim, PlanKey, SimError, WavePlan};
+use crate::isa::inst::Inst;
+use crate::mapper::exec::execute_program_on;
+use crate::isa::Trace;
+use crate::mapper::chain::{boundary_compatible, Chain, ChainDecision};
+use crate::mapper::lower::LoweredProgram;
+use crate::mapper::search::{estimate, search_constrained, MapperOptions};
+use crate::mapper::{lower_gemm, Decision};
+use crate::mapping::Dataflow;
+use crate::workloads::Gemm;
+
+/// One compiled layer: the workload, its mapping decision and the lowered
+/// MINISA program (trace + staging + harvests + schedule).
+#[derive(Debug, Clone)]
+pub struct ProgramLayer {
+    pub gemm: Gemm,
+    pub decision: Decision,
+    pub lowered: LoweredProgram,
+}
+
+/// A compiled multi-layer model program. Immutable once built; share it as
+/// `Arc<Program>`.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub cfg: ArchConfig,
+    pub chain: Chain,
+    pub layers: Vec<ProgramLayer>,
+    /// Fused multi-layer trace, §IV-G2 elision applied.
+    pub fused: Trace,
+    /// Redundant inter-layer `SetIVNLayout`s: boundaries where the
+    /// §V-A compatibility rule holds (the successor's consumed layout is
+    /// the predecessor's committed output layout), so the fused trace may
+    /// skip the successor's layout programming.
+    pub elided: usize,
+    /// Fused trace size in bytes, after elision.
+    pub fused_bytes: u64,
+    /// Sum of standalone per-layer trace bytes (no elision).
+    pub standalone_bytes: u64,
+    /// Total modeled cycles (layers serialize on the data dependence).
+    pub total_cycles: f64,
+    /// Wave plans for every (θ_EM, θ_ES, layouts) tuple in the fused trace,
+    /// compiled once here and installed into simulators via [`seed_sim`].
+    ///
+    /// [`seed_sim`]: Program::seed_sim
+    plans: HashMap<PlanKey, Arc<WavePlan>>,
+}
+
+impl Program {
+    /// Compile a chain: chain-aware mapper search, lowering, trace fusion
+    /// and wave-plan precompilation. `None` when the chain is invalid or no
+    /// layer maps feasibly.
+    pub fn compile(cfg: &ArchConfig, chain: &Chain, opts: &MapperOptions) -> Option<Program> {
+        if chain.layers.is_empty() {
+            return None;
+        }
+        chain.validate().ok()?;
+        let mut decisions = plan_chain_decisions(cfg, chain, opts)?;
+        align_boundary_orders(cfg, chain, &mut decisions, opts.minisa);
+
+        let mut layers = Vec::with_capacity(chain.layers.len());
+        let mut fused = Trace::new();
+        let mut standalone_bytes = 0u64;
+        for (g, d) in chain.layers.iter().zip(decisions) {
+            let lowered = lower_gemm(cfg, g, &d.choice, d.i_order, d.w_order, d.o_order);
+            standalone_bytes += lowered.minisa_bytes();
+            fused.splice_layer(&lowered.trace);
+            layers.push(ProgramLayer { gemm: g.clone(), decision: d, lowered });
+        }
+        let trace_elided = fused.elide_interlayer_layouts();
+        let mut compat = 0usize;
+        for i in 1..layers.len() {
+            if boundary_compatible(
+                &layers[i - 1].decision,
+                &layers[i].decision,
+                cfg,
+                (&chain.layers[i - 1], &chain.layers[i]),
+            ) {
+                compat += 1;
+            }
+        }
+        let fused_bytes = fused.size_bytes(cfg);
+        let total_cycles = layers.iter().map(|l| l.decision.report.total_cycles).sum();
+        let plans = compile_plans(cfg, &layers);
+        Some(Program {
+            cfg: cfg.clone(),
+            chain: chain.clone(),
+            layers,
+            fused,
+            elided: compat.max(trace_elided),
+            fused_bytes,
+            standalone_bytes,
+            total_cycles,
+            plans,
+        })
+    }
+
+    pub fn layer_count(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Activation feature width the program consumes (layer 0's K).
+    pub fn in_features(&self) -> usize {
+        self.chain.layers[0].k
+    }
+
+    /// Output feature width the program produces (last layer's N).
+    pub fn out_features(&self) -> usize {
+        self.chain.layers.last().unwrap().n
+    }
+
+    /// Activation row count the chain was compiled for (shared M).
+    pub fn rows(&self) -> usize {
+        self.chain.layers[0].m
+    }
+
+    /// Number of distinct wave plans compiled for the fused trace.
+    pub fn plan_count(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// The view `mapper::chain::map_chain` reports.
+    pub fn chain_decision(&self) -> ChainDecision {
+        ChainDecision {
+            per_layer: self.layers.iter().map(|l| l.decision.clone()).collect(),
+            total_cycles: self.total_cycles,
+            elided: self.elided,
+            fused_bytes: self.fused_bytes,
+            standalone_bytes: self.standalone_bytes,
+        }
+    }
+
+    /// Install this program's precompiled wave plans into a simulator, so
+    /// executing the program compiles nothing (idempotent).
+    ///
+    /// Panics if the simulator was built from a different `ArchConfig`:
+    /// `PlanKey` deliberately excludes buffer geometry (fixed per
+    /// simulator), so cross-config seeding would execute plans whose
+    /// addressing was baked for the wrong array.
+    pub fn seed_sim(&self, sim: &mut FunctionalSim) {
+        assert_eq!(sim.cfg, self.cfg, "simulator must share the program's ArchConfig");
+        sim.seed_plans(self.plans.iter().map(|(k, v)| (*k, Arc::clone(v))));
+    }
+
+    /// Execute the whole program functionally: the activation flows through
+    /// every layer, narrowed to the element width between layers exactly as
+    /// the OB→operand-buffer commit narrows it. Returns the final layer's
+    /// `M × N_last` output (row-major i64 accumulators).
+    ///
+    /// All tile execution goes through the plans compiled at
+    /// program-compile time ([`Self::seed_sim`] runs first), so
+    /// `sim.plan_compiles` does not grow.
+    pub fn execute_i32(
+        &self,
+        sim: &mut FunctionalSim,
+        input: &[i32],
+        weights: &[Vec<i32>],
+    ) -> Result<Vec<i64>, SimError> {
+        assert_eq!(weights.len(), self.layers.len(), "one weight matrix per layer");
+        assert_eq!(input.len(), self.rows() * self.in_features(), "activation shape");
+        self.seed_sim(sim);
+        let mut act: Vec<i32> = input.to_vec();
+        let mut out: Vec<i64> = Vec::new();
+        for (li, l) in self.layers.iter().enumerate() {
+            out = execute_program_on(sim, &l.gemm, &l.lowered, &act, &weights[li])?;
+            if li + 1 < self.layers.len() {
+                act = out.iter().map(|&v| clamp_acc(v)).collect();
+            }
+        }
+        Ok(out)
+    }
+
+    /// Reference semantics of [`Self::execute_i32`]: chained naive GEMMs
+    /// with the same inter-layer narrowing.
+    pub fn reference_i32(&self, input: &[i32], weights: &[Vec<i32>]) -> Vec<i64> {
+        assert_eq!(weights.len(), self.layers.len(), "one weight matrix per layer");
+        let m = self.rows();
+        let mut act: Vec<i32> = input.to_vec();
+        let mut out: Vec<i64> = Vec::new();
+        for (li, (g, w)) in self.chain.layers.iter().zip(weights).enumerate() {
+            out = naive_gemm(&act, w, m, g.k, g.n);
+            if li + 1 < self.layers.len() {
+                act = out.iter().map(|&v| clamp_acc(v)).collect();
+            }
+        }
+        out
+    }
+}
+
+/// Chain-aware per-layer decision planning: search each layer under both
+/// dataflows, then pick the cheaper of the two alternating assignments
+/// (§V-A). A layer infeasible under its required dataflow falls back to the
+/// other one (compatibility breaks at that boundary only).
+fn plan_chain_decisions(
+    cfg: &ArchConfig,
+    chain: &Chain,
+    opts: &MapperOptions,
+) -> Option<Vec<Decision>> {
+    let per_df: Vec<[Option<Decision>; 2]> = chain
+        .layers
+        .iter()
+        .map(|g| {
+            [
+                search_constrained(cfg, g, opts, Some(Dataflow::WoS)),
+                search_constrained(cfg, g, opts, Some(Dataflow::IoS)),
+            ]
+        })
+        .collect();
+    let assignment = |start_wos: bool| -> Option<(Vec<Decision>, f64)> {
+        let mut out: Vec<Decision> = Vec::with_capacity(per_df.len());
+        let mut total = 0.0;
+        let mut want_wos = start_wos;
+        for dfs in per_df.iter() {
+            let want = usize::from(!want_wos); // 0 = WoS, 1 = IoS
+            let d = dfs[want].as_ref().or(dfs[1 - want].as_ref())?;
+            total += d.report.total_cycles;
+            // Alternate from the dataflow actually taken, so a layer that
+            // fell back to the other dataflow breaks compatibility at its
+            // own boundary only — successors re-alternate from it.
+            want_wos = d.choice.df == Dataflow::IoS;
+            out.push(d.clone());
+        }
+        Some((out, total))
+    };
+    let alt = match (assignment(true), assignment(false)) {
+        (Some((a, ta)), Some((b, tb))) => Some(if ta <= tb { a } else { b }),
+        (Some((a, _)), None) => Some(a),
+        (None, Some((b, _))) => Some(b),
+        (None, None) => None,
+    }?;
+    // Alternation is only worth enforcing when some boundary can actually
+    // become compatible (dataflows alternate AND VN sizes agree; the order
+    // is alignable afterwards). If no boundary qualifies — single-layer
+    // chains, or VN sizes that differ everywhere — there is nothing to
+    // elide, so take each layer's free best instead of paying the
+    // constraint for nothing.
+    let any_compat = alt
+        .windows(2)
+        .any(|w| w[0].choice.df != w[1].choice.df && w[0].choice.vn == w[1].choice.vn);
+    if any_compat {
+        return Some(alt);
+    }
+    let free: Option<Vec<Decision>> = per_df
+        .iter()
+        .map(|dfs| match (dfs[0].as_ref(), dfs[1].as_ref()) {
+            (Some(a), Some(b)) => {
+                let best = if a.report.total_cycles <= b.report.total_cycles { a } else { b };
+                Some(best.clone())
+            }
+            (Some(a), None) => Some(a.clone()),
+            (None, Some(b)) => Some(b.clone()),
+            (None, None) => None,
+        })
+        .collect();
+    Some(free.unwrap_or(alt))
+}
+
+/// Re-tune layout orders at alternating boundaries so the committed output
+/// layout equals the consumed layout (making the §IV-G2 elision apply) —
+/// accepted only when the re-estimated latency does not regress.
+fn align_boundary_orders(
+    cfg: &ArchConfig,
+    chain: &Chain,
+    decisions: &mut [Decision],
+    minisa: bool,
+) {
+    for i in 1..decisions.len() {
+        let (head, tail) = decisions.split_at_mut(i);
+        let prev = &mut head[i - 1];
+        let next = &mut tail[0];
+        let (g_prev, g_next) = (&chain.layers[i - 1], &chain.layers[i]);
+        if next.choice.df == prev.choice.df || next.choice.vn != prev.choice.vn {
+            continue; // compatibility cannot hold; leave the decisions alone
+        }
+        if boundary_compatible(prev, next, cfg, (g_prev, g_next)) {
+            continue;
+        }
+        match prev.choice.df {
+            // WO-S feeds IO-S: the successor consumes through its
+            // *stationary* layout (order `w_order`); re-tune the
+            // predecessor's output order to match.
+            Dataflow::WoS => {
+                if let Some(rep) =
+                    estimate(cfg, g_prev, &prev.choice, prev.i_order, next.w_order, minisa)
+                {
+                    if rep.total_cycles <= prev.report.total_cycles {
+                        prev.o_order = next.w_order;
+                        prev.report = rep;
+                    }
+                }
+            }
+            // IO-S feeds WO-S: the successor *streams* its input (order
+            // `i_order`); re-tune the successor's streamed order.
+            Dataflow::IoS => {
+                if let Some(rep) =
+                    estimate(cfg, g_next, &next.choice, prev.o_order, next.o_order, minisa)
+                {
+                    if rep.total_cycles <= next.report.total_cycles {
+                        next.i_order = prev.o_order;
+                        next.report = rep;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Compile the wave plan for every (θ_EM, θ_ES, layouts) tuple the layers'
+/// traces will execute — the same key derivation as
+/// `FunctionalSim::run_tile`, performed once at program-compile time.
+fn compile_plans(cfg: &ArchConfig, layers: &[ProgramLayer]) -> HashMap<PlanKey, Arc<WavePlan>> {
+    let mut plans = HashMap::new();
+    for l in layers {
+        let mut i_lay = None;
+        let mut w_lay = None;
+        let mut o_lay = None;
+        let mut cur_em = None;
+        for inst in &l.lowered.trace.insts {
+            match inst {
+                Inst::SetIVNLayout(x) => i_lay = Some(x.layout),
+                Inst::SetWVNLayout(x) => w_lay = Some(x.layout),
+                Inst::SetOVNLayout(x) => o_lay = Some(x.layout),
+                Inst::ExecuteMapping(em) => cur_em = Some(*em),
+                Inst::ExecuteStreaming(es) => {
+                    let (Some(em), Some(i), Some(w), Some(o)) = (cur_em, i_lay, w_lay, o_lay)
+                    else {
+                        continue; // malformed prefix: the simulator will error
+                    };
+                    let (sta, strl) = match es.df {
+                        Dataflow::WoS => (w, i),
+                        Dataflow::IoS => (i, w),
+                    };
+                    if sta.vn_size < es.vn_size {
+                        continue; // illegal-program class: reference path handles it
+                    }
+                    let key =
+                        PlanKey { em, es: *es, sta_layout: sta, str_layout: strl, o_layout: o };
+                    plans.entry(key).or_insert_with(|| {
+                        Arc::new(WavePlan::compile(
+                            cfg,
+                            &em,
+                            es,
+                            &sta,
+                            &strl,
+                            &o,
+                            cfg.d_sta(),
+                            cfg.d_str(),
+                            cfg.d_ob(),
+                        ))
+                    });
+                }
+                _ => {}
+            }
+        }
+    }
+    plans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Lcg;
+
+    fn fast() -> MapperOptions {
+        MapperOptions { full_layout_search: false, threads: 1, ..Default::default() }
+    }
+
+    fn rand_weights(chain: &Chain, seed: u64) -> Vec<Vec<i32>> {
+        let mut rng = Lcg::new(seed);
+        chain
+            .layers
+            .iter()
+            .map(|g| (0..g.k * g.n).map(|_| rng.range(0, 9) as i32 - 4).collect())
+            .collect()
+    }
+
+    #[test]
+    fn compiles_three_layer_mlp() {
+        let cfg = ArchConfig::paper(4, 8);
+        let chain = Chain::mlp("mlp", 16, &[16, 24, 16, 8]);
+        let p = Program::compile(&cfg, &chain, &fast()).unwrap();
+        assert_eq!(p.layer_count(), 3);
+        assert_eq!(p.in_features(), 16);
+        assert_eq!(p.out_features(), 8);
+        assert_eq!(p.rows(), 16);
+        assert_eq!(p.fused.layer_count(), 3);
+        assert!(p.plan_count() > 0, "wave plans precompiled");
+        assert!(p.fused_bytes <= p.standalone_bytes);
+        assert!(p.total_cycles > 0.0);
+    }
+
+    #[test]
+    fn invalid_chain_does_not_compile() {
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain {
+            layers: vec![Gemm::new("a", "t", 8, 8, 8), Gemm::new("b", "t", 8, 16, 8)],
+        };
+        assert!(Program::compile(&cfg, &chain, &fast()).is_none());
+    }
+
+    /// Whole-program functional execution through the precompiled plans is
+    /// bit-identical to chained naive GEMMs, and compiles zero plans at
+    /// execution time — across repeated executions on one simulator.
+    #[test]
+    fn executes_exactly_with_zero_runtime_plan_compiles() {
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("mlp", 8, &[12, 16, 8, 12]);
+        let p = Program::compile(&cfg, &chain, &fast()).unwrap();
+        let weights = rand_weights(&chain, 3);
+        let mut rng = Lcg::new(11);
+        let mut sim = FunctionalSim::new(&cfg);
+        for round in 0..3 {
+            let input: Vec<i32> =
+                (0..p.rows() * p.in_features()).map(|_| rng.range(0, 9) as i32 - 4).collect();
+            let got = p.execute_i32(&mut sim, &input, &weights).unwrap();
+            assert_eq!(got, p.reference_i32(&input, &weights), "round {round}");
+        }
+        assert_eq!(sim.plan_compiles, 0, "all plans came precompiled");
+        assert_eq!(sim.plan_cache_len(), p.plan_count());
+    }
+
+    /// The chain-aware search alternates dataflows (§V-A compatibility) and
+    /// the boundary alignment yields at least one elidable layout on a
+    /// symmetric 3-layer MLP.
+    #[test]
+    fn alternation_and_elision_on_symmetric_mlp() {
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("mlp", 32, &[32, 32, 32, 32]);
+        let p = Program::compile(&cfg, &chain, &fast()).unwrap();
+        let dfs: Vec<Dataflow> = p.layers.iter().map(|l| l.decision.choice.df).collect();
+        assert!(
+            dfs.windows(2).all(|w| w[0] != w[1]),
+            "dataflows alternate across layers: {dfs:?}"
+        );
+        assert!(p.elided >= 1, "at least one boundary elides its SetIVNLayout");
+    }
+
+    /// `total_cycles` stays the sum of the (possibly re-estimated) per-layer
+    /// reports after boundary order alignment.
+    #[test]
+    fn total_cycles_consistent_with_layers() {
+        let cfg = ArchConfig::paper(4, 8);
+        let chain = Chain::mlp("mlp", 16, &[24, 16, 24]);
+        let p = Program::compile(&cfg, &chain, &fast()).unwrap();
+        let sum: f64 = p.layers.iter().map(|l| l.decision.report.total_cycles).sum();
+        assert_eq!(p.total_cycles, sum);
+    }
+}

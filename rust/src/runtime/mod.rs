@@ -205,6 +205,7 @@ impl Runtime {
             })
             .map(|a| a.name.clone())
     }
+
 }
 
 /// Tile a (possibly mismatched) GEMM onto fixed-shape artifact executions:
@@ -266,15 +267,40 @@ pub fn gemm_via_tiles(
     Ok(out)
 }
 
+/// Run an activation through a feature ladder (`dims[0] → dims[1] → …`)
+/// layer by layer on the tiler — the worker-side body of
+/// `PjrtExecutor::run_program`. (The fused `chain_` artifacts are *not*
+/// used here: they bake in an inter-layer nonlinearity that plain GEMM
+/// chains don't have; see `tests/runtime_integration.rs`.)
+#[cfg(feature = "pjrt")]
+pub fn chain_via_tiles(
+    rt: &Runtime,
+    rows: usize,
+    dims: &[usize],
+    input: &[f32],
+    weights: &[Vec<f32>],
+) -> Result<Vec<f32>> {
+    anyhow::ensure!(dims.len() >= 2, "chain needs at least one layer");
+    anyhow::ensure!(weights.len() == dims.len() - 1, "one weight per chain boundary");
+    let mut act = input.to_vec();
+    for (w, d) in weights.iter().zip(dims.windows(2)) {
+        act = gemm_via_tiles(rt, rows, d[0], d[1], &act, w)?;
+    }
+    Ok(act)
+}
+
 #[cfg(feature = "pjrt")]
 type Reply = std::sync::mpsc::Sender<Result<Vec<f32>>>;
 #[cfg(feature = "pjrt")]
+enum JobKind {
+    Gemm { m: usize, k: usize, n: usize, iv: Vec<f32>, wv: Vec<f32> },
+    /// Whole-chain pass; the weights stay behind the session's `Arc` — no
+    /// per-dispatch copy of the matrices.
+    Chain { rows: usize, dims: Vec<usize>, iv: Vec<f32>, ws: std::sync::Arc<Vec<Vec<f32>>> },
+}
+#[cfg(feature = "pjrt")]
 struct Job {
-    m: usize,
-    k: usize,
-    n: usize,
-    iv: Vec<f32>,
-    wv: Vec<f32>,
+    kind: JobKind,
     reply: Reply,
 }
 
@@ -311,7 +337,14 @@ impl PjrtExecutor {
                     }
                 };
                 while let Ok(job) = rx.recv() {
-                    let r = gemm_via_tiles(&rt, job.m, job.k, job.n, &job.iv, &job.wv);
+                    let r = match job.kind {
+                        JobKind::Gemm { m, k, n, iv, wv } => {
+                            gemm_via_tiles(&rt, m, k, n, &iv, &wv)
+                        }
+                        JobKind::Chain { rows, dims, iv, ws } => {
+                            chain_via_tiles(&rt, rows, &dims, &iv, &ws)
+                        }
+                    };
                     let _ = job.reply.send(r);
                 }
             })
@@ -326,19 +359,52 @@ impl PjrtExecutor {
 }
 
 #[cfg(feature = "pjrt")]
-impl crate::coordinator::serve::TileExecutor for PjrtExecutor {
-    fn gemm(&self, m: usize, k: usize, n: usize, iv: &[f32], wv: &[f32]) -> Result<Vec<f32>> {
+impl PjrtExecutor {
+    fn submit(&self, kind: JobKind) -> Result<Vec<f32>> {
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
         self.tx
             .lock()
             .unwrap()
-            .send(Job { m, k, n, iv: iv.to_vec(), wv: wv.to_vec(), reply: reply_tx })
+            .send(Job { kind, reply: reply_tx })
             .map_err(|_| anyhow::anyhow!("pjrt worker gone"))?;
         reply_rx.recv().context("pjrt worker dropped reply")?
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl crate::coordinator::serve::TileExecutor for PjrtExecutor {
+    fn gemm(&self, m: usize, k: usize, n: usize, iv: &[f32], wv: &[f32]) -> Result<Vec<f32>> {
+        self.submit(JobKind::Gemm { m, k, n, iv: iv.to_vec(), wv: wv.to_vec() })
     }
 
     fn name(&self) -> &str {
         "pjrt"
+    }
+
+    /// Program-aware entry point: marshal the whole chain to the worker as
+    /// one job (one channel round-trip per request batch instead of one per
+    /// layer).
+    fn run_program(
+        &self,
+        program: &crate::program::Program,
+        rows: usize,
+        input: &[f32],
+        weights: &std::sync::Arc<Vec<Vec<f32>>>,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            weights.len() == program.layer_count(),
+            "program expects {} weight matrices, got {}",
+            program.layer_count(),
+            weights.len()
+        );
+        let mut dims = vec![program.in_features()];
+        dims.extend(program.chain.layers.iter().map(|g| g.n));
+        self.submit(JobKind::Chain {
+            rows,
+            dims,
+            iv: input.to_vec(),
+            ws: std::sync::Arc::clone(weights),
+        })
     }
 }
 
@@ -389,6 +455,18 @@ pub fn gemm_via_tiles(
     _n: usize,
     _iv: &[f32],
     _wv: &[f32],
+) -> Result<Vec<f32>> {
+    bail!(NO_PJRT)
+}
+
+/// Stub chain runner (crate built without the `pjrt` feature).
+#[cfg(not(feature = "pjrt"))]
+pub fn chain_via_tiles(
+    _rt: &Runtime,
+    _rows: usize,
+    _dims: &[usize],
+    _input: &[f32],
+    _weights: &[Vec<f32>],
 ) -> Result<Vec<f32>> {
     bail!(NO_PJRT)
 }

@@ -125,6 +125,13 @@ pub fn table1_workload() -> Gemm {
     Gemm::new("table1", "FHE-BConv", 65536, 40, 88)
 }
 
+/// Feature ladder of the 3-layer GPT-oss MLP slice the §IV-G chain example
+/// compiles (qkv projection → MLP down → lm-head slice, Tab. IV widths).
+/// Feed it to `mapper::chain::Chain::mlp` with the sequence length as M.
+pub fn gpt_oss_mlp_dims() -> Vec<usize> {
+    vec![2880, 5120, 2880, 2048]
+}
+
 /// Parse a workload CSV with header `category,name,M,K,N` (artifact §E
 /// customization format).
 pub fn from_csv(path: &Path) -> Result<Vec<Gemm>, String> {

@@ -1,13 +1,19 @@
 //! Cross-module integration tests: mapper → ISA → functional simulator →
-//! performance model, over real workload shapes and both dataflows.
+//! performance model, over real workload shapes and both dataflows, plus
+//! the program-serving path (compile-once/serve-many).
+
+use std::sync::Arc;
 
 use minisa::arch::ArchConfig;
 use minisa::coordinator::evaluate_one;
+use minisa::coordinator::serve::{spawn, NaiveExecutor, Request};
 use minisa::isa::encode::Codec;
+use minisa::mapper::chain::Chain;
 use minisa::mapper::exec::validate_decision;
 use minisa::mapper::search::{instr_traffic, search, MapperOptions};
 use minisa::mapper::lower_gemm;
 use minisa::util::prop::forall;
+use minisa::util::Lcg;
 use minisa::workloads::{self, Gemm};
 
 fn fast_opts() -> MapperOptions {
@@ -115,6 +121,64 @@ fn aligned_workload_utilization_high_everywhere() {
             d.report.utilization()
         );
     }
+}
+
+/// Program-vs-single-layer serving equivalence: a registered 3-layer chain
+/// served through program requests is bit-identical to three sequential
+/// single-GEMM requests through the ad-hoc path — while the chain's mapper
+/// search and plan compilation run exactly once for N requests.
+#[test]
+fn program_serving_matches_sequential_single_gemms() {
+    let cfg = ArchConfig::paper(4, 4);
+    let chain = Chain::mlp("mlp3", 4, &[8, 12, 8, 6]);
+    assert_eq!(chain.layers.len(), 3);
+    let mut rng = Lcg::new(41);
+    let weights: Vec<Vec<f32>> = chain.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect();
+    let inputs: Vec<Vec<f32>> = (0..4).map(|_| rng.f32_matrix(4, 8)).collect();
+
+    // Old path: each layer as its own single-GEMM request, sequenced on the
+    // data dependence (layer i's response feeds layer i+1's request).
+    let (tx_a, rx_a, h_a, _srv_a) = spawn(&cfg, Arc::new(NaiveExecutor));
+    let weight_arcs: Vec<Arc<Vec<f32>>> = weights.iter().cloned().map(Arc::new).collect();
+    let mut old_path: Vec<Vec<f32>> = Vec::new();
+    for input in &inputs {
+        let mut act = input.clone();
+        for (g, w) in chain.layers.iter().zip(&weight_arcs) {
+            tx_a.send(Request::gemm(0, g.m, g.k, g.n, act, Arc::clone(w))).unwrap();
+            let resp = rx_a.recv().unwrap();
+            assert!(resp.error.is_none());
+            act = resp.output;
+        }
+        old_path.push(act);
+    }
+    drop(tx_a);
+    h_a.join().unwrap();
+
+    // New path: register the chain once, serve every activation against the
+    // compiled program.
+    let (tx_b, rx_b, h_b, srv_b) = spawn(&cfg, Arc::new(NaiveExecutor));
+    let pid = srv_b.register_chain(&chain, weights).unwrap();
+    for (id, input) in inputs.iter().enumerate() {
+        tx_b.send(Request::for_program(id as u64, pid, 4, input.clone())).unwrap();
+    }
+    let mut new_path: Vec<Vec<f32>> = vec![Vec::new(); inputs.len()];
+    for _ in 0..inputs.len() {
+        let resp = rx_b.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        new_path[resp.id as usize] = resp.output;
+    }
+    drop(tx_b);
+    let stats = h_b.join().unwrap();
+
+    assert_eq!(old_path, new_path, "program path must be bit-identical to the ad-hoc path");
+    // Compile-once/serve-many: one chain-aware mapper run for N requests,
+    // and the program path never touches the per-shape mapper cache.
+    assert_eq!(stats.program_compiles, 1);
+    assert_eq!(stats.program_served, inputs.len() as u64);
+    assert_eq!(stats.mapper_cache_misses, 0);
+    // The compiled program reports the §IV-G2 boundary elision it found.
+    let program = srv_b.program(pid).unwrap();
+    assert!(program.plan_count() > 0);
 }
 
 /// Both dataflows stay exact under layer chaining shapes (tall and wide).
