@@ -161,4 +161,82 @@ fn main() {
         Ok(()) => println!("\nwrote BENCH_hotpath.json"),
         Err(e) => eprintln!("\nfailed to write BENCH_hotpath.json: {e}"),
     }
+
+    bench_arith();
+}
+
+/// `arith` hot path: the Montgomery mul-accumulate inner loop (what
+/// `ModP`'s `Element::mac` runs per MAC slot) against the naive
+/// `(a·b) % p` u128 reduction it replaces — per field, plus the end-to-end
+/// functional-sim MAC rate over a field. Emits `BENCH_arith.json`.
+fn bench_arith() {
+    use minisa::arith::{naive_gemm_e, BabyBear, Goldilocks, ModP, PrimeField};
+
+    println!("\n--- arith: Montgomery vs naive % reduction ---");
+    let mut alog = BenchLog::new();
+
+    fn field_case<F: PrimeField>(alog: &mut BenchLog) {
+        const LEN: usize = 1 << 14;
+        let mut rng = Lcg::new(0xA217);
+        let xs: Vec<u64> = (0..LEN).map(|_| rng.next_u64() % F::P).collect();
+        let ys: Vec<u64> = (0..LEN).map(|_| rng.next_u64() % F::P).collect();
+        let xm: Vec<ModP<F>> = xs.iter().map(|&x| ModP::<F>::new(x)).collect();
+        let ym: Vec<ModP<F>> = ys.iter().map(|&y| ModP::<F>::new(y)).collect();
+
+        // Naive: widen to u128, `%` per multiply AND per accumulate — the
+        // schoolbook inner loop the Montgomery form replaces.
+        let (naive_sum, t_naive) =
+            alog.bench(&format!("arith/{} naive % mul-acc {}", F::NAME, LEN), 3, 200, || {
+                let mut acc: u64 = 0;
+                for (&a, &b) in xs.iter().zip(&ys) {
+                    let prod = ((a as u128 * b as u128) % F::P as u128) as u64;
+                    acc = ((acc as u128 + prod as u128) % F::P as u128) as u64;
+                }
+                acc
+            });
+        // Montgomery: one REDC per multiply, add-with-conditional-subtract
+        // per accumulate (the `Element::mac` path).
+        let (mont_sum, t_mont) =
+            alog.bench(&format!("arith/{} montgomery mul-acc {}", F::NAME, LEN), 3, 200, || {
+                let mut acc = ModP::<F>::default();
+                for (&a, &b) in xm.iter().zip(&ym) {
+                    acc = acc + a * b;
+                }
+                acc
+            });
+        assert_eq!(mont_sum.to_u64(), naive_sum, "{}: reductions agree", F::NAME);
+        let speedup = t_naive.median_ns / t_mont.median_ns;
+        println!("  {}: montgomery {speedup:.2}x vs naive %", F::NAME);
+        alog.metric(&format!("arith_{}_mont_vs_naive_speedup", F::NAME), speedup);
+        alog.metric(
+            &format!("arith_{}_mont_mmacs_per_s", F::NAME),
+            LEN as f64 / (t_mont.median_ns / 1e9) / 1e6,
+        );
+    }
+
+    field_case::<BabyBear>(&mut alog);
+    field_case::<Goldilocks>(&mut alog);
+    field_case::<minisa::arith::PallasStyle>(&mut alog);
+
+    // End-to-end: a field GEMM through the naive generic reference (upper
+    // bound on the functional-sim arithmetic throughput over ModP).
+    {
+        type Gl = ModP<Goldilocks>;
+        let (m, k, n) = (32usize, 64usize, 32usize);
+        let mut rng = Lcg::new(0xF00D);
+        let iv: Vec<Gl> = (0..m * k).map(|_| Gl::new(rng.next_u64())).collect();
+        let wv: Vec<Gl> = (0..k * n).map(|_| Gl::new(rng.next_u64())).collect();
+        let (_, t) = alog.bench("arith/goldilocks naive_gemm_e 32x64x32", 2, 50, || {
+            naive_gemm_e::<Gl>(&iv, &wv, m, k, n)
+        });
+        alog.metric(
+            "arith_goldilocks_gemm_mmacs_per_s",
+            (m * k * n) as f64 / (t.median_ns / 1e9) / 1e6,
+        );
+    }
+
+    match alog.write_json("BENCH_arith.json") {
+        Ok(()) => println!("wrote BENCH_arith.json"),
+        Err(e) => eprintln!("failed to write BENCH_arith.json: {e}"),
+    }
 }

@@ -9,6 +9,7 @@
 //! Buffers are `D × AW` element grids; VN layouts place `vn_size`-element
 //! VNs in contiguous rows of one column (see `layout`).
 
+use crate::arith::Element;
 use crate::layout::VnLayout;
 
 /// A `depth × width` scratchpad of elements `T`.
@@ -93,37 +94,40 @@ impl<T: Copy + Default> DataBuffer<T> {
 
 /// Multi-bank accumulator output buffer. Banks correspond to columns; each
 /// bank has its own address generator (the architectural feature that makes
-/// flexible output layouts possible, §III-A).
+/// flexible output layouts possible, §III-A). Generic over the element
+/// backend: cells hold `E::Acc` psums and accumulate with `E::acc_add`
+/// (i64 saturating-int accumulators by default — the pre-`arith` semantics).
 #[derive(Debug, Clone)]
-pub struct OutputBuffer {
+pub struct OutputBuffer<E: Element = i32> {
     pub depth: usize,
     pub banks: usize,
-    data: Vec<i64>,
+    data: Vec<E::Acc>,
     /// Per-cycle bank-conflict counter (two different addresses to one bank
     /// in one accumulation group).
     pub conflicts: u64,
 }
 
-impl OutputBuffer {
+impl<E: Element> OutputBuffer<E> {
     pub fn new(depth: usize, banks: usize) -> Self {
-        Self { depth, banks, data: vec![0; depth * banks], conflicts: 0 }
+        Self { depth, banks, data: vec![E::acc_zero(); depth * banks], conflicts: 0 }
     }
 
     #[inline]
-    pub fn get(&self, row: usize, bank: usize) -> i64 {
+    pub fn get(&self, row: usize, bank: usize) -> E::Acc {
         self.data[row * self.banks + bank]
     }
 
     /// Accumulate into (row, bank).
     #[inline]
-    pub fn accumulate(&mut self, row: usize, bank: usize, v: i64) {
+    pub fn accumulate(&mut self, row: usize, bank: usize, v: E::Acc) {
         debug_assert!(row < self.depth && bank < self.banks);
-        self.data[row * self.banks + bank] += v;
+        let cell = &mut self.data[row * self.banks + bank];
+        *cell = E::acc_add(*cell, v);
     }
 
     /// Accumulate a group of same-cycle writes, counting bank conflicts
     /// (more than one distinct row per bank in the group).
-    pub fn accumulate_group(&mut self, writes: &[(usize, usize, i64)]) {
+    pub fn accumulate_group(&mut self, writes: &[(usize, usize, E::Acc)]) {
         let mut seen: Vec<Option<usize>> = vec![None; self.banks];
         for &(row, bank, v) in writes {
             match seen[bank] {
@@ -137,7 +141,7 @@ impl OutputBuffer {
 
     /// Clear for a new output tile (SetOVNLayout lifecycle, §IV-G1).
     pub fn clear(&mut self) {
-        self.data.iter_mut().for_each(|v| *v = 0);
+        self.data.iter_mut().for_each(|v| *v = E::acc_zero());
     }
 }
 
@@ -181,7 +185,7 @@ mod tests {
 
     #[test]
     fn output_buffer_accumulates() {
-        let mut ob = OutputBuffer::new(8, 4);
+        let mut ob: OutputBuffer = OutputBuffer::new(8, 4);
         ob.accumulate(2, 1, 10);
         ob.accumulate(2, 1, -3);
         assert_eq!(ob.get(2, 1), 7);
@@ -191,7 +195,7 @@ mod tests {
 
     #[test]
     fn output_buffer_conflict_counting() {
-        let mut ob = OutputBuffer::new(8, 2);
+        let mut ob: OutputBuffer = OutputBuffer::new(8, 2);
         // Same bank, two rows in one group → conflict.
         ob.accumulate_group(&[(0, 0, 1), (1, 0, 1)]);
         assert_eq!(ob.conflicts, 1);

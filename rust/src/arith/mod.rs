@@ -1,0 +1,480 @@
+//! Pluggable element arithmetic — the representation axis of the execution
+//! stack.
+//!
+//! The paper's evaluation spans GPT-oss inference, FHE basis conversion and
+//! FHE/ZKP NTTs (§VI, Table IV), but those domains do not share a number
+//! system: LLM layers quantize to saturating integers, serving oracles use
+//! f32, and NTTs are only correct over prime fields. Related
+//! representation-adaptive ISA work (PAPERS.md) treats the arithmetic
+//! representation as a reconfiguration axis of its own; this module makes
+//! it one here. [`Element`] abstracts exactly what the datapath does per
+//! element — widening multiply-accumulate into a psum, in-network psum
+//! addition (BIRRD), narrowing the accumulator back to the element domain
+//! (the OB→operand-buffer commit), and a canonical encoding to the 64-bit
+//! datapath word — and the whole execution stack
+//! ([`crate::arch::buffer::OutputBuffer`], [`crate::functional::FunctionalSim`],
+//! [`crate::functional::WavePlan`], [`crate::program::Program`], the serving
+//! sessions) is generic over it.
+//!
+//! Backends:
+//!
+//! * [`SatI32`] (`= i32`): the pre-refactor semantics, bit-identical — i64
+//!   psums, saturating narrowing ([`Element::reduce`] is the former
+//!   `clamp_acc`). This is the default type parameter everywhere, so
+//!   existing i32 call sites compile and behave unchanged.
+//! * `f32`: f32 psums (no widening), identity narrowing — the PJRT-oracle
+//!   number system, now executable on the functional path too.
+//! * [`ModP`]`<F>`: Montgomery arithmetic over a [`modp::PrimeField`]
+//!   (Baby Bear, Goldilocks, Pallas-style — see [`modp`]), the backend that
+//!   makes the FHE/ZKP NTT rows of Table IV executable *for real* (see
+//!   [`crate::workloads::ntt`]).
+//!
+//! Wave-plan compilation is element-independent (plans resolve addressing,
+//! not values), so one compiled [`crate::program::Program`] serves any
+//! element type and the compile-once/serve-many invariant carries over
+//! unchanged.
+
+pub mod modp;
+
+use std::fmt;
+
+use crate::isa::inst::ActFn;
+use crate::util::Lcg;
+
+pub use modp::{two_adic_root, BabyBear, Goldilocks, ModP, PallasStyle, PrimeField};
+
+/// Today's element semantics under its subsystem name: saturating i32 with
+/// i64 accumulation. (`Element` is implemented directly on `i32` so that
+/// pre-refactor call sites stay source- and bit-identical.)
+pub type SatI32 = i32;
+
+/// One datapath element type: everything the execution stack needs to
+/// compute with values of this representation.
+///
+/// Contract (enforced by `tests/arith_prop.rs` against naive references):
+/// `mac`/`acc_add` must be the same addition (so BIRRD in-network merging
+/// and OB temporal accumulation commute with per-PE accumulation), `reduce`
+/// must match the narrowing the OB→operand commit applies between chained
+/// layers, and `decode(encode(x)) == x` for every representable `x` (the
+/// serving word format round-trips).
+pub trait Element:
+    Copy + Clone + Default + PartialEq + Send + Sync + fmt::Debug + 'static
+{
+    /// The psum/accumulator type (`i64` for `SatI32`; the element itself
+    /// for fields, where sums never widen).
+    type Acc: Copy + Clone + Default + PartialEq + Send + Sync + fmt::Debug + 'static;
+
+    /// Backend name as spelled by the CLI `--elem` flag.
+    const NAME: &'static str;
+
+    /// Whether `0 · x == 0` for **every** representable `x` — true in the
+    /// integers and in `Z_p`, false for IEEE floats (`0 · ∞` and `0 · NaN`
+    /// are NaN). Reference implementations may skip zero operands only when
+    /// this holds, so they stay bit-identical to the always-multiplying
+    /// datapath on non-finite inputs.
+    const ZERO_ANNIHILATES: bool = true;
+
+    /// Additive identity (equals `Default::default()`).
+    #[inline]
+    fn zero() -> Self {
+        Self::default()
+    }
+
+    /// Multiplicative identity.
+    fn one() -> Self;
+
+    /// Accumulator zero (equals `Acc::default()`).
+    #[inline]
+    fn acc_zero() -> Self::Acc {
+        Self::Acc::default()
+    }
+
+    /// Widening multiply-accumulate: `acc + a·b` in the accumulator domain.
+    fn mac(acc: Self::Acc, a: Self, b: Self) -> Self::Acc;
+
+    /// Accumulator addition (BIRRD spatial reduction, OB temporal
+    /// accumulation).
+    fn acc_add(a: Self::Acc, b: Self::Acc) -> Self::Acc;
+
+    /// Is this accumulator exactly zero? (Orphan-psum legality check.)
+    fn acc_is_zero(a: Self::Acc) -> bool;
+
+    /// Narrow an accumulator to the element domain — the conversion the
+    /// OB→operand-buffer commit applies, and therefore the one chained
+    /// execution applies between layers.
+    fn reduce(acc: Self::Acc) -> Self;
+
+    /// Canonical encoding into the 64-bit datapath word (the serving wire
+    /// format for element-typed sessions).
+    fn encode(self) -> u64;
+
+    /// Inverse of [`Self::encode`] on canonical words; non-canonical words
+    /// are normalized into the domain (documented per backend).
+    fn decode(word: u64) -> Self;
+
+    /// In-buffer activation semantics for this representation.
+    fn act(f: ActFn, v: Self) -> Self;
+}
+
+impl Element for i32 {
+    type Acc = i64;
+    const NAME: &'static str = "i32";
+
+    #[inline]
+    fn one() -> Self {
+        1
+    }
+
+    #[inline]
+    fn mac(acc: i64, a: i32, b: i32) -> i64 {
+        acc + a as i64 * b as i64
+    }
+
+    #[inline]
+    fn acc_add(a: i64, b: i64) -> i64 {
+        a + b
+    }
+
+    #[inline]
+    fn acc_is_zero(a: i64) -> bool {
+        a == 0
+    }
+
+    /// Saturating narrowing — the former `functional::clamp_acc` contract
+    /// (that function is now a deprecated shim over this).
+    #[inline]
+    fn reduce(acc: i64) -> i32 {
+        acc.clamp(i32::MIN as i64, i32::MAX as i64) as i32
+    }
+
+    #[inline]
+    fn encode(self) -> u64 {
+        self as u32 as u64
+    }
+
+    /// Decodes the low 32 bits (high word ignored).
+    #[inline]
+    fn decode(word: u64) -> i32 {
+        word as u32 as i32
+    }
+
+    fn act(f: ActFn, v: i32) -> i32 {
+        match f {
+            ActFn::None => v,
+            ActFn::Relu => v.max(0),
+            // Integer surrogate: the real chip applies GELU in a
+            // requantized fixed-point pipeline; only ReLU/None sit on the
+            // exact path.
+            ActFn::Gelu => {
+                let x = v as f64;
+                (x * 0.5 * (1.0 + (0.7978845608 * (x + 0.044715 * x * x * x)).tanh())) as i32
+            }
+            ActFn::Softmax => v, // needs a row context; modeled in L2
+        }
+    }
+}
+
+impl Element for f32 {
+    /// f32 psums do not widen; accumulation order therefore matters for
+    /// rounding — bit-exactness guarantees hold only on exactly
+    /// representable inputs (integers below 2^24), which is what the
+    /// property tests use.
+    type Acc = f32;
+    const NAME: &'static str = "f32";
+    /// `0.0 · ∞` / `0.0 · NaN` are NaN: zero operands must still multiply.
+    const ZERO_ANNIHILATES: bool = false;
+
+    #[inline]
+    fn one() -> Self {
+        1.0
+    }
+
+    #[inline]
+    fn mac(acc: f32, a: f32, b: f32) -> f32 {
+        acc + a * b
+    }
+
+    #[inline]
+    fn acc_add(a: f32, b: f32) -> f32 {
+        a + b
+    }
+
+    #[inline]
+    fn acc_is_zero(a: f32) -> bool {
+        a == 0.0
+    }
+
+    #[inline]
+    fn reduce(acc: f32) -> f32 {
+        acc
+    }
+
+    #[inline]
+    fn encode(self) -> u64 {
+        self.to_bits() as u64
+    }
+
+    #[inline]
+    fn decode(word: u64) -> f32 {
+        f32::from_bits(word as u32)
+    }
+
+    fn act(f: ActFn, v: f32) -> f32 {
+        match f {
+            ActFn::None => v,
+            ActFn::Relu => v.max(0.0),
+            ActFn::Gelu => {
+                let x = v as f64;
+                (x * 0.5 * (1.0 + (0.7978845608 * (x + 0.044715 * x * x * x)).tanh())) as f32
+            }
+            ActFn::Softmax => v,
+        }
+    }
+}
+
+/// Runtime tag naming an [`Element`] backend — the serving/CLI currency.
+/// Use [`crate::with_element!`] to dispatch a tag to its concrete type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ElemType {
+    I32,
+    F32,
+    BabyBear,
+    Goldilocks,
+    Pallas,
+}
+
+impl ElemType {
+    pub const ALL: [ElemType; 5] = [
+        ElemType::I32,
+        ElemType::F32,
+        ElemType::BabyBear,
+        ElemType::Goldilocks,
+        ElemType::Pallas,
+    ];
+
+    /// The `--elem` spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            ElemType::I32 => <i32 as Element>::NAME,
+            ElemType::F32 => <f32 as Element>::NAME,
+            ElemType::BabyBear => <ModP<BabyBear> as Element>::NAME,
+            ElemType::Goldilocks => <ModP<Goldilocks> as Element>::NAME,
+            ElemType::Pallas => <ModP<PallasStyle> as Element>::NAME,
+        }
+    }
+
+    /// Parse a `--elem` value.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        ElemType::ALL
+            .iter()
+            .copied()
+            .find(|e| e.name() == s)
+            .ok_or_else(|| {
+                let names: Vec<&str> = ElemType::ALL.iter().map(|e| e.name()).collect();
+                format!("unknown element type '{s}' (expected one of {})", names.join(", "))
+            })
+    }
+
+    /// The field modulus, for the prime-field backends.
+    pub fn modulus(self) -> Option<u64> {
+        match self {
+            ElemType::I32 | ElemType::F32 => None,
+            ElemType::BabyBear => Some(BabyBear::P),
+            ElemType::Goldilocks => Some(Goldilocks::P),
+            ElemType::Pallas => Some(PallasStyle::P),
+        }
+    }
+
+    pub fn is_field(self) -> bool {
+        self.modulus().is_some()
+    }
+
+    /// Deterministic operand words in this backend's natural test range:
+    /// small signed values for `i32` (keeps chained layers clear of
+    /// saturation), exactly representable small integers for `f32` (keeps
+    /// accumulation order irrelevant), uniform canonical residues for the
+    /// fields.
+    pub fn sample_words(self, rng: &mut Lcg, n: usize) -> Vec<u64> {
+        (0..n)
+            .map(|_| match self {
+                ElemType::I32 => (rng.range(0, 15) as i32 - 7).encode(),
+                ElemType::F32 => ((rng.range(0, 15) as i32 - 7) as f32).encode(),
+                _ => rng.next_u64() % self.modulus().unwrap_or(u64::MAX),
+            })
+            .collect()
+    }
+}
+
+impl fmt::Display for ElemType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Dispatch an [`ElemType`] tag to a block generic over the concrete
+/// [`Element`] type, bound to the given identifier:
+///
+/// ```ignore
+/// with_element!(elem, E => {
+///     let xs: Vec<E> = decode_words::<E>(&words);
+///     ...
+/// })
+/// ```
+#[macro_export]
+macro_rules! with_element {
+    ($elem:expr, $E:ident => $body:block) => {
+        match $elem {
+            $crate::arith::ElemType::I32 => {
+                type $E = i32;
+                $body
+            }
+            $crate::arith::ElemType::F32 => {
+                type $E = f32;
+                $body
+            }
+            $crate::arith::ElemType::BabyBear => {
+                type $E = $crate::arith::ModP<$crate::arith::BabyBear>;
+                $body
+            }
+            $crate::arith::ElemType::Goldilocks => {
+                type $E = $crate::arith::ModP<$crate::arith::Goldilocks>;
+                $body
+            }
+            $crate::arith::ElemType::Pallas => {
+                type $E = $crate::arith::ModP<$crate::arith::PallasStyle>;
+                $body
+            }
+        }
+    };
+}
+
+/// Decode a canonical word slice into elements.
+pub fn decode_words<E: Element>(words: &[u64]) -> Vec<E> {
+    words.iter().map(|&w| E::decode(w)).collect()
+}
+
+/// Encode elements into canonical words.
+pub fn encode_words<E: Element>(xs: &[E]) -> Vec<u64> {
+    xs.iter().map(|&x| x.encode()).collect()
+}
+
+/// Reference GEMM over any element backend: `O[M,N] = I[M,K]·W[K,N]` with
+/// accumulation in the `Acc` domain. For `i32` this is bit-identical to the
+/// pre-refactor `functional::naive_gemm` (which now delegates here). The
+/// zero-operand skip is taken only where [`Element::ZERO_ANNIHILATES`]
+/// holds, so the f32 reference agrees with the always-multiplying datapath
+/// even on non-finite operands (`0·∞`, `0·NaN`).
+pub fn naive_gemm_e<E: Element>(i: &[E], w: &[E], m: usize, k: usize, n: usize) -> Vec<E::Acc> {
+    assert_eq!(i.len(), m * k, "input shape");
+    assert_eq!(w.len(), k * n, "weight shape");
+    let mut o = vec![E::acc_zero(); m * n];
+    for mi in 0..m {
+        for ki in 0..k {
+            let a = i[mi * k + ki];
+            if E::ZERO_ANNIHILATES && a == E::zero() {
+                continue;
+            }
+            for ni in 0..n {
+                o[mi * n + ni] = E::mac(o[mi * n + ni], a, w[ki * n + ni]);
+            }
+        }
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn i32_backend_is_pre_refactor_semantics() {
+        // mac widens into i64 without wrapping.
+        assert_eq!(<i32 as Element>::mac(0, i32::MAX, 2), 2 * i32::MAX as i64);
+        // reduce saturates exactly like the former clamp_acc.
+        assert_eq!(<i32 as Element>::reduce(i64::MAX), i32::MAX);
+        assert_eq!(<i32 as Element>::reduce(i64::MIN), i32::MIN);
+        assert_eq!(<i32 as Element>::reduce(-5), -5);
+        assert_eq!(<i32 as Element>::reduce(i32::MAX as i64 + 1), i32::MAX);
+        assert_eq!(<i32 as Element>::reduce(i32::MIN as i64 - 1), i32::MIN);
+    }
+
+    #[test]
+    fn i32_encode_roundtrip() {
+        for v in [0, 1, -1, 42, i32::MAX, i32::MIN] {
+            assert_eq!(i32::decode(v.encode()), v);
+        }
+    }
+
+    #[test]
+    fn f32_encode_roundtrip() {
+        for v in [0.0f32, 1.5, -3.25, f32::MAX] {
+            assert_eq!(f32::decode(v.encode()), v);
+        }
+        assert!(f32::decode(f32::NAN.encode()).is_nan());
+    }
+
+    #[test]
+    fn elem_type_parse_and_names() {
+        for e in ElemType::ALL {
+            assert_eq!(ElemType::parse(e.name()), Ok(e));
+            assert_eq!(format!("{e}"), e.name());
+        }
+        assert!(ElemType::parse("i64").is_err());
+        assert!(ElemType::I32.modulus().is_none());
+        assert!(ElemType::Goldilocks.is_field());
+        assert_eq!(ElemType::BabyBear.modulus(), Some(2_013_265_921));
+    }
+
+    #[test]
+    fn with_element_dispatches_every_tag() {
+        for e in ElemType::ALL {
+            let name = with_element!(e, E => { <E as Element>::NAME });
+            assert_eq!(name, e.name());
+        }
+    }
+
+    #[test]
+    fn sample_words_are_canonical() {
+        let mut rng = Lcg::new(7);
+        for e in ElemType::ALL {
+            for w in e.sample_words(&mut rng, 64) {
+                let rt = with_element!(e, E => { E::decode(w).encode() });
+                assert_eq!(rt, w, "{e} word {w:#x} canonical");
+            }
+        }
+    }
+
+    #[test]
+    fn naive_gemm_e_matches_by_hand() {
+        // 2x2·2x2 over i32.
+        let i = [1, 2, 3, 4];
+        let w = [5, 6, 7, 8];
+        assert_eq!(naive_gemm_e::<i32>(&i, &w, 2, 2, 2), vec![19, 22, 43, 50]);
+        // Same values over Goldilocks.
+        type G = ModP<Goldilocks>;
+        let ig: Vec<G> = i.iter().map(|&x| G::new(x as u64)).collect();
+        let wg: Vec<G> = w.iter().map(|&x| G::new(x as u64)).collect();
+        let og: Vec<u64> = naive_gemm_e::<G>(&ig, &wg, 2, 2, 2)
+            .into_iter()
+            .map(|x| x.to_u64())
+            .collect();
+        assert_eq!(og, vec![19, 22, 43, 50]);
+    }
+
+    #[test]
+    fn f32_reference_does_not_skip_zero_times_infinity() {
+        // 0.0 · ∞ is NaN; the reference must multiply it like the datapath
+        // does, not skip it as an annihilating zero.
+        let o = naive_gemm_e::<f32>(&[0.0], &[f32::INFINITY], 1, 1, 1);
+        assert!(o[0].is_nan());
+        assert!(!<f32 as Element>::ZERO_ANNIHILATES);
+        assert!(<i32 as Element>::ZERO_ANNIHILATES);
+        assert!(<ModP<Goldilocks> as Element>::ZERO_ANNIHILATES);
+    }
+
+    #[test]
+    fn encode_decode_words_roundtrip() {
+        let xs: Vec<i32> = vec![-3, 0, 7, i32::MIN];
+        assert_eq!(decode_words::<i32>(&encode_words::<i32>(&xs)), xs);
+    }
+}

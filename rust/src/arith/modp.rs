@@ -1,0 +1,441 @@
+//! Montgomery prime-field arithmetic — the `ModP` element backend.
+//!
+//! FHE and ZKP kernels (Table IV's NTT entries) compute over `Z_p`, not
+//! saturating integers: an NTT-as-GEMM is only *correct* if every
+//! multiply-accumulate reduces modulo the field prime. `ModP<F>` stores
+//! residues in Montgomery form (`x·R mod p`, `R = 2^64`) so the hot-path
+//! multiply is one 64×64→128 multiply plus one REDC — no `%` on the wave
+//! loop (the §Perf story applied to the arithmetic itself; see
+//! `benches/hotpath.rs` "arith/" cases and `BENCH_arith.json`).
+//!
+//! Supported primes are declared as [`PrimeField`] marker types. The
+//! Montgomery constants (`R`, `R²`, `-p⁻¹ mod 2^64`) are derived at compile
+//! time from `P` alone by const evaluation, so adding a field is three
+//! constants and a name. The REDC below is valid for any odd `p < 2^64`
+//! (including Goldilocks, where `2p` overflows u64 — the carry branch
+//! handles it); all three shipped fields were cross-validated against a
+//! big-integer oracle during development.
+//!
+//! Shipped fields (two-adic roots are the standard published constants):
+//!
+//! | field        | p                              | 2-adicity | use         |
+//! |--------------|--------------------------------|-----------|-------------|
+//! | `BabyBear`   | 2^31 − 2^27 + 1                | 27        | FHE RNS limb|
+//! | `Goldilocks` | 2^64 − 2^32 + 1                | 32        | ZKP STARKs  |
+//! | `PallasStyle`| 0x3fffff5d·2^32 + 1 (62-bit)   | 32        | ZKP (Pallas-like 2-adicity) |
+//!
+//! `PallasStyle` is *not* the 255-bit Pallas base field (which does not fit
+//! the 64-bit datapath word); it is the largest 62-bit prime `c·2^32 + 1`
+//! with **odd** `c` (i.e. 2-adicity exactly 32), chosen to mirror Pallas's
+//! high 2-adicity so the same NTT sizes lower (§VI Table IV ZKP rows).
+
+use std::fmt;
+use std::marker::PhantomData;
+
+use super::Element;
+use crate::isa::inst::ActFn;
+
+/// `p⁻¹ mod 2^64` by Newton–Hensel iteration (3 correct bits at start for
+/// odd `p`, doubling per step: 6 steps ≥ 64 bits), negated for REDC.
+const fn mont_ninv(p: u64) -> u64 {
+    let mut inv: u64 = p;
+    let mut i = 0;
+    while i < 6 {
+        inv = inv.wrapping_mul(2u64.wrapping_sub(p.wrapping_mul(inv)));
+        i += 1;
+    }
+    inv.wrapping_neg()
+}
+
+/// `2^64 mod p` — the Montgomery form of 1.
+const fn mont_r(p: u64) -> u64 {
+    ((1u128 << 64) % p as u128) as u64
+}
+
+/// `(2^64)² mod p` — the to-Montgomery conversion constant.
+const fn mont_r2(p: u64) -> u64 {
+    let r = mont_r(p) as u128;
+    ((r * r) % p as u128) as u64
+}
+
+/// A prime modulus usable as a `ModP` backend: an odd prime `< 2^64` with a
+/// published multiplicative generator and two-adic root of unity (the root
+/// is what `workloads::ntt` derives twiddle matrices from). The Montgomery
+/// constants default to compile-time derivations from `P`.
+pub trait PrimeField:
+    Copy + Clone + Default + PartialEq + Eq + std::hash::Hash + Send + Sync + fmt::Debug + 'static
+{
+    /// The modulus (odd prime, `< 2^64`).
+    const P: u64;
+    /// A generator of the multiplicative group (canonical residue).
+    const GENERATOR: u64;
+    /// Largest `s` with `2^s | p − 1`: NTT sizes up to `2^s` lower exactly.
+    const TWO_ADICITY: u32;
+    /// A primitive `2^TWO_ADICITY`-th root of unity (canonical residue).
+    const TWO_ADIC_ROOT: u64;
+    const NAME: &'static str;
+    /// `−p⁻¹ mod 2^64` (REDC constant; derived, do not override).
+    const NINV: u64 = mont_ninv(Self::P);
+    /// `2^64 mod p` (Montgomery 1; derived, do not override).
+    const R: u64 = mont_r(Self::P);
+    /// `(2^64)² mod p` (to-Montgomery constant; derived, do not override).
+    const R2: u64 = mont_r2(Self::P);
+}
+
+/// Baby Bear: `p = 2^31 − 2^27 + 1`, the RISC-Zero/Plonky3 31-bit field —
+/// the natural RNS-limb stand-in for the FHE NTT rows of Table IV.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub struct BabyBear;
+
+impl PrimeField for BabyBear {
+    const P: u64 = 0x7800_0001; // 2_013_265_921
+    const GENERATOR: u64 = 31;
+    const TWO_ADICITY: u32 = 27;
+    const TWO_ADIC_ROOT: u64 = 0x1a42_7a41; // 31^((p-1)/2^27) mod p
+    const NAME: &'static str = "babybear";
+}
+
+/// Goldilocks: `p = 2^64 − 2^32 + 1` (Plonky2/winterfell), the ZKP STARK
+/// workhorse — exercises the near-2^64 REDC carry path.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub struct Goldilocks;
+
+impl PrimeField for Goldilocks {
+    const P: u64 = 0xffff_ffff_0000_0001;
+    const GENERATOR: u64 = 7;
+    const TWO_ADICITY: u32 = 32;
+    const TWO_ADIC_ROOT: u64 = 0x1856_29dc_da58_878c; // 7^((p-1)/2^32) mod p
+    const NAME: &'static str = "goldilocks";
+}
+
+/// Pallas-style: the largest 62-bit prime `c·2^32 + 1` with odd `c`
+/// (`c = 0x3fffff5d`, 2-adicity exactly 32), mirroring the Pallas curve
+/// field's high 2-adicity within the 64-bit datapath word. See the module
+/// docs for why the real 255-bit field is out.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub struct PallasStyle;
+
+impl PrimeField for PallasStyle {
+    const P: u64 = 0x3fff_ff5d_0000_0001; // 4_611_685_318_347_718_657
+    const GENERATOR: u64 = 5;
+    const TWO_ADICITY: u32 = 32;
+    const TWO_ADIC_ROOT: u64 = 0x1b94_1e27_c355_b864; // 5^((p-1)/2^32) mod p
+    const NAME: &'static str = "pallas";
+}
+
+/// A field element in Montgomery form. `Default` is 0; construct canonical
+/// values with [`ModP::new`] and read them back with [`ModP::to_u64`].
+#[derive(Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub struct ModP<F: PrimeField>(u64, PhantomData<F>);
+
+impl<F: PrimeField> ModP<F> {
+    /// From a canonical residue (values `>= p` are reduced).
+    #[inline]
+    pub fn new(v: u64) -> Self {
+        Self(Self::redc(v as u128 * F::R2 as u128), PhantomData)
+    }
+
+    /// The canonical residue in `[0, p)`.
+    #[inline]
+    pub fn to_u64(self) -> u64 {
+        Self::redc(self.0 as u128)
+    }
+
+    pub const fn modulus() -> u64 {
+        F::P
+    }
+
+    /// Montgomery reduction: `t·2^-64 mod p` for `t < p·2^64`. The carry
+    /// branch keeps this exact for `p` within one bit of 2^64 (Goldilocks):
+    /// `(t + m·p)/2^64 < 2p` may not fit u64, but `carry` recovers the
+    /// 2^64 bit and the subtract folds it back below `p`.
+    #[inline]
+    fn redc(t: u128) -> u64 {
+        let m = (t as u64).wrapping_mul(F::NINV);
+        let (sum, carry) = t.overflowing_add(m as u128 * F::P as u128);
+        let r = (sum >> 64) as u64;
+        if carry || r >= F::P {
+            r.wrapping_sub(F::P)
+        } else {
+            r
+        }
+    }
+
+    /// `self^e` by square-and-multiply (exponent over canonical integers).
+    pub fn pow(self, mut e: u64) -> Self {
+        let mut base = self;
+        let mut acc = Self::new(1);
+        while e > 0 {
+            if e & 1 == 1 {
+                acc = acc * base;
+            }
+            base = base * base;
+            e >>= 1;
+        }
+        acc
+    }
+
+    /// Multiplicative inverse via Fermat (`self^(p−2)`); `inv(0) == 0`.
+    pub fn inv(self) -> Self {
+        self.pow(F::P - 2)
+    }
+}
+
+impl<F: PrimeField> std::ops::Add for ModP<F> {
+    type Output = Self;
+    #[inline]
+    fn add(self, rhs: Self) -> Self {
+        // a, b < p so a + b < 2p < 2^65: the carry (possible only when p is
+        // within one bit of 2^64) marks sums ≥ 2^64, which are always ≥ p.
+        let (s, carry) = self.0.overflowing_add(rhs.0);
+        let s = if carry || s >= F::P { s.wrapping_sub(F::P) } else { s };
+        Self(s, PhantomData)
+    }
+}
+
+impl<F: PrimeField> std::ops::Sub for ModP<F> {
+    type Output = Self;
+    #[inline]
+    fn sub(self, rhs: Self) -> Self {
+        let (d, borrow) = self.0.overflowing_sub(rhs.0);
+        Self(if borrow { d.wrapping_add(F::P) } else { d }, PhantomData)
+    }
+}
+
+impl<F: PrimeField> std::ops::Neg for ModP<F> {
+    type Output = Self;
+    #[inline]
+    fn neg(self) -> Self {
+        Self::default() - self
+    }
+}
+
+impl<F: PrimeField> std::ops::Mul for ModP<F> {
+    type Output = Self;
+    #[inline]
+    fn mul(self, rhs: Self) -> Self {
+        Self(Self::redc(self.0 as u128 * rhs.0 as u128), PhantomData)
+    }
+}
+
+impl<F: PrimeField> fmt::Debug for ModP<F> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Print the canonical residue, not the Montgomery representation.
+        write!(f, "{}#{}", self.to_u64(), F::NAME)
+    }
+}
+
+impl<F: PrimeField> fmt::Display for ModP<F> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.to_u64())
+    }
+}
+
+impl<F: PrimeField> Element for ModP<F> {
+    /// Field psums never widen: BIRRD/OB accumulation is field addition.
+    type Acc = ModP<F>;
+    const NAME: &'static str = F::NAME;
+
+    #[inline]
+    fn one() -> Self {
+        // R is the Montgomery form of 1 — no conversion multiply needed.
+        Self(F::R, PhantomData)
+    }
+
+    #[inline]
+    fn mac(acc: Self::Acc, a: Self, b: Self) -> Self::Acc {
+        acc + a * b
+    }
+
+    #[inline]
+    fn acc_add(a: Self::Acc, b: Self::Acc) -> Self::Acc {
+        a + b
+    }
+
+    #[inline]
+    fn acc_is_zero(a: Self::Acc) -> bool {
+        // Montgomery form of 0 is 0.
+        a.0 == 0
+    }
+
+    /// Identity: field accumulators are already elements (the OB→operand
+    /// commit between chained NTT layers is exact, unlike `SatI32`).
+    #[inline]
+    fn reduce(acc: Self::Acc) -> Self {
+        acc
+    }
+
+    #[inline]
+    fn encode(self) -> u64 {
+        self.to_u64()
+    }
+
+    #[inline]
+    fn decode(word: u64) -> Self {
+        Self::new(word)
+    }
+
+    /// ReLU/GELU/softmax have no order-theoretic meaning in `Z_p`; field
+    /// programs (NTT chains) use `ActFn::None` only, and the others are
+    /// identity so a stray activation cannot corrupt exactness silently.
+    #[inline]
+    fn act(_f: ActFn, v: Self) -> Self {
+        v
+    }
+}
+
+/// A primitive `n`-th root of unity for power-of-two `n`, derived from the
+/// field's two-adic root by repeated squaring. `Err` when `n` exceeds the
+/// field's two-adic subgroup (or is not a power of two).
+pub fn two_adic_root<F: PrimeField>(n: usize) -> Result<ModP<F>, String> {
+    if !n.is_power_of_two() {
+        return Err(format!("NTT size {n} is not a power of two"));
+    }
+    let log_n = n.trailing_zeros();
+    if log_n > F::TWO_ADICITY {
+        return Err(format!(
+            "NTT size {n} exceeds {}'s two-adic subgroup (2^{})",
+            F::NAME,
+            F::TWO_ADICITY
+        ));
+    }
+    let mut root = ModP::<F>::new(F::TWO_ADIC_ROOT);
+    for _ in 0..(F::TWO_ADICITY - log_n) {
+        root = root * root;
+    }
+    Ok(root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Lcg;
+
+    /// Big-integer oracle: `a·b mod p` through u128.
+    fn mulmod(a: u64, b: u64, p: u64) -> u64 {
+        ((a as u128 * b as u128) % p as u128) as u64
+    }
+
+    fn roundtrip_and_ops<F: PrimeField>() {
+        let p = F::P;
+        let mut rng = Lcg::new(0xF1E1D);
+        for _ in 0..2000 {
+            let a = rng.next_u64() % p;
+            let b = rng.next_u64() % p;
+            let (fa, fb) = (ModP::<F>::new(a), ModP::<F>::new(b));
+            assert_eq!(fa.to_u64(), a, "{} roundtrip", F::NAME);
+            assert_eq!((fa * fb).to_u64(), mulmod(a, b, p), "{} mul", F::NAME);
+            assert_eq!(
+                (fa + fb).to_u64(),
+                ((a as u128 + b as u128) % p as u128) as u64,
+                "{} add",
+                F::NAME
+            );
+            assert_eq!(
+                (fa - fb).to_u64(),
+                ((a as u128 + p as u128 - b as u128) % p as u128) as u64,
+                "{} sub",
+                F::NAME
+            );
+        }
+        // Boundary values — the REDC carry / add overflow paths.
+        for a in [0, 1, 2, p - 2, p - 1] {
+            for b in [0, 1, 2, p - 2, p - 1] {
+                let (fa, fb) = (ModP::<F>::new(a), ModP::<F>::new(b));
+                assert_eq!((fa * fb).to_u64(), mulmod(a, b, p), "{} mul edge", F::NAME);
+                assert_eq!(
+                    (fa + fb).to_u64(),
+                    ((a as u128 + b as u128) % p as u128) as u64,
+                    "{} add edge",
+                    F::NAME
+                );
+            }
+        }
+        // Non-canonical input reduces.
+        assert_eq!(ModP::<F>::new(p).to_u64(), 0);
+        assert_eq!(ModP::<F>::one().to_u64(), 1);
+        assert_eq!((-ModP::<F>::one()).to_u64(), p - 1);
+    }
+
+    #[test]
+    fn babybear_field_ops() {
+        roundtrip_and_ops::<BabyBear>();
+    }
+
+    #[test]
+    fn goldilocks_field_ops() {
+        roundtrip_and_ops::<Goldilocks>();
+    }
+
+    #[test]
+    fn pallas_style_field_ops() {
+        roundtrip_and_ops::<PallasStyle>();
+    }
+
+    fn inverse_and_pow<F: PrimeField>() {
+        let mut rng = Lcg::new(99);
+        for _ in 0..200 {
+            let a = 1 + rng.next_u64() % (F::P - 1);
+            let fa = ModP::<F>::new(a);
+            assert_eq!((fa * fa.inv()).to_u64(), 1, "{} inverse", F::NAME);
+        }
+        assert_eq!(ModP::<F>::new(0).inv().to_u64(), 0, "inv(0) convention");
+        // Fermat: a^(p-1) = 1.
+        assert_eq!(ModP::<F>::new(12345 % F::P).pow(F::P - 1).to_u64(), 1);
+    }
+
+    #[test]
+    fn inverses() {
+        inverse_and_pow::<BabyBear>();
+        inverse_and_pow::<Goldilocks>();
+        inverse_and_pow::<PallasStyle>();
+    }
+
+    fn root_structure<F: PrimeField>() {
+        // The declared two-adic root has exact order 2^TWO_ADICITY …
+        let r = ModP::<F>::new(F::TWO_ADIC_ROOT);
+        assert_eq!(r.pow(1 << (F::TWO_ADICITY - 1)).to_u64(), F::P - 1, "{}", F::NAME);
+        // … and derived n-th roots have exact order n.
+        for log_n in [1u32, 3, 6] {
+            let n = 1usize << log_n;
+            let w = two_adic_root::<F>(n).unwrap();
+            assert_eq!(w.pow(n as u64).to_u64(), 1);
+            assert_eq!(w.pow((n / 2) as u64).to_u64(), F::P - 1, "primitive {n}-th root");
+        }
+        assert!(two_adic_root::<F>(3).is_err(), "non-power-of-two rejected");
+        assert!(two_adic_root::<F>(1usize << 40).is_err(), "oversized rejected");
+    }
+
+    #[test]
+    fn two_adic_roots() {
+        root_structure::<BabyBear>();
+        root_structure::<Goldilocks>();
+        root_structure::<PallasStyle>();
+    }
+
+    #[test]
+    fn derived_montgomery_constants() {
+        // The const-fn derivations match the definitional identities.
+        fn check<F: PrimeField>() {
+            assert_eq!(F::P.wrapping_mul(F::NINV.wrapping_neg()), 1, "{} ninv", F::NAME);
+            assert_eq!(F::R as u128, (1u128 << 64) % F::P as u128);
+            assert_eq!(F::R2 as u128, (F::R as u128 * F::R as u128) % F::P as u128);
+        }
+        check::<BabyBear>();
+        check::<Goldilocks>();
+        check::<PallasStyle>();
+    }
+
+    #[test]
+    fn element_contract() {
+        type E = ModP<Goldilocks>;
+        let a = E::new(5);
+        let b = E::new(7);
+        assert_eq!(E::mac(E::acc_zero(), a, b).to_u64(), 35);
+        assert!(E::acc_is_zero(E::acc_zero()));
+        assert!(!E::acc_is_zero(E::mac(E::acc_zero(), a, b)));
+        assert_eq!(E::decode(E::encode(a)), a);
+        assert_eq!(E::reduce(a * b), a * b, "reduce is identity in a field");
+        assert_eq!(E::act(ActFn::Relu, a), a, "activations are identity in Z_p");
+    }
+}

@@ -10,10 +10,13 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 
 use crate::arch::config::ArchConfig;
+use crate::arith::{decode_words, ElemType, Element};
 use crate::coordinator::{compare_devices, evaluate_suite, summarize_by_config};
+use crate::functional::FunctionalSim;
 use crate::mapper::search::{search as mapper_search, MapperOptions};
 use crate::report::{eng, f1, f2, pct, Table};
-use crate::workloads::{self, Gemm};
+use crate::with_element;
+use crate::workloads::{self, ntt, Gemm};
 
 /// Parsed command line: subcommand + flags.
 #[derive(Debug, Clone, Default)]
@@ -102,6 +105,15 @@ fn opts(args: &Args) -> MapperOptions {
 
 fn out_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_flag("out", "results"))
+}
+
+/// Parse `--elem {i32,f32,babybear,goldilocks,pallas}` (element backend for
+/// functional execution and element-typed serving sessions).
+fn elem_flag(args: &Args, default: ElemType) -> anyhow::Result<ElemType> {
+    match args.flags.get("elem") {
+        None => Ok(default),
+        Some(s) => ElemType::parse(s).map_err(anyhow::Error::msg),
+    }
 }
 
 /// `minisa evaluate` — Fig. 10/12 data: full (mapping, layout) co-search for
@@ -319,10 +331,19 @@ pub fn cmd_trace(args: &Args) -> anyhow::Result<()> {
         prog.waves
     );
     if args.bool_flag("validate") {
-        let (got, expect) = crate::mapper::exec::validate_decision(&cfg, &g, &prog, 42)
-            .map_err(|e| anyhow::anyhow!("functional sim: {e}"))?;
-        anyhow::ensure!(got == expect, "functional mismatch!");
-        println!("functional simulation matches naive GEMM ✓");
+        let elem = elem_flag(args, ElemType::I32)?;
+        let mut rng = crate::util::Lcg::new(42);
+        let iw = elem.sample_words(&mut rng, g.m * g.k);
+        let ww = elem.sample_words(&mut rng, g.k * g.n);
+        let exact = with_element!(elem, E => {
+            let iv: Vec<E> = decode_words::<E>(&iw);
+            let wv: Vec<E> = decode_words::<E>(&ww);
+            let got = crate::mapper::exec::execute_program(&cfg, &g, &prog, &iv, &wv)
+                .map_err(|e| anyhow::anyhow!("functional sim: {e}"))?;
+            got == crate::arith::naive_gemm_e::<E>(&iv, &wv, g.m, g.k, g.n)
+        });
+        anyhow::ensure!(exact, "functional mismatch under {elem}!");
+        println!("functional simulation matches naive GEMM over {elem} ✓");
     }
     Ok(())
 }
@@ -397,21 +418,149 @@ fn serving_executor(args: &Args) -> std::sync::Arc<dyn crate::coordinator::serve
     }
 }
 
+/// `minisa run` — compile a model Program and execute it functionally,
+/// end-to-end, under a chosen element backend (`--elem`), verifying the
+/// result against the naive reference in the same number system.
+///
+/// Three ways to pick the workload:
+/// * `--suite <name> [--scale N]` — an NTT entry of the 50-workload suite
+///   (FHE-NTT/ZKP-NTT), scaled to a CI-sized transform (default cap 64);
+///   weights are the *real* twiddle matrix of the entry's field, so this
+///   is the paper's FHE/ZKP rows executing for real, not as shape models.
+/// * `--ntt N` — a bare size-N NTT over the chosen (or default ZKP) field.
+/// * `--dims k0,k1,... --m M` — an MLP chain with random operands.
+pub fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    use crate::mapper::chain::Chain;
+    use crate::program::Program;
+
+    let cfg = configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(4, 4));
+    let o = opts(args);
+    let mut rng = crate::util::Lcg::new(args.usize_flag("seed", 42) as u64);
+
+    // Resolve the chain and its weights (as canonical words) + element type.
+    let (chain, weight_words, elem) = if let Some(name) = args.flags.get("suite") {
+        let g = workloads::suite50()
+            .into_iter()
+            .find(|g| &g.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no suite entry named '{name}' (see `workloads`)"))?;
+        let scale = args.usize_flag("scale", 64);
+        let g = if ntt::ntt_size(&g).is_some() { ntt::scaled(&g, scale) } else { g };
+        let n = ntt::ntt_size(&g).ok_or_else(|| {
+            anyhow::anyhow!(
+                "suite entry '{name}' is not an NTT kernel; use `--dims`/`--m` to execute \
+                 arbitrary chains"
+            )
+        })?;
+        let elem = elem_flag(args, ntt::default_elem(&g.category))?;
+        let tw = ntt::twiddle_words(elem, n).map_err(anyhow::Error::msg)?;
+        println!(
+            "suite entry {} scaled to M={} K=N={} over {} (p = {})",
+            g.name,
+            g.m,
+            n,
+            elem,
+            elem.modulus().unwrap_or(0)
+        );
+        (Chain { layers: vec![g] }, vec![tw], elem)
+    } else if let Some(nspec) = args.flags.get("ntt") {
+        let n: usize = nspec.parse().map_err(|e| anyhow::anyhow!("--ntt '{nspec}': {e}"))?;
+        let m = args.usize_flag("m", (n / 16).max(1));
+        let elem = elem_flag(args, ElemType::Goldilocks)?;
+        let tw = ntt::twiddle_words(elem, n).map_err(anyhow::Error::msg)?;
+        let g = Gemm::new(&format!("ntt_{n}"), "ZKP-NTT", m, n, n);
+        (Chain { layers: vec![g] }, vec![tw], elem)
+    } else {
+        let spec = args.str_flag("dims", "16,24,16");
+        let parsed: Result<Vec<usize>, _> = spec.split(',').map(|t| t.trim().parse()).collect();
+        let dims = parsed.map_err(|e| anyhow::anyhow!("--dims '{spec}': {e}"))?;
+        anyhow::ensure!(dims.len() >= 2, "--dims needs at least two widths");
+        let m = args.usize_flag("m", 8);
+        let chain = Chain::mlp("run", m, &dims);
+        let elem = elem_flag(args, ElemType::I32)?;
+        let ws: Vec<Vec<u64>> =
+            chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect();
+        (chain, ws, elem)
+    };
+
+    let t0 = std::time::Instant::now();
+    let program = Program::compile(&cfg, &chain, &o)
+        .ok_or_else(|| anyhow::anyhow!("no feasible mapping for chain on {}", cfg.name()))?;
+    let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "compiled {} layer(s) on {} in {:.1} ms: {} wave plans, fused trace {} B \
+         ({} SetIVNLayout elided)",
+        program.layer_count(),
+        cfg.name(),
+        compile_ms,
+        program.plan_count(),
+        program.fused_bytes,
+        program.elided,
+    );
+
+    let input_words = elem.sample_words(&mut rng, program.rows() * program.in_features());
+    let t1 = std::time::Instant::now();
+    let (exact, plan_compiles, checksum) = with_element!(elem, E => {
+        let w: Vec<Vec<E>> = weight_words.iter().map(|m| decode_words::<E>(m)).collect();
+        let input: Vec<E> = decode_words::<E>(&input_words);
+        let mut sim: FunctionalSim<E> = FunctionalSim::new(&cfg);
+        let got = program
+            .execute(&mut sim, &input, &w)
+            .map_err(|e| anyhow::anyhow!("functional execution: {e}"))?;
+        let expect = program.reference(&input, &w);
+        let checksum = got
+            .iter()
+            .map(|&v| E::reduce(v).encode())
+            .fold(0u64, |h, x| h.rotate_left(7) ^ x);
+        (got == expect, sim.plan_compiles, checksum)
+    });
+    let exec_ms = t1.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "executed {}×{}→{} over {} in {:.1} ms ({} runtime plan compiles), checksum {:016x}",
+        program.rows(),
+        program.in_features(),
+        program.out_features(),
+        elem,
+        exec_ms,
+        plan_compiles,
+        checksum,
+    );
+    anyhow::ensure!(exact, "functional output does NOT match the naive {elem} reference");
+    anyhow::ensure!(plan_compiles == 0, "expected zero runtime plan compiles (compile-once)");
+    println!("functional execution matches the naive {elem} reference exactly ✓");
+    Ok(())
+}
+
 /// `minisa serve` — run the serving loop on ad-hoc single-GEMM requests.
+/// With `--elem` other than f32, the GEMM is registered as a single-layer
+/// element-typed program session and served as word requests (ad-hoc f32
+/// payloads cannot carry field residues).
 pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     use crate::coordinator::serve::{spawn, Request};
     use std::sync::Arc;
 
     let cfg = configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(16, 64));
     let requests = args.usize_flag("requests", 64);
+    let elem = elem_flag(args, ElemType::F32)?;
     let executor = serving_executor(args);
     let backend = executor.name().to_string();
-    let (tx, rx, h, _server) = spawn(&cfg, executor);
+    let (tx, rx, h, server) = spawn(&cfg, executor);
     let mut rng = crate::util::Lcg::new(7);
     let wall = std::time::Instant::now();
-    let weight = Arc::new(rng.f32_matrix(64, 64)); // shared → batches by identity
-    for id in 0..requests as u64 {
-        tx.send(Request::gemm(id, 64, 64, 64, rng.f32_matrix(64, 64), Arc::clone(&weight)))?;
+    if elem == ElemType::F32 {
+        let weight = Arc::new(rng.f32_matrix(64, 64)); // shared → batches by identity
+        for id in 0..requests as u64 {
+            tx.send(Request::gemm(id, 64, 64, 64, rng.f32_matrix(64, 64), Arc::clone(&weight)))?;
+        }
+    } else {
+        use crate::mapper::chain::Chain;
+        let g = Gemm::new("serve_gemm", "cli", 64, 64, 64);
+        let chain = Chain { layers: vec![g] };
+        let w = elem.sample_words(&mut rng, 64 * 64);
+        let pid = server.register_chain_elem(&chain, vec![w], elem)?;
+        eprintln!("single-GEMM session {pid:?} over {elem}");
+        for id in 0..requests as u64 {
+            tx.send(Request::for_program_words(id, pid, 64, elem.sample_words(&mut rng, 64 * 64)))?;
+        }
     }
     let mut served = 0;
     let mut failed = 0;
@@ -464,18 +613,27 @@ pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
     };
     anyhow::ensure!(dims.len() >= 2, "--dims needs at least two widths");
     let chain = Chain::mlp("serve_model", m, &dims);
+    let elem = elem_flag(args, ElemType::F32)?;
 
     let executor = serving_executor(args);
     let backend = executor.name().to_string();
     let (tx, rx, h, server) = spawn(&cfg, executor);
     let mut rng = crate::util::Lcg::new(23);
-    let weights: Vec<Vec<f32>> = chain.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect();
-    let pid = server.register_chain(&chain, weights)?;
+    let pid = if elem == ElemType::F32 {
+        let weights: Vec<Vec<f32>> =
+            chain.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect();
+        server.register_chain(&chain, weights)?
+    } else {
+        let weights: Vec<Vec<u64>> =
+            chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect();
+        server.register_chain_elem(&chain, weights, elem)?
+    };
     let prog = server.program(pid).expect("just registered");
     println!(
-        "program {:?}: {} layers, modeled {:.0} cycles/pass, fused trace {} B vs {} B standalone \
-         ({} SetIVNLayout elided, §IV-G2), {} wave plans precompiled",
+        "program {:?} over {}: {} layers, modeled {:.0} cycles/pass, fused trace {} B vs {} B \
+         standalone ({} SetIVNLayout elided, §IV-G2), {} wave plans precompiled",
         pid,
+        elem,
         prog.layer_count(),
         prog.total_cycles,
         prog.fused_bytes,
@@ -486,7 +644,16 @@ pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
 
     let wall = std::time::Instant::now();
     for id in 0..requests as u64 {
-        tx.send(Request::for_program(id, pid, m, rng.f32_matrix(m, dims[0])))?;
+        if elem == ElemType::F32 {
+            tx.send(Request::for_program(id, pid, m, rng.f32_matrix(m, dims[0])))?;
+        } else {
+            tx.send(Request::for_program_words(
+                id,
+                pid,
+                m,
+                elem.sample_words(&mut rng, m * dims[0]),
+            ))?;
+        }
     }
     let mut lat = Vec::new();
     for _ in 0..requests {
@@ -526,13 +693,23 @@ pub fn usage() -> &'static str {
        search     single-shape mapper search [--m --k --n --ah --aw]\n\
                   [--layout-constrained]\n\
        trace      dump the lowered MINISA program [--m --k --n --validate]\n\
+                  [--elem E] (validate under that element backend)\n\
+       run        compile + execute a Program end-to-end, verified against\n\
+                  the naive reference [--elem E]\n\
+                  [--suite <name> [--scale N] | --ntt N | --dims k0,k1,... --m N]\n\
        bitwidth   Table V ISA bitwidths\n\
        area       Table VI area/power model\n\
        workloads  dump the 50-workload suite CSV [--small]\n\
        serve      serving loop, ad-hoc single-GEMM requests [--requests N]\n\
+                  [--elem E] (non-f32: a single-GEMM element session)\n\
        serve-model  compile-once/serve-many model sessions (§IV-G programs)\n\
-                  [--dims k0,k1,... | --gpt] [--m N] [--requests N]\n\
-       animate    cycle-by-cycle NEST/BIRRD/OB animation [--m --k --n --waves]\n"
+                  [--dims k0,k1,... | --gpt] [--m N] [--requests N] [--elem E]\n\
+       animate    cycle-by-cycle NEST/BIRRD/OB animation [--m --k --n --waves]\n\
+     \n\
+     --elem E selects the element arithmetic backend:\n\
+       i32 (saturating, default for run), f32 (default for serving),\n\
+       babybear / goldilocks / pallas (Montgomery prime fields — the FHE/ZKP\n\
+       NTT number systems; see EXPERIMENTS.md §Field arithmetic)\n"
 }
 
 /// Dispatch. Returns process exit code.
@@ -545,6 +722,7 @@ pub fn run(argv: &[String]) -> i32 {
         "breakdown" => cmd_breakdown(&args),
         "search" => cmd_search(&args),
         "trace" => cmd_trace(&args),
+        "run" => cmd_run(&args),
         "bitwidth" => cmd_bitwidth(&args),
         "area" => cmd_area(&args),
         "workloads" => cmd_workloads(&args),
@@ -626,6 +804,61 @@ mod tests {
         let argv: Vec<String> = [
             "serve-model", "--dims", "16,24,16", "--m", "4", "--requests", "6", "--ah", "4",
             "--aw", "4",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(run(&argv), 0);
+    }
+
+    #[test]
+    fn run_command_executes_field_ntt() {
+        let argv: Vec<String> = [
+            "run", "--ntt", "16", "--m", "2", "--elem", "babybear", "--ah", "4", "--aw", "4",
+            "--fast",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(run(&argv), 0);
+    }
+
+    #[test]
+    fn run_command_executes_scaled_suite_entry() {
+        let argv: Vec<String> = [
+            "run", "--suite", "zkp_ntt_8192", "--scale", "32", "--ah", "4", "--aw", "4", "--fast",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(run(&argv), 0);
+    }
+
+    #[test]
+    fn run_command_executes_i32_chain() {
+        let argv: Vec<String> =
+            ["run", "--dims", "8,12,8", "--m", "4", "--ah", "4", "--aw", "4", "--fast"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        assert_eq!(run(&argv), 0);
+    }
+
+    #[test]
+    fn run_rejects_unknown_elem() {
+        let argv: Vec<String> =
+            ["run", "--ntt", "16", "--elem", "i64", "--ah", "4", "--aw", "4", "--fast"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        assert_eq!(run(&argv), 1);
+    }
+
+    #[test]
+    fn serve_model_command_runs_over_field_elem() {
+        let argv: Vec<String> = [
+            "serve-model", "--dims", "8,12,8", "--m", "2", "--requests", "4", "--elem",
+            "goldilocks", "--ah", "4", "--aw", "4",
         ]
         .iter()
         .map(|s| s.to_string())

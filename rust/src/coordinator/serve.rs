@@ -31,10 +31,13 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
 use crate::arch::config::ArchConfig;
+use crate::arith::{decode_words, encode_words, ElemType, Element};
+use crate::functional::FunctionalSim;
 use crate::mapper::chain::Chain;
 use crate::mapper::search::{search, MapperOptions};
 use crate::mapper::Decision;
 use crate::program::Program;
+use crate::with_element;
 use crate::workloads::Gemm;
 
 /// Handle to a registered model session (a compiled [`Program`] plus its
@@ -49,11 +52,19 @@ pub enum Payload {
     /// `Arc` so identical-weight requests batch by pointer identity.
     Gemm { m: usize, k: usize, n: usize, input: Vec<f32>, weight: Arc<Vec<f32>> },
     /// An activation (`rows × in_features`, row-major) for a registered
-    /// program; weights live in the session.
+    /// f32 program; weights live in the session.
     Program { program: ProgramId, rows: usize, input: Vec<f32> },
+    /// An activation for an element-typed program session
+    /// ([`Server::register_chain_elem`]): canonical datapath words in the
+    /// session's [`ElemType`] encoding. Kept apart from [`Payload::Program`]
+    /// down to the batch key, so word and f32 requests can never co-batch
+    /// even if they name the same program id.
+    ProgramWords { program: ProgramId, rows: usize, input: Vec<u64> },
 }
 
-/// A serving request: f32 operands (the PJRT oracle path computes in f32).
+/// A serving request: f32 operands for the GEMM/Program payloads (the PJRT
+/// oracle path computes in f32), canonical element words for
+/// [`Payload::ProgramWords`].
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
@@ -66,9 +77,14 @@ impl Request {
         Self { id, payload: Payload::Gemm { m, k, n, input, weight } }
     }
 
-    /// An activation for a registered program.
+    /// An activation for a registered f32 program.
     pub fn for_program(id: u64, program: ProgramId, rows: usize, input: Vec<f32>) -> Self {
         Self { id, payload: Payload::Program { program, rows, input } }
+    }
+
+    /// An activation (canonical words) for an element-typed program session.
+    pub fn for_program_words(id: u64, program: ProgramId, rows: usize, input: Vec<u64>) -> Self {
+        Self { id, payload: Payload::ProgramWords { program, rows, input } }
     }
 }
 
@@ -76,7 +92,14 @@ impl Request {
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
+    /// Row-major output for f32 requests (`Gemm`/`Program` payloads);
+    /// empty for word requests.
     pub output: Vec<f32>,
+    /// Row-major output for `ProgramWords` requests, as canonical words in
+    /// the session's element encoding (already narrowed by
+    /// `Element::reduce`, i.e. exactly what a next layer would consume);
+    /// empty for f32 requests.
+    pub output_words: Vec<u64>,
     /// Wall-clock service time (queue + execute) in µs.
     pub service_us: f64,
     /// Modeled FEATHER+ cycles for this request. Single-GEMM: the mapper
@@ -127,6 +150,124 @@ pub trait TileExecutor: Send + Sync {
         }
         Ok(act)
     }
+
+    /// Execute a compiled program on an element-typed activation (canonical
+    /// words in the session's encoding), returning the final layer's output
+    /// as canonical words narrowed by `Element::reduce`.
+    ///
+    /// The default runs the **functional simulator over the program's
+    /// precompiled wave plans** — exact in the element domain (field-exact
+    /// for `ModP` sessions, which no f32 backend can be), with zero runtime
+    /// plan compiles. f32-oracle backends like PJRT cannot represent field
+    /// arithmetic, so they keep this default rather than lowering to
+    /// [`Self::gemm`].
+    fn run_program_words(
+        &self,
+        program: &Program,
+        rows: usize,
+        input: &[u64],
+        weights: &WordWeights,
+    ) -> anyhow::Result<Vec<u64>> {
+        execute_program_words(program, rows, input, weights)
+    }
+}
+
+/// The resident weights of an element-typed session, decoded to their
+/// per-backend form **once at registration** — word sessions must not pay
+/// an O(weights) decode (for `ModP`, a Montgomery conversion per element)
+/// on every dispatch, mirroring how f32 sessions retain their matrices
+/// without per-dispatch copies. The canonical words are *not* retained
+/// (they would double the session's resident weight memory); re-encode
+/// from the decoded form if ever needed.
+pub struct WordWeights {
+    /// `Vec<Vec<E>>` for the session's element type, type-erased.
+    decoded: Arc<dyn std::any::Any + Send + Sync>,
+    elem: ElemType,
+    layers: usize,
+}
+
+impl WordWeights {
+    /// Decode canonical word matrices (one per layer) for `elem`, consuming
+    /// the words.
+    pub fn new(words: Vec<Vec<u64>>, elem: ElemType) -> Self {
+        let layers = words.len();
+        let decoded = with_element!(elem, E => {
+            let d: Vec<Vec<E>> = words.iter().map(|m| decode_words::<E>(m)).collect();
+            // Explicit per-arm coercion so every dispatch arm yields the
+            // same erased type.
+            let erased: Arc<dyn std::any::Any + Send + Sync> = Arc::new(d);
+            erased
+        });
+        Self { decoded, elem, layers }
+    }
+
+    pub fn elem(&self) -> ElemType {
+        self.elem
+    }
+
+    /// Number of weight matrices (chain layers).
+    pub fn layer_count(&self) -> usize {
+        self.layers
+    }
+
+    /// The registration-time decoded matrices; `None` only if `E` does not
+    /// match the session's element type.
+    pub fn decoded<E: Element>(&self) -> Option<&Vec<Vec<E>>> {
+        self.decoded.downcast_ref::<Vec<Vec<E>>>()
+    }
+}
+
+/// The simulator-backed word-program executor behind
+/// [`TileExecutor::run_program_words`]. The program is compiled for a fixed
+/// activation height `program.rows()`; larger (batched) activations run in
+/// row chunks of that height, the final chunk zero-padded — rows of a GEMM
+/// chain are independent, so chunking is exact.
+pub fn execute_program_words(
+    program: &Program,
+    rows: usize,
+    input: &[u64],
+    weights: &WordWeights,
+) -> anyhow::Result<Vec<u64>> {
+    let kf = program.in_features();
+    let nf = program.out_features();
+    anyhow::ensure!(
+        input.len() == rows * kf,
+        "activation is {} words, expected {rows}×{kf}",
+        input.len()
+    );
+    anyhow::ensure!(
+        weights.layer_count() == program.layer_count(),
+        "program expects {} weight matrices, got {}",
+        program.layer_count(),
+        weights.layer_count()
+    );
+    with_element!(weights.elem(), E => {
+        // Registration-time decode; a mismatch is impossible through the
+        // Server API (WordWeights::new decodes for the tag it stores).
+        let w: &[Vec<E>] = weights
+            .decoded::<E>()
+            .ok_or_else(|| anyhow::anyhow!("WordWeights decoded form does not match its tag"))?;
+        let m = program.rows();
+        let mut sim: FunctionalSim<E> = FunctionalSim::new(&program.cfg);
+        // Seed once up front; `execute` re-seeds idempotently per chunk,
+        // which is then O(plan-count) hash lookups — noise next to the
+        // chunk's chain execution.
+        program.seed_sim(&mut sim);
+        let mut out_words: Vec<u64> = Vec::with_capacity(rows * nf);
+        let mut row0 = 0usize;
+        while row0 < rows {
+            let rows_here = m.min(rows - row0);
+            let mut act: Vec<E> = decode_words::<E>(&input[row0 * kf..(row0 + rows_here) * kf]);
+            act.resize(m * kf, E::zero());
+            let out = program
+                .execute(&mut sim, &act, w)
+                .map_err(|e| anyhow::anyhow!("functional execution: {e}"))?;
+            let reduced: Vec<E> = out[..rows_here * nf].iter().map(|&v| E::reduce(v)).collect();
+            out_words.extend(encode_words::<E>(&reduced));
+            row0 += rows_here;
+        }
+        Ok(out_words)
+    })
 }
 
 /// Reference executor: naive f32 GEMM (tests / fallback).
@@ -206,11 +347,21 @@ struct ShapeSlot {
     build: Mutex<()>,
 }
 
-/// A registered model session: compiled program + resident weights.
+/// Weights resident in a session, in the session's number system.
+#[derive(Clone)]
+enum SessionWeights {
+    F32(Arc<Vec<Vec<f32>>>),
+    Words(Arc<WordWeights>),
+}
+
+/// A registered model session: compiled program + element type + resident
+/// weights. One session has exactly one element type, fixed at
+/// registration.
 #[derive(Clone)]
 struct Session {
     program: Arc<Program>,
-    weights: Arc<Vec<Vec<f32>>>,
+    elem: ElemType,
+    weights: SessionWeights,
 }
 
 /// How requests group into one executor dispatch.
@@ -219,6 +370,10 @@ enum BatchKey {
     /// Shape plus weight identity (the `Arc` pointer, not its contents).
     Gemm { m: usize, k: usize, n: usize, weight: usize },
     Program(ProgramId),
+    /// Word-encoded program requests: a distinct variant so f32 and
+    /// element-typed payloads never co-batch, even under one program id —
+    /// element types must never mix inside a dispatch.
+    ProgramWords(ProgramId),
 }
 
 fn batch_key(r: &Request) -> BatchKey {
@@ -227,6 +382,7 @@ fn batch_key(r: &Request) -> BatchKey {
             BatchKey::Gemm { m: *m, k: *k, n: *n, weight: Arc::as_ptr(weight) as usize }
         }
         Payload::Program { program, .. } => BatchKey::Program(*program),
+        Payload::ProgramWords { program, .. } => BatchKey::ProgramWords(*program),
     }
 }
 
@@ -288,10 +444,69 @@ impl Server {
         let program = Program::compile(&self.cfg, chain, &self.opts)
             .ok_or_else(|| anyhow::anyhow!("no feasible mapping for chain on {}", self.cfg.name()))?;
         let id = ProgramId(self.next_program.fetch_add(1, Ordering::Relaxed));
-        self.sessions
-            .write()
-            .unwrap()
-            .insert(id, Session { program: Arc::new(program), weights: Arc::new(weights) });
+        self.sessions.write().unwrap().insert(
+            id,
+            Session {
+                program: Arc::new(program),
+                elem: ElemType::F32,
+                weights: SessionWeights::F32(Arc::new(weights)),
+            },
+        );
+        self.stats.lock().unwrap().program_compiles += 1;
+        Ok(id)
+    }
+
+    /// Register a model chain under an explicit element backend: weights
+    /// arrive as canonical datapath words in `elem`'s encoding (e.g. field
+    /// residues for a `ModP` session — `workloads::ntt::twiddle_words`
+    /// produces NTT weights directly in this format). Compiles the chain
+    /// exactly once, like [`Self::register_chain`]; requests use
+    /// [`Payload::ProgramWords`] and are answered (and batched) strictly
+    /// within this session's element type.
+    ///
+    /// Note on `ElemType::I32` sessions: the i32 backend keeps the
+    /// pre-`arith` unchecked i64 accumulation, so overflow-heavy untrusted
+    /// operands can panic the executor under debug assertions (wrap in
+    /// release). The dispatcher contains such panics and answers the batch
+    /// with an error response; quantized (small-magnitude) operands are the
+    /// intended use.
+    pub fn register_chain_elem(
+        &self,
+        chain: &Chain,
+        weights: Vec<Vec<u64>>,
+        elem: ElemType,
+    ) -> anyhow::Result<ProgramId> {
+        chain.validate().map_err(anyhow::Error::msg)?;
+        anyhow::ensure!(
+            weights.len() == chain.layers.len(),
+            "chain has {} layers, got {} weight matrices",
+            chain.layers.len(),
+            weights.len()
+        );
+        for (g, w) in chain.layers.iter().zip(&weights) {
+            anyhow::ensure!(
+                w.len() == g.k * g.n,
+                "layer {} weight is {} words, expected {}×{}",
+                g.name,
+                w.len(),
+                g.k,
+                g.n
+            );
+        }
+        let program = Program::compile(&self.cfg, chain, &self.opts)
+            .ok_or_else(|| anyhow::anyhow!("no feasible mapping for chain on {}", self.cfg.name()))?;
+        let id = ProgramId(self.next_program.fetch_add(1, Ordering::Relaxed));
+        self.sessions.write().unwrap().insert(
+            id,
+            Session {
+                program: Arc::new(program),
+                elem,
+                // Decode-once: the per-backend form is built here, not per
+                // dispatch (for ModP that is one Montgomery conversion per
+                // weight element — session-sized work).
+                weights: SessionWeights::Words(Arc::new(WordWeights::new(weights, elem))),
+            },
+        );
         self.stats.lock().unwrap().program_compiles += 1;
         Ok(id)
     }
@@ -299,6 +514,11 @@ impl Server {
     /// The compiled program behind a session, if registered.
     pub fn program(&self, id: ProgramId) -> Option<Arc<Program>> {
         self.sessions.read().unwrap().get(&id).map(|s| Arc::clone(&s.program))
+    }
+
+    /// The element type a session was registered with.
+    pub fn session_elem(&self, id: ProgramId) -> Option<ElemType> {
+        self.sessions.read().unwrap().get(&id).map(|s| s.elem)
     }
 
     /// Drop a model session, releasing its program and resident weights
@@ -390,6 +610,7 @@ impl Server {
         match &batch[0].payload {
             Payload::Gemm { .. } => self.dispatch_gemm(batch, tx),
             Payload::Program { .. } => self.dispatch_program(batch, tx),
+            Payload::ProgramWords { .. } => self.dispatch_program_words(batch, tx),
         }
     }
 
@@ -400,6 +621,7 @@ impl Server {
             tx.send(Response {
                 id,
                 output: Vec::new(),
+                output_words: Vec::new(),
                 service_us: 0.0,
                 modeled_cycles: 0.0,
                 batch_size,
@@ -472,6 +694,7 @@ impl Server {
             let resp = Response {
                 id: r.id,
                 output: out[bi * m * n..(bi + 1) * m * n].to_vec(),
+                output_words: Vec::new(),
                 service_us,
                 modeled_cycles: modeled,
                 batch_size: valid.len(),
@@ -483,23 +706,98 @@ impl Server {
     }
 
     fn dispatch_program(&self, batch: &[Request], tx: &Sender<Response>) -> Result<(), ()> {
-        let t0 = std::time::Instant::now();
         let Payload::Program { program: pid, .. } = &batch[0].payload else { unreachable!() };
         let session = self.sessions.read().unwrap().get(pid).cloned();
         let Some(session) = session else {
             let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
             return self.fail(&ids, batch.len(), &format!("unknown program {pid:?}"), tx);
         };
+        // f32 payloads only serve f32 sessions; element-typed sessions take
+        // `ProgramWords` (representations must never mix in a dispatch).
+        let SessionWeights::F32(weights) = &session.weights else {
+            let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+            let msg = format!(
+                "program {pid:?} is an {}-typed session; send ProgramWords payloads",
+                session.elem
+            );
+            return self.fail(&ids, batch.len(), &msg, tx);
+        };
+        let weights = Arc::clone(weights);
+        let program = Arc::clone(&session.program);
+        self.dispatch_session_batch(
+            batch,
+            tx,
+            &session,
+            "elements",
+            |r| {
+                let Payload::Program { rows, input, .. } = &r.payload else { unreachable!() };
+                (*rows, input.as_slice())
+            },
+            |total_rows, stacked| {
+                self.executor.run_program(&program, total_rows, stacked, &weights)
+            },
+            |o| (o, Vec::new()),
+        )
+    }
+
+    /// Serve a batch of element-typed program requests: the shared batch
+    /// protocol over canonical words and the session's element backend.
+    fn dispatch_program_words(&self, batch: &[Request], tx: &Sender<Response>) -> Result<(), ()> {
+        let Payload::ProgramWords { program: pid, .. } = &batch[0].payload else { unreachable!() };
+        let session = self.sessions.read().unwrap().get(pid).cloned();
+        let Some(session) = session else {
+            let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+            return self.fail(&ids, batch.len(), &format!("unknown program {pid:?}"), tx);
+        };
+        let SessionWeights::Words(weights) = &session.weights else {
+            let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+            let msg = format!("program {pid:?} is an f32 session; send Program payloads");
+            return self.fail(&ids, batch.len(), &msg, tx);
+        };
+        let weights = Arc::clone(weights);
+        let program = Arc::clone(&session.program);
+        self.dispatch_session_batch(
+            batch,
+            tx,
+            &session,
+            "words",
+            |r| {
+                let Payload::ProgramWords { rows, input, .. } = &r.payload else { unreachable!() };
+                (*rows, input.as_slice())
+            },
+            |total_rows, stacked| {
+                self.executor.run_program_words(&program, total_rows, stacked, &weights)
+            },
+            |o| (Vec::new(), o),
+        )
+    }
+
+    /// The program-session batch protocol shared by the f32 and word
+    /// dispatchers: reject malformed activations individually (a bad
+    /// co-batched request must not poison its neighbours' valid ones),
+    /// stack same-program activations into one taller chain pass, execute,
+    /// surface wrong-sized executor output as error responses (never an
+    /// out-of-bounds panic of the leader thread), account stats, and slice
+    /// the stacked output back per request.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_session_batch<T: Copy>(
+        &self,
+        batch: &[Request],
+        tx: &Sender<Response>,
+        session: &Session,
+        unit: &str,
+        extract: impl Fn(&Request) -> (usize, &[T]),
+        exec: impl FnOnce(usize, &[T]) -> anyhow::Result<Vec<T>>,
+        wrap: impl Fn(Vec<T>) -> (Vec<f32>, Vec<u64>),
+    ) -> Result<(), ()> {
+        let t0 = std::time::Instant::now();
         let kf = session.program.in_features();
         let nf = session.program.out_features();
-        // Reject malformed activations individually — a bad co-batched
-        // request must not poison its neighbours' perfectly valid ones.
         let mut valid: Vec<&Request> = Vec::with_capacity(batch.len());
         for r in batch {
-            let Payload::Program { rows, input, .. } = &r.payload else { unreachable!() };
-            if input.len() != *rows * kf {
-                let msg =
-                    format!("activation is {} elements, expected {}×{}", input.len(), rows, kf);
+            let (rows, input) = extract(r);
+            if input.len() != rows * kf {
+                let msg = format!("activation is {} {unit}, expected {rows}×{kf}", input.len());
                 self.fail(&[r.id], 1, &msg, tx)?;
             } else {
                 valid.push(r);
@@ -508,34 +806,35 @@ impl Server {
         if valid.is_empty() {
             return Ok(());
         }
-        // Stack same-program activations into one taller chain pass (the
-        // weights are already resident in the session — nothing to compare
-        // or copy per candidate).
         let mut total_rows = 0usize;
-        let mut stacked: Vec<f32> = Vec::new();
+        let mut stacked: Vec<T> = Vec::new();
         for r in &valid {
-            let Payload::Program { rows, input, .. } = &r.payload else { unreachable!() };
-            total_rows += *rows;
+            let (rows, input) = extract(r);
+            total_rows += rows;
             stacked.extend_from_slice(input);
         }
-        let out = match self.executor.run_program(
-            &session.program,
-            total_rows,
-            &stacked,
-            &session.weights,
-        ) {
-            Ok(o) => o,
-            Err(e) => {
+        // Contain executor panics: e.g. an i32 word session fed operands
+        // whose i64 psum overflows panics in debug builds (`Element::mac`
+        // keeps the pre-`arith` unchecked-add semantics). The leader thread
+        // must answer with an error, not die with every queued request.
+        let out = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            exec(total_rows, &stacked)
+        })) {
+            Ok(Ok(o)) => o,
+            Ok(Err(e)) => {
                 let ids: Vec<u64> = valid.iter().map(|r| r.id).collect();
                 return self.fail(&ids, valid.len(), &e.to_string(), tx);
             }
+            Err(_) => {
+                let ids: Vec<u64> = valid.iter().map(|r| r.id).collect();
+                let msg = "executor panicked (operands outside the element domain?)";
+                return self.fail(&ids, valid.len(), msg, tx);
+            }
         };
-        // A backend returning the wrong amount of output must surface as an
-        // error response, not an out-of-bounds panic of the leader thread.
         if out.len() != total_rows * nf {
             let ids: Vec<u64> = valid.iter().map(|r| r.id).collect();
             let msg =
-                format!("executor returned {} elements, expected {}", out.len(), total_rows * nf);
+                format!("executor returned {} {unit}, expected {}", out.len(), total_rows * nf);
             return self.fail(&ids, valid.len(), &msg, tx);
         }
         let service_us = t0.elapsed().as_secs_f64() * 1e6;
@@ -549,16 +848,18 @@ impl Server {
         }
         let mut row0 = 0usize;
         for r in &valid {
-            let Payload::Program { rows, .. } = &r.payload else { unreachable!() };
+            let (rows, _) = extract(r);
+            let (output, output_words) = wrap(out[row0 * nf..(row0 + rows) * nf].to_vec());
             let resp = Response {
                 id: r.id,
-                output: out[row0 * nf..(row0 + *rows) * nf].to_vec(),
+                output,
+                output_words,
                 service_us,
                 modeled_cycles: session.program.total_cycles,
                 batch_size: valid.len(),
                 error: None,
             };
-            row0 += *rows;
+            row0 += rows;
             tx.send(resp).map_err(|_| ())?;
         }
         Ok(())
@@ -880,5 +1181,183 @@ mod tests {
         assert!(server.unregister(pid));
         assert!(server.program(pid).is_none());
         assert!(!server.unregister(pid));
+        assert_eq!(server.session_elem(pid), None);
+    }
+
+    /// Element-typed sessions serve word activations exactly: responses
+    /// match the chained naive mod-p reference bit-for-bit, the chain
+    /// compiles once, and the per-shape mapper cache stays untouched.
+    #[test]
+    fn word_session_serves_field_exact_responses() {
+        use crate::arith::{decode_words, BabyBear, ModP};
+        type B = ModP<BabyBear>;
+        let cfg = ArchConfig::paper(4, 4);
+        let (tx, rx, h, server) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let chain = Chain::mlp("mlp", 4, &[8, 12, 8]);
+        let mut rng = Lcg::new(31);
+        let weights: Vec<Vec<u64>> = chain
+            .layers
+            .iter()
+            .map(|g| ElemType::BabyBear.sample_words(&mut rng, g.k * g.n))
+            .collect();
+        let pid = server.register_chain_elem(&chain, weights.clone(), ElemType::BabyBear).unwrap();
+        assert_eq!(server.session_elem(pid), Some(ElemType::BabyBear));
+        let program = server.program(pid).unwrap();
+        let wb: Vec<Vec<B>> = weights.iter().map(|w| decode_words::<B>(w)).collect();
+        let n_req = 4u64;
+        let mut expects = HashMap::new();
+        for id in 0..n_req {
+            let input = ElemType::BabyBear.sample_words(&mut rng, 4 * 8);
+            let expect: Vec<u64> = program
+                .reference(&decode_words::<B>(&input), &wb)
+                .into_iter()
+                .map(|v| v.to_u64())
+                .collect();
+            expects.insert(id, expect);
+            tx.send(Request::for_program_words(id, pid, 4, input)).unwrap();
+        }
+        for _ in 0..n_req {
+            let resp = rx.recv().unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            assert!(resp.output.is_empty(), "word sessions answer in words");
+            assert_eq!(&resp.output_words, &expects[&resp.id], "field-exact response");
+        }
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.program_compiles, 1, "chain compiled exactly once");
+        assert_eq!(stats.program_served, n_req);
+        assert_eq!(stats.mapper_cache_misses, 0, "word path skips the shape cache");
+    }
+
+    /// f32 and word payloads never share a batch key — even under the same
+    /// program id — and payload kind must match the session's type.
+    #[test]
+    fn element_types_never_cobatch_or_cross_dispatch() {
+        let cfg = ArchConfig::paper(4, 4);
+        let (tx, rx, h, server) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let chain = Chain::mlp("mlp", 2, &[8, 8]);
+        let mut rng = Lcg::new(41);
+        let f32_pid = server
+            .register_chain(&chain, chain.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect())
+            .unwrap();
+        let word_weights: Vec<Vec<u64>> = chain
+            .layers
+            .iter()
+            .map(|g| ElemType::Goldilocks.sample_words(&mut rng, g.k * g.n))
+            .collect();
+        let word_pid =
+            server.register_chain_elem(&chain, word_weights, ElemType::Goldilocks).unwrap();
+        // Distinct key variants even for one id: no f32/word co-batching.
+        assert_ne!(
+            batch_key(&Request::for_program(0, f32_pid, 2, vec![0.0; 16])),
+            batch_key(&Request::for_program_words(1, f32_pid, 2, vec![0; 16])),
+        );
+        // Word payload to an f32 session and vice versa answer with errors.
+        tx.send(Request::for_program_words(7, f32_pid, 2, vec![0; 16])).unwrap();
+        let r = rx.recv().unwrap();
+        assert_eq!(r.id, 7);
+        assert!(r.error.as_deref().unwrap_or("").contains("f32 session"), "{:?}", r.error);
+        tx.send(Request::for_program(8, word_pid, 2, vec![0.0; 16])).unwrap();
+        let r = rx.recv().unwrap();
+        assert_eq!(r.id, 8);
+        assert!(r.error.as_deref().unwrap_or("").contains("goldilocks"), "{:?}", r.error);
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.errors, 2);
+    }
+
+    /// Batched word requests stack rows across the program's compiled
+    /// height (the chunked execution path) and still answer exactly, with
+    /// a malformed activation rejected alone.
+    #[test]
+    fn word_requests_batch_and_chunk_exactly() {
+        use crate::arith::{decode_words, Goldilocks, ModP};
+        type G = ModP<Goldilocks>;
+        let cfg = ArchConfig::paper(4, 4);
+        let (tx, rx, h, server) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let chain = Chain::mlp("mlp", 2, &[8, 8]);
+        let mut rng = Lcg::new(43);
+        let weights: Vec<Vec<u64>> = chain
+            .layers
+            .iter()
+            .map(|g| ElemType::Goldilocks.sample_words(&mut rng, g.k * g.n))
+            .collect();
+        let pid = server.register_chain_elem(&chain, weights.clone(), ElemType::Goldilocks).unwrap();
+        let program = server.program(pid).unwrap();
+        let wg: Vec<Vec<G>> = weights.iter().map(|w| decode_words::<G>(w)).collect();
+        let mut expects = HashMap::new();
+        for id in 0..6u64 {
+            if id == 3 {
+                tx.send(Request::for_program_words(id, pid, 2, vec![0; 3])).unwrap();
+                continue;
+            }
+            let input = ElemType::Goldilocks.sample_words(&mut rng, 2 * 8);
+            let expect: Vec<u64> = program
+                .reference(&decode_words::<G>(&input), &wg)
+                .into_iter()
+                .map(|v| v.to_u64())
+                .collect();
+            expects.insert(id, expect);
+            tx.send(Request::for_program_words(id, pid, 2, input)).unwrap();
+        }
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let (mut ok, mut bad) = (0, 0);
+        for _ in 0..6 {
+            let r = rx.recv().unwrap();
+            if r.id == 3 {
+                assert!(r.error.is_some());
+                bad += 1;
+            } else {
+                assert!(r.error.is_none(), "{:?}", r.error);
+                assert_eq!(&r.output_words, &expects[&r.id]);
+                ok += 1;
+            }
+        }
+        assert_eq!((ok, bad), (5, 1));
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.program_served, 5);
+        assert_eq!(stats.errors, 1);
+    }
+
+    /// An i32 word session fed overflow-heavy operands (i64 psum overflow
+    /// panics under debug assertions) answers with an error response and
+    /// the leader keeps serving — panic containment in the dispatcher.
+    /// Debug-only: release arithmetic wraps instead of panicking.
+    #[test]
+    #[cfg(debug_assertions)]
+    fn i32_word_overflow_answers_error_not_thread_death() {
+        let cfg = ArchConfig::paper(4, 4);
+        let (tx, rx, h, server) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let chain = Chain::mlp("mlp", 2, &[8, 8]);
+        let mut rng = Lcg::new(51);
+        let weights: Vec<Vec<u64>> =
+            chain.layers.iter().map(|g| vec![i32::MAX.encode(); g.k * g.n]).collect();
+        let pid = server.register_chain_elem(&chain, weights, ElemType::I32).unwrap();
+        // K=8 psums of (2^31-1)^2 overflow the i64 accumulator.
+        tx.send(Request::for_program_words(0, pid, 2, vec![i32::MAX.encode(); 2 * 8])).unwrap();
+        let r = rx.recv().unwrap();
+        assert!(r.error.as_deref().unwrap_or("").contains("panicked"), "{:?}", r.error);
+        // The leader survived: a sane request still gets served.
+        tx.send(Request::for_program_words(1, pid, 2, ElemType::I32.sample_words(&mut rng, 16)))
+            .unwrap();
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.errors, 1);
+        assert_eq!(stats.program_served, 1);
+    }
+
+    #[test]
+    fn register_chain_elem_validates_weights() {
+        let cfg = ArchConfig::paper(4, 4);
+        let server = Server::new(&cfg, Arc::new(NaiveExecutor));
+        let chain = Chain::mlp("mlp", 4, &[8, 8]);
+        assert!(server.register_chain_elem(&chain, vec![], ElemType::BabyBear).is_err());
+        assert!(server
+            .register_chain_elem(&chain, vec![vec![0; 7]], ElemType::BabyBear)
+            .is_err());
+        assert_eq!(server.stats.lock().unwrap().program_compiles, 0);
     }
 }

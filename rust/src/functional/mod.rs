@@ -7,6 +7,14 @@
 //! pair runs one NEST compute tile — Eq. (1) placement, top-to-bottom
 //! streaming, BIRRD spatial reduction and OB temporal accumulation.
 //!
+//! The simulator is generic over the element backend
+//! ([`crate::arith::Element`]): `FunctionalSim<i32>` (the default) is the
+//! pre-`arith` saturating-integer simulator bit-for-bit, `FunctionalSim<f32>`
+//! mirrors the PJRT oracle's number system, and
+//! `FunctionalSim<ModP<F>>` executes FHE/ZKP NTT traces field-exactly
+//! (`crate::workloads::ntt`). Trace structure, addressing, wave plans and
+//! `SimStats`/`SimError` semantics are element-independent.
+//!
 //! This is the repo's substitute for the paper's RTL functional validation
 //! (DESIGN.md §Hardware-Adaptation): traces produced by the mapper must
 //! reproduce a naive GEMM exactly, and integration tests additionally
@@ -19,7 +27,8 @@ use std::sync::Arc;
 
 use crate::arch::buffer::{DataBuffer, OutputBuffer};
 use crate::arch::config::ArchConfig;
-use crate::isa::inst::{ActFn, BufTarget, Inst};
+use crate::arith::Element;
+use crate::isa::inst::{BufTarget, Inst};
 use crate::layout::VnLayout;
 use crate::mapping::{Dataflow, MappingCfg, StreamCfg};
 
@@ -105,13 +114,13 @@ impl SimStats {
 /// Pack a tile's VNs into the row-major buffer image `Load` expects:
 /// VN slot `L` of the layout lands at rows `(L/aw)·vn .. +vn`, column
 /// `L mod aw`. `gather(r, c)` supplies each VN's (zero-padded) elements.
-pub fn pack_image(
+pub fn pack_image<T: Copy + Default>(
     layout: &VnLayout,
     aw: usize,
-    gather: impl Fn(usize, usize) -> Vec<i32>,
-) -> Vec<i32> {
+    gather: impl Fn(usize, usize) -> Vec<T>,
+) -> Vec<T> {
     let rows = layout.rows_needed(aw);
-    let mut img = vec![0i32; rows * aw];
+    let mut img = vec![T::default(); rows * aw];
     for l in 0..layout.vn_slots() {
         let (r, c) = layout.unflatten(l).expect("slot in range");
         let elems = gather(r, c);
@@ -124,15 +133,16 @@ pub fn pack_image(
     img
 }
 
-/// The functional simulator.
+/// The functional simulator, generic over the element backend `E`
+/// (defaulting to the saturating-i32 semantics the repo started with).
 #[derive(Debug, Clone)]
-pub struct FunctionalSim {
+pub struct FunctionalSim<E: Element = i32> {
     pub cfg: ArchConfig,
-    hbm: Vec<i32>,
+    hbm: Vec<E>,
     hbm_top: usize,
-    streaming: DataBuffer<i32>,
-    stationary: DataBuffer<i32>,
-    ob: OutputBuffer,
+    streaming: DataBuffer<E>,
+    stationary: DataBuffer<E>,
+    ob: OutputBuffer<E>,
     i_layout: Option<VnLayout>,
     w_layout: Option<VnLayout>,
     o_layout: Option<VnLayout>,
@@ -150,7 +160,8 @@ pub struct FunctionalSim {
     pub plan_compiles: u64,
     /// Plans compiled on demand, keyed by (θ_EM, θ_ES, layouts); reused
     /// across the M/K/N tile loops of a lowered program. Bounded by
-    /// `PLAN_CACHE_CAP` with arbitrary eviction.
+    /// `PLAN_CACHE_CAP` with arbitrary eviction. Plans hold addressing
+    /// only, no element data — they are shared across backends unchanged.
     plans: HashMap<PlanKey, Arc<WavePlan>>,
     /// Plans installed via [`Self::seed_plans`] (a compiled program's plan
     /// set). Kept apart from the dynamic cache so cap eviction can never
@@ -159,7 +170,7 @@ pub struct FunctionalSim {
     seeded: HashMap<PlanKey, Arc<WavePlan>>,
 }
 
-impl FunctionalSim {
+impl<E: Element> FunctionalSim<E> {
     pub fn new(cfg: &ArchConfig) -> Self {
         Self {
             streaming: DataBuffer::new(cfg.d_str(), cfg.aw),
@@ -207,21 +218,21 @@ impl FunctionalSim {
         let addr = self.hbm_top;
         self.hbm_top += words;
         if self.hbm.len() < self.hbm_top {
-            self.hbm.resize(self.hbm_top, 0);
+            self.hbm.resize(self.hbm_top, E::zero());
         }
         addr as u64
     }
 
-    pub fn hbm_write(&mut self, addr: u64, data: &[i32]) {
+    pub fn hbm_write(&mut self, addr: u64, data: &[E]) {
         let a = addr as usize;
         if self.hbm.len() < a + data.len() {
-            self.hbm.resize(a + data.len(), 0);
+            self.hbm.resize(a + data.len(), E::zero());
             self.hbm_top = self.hbm_top.max(a + data.len());
         }
         self.hbm[a..a + data.len()].copy_from_slice(data);
     }
 
-    pub fn hbm_read(&self, addr: u64, len: usize) -> Result<&[i32], SimError> {
+    pub fn hbm_read(&self, addr: u64, len: usize) -> Result<&[E], SimError> {
         let a = addr as usize;
         if a + len > self.hbm.len() {
             return Err(SimError::HbmOutOfRange { addr, len });
@@ -229,14 +240,14 @@ impl FunctionalSim {
         Ok(&self.hbm[a..a + len])
     }
 
-    fn buf_mut(&mut self, t: BufTarget) -> &mut DataBuffer<i32> {
+    fn buf_mut(&mut self, t: BufTarget) -> &mut DataBuffer<E> {
         match t {
             BufTarget::Streaming => &mut self.streaming,
             BufTarget::Stationary => &mut self.stationary,
         }
     }
 
-    fn buf(&self, t: BufTarget) -> &DataBuffer<i32> {
+    fn buf(&self, t: BufTarget) -> &DataBuffer<E> {
         match t {
             BufTarget::Streaming => &self.streaming,
             BufTarget::Stationary => &self.stationary,
@@ -255,7 +266,7 @@ impl FunctionalSim {
                     return Err(SimError::BufferOverflow { buf: *target, need, have });
                 }
                 let words = need * aw;
-                let data: Vec<i32> = self.hbm_read(*hbm_addr, words)?.to_vec();
+                let data: Vec<E> = self.hbm_read(*hbm_addr, words)?.to_vec();
                 let buf = self.buf_mut(*target);
                 for (i, &v) in data.iter().enumerate() {
                     buf.set(i / aw, i % aw, v);
@@ -271,7 +282,7 @@ impl FunctionalSim {
                 if need > have {
                     return Err(SimError::BufferOverflow { buf: *target, need, have });
                 }
-                let mut out = vec![0i32; need * aw];
+                let mut out = vec![E::zero(); need * aw];
                 {
                     let buf = self.buf(*target);
                     for (i, o) in out.iter_mut().enumerate() {
@@ -290,7 +301,7 @@ impl FunctionalSim {
                 for row in 0..need {
                     for col in 0..aw {
                         let v = buf.get(row, col);
-                        buf.set(row, col, apply_act(*func, v));
+                        buf.set(row, col, E::act(*func, v));
                     }
                 }
                 Ok(())
@@ -340,22 +351,24 @@ impl FunctionalSim {
         Ok(())
     }
 
-    /// Commit OB → operand buffer at the same layout coordinates.
+    /// Commit OB → operand buffer at the same layout coordinates, narrowing
+    /// each accumulator to the element domain with [`Element::reduce`]
+    /// (saturation for `SatI32`, identity for fields/f32).
     fn commit_output(&mut self, layout: &VnLayout) {
         let aw = self.cfg.aw;
         let target = match self.last_df {
             Dataflow::WoS => BufTarget::Stationary,
             Dataflow::IoS => BufTarget::Streaming,
         };
-        let mut writes: Vec<(usize, usize, Vec<i32>)> = Vec::new();
+        let mut writes: Vec<(usize, usize, Vec<E>)> = Vec::new();
         for l in 0..layout.vn_slots() {
             let (r, c) = layout.unflatten(l).expect("slot");
             let (row0, col) = ((l / aw) * layout.vn_size, l % aw);
             if row0 + layout.vn_size > self.ob.depth {
                 continue;
             }
-            let vals: Vec<i32> = (0..layout.vn_size)
-                .map(|i| clamp_acc(self.ob.get(row0 + i, col)))
+            let vals: Vec<E> = (0..layout.vn_size)
+                .map(|i| E::reduce(self.ob.get(row0 + i, col)))
                 .collect();
             writes.push((r, c, vals));
         }
@@ -457,10 +470,10 @@ impl FunctionalSim {
         // §Perf optimization that removes T redundant buffer reads per PE).
         // reg_valid[a_h·AW + a_w] marks PEs with in-bounds stationary VNs;
         // regs holds their vn elements contiguously.
-        let mut regs: Vec<i32> = vec![0; active_rows * cfg.aw * vn];
+        let mut regs: Vec<E> = vec![E::zero(); active_rows * cfg.aw * vn];
         let mut reg_meta: Vec<Option<usize>> = vec![None; active_rows * cfg.aw]; // c index
         {
-            let mut tmp: Vec<i32> = Vec::with_capacity(vn);
+            let mut tmp: Vec<E> = Vec::with_capacity(vn);
             for a_w in 0..cfg.aw {
                 for a_h in 0..active_rows {
                     let (r, c) = em.stationary_vn(a_h, a_w);
@@ -474,8 +487,8 @@ impl FunctionalSim {
         }
         // Scratch buffers reused across the wave loop (no per-read
         // allocation on the hot path — §Perf).
-        let mut streamed: Vec<i32> = Vec::with_capacity(vn);
-        let mut wave: Vec<(usize, usize, i64, (usize, usize))> =
+        let mut streamed: Vec<E> = Vec::with_capacity(vn);
+        let mut wave: Vec<(usize, usize, E::Acc, (usize, usize))> =
             Vec::with_capacity(cfg.aw * active_rows);
         for t in 0..es.t {
             self.stats.waves += 1;
@@ -494,12 +507,10 @@ impl FunctionalSim {
                     debug_assert_eq!(em.stationary_vn(a_h, a_w).0, j, "reduction consistency");
                     let base = (a_h * cfg.aw + a_w) * vn;
                     let stationary = &regs[base..base + vn];
-                    let psum: i64 = streamed
-                        .iter()
-                        .take(vn)
-                        .zip(stationary.iter())
-                        .map(|(&a, &b)| a as i64 * b as i64)
-                        .sum();
+                    let mut psum = E::acc_zero();
+                    for (&a, &b) in streamed.iter().take(vn).zip(stationary.iter()) {
+                        psum = E::mac(psum, a, b);
+                    }
                     self.stats.macs_used += vn as u64;
                     // Output element (p, q): row index from the streamed
                     // operand, column index from the stationary one. Under
@@ -524,7 +535,7 @@ impl FunctionalSim {
                             wave.push((row, bank, psum, (p, q)));
                         }
                         None => {
-                            if psum != 0 {
+                            if !E::acc_is_zero(psum) {
                                 return Err(SimError::OrphanPsum { m: p, n: q });
                             }
                         }
@@ -534,11 +545,11 @@ impl FunctionalSim {
             // BIRRD spatial reduction: psums sharing an OB slot merge
             // in-network before the banked write.
             wave.sort_unstable_by_key(|w| (w.0, w.1));
-            let mut writes: Vec<(usize, usize, i64)> = Vec::new();
+            let mut writes: Vec<(usize, usize, E::Acc)> = Vec::new();
             for w in &wave {
                 match writes.last_mut() {
                     Some(last) if last.0 == w.0 && last.1 == w.1 => {
-                        last.2 += w.2;
+                        last.2 = E::acc_add(last.2, w.2);
                         self.stats.birrd_adds += 1;
                     }
                     _ => writes.push((w.0, w.1, w.2)),
@@ -552,7 +563,7 @@ impl FunctionalSim {
     }
 
     /// Read output element (p, q) of the current OVN layout from the OB.
-    pub fn output_element(&self, p: usize, q: usize) -> Option<i64> {
+    pub fn output_element(&self, p: usize, q: usize) -> Option<E::Acc> {
         let l = self.o_layout?;
         let (r_o, off, c_o) = (q / l.vn_size, q % l.vn_size, p);
         let (row0, bank) = l.addr(r_o, c_o, self.cfg.aw)?;
@@ -564,8 +575,8 @@ impl FunctionalSim {
     }
 
     /// Extract the full `p_extent × q_extent` output tile.
-    pub fn read_output_tile(&self, p_extent: usize, q_extent: usize) -> Option<Vec<i64>> {
-        let mut out = vec![0i64; p_extent * q_extent];
+    pub fn read_output_tile(&self, p_extent: usize, q_extent: usize) -> Option<Vec<E::Acc>> {
+        let mut out = vec![E::acc_zero(); p_extent * q_extent];
         for p in 0..p_extent {
             for q in 0..q_extent {
                 out[p * q_extent + q] = self.output_element(p, q)?;
@@ -575,54 +586,33 @@ impl FunctionalSim {
     }
 
     /// Peek a buffer word (tests / GUI trace dump).
-    pub fn peek(&self, t: BufTarget, row: usize, col: usize) -> i32 {
+    pub fn peek(&self, t: BufTarget, row: usize, col: usize) -> E {
         self.buf(t).get(row, col)
     }
 }
 
-/// Narrow an i64 accumulator to the i32 element width, saturating — the
-/// conversion the OB→operand-buffer commit applies, and therefore the one
-/// chained-layer execution (`crate::program`) applies between layers.
+/// Narrow an i64 accumulator to the i32 element width, saturating.
+///
+/// The contract lives in [`Element::reduce`] now (`<i32 as Element>::reduce`
+/// is this exact function); this shim remains for pre-`arith` call sites and
+/// is asserted equivalent by a unit test below.
+#[deprecated(note = "use `<i32 as crate::arith::Element>::reduce` — the \
+                     OB-commit narrowing contract moved into the Element trait")]
 pub fn clamp_acc(v: i64) -> i32 {
-    v.clamp(i32::MIN as i64, i32::MAX as i64) as i32
-}
-
-fn apply_act(f: ActFn, v: i32) -> i32 {
-    match f {
-        ActFn::None => v,
-        ActFn::Relu => v.max(0),
-        // Integer surrogates: the real chip applies these in a requantized
-        // fixed-point pipeline; for functional tests only ReLU/None are used
-        // on the exact path.
-        ActFn::Gelu => {
-            let x = v as f64;
-            (x * 0.5 * (1.0 + (0.7978845608 * (x + 0.044715 * x * x * x)).tanh())) as i32
-        }
-        ActFn::Softmax => v, // softmax needs a row context; modeled in L2
-    }
+    <i32 as Element>::reduce(v)
 }
 
 /// Reference GEMM: `O[M,N] = I[M,K]·W[K,N]` over i32 operands, i64 psums.
+/// (The generic form for other element backends is
+/// [`crate::arith::naive_gemm_e`]; this delegates to it.)
 pub fn naive_gemm(i: &[i32], w: &[i32], m: usize, k: usize, n: usize) -> Vec<i64> {
-    let mut o = vec![0i64; m * n];
-    for mi in 0..m {
-        for ki in 0..k {
-            let a = i[mi * k + ki] as i64;
-            if a == 0 {
-                continue;
-            }
-            for ni in 0..n {
-                o[mi * n + ni] += a * w[ki * n + ni] as i64;
-            }
-        }
-    }
-    o
+    crate::arith::naive_gemm_e::<i32>(i, w, m, k, n)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::isa::inst::LayoutInst;
+    use crate::isa::inst::{ActFn, LayoutInst};
     use crate::util::Lcg;
 
     fn cfg() -> ArchConfig {
@@ -631,11 +621,12 @@ mod tests {
 
     /// Hand-built single-tile program: 4×4 NEST computes an (M=4, K=4, N=4)
     /// GEMM in one invocation — W_VNs distinct per column (Fig. 4 case 3),
-    /// all I_VNs streamed with s_m = 1.
-    fn single_tile_program(
-        sim: &mut FunctionalSim,
-        iv: &[i32],
-        wv: &[i32],
+    /// all I_VNs streamed with s_m = 1. Generic over the element backend so
+    /// the arith property tests reuse it.
+    fn single_tile_program<E: Element>(
+        sim: &mut FunctionalSim<E>,
+        iv: &[E],
+        wv: &[E],
         m: usize,
         k: usize,
         n: usize,
@@ -701,6 +692,24 @@ mod tests {
         assert!(sim.stats.utilization() > 0.99, "util {}", sim.stats.utilization());
     }
 
+    /// The same hand-built tile over a prime field matches the generic
+    /// naive reference — the smallest end-to-end witness that trace
+    /// execution is field-exact.
+    #[test]
+    fn single_tile_gemm_exact_over_goldilocks() {
+        use crate::arith::{naive_gemm_e, Goldilocks, ModP};
+        type G = ModP<Goldilocks>;
+        let (m, k, n) = (4usize, 4usize, 4usize);
+        let mut rng = Lcg::new(21);
+        let iv: Vec<G> = (0..m * k).map(|_| G::new(rng.next_u64())).collect();
+        let wv: Vec<G> = (0..k * n).map(|_| G::new(rng.next_u64())).collect();
+        let c = cfg();
+        let mut sim: FunctionalSim<G> = FunctionalSim::new(&c);
+        let prog = single_tile_program(&mut sim, &iv, &wv, m, k, n);
+        sim.exec_trace(&prog).unwrap();
+        assert_eq!(sim.read_output_tile(m, n).unwrap(), naive_gemm_e::<G>(&iv, &wv, m, k, n));
+    }
+
     #[test]
     fn padded_tile_zero_padding_is_exact() {
         // K=3 (not a multiple of VN), N=3, M=2: padding paths must yield
@@ -721,7 +730,7 @@ mod tests {
     #[test]
     fn streaming_without_mapping_errors() {
         let c = cfg();
-        let mut sim = FunctionalSim::new(&c);
+        let mut sim: FunctionalSim = FunctionalSim::new(&c);
         let es = Inst::ExecuteStreaming(StreamCfg {
             df: Dataflow::WoS,
             m0: 0,
@@ -735,7 +744,7 @@ mod tests {
     #[test]
     fn execute_without_layouts_errors() {
         let c = cfg();
-        let mut sim = FunctionalSim::new(&c);
+        let mut sim: FunctionalSim = FunctionalSim::new(&c);
         sim.exec(&Inst::ExecuteMapping(MappingCfg {
             r0: 0,
             c0: 0,
@@ -758,7 +767,7 @@ mod tests {
     #[test]
     fn load_overflow_detected() {
         let c = cfg();
-        let mut sim = FunctionalSim::new(&c);
+        let mut sim: FunctionalSim = FunctionalSim::new(&c);
         let a = sim.hbm_alloc(16);
         let too_many = (c.d_str() + 1) as u32;
         let r = sim.exec(&Inst::Load { target: BufTarget::Streaming, hbm_addr: a, rows: too_many });
@@ -768,7 +777,7 @@ mod tests {
     #[test]
     fn hbm_out_of_range_detected() {
         let c = cfg();
-        let mut sim = FunctionalSim::new(&c);
+        let mut sim: FunctionalSim = FunctionalSim::new(&c);
         let r = sim.exec(&Inst::Load { target: BufTarget::Streaming, hbm_addr: 10_000, rows: 1 });
         assert!(matches!(r, Err(SimError::HbmOutOfRange { .. })));
     }
@@ -776,7 +785,7 @@ mod tests {
     #[test]
     fn store_roundtrips_buffer() {
         let c = cfg();
-        let mut sim = FunctionalSim::new(&c);
+        let mut sim: FunctionalSim = FunctionalSim::new(&c);
         let data: Vec<i32> = (0..8).collect();
         let a = sim.hbm_alloc(8);
         sim.hbm_write(a, &data);
@@ -789,7 +798,7 @@ mod tests {
     #[test]
     fn relu_activation_applies() {
         let c = cfg();
-        let mut sim = FunctionalSim::new(&c);
+        let mut sim: FunctionalSim = FunctionalSim::new(&c);
         let a = sim.hbm_alloc(4);
         sim.hbm_write(a, &[-5, 3, -1, 0]);
         sim.exec(&Inst::Load { target: BufTarget::Streaming, hbm_addr: a, rows: 1 }).unwrap();
@@ -836,5 +845,28 @@ mod tests {
         let w: Vec<i32> = (1..=6).collect();
         let o = naive_gemm(&i, &w, m, k, n);
         assert_eq!(o, w.iter().map(|&x| x as i64).collect::<Vec<_>>());
+    }
+
+    /// The deprecated `clamp_acc` shim and `<i32 as Element>::reduce` are
+    /// the same function — the doc-drift satellite's equivalence guarantee.
+    #[test]
+    #[allow(deprecated)]
+    fn clamp_acc_shim_equals_element_reduce() {
+        let mut rng = Lcg::new(13);
+        let mut probes: Vec<i64> = vec![
+            0,
+            1,
+            -1,
+            i32::MAX as i64,
+            i32::MIN as i64,
+            i32::MAX as i64 + 1,
+            i32::MIN as i64 - 1,
+            i64::MAX,
+            i64::MIN,
+        ];
+        probes.extend((0..1000).map(|_| rng.next_u64() as i64));
+        for v in probes {
+            assert_eq!(clamp_acc(v), <i32 as Element>::reduce(v), "v = {v}");
+        }
     }
 }

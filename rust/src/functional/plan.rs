@@ -37,6 +37,7 @@
 
 use crate::arch::buffer::{DataBuffer, OutputBuffer};
 use crate::arch::config::ArchConfig;
+use crate::arith::Element;
 use crate::layout::VnLayout;
 use crate::mapping::{Dataflow, MappingCfg, StreamCfg};
 
@@ -292,11 +293,16 @@ impl WavePlan {
     /// Execute the plan against live buffer contents. Allocation pattern:
     /// three scratch vectors per *invocation* (exactly like the reference's
     /// register fill), zero allocations per wave.
-    pub fn execute(
+    ///
+    /// Generic over the element backend: a plan holds addressing only, so
+    /// one compiled plan executes i32, f32 and prime-field buffers alike
+    /// (`E::mac` per psum, `E::acc_add` into merged slots, zero checks via
+    /// `E::acc_is_zero`).
+    pub fn execute<E: Element>(
         &self,
-        streaming: &DataBuffer<i32>,
-        stationary: &DataBuffer<i32>,
-        ob: &mut OutputBuffer,
+        streaming: &DataBuffer<E>,
+        stationary: &DataBuffer<E>,
+        ob: &mut OutputBuffer<E>,
         stats: &mut SimStats,
     ) -> Result<(), SimError> {
         let width = streaming.width;
@@ -307,7 +313,7 @@ impl WavePlan {
         let dot_len = self.dot_len;
 
         // Stationary register fill (double-buffered NEST load).
-        let mut regs: Vec<i32> = vec![0; self.regs_len];
+        let mut regs: Vec<E> = vec![E::zero(); self.regs_len];
         for f in &self.reg_fills {
             let (dst, src) = (f.dst as usize, f.src as usize);
             for i in 0..vn {
@@ -315,15 +321,15 @@ impl WavePlan {
             }
         }
 
-        let mut streamed: Vec<i32> = vec![0; dot_len];
-        let mut slot_acc: Vec<i64> = vec![0; self.max_slots];
+        let mut streamed: Vec<E> = vec![E::zero(); dot_len];
+        let mut slot_acc: Vec<E::Acc> = vec![E::acc_zero(); self.max_slots];
         let mut macs_local: u64 = 0;
 
         for w in &self.waves {
             stats.waves += 1;
             stats.macs_possible += self.macs_possible_per_wave;
             let wave_slots = &self.slots[w.slot_start as usize..w.slot_end as usize];
-            slot_acc[..wave_slots.len()].iter_mut().for_each(|v| *v = 0);
+            slot_acc[..wave_slots.len()].iter_mut().for_each(|v| *v = E::acc_zero());
 
             for cg in &self.col_groups[w.cg_start as usize..w.cg_end as usize] {
                 let base = cg.str_src as usize;
@@ -333,14 +339,17 @@ impl WavePlan {
                 for op in &self.ops[cg.op_start as usize..cg.op_end as usize] {
                     macs_local += vn as u64;
                     let rb = op.reg_base as usize;
-                    let mut psum = 0i64;
+                    let mut psum = E::acc_zero();
                     for i in 0..dot_len {
-                        psum += streamed[i] as i64 * regs[rb + i] as i64;
+                        psum = E::mac(psum, streamed[i], regs[rb + i]);
                     }
                     match op.kind {
-                        OpKind::Slot(s) => slot_acc[s as usize] += psum,
+                        OpKind::Slot(s) => {
+                            let cell = &mut slot_acc[s as usize];
+                            *cell = E::acc_add(*cell, psum);
+                        }
                         OpKind::Orphan { p, q } => {
-                            if psum != 0 {
+                            if !E::acc_is_zero(psum) {
                                 stats.macs_used += macs_local;
                                 return Err(SimError::OrphanPsum {
                                     m: p as usize,

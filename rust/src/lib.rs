@@ -13,6 +13,7 @@
 //! paper-vs-measured results.
 
 pub mod arch;
+pub mod arith;
 pub mod functional;
 pub mod isa;
 pub mod layout;

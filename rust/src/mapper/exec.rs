@@ -1,37 +1,55 @@
 //! Execution driver: replay a lowered program through the functional
 //! simulator with real operand data, harvesting finished output tiles.
 //!
+//! Generic over the element backend ([`crate::arith::Element`]): the same
+//! lowered trace executes saturating-i32, f32 or prime-field operands —
+//! staging, harvesting and addressing are element-independent.
+//!
 //! This closes the correctness loop: mapper → MINISA trace → functional
 //! simulation must reproduce a naive GEMM bit-exactly (and, in integration
 //! tests, the PJRT-executed JAX/Pallas oracle).
+//!
+//! Error discipline: malformed operands or harvests surface as
+//! [`SimError::Invalid`], never as panics — these entry points run on
+//! mapper search threads and the serving leader, where a panic would take
+//! the whole thread (and every queued candidate or co-batched request)
+//! down with it.
 
 use super::lower::{LoweredProgram, StagedOperand, Staging};
 use crate::arch::config::ArchConfig;
+use crate::arith::Element;
 use crate::functional::{pack_image, FunctionalSim, SimError};
 use crate::isa::inst::Inst;
 use crate::mapping::Dataflow;
 use crate::workloads::Gemm;
 
 /// Materialize one staging region's buffer image from the logical operands.
-fn stage_image(g: &Gemm, df: Dataflow, s: &Staging, iv: &[i32], wv: &[i32], aw: usize) -> Vec<i32> {
+fn stage_image<E: Element>(
+    g: &Gemm,
+    df: Dataflow,
+    s: &Staging,
+    iv: &[E],
+    wv: &[E],
+    aw: usize,
+) -> Vec<E> {
     let vn = s.layout.vn_size;
     // Element accessors with global zero-padding.
-    let from_i = |c: usize, r: usize, e: usize| -> i32 {
+    let from_i = |c: usize, r: usize, e: usize| -> E {
         // I[m, k] with m = nonred0 + c, k = k0 + r·vn + e.
         let m = s.nonred0 + c;
         let k = s.k0 + r * vn + e;
         if c >= s.nonred_t || m >= g.m || r * vn + e >= s.kt || k >= g.k {
-            0
+            E::zero()
         } else {
             iv[m * g.k + k]
         }
     };
-    let from_w = |c: usize, r: usize, e: usize| -> i32 {
+    let from_w = |c: usize, r: usize, e: usize| -> E {
         // W[k, n] with n = nonred0 + c, k = k0 + r·vn + e.
         let n = s.nonred0 + c;
         let k = s.k0 + r * vn + e;
         if c >= s.nonred_t || n >= g.n || r * vn + e >= s.kt || k >= g.k {
-            0
+            E::zero()
         } else {
             wv[k * g.n + n]
         }
@@ -48,14 +66,14 @@ fn stage_image(g: &Gemm, df: Dataflow, s: &Staging, iv: &[i32], wv: &[i32], aw: 
 }
 
 /// Replay a lowered program on real operands; returns the logical `M × N`
-/// output (row-major, i64 accumulators).
-pub fn execute_program(
+/// output (row-major accumulators — i64 for the default i32 backend).
+pub fn execute_program<E: Element>(
     cfg: &ArchConfig,
     g: &Gemm,
     prog: &LoweredProgram,
-    iv: &[i32],
-    wv: &[i32],
-) -> Result<Vec<i64>, SimError> {
+    iv: &[E],
+    wv: &[E],
+) -> Result<Vec<E::Acc>, SimError> {
     let mut sim = FunctionalSim::new(cfg);
     execute_program_on(&mut sim, g, prog, iv, wv)
 }
@@ -64,26 +82,40 @@ pub fn execute_program(
 /// reuse one simulator (and its compiled [`crate::functional::WavePlan`]
 /// cache) across programs, or flip `sim.use_plans` to run the reference
 /// interpreter (the plan-equivalence tests do both).
-pub fn execute_program_on(
-    sim: &mut FunctionalSim,
+pub fn execute_program_on<E: Element>(
+    sim: &mut FunctionalSim<E>,
     g: &Gemm,
     prog: &LoweredProgram,
-    iv: &[i32],
-    wv: &[i32],
-) -> Result<Vec<i64>, SimError> {
-    assert_eq!(iv.len(), g.m * g.k, "input operand shape");
-    assert_eq!(wv.len(), g.k * g.n, "weight operand shape");
+    iv: &[E],
+    wv: &[E],
+) -> Result<Vec<E::Acc>, SimError> {
+    if iv.len() != g.m * g.k {
+        return Err(SimError::Invalid(format!(
+            "input operand is {} elements, expected {}×{}",
+            iv.len(),
+            g.m,
+            g.k
+        )));
+    }
+    if wv.len() != g.k * g.n {
+        return Err(SimError::Invalid(format!(
+            "weight operand is {} elements, expected {}×{}",
+            wv.len(),
+            g.k,
+            g.n
+        )));
+    }
     let aw = sim.cfg.aw;
     for s in &prog.staging {
         let img = stage_image(g, prog.choice.df, s, iv, wv, aw);
         debug_assert_eq!(img.len(), s.words);
         sim.hbm_write(s.hbm_addr, &img);
     }
-    let mut out = vec![0i64; g.m * g.n];
+    let mut out = vec![E::acc_zero(); g.m * g.n];
     let mut harvested = 0usize;
     for inst in &prog.trace.insts {
         if matches!(inst, Inst::SetOVNLayout(_)) && harvested > 0 {
-            harvest(&sim, g, prog, harvested - 1, &mut out)?;
+            harvest(sim, g, prog, harvested - 1, &mut out)?;
         }
         if matches!(inst, Inst::SetOVNLayout(_)) {
             harvested += 1;
@@ -91,18 +123,18 @@ pub fn execute_program_on(
         sim.exec(inst)?;
     }
     if harvested > 0 {
-        harvest(&sim, g, prog, harvested - 1, &mut out)?;
+        harvest(sim, g, prog, harvested - 1, &mut out)?;
     }
     debug_assert_eq!(harvested, prog.harvests.len());
     Ok(out)
 }
 
-fn harvest(
-    sim: &FunctionalSim,
+fn harvest<E: Element>(
+    sim: &FunctionalSim<E>,
     g: &Gemm,
     prog: &LoweredProgram,
     idx: usize,
-    out: &mut [i64],
+    out: &mut [E::Acc],
 ) -> Result<(), SimError> {
     let h = &prog.harvests[idx];
     for p in 0..h.p_ext {
@@ -143,12 +175,23 @@ mod tests {
     use crate::mapper::MappingChoice;
     use crate::util::prop::forall;
 
-    fn check(cfg: &ArchConfig, g: &Gemm, ch: &MappingChoice, orders: (u8, u8, u8)) {
+    /// Validate one (chain, orders) candidate, propagating failures as
+    /// `Err` with full context instead of panicking (the former `panic!`
+    /// here is exactly what the search-thread error-propagation satellite
+    /// removed — callers decide whether a failure is fatal).
+    fn check(
+        cfg: &ArchConfig,
+        g: &Gemm,
+        ch: &MappingChoice,
+        orders: (u8, u8, u8),
+    ) -> Result<(), String> {
         let prog = lower_gemm(cfg, g, ch, orders.0, orders.1, orders.2);
-        let (got, expect) = validate_decision(cfg, g, &prog, 42).unwrap_or_else(|e| {
-            panic!("{} {:?} orders {:?}: {e}", g, ch, orders);
-        });
-        assert_eq!(got, expect, "{} {:?} orders {:?}", g, ch, orders);
+        let (got, expect) = validate_decision(cfg, g, &prog, 42)
+            .map_err(|e| format!("{g} {ch:?} orders {orders:?}: {e}"))?;
+        if got != expect {
+            return Err(format!("{g} {ch:?} orders {orders:?}: functional mismatch"));
+        }
+        Ok(())
     }
 
     #[test]
@@ -156,7 +199,7 @@ mod tests {
         let cfg = ArchConfig::paper(4, 4);
         let g = Gemm::new("t", "test", 8, 8, 8);
         let ch = MappingChoice { df: Dataflow::WoS, vn: 4, m_t: 8, k_t: 8, n_t: 8, nbc: 1, dup: 1 };
-        check(&cfg, &g, &ch, (0, 0, 0));
+        check(&cfg, &g, &ch, (0, 0, 0)).unwrap();
     }
 
     #[test]
@@ -164,7 +207,7 @@ mod tests {
         let cfg = ArchConfig::paper(4, 4);
         let g = Gemm::new("t", "test", 12, 20, 10);
         let ch = MappingChoice { df: Dataflow::WoS, vn: 4, m_t: 8, k_t: 8, n_t: 8, nbc: 1, dup: 1 };
-        check(&cfg, &g, &ch, (0, 0, 0));
+        check(&cfg, &g, &ch, (0, 0, 0)).unwrap();
     }
 
     #[test]
@@ -173,7 +216,7 @@ mod tests {
         let g = Gemm::new("t", "test", 16, 8, 16);
         for (nbc, dup) in [(1usize, 1usize), (2, 1), (1, 2), (2, 2), (4, 1), (1, 4)] {
             let ch = MappingChoice { df: Dataflow::WoS, vn: 4, m_t: 16, k_t: 8, n_t: 16, nbc, dup };
-            check(&cfg, &g, &ch, (0, 0, 0));
+            check(&cfg, &g, &ch, (0, 0, 0)).unwrap();
         }
     }
 
@@ -182,7 +225,7 @@ mod tests {
         let cfg = ArchConfig::paper(4, 4);
         let g = Gemm::new("t", "test", 6, 8, 12);
         let ch = MappingChoice { df: Dataflow::IoS, vn: 4, m_t: 16, k_t: 8, n_t: 8, nbc: 1, dup: 1 };
-        check(&cfg, &g, &ch, (0, 0, 0));
+        check(&cfg, &g, &ch, (0, 0, 0)).unwrap();
     }
 
     #[test]
@@ -192,11 +235,11 @@ mod tests {
         let ch = MappingChoice { df: Dataflow::WoS, vn: 4, m_t: 8, k_t: 12, n_t: 8, nbc: 2, dup: 2 };
         for io in 0..6u8 {
             for oo in 0..6u8 {
-                check(&cfg, &g, &ch, (io, 0, oo));
+                check(&cfg, &g, &ch, (io, 0, oo)).unwrap();
             }
         }
         for wo in 0..6u8 {
-            check(&cfg, &g, &ch, (0, wo, 0));
+            check(&cfg, &g, &ch, (0, wo, 0)).unwrap();
         }
     }
 
@@ -222,7 +265,24 @@ mod tests {
             let ch = MappingChoice { df, vn, m_t, k_t, n_t, nbc, dup };
             let io = gen.usize(0, 5) as u8;
             let oo = gen.usize(0, 5) as u8;
-            check(&cfg, &g, &ch, (io, 0, oo));
+            check(&cfg, &g, &ch, (io, 0, oo)).unwrap();
         });
+    }
+
+    /// Malformed operands propagate as `SimError::Invalid`, not a panic —
+    /// the driver is safe to call from search threads and the serving
+    /// leader with untrusted shapes.
+    #[test]
+    fn bad_operand_shapes_error_instead_of_panicking() {
+        let cfg = ArchConfig::paper(4, 4);
+        let g = Gemm::new("t", "test", 8, 8, 8);
+        let ch = MappingChoice { df: Dataflow::WoS, vn: 4, m_t: 8, k_t: 8, n_t: 8, nbc: 1, dup: 1 };
+        let prog = lower_gemm(&cfg, &g, &ch, 0, 0, 0);
+        let wv = vec![1i32; g.k * g.n];
+        let r = execute_program(&cfg, &g, &prog, &[1i32; 3], &wv);
+        assert!(matches!(r, Err(SimError::Invalid(_))), "{r:?}");
+        let iv = vec![1i32; g.m * g.k];
+        let r = execute_program(&cfg, &g, &prog, &iv, &[1i32; 3]);
+        assert!(matches!(r, Err(SimError::Invalid(_))), "{r:?}");
     }
 }

@@ -38,7 +38,8 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::arch::config::ArchConfig;
-use crate::functional::{clamp_acc, naive_gemm, FunctionalSim, PlanKey, SimError, WavePlan};
+use crate::arith::{naive_gemm_e, Element};
+use crate::functional::{FunctionalSim, PlanKey, SimError, WavePlan};
 use crate::isa::inst::Inst;
 use crate::mapper::exec::execute_program_on;
 use crate::isa::Trace;
@@ -170,59 +171,92 @@ impl Program {
     }
 
     /// Install this program's precompiled wave plans into a simulator, so
-    /// executing the program compiles nothing (idempotent).
+    /// executing the program compiles nothing (idempotent). Plans hold
+    /// addressing only, so one program seeds simulators of *any* element
+    /// backend.
     ///
     /// Panics if the simulator was built from a different `ArchConfig`:
     /// `PlanKey` deliberately excludes buffer geometry (fixed per
     /// simulator), so cross-config seeding would execute plans whose
     /// addressing was baked for the wrong array.
-    pub fn seed_sim(&self, sim: &mut FunctionalSim) {
+    pub fn seed_sim<E: Element>(&self, sim: &mut FunctionalSim<E>) {
         assert_eq!(sim.cfg, self.cfg, "simulator must share the program's ArchConfig");
         sim.seed_plans(self.plans.iter().map(|(k, v)| (*k, Arc::clone(v))));
     }
 
-    /// Execute the whole program functionally: the activation flows through
-    /// every layer, narrowed to the element width between layers exactly as
-    /// the OB→operand-buffer commit narrows it. Returns the final layer's
-    /// `M × N_last` output (row-major i64 accumulators).
+    /// Execute the whole program functionally under any element backend:
+    /// the activation flows through every layer, narrowed to the element
+    /// domain between layers ([`Element::reduce`]) exactly as the
+    /// OB→operand-buffer commit narrows it. Returns the final layer's
+    /// `M × N_last` output (row-major accumulators).
     ///
     /// All tile execution goes through the plans compiled at
     /// program-compile time ([`Self::seed_sim`] runs first), so
-    /// `sim.plan_compiles` does not grow.
+    /// `sim.plan_compiles` does not grow — for prime-field backends this is
+    /// the compile-once path that serves FHE/ZKP NTT programs field-exactly.
+    pub fn execute<E: Element>(
+        &self,
+        sim: &mut FunctionalSim<E>,
+        input: &[E],
+        weights: &[Vec<E>],
+    ) -> Result<Vec<E::Acc>, SimError> {
+        if weights.len() != self.layers.len() {
+            return Err(SimError::Invalid(format!(
+                "program expects {} weight matrices, got {}",
+                self.layers.len(),
+                weights.len()
+            )));
+        }
+        if input.len() != self.rows() * self.in_features() {
+            return Err(SimError::Invalid(format!(
+                "activation is {} elements, expected {}×{}",
+                input.len(),
+                self.rows(),
+                self.in_features()
+            )));
+        }
+        self.seed_sim(sim);
+        let mut act: Vec<E> = input.to_vec();
+        let mut out: Vec<E::Acc> = Vec::new();
+        for (li, l) in self.layers.iter().enumerate() {
+            out = execute_program_on(sim, &l.gemm, &l.lowered, &act, &weights[li])?;
+            if li + 1 < self.layers.len() {
+                act = out.iter().map(|&v| E::reduce(v)).collect();
+            }
+        }
+        Ok(out)
+    }
+
+    /// [`Self::execute`] at the default saturating-i32 backend (the
+    /// pre-`arith` API, kept verbatim for existing callers).
     pub fn execute_i32(
         &self,
         sim: &mut FunctionalSim,
         input: &[i32],
         weights: &[Vec<i32>],
     ) -> Result<Vec<i64>, SimError> {
-        assert_eq!(weights.len(), self.layers.len(), "one weight matrix per layer");
-        assert_eq!(input.len(), self.rows() * self.in_features(), "activation shape");
-        self.seed_sim(sim);
-        let mut act: Vec<i32> = input.to_vec();
-        let mut out: Vec<i64> = Vec::new();
-        for (li, l) in self.layers.iter().enumerate() {
-            out = execute_program_on(sim, &l.gemm, &l.lowered, &act, &weights[li])?;
-            if li + 1 < self.layers.len() {
-                act = out.iter().map(|&v| clamp_acc(v)).collect();
-            }
-        }
-        Ok(out)
+        self.execute(sim, input, weights)
     }
 
-    /// Reference semantics of [`Self::execute_i32`]: chained naive GEMMs
-    /// with the same inter-layer narrowing.
-    pub fn reference_i32(&self, input: &[i32], weights: &[Vec<i32>]) -> Vec<i64> {
+    /// Reference semantics of [`Self::execute`]: chained naive GEMMs with
+    /// the same inter-layer narrowing.
+    pub fn reference<E: Element>(&self, input: &[E], weights: &[Vec<E>]) -> Vec<E::Acc> {
         assert_eq!(weights.len(), self.layers.len(), "one weight matrix per layer");
         let m = self.rows();
-        let mut act: Vec<i32> = input.to_vec();
-        let mut out: Vec<i64> = Vec::new();
+        let mut act: Vec<E> = input.to_vec();
+        let mut out: Vec<E::Acc> = Vec::new();
         for (li, (g, w)) in self.chain.layers.iter().zip(weights).enumerate() {
-            out = naive_gemm(&act, w, m, g.k, g.n);
+            out = naive_gemm_e::<E>(&act, w, m, g.k, g.n);
             if li + 1 < self.layers.len() {
-                act = out.iter().map(|&v| clamp_acc(v)).collect();
+                act = out.iter().map(|&v| E::reduce(v)).collect();
             }
         }
         out
+    }
+
+    /// [`Self::reference`] at the default saturating-i32 backend.
+    pub fn reference_i32(&self, input: &[i32], weights: &[Vec<i32>]) -> Vec<i64> {
+        self.reference(input, weights)
     }
 }
 
@@ -456,6 +490,50 @@ mod tests {
         }
         assert_eq!(sim.plan_compiles, 0, "all plans came precompiled");
         assert_eq!(sim.plan_cache_len(), p.plan_count());
+    }
+
+    /// One compiled program executes a whole chain over a prime field —
+    /// bit-exact against the chained naive mod-p reference, with zero
+    /// runtime plan compiles (plans are element-independent, so the same
+    /// compile-once artifact serves every backend).
+    #[test]
+    fn executes_field_chain_exactly_with_zero_plan_compiles() {
+        use crate::arith::{BabyBear, ModP};
+        type B = ModP<BabyBear>;
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("mlp", 8, &[12, 16, 8]);
+        let p = Program::compile(&cfg, &chain, &fast()).unwrap();
+        let mut rng = Lcg::new(17);
+        let weights: Vec<Vec<B>> = chain
+            .layers
+            .iter()
+            .map(|g| (0..g.k * g.n).map(|_| B::new(rng.next_u64())).collect())
+            .collect();
+        let mut sim: FunctionalSim<B> = FunctionalSim::new(&cfg);
+        for round in 0..2 {
+            let input: Vec<B> =
+                (0..p.rows() * p.in_features()).map(|_| B::new(rng.next_u64())).collect();
+            let got = p.execute(&mut sim, &input, &weights).unwrap();
+            assert_eq!(got, p.reference(&input, &weights), "round {round}");
+        }
+        assert_eq!(sim.plan_compiles, 0, "field execution reuses the precompiled plans");
+        assert_eq!(sim.plan_cache_len(), p.plan_count());
+    }
+
+    /// Malformed inputs surface as `SimError::Invalid`, not a panic — the
+    /// serving leader calls `execute` with request-supplied shapes.
+    #[test]
+    fn execute_rejects_bad_shapes_without_panicking() {
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("mlp", 8, &[12, 8]);
+        let p = Program::compile(&cfg, &chain, &fast()).unwrap();
+        let weights = rand_weights(&chain, 5);
+        let mut sim = FunctionalSim::new(&cfg);
+        let r = p.execute_i32(&mut sim, &[1i32; 3], &weights);
+        assert!(matches!(r, Err(SimError::Invalid(_))), "{r:?}");
+        let input = vec![1i32; p.rows() * p.in_features()];
+        let r = p.execute_i32(&mut sim, &input, &weights[..1]);
+        assert!(matches!(r, Err(SimError::Invalid(_))), "{r:?}");
     }
 
     /// The chain-aware search alternates dataflows (§V-A compatibility) and

@@ -57,6 +57,31 @@ impl Gen {
         self.usize(0, 255) as u8 as i8
     }
 
+    /// Draw uniformly from `[0, hi)` over u64 (field residues: pass the
+    /// modulus). Logged like integer draws (usize is 64-bit on every
+    /// supported target).
+    pub fn u64_below(&mut self, hi: u64) -> u64 {
+        debug_assert!(hi > 0);
+        let v = self.rng.next_u64() % hi;
+        self.draws.push((0, hi as usize, v as usize));
+        v
+    }
+
+    /// A full-range i32 biased toward overflow-heavy magnitudes: half the
+    /// draws come from the extremes (±2^31-ish, ±1, 0), so products exceed
+    /// i32 and `Element::reduce` saturation paths are actually exercised.
+    pub fn i32_any(&mut self) -> i32 {
+        const EDGES: [i32; 8] =
+            [i32::MIN, i32::MIN + 1, -60_000, -1, 0, 1, 60_000, i32::MAX];
+        if self.bool() {
+            *self.pick(&EDGES)
+        } else {
+            let v = (self.rng.next_u64() >> 32) as u32 as i32;
+            self.draws.push((0, u32::MAX as usize, v as u32 as usize));
+            v
+        }
+    }
+
     pub fn f64(&mut self) -> f64 {
         self.rng.f64()
     }
@@ -143,5 +168,26 @@ mod tests {
             let v = g.pow2(2, 8);
             assert!(v >= 4 && v <= 256 && v.is_power_of_two());
         });
+    }
+
+    #[test]
+    fn u64_below_in_range_and_deterministic() {
+        let p = 0xffff_ffff_0000_0001u64; // a near-2^64 bound
+        let mut a = Gen::new(3);
+        let mut b = Gen::new(3);
+        for _ in 0..200 {
+            let va = a.u64_below(p);
+            assert!(va < p);
+            assert_eq!(va, b.u64_below(p));
+        }
+    }
+
+    #[test]
+    fn i32_any_hits_extremes() {
+        let mut g = Gen::new(11);
+        let vs: Vec<i32> = (0..400).map(|_| g.i32_any()).collect();
+        assert!(vs.contains(&i32::MAX));
+        assert!(vs.contains(&i32::MIN));
+        assert!(vs.iter().any(|&v| v != 0));
     }
 }

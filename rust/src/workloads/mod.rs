@@ -8,6 +8,7 @@
 //! shapes, and the ranges below match Table IV exactly.
 
 pub mod conv;
+pub mod ntt;
 
 use std::fmt;
 use std::path::Path;

@@ -1,0 +1,242 @@
+//! NTT-as-GEMM lowering for the suite's FHE/ZKP rows (Table IV).
+//!
+//! A size-`n` number-theoretic transform of a batch of `m` vectors is the
+//! GEMM `O[m, j] = Σ_k I[m, k] · ω^{kj} (mod p)` — i.e. exactly the suite's
+//! `FHE-NTT` / `ZKP-NTT` entries (`M × K · K × K` with `K = N = n`), with
+//! the weight matrix fixed to the **twiddle matrix** `W[k][j] = ω^{kj}` for
+//! a primitive `n`-th root of unity `ω` in the chosen prime field. Until
+//! the `arith` subsystem these entries only existed as shapes for the
+//! analytical model; with [`crate::arith::ModP`] they execute *for real*:
+//! compile the 1-layer chain to a [`crate::program::Program`] once, then
+//! run activations through it field-exactly.
+//!
+//! The inverse transform is the same GEMM with `ω⁻¹` twiddles and a final
+//! `1/n` scale; [`intt_matrix`] folds the scale into the matrix, so the
+//! 2-layer chain NTT → INTT is the identity — the strongest cheap witness
+//! that chained field execution (including the inter-layer OB commit) is
+//! exact end-to-end.
+//!
+//! Full-size suite entries (n up to 32768) need `n²` twiddle words — fine
+//! for serving real workloads, far too hot for CI — so [`scaled`] shrinks
+//! an entry to a CI-sized power of two while preserving its category,
+//! `K = N`, and the ZKP `M = K/16` row rule. Default field assignment
+//! follows the domains: FHE rows get the 31-bit RNS-limb field (Baby
+//! Bear), ZKP rows the STARK field (Goldilocks); `--elem` overrides.
+
+use super::Gemm;
+use crate::arith::{two_adic_root, ElemType, Element, ModP, PrimeField};
+
+/// Parse an NTT suite entry: square (`K == N`) power-of-two kernels in the
+/// NTT categories. Returns the transform size.
+pub fn ntt_size(g: &Gemm) -> Option<usize> {
+    if !g.category.contains("NTT") {
+        return None;
+    }
+    if g.k != g.n || !g.k.is_power_of_two() {
+        return None;
+    }
+    Some(g.k)
+}
+
+/// The natural element backend for a suite category: Baby Bear for the FHE
+/// rows (RNS limb arithmetic), Goldilocks for ZKP, saturating i32 for
+/// everything else (LLM/BConv quantized layers).
+pub fn default_elem(category: &str) -> ElemType {
+    if category.contains("ZKP") {
+        ElemType::Goldilocks
+    } else if category.contains("NTT") {
+        ElemType::BabyBear
+    } else {
+        ElemType::I32
+    }
+}
+
+/// Shrink an NTT entry to a CI-sized transform: `K = N = min(max_n, K)`
+/// rounded down to a power of two, preserving the ZKP `M = K/16` row rule
+/// (min 1 row) and the entry's name/category lineage. Only ZKP rows carry
+/// the `M = K/16` rule — FHE rows *happen* to satisfy `m·16 == k` too, but
+/// their M is a batch size capped independently, so the branch keys on the
+/// category, not the arithmetic coincidence.
+pub fn scaled(g: &Gemm, max_n: usize) -> Gemm {
+    // Both the cap and the entry round *down* to a power of two (NTT sizes
+    // must be exact powers of two; rounding up would exceed the cap).
+    let floor_pow2 = |x: usize| 1usize << (usize::BITS - 1 - x.leading_zeros());
+    let n = floor_pow2(g.n.max(2)).min(floor_pow2(max_n.max(2)));
+    let m = if g.category.contains("ZKP") && g.m * 16 == g.k {
+        (n / 16).max(1)
+    } else {
+        g.m.min(n)
+    };
+    Gemm::new(&format!("{}_s{}", g.name, n), &g.category, m, n, n)
+}
+
+/// The `n × n` twiddle matrix `W[k][j] = ω^{kj}` (row-major), for a
+/// primitive `n`-th root `ω` of the field's two-adic subgroup.
+pub fn twiddle_matrix<F: PrimeField>(n: usize) -> Result<Vec<ModP<F>>, String> {
+    let w = two_adic_root::<F>(n)?;
+    build_twiddles(w, n)
+}
+
+/// The inverse-NTT matrix `W'[k][j] = n⁻¹ · ω^{-kj}`: `intt(ntt(x)) == x`
+/// exactly, so the scale is folded in rather than left to a separate pass.
+pub fn intt_matrix<F: PrimeField>(n: usize) -> Result<Vec<ModP<F>>, String> {
+    let w = two_adic_root::<F>(n)?;
+    let n_inv = ModP::<F>::new(n as u64).inv();
+    let mut m = build_twiddles(w.inv(), n)?;
+    for e in &mut m {
+        *e = *e * n_inv;
+    }
+    Ok(m)
+}
+
+fn build_twiddles<F: PrimeField>(w: ModP<F>, n: usize) -> Result<Vec<ModP<F>>, String> {
+    // Row k is the geometric progression of ω^k — O(n²) multiplies, no pow.
+    let mut m = Vec::with_capacity(n * n);
+    let mut wk = ModP::<F>::one(); // ω^k
+    for _ in 0..n {
+        let mut x = ModP::<F>::one();
+        for _ in 0..n {
+            m.push(x);
+            x = x * wk;
+        }
+        wk = wk * w;
+    }
+    Ok(m)
+}
+
+/// Twiddle matrix as canonical datapath words for a runtime-tagged field —
+/// what [`crate::coordinator::serve::Server::register_chain_elem`] wants.
+/// Errors for non-field element types or unsupported sizes.
+pub fn twiddle_words(elem: ElemType, n: usize) -> Result<Vec<u64>, String> {
+    use crate::arith::{encode_words, BabyBear as Bb, Goldilocks as Gl, PallasStyle as Pa};
+    match elem {
+        ElemType::BabyBear => Ok(encode_words(&twiddle_matrix::<Bb>(n)?)),
+        ElemType::Goldilocks => Ok(encode_words(&twiddle_matrix::<Gl>(n)?)),
+        ElemType::Pallas => Ok(encode_words(&twiddle_matrix::<Pa>(n)?)),
+        other => Err(format!("NTT twiddles need a prime-field element type, not {other}")),
+    }
+}
+
+/// Schoolbook NTT of each row of `input` (`m × n`, row-major): the naive
+/// mod-p reference the GEMM lowering is validated against.
+pub fn ntt_reference<F: PrimeField>(
+    input: &[ModP<F>],
+    m: usize,
+    n: usize,
+) -> Result<Vec<ModP<F>>, String> {
+    let w = two_adic_root::<F>(n)?;
+    let mut out = vec![ModP::<F>::default(); m * n];
+    for row in 0..m {
+        // ω^{kj} walked incrementally: wj = ω^j, x = ω^{kj}.
+        let mut wj = ModP::<F>::one();
+        for j in 0..n {
+            let mut acc = ModP::<F>::default();
+            let mut x = ModP::<F>::one();
+            for k in 0..n {
+                acc = acc + input[row * n + k] * x;
+                x = x * wj;
+            }
+            out[row * n + j] = acc;
+            wj = wj * w;
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::{naive_gemm_e, BabyBear, Goldilocks, PallasStyle};
+    use crate::util::Lcg;
+
+    #[test]
+    fn suite_entries_parse_as_ntts() {
+        for g in super::super::fhe_ntt().iter().chain(super::super::zkp_ntt().iter()) {
+            assert_eq!(ntt_size(g), Some(g.k), "{g}");
+        }
+        assert_eq!(ntt_size(&Gemm::new("x", "GPT-oss", 8, 16, 16)), None);
+        assert_eq!(ntt_size(&Gemm::new("x", "ZKP-NTT", 8, 16, 24)), None, "non-square");
+        assert_eq!(ntt_size(&Gemm::new("x", "ZKP-NTT", 8, 24, 24)), None, "non-pow2");
+    }
+
+    #[test]
+    fn default_fields_by_domain() {
+        assert_eq!(default_elem("ZKP-NTT"), ElemType::Goldilocks);
+        assert_eq!(default_elem("FHE-NTT"), ElemType::BabyBear);
+        assert_eq!(default_elem("GPT-oss"), ElemType::I32);
+        assert_eq!(default_elem("FHE-BConv"), ElemType::I32);
+    }
+
+    #[test]
+    fn scaling_preserves_structure() {
+        let zkp = &super::super::zkp_ntt()[0]; // M=512, K=N=8192
+        let s = scaled(zkp, 64);
+        assert_eq!((s.m, s.k, s.n), (4, 64, 64), "ZKP M=K/16 rule preserved");
+        assert_eq!(s.category, zkp.category);
+        assert_eq!(ntt_size(&s), Some(64));
+        let fhe = &super::super::fhe_ntt()[0]; // M=64, K=N=1024
+        let s = scaled(fhe, 32);
+        assert_eq!((s.m, s.k, s.n), (32, 32, 32));
+        // Already-small entries pass through unscaled dims.
+        let tiny = Gemm::new("t", "ZKP-NTT", 1, 16, 16);
+        let s = scaled(&tiny, 64);
+        assert_eq!((s.m, s.k, s.n), (1, 16, 16));
+    }
+
+    #[test]
+    fn twiddle_rows_are_geometric() {
+        let n = 16;
+        let m = twiddle_matrix::<BabyBear>(n).unwrap();
+        let w = two_adic_root::<BabyBear>(n).unwrap();
+        assert_eq!(m.len(), n * n);
+        for k in 0..n {
+            for j in 0..n {
+                assert_eq!(m[k * n + j], w.pow((k * j) as u64), "({k},{j})");
+            }
+        }
+        // Row 0 and column 0 are all ones.
+        for i in 0..n {
+            assert_eq!(m[i].to_u64(), 1);
+            assert_eq!(m[i * n].to_u64(), 1);
+        }
+    }
+
+    fn gemm_equals_schoolbook<F: PrimeField>() {
+        let (m, n) = (3usize, 32usize);
+        let mut rng = Lcg::new(0xA11CE);
+        let input: Vec<ModP<F>> = (0..m * n).map(|_| ModP::<F>::new(rng.next_u64())).collect();
+        let tw = twiddle_matrix::<F>(n).unwrap();
+        let via_gemm: Vec<ModP<F>> = naive_gemm_e::<ModP<F>>(&input, &tw, m, n, n);
+        let schoolbook = ntt_reference::<F>(&input, m, n).unwrap();
+        assert_eq!(via_gemm, schoolbook, "{}", F::NAME);
+    }
+
+    #[test]
+    fn ntt_as_gemm_equals_schoolbook_all_fields() {
+        gemm_equals_schoolbook::<BabyBear>();
+        gemm_equals_schoolbook::<Goldilocks>();
+        gemm_equals_schoolbook::<PallasStyle>();
+    }
+
+    #[test]
+    fn intt_inverts_ntt() {
+        let n = 16usize;
+        let m = 2usize;
+        let mut rng = Lcg::new(5);
+        type G = ModP<Goldilocks>;
+        let input: Vec<G> = (0..m * n).map(|_| G::new(rng.next_u64())).collect();
+        let fwd = naive_gemm_e::<G>(&input, &twiddle_matrix::<Goldilocks>(n).unwrap(), m, n, n);
+        let back = naive_gemm_e::<G>(&fwd, &intt_matrix::<Goldilocks>(n).unwrap(), m, n, n);
+        assert_eq!(back, input, "INTT(NTT(x)) == x");
+    }
+
+    #[test]
+    fn twiddle_words_are_canonical_and_field_only() {
+        let words = twiddle_words(ElemType::BabyBear, 8).unwrap();
+        assert_eq!(words.len(), 64);
+        assert!(words.iter().all(|&w| w < BabyBear::P));
+        assert!(twiddle_words(ElemType::I32, 8).is_err());
+        assert!(twiddle_words(ElemType::F32, 8).is_err());
+        assert!(twiddle_words(ElemType::Goldilocks, 24).is_err(), "non-pow2 size");
+    }
+}

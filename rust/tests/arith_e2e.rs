@@ -1,0 +1,184 @@
+//! End-to-end acceptance for the `arith` subsystem (ISSUE 3): the suite's
+//! ZKP-NTT entry executes *for real* over a Montgomery prime field through
+//! the compile-once Program path, and a served program-session response is
+//! bit-exact against the naive mod-p reference.
+//!
+//! The full-size entry (K=N=8192) would need a 512 MB twiddle matrix, so
+//! the tests run the entry scaled to a CI-sized transform via
+//! `workloads::ntt::scaled` — same category, same K=N/M=K÷16 structure,
+//! same field, same lowering path.
+
+use std::sync::Arc;
+
+use minisa::arch::ArchConfig;
+use minisa::arith::{decode_words, ElemType, Goldilocks, ModP};
+use minisa::coordinator::serve::{spawn, NaiveExecutor, Request};
+use minisa::functional::FunctionalSim;
+use minisa::mapper::chain::Chain;
+use minisa::mapper::search::MapperOptions;
+use minisa::program::Program;
+use minisa::util::Lcg;
+use minisa::workloads::{self, ntt};
+
+type G = ModP<Goldilocks>;
+
+fn fast() -> MapperOptions {
+    MapperOptions { full_layout_search: false, threads: 1, ..Default::default() }
+}
+
+/// The scaled ZKP-NTT suite entry as a 1-layer chain plus its twiddle
+/// weights over the entry's default field (Goldilocks for ZKP).
+fn zkp_ntt_chain(max_n: usize) -> (Chain, usize, Vec<G>) {
+    let entry = &workloads::zkp_ntt()[0];
+    assert_eq!(ntt::default_elem(&entry.category), ElemType::Goldilocks);
+    let g = ntt::scaled(entry, max_n);
+    let n = ntt::ntt_size(&g).expect("scaled entry is still an NTT kernel");
+    assert_eq!(g.m, n / 16, "ZKP M = K/16 rule survives scaling");
+    let tw = ntt::twiddle_matrix::<Goldilocks>(n).unwrap();
+    (Chain { layers: vec![g] }, n, tw)
+}
+
+/// ZKP-NTT executes end-to-end over ModP via the Program path: compiled
+/// once, zero runtime plan compiles, output equal to the schoolbook NTT.
+#[test]
+fn zkp_ntt_entry_executes_field_exact_via_program_path() {
+    let cfg = ArchConfig::paper(4, 4);
+    let (chain, n, tw) = zkp_ntt_chain(64);
+    let m = chain.layers[0].m;
+    let program = Program::compile(&cfg, &chain, &fast()).expect("ZKP-NTT maps");
+    assert!(program.plan_count() > 0, "wave plans precompiled");
+
+    let mut rng = Lcg::new(0x5EED);
+    let input: Vec<G> = (0..m * n).map(|_| G::new(rng.next_u64())).collect();
+    let mut sim: FunctionalSim<G> = FunctionalSim::new(&cfg);
+    let got = program.execute(&mut sim, &input, &[tw.clone()]).unwrap();
+    assert_eq!(sim.plan_compiles, 0, "compile-once: zero runtime plan compiles");
+
+    let expect = ntt::ntt_reference::<Goldilocks>(&input, m, n).unwrap();
+    assert_eq!(got, expect, "NTT-as-GEMM over the Program path is field-exact");
+
+    // Repeat executions stay compile-free on the same simulator.
+    let input2: Vec<G> = (0..m * n).map(|_| G::new(rng.next_u64())).collect();
+    let _ = program.execute(&mut sim, &input2, &[tw]).unwrap();
+    assert_eq!(sim.plan_compiles, 0);
+}
+
+/// The 2-layer NTT → INTT chain is the identity over the field — the
+/// strongest cheap witness that *chained* field execution (including the
+/// inter-layer OB commit, which must be a field no-op) is exact.
+#[test]
+fn ntt_intt_chain_is_identity() {
+    let cfg = ArchConfig::paper(4, 4);
+    let n = 16usize;
+    let m = 4usize;
+    let g1 = minisa::workloads::Gemm::new("ntt", "ZKP-NTT", m, n, n);
+    let g2 = minisa::workloads::Gemm::new("intt", "ZKP-NTT", m, n, n);
+    let chain = Chain { layers: vec![g1, g2] };
+    let program = Program::compile(&cfg, &chain, &fast()).expect("chain maps");
+    let weights =
+        vec![ntt::twiddle_matrix::<Goldilocks>(n).unwrap(), ntt::intt_matrix::<Goldilocks>(n).unwrap()];
+    let mut rng = Lcg::new(77);
+    let input: Vec<G> = (0..m * n).map(|_| G::new(rng.next_u64())).collect();
+    let mut sim: FunctionalSim<G> = FunctionalSim::new(&cfg);
+    let got = program.execute(&mut sim, &input, &weights).unwrap();
+    assert_eq!(got, input, "INTT(NTT(x)) == x through the compiled chain");
+    assert_eq!(sim.plan_compiles, 0);
+}
+
+/// Serving acceptance: the scaled ZKP-NTT registered as an element-typed
+/// session — compiled exactly once (`program_compiles == 1`), served
+/// responses bit-exact against the schoolbook mod-p reference.
+#[test]
+fn served_zkp_ntt_session_is_bit_exact_against_naive_modp() {
+    let cfg = ArchConfig::paper(4, 4);
+    let (chain, n, _) = zkp_ntt_chain(32);
+    let m = chain.layers[0].m;
+    let (tx, rx, h, server) = spawn(&cfg, Arc::new(NaiveExecutor));
+    let tw_words = ntt::twiddle_words(ElemType::Goldilocks, n).unwrap();
+    let pid = server.register_chain_elem(&chain, vec![tw_words], ElemType::Goldilocks).unwrap();
+    assert_eq!(server.session_elem(pid), Some(ElemType::Goldilocks));
+
+    let mut rng = Lcg::new(0xE2E);
+    let n_req = 5u64;
+    let mut expects = std::collections::HashMap::new();
+    for id in 0..n_req {
+        let input_words = ElemType::Goldilocks.sample_words(&mut rng, m * n);
+        let input: Vec<G> = decode_words::<G>(&input_words);
+        let expect: Vec<u64> = ntt::ntt_reference::<Goldilocks>(&input, m, n)
+            .unwrap()
+            .into_iter()
+            .map(|x| x.to_u64())
+            .collect();
+        expects.insert(id, expect);
+        tx.send(Request::for_program_words(id, pid, m, input_words)).unwrap();
+    }
+    for _ in 0..n_req {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(
+            &resp.output_words, &expects[&resp.id],
+            "served NTT bit-exact vs naive mod-p reference"
+        );
+    }
+    drop(tx);
+    let stats = h.join().unwrap();
+    assert_eq!(stats.program_compiles, 1, "NTT chain compiled exactly once");
+    assert_eq!(stats.program_served, n_req);
+    assert_eq!(stats.errors, 0);
+}
+
+/// Field sessions of different primes coexist on one server and answer in
+/// their own number systems (batch keys differ by program id; payload kind
+/// separation is covered in the serve unit tests).
+#[test]
+fn mixed_field_sessions_coexist() {
+    use minisa::arith::BabyBear;
+    type B = ModP<BabyBear>;
+    let cfg = ArchConfig::paper(4, 4);
+    let n = 16usize;
+    let m = 2usize;
+    let (tx, rx, h, server) = spawn(&cfg, Arc::new(NaiveExecutor));
+    let mk_chain = |name: &str, cat: &str| Chain {
+        layers: vec![minisa::workloads::Gemm::new(name, cat, m, n, n)],
+    };
+    let pid_g = server
+        .register_chain_elem(
+            &mk_chain("zkp", "ZKP-NTT"),
+            vec![ntt::twiddle_words(ElemType::Goldilocks, n).unwrap()],
+            ElemType::Goldilocks,
+        )
+        .unwrap();
+    let pid_b = server
+        .register_chain_elem(
+            &mk_chain("fhe", "FHE-NTT"),
+            vec![ntt::twiddle_words(ElemType::BabyBear, n).unwrap()],
+            ElemType::BabyBear,
+        )
+        .unwrap();
+    let mut rng = Lcg::new(9);
+    let in_g = ElemType::Goldilocks.sample_words(&mut rng, m * n);
+    let in_b = ElemType::BabyBear.sample_words(&mut rng, m * n);
+    let expect_g: Vec<u64> = ntt::ntt_reference::<Goldilocks>(&decode_words::<G>(&in_g), m, n)
+        .unwrap()
+        .into_iter()
+        .map(|x| x.to_u64())
+        .collect();
+    let expect_b: Vec<u64> = ntt::ntt_reference::<BabyBear>(&decode_words::<B>(&in_b), m, n)
+        .unwrap()
+        .into_iter()
+        .map(|x| x.to_u64())
+        .collect();
+    tx.send(Request::for_program_words(0, pid_g, m, in_g)).unwrap();
+    tx.send(Request::for_program_words(1, pid_b, m, in_b)).unwrap();
+    for _ in 0..2 {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        let expect = if r.id == 0 { &expect_g } else { &expect_b };
+        assert_eq!(&r.output_words, expect, "request {} exact in its own field", r.id);
+        assert_eq!(r.batch_size, 1, "different sessions never co-batch");
+    }
+    drop(tx);
+    let stats = h.join().unwrap();
+    assert_eq!(stats.program_compiles, 2);
+    assert_eq!(stats.program_served, 2);
+}
