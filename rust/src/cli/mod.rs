@@ -401,6 +401,16 @@ pub fn cmd_workloads(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse the fleet sizing flags shared by the serving commands.
+fn server_options(args: &Args) -> crate::coordinator::serve::ServerOptions {
+    let d = crate::coordinator::serve::ServerOptions::default();
+    crate::coordinator::serve::ServerOptions {
+        devices: args.usize_flag("devices", d.devices).max(1),
+        shard_min_rows: args.usize_flag("shard-min-rows", d.shard_min_rows).max(1),
+        max_batch: args.usize_flag("max-batch", d.max_batch).max(1),
+    }
+}
+
 /// Pick the PJRT executor when artifacts are available, else the naive one.
 fn serving_executor(args: &Args) -> std::sync::Arc<dyn crate::coordinator::serve::TileExecutor> {
     use crate::coordinator::serve::NaiveExecutor;
@@ -527,6 +537,43 @@ pub fn cmd_run(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(exact, "functional output does NOT match the naive {elem} reference");
     anyhow::ensure!(plan_compiles == 0, "expected zero runtime plan compiles (compile-once)");
     println!("functional execution matches the naive {elem} reference exactly ✓");
+
+    // `--devices N`: re-execute the same activation tile-parallel across a
+    // simulated fleet and verify the stitched output is bit-identical to
+    // the single-device run (the conformance invariant, live on the CLI).
+    let devices = args.usize_flag("devices", 1);
+    if devices > 1 {
+        use crate::coordinator::fleet::{Fleet, FleetOptions};
+        use crate::coordinator::serve::{execute_program_words, NaiveExecutor, WordWeights};
+        let shard_min_rows = args.usize_flag("shard-min-rows", 1).max(1);
+        let fleet = Fleet::new(
+            &cfg,
+            std::sync::Arc::new(NaiveExecutor),
+            FleetOptions { devices, shard_min_rows },
+        );
+        let ww = WordWeights::new(weight_words, elem);
+        let rows = program.rows();
+        let t2 = std::time::Instant::now();
+        let sharded = fleet
+            .run_program_words(None, &program, rows, &input_words, &ww)
+            .map_err(|e| anyhow::anyhow!("fleet execution: {e}"))?;
+        let wall_us = t2.elapsed().as_secs_f64() * 1e6;
+        let single = execute_program_words(&program, rows, &input_words, &ww)
+            .map_err(|e| anyhow::anyhow!("single-device reference: {e}"))?;
+        anyhow::ensure!(
+            sharded == single,
+            "fleet-sharded output diverges from single-device execution"
+        );
+        let report = fleet.report(wall_us);
+        anyhow::ensure!(
+            report.plan_compiles() == 0,
+            "fleet execution compiled plans at runtime (expected zero)"
+        );
+        println!("{}", report.render());
+        println!(
+            "fleet of {devices} devices matches single-device execution bit-exactly ✓"
+        );
+    }
     Ok(())
 }
 
@@ -535,15 +582,16 @@ pub fn cmd_run(args: &Args) -> anyhow::Result<()> {
 /// element-typed program session and served as word requests (ad-hoc f32
 /// payloads cannot carry field residues).
 pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    use crate::coordinator::serve::{spawn, Request};
+    use crate::coordinator::serve::{spawn_with_options, Request};
     use std::sync::Arc;
 
     let cfg = configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(16, 64));
     let requests = args.usize_flag("requests", 64);
     let elem = elem_flag(args, ElemType::F32)?;
+    let sopts = server_options(args);
     let executor = serving_executor(args);
     let backend = executor.name().to_string();
-    let (tx, rx, h, server) = spawn(&cfg, executor);
+    let (tx, rx, h, server) = spawn_with_options(&cfg, executor, sopts);
     let mut rng = crate::util::Lcg::new(7);
     let wall = std::time::Instant::now();
     if elem == ElemType::F32 {
@@ -590,6 +638,9 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         stats.batches,
         stats.max_batch,
     );
+    if sopts.devices > 1 {
+        println!("{}", server.fleet().report(wall_us).render());
+    }
     Ok(())
 }
 
@@ -598,7 +649,7 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// at it. `--dims k0,k1,...` sets the feature ladder (default: a small MLP;
 /// `--gpt` uses the Tab. IV GPT-oss MLP slice), `--m` the rows per request.
 pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
-    use crate::coordinator::serve::{spawn, Request};
+    use crate::coordinator::serve::{spawn_with_options, Request};
     use crate::mapper::chain::Chain;
 
     let cfg = configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(16, 64));
@@ -615,9 +666,10 @@ pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
     let chain = Chain::mlp("serve_model", m, &dims);
     let elem = elem_flag(args, ElemType::F32)?;
 
+    let sopts = server_options(args);
     let executor = serving_executor(args);
     let backend = executor.name().to_string();
-    let (tx, rx, h, server) = spawn(&cfg, executor);
+    let (tx, rx, h, server) = spawn_with_options(&cfg, executor, sopts);
     let mut rng = crate::util::Lcg::new(23);
     let pid = if elem == ElemType::F32 {
         let weights: Vec<Vec<f32>> =
@@ -677,6 +729,14 @@ pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
         stats.max_batch,
         stats.program_compiles,
     );
+    if sopts.devices > 1 {
+        let report = server.fleet().report(wall_us);
+        anyhow::ensure!(
+            report.plan_compiles() == 0,
+            "fleet serving compiled plans at runtime (expected zero)"
+        );
+        println!("{}", report.render());
+    }
     Ok(())
 }
 
@@ -695,21 +755,26 @@ pub fn usage() -> &'static str {
        trace      dump the lowered MINISA program [--m --k --n --validate]\n\
                   [--elem E] (validate under that element backend)\n\
        run        compile + execute a Program end-to-end, verified against\n\
-                  the naive reference [--elem E]\n\
+                  the naive reference [--elem E] [--devices N]\n\
                   [--suite <name> [--scale N] | --ntt N | --dims k0,k1,... --m N]\n\
        bitwidth   Table V ISA bitwidths\n\
        area       Table VI area/power model\n\
        workloads  dump the 50-workload suite CSV [--small]\n\
        serve      serving loop, ad-hoc single-GEMM requests [--requests N]\n\
                   [--elem E] (non-f32: a single-GEMM element session)\n\
+                  [--devices N --shard-min-rows R --max-batch B]\n\
        serve-model  compile-once/serve-many model sessions (§IV-G programs)\n\
                   [--dims k0,k1,... | --gpt] [--m N] [--requests N] [--elem E]\n\
+                  [--devices N --shard-min-rows R --max-batch B]\n\
        animate    cycle-by-cycle NEST/BIRRD/OB animation [--m --k --n --waves]\n\
      \n\
      --elem E selects the element arithmetic backend:\n\
        i32 (saturating, default for run), f32 (default for serving),\n\
        babybear / goldilocks / pallas (Montgomery prime fields — the FHE/ZKP\n\
-       NTT number systems; see EXPERIMENTS.md §Field arithmetic)\n"
+       NTT number systems; see EXPERIMENTS.md §Field arithmetic)\n\
+     --devices N shards work across a simulated N-device fleet (request-\n\
+       parallel work stealing + tile-parallel M-row sharding, bit-identical\n\
+       to one device; see EXPERIMENTS.md §Fleet serving)\n"
 }
 
 /// Dispatch. Returns process exit code.
@@ -859,6 +924,30 @@ mod tests {
         let argv: Vec<String> = [
             "serve-model", "--dims", "8,12,8", "--m", "2", "--requests", "4", "--elem",
             "goldilocks", "--ah", "4", "--aw", "4",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(run(&argv), 0);
+    }
+
+    #[test]
+    fn serve_model_command_runs_on_a_fleet() {
+        let argv: Vec<String> = [
+            "serve-model", "--dims", "16,24,16", "--m", "4", "--requests", "8", "--ah", "4",
+            "--aw", "4", "--devices", "3", "--shard-min-rows", "1",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert_eq!(run(&argv), 0);
+    }
+
+    #[test]
+    fn run_command_verifies_fleet_against_single_device() {
+        let argv: Vec<String> = [
+            "run", "--ntt", "16", "--m", "4", "--elem", "goldilocks", "--ah", "4", "--aw", "4",
+            "--fast", "--devices", "3", "--shard-min-rows", "1",
         ]
         .iter()
         .map(|s| s.to_string())

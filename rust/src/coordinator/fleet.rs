@@ -1,0 +1,884 @@
+//! Fleet executor — N simulated FEATHER+ devices serving one request stream.
+//!
+//! MINISA's compiled artifacts are small enough to re-dispatch freely
+//! (§IV-G), which makes a *fleet* of devices the natural scaling axis for
+//! the serving stack: one compiled [`Program`] (plans hold addressing, not
+//! values) can execute anywhere, so work shards across devices at two
+//! granularities:
+//!
+//! * **Request-parallel** — the batcher's per-key batches are routed onto
+//!   devices by key affinity (same program → same device → warm per-device
+//!   plan caches and simulators) and drained by per-device worker threads
+//!   with work *stealing*: an idle device takes jobs from any backlogged —
+//!   or dropped — neighbour, so load imbalance and dropouts self-heal.
+//! * **Tile-parallel** — one large batch's activation rows are split into
+//!   contiguous shards ([`plan_shards`]), each executed on an idle device
+//!   against the same compiled program ([`Program::shard_rows`]), and the
+//!   shard outputs are stitched back in `OutputBuffer` row order. Rows of a
+//!   GEMM chain are independent, so sharded execution is bit-identical to
+//!   the single-device path for every [`crate::arith::Element`] backend
+//!   (`tests/fleet_conformance.rs` locks this down).
+//!
+//! Each [`Device`] owns its executor handle and a **persistent per-backend
+//! functional simulator** — the device's own plan cache. Executing a
+//! compiled program seeds the simulator from the program's precompiled plan
+//! set, so steady-state fleet serving performs zero runtime plan compiles
+//! (`FleetReport::plan_compiles` stays 0).
+//!
+//! Failure injection: [`Fleet::fail_device`] drops a device mid-stream. Its
+//! queue is drained by surviving workers (counted as requeues), shards
+//! assigned to it re-execute on survivors, and new work routes around it.
+//! Executor *panics* are contained per shard (the busy slot is restored by
+//! a drop guard, never leaked) and surface as error responses — a panic is
+//! a bad-operand class problem, not a dropout, so it is not retried.
+
+use std::any::Any;
+use std::collections::{HashMap, VecDeque};
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::arch::config::ArchConfig;
+use crate::arith::ElemType;
+use crate::functional::FunctionalSim;
+use crate::perf::{DeviceLoad, FleetReport};
+use crate::program::Program;
+use crate::with_element;
+
+use super::serve::{execute_program_words_on, TileExecutor, WordWeights};
+
+/// Fleet sizing knobs (a subset of `serve::ServerOptions`).
+#[derive(Debug, Clone, Copy)]
+pub struct FleetOptions {
+    /// Number of simulated devices (≥ 1).
+    pub devices: usize,
+    /// Minimum activation rows per tile-parallel shard: batches smaller
+    /// than `2 × shard_min_rows` never split. 1 allows single-row shards.
+    pub shard_min_rows: usize,
+}
+
+impl Default for FleetOptions {
+    fn default() -> Self {
+        Self { devices: 1, shard_min_rows: 8 }
+    }
+}
+
+/// Per-device execution counters (see [`DeviceLoad`] for field meanings —
+/// this is the mutable accumulator behind that report row).
+#[derive(Debug, Clone, Default)]
+pub struct DeviceStats {
+    pub dispatches: u64,
+    pub shards: u64,
+    pub rows: u64,
+    pub busy_us: f64,
+    pub steals: u64,
+    pub requeues: u64,
+}
+
+/// A queued unit of fleet work: one batch's dispatch, bound to whichever
+/// device's worker executes it.
+pub type FleetJob = Box<dyn FnOnce(&Arc<Device>) + Send + 'static>;
+
+/// Lock a mutex, clearing poison: fleet bookkeeping must survive executor
+/// panics (the panic itself is contained and answered as an error response;
+/// wedging a stats or queue lock forever would turn it into a hang).
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// One simulated FEATHER+ device: an executor handle, a persistent
+/// per-backend functional simulator (the device's plan cache), a work
+/// queue, and liveness/availability flags.
+pub struct Device {
+    pub id: usize,
+    cfg: ArchConfig,
+    executor: Arc<dyn TileExecutor>,
+    /// Currently executing (advisory: used by tile-parallel claiming to
+    /// prefer idle devices; correctness never depends on it).
+    busy: AtomicBool,
+    /// Dropped out (failure injection). Failed devices execute nothing;
+    /// their queued work is stolen by survivors.
+    failed: AtomicBool,
+    stats: Mutex<DeviceStats>,
+    /// Runtime wave-plan compiles across this device's simulators — stays 0
+    /// when every executed program was compiled ahead of time.
+    plan_compiles: AtomicU64,
+    /// Persistent per-element-type simulators. Reusing a simulator across
+    /// dispatches keeps its seeded plan set resident, which is exactly what
+    /// "each device owns its plan cache" means here.
+    sims: Mutex<HashMap<ElemType, Box<dyn Any + Send>>>,
+    queue: Mutex<VecDeque<FleetJob>>,
+}
+
+impl Device {
+    fn new(id: usize, cfg: &ArchConfig, executor: Arc<dyn TileExecutor>) -> Self {
+        Self {
+            id,
+            cfg: cfg.clone(),
+            executor,
+            busy: AtomicBool::new(false),
+            failed: AtomicBool::new(false),
+            stats: Mutex::new(DeviceStats::default()),
+            plan_compiles: AtomicU64::new(0),
+            sims: Mutex::new(HashMap::new()),
+            queue: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    pub fn is_busy(&self) -> bool {
+        self.busy.load(Ordering::Acquire)
+    }
+
+    pub fn is_failed(&self) -> bool {
+        self.failed.load(Ordering::Acquire)
+    }
+
+    /// The execution backend this device fronts.
+    pub fn executor(&self) -> &Arc<dyn TileExecutor> {
+        &self.executor
+    }
+
+    /// Snapshot of this device's counters.
+    pub fn stats(&self) -> DeviceStats {
+        lock_clean(&self.stats).clone()
+    }
+
+    /// Runtime plan compiles accumulated by this device's simulators.
+    pub fn plan_compiles(&self) -> u64 {
+        self.plan_compiles.load(Ordering::Relaxed)
+    }
+
+    /// Execute a compiled program on an element-typed activation using this
+    /// device's persistent simulator. The chunked-execution semantics are
+    /// [`execute_program_words_on`] — the same single loop the
+    /// throwaway-sim path uses, so the two can never drift apart; this
+    /// method only supplies the per-device simulator and accounts its plan
+    /// compiles.
+    pub fn run_program_words(
+        &self,
+        program: &Program,
+        rows: usize,
+        input: &[u64],
+        weights: &WordWeights,
+    ) -> anyhow::Result<Vec<u64>> {
+        anyhow::ensure!(
+            self.cfg == program.cfg,
+            "program compiled for {}, device is {}",
+            program.cfg.name(),
+            self.cfg.name()
+        );
+        with_element!(weights.elem(), E => {
+            let w: &[Vec<E>] = weights
+                .decoded::<E>()
+                .ok_or_else(|| anyhow::anyhow!("WordWeights decoded form does not match its tag"))?;
+            // Poison from an earlier contained panic is cleared: every
+            // execution starts by reloading operands via Load instructions,
+            // so interrupted state cannot leak into results.
+            let mut sims = lock_clean(&self.sims);
+            let sim: &mut FunctionalSim<E> = sims
+                .entry(weights.elem())
+                .or_insert_with(|| Box::new(FunctionalSim::<E>::new(&self.cfg)) as Box<dyn Any + Send>)
+                .downcast_mut::<FunctionalSim<E>>()
+                .ok_or_else(|| anyhow::anyhow!("device simulator type confusion"))?;
+            let compiles_before = sim.plan_compiles;
+            let out = execute_program_words_on(sim, program, rows, input, w);
+            let delta = sim.plan_compiles - compiles_before;
+            drop(sims);
+            if delta > 0 {
+                self.plan_compiles.fetch_add(delta, Ordering::Relaxed);
+            }
+            out
+        })
+    }
+}
+
+/// Claimed-device handle: releases the busy slot on drop (also on panic —
+/// a leaked "busy" device would silently shrink the fleet forever).
+struct Lease {
+    dev: Arc<Device>,
+    owned: bool,
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        if self.owned {
+            self.dev.busy.store(false, Ordering::Release);
+        }
+    }
+}
+
+/// Split `rows` activation rows into at most `max_shards` contiguous,
+/// near-equal shards of at least `min_rows` rows each (the whole range as
+/// one shard when `rows < 2·min_rows`). Always covers `0..rows` exactly, in
+/// order — the stitching invariant.
+pub fn plan_shards(rows: usize, max_shards: usize, min_rows: usize) -> Vec<Range<usize>> {
+    if rows == 0 {
+        return Vec::new();
+    }
+    let min_rows = min_rows.max(1);
+    let n = (rows / min_rows).clamp(1, max_shards.max(1));
+    let base = rows / n;
+    let extra = rows % n;
+    let mut v = Vec::with_capacity(n);
+    let mut r0 = 0usize;
+    for i in 0..n {
+        let len = base + usize::from(i < extra);
+        v.push(r0..r0 + len);
+        r0 += len;
+    }
+    debug_assert_eq!(r0, rows);
+    v
+}
+
+/// The fleet: N devices, their work queues and worker threads, and the
+/// tile-parallel sharding executor. Shared as `Arc<Fleet>` by the serving
+/// coordinator; usable standalone (`cli::cmd_run --devices N`).
+pub struct Fleet {
+    pub cfg: ArchConfig,
+    opts: FleetOptions,
+    devices: Vec<Arc<Device>>,
+    /// Parked-worker wakeup (paired with `wake`).
+    idle: Mutex<()>,
+    wake: Condvar,
+    shutdown: AtomicBool,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Fleet {
+    pub fn new(cfg: &ArchConfig, executor: Arc<dyn TileExecutor>, opts: FleetOptions) -> Self {
+        let n = opts.devices.max(1);
+        let devices =
+            (0..n).map(|id| Arc::new(Device::new(id, cfg, Arc::clone(&executor)))).collect();
+        Self {
+            cfg: cfg.clone(),
+            opts,
+            devices,
+            idle: Mutex::new(()),
+            wake: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            workers: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn devices(&self) -> &[Arc<Device>] {
+        &self.devices
+    }
+
+    pub fn options(&self) -> FleetOptions {
+        self.opts
+    }
+
+    /// Drop a device (failure injection). Work queued on it is stolen by
+    /// survivors; shards assigned to it requeue; new work routes around it.
+    /// Returns false for an unknown id.
+    pub fn fail_device(&self, id: usize) -> bool {
+        match self.devices.get(id) {
+            Some(d) => {
+                d.failed.store(true, Ordering::Release);
+                // Wake everyone: survivors must drain the failed queue.
+                self.wake.notify_all();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Runtime wave-plan compiles summed over devices (0 on the
+    /// compile-once path).
+    pub fn plan_compiles(&self) -> u64 {
+        self.devices.iter().map(|d| d.plan_compiles()).sum()
+    }
+
+    /// Per-device roll-up over an observation window of `window_us`
+    /// wall-clock microseconds.
+    pub fn report(&self, window_us: f64) -> FleetReport {
+        FleetReport {
+            window: window_us,
+            devices: self
+                .devices
+                .iter()
+                .map(|d| {
+                    let st = d.stats();
+                    DeviceLoad {
+                        device: d.id,
+                        busy: st.busy_us,
+                        stall: (window_us - st.busy_us).max(0.0),
+                        dispatches: st.dispatches,
+                        shards: st.shards,
+                        rows: st.rows,
+                        steals: st.steals,
+                        requeues: st.requeues,
+                        plan_compiles: d.plan_compiles(),
+                        failed: d.is_failed(),
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Request-parallel dispatch: queues, workers, stealing.
+    // ------------------------------------------------------------------
+
+    /// Whether worker threads are running (fleet dispatch mode). Without
+    /// workers the owner executes jobs inline (single-device serving).
+    pub fn workers_active(&self) -> bool {
+        !lock_clean(&self.workers).is_empty()
+    }
+
+    /// Start one worker thread per device. Idempotent; no-op for a
+    /// single-device fleet (inline dispatch is strictly cheaper there).
+    pub fn start_workers(self: &Arc<Self>) {
+        if self.devices.len() <= 1 {
+            return;
+        }
+        let mut ws = lock_clean(&self.workers);
+        if !ws.is_empty() {
+            return;
+        }
+        for d in &self.devices {
+            let fleet = Arc::clone(self);
+            let dev = Arc::clone(d);
+            ws.push(
+                std::thread::Builder::new()
+                    .name(format!("fleet-dev{}", dev.id))
+                    .spawn(move || fleet.worker_loop(dev))
+                    .expect("spawn fleet worker"),
+            );
+        }
+    }
+
+    /// Enqueue a job, routed by `affinity` (a batch-key hash: same key →
+    /// same device, keeping that device's simulators and plan caches warm).
+    /// Routing considers only surviving devices; if the whole fleet has
+    /// dropped, the job runs inline on the caller so its requests still get
+    /// (error) responses instead of hanging in a queue nobody drains.
+    pub fn submit(&self, affinity: u64, job: FleetJob) {
+        let surviving: Vec<&Arc<Device>> =
+            self.devices.iter().filter(|d| !d.is_failed()).collect();
+        if surviving.is_empty() {
+            let dev = &self.devices[(affinity % self.devices.len() as u64) as usize];
+            job(dev);
+            return;
+        }
+        let dev = surviving[(affinity % surviving.len() as u64) as usize];
+        lock_clean(&dev.queue).push_back(job);
+        self.wake.notify_all();
+    }
+
+    /// Pop work for `dev`: own queue first, then steal from any other
+    /// device's queue (id order from the right neighbour). A failed device
+    /// never takes work. Returns the job plus whether it was stolen and
+    /// whether the victim had dropped (a requeue).
+    fn next_job(&self, dev: &Device) -> Option<(FleetJob, bool, bool)> {
+        if dev.is_failed() {
+            return None;
+        }
+        if let Some(j) = lock_clean(&dev.queue).pop_front() {
+            return Some((j, false, false));
+        }
+        let n = self.devices.len();
+        for k in 1..n {
+            let victim = &self.devices[(dev.id + k) % n];
+            let job = lock_clean(&victim.queue).pop_front();
+            if let Some(j) = job {
+                return Some((j, true, victim.is_failed()));
+            }
+        }
+        None
+    }
+
+    fn worker_loop(&self, dev: Arc<Device>) {
+        loop {
+            if self.run_next_job(&dev) {
+                continue;
+            }
+            if self.shutdown.load(Ordering::Acquire) {
+                // Submissions all happen before shutdown is set; one more
+                // pass after observing it closes the race where a job lands
+                // between our empty-queue check and the flag read.
+                if self.run_next_job(&dev) {
+                    continue;
+                }
+                break;
+            }
+            // Timed wait: robust to missed wakeups by construction. The
+            // guard (returned on both Ok and poisoned paths) drops at the
+            // end of this block, before the next pass.
+            let parked = lock_clean(&self.idle);
+            let _woke = self.wake.wait_timeout(parked, Duration::from_millis(2));
+        }
+    }
+
+    /// Execute one queued job if any is available. The busy slot is held
+    /// for the duration and restored by the lease guard even if the job
+    /// panics — no leaked busy devices, and a panicking job never kills the
+    /// worker (the dispatch protocol inside the job answers its requests
+    /// with error responses; this is the backstop).
+    fn run_next_job(&self, dev: &Arc<Device>) -> bool {
+        let Some((job, stolen, from_failed)) = self.next_job(dev) else {
+            return false;
+        };
+        dev.busy.store(true, Ordering::Release);
+        let _lease = Lease { dev: Arc::clone(dev), owned: true };
+        // A panicking job is contained here as a backstop (the dispatch
+        // protocol inside the job already answers its requests with error
+        // responses before any executor call can panic); the lease restores
+        // the busy slot either way.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(dev)));
+        let mut st = lock_clean(&dev.stats);
+        st.dispatches += 1;
+        if stolen {
+            st.steals += 1;
+        }
+        if from_failed {
+            st.requeues += 1;
+        }
+        true
+    }
+
+    /// Stop workers and join them, then drain any stranded jobs inline
+    /// (possible only when every device dropped): each runs to completion
+    /// so its requests are answered — with errors from the all-dropped
+    /// execution path — rather than leaking.
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        self.wake.notify_all();
+        let ws: Vec<_> = lock_clean(&self.workers).drain(..).collect();
+        for h in ws {
+            let _ = h.join();
+        }
+        for d in &self.devices {
+            // Take the whole backlog in one locked step, then execute with
+            // the queue lock released.
+            let jobs: Vec<FleetJob> = lock_clean(&d.queue).drain(..).collect();
+            for j in jobs {
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| j(d)));
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Tile-parallel sharded execution.
+    // ------------------------------------------------------------------
+
+    /// Claim up to `want` idle surviving devices (never `exclude`). Each
+    /// claim flips the busy slot; the returned leases restore it on drop.
+    fn claim_idle(&self, exclude: usize, want: usize) -> Vec<Lease> {
+        let mut out = Vec::new();
+        for d in &self.devices {
+            if out.len() >= want {
+                break;
+            }
+            if d.id == exclude || d.is_failed() {
+                continue;
+            }
+            if d.busy
+                .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                if d.is_failed() {
+                    // Dropped between the liveness check and the claim.
+                    d.busy.store(false, Ordering::Release);
+                    continue;
+                }
+                out.push(Lease { dev: Arc::clone(d), owned: true });
+            }
+        }
+        out
+    }
+
+    /// Execute one shard with dropout requeue: the assigned device first,
+    /// then the other leased devices, then any surviving device. Executor
+    /// panics are contained (→ `Err`, busy slots restored by the leases) and
+    /// not retried — unlike a dropout, a panic is deterministic in the
+    /// operands. Accounts shard/row/busy stats on the device that ran it.
+    fn run_one_shard<T, E>(
+        &self,
+        devs: &[Arc<Device>],
+        first: usize,
+        range: Range<usize>,
+        exec: &E,
+    ) -> anyhow::Result<Vec<T>>
+    where
+        E: Fn(&Device, Range<usize>) -> anyhow::Result<Vec<T>> + Sync,
+    {
+        let mut candidates: Vec<&Arc<Device>> = Vec::with_capacity(self.devices.len());
+        candidates.push(&devs[first]);
+        candidates.extend(devs.iter().enumerate().filter(|(i, _)| *i != first).map(|(_, d)| d));
+        for d in &self.devices {
+            if !candidates.iter().any(|c| c.id == d.id) {
+                candidates.push(d);
+            }
+        }
+        for (ci, dev) in candidates.into_iter().enumerate() {
+            if dev.is_failed() {
+                continue;
+            }
+            let requeued = ci > 0;
+            let t0 = Instant::now();
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                exec(dev, range.clone())
+            }));
+            let busy = t0.elapsed().as_secs_f64() * 1e6;
+            let mut st = lock_clean(&dev.stats);
+            st.shards += 1;
+            st.rows += range.len() as u64;
+            st.busy_us += busy;
+            if requeued {
+                st.requeues += 1;
+            }
+            drop(st);
+            return match r {
+                Ok(res) => res,
+                Err(_) => Err(anyhow::anyhow!(
+                    "device {} executor panicked on rows {}..{}",
+                    dev.id,
+                    range.start,
+                    range.end
+                )),
+            };
+        }
+        Err(anyhow::anyhow!(
+            "no surviving device for rows {}..{} (all {} devices dropped)",
+            range.start,
+            range.end,
+            self.devices.len()
+        ))
+    }
+
+    /// Row-sharded execution: split `rows` output rows into contiguous
+    /// shards over the home device plus currently-idle devices, execute
+    /// each shard (`exec(device, row_range)` → that range's output,
+    /// `range.len() × out_width` items), and stitch the outputs back in row
+    /// order. With one usable device (or too few rows to split) this is a
+    /// plain call on that device — the single-device path and the sharded
+    /// path are the same code.
+    pub fn exec_row_sharded<T, E>(
+        &self,
+        home: Option<&Arc<Device>>,
+        rows: usize,
+        out_width: usize,
+        exec: E,
+    ) -> anyhow::Result<Vec<T>>
+    where
+        T: Send,
+        E: Fn(&Device, Range<usize>) -> anyhow::Result<Vec<T>> + Sync,
+    {
+        anyhow::ensure!(!self.devices.is_empty(), "fleet has no devices");
+        if rows == 0 {
+            return Ok(Vec::new());
+        }
+        let mut leases: Vec<Lease> = Vec::new();
+        if let Some(d) = home {
+            if !d.is_failed() {
+                // The worker already holds this device; not ours to release.
+                leases.push(Lease { dev: Arc::clone(d), owned: false });
+            }
+        }
+        let exclude = leases.first().map(|l| l.dev.id).unwrap_or(usize::MAX);
+        // How many shards could this batch even use? Claim at most that.
+        let max_useful = plan_shards(rows, self.devices.len(), self.opts.shard_min_rows).len();
+        if max_useful > leases.len() {
+            leases.extend(self.claim_idle(exclude, max_useful - leases.len()));
+        }
+        let devlist: Vec<Arc<Device>> = if leases.is_empty() {
+            // Home dropped (or absent) and nothing idle to claim: fall back
+            // to the first device — `run_one_shard` skips dropped devices
+            // and scans the whole fleet, so this is only a starting point.
+            vec![Arc::clone(&self.devices[0])]
+        } else {
+            leases.iter().map(|l| Arc::clone(&l.dev)).collect()
+        };
+        let shards = plan_shards(rows, devlist.len(), self.opts.shard_min_rows);
+        let results: Vec<anyhow::Result<Vec<T>>> = if shards.len() <= 1 {
+            shards
+                .iter()
+                .map(|r| self.run_one_shard(&devlist, 0, r.clone(), &exec))
+                .collect()
+        } else {
+            let devlist_ref = &devlist;
+            let exec_ref = &exec;
+            std::thread::scope(|s| {
+                let handles: Vec<_> = shards
+                    .iter()
+                    .enumerate()
+                    .map(|(i, r)| {
+                        let range = r.clone();
+                        s.spawn(move || self.run_one_shard(devlist_ref, i, range, exec_ref))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join().unwrap_or_else(|_| {
+                            Err(anyhow::anyhow!("shard thread panicked"))
+                        })
+                    })
+                    .collect()
+            })
+        };
+        let mut out: Vec<T> = Vec::with_capacity(rows * out_width);
+        for (r, res) in shards.iter().zip(results) {
+            let v = res?;
+            anyhow::ensure!(
+                v.len() == r.len() * out_width,
+                "shard {}..{} returned {} items, expected {}",
+                r.start,
+                r.end,
+                v.len(),
+                r.len() * out_width
+            );
+            out.extend(v);
+        }
+        Ok(out)
+    }
+
+    /// Sharded element-typed program execution (the word serving path):
+    /// bit-identical to single-device `execute_program_words` for every
+    /// element backend, with zero runtime plan compiles (each shard reuses
+    /// the program's precompiled plans via [`Program::shard_rows`]).
+    ///
+    /// Words always execute on the devices' persistent simulators (their
+    /// plan caches), not through `TileExecutor::run_program_words`: no
+    /// executor overrides the word path (f32 oracles cannot represent field
+    /// arithmetic), and per-device simulator reuse is what keeps
+    /// steady-state serving allocation- and compile-free.
+    pub fn run_program_words(
+        &self,
+        home: Option<&Arc<Device>>,
+        program: &Program,
+        rows: usize,
+        input: &[u64],
+        weights: &WordWeights,
+    ) -> anyhow::Result<Vec<u64>> {
+        let kf = program.in_features();
+        anyhow::ensure!(
+            input.len() == rows * kf,
+            "activation is {} words, expected {rows}×{kf}",
+            input.len()
+        );
+        self.exec_row_sharded(home, rows, program.out_features(), |dev, r| {
+            let shard = program.shard_rows(r);
+            dev.run_program_words(program, shard.row_count(), &input[shard.input_words()], weights)
+        })
+    }
+
+    /// Sharded f32 program execution (the f32 session path, through each
+    /// device's executor backend).
+    pub fn run_program(
+        &self,
+        home: Option<&Arc<Device>>,
+        program: &Program,
+        rows: usize,
+        input: &[f32],
+        weights: &Arc<Vec<Vec<f32>>>,
+    ) -> anyhow::Result<Vec<f32>> {
+        let kf = program.in_features();
+        anyhow::ensure!(
+            input.len() == rows * kf,
+            "activation is {} elements, expected {rows}×{kf}",
+            input.len()
+        );
+        self.exec_row_sharded(home, rows, program.out_features(), |dev, r| {
+            let shard = program.shard_rows(r);
+            dev.executor().run_program(
+                program,
+                shard.row_count(),
+                &input[shard.input_words()],
+                weights,
+            )
+        })
+    }
+
+    /// Sharded ad-hoc GEMM execution: the M dimension splits across
+    /// devices; each shard is an independent `(rows × K) · (K × N)` GEMM.
+    pub fn gemm(
+        &self,
+        home: Option<&Arc<Device>>,
+        m: usize,
+        k: usize,
+        n: usize,
+        input: &[f32],
+        weight: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(
+            input.len() == m * k && weight.len() == k * n,
+            "shape mismatch: input {} (want {m}×{k}), weight {} (want {k}×{n})",
+            input.len(),
+            weight.len()
+        );
+        self.exec_row_sharded(home, m, n, |dev, r| {
+            dev.executor().gemm(r.len(), k, n, &input[r.start * k..r.end * k], weight)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::serve::{execute_program_words, NaiveExecutor};
+    use crate::mapper::chain::Chain;
+    use crate::mapper::search::MapperOptions;
+    use crate::util::prop::forall;
+    use crate::util::Lcg;
+
+    fn fast() -> MapperOptions {
+        MapperOptions { full_layout_search: false, threads: 1, ..Default::default() }
+    }
+
+    fn fleet(devices: usize, shard_min_rows: usize) -> Fleet {
+        let cfg = ArchConfig::paper(4, 4);
+        Fleet::new(&cfg, Arc::new(NaiveExecutor), FleetOptions { devices, shard_min_rows })
+    }
+
+    #[test]
+    fn plan_shards_cover_rows_contiguously() {
+        forall("plan-shards-cover", 256, |g| {
+            let rows = g.usize(1, 200);
+            let max_shards = g.usize(1, 9);
+            let min_rows = g.usize(1, 300);
+            let shards = plan_shards(rows, max_shards, min_rows);
+            assert!(!shards.is_empty());
+            assert!(shards.len() <= max_shards);
+            assert_eq!(shards[0].start, 0);
+            assert_eq!(shards.last().unwrap().end, rows);
+            for w in shards.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "contiguous");
+            }
+            // Every shard honours the minimum (when rows allow one at all).
+            if rows >= min_rows {
+                for s in &shards {
+                    assert!(s.len() >= min_rows, "{s:?} under min {min_rows}");
+                }
+            } else {
+                assert_eq!(shards.len(), 1, "too few rows: one shard");
+            }
+        });
+    }
+
+    #[test]
+    fn plan_shards_edges() {
+        assert!(plan_shards(0, 4, 1).is_empty());
+        // 1-row shards.
+        assert_eq!(plan_shards(7, 7, 1).len(), 7);
+        // min larger than the whole range → one shard.
+        assert_eq!(plan_shards(5, 8, 1000), vec![0..5]);
+        // max_shards = 0 is treated as 1.
+        assert_eq!(plan_shards(5, 0, 1), vec![0..5]);
+    }
+
+    #[test]
+    fn sharded_words_match_single_device_and_compile_nothing() {
+        let f = fleet(3, 1);
+        let chain = Chain::mlp("fleet", 5, &[8, 12, 8]);
+        let p = Program::compile(&f.cfg, &chain, &fast()).unwrap();
+        let mut rng = Lcg::new(9);
+        let ww = WordWeights::new(
+            chain.layers.iter().map(|g| ElemType::Goldilocks.sample_words(&mut rng, g.k * g.n)).collect(),
+            ElemType::Goldilocks,
+        );
+        for rows in [1usize, 5, 7, 16] {
+            let input = ElemType::Goldilocks.sample_words(&mut rng, rows * p.in_features());
+            let got = f.run_program_words(None, &p, rows, &input, &ww).unwrap();
+            let want = execute_program_words(&p, rows, &input, &ww).unwrap();
+            assert_eq!(got, want, "rows={rows}");
+        }
+        assert_eq!(f.plan_compiles(), 0, "precompiled plans only");
+        let rep = f.report(1.0);
+        assert!(rep.devices.iter().map(|d| d.shards).sum::<u64>() >= 4);
+        // With 1-row minimum and 3 devices, the 16-row batch sharded.
+        assert!(rep.devices.iter().filter(|d| d.shards > 0).count() >= 2, "{rep:?}");
+    }
+
+    #[test]
+    fn sharded_gemm_matches_unsharded() {
+        let f = fleet(3, 2);
+        let mut rng = Lcg::new(4);
+        let (m, k, n) = (10usize, 6usize, 5usize);
+        let iv = rng.f32_matrix(m, k);
+        let wv = rng.f32_matrix(k, n);
+        let got = f.gemm(None, m, k, n, &iv, &wv).unwrap();
+        let want = NaiveExecutor.gemm(m, k, n, &iv, &wv).unwrap();
+        assert_eq!(got, want);
+        assert!(f.gemm(None, m, k, n, &iv[1..], &wv).is_err(), "shape mismatch rejected");
+    }
+
+    #[test]
+    fn dropout_requeues_on_survivors() {
+        let f = fleet(2, 1);
+        let chain = Chain::mlp("fleet", 4, &[8, 8]);
+        let p = Program::compile(&f.cfg, &chain, &fast()).unwrap();
+        let mut rng = Lcg::new(5);
+        let ww = WordWeights::new(
+            chain.layers.iter().map(|g| ElemType::BabyBear.sample_words(&mut rng, g.k * g.n)).collect(),
+            ElemType::BabyBear,
+        );
+        assert!(f.fail_device(0));
+        assert!(!f.fail_device(99));
+        let input = ElemType::BabyBear.sample_words(&mut rng, 8 * p.in_features());
+        let got = f.run_program_words(None, &p, 8, &input, &ww).unwrap();
+        let want = execute_program_words(&p, 8, &input, &ww).unwrap();
+        assert_eq!(got, want, "requeued work lands bit-exact");
+        // The dropped device executed nothing; the survivor did everything.
+        assert_eq!(f.devices()[0].stats().shards, 0);
+        assert!(f.devices()[1].stats().shards >= 1);
+    }
+
+    #[test]
+    fn all_devices_dropped_is_an_error_not_a_hang() {
+        let f = fleet(2, 1);
+        let chain = Chain::mlp("fleet", 4, &[8, 8]);
+        let p = Program::compile(&f.cfg, &chain, &fast()).unwrap();
+        let mut rng = Lcg::new(6);
+        let ww = WordWeights::new(
+            chain.layers.iter().map(|g| ElemType::I32.sample_words(&mut rng, g.k * g.n)).collect(),
+            ElemType::I32,
+        );
+        f.fail_device(0);
+        f.fail_device(1);
+        let input = ElemType::I32.sample_words(&mut rng, 4 * p.in_features());
+        let e = f.run_program_words(None, &p, 4, &input, &ww).unwrap_err();
+        assert!(e.to_string().contains("dropped"), "{e}");
+    }
+
+    #[test]
+    fn leases_release_busy_slots() {
+        let f = fleet(3, 1);
+        {
+            let leases = f.claim_idle(usize::MAX, 3);
+            assert_eq!(leases.len(), 3);
+            assert!(f.devices().iter().all(|d| d.is_busy()));
+            // A second claim finds nothing idle.
+            assert!(f.claim_idle(usize::MAX, 3).is_empty());
+        }
+        assert!(f.devices().iter().all(|d| !d.is_busy()), "leases restored availability");
+    }
+
+    #[test]
+    fn mixed_backends_share_one_device_plan_cache() {
+        // One fleet serves Goldilocks then BabyBear then i32 programs; each
+        // backend gets its own persistent simulator per device and nothing
+        // recompiles.
+        let f = fleet(2, 1);
+        let chain = Chain::mlp("fleet", 4, &[8, 8]);
+        let p = Program::compile(&f.cfg, &chain, &fast()).unwrap();
+        let mut rng = Lcg::new(7);
+        for elem in [ElemType::Goldilocks, ElemType::BabyBear, ElemType::I32] {
+            let ww = WordWeights::new(
+                chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect(),
+                elem,
+            );
+            let input = elem.sample_words(&mut rng, 6 * p.in_features());
+            let got = f.run_program_words(None, &p, 6, &input, &ww).unwrap();
+            let want = execute_program_words(&p, 6, &input, &ww).unwrap();
+            assert_eq!(got, want, "{elem}");
+        }
+        assert_eq!(f.plan_compiles(), 0);
+    }
+}

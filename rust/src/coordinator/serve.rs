@@ -22,14 +22,24 @@
 //!   identity is `Arc` pointer equality — no weight cloning or per-element
 //!   comparison on the dispatch path.
 //!
+//! Execution itself is owned by a [`Fleet`](super::fleet::Fleet) of one or
+//! more simulated devices ([`ServerOptions::devices`]): with one device the
+//! leader dispatches inline exactly as before; with several, batches are
+//! routed onto per-device work-stealing queues (request-parallel) and large
+//! batches additionally split their activation rows across idle devices
+//! (tile-parallel) — see `coordinator::fleet`.
+//!
 //! Built on std::thread + mpsc channels (offline substitute for tokio,
 //! DESIGN.md).
 
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
+use super::fleet::{Device, Fleet, FleetOptions};
 use crate::arch::config::ArchConfig;
 use crate::arith::{decode_words, encode_words, ElemType, Element};
 use crate::functional::FunctionalSim;
@@ -228,6 +238,31 @@ pub fn execute_program_words(
     input: &[u64],
     weights: &WordWeights,
 ) -> anyhow::Result<Vec<u64>> {
+    with_element!(weights.elem(), E => {
+        // Registration-time decode; a mismatch is impossible through the
+        // Server API (WordWeights::new decodes for the tag it stores).
+        let w: &[Vec<E>] = weights
+            .decoded::<E>()
+            .ok_or_else(|| anyhow::anyhow!("WordWeights decoded form does not match its tag"))?;
+        let mut sim: FunctionalSim<E> = FunctionalSim::new(&program.cfg);
+        execute_program_words_on(&mut sim, program, rows, input, w)
+    })
+}
+
+/// [`execute_program_words`] against a caller-provided simulator — the one
+/// chunked-execution loop shared by the throwaway-sim path above and the
+/// fleet's persistent per-device simulators
+/// (`super::fleet::Device::run_program_words`), so the chunking/reduce
+/// semantics the fleet-vs-single-device bit-identity invariant rests on
+/// exist exactly once. The simulator must share the program's `ArchConfig`
+/// (`Program::seed_sim` asserts it).
+pub fn execute_program_words_on<E: Element>(
+    sim: &mut FunctionalSim<E>,
+    program: &Program,
+    rows: usize,
+    input: &[u64],
+    w: &[Vec<E>],
+) -> anyhow::Result<Vec<u64>> {
     let kf = program.in_features();
     let nf = program.out_features();
     anyhow::ensure!(
@@ -236,38 +271,30 @@ pub fn execute_program_words(
         input.len()
     );
     anyhow::ensure!(
-        weights.layer_count() == program.layer_count(),
+        w.len() == program.layer_count(),
         "program expects {} weight matrices, got {}",
         program.layer_count(),
-        weights.layer_count()
+        w.len()
     );
-    with_element!(weights.elem(), E => {
-        // Registration-time decode; a mismatch is impossible through the
-        // Server API (WordWeights::new decodes for the tag it stores).
-        let w: &[Vec<E>] = weights
-            .decoded::<E>()
-            .ok_or_else(|| anyhow::anyhow!("WordWeights decoded form does not match its tag"))?;
-        let m = program.rows();
-        let mut sim: FunctionalSim<E> = FunctionalSim::new(&program.cfg);
-        // Seed once up front; `execute` re-seeds idempotently per chunk,
-        // which is then O(plan-count) hash lookups — noise next to the
-        // chunk's chain execution.
-        program.seed_sim(&mut sim);
-        let mut out_words: Vec<u64> = Vec::with_capacity(rows * nf);
-        let mut row0 = 0usize;
-        while row0 < rows {
-            let rows_here = m.min(rows - row0);
-            let mut act: Vec<E> = decode_words::<E>(&input[row0 * kf..(row0 + rows_here) * kf]);
-            act.resize(m * kf, E::zero());
-            let out = program
-                .execute(&mut sim, &act, w)
-                .map_err(|e| anyhow::anyhow!("functional execution: {e}"))?;
-            let reduced: Vec<E> = out[..rows_here * nf].iter().map(|&v| E::reduce(v)).collect();
-            out_words.extend(encode_words::<E>(&reduced));
-            row0 += rows_here;
-        }
-        Ok(out_words)
-    })
+    let m = program.rows();
+    // Seed once up front; `execute` re-seeds idempotently per chunk, which
+    // is then O(plan-count) hash lookups — noise next to the chunk's chain
+    // execution.
+    program.seed_sim(sim);
+    let mut out_words: Vec<u64> = Vec::with_capacity(rows * nf);
+    let mut row0 = 0usize;
+    while row0 < rows {
+        let rows_here = m.min(rows - row0);
+        let mut act: Vec<E> = decode_words::<E>(&input[row0 * kf..(row0 + rows_here) * kf]);
+        act.resize(m * kf, E::zero());
+        let out = program
+            .execute(sim, &act, w)
+            .map_err(|e| anyhow::anyhow!("functional execution: {e}"))?;
+        let reduced: Vec<E> = out[..rows_here * nf].iter().map(|&v| E::reduce(v)).collect();
+        out_words.extend(encode_words::<E>(&reduced));
+        row0 += rows_here;
+    }
+    Ok(out_words)
 }
 
 /// Reference executor: naive f32 GEMM (tests / fallback).
@@ -365,7 +392,7 @@ struct Session {
 }
 
 /// How requests group into one executor dispatch.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 enum BatchKey {
     /// Shape plus weight identity (the `Arc` pointer, not its contents).
     Gemm { m: usize, k: usize, n: usize, weight: usize },
@@ -386,11 +413,38 @@ fn batch_key(r: &Request) -> BatchKey {
     }
 }
 
+/// Device-routing affinity of a batch key: same key → same surviving
+/// device, so a session's per-device simulators and plan caches stay warm.
+fn affinity(key: &BatchKey) -> u64 {
+    let mut h = DefaultHasher::new();
+    key.hash(&mut h);
+    h.finish()
+}
+
+/// Serving-stack sizing knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerOptions {
+    /// Simulated FEATHER+ devices in the fleet (1 = the classic inline
+    /// single-device leader).
+    pub devices: usize,
+    /// Minimum activation rows per tile-parallel shard (see
+    /// [`super::fleet::FleetOptions::shard_min_rows`]).
+    pub shard_min_rows: usize,
+    /// Max requests batched per dispatch.
+    pub max_batch: usize,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        Self { devices: 1, shard_min_rows: 8, max_batch: 8 }
+    }
+}
+
 /// The serving coordinator (leader). Owns the model sessions, the per-shape
-/// mapper cache and the batcher.
+/// mapper cache, the batcher, and the device fleet that executes dispatches.
 pub struct Server {
     cfg: ArchConfig,
-    executor: Arc<dyn TileExecutor>,
+    fleet: Arc<Fleet>,
     opts: MapperOptions,
     /// Shape → mapping decision routing table for ad-hoc GEMMs. `RwLock` so
     /// concurrent hits on *different* shapes share a read lock; per-shape
@@ -408,16 +462,38 @@ pub struct Server {
 
 impl Server {
     pub fn new(cfg: &ArchConfig, executor: Arc<dyn TileExecutor>) -> Self {
+        Self::with_options(cfg, executor, ServerOptions::default())
+    }
+
+    /// Build a server over an N-device fleet. The executor handle is shared
+    /// by every device (simulated devices are stateless per call; stateful
+    /// per-device plan caches live in the fleet's devices themselves).
+    pub fn with_options(
+        cfg: &ArchConfig,
+        executor: Arc<dyn TileExecutor>,
+        sopts: ServerOptions,
+    ) -> Self {
+        let fleet = Arc::new(Fleet::new(
+            cfg,
+            executor,
+            FleetOptions { devices: sopts.devices, shard_min_rows: sopts.shard_min_rows },
+        ));
         Self {
             cfg: cfg.clone(),
-            executor,
+            fleet,
             opts: MapperOptions { full_layout_search: false, threads: 1, ..Default::default() },
             cache: RwLock::new(HashMap::new()),
             sessions: RwLock::new(HashMap::new()),
             next_program: AtomicU64::new(1),
             stats: Mutex::new(ServeStats::default()),
-            max_batch: 8,
+            max_batch: sopts.max_batch,
         }
+    }
+
+    /// The device fleet executing this server's dispatches (per-device
+    /// stats, failure injection, `report()` roll-ups).
+    pub fn fleet(&self) -> &Arc<Fleet> {
+        &self.fleet
     }
 
     /// Register a model chain: runs the chain-aware mapper, fuses the
@@ -568,10 +644,29 @@ impl Server {
         d
     }
 
-    /// Serve requests pulled from `rx`, sending responses on `tx`. Returns
-    /// when `rx` closes. Requests batch by [`BatchKey`]: same-program
-    /// activations stack into one taller pass through the chain; ad-hoc
-    /// GEMMs stack when shape and weight identity agree.
+    /// Pull the head request plus everything batchable with it (same
+    /// [`BatchKey`], up to `max_batch`) out of `pending`.
+    fn take_batch(pending: &mut Vec<Request>, max_batch: usize) -> Vec<Request> {
+        let head = pending.remove(0);
+        let key = batch_key(&head);
+        let mut batch = vec![head];
+        let mut rest = Vec::with_capacity(pending.len());
+        for r in pending.drain(..) {
+            if batch.len() < max_batch && batch_key(&r) == key {
+                batch.push(r);
+            } else {
+                rest.push(r);
+            }
+        }
+        *pending = rest;
+        batch
+    }
+
+    /// Serve requests pulled from `rx`, sending responses on `tx`, with
+    /// dispatch inline on this (leader) thread. Returns when `rx` closes.
+    /// Requests batch by [`BatchKey`]: same-program activations stack into
+    /// one taller pass through the chain; ad-hoc GEMMs stack when shape and
+    /// weight identity agree.
     pub fn run(&self, rx: Receiver<Request>, tx: Sender<Response>) {
         let mut pending: Vec<Request> = Vec::new();
         loop {
@@ -587,30 +682,60 @@ impl Server {
                 }
             }
             while !pending.is_empty() {
-                let head = pending.remove(0);
-                let key = batch_key(&head);
-                let mut batch = vec![head];
-                let mut rest = Vec::with_capacity(pending.len());
-                for r in pending.drain(..) {
-                    if batch.len() < self.max_batch && batch_key(&r) == key {
-                        batch.push(r);
-                    } else {
-                        rest.push(r);
-                    }
-                }
-                pending = rest;
-                if self.dispatch(&batch, &tx).is_err() {
+                let batch = Self::take_batch(&mut pending, self.max_batch);
+                if self.dispatch(None, &batch, &tx).is_err() {
                     return; // receiver dropped
                 }
             }
         }
     }
 
-    fn dispatch(&self, batch: &[Request], tx: &Sender<Response>) -> Result<(), ()> {
+    /// [`Self::run`] in fleet mode: the leader only forms batches; each is
+    /// submitted to the fleet's work-stealing queues (routed by batch-key
+    /// affinity) and dispatched on a device worker thread, so different
+    /// batches execute concurrently on different devices. The caller starts
+    /// the workers first and shuts the fleet down after this returns
+    /// ([`spawn_with_options`] does both).
+    pub fn run_fleet(self: &Arc<Self>, rx: Receiver<Request>, tx: Sender<Response>) {
+        let mut pending: Vec<Request> = Vec::new();
+        loop {
+            match rx.recv() {
+                Ok(r) => pending.push(r),
+                Err(_) => break,
+            }
+            while pending.len() < self.max_batch {
+                match rx.try_recv() {
+                    Ok(r) => pending.push(r),
+                    Err(_) => break,
+                }
+            }
+            while !pending.is_empty() {
+                let batch = Self::take_batch(&mut pending, self.max_batch);
+                let key = affinity(&batch_key(&batch[0]));
+                let srv = Arc::clone(self);
+                let txc = tx.clone();
+                self.fleet.submit(
+                    key,
+                    Box::new(move |dev| {
+                        // A send failure means the response receiver is
+                        // gone; remaining jobs drain harmlessly.
+                        let _ = srv.dispatch(Some(dev), &batch, &txc);
+                    }),
+                );
+            }
+        }
+    }
+
+    fn dispatch(
+        &self,
+        dev: Option<&Arc<Device>>,
+        batch: &[Request],
+        tx: &Sender<Response>,
+    ) -> Result<(), ()> {
         match &batch[0].payload {
-            Payload::Gemm { .. } => self.dispatch_gemm(batch, tx),
-            Payload::Program { .. } => self.dispatch_program(batch, tx),
-            Payload::ProgramWords { .. } => self.dispatch_program_words(batch, tx),
+            Payload::Gemm { .. } => self.dispatch_gemm(dev, batch, tx),
+            Payload::Program { .. } => self.dispatch_program(dev, batch, tx),
+            Payload::ProgramWords { .. } => self.dispatch_program_words(dev, batch, tx),
         }
     }
 
@@ -632,7 +757,12 @@ impl Server {
         Ok(())
     }
 
-    fn dispatch_gemm(&self, batch: &[Request], tx: &Sender<Response>) -> Result<(), ()> {
+    fn dispatch_gemm(
+        &self,
+        dev: Option<&Arc<Device>>,
+        batch: &[Request],
+        tx: &Sender<Response>,
+    ) -> Result<(), ()> {
         let t0 = std::time::Instant::now();
         let Payload::Gemm { m, k, n, weight, .. } = &batch[0].payload else { unreachable!() };
         let (m, k, n) = (*m, *k, *n);
@@ -667,7 +797,11 @@ impl Server {
             let Payload::Gemm { input, .. } = &r.payload else { unreachable!() };
             stacked.extend_from_slice(input);
         }
-        let out = match self.executor.gemm(bm, k, n, &stacked, weight) {
+        // The fleet may split the stacked M range across idle devices
+        // (tile-parallel); executor panics are contained per shard and
+        // surface here as errors, so a poisoned operand answers with an
+        // error response instead of killing the dispatching thread.
+        let out = match self.fleet.gemm(dev, bm, k, n, &stacked, weight) {
             Ok(o) => o,
             Err(e) => {
                 let ids: Vec<u64> = valid.iter().map(|r| r.id).collect();
@@ -705,7 +839,12 @@ impl Server {
         Ok(())
     }
 
-    fn dispatch_program(&self, batch: &[Request], tx: &Sender<Response>) -> Result<(), ()> {
+    fn dispatch_program(
+        &self,
+        dev: Option<&Arc<Device>>,
+        batch: &[Request],
+        tx: &Sender<Response>,
+    ) -> Result<(), ()> {
         let Payload::Program { program: pid, .. } = &batch[0].payload else { unreachable!() };
         let session = self.sessions.read().unwrap().get(pid).cloned();
         let Some(session) = session else {
@@ -734,7 +873,7 @@ impl Server {
                 (*rows, input.as_slice())
             },
             |total_rows, stacked| {
-                self.executor.run_program(&program, total_rows, stacked, &weights)
+                self.fleet.run_program(dev, &program, total_rows, stacked, &weights)
             },
             |o| (o, Vec::new()),
         )
@@ -742,7 +881,12 @@ impl Server {
 
     /// Serve a batch of element-typed program requests: the shared batch
     /// protocol over canonical words and the session's element backend.
-    fn dispatch_program_words(&self, batch: &[Request], tx: &Sender<Response>) -> Result<(), ()> {
+    fn dispatch_program_words(
+        &self,
+        dev: Option<&Arc<Device>>,
+        batch: &[Request],
+        tx: &Sender<Response>,
+    ) -> Result<(), ()> {
         let Payload::ProgramWords { program: pid, .. } = &batch[0].payload else { unreachable!() };
         let session = self.sessions.read().unwrap().get(pid).cloned();
         let Some(session) = session else {
@@ -766,7 +910,7 @@ impl Server {
                 (*rows, input.as_slice())
             },
             |total_rows, stacked| {
-                self.executor.run_program_words(&program, total_rows, stacked, &weights)
+                self.fleet.run_program_words(dev, &program, total_rows, stacked, &weights)
             },
             |o| (Vec::new(), o),
         )
@@ -866,19 +1010,40 @@ impl Server {
     }
 }
 
-/// Spawn a server on its own thread; returns (request sender, response
-/// receiver, join handle, server). The `Arc<Server>` registers model
-/// sessions (`register_chain`) and reads stats while the loop runs.
+/// Spawn a single-device server on its own thread; returns (request sender,
+/// response receiver, join handle, server). The `Arc<Server>` registers
+/// model sessions (`register_chain`) and reads stats while the loop runs.
 pub fn spawn(
     cfg: &ArchConfig,
     executor: Arc<dyn TileExecutor>,
 ) -> (Sender<Request>, Receiver<Response>, std::thread::JoinHandle<ServeStats>, Arc<Server>) {
+    spawn_with_options(cfg, executor, ServerOptions::default())
+}
+
+/// [`spawn`] with explicit sizing: a multi-device fleet serves with
+/// per-device worker threads (started here, joined before the returned
+/// handle resolves); one device keeps the classic inline leader. Either
+/// way, every request sent before the request sender drops is answered
+/// before the join handle yields the final stats.
+pub fn spawn_with_options(
+    cfg: &ArchConfig,
+    executor: Arc<dyn TileExecutor>,
+    opts: ServerOptions,
+) -> (Sender<Request>, Receiver<Response>, std::thread::JoinHandle<ServeStats>, Arc<Server>) {
     let (req_tx, req_rx) = channel::<Request>();
     let (resp_tx, resp_rx) = channel::<Response>();
-    let server = Arc::new(Server::new(cfg, executor));
+    let server = Arc::new(Server::with_options(cfg, executor, opts));
     let srv = Arc::clone(&server);
     let handle = std::thread::spawn(move || {
-        srv.run(req_rx, resp_tx);
+        if srv.fleet.device_count() > 1 {
+            srv.fleet.start_workers();
+            srv.run_fleet(req_rx, resp_tx);
+            // Joins workers; stranded jobs (all-devices-dropped) drain
+            // inline so their requests still answer.
+            srv.fleet.shutdown();
+        } else {
+            srv.run(req_rx, resp_tx);
+        }
         let stats = srv.stats.lock().unwrap();
         stats.clone()
     });
@@ -1359,5 +1524,122 @@ mod tests {
             .register_chain_elem(&chain, vec![vec![0; 7]], ElemType::BabyBear)
             .is_err());
         assert_eq!(server.stats.lock().unwrap().program_compiles, 0);
+    }
+
+    /// An executor that panics when the first input element carries a
+    /// marker value — targets the ad-hoc GEMM path, which used to call the
+    /// executor outside any panic containment.
+    struct PanicOnMarker;
+
+    impl TileExecutor for PanicOnMarker {
+        fn gemm(
+            &self,
+            m: usize,
+            k: usize,
+            n: usize,
+            iv: &[f32],
+            wv: &[f32],
+        ) -> anyhow::Result<Vec<f32>> {
+            assert!(iv.first() != Some(&666.0), "injected executor panic");
+            NaiveExecutor.gemm(m, k, n, iv, wv)
+        }
+        fn name(&self) -> &str {
+            "panic-on-marker"
+        }
+    }
+
+    /// A panicking GEMM executor answers with an error response (contained
+    /// in the fleet shard runner) and the leader keeps serving.
+    #[test]
+    fn gemm_executor_panic_answers_error_not_thread_death() {
+        let cfg = ArchConfig::paper(4, 4);
+        let (tx, rx, h, _srv) = spawn(&cfg, Arc::new(PanicOnMarker));
+        let w = shared_weight(8, 4);
+        let mut poisoned = Lcg::new(1).f32_matrix(2, 8);
+        poisoned[0] = 666.0;
+        tx.send(Request::gemm(0, 2, 8, 4, poisoned, Arc::clone(&w))).unwrap();
+        let r = rx.recv().unwrap();
+        assert!(r.error.as_deref().unwrap_or("").contains("panicked"), "{:?}", r.error);
+        // The leader survived and still serves.
+        tx.send(req(1, 2, 8, 4, 1, &w)).unwrap();
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.errors, 1);
+        assert_eq!(stats.served, 1);
+    }
+
+    /// Multi-device serving answers every request with the same bytes as a
+    /// single-device server: same GEMM responses, same program responses,
+    /// one program compile for the whole fleet.
+    #[test]
+    fn fleet_server_matches_single_device_responses() {
+        let cfg = ArchConfig::paper(4, 4);
+        let opts = ServerOptions { devices: 3, shard_min_rows: 1, max_batch: 8 };
+        let (tx, rx, h, server) = spawn_with_options(&cfg, Arc::new(NaiveExecutor), opts);
+        let chain = Chain::mlp("mlp", 4, &[8, 12, 8]);
+        let mut rng = Lcg::new(19);
+        let weights: Vec<Vec<f32>> =
+            chain.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect();
+        let pid = server.register_chain(&chain, weights.clone()).unwrap();
+        let n_req = 8u64;
+        let mut expects = HashMap::new();
+        for id in 0..n_req {
+            let input = rng.f32_matrix(4, 8);
+            let mut act = input.clone();
+            for (g, w) in chain.layers.iter().zip(&weights) {
+                act = NaiveExecutor.gemm(4, g.k, g.n, &act, w).unwrap();
+            }
+            expects.insert(id, act);
+            tx.send(Request::for_program(id, pid, 4, input)).unwrap();
+        }
+        for _ in 0..n_req {
+            let resp = rx.recv().unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            assert_eq!(&resp.output, &expects[&resp.id]);
+        }
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.program_compiles, 1, "one compile per fleet");
+        assert_eq!(stats.program_served, n_req);
+        assert_eq!(server.fleet().plan_compiles(), 0);
+        assert_eq!(server.fleet().device_count(), 3);
+    }
+
+    /// Fleet-mode error paths behave like single-device: unknown programs
+    /// and malformed activations answer errors from worker threads too.
+    #[test]
+    fn fleet_server_answers_errors_from_workers() {
+        let cfg = ArchConfig::paper(4, 4);
+        let opts = ServerOptions { devices: 2, shard_min_rows: 4, max_batch: 4 };
+        let (tx, rx, h, server) = spawn_with_options(&cfg, Arc::new(NaiveExecutor), opts);
+        let chain = Chain::mlp("mlp", 2, &[8, 8]);
+        let mut rng = Lcg::new(21);
+        let weights: Vec<Vec<f32>> =
+            chain.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect();
+        let pid = server.register_chain(&chain, weights).unwrap();
+        tx.send(Request::for_program(0, pid, 2, rng.f32_matrix(2, 8))).unwrap();
+        tx.send(Request::for_program(1, pid, 2, vec![0.0; 3])).unwrap(); // malformed
+        tx.send(Request::for_program(2, ProgramId(777), 2, vec![0.0; 16])).unwrap();
+        let mut ok = 0;
+        let mut bad = 0;
+        for _ in 0..3 {
+            let r = rx.recv().unwrap();
+            match r.id {
+                1 | 2 => {
+                    assert!(r.error.is_some());
+                    bad += 1;
+                }
+                _ => {
+                    assert!(r.error.is_none(), "{:?}", r.error);
+                    ok += 1;
+                }
+            }
+        }
+        assert_eq!((ok, bad), (1, 2));
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.errors, 2);
     }
 }

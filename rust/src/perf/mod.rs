@@ -182,6 +182,115 @@ pub fn with_micro_instructions(
         .collect()
 }
 
+/// One device's share of a fleet observation window — the per-device row of
+/// [`FleetReport`]. Times are in the window's unit: wall-clock µs on the
+/// serving path (where devices are simulated and the window is real time),
+/// modeled cycles when a cycle-level window is rolled up.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DeviceLoad {
+    pub device: usize,
+    /// Time this device spent executing dispatches/shards.
+    pub busy: f64,
+    /// Window remainder: time the device sat idle (or, after a dropout,
+    /// dark). `window − busy`, floored at zero.
+    pub stall: f64,
+    /// Batches this device's worker executed.
+    pub dispatches: u64,
+    /// Tile-parallel row shards executed (incl. the trivial 1-shard case).
+    pub shards: u64,
+    /// Activation rows executed across all shards.
+    pub rows: u64,
+    /// Jobs taken from another device's queue.
+    pub steals: u64,
+    /// Shards/jobs re-executed here after their assigned device dropped.
+    pub requeues: u64,
+    /// Wave plans compiled at runtime by this device's simulators — stays 0
+    /// when every executed program was compiled ahead of time.
+    pub plan_compiles: u64,
+    /// Device has dropped out (failure injection).
+    pub failed: bool,
+}
+
+/// Fleet-level roll-up over one observation window: per-device busy/stall
+/// plus the shard-imbalance and utilization metrics the serving CLI reports.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FleetReport {
+    /// Observation window length (same unit as the per-device times).
+    pub window: f64,
+    pub devices: Vec<DeviceLoad>,
+}
+
+impl FleetReport {
+    /// Total busy time summed over devices.
+    pub fn busy_total(&self) -> f64 {
+        self.devices.iter().map(|d| d.busy).sum()
+    }
+
+    /// Runtime wave-plan compiles summed over devices (0 on the
+    /// compile-once path).
+    pub fn plan_compiles(&self) -> u64 {
+        self.devices.iter().map(|d| d.plan_compiles).sum()
+    }
+
+    /// Fraction of the fleet's aggregate capacity (window × devices) spent
+    /// busy. Dropped devices still count in the denominator: a dark device
+    /// is lost capacity, not a smaller fleet.
+    pub fn utilization(&self) -> f64 {
+        let n = self.devices.len();
+        if n == 0 || self.window <= 0.0 {
+            return 0.0;
+        }
+        (self.busy_total() / (self.window * n as f64)).min(1.0)
+    }
+
+    /// Shard-imbalance metric over *surviving* devices: `(max − mean) / max`
+    /// busy time, in `[0, 1)`. 0 means perfectly even load; values near 1
+    /// mean one device did essentially all the work (sharding or stealing is
+    /// not spreading load).
+    pub fn imbalance(&self) -> f64 {
+        let busy: Vec<f64> =
+            self.devices.iter().filter(|d| !d.failed).map(|d| d.busy).collect();
+        if busy.is_empty() {
+            return 0.0;
+        }
+        let max = busy.iter().cloned().fold(0.0f64, f64::max);
+        if max <= 0.0 {
+            return 0.0;
+        }
+        let mean = busy.iter().sum::<f64>() / busy.len() as f64;
+        (max - mean) / max
+    }
+
+    /// Human-readable per-device table + headline metrics (CLI output).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(
+            "fleet: device    busy      stall  dispatches  shards    rows  steals  requeues\n",
+        );
+        for d in &self.devices {
+            s.push_str(&format!(
+                "fleet: dev{:<3}{} {:>9.1} {:>9.1} {:>11} {:>7} {:>7} {:>7} {:>9}\n",
+                d.device,
+                if d.failed { "✗" } else { " " },
+                d.busy,
+                d.stall,
+                d.dispatches,
+                d.shards,
+                d.rows,
+                d.steals,
+                d.requeues,
+            ));
+        }
+        s.push_str(&format!(
+            "fleet: utilization {:.1}%, shard imbalance {:.2}, {} runtime plan compile(s)",
+            self.utilization() * 100.0,
+            self.imbalance(),
+            self.plan_compiles(),
+        ));
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -297,5 +406,44 @@ mod tests {
         assert_eq!(rep.total_cycles, 0.0);
         assert_eq!(rep.utilization(), 0.0);
         assert_eq!(rep.instr_stall_fraction(), 0.0);
+    }
+
+    fn load(device: usize, busy: f64, failed: bool) -> DeviceLoad {
+        DeviceLoad { device, busy, failed, ..Default::default() }
+    }
+
+    #[test]
+    fn fleet_report_metrics() {
+        let rep = FleetReport {
+            window: 100.0,
+            devices: vec![load(0, 80.0, false), load(1, 40.0, false)],
+        };
+        // 120 busy over 200 capacity.
+        assert!((rep.utilization() - 0.6).abs() < 1e-12);
+        // max 80, mean 60 → (80-60)/80 = 0.25.
+        assert!((rep.imbalance() - 0.25).abs() < 1e-12);
+        assert_eq!(rep.plan_compiles(), 0);
+        assert!(rep.render().contains("dev0"));
+    }
+
+    #[test]
+    fn fleet_report_ignores_failed_devices_in_imbalance_only() {
+        let rep = FleetReport {
+            window: 100.0,
+            devices: vec![load(0, 50.0, false), load(1, 0.0, true)],
+        };
+        // Survivor alone → perfectly balanced among survivors…
+        assert_eq!(rep.imbalance(), 0.0);
+        // …but the dark device still counts as lost capacity.
+        assert!((rep.utilization() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_report_empty_and_idle_edge_cases() {
+        assert_eq!(FleetReport::default().utilization(), 0.0);
+        assert_eq!(FleetReport::default().imbalance(), 0.0);
+        let idle = FleetReport { window: 10.0, devices: vec![load(0, 0.0, false)] };
+        assert_eq!(idle.utilization(), 0.0);
+        assert_eq!(idle.imbalance(), 0.0);
     }
 }

@@ -258,6 +258,53 @@ impl Program {
     pub fn reference_i32(&self, input: &[i32], weights: &[Vec<i32>]) -> Vec<i64> {
         self.reference(input, weights)
     }
+
+    /// A contiguous row-range view of this program for tile-parallel (fleet)
+    /// execution. Rows of a GEMM chain are independent, so a larger
+    /// activation can be split into contiguous shards, each executed against
+    /// the *same* compiled program — shards reuse the program's precompiled
+    /// wave plans verbatim, so sharding performs **zero** additional plan or
+    /// program compiles. The shard maps its row range onto input/output word
+    /// ranges of the full activation; `start > end` ranges are normalized to
+    /// empty rather than panicking (adversarial boundaries are the caller's
+    /// domain — see `coordinator::fleet::plan_shards`).
+    pub fn shard_rows(&self, rows: std::ops::Range<usize>) -> ProgramShard<'_> {
+        let start = rows.start.min(rows.end);
+        ProgramShard { program: self, rows: start..rows.end }
+    }
+}
+
+/// A row-range view of a [`Program`] — the unit of tile-parallel fleet
+/// execution ([`Program::shard_rows`]). Holds addressing only: the shard
+/// borrows the program (and therefore its compiled wave plans) rather than
+/// copying anything.
+#[derive(Debug, Clone)]
+pub struct ProgramShard<'a> {
+    pub program: &'a Program,
+    /// Row range within the (possibly batched) activation this shard covers.
+    pub rows: std::ops::Range<usize>,
+}
+
+impl ProgramShard<'_> {
+    /// Number of activation rows in this shard.
+    pub fn row_count(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Index range of this shard's words within the full row-major
+    /// activation (`rows × in_features` words).
+    pub fn input_words(&self) -> std::ops::Range<usize> {
+        let kf = self.program.in_features();
+        self.rows.start * kf..self.rows.end * kf
+    }
+
+    /// Index range of this shard's words within the full row-major output
+    /// (`rows × out_features` words) — where the shard's result is stitched
+    /// back, preserving `OutputBuffer` row order.
+    pub fn output_words(&self) -> std::ops::Range<usize> {
+        let nf = self.program.out_features();
+        self.rows.start * nf..self.rows.end * nf
+    }
 }
 
 /// Chain-aware per-layer decision planning: search each layer under both
@@ -550,6 +597,29 @@ mod tests {
             "dataflows alternate across layers: {dfs:?}"
         );
         assert!(p.elided >= 1, "at least one boundary elides its SetIVNLayout");
+    }
+
+    /// Shard views are pure addressing: row ranges map to word ranges, the
+    /// degenerate inputs (empty, inverted, past-the-end) never panic, and
+    /// the shard borrows the program (same plan set, nothing recompiled).
+    #[test]
+    fn shard_rows_addressing() {
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("mlp", 8, &[12, 16, 8]);
+        let p = Program::compile(&cfg, &chain, &fast()).unwrap();
+        let (kf, nf) = (p.in_features(), p.out_features());
+        let s = p.shard_rows(2..5);
+        assert_eq!(s.row_count(), 3);
+        assert_eq!(s.input_words(), 2 * kf..5 * kf);
+        assert_eq!(s.output_words(), 2 * nf..5 * nf);
+        // Degenerate ranges normalize to empty.
+        assert_eq!(p.shard_rows(4..4).row_count(), 0);
+        assert_eq!(p.shard_rows(5..2).row_count(), 0);
+        // Ranges past the compiled height are legal: shards index a larger
+        // batched activation, not the compiled M.
+        let tall = p.shard_rows(20..23);
+        assert_eq!(tall.input_words(), 20 * kf..23 * kf);
+        assert_eq!(tall.program.plan_count(), p.plan_count());
     }
 
     /// `total_cycles` stays the sum of the (possibly re-estimated) per-layer

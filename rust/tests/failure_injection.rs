@@ -1,13 +1,26 @@
 //! Failure-injection tests: corrupt lowered programs in targeted ways and
 //! verify the functional simulator rejects (or provably tolerates) each
-//! fault instead of silently producing wrong numbers.
+//! fault instead of silently producing wrong numbers — plus fleet-level
+//! injection: device dropout under concurrent load and executor panics
+//! inside tile-parallel shards.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
 
 use minisa::arch::ArchConfig;
+use minisa::arith::{decode_words, naive_gemm_e, ElemType, Goldilocks, ModP};
+use minisa::coordinator::fleet::{Fleet, FleetOptions};
+use minisa::coordinator::serve::{
+    spawn_with_options, NaiveExecutor, Request, ServerOptions, TileExecutor,
+};
 use minisa::functional::SimError;
 use minisa::isa::inst::{BufTarget, Inst};
+use minisa::mapper::chain::Chain;
 use minisa::mapper::exec::{execute_program, validate_decision};
 use minisa::mapper::search::{search, MapperOptions};
 use minisa::mapper::lower_gemm;
+use minisa::program::Program;
 use minisa::util::Lcg;
 use minisa::workloads::Gemm;
 
@@ -151,6 +164,158 @@ fn truncated_trace_yields_incomplete_output() {
     let out = execute_program(&cfg, &g, &prog, &iv, &wv).expect("still executes");
     let expect = minisa::functional::naive_gemm(&iv, &wv, g.m, g.k, g.n);
     assert_ne!(out, expect, "dropping compute left output intact");
+}
+
+/// Concurrency stress: 32 concurrent clients against a 3-device fleet with
+/// one device dropping mid-stream. Every request must get a response
+/// (result or error) with no hangs, and all work — including anything
+/// requeued off the dropped device — must land bit-exact against the
+/// chained naive mod-p reference.
+#[test]
+fn fleet_dropout_under_concurrent_load_answers_everything_exactly() {
+    type G = ModP<Goldilocks>;
+    let cfg = ArchConfig::paper(4, 4);
+    let opts = ServerOptions { devices: 3, shard_min_rows: 2, max_batch: 8 };
+    let (tx, rx, h, server) = spawn_with_options(&cfg, Arc::new(NaiveExecutor), opts);
+    let chain = Chain::mlp("stress", 4, &[8, 12, 8]);
+    let mut rng = Lcg::new(0xD20);
+    let weights: Vec<Vec<u64>> = chain
+        .layers
+        .iter()
+        .map(|g| ElemType::Goldilocks.sample_words(&mut rng, g.k * g.n))
+        .collect();
+    let pid = server.register_chain_elem(&chain, weights.clone(), ElemType::Goldilocks).unwrap();
+    let wg: Vec<Vec<G>> = weights.iter().map(|w| decode_words::<G>(w)).collect();
+
+    let n_clients = 32u64;
+    // Precompute inputs and expected outputs (chained naive mod-p).
+    let cases: Vec<(u64, Vec<u64>, Vec<u64>)> = (0..n_clients)
+        .map(|id| {
+            let rows = 4usize;
+            let input = ElemType::Goldilocks.sample_words(&mut rng, rows * 8);
+            use minisa::arith::Element;
+            let mut act: Vec<G> = decode_words::<G>(&input);
+            let mut out = Vec::new();
+            for (g, w) in chain.layers.iter().zip(&wg) {
+                out = naive_gemm_e::<G>(&act, w, rows, g.k, g.n);
+                act = out.iter().map(|&v| <G as Element>::reduce(v)).collect();
+            }
+            let expect: Vec<u64> = out.into_iter().map(|v| v.to_u64()).collect();
+            (id, input, expect)
+        })
+        .collect();
+
+    std::thread::scope(|s| {
+        // 32 concurrent clients.
+        for (id, input, _) in &cases {
+            let txc = tx.clone();
+            let (id, input) = (*id, input.clone());
+            s.spawn(move || {
+                txc.send(Request::for_program_words(id, pid, 4, input)).unwrap();
+            });
+        }
+        // One device drops mid-stream.
+        let fleet = Arc::clone(server.fleet());
+        s.spawn(move || {
+            std::thread::sleep(Duration::from_millis(3));
+            assert!(fleet.fail_device(1));
+        });
+    });
+
+    // No hangs: every request is answered within the timeout.
+    let mut got: HashMap<u64, _> = HashMap::new();
+    for _ in 0..n_clients {
+        let r = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("every request answered, no hang");
+        got.insert(r.id, r);
+    }
+    assert_eq!(got.len() as u64, n_clients);
+    for (id, _, expect) in &cases {
+        let r = &got[id];
+        assert!(r.error.is_none(), "request {id}: {:?}", r.error);
+        assert_eq!(&r.output_words, expect, "request {id} bit-exact (incl. requeued work)");
+    }
+    drop(tx);
+    let stats = h.join().unwrap();
+    assert_eq!(stats.program_served, n_clients);
+    assert_eq!(stats.errors, 0, "dropout requeues, it does not error");
+    assert!(server.fleet().devices()[1].is_failed());
+    assert_eq!(server.fleet().plan_compiles(), 0);
+    // The survivors carried the whole load: total executed rows equals the
+    // stream (requests may be co-batched, so count rows, not dispatches).
+    let rows_total: u64 =
+        server.fleet().devices().iter().map(|d| d.stats().rows).sum();
+    assert_eq!(rows_total, n_clients * 4);
+}
+
+/// An executor that panics when the leading activation element carries a
+/// poison marker — used to panic exactly one tile-parallel shard.
+struct PanicOnMarker;
+
+impl TileExecutor for PanicOnMarker {
+    fn gemm(&self, m: usize, k: usize, n: usize, iv: &[f32], wv: &[f32]) -> anyhow::Result<Vec<f32>> {
+        NaiveExecutor.gemm(m, k, n, iv, wv)
+    }
+    fn run_program(
+        &self,
+        program: &Program,
+        rows: usize,
+        input: &[f32],
+        weights: &Arc<Vec<Vec<f32>>>,
+    ) -> anyhow::Result<Vec<f32>> {
+        assert!(input.first() != Some(&666.0), "injected shard panic");
+        let mut act = input.to_vec();
+        for (layer, w) in program.layers.iter().zip(weights.iter()) {
+            act = self.gemm(rows, layer.gemm.k, layer.gemm.n, &act, w)?;
+        }
+        Ok(act)
+    }
+    fn name(&self) -> &str {
+        "panic-on-marker"
+    }
+}
+
+/// Regression: a panic inside one shard must not leak a "busy" device slot.
+/// After the contained panic, every device reads idle and a subsequent
+/// multi-shard batch uses all of them again.
+#[test]
+fn shard_panic_restores_device_availability() {
+    let cfg = ArchConfig::paper(4, 4);
+    let fleet = Fleet::new(
+        &cfg,
+        Arc::new(PanicOnMarker),
+        FleetOptions { devices: 2, shard_min_rows: 1 },
+    );
+    let chain = Chain::mlp("panic", 4, &[8, 8]);
+    let o = MapperOptions { full_layout_search: false, threads: 1, ..Default::default() };
+    let program = Program::compile(&cfg, &chain, &o).unwrap();
+    let mut rng = Lcg::new(3);
+    let weights: Arc<Vec<Vec<f32>>> =
+        Arc::new(chain.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect());
+
+    // Poison the first row: the first shard panics, the batch errors.
+    let mut poisoned = rng.f32_matrix(4, 8);
+    poisoned[0] = 666.0;
+    let e = fleet.run_program(None, &program, 4, &poisoned, &weights).unwrap_err();
+    assert!(e.to_string().contains("panicked"), "{e}");
+    assert!(
+        fleet.devices().iter().all(|d| !d.is_busy()),
+        "no leaked busy slots after a shard panic"
+    );
+
+    // The fleet still shards across *both* devices afterwards, bit-exact.
+    let input = rng.f32_matrix(4, 8);
+    let got = fleet.run_program(None, &program, 4, &input, &weights).unwrap();
+    let mut act = input.clone();
+    for (g, w) in chain.layers.iter().zip(weights.iter()) {
+        act = NaiveExecutor.gemm(4, g.k, g.n, &act, w).unwrap();
+    }
+    assert_eq!(got, act);
+    for d in fleet.devices() {
+        assert!(d.stats().shards >= 1, "device {} reused after the panic", d.id);
+        assert!(!d.is_busy());
+    }
 }
 
 #[test]

@@ -1,0 +1,213 @@
+//! Cross-backend fleet conformance battery.
+//!
+//! Locks down the tentpole invariant of the fleet executor: executing a
+//! compiled [`Program`] sharded across N simulated FEATHER+ devices is
+//! **bit-identical** to single-device execution, for every element backend
+//! (SatI32, f32, Goldilocks, BabyBear), for adversarial shard boundaries
+//! (1-row shards, `shard_min_rows > M`, shard counts that don't divide the
+//! row count), and for every fleet size in {1, 2, 3, 7} — with **zero**
+//! runtime wave-plan compiles across the fleet and exactly **one** program
+//! compile per registered session.
+//!
+//! Property cases come from `util::prop` (`forall`), so failures print a
+//! reproducible seed + draw log.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use minisa::arch::ArchConfig;
+use minisa::arith::{decode_words, naive_gemm_e, ElemType, Element};
+use minisa::coordinator::fleet::{plan_shards, Fleet, FleetOptions};
+use minisa::coordinator::serve::{
+    execute_program_words, spawn_with_options, NaiveExecutor, Request, ServerOptions, WordWeights,
+};
+use minisa::mapper::chain::Chain;
+use minisa::mapper::search::MapperOptions;
+use minisa::program::Program;
+use minisa::util::prop::forall;
+use minisa::util::Lcg;
+use minisa::with_element;
+
+/// The four element backends the battery must prove conformant.
+const BACKENDS: [ElemType; 4] =
+    [ElemType::I32, ElemType::F32, ElemType::Goldilocks, ElemType::BabyBear];
+
+const FLEET_SIZES: [usize; 4] = [1, 2, 3, 7];
+
+fn fast() -> MapperOptions {
+    MapperOptions { full_layout_search: false, threads: 1, ..Default::default() }
+}
+
+/// One shared compiled program: plans are element-independent, so a single
+/// compile serves every backend in the battery (itself part of the
+/// compile-once story under test). M = 5 is deliberately odd so batched
+/// rows never align with the compiled height.
+fn compile_program() -> (ArchConfig, Chain, Program) {
+    let cfg = ArchConfig::paper(4, 4);
+    let chain = Chain::mlp("conf", 5, &[8, 12, 8]);
+    let p = Program::compile(&cfg, &chain, &fast()).expect("chain compiles");
+    (cfg, chain, p)
+}
+
+/// Chained naive reference in `elem`'s number system, over an arbitrary row
+/// count (unlike `Program::reference`, which is fixed at the compiled M).
+fn reference_words(
+    chain: &Chain,
+    weights: &[Vec<u64>],
+    elem: ElemType,
+    rows: usize,
+    input: &[u64],
+) -> Vec<u64> {
+    with_element!(elem, E => {
+        let w: Vec<Vec<E>> = weights.iter().map(|m| decode_words::<E>(m)).collect();
+        let mut act: Vec<E> = decode_words::<E>(input);
+        let mut out: Vec<<E as Element>::Acc> = Vec::new();
+        for (li, (g, wm)) in chain.layers.iter().zip(&w).enumerate() {
+            out = naive_gemm_e::<E>(&act, wm, rows, g.k, g.n);
+            if li + 1 < chain.layers.len() {
+                act = out.iter().map(|&v| E::reduce(v)).collect();
+            }
+        }
+        out.iter().map(|&v| E::reduce(v).encode()).collect()
+    })
+}
+
+/// Property: for every backend, fleet size, row count and (adversarial)
+/// `shard_min_rows`, fleet execution equals the single-device path
+/// bit-for-bit and compiles nothing at runtime.
+#[test]
+fn sharded_execution_bit_identical_for_all_backends() {
+    let (cfg, chain, program) = compile_program();
+    for elem in BACKENDS {
+        let mut wrng = Lcg::new(0xF1EE7 ^ elem as u64);
+        let weights: Vec<Vec<u64>> =
+            chain.layers.iter().map(|g| elem.sample_words(&mut wrng, g.k * g.n)).collect();
+        forall(&format!("fleet-conformance-{elem}"), 24, |g| {
+            let devices = *g.pick(&FLEET_SIZES);
+            let rows = g.usize(1, 23);
+            // Includes 1 (single-row shards) and values far above any row
+            // count in play (shard_min_rows > M → one shard).
+            let shard_min_rows = g.usize(1, 40);
+            let fleet = Fleet::new(
+                &cfg,
+                Arc::new(NaiveExecutor),
+                FleetOptions { devices, shard_min_rows },
+            );
+            let ww = WordWeights::new(weights.clone(), elem);
+            let input = elem.sample_words(g.rng(), rows * program.in_features());
+            let sharded = fleet
+                .run_program_words(None, &program, rows, &input, &ww)
+                .expect("fleet execution succeeds");
+            let single =
+                execute_program_words(&program, rows, &input, &ww).expect("single-device");
+            assert_eq!(sharded, single, "devices={devices} rows={rows} min={shard_min_rows}");
+            assert_eq!(fleet.plan_compiles(), 0, "zero runtime plan compiles");
+        });
+    }
+}
+
+/// Deterministic adversarial boundaries: 1-row shards on a 7-device fleet,
+/// `shard_min_rows` far above the batch height, and a single-row batch.
+#[test]
+fn adversarial_shard_boundaries_stay_exact() {
+    let (cfg, chain, program) = compile_program();
+    let elem = ElemType::Goldilocks;
+    let mut rng = Lcg::new(42);
+    let weights: Vec<Vec<u64>> =
+        chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect();
+    for (devices, rows, min_rows) in
+        [(7usize, 9usize, 1usize), (7, 9, 1000), (3, 1, 1), (2, 23, 5), (7, 7, 1)]
+    {
+        let fleet =
+            Fleet::new(&cfg, Arc::new(NaiveExecutor), FleetOptions { devices, shard_min_rows: min_rows });
+        let ww = WordWeights::new(weights.clone(), elem);
+        let input = elem.sample_words(&mut rng, rows * program.in_features());
+        let sharded = fleet.run_program_words(None, &program, rows, &input, &ww).unwrap();
+        let single = execute_program_words(&program, rows, &input, &ww).unwrap();
+        assert_eq!(sharded, single, "devices={devices} rows={rows} min={min_rows}");
+        assert_eq!(fleet.plan_compiles(), 0);
+        // Sanity on the shard plan itself for the extremes.
+        let shards = plan_shards(rows, devices, min_rows);
+        if min_rows > rows {
+            assert_eq!(shards.len(), 1, "oversized min collapses to one shard");
+        }
+        if min_rows == 1 && devices >= rows {
+            assert!(shards.iter().all(|s| s.len() == 1), "1-row shards");
+        }
+    }
+}
+
+/// Served conformance, per fleet size and backend: a fleet server answers
+/// the same words as the chained naive reference, with `program_compiles ==
+/// 1` and zero fleet plan compiles — the compile-once/serve-many invariant
+/// survives multi-device dispatch.
+#[test]
+fn fleet_server_serves_bit_exact_with_one_compile() {
+    for devices in [1usize, 2, 3] {
+        for elem in BACKENDS {
+            let cfg = ArchConfig::paper(4, 4);
+            let chain = Chain::mlp("conf", 4, &[8, 12, 8]);
+            let opts = ServerOptions { devices, shard_min_rows: 1, max_batch: 8 };
+            let (tx, rx, h, server) =
+                spawn_with_options(&cfg, Arc::new(NaiveExecutor), opts);
+            let mut rng = Lcg::new(1000 + devices as u64 + elem as u64 * 31);
+            let weights: Vec<Vec<u64>> =
+                chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect();
+            let pid = server.register_chain_elem(&chain, weights.clone(), elem).unwrap();
+            let n_req = 6u64;
+            let mut expects = HashMap::new();
+            for id in 0..n_req {
+                // Rows ≠ compiled height on odd ids: exercises chunking
+                // inside shards.
+                let rows = if id % 2 == 0 { 4 } else { 7 };
+                let input = elem.sample_words(&mut rng, rows * 8);
+                expects.insert(id, reference_words(&chain, &weights, elem, rows, &input));
+                tx.send(Request::for_program_words(id, pid, rows, input)).unwrap();
+            }
+            for _ in 0..n_req {
+                let r = rx.recv().unwrap();
+                assert!(r.error.is_none(), "devices={devices} {elem}: {:?}", r.error);
+                assert_eq!(
+                    &r.output_words, &expects[&r.id],
+                    "devices={devices} {elem} id={}",
+                    r.id
+                );
+            }
+            drop(tx);
+            let stats = h.join().unwrap();
+            assert_eq!(stats.program_compiles, 1, "one compile per fleet ({devices} devices)");
+            assert_eq!(stats.program_served, n_req);
+            assert_eq!(stats.errors, 0);
+            assert_eq!(
+                server.fleet().plan_compiles(),
+                0,
+                "devices={devices} {elem}: zero runtime plan compiles"
+            );
+        }
+    }
+}
+
+/// Repeated fleet execution stays compile-free: the per-device simulators
+/// persist across dispatches, so round 2+ hits warm plan caches (still 0
+/// compiles, same bytes).
+#[test]
+fn repeated_execution_reuses_device_plan_caches() {
+    let (cfg, chain, program) = compile_program();
+    let elem = ElemType::BabyBear;
+    let mut rng = Lcg::new(7);
+    let weights: Vec<Vec<u64>> =
+        chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect();
+    let fleet =
+        Fleet::new(&cfg, Arc::new(NaiveExecutor), FleetOptions { devices: 3, shard_min_rows: 1 });
+    let ww = WordWeights::new(weights, elem);
+    let input = elem.sample_words(&mut rng, 12 * program.in_features());
+    let first = fleet.run_program_words(None, &program, 12, &input, &ww).unwrap();
+    for round in 0..3 {
+        let again = fleet.run_program_words(None, &program, 12, &input, &ww).unwrap();
+        assert_eq!(again, first, "round {round} deterministic");
+    }
+    assert_eq!(fleet.plan_compiles(), 0);
+    let rep = fleet.report(1.0);
+    let shards: u64 = rep.devices.iter().map(|d| d.shards).sum();
+    assert!(shards >= 4, "multiple dispatches recorded shards: {rep:?}");
+}

@@ -1,0 +1,141 @@
+//! Golden ISA snapshot tests.
+//!
+//! Locks the encoded MINISA instruction stream for five suite GEMMs: any
+//! change to instruction encoding, lowering, or trace elision that silently
+//! alters the Fig. 12-style instruction-traffic numbers fails a diff here
+//! instead of passing review. The golden file stores, per workload, the
+//! instruction count, per-class counts, encoded byte length and an FNV-1a
+//! hash of the exact byte stream.
+//!
+//! Blessing protocol: if `tests/golden/isa_golden.txt` is missing, this test
+//! writes it (fresh checkouts and the toolchain-less authoring environment
+//! stay green) and the file should then be committed; once present, any
+//! mismatch is a hard failure. Regenerate intentionally with
+//! `UPDATE_GOLDEN=1 cargo test --test isa_golden`.
+
+use std::path::Path;
+
+use minisa::arch::ArchConfig;
+use minisa::isa::encode::Codec;
+use minisa::mapper::lower_gemm;
+use minisa::mapper::search::{search, MapperOptions};
+use minisa::workloads::{self, ntt, Gemm};
+
+const GOLDEN_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/isa_golden.txt");
+
+fn opts() -> MapperOptions {
+    // threads = 1 and the constrained layout search: fully deterministic
+    // decisions, so the lowered trace (and its bytes) is a pure function of
+    // (workload, config).
+    MapperOptions { full_layout_search: false, threads: 1, ..Default::default() }
+}
+
+/// Five suite GEMMs spanning every workload category. NTT entries are
+/// scaled to CI-sized transforms with the suite's own scaling rule (the
+/// name records the lineage), keeping the full M of the BConv/LLM rows.
+fn golden_workloads() -> Vec<Gemm> {
+    let suite = workloads::suite50();
+    let pick = |name: &str| -> Gemm {
+        suite.iter().find(|g| g.name == name).unwrap_or_else(|| panic!("suite entry {name}")).clone()
+    };
+    vec![
+        pick("bconv_00"),
+        pick("bconv_40"),
+        ntt::scaled(&pick("fhe_ntt_1024"), 128),
+        ntt::scaled(&pick("zkp_ntt_8192"), 128),
+        pick("gpt_oss_64x2048"),
+    ]
+}
+
+fn fnv64(bytes: &[u8]) -> u64 {
+    bytes
+        .iter()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, &b| (h ^ b as u64).wrapping_mul(0x100_0000_01b3))
+}
+
+/// Lower + encode every golden workload and render the snapshot lines.
+fn snapshot() -> String {
+    let cfg = ArchConfig::paper(4, 4);
+    let codec = Codec::new(&cfg);
+    let o = opts();
+    let mut lines = vec![
+        "# Golden MINISA traces: cfg paper(4,4), constrained layout search, 1 thread."
+            .to_string(),
+        "# Regenerate intentionally: UPDATE_GOLDEN=1 cargo test --test isa_golden".to_string(),
+    ];
+    for g in golden_workloads() {
+        let d = search(&cfg, &g, &o)
+            .unwrap_or_else(|| panic!("{} must map feasibly on paper(4,4)", g.name));
+        let prog = lower_gemm(&cfg, &g, &d.choice, d.i_order, d.w_order, d.o_order);
+        let bytes = codec.encode_all(&prog.trace.insts).expect("golden trace encodes");
+        // Encoding must be deterministic before it can be golden.
+        assert_eq!(bytes, codec.encode_all(&prog.trace.insts).unwrap(), "{}", g.name);
+        let (layout, exec, mem, act) = prog.trace.class_counts();
+        assert_eq!(layout + exec + mem + act, prog.trace.len(), "{}: class counts", g.name);
+        lines.push(format!(
+            "name={} m={} k={} n={} insts={} layout={} exec={} mem={} act={} bytes={} fnv={:016x}",
+            g.name,
+            g.m,
+            g.k,
+            g.n,
+            prog.trace.len(),
+            layout,
+            exec,
+            mem,
+            act,
+            bytes.len(),
+            fnv64(&bytes),
+        ));
+    }
+    lines.join("\n") + "\n"
+}
+
+#[test]
+// These lower full-size suite rows (M=65536 BConv, 2048×64×2048 GPT-oss),
+// which is release-profile work; the dedicated CI step runs this test
+// binary with `--release`, so skip it in the debug `cargo test -q` pass
+// rather than paying the unoptimized lowering twice.
+#[cfg_attr(debug_assertions, ignore = "full-size lowering: run via `cargo test --release --test isa_golden`")]
+fn golden_isa_snapshot_matches() {
+    let current = snapshot();
+    let path = Path::new(GOLDEN_PATH);
+    let bless = std::env::var_os("UPDATE_GOLDEN").is_some();
+    match std::fs::read_to_string(path) {
+        Ok(prev) if !bless => {
+            assert_eq!(
+                prev, current,
+                "\nencoded MINISA traces changed — instruction-traffic numbers (Fig. 12) \
+                 shifted.\nIf intentional, regenerate with: UPDATE_GOLDEN=1 cargo test \
+                 --test isa_golden\nand commit rust/tests/golden/isa_golden.txt"
+            );
+        }
+        _ => {
+            std::fs::create_dir_all(path.parent().unwrap()).expect("create tests/golden");
+            std::fs::write(path, &current).expect("write golden snapshot");
+            eprintln!(
+                "isa_golden: wrote fresh snapshot to {} — commit it to lock encoded traces",
+                path.display()
+            );
+        }
+    }
+}
+
+/// The encoded golden streams decode back to the exact instruction
+/// sequences (byte-level lock above, structural lock here).
+#[test]
+#[cfg_attr(debug_assertions, ignore = "full-size lowering: run via `cargo test --release --test isa_golden`")]
+fn golden_traces_roundtrip_through_codec() {
+    let cfg = ArchConfig::paper(4, 4);
+    let codec = Codec::new(&cfg);
+    let o = opts();
+    for g in golden_workloads() {
+        let d = search(&cfg, &g, &o).unwrap();
+        let prog = lower_gemm(&cfg, &g, &d.choice, d.i_order, d.w_order, d.o_order);
+        let bytes = codec.encode_all(&prog.trace.insts).unwrap();
+        let decoded = codec.decode_n(&bytes, prog.trace.insts.len()).expect("decodes");
+        assert_eq!(decoded, prog.trace.insts, "{}: decode(encode(t)) == t", g.name);
+        // Byte count agrees with the bit-exact width model.
+        let bits: u64 = prog.trace.insts.iter().map(|i| codec.width_bits(i) as u64).sum();
+        assert_eq!(bytes.len() as u64, bits.div_ceil(8), "{}: width model", g.name);
+    }
+}
