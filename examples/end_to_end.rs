@@ -25,10 +25,12 @@
 //! ```
 
 use minisa::arch::ArchConfig;
+use minisa::arith::{encode_words, ElemType};
+use minisa::artifact::WeightsPayload;
 use minisa::coordinator::{evaluate_suite, summarize_by_config};
 use minisa::functional::{naive_gemm, FunctionalSim};
 use minisa::mapper::chain::Chain;
-use minisa::mapper::search::MapperOptions;
+use minisa::mapper::search::{searches_run, MapperOptions};
 use minisa::program::Program;
 use minisa::report::{eng, f2, pct, Table};
 use minisa::runtime::{gemm_via_tiles, Runtime};
@@ -85,6 +87,40 @@ fn main() -> anyhow::Result<()> {
          wave plans, 0 runtime plan compiles ✓",
         sim_out.len(),
         program.plan_count()
+    );
+
+    // ------------------------------------------------------------------
+    // Stage 3b: the deployable artifact — the encoded instruction stream
+    // as the canonical program. Compile → save → load in-place; the loaded
+    // program must execute bit-identically with ZERO mapper runs.
+    let payload = WeightsPayload {
+        elem: ElemType::I32,
+        weights: weights.iter().map(|w| encode_words::<i32>(w)).collect(),
+    };
+    let artifact = program
+        .to_artifact(Some(payload))
+        .map_err(|e| anyhow::anyhow!("artifact build: {e}"))?;
+    let art_path = std::env::temp_dir().join("minisa_end_to_end.minisa");
+    let container_bytes = artifact.to_bytes();
+    std::fs::write(&art_path, &container_bytes)?;
+    let loaded_art = minisa::artifact::Artifact::load(&art_path)
+        .map_err(|e| anyhow::anyhow!("artifact load: {e}"))?;
+    let searches_before = searches_run();
+    let loaded = Program::from_artifact(&loaded_art)
+        .map_err(|e| anyhow::anyhow!("artifact → program: {e}"))?;
+    anyhow::ensure!(searches_run() == searches_before, "artifact load ran the mapper");
+    let mut sim2 = FunctionalSim::new(&cfg);
+    let loaded_out = loaded
+        .execute_i32(&mut sim2, &input, &weights)
+        .map_err(|e| anyhow::anyhow!("loaded program: {e}"))?;
+    anyhow::ensure!(loaded_out == sim_out, "loaded program diverges from compiled program");
+    anyhow::ensure!(sim2.plan_compiles == 0, "loaded program compiled plans at runtime");
+    std::fs::remove_file(&art_path).ok();
+    println!(
+        "[3b] artifact: {} B container ({} B encoded trace) saved, loaded back with byte \
+         fidelity verified, 0 mapper runs, bit-identical execution ✓",
+        container_bytes.len(),
+        artifact.trace_bytes.len(),
     );
 
     // ------------------------------------------------------------------

@@ -163,6 +163,7 @@ fn main() {
     }
 
     bench_arith();
+    bench_artifact();
 }
 
 /// `arith` hot path: the Montgomery mul-accumulate inner loop (what
@@ -238,5 +239,96 @@ fn bench_arith() {
     match alog.write_json("BENCH_arith.json") {
         Ok(()) => println!("wrote BENCH_arith.json"),
         Err(e) => eprintln!("failed to write BENCH_arith.json: {e}"),
+    }
+}
+
+/// Artifact axis (EXPERIMENTS.md §Artifacts): the paper's
+/// instruction-traffic reduction, measured on the *deployable* form —
+/// `.minisa` container bytes (checksummed, with decisions) vs the
+/// micro-instruction baseline bytes across one suite row per category —
+/// plus the compile-once/load-everywhere timing split
+/// (`Program::compile` vs `Artifact::load + Program::from_artifact`).
+/// Emits `BENCH_artifact.json`.
+fn bench_artifact() {
+    use minisa::arith::ElemType;
+    use minisa::artifact::{Artifact, Compiler};
+    use minisa::mapper::chain::Chain;
+    use minisa::program::Program;
+    use minisa::workloads::{self, ntt};
+
+    println!("\n--- artifact: container bytes vs micro-instruction baseline ---");
+    let mut alog = BenchLog::new();
+    let cfg = ArchConfig::paper(16, 64);
+    let o = MapperOptions { full_layout_search: false, threads: 1, ..Default::default() };
+
+    // One representative row per Table IV category (NTTs at suite scale for
+    // the byte axis; functional execution is not involved).
+    let suite = workloads::suite50();
+    let pick = |name: &str| suite.iter().find(|g| g.name == name).unwrap().clone();
+    for g in [pick("bconv_00"), pick("fhe_ntt_1024"), pick("zkp_ntt_8192"), pick("gpt_oss_64x2048")]
+    {
+        let d = search(&cfg, &g, &o).unwrap_or_else(|| panic!("{} maps on 16x64", g.name));
+        let lowered = lower_gemm(&cfg, &g, &d.choice, d.i_order, d.w_order, d.o_order);
+        let chain = Chain { layers: vec![g.clone()] };
+        let art = Compiler::new(&cfg).options(o.clone()).compile(&chain).expect("compiles");
+        let container = art.to_bytes().len() as f64;
+        let micro = lowered.micro_bytes() as f64;
+        let reduction = micro / container;
+        println!(
+            "  {}: container {} B (trace {} B) vs micro {} B → {reduction:.1}x as-deployed",
+            g.name,
+            container,
+            art.trace_bytes.len(),
+            micro
+        );
+        alog.metric(&format!("artifact_container_bytes_{}", g.name), container);
+        alog.metric(&format!("artifact_trace_bytes_{}", g.name), art.trace_bytes.len() as f64);
+        alog.metric(&format!("micro_bytes_{}", g.name), micro);
+        alog.metric(&format!("artifact_vs_micro_reduction_{}", g.name), reduction);
+    }
+
+    // Compile-once/load-everywhere: mapper-run compile vs artifact load
+    // (decode + deterministic re-lowering + plan recompilation) on a
+    // 3-layer chain with an attached weights payload.
+    {
+        let ccfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("bench_load", 32, &[40, 88, 24]);
+        let mut rng = Lcg::new(0xA57);
+        let weights: Vec<Vec<u64>> = chain
+            .layers
+            .iter()
+            .map(|g| ElemType::I32.sample_words(&mut rng, g.k * g.n))
+            .collect();
+        let (_, t_compile) = alog.bench("artifact/compile 3-layer chain @4x4", 1, 10, || {
+            Program::compile(&ccfg, &chain, &o).unwrap()
+        });
+        let art =
+            Compiler::new(&ccfg).options(o.clone()).weights(weights).compile(&chain).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("minisa_bench_{}.minisa", std::process::id()));
+        art.save(&path).unwrap();
+        let (loaded, t_load) = alog.bench("artifact/load 3-layer chain @4x4", 1, 10, || {
+            let a = Artifact::load(&path).unwrap();
+            Program::from_artifact(&a).unwrap()
+        });
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.fused.len(), art.inst_count, "loaded stream intact");
+        let speedup = t_compile.median_ns / t_load.median_ns;
+        println!("  load vs compile: {speedup:.1}x faster (zero mapper runs on load)");
+        alog.metric("artifact_compile_median_ms", t_compile.median_ns / 1e6);
+        alog.metric("artifact_load_median_ms", t_load.median_ns / 1e6);
+        alog.metric("artifact_load_vs_compile_speedup", speedup);
+        // NTT scaling entry: sanity that the scaled suite path also ships.
+        let zkp = ntt::scaled(&pick("zkp_ntt_8192"), 64);
+        let zart = Compiler::new(&ccfg)
+            .options(o.clone())
+            .compile(&Chain { layers: vec![zkp] })
+            .unwrap();
+        alog.metric("artifact_container_bytes_zkp_ntt_64_scaled", zart.to_bytes().len() as f64);
+    }
+
+    match alog.write_json("BENCH_artifact.json") {
+        Ok(()) => println!("wrote BENCH_artifact.json"),
+        Err(e) => eprintln!("failed to write BENCH_artifact.json: {e}"),
     }
 }

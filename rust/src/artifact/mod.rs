@@ -1,0 +1,935 @@
+//! Deployable **`.minisa` artifacts** — the encoded instruction stream as
+//! the canonical program.
+//!
+//! The paper's headline result is that MINISA's encoded trace *is* the
+//! minimal off-chip artifact (35×–4·10⁵× less instruction traffic than
+//! micro-control, Fig. 12), so the compiled form a serving fleet ships
+//! around should be exactly that byte stream — not an in-memory struct that
+//! every process re-derives with its own mapper run. An [`Artifact`] is a
+//! versioned binary container whose payload is the **encoded** fused MINISA
+//! trace (via [`Codec`]), together with everything a loader needs to turn
+//! those bytes back into an executable [`Program`](crate::program::Program)
+//! without ever running the mapper:
+//!
+//! * the full [`ArchConfig`] it was compiled for (plus a fingerprint for
+//!   cheap compatibility checks),
+//! * the chain spec and the per-layer [`ChainDecision`] (mapping choices +
+//!   layout orders + performance reports — the mapper's *output*, so the
+//!   loader replays deterministic lowering, never the search),
+//! * the §IV-G2 elision accounting,
+//! * an optional resident-weights payload (canonical datapath words +
+//!   [`ElemType`] — one format covers i32/f32 and the prime fields),
+//! * an FNV-1a checksum over the whole container.
+//!
+//! The split mirrors VTA's stack (compile a deployable module once, JIT-load
+//! it everywhere): [`Compiler`] is the front-end
+//! (`Compiler::new(cfg).options(..).elem(..).compile(chain) → Artifact`),
+//! `Program::from_artifact` is the back-end — it **decodes the instruction
+//! stream back** into the executable trace ([`Codec::decode_stream`]),
+//! recompiles the wave plans locally, and proves byte-level round-trip
+//! fidelity on every load (decoded stream ≡ deterministic re-lowering ≡
+//! stored bytes). See `docs/ARTIFACT.md` for the wire format.
+
+use std::fmt;
+use std::path::Path;
+
+use crate::arch::config::{ArchConfig, HwGen};
+use crate::arith::ElemType;
+use crate::isa::encode::{Codec, EncodeError};
+use crate::isa::Trace;
+use crate::mapper::chain::{Chain, ChainDecision};
+use crate::mapper::search::MapperOptions;
+use crate::mapper::{Decision, MappingChoice};
+use crate::mapping::Dataflow;
+use crate::perf::PerfReport;
+use crate::program::Program;
+use crate::workloads::Gemm;
+
+/// Container magic ("MINISA artifact").
+pub const MAGIC: [u8; 8] = *b"MINISArt";
+/// Wire-format version this build writes and the only one it reads.
+/// Compatibility rule (docs/ARTIFACT.md): readers reject other versions —
+/// recompile rather than guess at a foreign layout.
+pub const VERSION: u16 = 1;
+
+/// FNV-1a 64-bit hash — the container checksum and the arch fingerprint.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    bytes
+        .iter()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, &b| (h ^ b as u64).wrapping_mul(0x100_0000_01b3))
+}
+
+/// Everything that can go wrong building, parsing or loading an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArtifactError {
+    /// The file does not start with [`MAGIC`].
+    BadMagic,
+    /// Unsupported wire-format version.
+    BadVersion { found: u16, supported: u16 },
+    /// The container ends before a declared field.
+    Truncated,
+    /// Structurally invalid contents (checksum mismatch, bad tags, shape
+    /// violations) — the container cannot be trusted.
+    Corrupt(String),
+    /// A well-formed container that contradicts itself or the loader's
+    /// environment (decoded stream vs re-lowering, config mismatch).
+    Mismatch(String),
+    /// The instruction stream failed to encode/decode.
+    Encode(EncodeError),
+    /// `Compiler::compile` found no feasible mapping for the chain.
+    Infeasible,
+    /// Filesystem failure on save/load.
+    Io(String),
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::BadMagic => write!(f, "not a .minisa artifact (bad magic)"),
+            ArtifactError::BadVersion { found, supported } => {
+                write!(f, "artifact version {found} unsupported (this build reads {supported})")
+            }
+            ArtifactError::Truncated => write!(f, "truncated artifact container"),
+            ArtifactError::Corrupt(m) => write!(f, "corrupt artifact: {m}"),
+            ArtifactError::Mismatch(m) => write!(f, "artifact mismatch: {m}"),
+            ArtifactError::Encode(e) => write!(f, "instruction stream: {e}"),
+            ArtifactError::Infeasible => write!(f, "no feasible mapping for the chain"),
+            ArtifactError::Io(m) => write!(f, "artifact io: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+impl From<EncodeError> for ArtifactError {
+    fn from(e: EncodeError) -> Self {
+        ArtifactError::Encode(e)
+    }
+}
+
+/// Resident weights shipped inside an artifact: one canonical-word matrix
+/// per chain layer, in `elem`'s [`crate::arith::Element::encode`] format.
+/// One representation covers every backend (f32 stores IEEE bits, fields
+/// store canonical residues), so a serving host can register the session
+/// without knowing the number system in advance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightsPayload {
+    pub elem: ElemType,
+    pub weights: Vec<Vec<u64>>,
+}
+
+/// A parsed `.minisa` container. The **encoded trace bytes are the canonical
+/// program**; everything else exists so a loader can rebuild the executable
+/// form (and verify the bytes) without a mapper run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Artifact {
+    /// Architecture the stream was encoded for (field widths derive from it).
+    pub cfg: ArchConfig,
+    /// The model chain the program computes.
+    pub chain: Chain,
+    /// The chain-aware mapper's output: per-layer decisions + elision
+    /// accounting (`elided`, `fused_bytes`, `standalone_bytes`,
+    /// `total_cycles`).
+    pub decision: ChainDecision,
+    /// Layer boundaries of the fused trace (instruction indices).
+    pub layer_starts: Vec<usize>,
+    /// Number of instructions in the encoded stream.
+    pub inst_count: usize,
+    /// The program itself: the fused MINISA trace, bit-packed by [`Codec`].
+    pub trace_bytes: Vec<u8>,
+    /// Optional resident weights (+ element type) for serving.
+    pub payload: Option<WeightsPayload>,
+}
+
+/// What [`Artifact::verify`] proved about the stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactCheck {
+    /// Instructions decoded from the stream.
+    pub insts: usize,
+    /// (config-only, compute-trigger, memory, activation) counts.
+    pub classes: (usize, usize, usize, usize),
+    /// Encoded stream length in bytes.
+    pub trace_bytes: usize,
+    /// FNV-1a of the encoded stream.
+    pub trace_fnv: u64,
+}
+
+impl Artifact {
+    /// Fingerprint of the architecture section — two artifacts (or an
+    /// artifact and a server) are stream-compatible iff these agree, since
+    /// every ISA field width derives from the config.
+    pub fn fingerprint(&self) -> u64 {
+        arch_fingerprint(&self.cfg)
+    }
+
+    /// Decode the canonical stream back into an executable [`Trace`]
+    /// (instructions + layer boundaries), including the implicit layout
+    /// VN-size rehydration ([`Codec::decode_stream`]).
+    pub fn decode_trace(&self) -> Result<Trace, ArtifactError> {
+        let codec = Codec::new(&self.cfg);
+        let insts = codec.decode_stream(&self.trace_bytes, self.inst_count)?;
+        Ok(Trace::from_insts(insts, self.layer_starts.clone()))
+    }
+
+    /// Prove the stream round-trips at the byte level: decode every
+    /// instruction and re-encode; the bytes must be identical. Returns the
+    /// per-class accounting for reporting (`minisa inspect`).
+    pub fn verify(&self) -> Result<ArtifactCheck, ArtifactError> {
+        let trace = self.decode_trace()?;
+        let codec = Codec::new(&self.cfg);
+        let reencoded = codec.encode_all(&trace.insts)?;
+        if reencoded != self.trace_bytes {
+            return Err(ArtifactError::Mismatch(
+                "decoded stream does not re-encode to the stored bytes".into(),
+            ));
+        }
+        Ok(ArtifactCheck {
+            insts: trace.len(),
+            classes: trace.class_counts(),
+            trace_bytes: self.trace_bytes.len(),
+            trace_fnv: fnv64(&self.trace_bytes),
+        })
+    }
+
+    /// Serialize to the container wire format (docs/ARTIFACT.md).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::default();
+        w.raw(&MAGIC);
+        w.u16(VERSION);
+        let mut arch = ByteWriter::default();
+        write_arch(&mut arch, &self.cfg);
+        w.u64(fnv64(&arch.bytes));
+        w.u32(arch.bytes.len() as u32);
+        w.raw(&arch.bytes);
+        // Chain spec.
+        w.u32(self.chain.layers.len() as u32);
+        for g in &self.chain.layers {
+            w.str(&g.name);
+            w.str(&g.category);
+            w.u64(g.m as u64);
+            w.u64(g.k as u64);
+            w.u64(g.n as u64);
+        }
+        // Per-layer decisions.
+        for d in &self.decision.per_layer {
+            write_decision(&mut w, d);
+        }
+        // Elision accounting.
+        w.u64(self.decision.elided as u64);
+        w.u64(self.decision.fused_bytes);
+        w.u64(self.decision.standalone_bytes);
+        w.f64(self.decision.total_cycles);
+        // The canonical program: the encoded stream.
+        w.u32(self.inst_count as u32);
+        w.u32(self.layer_starts.len() as u32);
+        for &s in &self.layer_starts {
+            w.u32(s as u32);
+        }
+        w.u32(self.trace_bytes.len() as u32);
+        w.raw(&self.trace_bytes);
+        // Optional weights payload.
+        match &self.payload {
+            None => w.u8(0),
+            Some(p) => {
+                w.u8(1);
+                w.u8(elem_tag(p.elem));
+                for m in &p.weights {
+                    w.u32(m.len() as u32);
+                    for &word in m {
+                        w.u64(word);
+                    }
+                }
+            }
+        }
+        let checksum = fnv64(&w.bytes);
+        w.u64(checksum);
+        w.bytes
+    }
+
+    /// Parse and validate a container: magic, version, arch fingerprint,
+    /// checksum, and every structural invariant (chain validity, decision
+    /// count, layer-start monotonicity, payload shapes).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Artifact, ArtifactError> {
+        if bytes.len() < MAGIC.len() + 2 + 8 || bytes[..MAGIC.len()] != MAGIC {
+            if bytes.len() >= MAGIC.len() && bytes[..MAGIC.len()] != MAGIC {
+                return Err(ArtifactError::BadMagic);
+            }
+            return Err(ArtifactError::Truncated);
+        }
+        // Checksum covers everything before the final 8 bytes.
+        let body_len = bytes.len() - 8;
+        let stored = u64::from_le_bytes(bytes[body_len..].try_into().unwrap());
+        if fnv64(&bytes[..body_len]) != stored {
+            return Err(ArtifactError::Corrupt("checksum mismatch".into()));
+        }
+        let mut r = ByteReader { bytes: &bytes[..body_len], pos: MAGIC.len() };
+        let version = r.u16()?;
+        if version != VERSION {
+            return Err(ArtifactError::BadVersion { found: version, supported: VERSION });
+        }
+        let fingerprint = r.u64()?;
+        let arch_len = r.u32()? as usize;
+        let arch_bytes = r.raw(arch_len)?;
+        if fnv64(arch_bytes) != fingerprint {
+            return Err(ArtifactError::Corrupt("arch fingerprint mismatch".into()));
+        }
+        let cfg = read_arch(&mut ByteReader { bytes: arch_bytes, pos: 0 })?;
+        let n_layers = r.u32()? as usize;
+        if n_layers == 0 {
+            return Err(ArtifactError::Corrupt("zero-layer chain".into()));
+        }
+        // Capacity hints are capped: a lying length field must fail on
+        // truncated reads, not on an absurd up-front allocation.
+        let mut layers = Vec::with_capacity(n_layers.min(1024));
+        for _ in 0..n_layers {
+            let name = r.str()?;
+            let category = r.str()?;
+            let m = r.u64()? as usize;
+            let k = r.u64()? as usize;
+            let n = r.u64()? as usize;
+            layers.push(Gemm::new(&name, &category, m, k, n));
+        }
+        let chain = Chain { layers };
+        chain.validate().map_err(ArtifactError::Corrupt)?;
+        let per_layer: Vec<Decision> =
+            (0..n_layers).map(|_| read_decision(&mut r)).collect::<Result<_, _>>()?;
+        bound_lowering_work(&cfg, &chain, &per_layer)?;
+        let elided = r.u64()? as usize;
+        let fused_bytes = r.u64()?;
+        let standalone_bytes = r.u64()?;
+        let total_cycles = r.f64()?;
+        let inst_count = r.u32()? as usize;
+        let n_starts = r.u32()? as usize;
+        if n_starts != n_layers {
+            return Err(ArtifactError::Corrupt(format!(
+                "{n_starts} layer starts for {n_layers} layers"
+            )));
+        }
+        let mut layer_starts = Vec::with_capacity(n_starts.min(1024));
+        for _ in 0..n_starts {
+            layer_starts.push(r.u32()? as usize);
+        }
+        if layer_starts.windows(2).any(|w| w[0] > w[1])
+            || layer_starts.last().is_some_and(|&s| s > inst_count)
+            || layer_starts.first().is_some_and(|&s| s != 0)
+        {
+            return Err(ArtifactError::Corrupt("layer starts out of order".into()));
+        }
+        let trace_len = r.u32()? as usize;
+        let trace_bytes = r.raw(trace_len)?.to_vec();
+        let payload = match r.u8()? {
+            0 => None,
+            1 => {
+                let elem = elem_from_tag(r.u8()?)?;
+                let mut weights = Vec::with_capacity(n_layers);
+                for g in &chain.layers {
+                    let len = r.u32()? as usize;
+                    if len != g.k * g.n {
+                        return Err(ArtifactError::Corrupt(format!(
+                            "layer {} weight payload is {len} words, expected {}×{}",
+                            g.name, g.k, g.n
+                        )));
+                    }
+                    let mut m = Vec::with_capacity(len.min(1 << 20));
+                    for _ in 0..len {
+                        m.push(r.u64()?);
+                    }
+                    weights.push(m);
+                }
+                Some(WeightsPayload { elem, weights })
+            }
+            t => return Err(ArtifactError::Corrupt(format!("bad payload flag {t}"))),
+        };
+        if r.pos != r.bytes.len() {
+            return Err(ArtifactError::Corrupt(format!(
+                "{} trailing bytes after payload",
+                r.bytes.len() - r.pos
+            )));
+        }
+        let decision = ChainDecision {
+            per_layer,
+            total_cycles,
+            elided,
+            fused_bytes,
+            standalone_bytes,
+        };
+        Ok(Artifact { cfg, chain, decision, layer_starts, inst_count, trace_bytes, payload })
+    }
+
+    /// Write the container to a file. Validates the payload shape first so
+    /// a hand-assembled `Artifact` (every field is public) fails *here*
+    /// with a descriptive error instead of producing a file whose payload
+    /// section can never parse (`from_bytes` reads exactly one `k·n`
+    /// matrix per chain layer).
+    pub fn save(&self, path: &Path) -> Result<(), ArtifactError> {
+        if let Some(p) = &self.payload {
+            validate_payload_dims(&self.chain, &p.weights)?;
+        }
+        std::fs::write(path, self.to_bytes())
+            .map_err(|e| ArtifactError::Io(format!("{}: {e}", path.display())))
+    }
+
+    /// Read and validate a container from a file.
+    pub fn load(path: &Path) -> Result<Artifact, ArtifactError> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| ArtifactError::Io(format!("{}: {e}", path.display())))?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+/// Fingerprint of an [`ArchConfig`]: FNV over its serialized arch section.
+pub fn arch_fingerprint(cfg: &ArchConfig) -> u64 {
+    let mut w = ByteWriter::default();
+    write_arch(&mut w, cfg);
+    fnv64(&w.bytes)
+}
+
+/// Largest tensor extent a container may declare (16.7M — generous beyond
+/// every Table IV shape, small enough that crafted dims can't turn the
+/// loader's deterministic re-lowering into an unbounded loop).
+const MAX_DIM: usize = 1 << 24;
+/// Cap on the estimated lowering work (output-tiles × invocations) per
+/// layer. Real suite traces stay orders of magnitude below this.
+const MAX_LOWERING_UNITS: u64 = 1 << 24;
+
+/// Reject containers whose chain/decisions would make the loader's
+/// deterministic re-lowering (`Program::from_artifact` → `lower_gemm`)
+/// loop or allocate without bound. The checksum only proves integrity, not
+/// honesty — FNV is trivially recomputable — so a crafted file with
+/// `m = 2^48, m_t = 1` must fail *here*, before any lowering runs.
+pub(crate) fn bound_lowering_work(
+    cfg: &ArchConfig,
+    chain: &Chain,
+    decisions: &[Decision],
+) -> Result<(), ArtifactError> {
+    for (g, d) in chain.layers.iter().zip(decisions) {
+        if g.m > MAX_DIM || g.k > MAX_DIM || g.n > MAX_DIM {
+            return Err(ArtifactError::Corrupt(format!(
+                "layer {} extents {}×{}×{} exceed the {MAX_DIM} cap",
+                g.name, g.m, g.k, g.n
+            )));
+        }
+        let c = &d.choice;
+        // Zero knobs would divide-by-zero below (and panic lowering later);
+        // `read_decision` rejects them at parse, but hand-assembled
+        // in-memory artifacts reach here without passing through it.
+        if c.vn == 0 || c.m_t == 0 || c.k_t == 0 || c.n_t == 0 || c.nbc == 0 || c.dup == 0 {
+            return Err(ArtifactError::Corrupt(format!(
+                "layer {} has a zero-sized mapping choice",
+                g.name
+            )));
+        }
+        if c.vn > cfg.ah || c.nbc > cfg.aw || c.dup > cfg.aw {
+            return Err(ArtifactError::Corrupt(format!(
+                "layer {} mapping knobs (vn {}, nbc {}, dup {}) exceed the {} array",
+                g.name,
+                c.vn,
+                c.nbc,
+                c.dup,
+                cfg.name()
+            )));
+        }
+        // Upper bound on lower_gemm's loop structure: output tiles ×
+        // k-tiles × invocations per k-tile (max tile extents, so edge
+        // tiles are over- not under-counted).
+        let (ms, ks, ns) = crate::mapper::lower::search_dims(g, c.df);
+        let tiles = (ms.div_ceil(c.m_t) as u64)
+            .saturating_mul(ns.div_ceil(c.n_t) as u64)
+            .saturating_mul(ks.div_ceil(c.k_t) as u64);
+        let rows_active = c.vn.min(cfg.ah).max(1);
+        let period = (c.nbc * c.dup).min(cfg.aw).max(1);
+        let kgc = (cfg.aw / period).max(1);
+        let nbt = c.n_t.min(ns.max(1)).div_ceil(rows_active);
+        let kgt = c.k_t.min(ks.max(1)).div_ceil(c.vn.max(1));
+        let inv_per_ktile =
+            (nbt.div_ceil(c.nbc.max(1)) as u64).saturating_mul(kgt.div_ceil(kgc) as u64);
+        if tiles.saturating_mul(inv_per_ktile.max(1)) > MAX_LOWERING_UNITS {
+            return Err(ArtifactError::Corrupt(format!(
+                "layer {} demands more than {MAX_LOWERING_UNITS} lowering units",
+                g.name
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// One weight-word matrix per layer, each `k·n` words — the payload-shape
+/// rule, shared by [`Compiler::compile`] (fail fast, before the mapper run)
+/// and `Program::to_artifact` (the payload actually packaged).
+pub(crate) fn validate_payload_dims(
+    chain: &Chain,
+    weights: &[Vec<u64>],
+) -> Result<(), ArtifactError> {
+    if weights.len() != chain.layers.len() {
+        return Err(ArtifactError::Mismatch(format!(
+            "chain has {} layers, got {} weight matrices",
+            chain.layers.len(),
+            weights.len()
+        )));
+    }
+    for (g, w) in chain.layers.iter().zip(weights) {
+        if w.len() != g.k * g.n {
+            return Err(ArtifactError::Mismatch(format!(
+                "layer {} weight is {} words, expected {}×{}",
+                g.name,
+                w.len(),
+                g.k,
+                g.n
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Builder front-end of the compile/serve split:
+/// `Compiler::new(cfg).options(..).elem(..).weights(..).compile(chain)`
+/// runs the chain-aware mapper exactly once and emits the deployable
+/// [`Artifact`]. Defaults to the serving stack's deterministic profile
+/// (constrained layout search, one thread) so identical inputs produce
+/// byte-identical artifacts; override with [`Compiler::options`].
+#[derive(Debug, Clone)]
+pub struct Compiler {
+    cfg: ArchConfig,
+    opts: MapperOptions,
+    elem: ElemType,
+    weights: Option<Vec<Vec<u64>>>,
+}
+
+impl Compiler {
+    pub fn new(cfg: &ArchConfig) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            opts: MapperOptions { full_layout_search: false, threads: 1, ..Default::default() },
+            elem: ElemType::I32,
+            weights: None,
+        }
+    }
+
+    /// Override the mapper options (e.g. the full layout search).
+    pub fn options(mut self, opts: MapperOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Element type the attached weights (and the serving session) use.
+    pub fn elem(mut self, elem: ElemType) -> Self {
+        self.elem = elem;
+        self
+    }
+
+    /// Attach resident weights: one canonical-word matrix per chain layer,
+    /// encoded for the backend set via [`Compiler::elem`].
+    pub fn weights(mut self, weights: Vec<Vec<u64>>) -> Self {
+        self.weights = Some(weights);
+        self
+    }
+
+    /// Compile a chain into an artifact (the only mapper run in the
+    /// artifact's life).
+    pub fn compile(&self, chain: &Chain) -> Result<Artifact, ArtifactError> {
+        chain.validate().map_err(ArtifactError::Mismatch)?;
+        if let Some(ws) = &self.weights {
+            validate_payload_dims(chain, ws)?;
+        }
+        let program =
+            Program::compile(&self.cfg, chain, &self.opts).ok_or(ArtifactError::Infeasible)?;
+        let payload = self
+            .weights
+            .clone()
+            .map(|weights| WeightsPayload { elem: self.elem, weights });
+        program.to_artifact(payload)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire primitives (little-endian, length-prefixed strings).
+
+#[derive(Default)]
+struct ByteWriter {
+    bytes: Vec<u8>,
+}
+
+impl ByteWriter {
+    fn raw(&mut self, b: &[u8]) {
+        self.bytes.extend_from_slice(b);
+    }
+    fn u8(&mut self, v: u8) {
+        self.bytes.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.raw(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.raw(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.raw(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.raw(s.as_bytes());
+    }
+}
+
+struct ByteReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn raw(&mut self, n: usize) -> Result<&'a [u8], ArtifactError> {
+        let end = self.pos.checked_add(n).ok_or(ArtifactError::Truncated)?;
+        if end > self.bytes.len() {
+            return Err(ArtifactError::Truncated);
+        }
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, ArtifactError> {
+        Ok(self.raw(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, ArtifactError> {
+        Ok(u16::from_le_bytes(self.raw(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, ArtifactError> {
+        Ok(u32::from_le_bytes(self.raw(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, ArtifactError> {
+        Ok(u64::from_le_bytes(self.raw(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, ArtifactError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn str(&mut self) -> Result<String, ArtifactError> {
+        let len = self.u32()? as usize;
+        String::from_utf8(self.raw(len)?.to_vec())
+            .map_err(|_| ArtifactError::Corrupt("non-UTF8 string".into()))
+    }
+}
+
+fn write_arch(w: &mut ByteWriter, cfg: &ArchConfig) {
+    w.u32(cfg.ah as u32);
+    w.u32(cfg.aw as u32);
+    w.u8(match cfg.gen {
+        HwGen::Feather => 0,
+        HwGen::FeatherPlus => 1,
+    });
+    w.u32(cfg.elem_bytes as u32);
+    w.u32(cfg.acc_bytes as u32);
+    w.u64(cfg.str_bytes as u64);
+    w.u64(cfg.sta_bytes as u64);
+    w.u64(cfg.ob_bytes as u64);
+    w.u64(cfg.instr_bytes as u64);
+    w.f64(cfg.instr_bw);
+    w.f64(cfg.data_bw_in);
+    w.f64(cfg.data_bw_out);
+    w.u64(cfg.hbm_bytes);
+    w.f64(cfg.clock_ghz);
+}
+
+fn read_arch(r: &mut ByteReader) -> Result<ArchConfig, ArtifactError> {
+    let ah = r.u32()? as usize;
+    let aw = r.u32()? as usize;
+    let gen = match r.u8()? {
+        0 => HwGen::Feather,
+        1 => HwGen::FeatherPlus,
+        t => return Err(ArtifactError::Corrupt(format!("bad hw generation tag {t}"))),
+    };
+    let cfg = ArchConfig {
+        ah,
+        aw,
+        gen,
+        elem_bytes: r.u32()? as usize,
+        acc_bytes: r.u32()? as usize,
+        str_bytes: r.u64()? as usize,
+        sta_bytes: r.u64()? as usize,
+        ob_bytes: r.u64()? as usize,
+        instr_bytes: r.u64()? as usize,
+        instr_bw: r.f64()?,
+        data_bw_in: r.f64()?,
+        data_bw_out: r.f64()?,
+        hbm_bytes: r.u64()?,
+        clock_ghz: r.f64()?,
+    };
+    cfg.validate().map_err(ArtifactError::Corrupt)?;
+    Ok(cfg)
+}
+
+fn write_decision(w: &mut ByteWriter, d: &Decision) {
+    w.u8(d.choice.df.bit() as u8);
+    w.u64(d.choice.vn as u64);
+    w.u64(d.choice.m_t as u64);
+    w.u64(d.choice.k_t as u64);
+    w.u64(d.choice.n_t as u64);
+    w.u64(d.choice.nbc as u64);
+    w.u64(d.choice.dup as u64);
+    w.u8(d.i_order);
+    w.u8(d.w_order);
+    w.u8(d.o_order);
+    let rep = &d.report;
+    w.f64(rep.total_cycles);
+    w.f64(rep.fetch_cycles);
+    w.f64(rep.load_in_cycles);
+    w.f64(rep.load_w_cycles);
+    w.f64(rep.compute_cycles);
+    w.f64(rep.out_stream_cycles);
+    w.f64(rep.store_out_cycles);
+    w.f64(rep.stall_instr_cycles);
+    w.f64(rep.stall_data_cycles);
+    w.u64(rep.macs_used);
+    w.u64(rep.tiles as u64);
+    w.u64(rep.peak_macs_per_cycle);
+}
+
+fn read_decision(r: &mut ByteReader) -> Result<Decision, ArtifactError> {
+    let df = Dataflow::from_bit(r.u8()? as u64);
+    let choice = MappingChoice {
+        df,
+        vn: r.u64()? as usize,
+        m_t: r.u64()? as usize,
+        k_t: r.u64()? as usize,
+        n_t: r.u64()? as usize,
+        nbc: r.u64()? as usize,
+        dup: r.u64()? as usize,
+    };
+    // Zero in any knob would panic deterministic lowering at load
+    // (`step_by(0)` / divide-by-zero) — reject as corrupt instead.
+    if choice.vn == 0
+        || choice.m_t == 0
+        || choice.k_t == 0
+        || choice.n_t == 0
+        || choice.nbc == 0
+        || choice.dup == 0
+    {
+        return Err(ArtifactError::Corrupt("zero-sized mapping choice".into()));
+    }
+    let i_order = r.u8()?;
+    let w_order = r.u8()?;
+    let o_order = r.u8()?;
+    if i_order > 5 || w_order > 5 || o_order > 5 {
+        return Err(ArtifactError::Corrupt("layout order id out of range".into()));
+    }
+    let report = PerfReport {
+        total_cycles: r.f64()?,
+        fetch_cycles: r.f64()?,
+        load_in_cycles: r.f64()?,
+        load_w_cycles: r.f64()?,
+        compute_cycles: r.f64()?,
+        out_stream_cycles: r.f64()?,
+        store_out_cycles: r.f64()?,
+        stall_instr_cycles: r.f64()?,
+        stall_data_cycles: r.f64()?,
+        macs_used: r.u64()?,
+        tiles: r.u64()? as usize,
+        peak_macs_per_cycle: r.u64()?,
+    };
+    Ok(Decision { choice, i_order, w_order, o_order, report })
+}
+
+/// Stable on-wire tag for an [`ElemType`] (wire compatibility demands these
+/// never change meaning; append only).
+fn elem_tag(e: ElemType) -> u8 {
+    match e {
+        ElemType::I32 => 0,
+        ElemType::F32 => 1,
+        ElemType::BabyBear => 2,
+        ElemType::Goldilocks => 3,
+        ElemType::Pallas => 4,
+    }
+}
+
+fn elem_from_tag(t: u8) -> Result<ElemType, ArtifactError> {
+    ElemType::ALL
+        .iter()
+        .copied()
+        .find(|&e| elem_tag(e) == t)
+        .ok_or_else(|| ArtifactError::Corrupt(format!("bad element-type tag {t}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Lcg;
+
+    fn small_artifact(weights: bool) -> Artifact {
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("art", 8, &[12, 16, 8]);
+        let mut c = Compiler::new(&cfg);
+        if weights {
+            let mut rng = Lcg::new(5);
+            let ws: Vec<Vec<u64>> = chain
+                .layers
+                .iter()
+                .map(|g| ElemType::I32.sample_words(&mut rng, g.k * g.n))
+                .collect();
+            c = c.weights(ws);
+        }
+        c.compile(&chain).unwrap()
+    }
+
+    #[test]
+    fn container_roundtrips_bytes_exactly() {
+        for weights in [false, true] {
+            let art = small_artifact(weights);
+            let bytes = art.to_bytes();
+            let back = Artifact::from_bytes(&bytes).unwrap();
+            assert_eq!(back, art);
+            assert_eq!(back.to_bytes(), bytes, "serialization is a fixed point");
+            assert_eq!(back.fingerprint(), art.fingerprint());
+        }
+    }
+
+    #[test]
+    fn verify_proves_stream_roundtrip() {
+        let art = small_artifact(false);
+        let check = art.verify().unwrap();
+        assert_eq!(check.insts, art.inst_count);
+        assert_eq!(check.trace_bytes, art.trace_bytes.len());
+        let (cfg_only, compute, memory, act) = check.classes;
+        assert_eq!(cfg_only + compute + memory + act, check.insts);
+        assert!(compute > 0);
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let art = small_artifact(true);
+        let path = std::env::temp_dir().join(format!("minisa_art_{}.minisa", std::process::id()));
+        art.save(&path).unwrap();
+        let loaded = Artifact::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded, art);
+    }
+
+    #[test]
+    fn tampering_is_detected() {
+        let art = small_artifact(true);
+        let bytes = art.to_bytes();
+        // Flip one bit anywhere in the body: checksum mismatch.
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        assert!(matches!(Artifact::from_bytes(&bad), Err(ArtifactError::Corrupt(_))));
+        // Truncation.
+        assert!(Artifact::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        // Wrong magic.
+        let mut nom = bytes.clone();
+        nom[0] = b'X';
+        assert!(matches!(Artifact::from_bytes(&nom), Err(ArtifactError::BadMagic)));
+        // Foreign version (patch both the field and the checksum).
+        let mut v2 = bytes.clone();
+        v2[8] = 0xFF;
+        let body = v2.len() - 8;
+        let ck = fnv64(&v2[..body]).to_le_bytes();
+        v2[body..].copy_from_slice(&ck);
+        assert!(matches!(
+            Artifact::from_bytes(&v2),
+            Err(ArtifactError::BadVersion { supported: VERSION, .. })
+        ));
+    }
+
+    /// Containers that declare absurd extents or mapping knobs are
+    /// rejected at parse, before any re-lowering could loop on them — the
+    /// checksum proves integrity, not honesty.
+    #[test]
+    fn unbounded_lowering_demands_rejected() {
+        let base = small_artifact(false);
+        // Huge tensor extents (kept chain-consistent so only the bound
+        // trips, not Chain::validate).
+        let mut huge = base.clone();
+        for g in &mut huge.chain.layers {
+            g.m = 1 << 30;
+        }
+        assert!(matches!(
+            Artifact::from_bytes(&huge.to_bytes()),
+            Err(ArtifactError::Corrupt(_))
+        ));
+        // Knobs beyond the array.
+        let mut knobs = base.clone();
+        knobs.decision.per_layer[0].choice.vn = knobs.cfg.ah + 1;
+        assert!(matches!(
+            Artifact::from_bytes(&knobs.to_bytes()),
+            Err(ArtifactError::Corrupt(_))
+        ));
+        // Unit tiles against a large-but-capped extent: lowering units blow
+        // the budget even though every dim is under MAX_DIM.
+        let mut units = base.clone();
+        for g in &mut units.chain.layers {
+            g.m = (1 << 24) - 1;
+        }
+        for d in &mut units.decision.per_layer {
+            d.choice.m_t = 1;
+            d.choice.n_t = 1;
+        }
+        assert!(matches!(
+            Artifact::from_bytes(&units.to_bytes()),
+            Err(ArtifactError::Corrupt(_))
+        ));
+        // The in-memory loader applies the same bound (public fields).
+        assert!(crate::program::Program::from_artifact(&huge).is_err());
+    }
+
+    /// `save` refuses a hand-assembled artifact whose payload shape could
+    /// never parse back, instead of writing a poisoned file.
+    #[test]
+    fn save_rejects_malformed_payload() {
+        let mut art = small_artifact(false);
+        art.payload =
+            Some(WeightsPayload { elem: ElemType::I32, weights: vec![vec![1, 2, 3]] });
+        let path =
+            std::env::temp_dir().join(format!("minisa_badpay_{}.minisa", std::process::id()));
+        let err = art.save(&path).unwrap_err();
+        assert!(matches!(err, ArtifactError::Mismatch(_)), "{err}");
+        assert!(!path.exists(), "no file written");
+    }
+
+    #[test]
+    fn compiler_validates_inputs() {
+        let cfg = ArchConfig::paper(4, 4);
+        // Invalid chain.
+        let bad = Chain {
+            layers: vec![Gemm::new("a", "t", 8, 8, 8), Gemm::new("b", "t", 8, 16, 8)],
+        };
+        assert!(matches!(
+            Compiler::new(&cfg).compile(&bad),
+            Err(ArtifactError::Mismatch(_))
+        ));
+        // Wrong weight count / shape.
+        let chain = Chain::mlp("c", 8, &[8, 8]);
+        assert!(Compiler::new(&cfg).weights(vec![]).compile(&chain).is_err());
+        assert!(Compiler::new(&cfg).weights(vec![vec![0; 7]]).compile(&chain).is_err());
+    }
+
+    #[test]
+    fn fingerprint_separates_configs() {
+        assert_ne!(
+            arch_fingerprint(&ArchConfig::paper(4, 4)),
+            arch_fingerprint(&ArchConfig::paper(4, 8))
+        );
+        assert_ne!(
+            arch_fingerprint(&ArchConfig::paper(4, 4)),
+            arch_fingerprint(&ArchConfig::paper(4, 4).as_feather())
+        );
+        assert_eq!(
+            arch_fingerprint(&ArchConfig::paper(8, 32)),
+            arch_fingerprint(&ArchConfig::paper(8, 32))
+        );
+    }
+
+    #[test]
+    fn elem_tags_are_stable_and_total() {
+        // Wire stability: these exact values are in shipped containers.
+        assert_eq!(elem_tag(ElemType::I32), 0);
+        assert_eq!(elem_tag(ElemType::F32), 1);
+        assert_eq!(elem_tag(ElemType::BabyBear), 2);
+        assert_eq!(elem_tag(ElemType::Goldilocks), 3);
+        assert_eq!(elem_tag(ElemType::Pallas), 4);
+        for e in ElemType::ALL {
+            assert_eq!(elem_from_tag(elem_tag(e)).unwrap(), e);
+        }
+        assert!(elem_from_tag(9).is_err());
+    }
+}

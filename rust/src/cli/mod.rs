@@ -7,13 +7,17 @@
 pub mod animate;
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use crate::arch::config::ArchConfig;
 use crate::arith::{decode_words, ElemType, Element};
+use crate::artifact::{Artifact, Compiler};
 use crate::coordinator::{compare_devices, evaluate_suite, summarize_by_config};
 use crate::functional::FunctionalSim;
-use crate::mapper::search::{search as mapper_search, MapperOptions};
+use crate::isa::encode::Codec;
+use crate::mapper::chain::Chain;
+use crate::mapper::search::{search as mapper_search, searches_run, MapperOptions};
+use crate::program::Program;
 use crate::report::{eng, f1, f2, pct, Table};
 use crate::with_element;
 use crate::workloads::{self, ntt, Gemm};
@@ -432,80 +436,56 @@ fn serving_executor(args: &Args) -> std::sync::Arc<dyn crate::coordinator::serve
 /// end-to-end, under a chosen element backend (`--elem`), verifying the
 /// result against the naive reference in the same number system.
 ///
-/// Three ways to pick the workload:
-/// * `--suite <name> [--scale N]` — an NTT entry of the 50-workload suite
-///   (FHE-NTT/ZKP-NTT), scaled to a CI-sized transform (default cap 64);
-///   weights are the *real* twiddle matrix of the entry's field, so this
-///   is the paper's FHE/ZKP rows executing for real, not as shape models.
-/// * `--ntt N` — a bare size-N NTT over the chosen (or default ZKP) field.
-/// * `--dims k0,k1,... --m M` — an MLP chain with random operands.
+/// Three ways to pick the workload (`--suite`, `--ntt`, `--dims` — see
+/// [`resolve_chain`]), plus `--artifact <path>`: skip compilation entirely
+/// and execute a deployable `.minisa` artifact (architecture, weights and
+/// element type all come from the container; zero mapper runs, enforced).
 pub fn cmd_run(args: &Args) -> anyhow::Result<()> {
-    use crate::mapper::chain::Chain;
-    use crate::program::Program;
-
-    let cfg = configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(4, 4));
-    let o = opts(args);
     let mut rng = crate::util::Lcg::new(args.usize_flag("seed", 42) as u64);
 
-    // Resolve the chain and its weights (as canonical words) + element type.
-    let (chain, weight_words, elem) = if let Some(name) = args.flags.get("suite") {
-        let g = workloads::suite50()
-            .into_iter()
-            .find(|g| &g.name == name)
-            .ok_or_else(|| anyhow::anyhow!("no suite entry named '{name}' (see `workloads`)"))?;
-        let scale = args.usize_flag("scale", 64);
-        let g = if ntt::ntt_size(&g).is_some() { ntt::scaled(&g, scale) } else { g };
-        let n = ntt::ntt_size(&g).ok_or_else(|| {
-            anyhow::anyhow!(
-                "suite entry '{name}' is not an NTT kernel; use `--dims`/`--m` to execute \
-                 arbitrary chains"
-            )
+    // Either load a deployable artifact (zero mapper runs) or resolve a
+    // chain and compile it here.
+    let (program, weight_words, elem) = if let Some(path) = args.flags.get("artifact") {
+        let art = Artifact::load(Path::new(path)).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let payload = art.payload.clone().ok_or_else(|| {
+            anyhow::anyhow!("{path} carries no weights payload; recompile with weights to run it")
         })?;
-        let elem = elem_flag(args, ntt::default_elem(&g.category))?;
-        let tw = ntt::twiddle_words(elem, n).map_err(anyhow::Error::msg)?;
+        let searches_before = searches_run();
+        let t0 = std::time::Instant::now();
+        let program =
+            Program::from_artifact(&art).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+        anyhow::ensure!(searches_run() == searches_before, "artifact load ran the mapper");
         println!(
-            "suite entry {} scaled to M={} K=N={} over {} (p = {})",
-            g.name,
-            g.m,
-            n,
-            elem,
-            elem.modulus().unwrap_or(0)
+            "loaded {} layer(s) for {} from {path} in {load_ms:.1} ms: {} B encoded trace / \
+             {} insts decoded, byte fidelity verified, zero mapper runs ✓",
+            program.layer_count(),
+            program.cfg.name(),
+            art.trace_bytes.len(),
+            art.inst_count,
         );
-        (Chain { layers: vec![g] }, vec![tw], elem)
-    } else if let Some(nspec) = args.flags.get("ntt") {
-        let n: usize = nspec.parse().map_err(|e| anyhow::anyhow!("--ntt '{nspec}': {e}"))?;
-        let m = args.usize_flag("m", (n / 16).max(1));
-        let elem = elem_flag(args, ElemType::Goldilocks)?;
-        let tw = ntt::twiddle_words(elem, n).map_err(anyhow::Error::msg)?;
-        let g = Gemm::new(&format!("ntt_{n}"), "ZKP-NTT", m, n, n);
-        (Chain { layers: vec![g] }, vec![tw], elem)
+        (program, payload.weights, payload.elem)
     } else {
-        let spec = args.str_flag("dims", "16,24,16");
-        let parsed: Result<Vec<usize>, _> = spec.split(',').map(|t| t.trim().parse()).collect();
-        let dims = parsed.map_err(|e| anyhow::anyhow!("--dims '{spec}': {e}"))?;
-        anyhow::ensure!(dims.len() >= 2, "--dims needs at least two widths");
-        let m = args.usize_flag("m", 8);
-        let chain = Chain::mlp("run", m, &dims);
-        let elem = elem_flag(args, ElemType::I32)?;
-        let ws: Vec<Vec<u64>> =
-            chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect();
-        (chain, ws, elem)
+        let cfg = configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(4, 4));
+        let o = opts(args);
+        let (chain, weight_words, elem) = resolve_chain(args, &mut rng)?;
+        let t0 = std::time::Instant::now();
+        let program = Program::compile(&cfg, &chain, &o)
+            .ok_or_else(|| anyhow::anyhow!("no feasible mapping for chain on {}", cfg.name()))?;
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "compiled {} layer(s) on {} in {:.1} ms: {} wave plans, fused trace {} B \
+             ({} SetIVNLayout elided)",
+            program.layer_count(),
+            cfg.name(),
+            compile_ms,
+            program.plan_count(),
+            program.fused_bytes,
+            program.elided,
+        );
+        (program, weight_words, elem)
     };
-
-    let t0 = std::time::Instant::now();
-    let program = Program::compile(&cfg, &chain, &o)
-        .ok_or_else(|| anyhow::anyhow!("no feasible mapping for chain on {}", cfg.name()))?;
-    let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
-    println!(
-        "compiled {} layer(s) on {} in {:.1} ms: {} wave plans, fused trace {} B \
-         ({} SetIVNLayout elided)",
-        program.layer_count(),
-        cfg.name(),
-        compile_ms,
-        program.plan_count(),
-        program.fused_bytes,
-        program.elided,
-    );
+    let cfg = program.cfg.clone();
 
     let input_words = elem.sample_words(&mut rng, program.rows() * program.in_features());
     let t1 = std::time::Instant::now();
@@ -577,6 +557,185 @@ pub fn cmd_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Resolve the (chain, canonical-word weights, element type) triple the
+/// `run` and `compile` commands share:
+///
+/// * `--suite <name> [--scale N]` — an NTT entry of the 50-workload suite,
+///   scaled to a CI-sized transform; weights are the real twiddle matrix.
+/// * `--ntt N` — a bare size-N NTT over the chosen (or default ZKP) field.
+/// * `--dims k0,k1,... --m M` — an MLP chain with random operands.
+fn resolve_chain(
+    args: &Args,
+    rng: &mut crate::util::Lcg,
+) -> anyhow::Result<(Chain, Vec<Vec<u64>>, ElemType)> {
+    if let Some(name) = args.flags.get("suite") {
+        let g = workloads::suite50()
+            .into_iter()
+            .find(|g| &g.name == name)
+            .ok_or_else(|| anyhow::anyhow!("no suite entry named '{name}' (see `workloads`)"))?;
+        let scale = args.usize_flag("scale", 64);
+        let g = if ntt::ntt_size(&g).is_some() { ntt::scaled(&g, scale) } else { g };
+        let n = ntt::ntt_size(&g).ok_or_else(|| {
+            anyhow::anyhow!(
+                "suite entry '{name}' is not an NTT kernel; use `--dims`/`--m` to execute \
+                 arbitrary chains"
+            )
+        })?;
+        let elem = elem_flag(args, ntt::default_elem(&g.category))?;
+        let tw = ntt::twiddle_words(elem, n).map_err(anyhow::Error::msg)?;
+        println!(
+            "suite entry {} scaled to M={} K=N={} over {} (p = {})",
+            g.name,
+            g.m,
+            n,
+            elem,
+            elem.modulus().unwrap_or(0)
+        );
+        Ok((Chain { layers: vec![g] }, vec![tw], elem))
+    } else if let Some(nspec) = args.flags.get("ntt") {
+        let n: usize = nspec.parse().map_err(|e| anyhow::anyhow!("--ntt '{nspec}': {e}"))?;
+        let m = args.usize_flag("m", (n / 16).max(1));
+        let elem = elem_flag(args, ElemType::Goldilocks)?;
+        let tw = ntt::twiddle_words(elem, n).map_err(anyhow::Error::msg)?;
+        let g = Gemm::new(&format!("ntt_{n}"), "ZKP-NTT", m, n, n);
+        Ok((Chain { layers: vec![g] }, vec![tw], elem))
+    } else {
+        let spec = args.str_flag("dims", "16,24,16");
+        let parsed: Result<Vec<usize>, _> = spec.split(',').map(|t| t.trim().parse()).collect();
+        let dims = parsed.map_err(|e| anyhow::anyhow!("--dims '{spec}': {e}"))?;
+        anyhow::ensure!(dims.len() >= 2, "--dims needs at least two widths");
+        let m = args.usize_flag("m", 8);
+        let chain = Chain::mlp("run", m, &dims);
+        let elem = elem_flag(args, ElemType::I32)?;
+        let ws: Vec<Vec<u64>> =
+            chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect();
+        Ok((chain, ws, elem))
+    }
+}
+
+/// `minisa compile` — the [`Compiler`] front-end on the command line:
+/// resolve a chain (same `--suite`/`--ntt`/`--dims` surface as `run`),
+/// run the chain-aware mapper exactly once, and write the deployable
+/// `.minisa` artifact whose payload is the encoded instruction stream.
+pub fn cmd_compile(args: &Args) -> anyhow::Result<()> {
+    let cfg = configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(4, 4));
+    let mut rng = crate::util::Lcg::new(args.usize_flag("seed", 42) as u64);
+    let (chain, weight_words, elem) = resolve_chain(args, &mut rng)?;
+    let out = PathBuf::from(args.str_flag("out", "model.minisa"));
+    let t0 = std::time::Instant::now();
+    let artifact = Compiler::new(&cfg)
+        .options(opts(args))
+        .elem(elem)
+        .weights(weight_words)
+        .compile(&chain)
+        .map_err(|e| anyhow::anyhow!("compile: {e}"))?;
+    let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let check = artifact.verify().map_err(|e| anyhow::anyhow!("verify: {e}"))?;
+    // Serialize once: the same buffer is written and measured.
+    let bytes = artifact.to_bytes();
+    std::fs::write(&out, &bytes).map_err(|e| anyhow::anyhow!("{}: {e}", out.display()))?;
+    let container = bytes.len();
+    let (cfg_only, compute, memory, act) = check.classes;
+    println!(
+        "compiled {} layer(s) on {} in {compile_ms:.1} ms → {}",
+        chain.layers.len(),
+        cfg.name(),
+        out.display()
+    );
+    println!(
+        "  container {container} B (v{}, checksummed, fingerprint {:016x}): encoded trace \
+         {} B / {} insts (cfg {cfg_only} / exec {compute} / mem {memory} / act {act}), \
+         {} SetIVNLayout elided; weights {} matrices over {elem}",
+        crate::artifact::VERSION,
+        artifact.fingerprint(),
+        check.trace_bytes,
+        check.insts,
+        artifact.decision.elided,
+        chain.layers.len(),
+    );
+    println!(
+        "  stream decodes and re-encodes byte-identically ✓ (trace fnv {:016x})",
+        check.trace_fnv
+    );
+    Ok(())
+}
+
+/// `minisa inspect <artifact>` — header metadata, per-class instruction
+/// counts and encoded bytes, `--disasm` for the full disassembly.
+pub fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let path = args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| args.flags.get("artifact").cloned())
+        .ok_or_else(|| anyhow::anyhow!("usage: minisa inspect <file.minisa> [--disasm]"))?;
+    let art = Artifact::load(Path::new(&path)).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let check = art.verify().map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    println!(
+        "{path}: MINISA artifact v{} for {} (fingerprint {:016x}), {} B container",
+        crate::artifact::VERSION,
+        art.cfg.name(),
+        art.fingerprint(),
+        art.to_bytes().len(),
+    );
+    println!("  checksum ok; stream decodes and re-encodes byte-identically ✓");
+    for (g, d) in art.chain.layers.iter().zip(&art.decision.per_layer) {
+        println!(
+            "  layer {:<16} M={:<6} K={:<6} N={:<6} df={:?} vn={} tile=({},{},{}) nbc={} dup={} \
+             orders=({},{},{}) {:.0} cycles",
+            g.name,
+            g.m,
+            g.k,
+            g.n,
+            d.choice.df,
+            d.choice.vn,
+            d.choice.m_t,
+            d.choice.k_t,
+            d.choice.n_t,
+            d.choice.nbc,
+            d.choice.dup,
+            d.i_order,
+            d.w_order,
+            d.o_order,
+            d.report.total_cycles,
+        );
+    }
+    println!(
+        "  fused trace: {} insts, {} B encoded ({} B standalone, {} SetIVNLayout elided \
+         §IV-G2), modeled {:.0} cycles",
+        check.insts,
+        check.trace_bytes,
+        art.decision.standalone_bytes,
+        art.decision.elided,
+        art.decision.total_cycles,
+    );
+    // Per-class accounting: counts and bits share one classification
+    // (`Trace::class_counts` / `Trace::class_bits`).
+    let trace = art.decode_trace().map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let (b0, b1, b2, b3) = trace.class_bits(&Codec::new(&art.cfg));
+    let (c0, c1, c2, c3) = check.classes;
+    println!("  class           insts       bits      bytes");
+    for (label, count, b) in [
+        ("config-only", c0, b0),
+        ("compute", c1, b1),
+        ("memory", c2, b2),
+        ("activation", c3, b3),
+    ] {
+        println!("  {label:<14} {count:>6} {b:>10} {:>10.1}", b as f64 / 8.0);
+    }
+    match &art.payload {
+        Some(p) => {
+            let words: usize = p.weights.iter().map(Vec::len).sum();
+            println!("  weights: {} matrices over {} ({words} words)", p.weights.len(), p.elem);
+        }
+        None => println!("  weights: none (serving this artifact requires a payload)"),
+    }
+    if args.bool_flag("disasm") {
+        println!("\n{}", trace.disassemble());
+    }
+    Ok(())
+}
+
 /// `minisa serve` — run the serving loop on ad-hoc single-GEMM requests.
 /// With `--elem` other than f32, the GEMM is registered as a single-layer
 /// element-typed program session and served as word requests (ad-hoc f32
@@ -600,7 +759,6 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             tx.send(Request::gemm(id, 64, 64, 64, rng.f32_matrix(64, 64), Arc::clone(&weight)))?;
         }
     } else {
-        use crate::mapper::chain::Chain;
         let g = Gemm::new("serve_gemm", "cli", 64, 64, 64);
         let chain = Chain { layers: vec![g] };
         let w = elem.sample_words(&mut rng, 64 * 64);
@@ -645,65 +803,96 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `minisa serve-model` — the compile-once/serve-many path: register a
-/// model chain as a program session, then stream activation-only requests
-/// at it. `--dims k0,k1,...` sets the feature ladder (default: a small MLP;
-/// `--gpt` uses the Tab. IV GPT-oss MLP slice), `--m` the rows per request.
+/// model session, then stream activation-only requests at it.
+///
+/// Two session sources:
+/// * `--artifact <path>` — **load** a deployable `.minisa` artifact (the
+///   server adopts the artifact's architecture; element type and weights
+///   come from its payload). Hard-fails if registration compiles anything
+///   or runs the mapper: this is the production load path.
+/// * `--dims k0,k1,...` / `--gpt` + `--m` + `--elem` — compile-on-register
+///   as before.
 pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
-    use crate::coordinator::serve::{spawn_with_options, Request};
-    use crate::mapper::chain::Chain;
+    use crate::coordinator::serve::{spawn_with_options, ArtifactSource, Request};
 
-    let cfg = configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(16, 64));
-    let m = args.usize_flag("m", 16);
     let requests = args.usize_flag("requests", 32);
-    let dims: Vec<usize> = if args.bool_flag("gpt") {
-        workloads::gpt_oss_mlp_dims()
-    } else {
-        let spec = args.str_flag("dims", "256,512,256");
-        let parsed: Result<Vec<usize>, _> = spec.split(',').map(|t| t.trim().parse()).collect();
-        parsed.map_err(|e| anyhow::anyhow!("--dims '{spec}': {e}"))?
+    let artifact = match args.flags.get("artifact") {
+        Some(p) => Some(Artifact::load(Path::new(p)).map_err(|e| anyhow::anyhow!("{p}: {e}"))?),
+        None => None,
     };
-    anyhow::ensure!(dims.len() >= 2, "--dims needs at least two widths");
-    let chain = Chain::mlp("serve_model", m, &dims);
-    let elem = elem_flag(args, ElemType::F32)?;
+    let cfg = match &artifact {
+        // The container pins the architecture; --ah/--aw are ignored.
+        Some(a) => a.cfg.clone(),
+        None => configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(16, 64)),
+    };
+    let from_artifact = artifact.is_some();
 
     let sopts = server_options(args);
     let executor = serving_executor(args);
     let backend = executor.name().to_string();
     let (tx, rx, h, server) = spawn_with_options(&cfg, executor, sopts);
     let mut rng = crate::util::Lcg::new(23);
-    let pid = if elem == ElemType::F32 {
-        let weights: Vec<Vec<f32>> =
-            chain.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect();
-        server.register_chain(&chain, weights)?
+    let (pid, elem) = if let Some(art) = artifact {
+        let elem = art.payload.as_ref().map(|p| p.elem).unwrap_or(ElemType::F32);
+        let searches_before = searches_run();
+        let pid = server.register(ArtifactSource::Artifact(Box::new(art)))?;
+        anyhow::ensure!(
+            searches_run() == searches_before,
+            "artifact registration ran the mapper (expected zero mapper runs)"
+        );
+        (pid, elem)
     } else {
-        let weights: Vec<Vec<u64>> =
-            chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect();
-        server.register_chain_elem(&chain, weights, elem)?
+        let m = args.usize_flag("m", 16);
+        let dims: Vec<usize> = if args.bool_flag("gpt") {
+            workloads::gpt_oss_mlp_dims()
+        } else {
+            let spec = args.str_flag("dims", "256,512,256");
+            let parsed: Result<Vec<usize>, _> =
+                spec.split(',').map(|t| t.trim().parse()).collect();
+            parsed.map_err(|e| anyhow::anyhow!("--dims '{spec}': {e}"))?
+        };
+        anyhow::ensure!(dims.len() >= 2, "--dims needs at least two widths");
+        let chain = Chain::mlp("serve_model", m, &dims);
+        let elem = elem_flag(args, ElemType::F32)?;
+        let pid = if elem == ElemType::F32 {
+            let weights: Vec<Vec<f32>> =
+                chain.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect();
+            server.register_chain(&chain, weights)?
+        } else {
+            let weights: Vec<Vec<u64>> =
+                chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect();
+            server.register_chain_elem(&chain, weights, elem)?
+        };
+        (pid, elem)
     };
     let prog = server.program(pid).expect("just registered");
+    let m = args.usize_flag("m", if from_artifact { prog.rows() } else { 16 });
+    let kf = prog.in_features();
     println!(
-        "program {:?} over {}: {} layers, modeled {:.0} cycles/pass, fused trace {} B vs {} B \
-         standalone ({} SetIVNLayout elided, §IV-G2), {} wave plans precompiled",
+        "program {:?} over {} on {}: {} layers, modeled {:.0} cycles/pass, fused trace {} B vs \
+         {} B standalone ({} SetIVNLayout elided, §IV-G2), {} wave plans {}",
         pid,
         elem,
+        cfg.name(),
         prog.layer_count(),
         prog.total_cycles,
         prog.fused_bytes,
         prog.standalone_bytes,
         prog.elided,
         prog.plan_count(),
+        if from_artifact { "recompiled from the loaded stream" } else { "precompiled" },
     );
 
     let wall = std::time::Instant::now();
     for id in 0..requests as u64 {
         if elem == ElemType::F32 {
-            tx.send(Request::for_program(id, pid, m, rng.f32_matrix(m, dims[0])))?;
+            tx.send(Request::for_program(id, pid, m, rng.f32_matrix(m, kf)))?;
         } else {
             tx.send(Request::for_program_words(
                 id,
                 pid,
                 m,
-                elem.sample_words(&mut rng, m * dims[0]),
+                elem.sample_words(&mut rng, m * kf),
             ))?;
         }
     }
@@ -718,7 +907,7 @@ pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
     let wall_us = wall.elapsed().as_secs_f64() * 1e6;
     println!(
         "served {} program requests on '{}' in {:.1} ms: p50 {:.1} µs, p99 {:.1} µs, \
-         {:.0} req/s, {} batches (max {}), {} chain compile(s)",
+         {:.0} req/s, {} batches (max {}), {} chain compile(s), {} artifact load(s)",
         stats.program_served,
         backend,
         wall_us / 1e3,
@@ -728,7 +917,18 @@ pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
         stats.batches,
         stats.max_batch,
         stats.program_compiles,
+        stats.artifact_loads,
     );
+    if from_artifact {
+        // The production invariant, enforced (the CI cross-process smoke
+        // step serves a file compiled by another process through here).
+        anyhow::ensure!(
+            stats.program_compiles == 0,
+            "artifact serving compiled a program (expected zero)"
+        );
+        anyhow::ensure!(stats.artifact_loads == 1, "expected exactly one artifact load");
+        println!("artifact session: 1 load, 0 program compiles, 0 mapper runs ✓");
+    }
     if sopts.devices > 1 {
         let report = server.fleet().report(wall_us);
         anyhow::ensure!(
@@ -757,6 +957,13 @@ pub fn usage() -> &'static str {
        run        compile + execute a Program end-to-end, verified against\n\
                   the naive reference [--elem E] [--devices N]\n\
                   [--suite <name> [--scale N] | --ntt N | --dims k0,k1,... --m N]\n\
+                  [--artifact f.minisa] (load instead of compiling: zero\n\
+                  mapper runs, weights/elem/config come from the container)\n\
+       compile    compile a chain into a deployable .minisa artifact\n\
+                  (encoded instruction stream + decisions + weights)\n\
+                  [--suite|--ntt|--dims as for run] [--elem E] [--out file]\n\
+       inspect    inspect a .minisa artifact: header, per-class instruction\n\
+                  counts/bytes, round-trip check  <file> [--disasm]\n\
        bitwidth   Table V ISA bitwidths\n\
        area       Table VI area/power model\n\
        workloads  dump the 50-workload suite CSV [--small]\n\
@@ -765,6 +972,8 @@ pub fn usage() -> &'static str {
                   [--devices N --shard-min-rows R --max-batch B]\n\
        serve-model  compile-once/serve-many model sessions (§IV-G programs)\n\
                   [--dims k0,k1,... | --gpt] [--m N] [--requests N] [--elem E]\n\
+                  [--artifact f.minisa] (serve a compiled artifact: hard-\n\
+                  fails on any mapper run or program compile)\n\
                   [--devices N --shard-min-rows R --max-batch B]\n\
        animate    cycle-by-cycle NEST/BIRRD/OB animation [--m --k --n --waves]\n\
      \n\
@@ -788,6 +997,8 @@ pub fn run(argv: &[String]) -> i32 {
         "search" => cmd_search(&args),
         "trace" => cmd_trace(&args),
         "run" => cmd_run(&args),
+        "compile" => cmd_compile(&args),
+        "inspect" => cmd_inspect(&args),
         "bitwidth" => cmd_bitwidth(&args),
         "area" => cmd_area(&args),
         "workloads" => cmd_workloads(&args),
@@ -953,6 +1164,66 @@ mod tests {
         .map(|s| s.to_string())
         .collect();
         assert_eq!(run(&argv), 0);
+    }
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// The full artifact pipeline on the CLI: `compile` writes a `.minisa`
+    /// file, `inspect` reads it back (with disassembly), and both `run
+    /// --artifact` and `serve-model --artifact` execute it — the latter two
+    /// hard-fail internally on any mapper run, so exit code 0 *is* the
+    /// zero-mapper-runs assertion.
+    #[test]
+    fn compile_inspect_run_serve_artifact_pipeline() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("minisa_cli_{}.minisa", std::process::id()));
+        let p = path.to_str().unwrap();
+        assert_eq!(
+            run(&argv(&[
+                "compile", "--dims", "8,12,8", "--m", "4", "--elem", "goldilocks", "--ah", "4",
+                "--aw", "4", "--fast", "--out", p,
+            ])),
+            0
+        );
+        assert_eq!(run(&argv(&["inspect", p, "--disasm"])), 0);
+        assert_eq!(run(&argv(&["run", "--artifact", p])), 0);
+        assert_eq!(run(&argv(&["serve-model", "--artifact", p, "--requests", "4"])), 0);
+        // Fleet serving from the artifact keeps the same guarantees.
+        assert_eq!(
+            run(&argv(&[
+                "serve-model", "--artifact", p, "--requests", "6", "--devices", "2",
+                "--shard-min-rows", "1",
+            ])),
+            0
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn inspect_rejects_missing_and_garbage_files() {
+        assert_eq!(run(&argv(&["inspect"])), 1, "no path");
+        assert_eq!(run(&argv(&["inspect", "/nonexistent/x.minisa"])), 1);
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("minisa_garbage_{}.minisa", std::process::id()));
+        std::fs::write(&path, b"not an artifact at all").unwrap();
+        assert_eq!(run(&argv(&["inspect", path.to_str().unwrap()])), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn run_artifact_requires_weights_payload() {
+        // `compile` always attaches weights, so build a bare artifact
+        // directly and confirm `run --artifact` refuses it.
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("bare", 4, &[8, 8]);
+        let art = Compiler::new(&cfg).compile(&chain).unwrap();
+        let path =
+            std::env::temp_dir().join(format!("minisa_bare_{}.minisa", std::process::id()));
+        art.save(&path).unwrap();
+        assert_eq!(run(&argv(&["run", "--artifact", path.to_str().unwrap()])), 1);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

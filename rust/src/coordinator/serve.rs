@@ -8,11 +8,15 @@
 //!
 //! Two request kinds coexist:
 //!
-//! * **Program requests** (the compile-once/serve-many path): a model chain
-//!   is registered once (`Server::register_chain`) — one chain-aware mapper
-//!   run, one trace fusion, one wave-plan compilation, all captured in an
-//!   immutable `Arc<Program>` session — and every subsequent request
-//!   references the session by [`ProgramId`], carrying only its activation.
+//! * **Program requests** (the compile-once/serve-many path): a model
+//!   session is registered once through `Server::register(ArtifactSource)` —
+//!   canonically from a deployable `.minisa` [`Artifact`] (in memory or a
+//!   file path), which is loaded by *decoding its instruction stream* with
+//!   zero mapper runs; or compile-on-register for callers that never
+//!   persist (`register_chain`/`register_chain_elem` wrappers, one
+//!   chain-aware mapper run). Either way the session is an immutable
+//!   `Arc<Program>` plus resident weights, and every subsequent request
+//!   references it by [`ProgramId`], carrying only its activation.
 //!   Batching stacks activations of the *same program* (true shared-weight
 //!   continuous batching: the weights live in the session, not the
 //!   request).
@@ -35,6 +39,7 @@
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
@@ -42,6 +47,7 @@ use std::sync::{Arc, Mutex, OnceLock, RwLock};
 use super::fleet::{Device, Fleet, FleetOptions};
 use crate::arch::config::ArchConfig;
 use crate::arith::{decode_words, encode_words, ElemType, Element};
+use crate::artifact::Artifact;
 use crate::functional::FunctionalSim;
 use crate::mapper::chain::Chain;
 use crate::mapper::search::{search, MapperOptions};
@@ -336,10 +342,15 @@ pub struct ServeStats {
     pub batches: u64,
     pub mapper_cache_hits: u64,
     pub mapper_cache_misses: u64,
-    /// Chains compiled into programs (`register_chain` calls that ran the
+    /// Chains compiled into programs (`register` calls that ran the
     /// chain-aware mapper). Program *requests* never bump this: compile
     /// once, serve many.
     pub program_compiles: u64,
+    /// Sessions registered from a deployable `.minisa` artifact
+    /// ([`Server::register`] with an [`ArtifactSource::Artifact`]/`Path`
+    /// source) — zero mapper work, the loaded counterpart of
+    /// `program_compiles`.
+    pub artifact_loads: u64,
     /// Requests served through a registered program.
     pub program_served: u64,
     /// Requests answered with an error.
@@ -389,6 +400,46 @@ struct Session {
     program: Arc<Program>,
     elem: ElemType,
     weights: SessionWeights,
+}
+
+/// Where a model session comes from — the single argument of
+/// [`Server::register`]. The canonical deployment path is an [`Artifact`]
+/// (in memory or a `.minisa` file): compiled once anywhere, loaded here with
+/// **zero mapper runs**. The `Compile*` variants keep the old
+/// compile-on-register behaviour for callers that never persist.
+pub enum ArtifactSource {
+    /// A parsed artifact (must carry a weights payload — sessions need
+    /// resident weights).
+    Artifact(Box<Artifact>),
+    /// Load a `.minisa` container from disk.
+    Path(PathBuf),
+    /// Back-compat: compile the chain here, f32 weights
+    /// (the former `register_chain`).
+    CompileF32 { chain: Chain, weights: Vec<Vec<f32>> },
+    /// Back-compat: compile the chain here, canonical-word weights under an
+    /// explicit element backend (the former `register_chain_elem`).
+    CompileWords { chain: Chain, weights: Vec<Vec<u64>>, elem: ElemType },
+}
+
+/// Shared weight-shape validation for the compile-on-register sources.
+fn validate_weight_dims<T>(chain: &Chain, weights: &[Vec<T>], unit: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        weights.len() == chain.layers.len(),
+        "chain has {} layers, got {} weight matrices",
+        chain.layers.len(),
+        weights.len()
+    );
+    for (g, w) in chain.layers.iter().zip(weights) {
+        anyhow::ensure!(
+            w.len() == g.k * g.n,
+            "layer {} weight is {} {unit}, expected {}×{}",
+            g.name,
+            w.len(),
+            g.k,
+            g.n
+        );
+    }
+    Ok(())
 }
 
 /// How requests group into one executor dispatch.
@@ -496,40 +547,109 @@ impl Server {
         &self.fleet
     }
 
+    /// Register a model session from any [`ArtifactSource`] — the one
+    /// registration surface.
+    ///
+    /// * `Artifact`/`Path`: the canonical deployment path. The container's
+    ///   config must match this server's; the program is rebuilt by
+    ///   decoding the shipped instruction stream
+    ///   ([`Program::from_artifact`]) with **zero mapper runs** — the
+    ///   `artifact_loads` stat moves, `program_compiles` does not.
+    /// * `CompileF32`/`CompileWords`: compile-on-register back-compat (one
+    ///   chain-aware mapper run; `program_compiles` moves).
+    pub fn register(&self, src: ArtifactSource) -> anyhow::Result<ProgramId> {
+        match src {
+            ArtifactSource::Path(path) => {
+                let art = Artifact::load(&path)
+                    .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+                self.register(ArtifactSource::Artifact(Box::new(art)))
+            }
+            ArtifactSource::Artifact(art) => {
+                anyhow::ensure!(
+                    art.cfg == self.cfg,
+                    "artifact was compiled for {} (fingerprint {:016x}) but this server runs {} \
+                     ({:016x})",
+                    art.cfg.name(),
+                    art.fingerprint(),
+                    self.cfg.name(),
+                    crate::artifact::arch_fingerprint(&self.cfg),
+                );
+                anyhow::ensure!(
+                    art.payload.is_some(),
+                    "artifact carries no weights payload; serving sessions need resident weights \
+                     (compile with `Compiler::weights`)"
+                );
+                let program = Program::from_artifact(&art)
+                    .map_err(|e| anyhow::anyhow!("artifact load: {e}"))?;
+                let payload = art.payload.expect("checked above");
+                let elem = payload.elem;
+                let weights = if elem == ElemType::F32 {
+                    // An f32 payload serves the classic f32 session path
+                    // (`Payload::Program`); words are IEEE bit patterns.
+                    SessionWeights::F32(Arc::new(
+                        payload.weights.iter().map(|m| decode_words::<f32>(m)).collect(),
+                    ))
+                } else {
+                    SessionWeights::Words(Arc::new(WordWeights::new(payload.weights, elem)))
+                };
+                let id = self.insert_session(program, elem, weights);
+                self.stats.lock().unwrap().artifact_loads += 1;
+                Ok(id)
+            }
+            ArtifactSource::CompileF32 { chain, weights } => {
+                chain.validate().map_err(anyhow::Error::msg)?;
+                validate_weight_dims(&chain, &weights, "elements")?;
+                let program = Program::compile(&self.cfg, &chain, &self.opts).ok_or_else(|| {
+                    anyhow::anyhow!("no feasible mapping for chain on {}", self.cfg.name())
+                })?;
+                let id = self.insert_session(
+                    program,
+                    ElemType::F32,
+                    SessionWeights::F32(Arc::new(weights)),
+                );
+                self.stats.lock().unwrap().program_compiles += 1;
+                Ok(id)
+            }
+            ArtifactSource::CompileWords { chain, weights, elem } => {
+                chain.validate().map_err(anyhow::Error::msg)?;
+                validate_weight_dims(&chain, &weights, "words")?;
+                let program = Program::compile(&self.cfg, &chain, &self.opts).ok_or_else(|| {
+                    anyhow::anyhow!("no feasible mapping for chain on {}", self.cfg.name())
+                })?;
+                // Decode-once: the per-backend form is built here, not per
+                // dispatch (for ModP that is one Montgomery conversion per
+                // weight element — session-sized work).
+                let id = self.insert_session(
+                    program,
+                    elem,
+                    SessionWeights::Words(Arc::new(WordWeights::new(weights, elem))),
+                );
+                self.stats.lock().unwrap().program_compiles += 1;
+                Ok(id)
+            }
+        }
+    }
+
+    fn insert_session(
+        &self,
+        program: Program,
+        elem: ElemType,
+        weights: SessionWeights,
+    ) -> ProgramId {
+        let id = ProgramId(self.next_program.fetch_add(1, Ordering::Relaxed));
+        self.sessions
+            .write()
+            .unwrap()
+            .insert(id, Session { program: Arc::new(program), elem, weights });
+        id
+    }
+
     /// Register a model chain: runs the chain-aware mapper, fuses the
     /// trace, precompiles wave plans — exactly once — and pins the weights
     /// in the session. Requests then reference the returned [`ProgramId`].
+    /// (Compile-on-register wrapper over [`Self::register`].)
     pub fn register_chain(&self, chain: &Chain, weights: Vec<Vec<f32>>) -> anyhow::Result<ProgramId> {
-        chain.validate().map_err(anyhow::Error::msg)?;
-        anyhow::ensure!(
-            weights.len() == chain.layers.len(),
-            "chain has {} layers, got {} weight matrices",
-            chain.layers.len(),
-            weights.len()
-        );
-        for (g, w) in chain.layers.iter().zip(&weights) {
-            anyhow::ensure!(
-                w.len() == g.k * g.n,
-                "layer {} weight is {} elements, expected {}×{}",
-                g.name,
-                w.len(),
-                g.k,
-                g.n
-            );
-        }
-        let program = Program::compile(&self.cfg, chain, &self.opts)
-            .ok_or_else(|| anyhow::anyhow!("no feasible mapping for chain on {}", self.cfg.name()))?;
-        let id = ProgramId(self.next_program.fetch_add(1, Ordering::Relaxed));
-        self.sessions.write().unwrap().insert(
-            id,
-            Session {
-                program: Arc::new(program),
-                elem: ElemType::F32,
-                weights: SessionWeights::F32(Arc::new(weights)),
-            },
-        );
-        self.stats.lock().unwrap().program_compiles += 1;
-        Ok(id)
+        self.register(ArtifactSource::CompileF32 { chain: chain.clone(), weights })
     }
 
     /// Register a model chain under an explicit element backend: weights
@@ -552,39 +672,7 @@ impl Server {
         weights: Vec<Vec<u64>>,
         elem: ElemType,
     ) -> anyhow::Result<ProgramId> {
-        chain.validate().map_err(anyhow::Error::msg)?;
-        anyhow::ensure!(
-            weights.len() == chain.layers.len(),
-            "chain has {} layers, got {} weight matrices",
-            chain.layers.len(),
-            weights.len()
-        );
-        for (g, w) in chain.layers.iter().zip(&weights) {
-            anyhow::ensure!(
-                w.len() == g.k * g.n,
-                "layer {} weight is {} words, expected {}×{}",
-                g.name,
-                w.len(),
-                g.k,
-                g.n
-            );
-        }
-        let program = Program::compile(&self.cfg, chain, &self.opts)
-            .ok_or_else(|| anyhow::anyhow!("no feasible mapping for chain on {}", self.cfg.name()))?;
-        let id = ProgramId(self.next_program.fetch_add(1, Ordering::Relaxed));
-        self.sessions.write().unwrap().insert(
-            id,
-            Session {
-                program: Arc::new(program),
-                elem,
-                // Decode-once: the per-backend form is built here, not per
-                // dispatch (for ModP that is one Montgomery conversion per
-                // weight element — session-sized work).
-                weights: SessionWeights::Words(Arc::new(WordWeights::new(weights, elem))),
-            },
-        );
-        self.stats.lock().unwrap().program_compiles += 1;
-        Ok(id)
+        self.register(ArtifactSource::CompileWords { chain: chain.clone(), weights, elem })
     }
 
     /// The compiled program behind a session, if registered.
@@ -1568,6 +1656,134 @@ mod tests {
         let stats = h.join().unwrap();
         assert_eq!(stats.errors, 1);
         assert_eq!(stats.served, 1);
+    }
+
+    /// A session registered from an in-memory artifact serves f32 requests
+    /// bit-identically to a compiled session — with zero mapper runs and
+    /// zero program compiles (`artifact_loads` moves instead).
+    #[test]
+    fn artifact_session_serves_with_zero_mapper_runs() {
+        use crate::artifact::Compiler;
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("mlp", 4, &[8, 12, 8]);
+        let mut rng = Lcg::new(61);
+        let weights: Vec<Vec<f32>> =
+            chain.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect();
+        let words: Vec<Vec<u64>> = weights.iter().map(|w| encode_words::<f32>(w)).collect();
+        let art = Compiler::new(&cfg)
+            .elem(ElemType::F32)
+            .weights(words)
+            .compile(&chain)
+            .unwrap();
+        // Sanity: the builder already produced the payload we asked for.
+        assert_eq!(art.payload.as_ref().unwrap().elem, ElemType::F32);
+        let (tx, rx, h, server) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let searches_before = crate::mapper::search::searches_run();
+        let pid = server.register(ArtifactSource::Artifact(Box::new(art))).unwrap();
+        assert_eq!(
+            crate::mapper::search::searches_run(),
+            searches_before,
+            "artifact registration must not run the mapper"
+        );
+        assert_eq!(server.session_elem(pid), Some(ElemType::F32));
+        let n_req = 4u64;
+        let mut expects = HashMap::new();
+        for id in 0..n_req {
+            let input = rng.f32_matrix(4, 8);
+            let mut act = input.clone();
+            for (g, w) in chain.layers.iter().zip(&weights) {
+                act = NaiveExecutor.gemm(4, g.k, g.n, &act, w).unwrap();
+            }
+            expects.insert(id, act);
+            tx.send(Request::for_program(id, pid, 4, input)).unwrap();
+        }
+        for _ in 0..n_req {
+            let resp = rx.recv().unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            assert_eq!(&resp.output, &expects[&resp.id]);
+        }
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.artifact_loads, 1, "one artifact load");
+        assert_eq!(stats.program_compiles, 0, "no mapper work on the serving host");
+        assert_eq!(stats.program_served, n_req);
+    }
+
+    /// A `.minisa` file registered by path serves an element-typed session
+    /// field-exactly, again without compiling anything.
+    #[test]
+    fn artifact_file_registers_word_session() {
+        use crate::arith::{Goldilocks, ModP};
+        use crate::artifact::Compiler;
+        type G = ModP<Goldilocks>;
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("mlp", 4, &[8, 8]);
+        let mut rng = Lcg::new(67);
+        let weights: Vec<Vec<u64>> = chain
+            .layers
+            .iter()
+            .map(|g| ElemType::Goldilocks.sample_words(&mut rng, g.k * g.n))
+            .collect();
+        let art = Compiler::new(&cfg)
+            .elem(ElemType::Goldilocks)
+            .weights(weights.clone())
+            .compile(&chain)
+            .unwrap();
+        let path =
+            std::env::temp_dir().join(format!("minisa_serve_{}.minisa", std::process::id()));
+        art.save(&path).unwrap();
+        let (tx, rx, h, server) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let pid = server.register(ArtifactSource::Path(path.clone())).unwrap();
+        std::fs::remove_file(&path).ok();
+        let program = server.program(pid).unwrap();
+        let wg: Vec<Vec<G>> = weights.iter().map(|w| decode_words::<G>(w)).collect();
+        let input = ElemType::Goldilocks.sample_words(&mut rng, 4 * 8);
+        let expect: Vec<u64> = program
+            .reference(&decode_words::<G>(&input), &wg)
+            .into_iter()
+            .map(|v| v.to_u64())
+            .collect();
+        tx.send(Request::for_program_words(0, pid, 4, input)).unwrap();
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.output_words, expect, "field-exact from a loaded artifact");
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.artifact_loads, 1);
+        assert_eq!(stats.program_compiles, 0);
+    }
+
+    /// Weightless artifacts and config-mismatched artifacts are rejected
+    /// with descriptive errors (and nothing is registered).
+    #[test]
+    fn register_rejects_unusable_artifacts() {
+        use crate::artifact::Compiler;
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("mlp", 4, &[8, 8]);
+        // No weights payload.
+        let bare = Compiler::new(&cfg).compile(&chain).unwrap();
+        let server = Server::new(&cfg, Arc::new(NaiveExecutor));
+        let err = server
+            .register(ArtifactSource::Artifact(Box::new(bare)))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("weights payload"), "{err}");
+        // Wrong architecture.
+        let mut rng = Lcg::new(3);
+        let other = ArchConfig::paper(4, 8);
+        let art = Compiler::new(&other)
+            .weights(
+                chain.layers.iter().map(|g| ElemType::I32.sample_words(&mut rng, g.k * g.n)).collect(),
+            )
+            .compile(&chain)
+            .unwrap();
+        let err = server
+            .register(ArtifactSource::Artifact(Box::new(art)))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("compiled for 4x8"), "{err}");
+        assert_eq!(server.stats.lock().unwrap().artifact_loads, 0);
+        assert!(server.sessions.read().unwrap().is_empty());
     }
 
     /// Multi-device serving answers every request with the same bytes as a

@@ -185,6 +185,32 @@ impl Codec {
         let mut r = BitReader::new(bytes);
         (0..n).map(|_| self.decode_one(&mut r)).collect()
     }
+
+    /// Decode `n` instructions into an **executable** stream: like
+    /// [`Self::decode_n`], then rehydrate the implicit layout VN-size
+    /// field. Fig. 5 encodes layouts without their reduction-L0 factor —
+    /// "the VN size" — which the hardware binds only when the following
+    /// `ExecuteStreaming` programs `VN_SIZE`. [`Self::decode_one`] can
+    /// therefore only guess the architectural AH; this mirrors the
+    /// hardware's binding instead, giving each layout the VN size of the
+    /// next `ExecuteStreaming` in stream order (architectural AH when none
+    /// follows), so decoded traces address buffers exactly like the traces
+    /// that produced the bytes. This is the artifact loader's path back
+    /// from the canonical encoded stream (`crate::artifact`).
+    pub fn decode_stream(&self, bytes: &[u8], n: usize) -> Result<Vec<Inst>, EncodeError> {
+        let mut insts = self.decode_n(bytes, n)?;
+        let mut vn = 1usize << self.bw.vn_bits;
+        for inst in insts.iter_mut().rev() {
+            match inst {
+                Inst::ExecuteStreaming(es) => vn = es.vn_size,
+                Inst::SetIVNLayout(l) | Inst::SetWVNLayout(l) | Inst::SetOVNLayout(l) => {
+                    l.layout.vn_size = vn;
+                }
+                _ => {}
+            }
+        }
+        Ok(insts)
+    }
 }
 
 #[cfg(test)]
@@ -308,6 +334,43 @@ mod tests {
             assert_eq!(dec[0], prog[0]);
             assert_eq!(dec[1], prog[1]);
         });
+    }
+
+    /// `decode_stream` recovers the implicit layout VN size from the
+    /// following `ExecuteStreaming` — full structural equality even when
+    /// the programmed VN is smaller than the architectural AH (where the
+    /// raw `decode_n` can only guess AH).
+    #[test]
+    fn decode_stream_rehydrates_layout_vn() {
+        let (cfg, c) = codec(4, 16);
+        let lay = |vn: usize| LayoutInst { layout: VnLayout::new(1, 2, 3, 2, vn) };
+        let es = |vn: usize| {
+            Inst::ExecuteStreaming(StreamCfg { df: Dataflow::WoS, m0: 0, s_m: 1, t: 4, vn_size: vn })
+        };
+        let em = Inst::ExecuteMapping(MappingCfg { r0: 0, c0: 0, g_r: 1, g_c: 1, s_r: 1, s_c: 0 });
+        // Two "layers" with different VN sizes (2, then 4), plus a trailing
+        // layout with no following E.Streaming (falls back to AH).
+        let prog = vec![
+            Inst::SetIVNLayout(lay(2)),
+            Inst::SetWVNLayout(lay(2)),
+            Inst::SetOVNLayout(lay(2)),
+            em,
+            es(2),
+            Inst::SetIVNLayout(lay(4)),
+            em,
+            es(4),
+            Inst::SetOVNLayout(lay(cfg.ah)),
+        ];
+        let bytes = c.encode_all(&prog).unwrap();
+        let decoded = c.decode_stream(&bytes, prog.len()).unwrap();
+        assert_eq!(decoded, prog, "rehydrated stream is structurally identical");
+        // The raw decode loses the vn=2 layouts (guesses AH = 4).
+        let raw = c.decode_n(&bytes, prog.len()).unwrap();
+        let Inst::SetIVNLayout(l) = &raw[0] else { panic!() };
+        assert_eq!(l.layout.vn_size, cfg.ah);
+        // Re-encoding either form reproduces the bytes (vn is not encoded).
+        assert_eq!(c.encode_all(&decoded).unwrap(), bytes);
+        assert_eq!(c.encode_all(&raw).unwrap(), bytes);
     }
 
     #[test]

@@ -7,7 +7,6 @@
 
 use super::encode::Codec;
 use super::inst::Inst;
-use crate::arch::config::ArchConfig;
 
 /// A MINISA instruction trace with byte accounting.
 #[derive(Debug, Clone, Default)]
@@ -20,6 +19,14 @@ pub struct Trace {
 impl Trace {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Rebuild a trace from decoded instructions plus layer boundaries —
+    /// the artifact loader's way back from the canonical encoded stream
+    /// (`crate::artifact`; layer starts travel in the container, not the
+    /// byte stream).
+    pub fn from_insts(insts: Vec<Inst>, layer_starts: Vec<usize>) -> Self {
+        Self { insts, layer_starts }
     }
 
     pub fn push(&mut self, inst: Inst) {
@@ -63,15 +70,17 @@ impl Trace {
         Some(start..end)
     }
 
-    /// Total encoded size in bits under a config's codec.
-    pub fn size_bits(&self, cfg: &ArchConfig) -> u64 {
-        let c = Codec::new(cfg);
-        self.insts.iter().map(|i| c.width_bits(i) as u64).sum()
+    /// Total encoded size in bits under a codec. Takes the caller's
+    /// [`Codec`] instead of rebuilding one per call — the mapper scores
+    /// thousands of candidate traces per search, and `Codec::new` re-derives
+    /// every field width each time ([`Codec`] is `Copy`; build it once).
+    pub fn size_bits(&self, codec: &Codec) -> u64 {
+        self.insts.iter().map(|i| codec.width_bits(i) as u64).sum()
     }
 
     /// Total encoded size in bytes (the off-chip instruction traffic).
-    pub fn size_bytes(&self, cfg: &ArchConfig) -> u64 {
-        self.size_bits(cfg).div_ceil(8)
+    pub fn size_bytes(&self, codec: &Codec) -> u64 {
+        self.size_bits(codec).div_ceil(8)
     }
 
     /// Count instructions of each class: (config, compute-trigger, memory,
@@ -90,6 +99,29 @@ impl Trace {
                 act += 1;
             } else {
                 memory += 1;
+            }
+        }
+        (cfg_only, compute, memory, act)
+    }
+
+    /// Encoded bits per class under a codec: (config-only, compute-trigger,
+    /// memory, activation) — the byte-accounting twin of
+    /// [`Self::class_counts`], sharing its classification.
+    pub fn class_bits(&self, codec: &Codec) -> (u64, u64, u64, u64) {
+        let mut cfg_only = 0;
+        let mut compute = 0;
+        let mut memory = 0;
+        let mut act = 0;
+        for i in &self.insts {
+            let w = codec.width_bits(i) as u64;
+            if i.is_config_only() {
+                cfg_only += w;
+            } else if i.is_compute_trigger() {
+                compute += w;
+            } else if matches!(i, Inst::Activation { .. }) {
+                act += w;
+            } else {
+                memory += w;
             }
         }
         (cfg_only, compute, memory, act)
@@ -205,6 +237,7 @@ fn disasm_one(inst: &Inst) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch::config::ArchConfig;
     use crate::isa::inst::{BufTarget, LayoutInst};
     use crate::layout::VnLayout;
     use crate::mapping::{Dataflow, MappingCfg, StreamCfg};
@@ -286,13 +319,39 @@ mod tests {
 
     #[test]
     fn size_accounting() {
-        let cfg = ArchConfig::paper(4, 4);
+        let codec = Codec::new(&ArchConfig::paper(4, 4));
         let mut t = Trace::new();
         layer(&mut t, VnLayout::row_major(1, 4, 4), VnLayout::row_major(1, 4, 4), 2);
         t.push(Inst::Load { target: BufTarget::Streaming, hbm_addr: 0, rows: 4 });
-        let bits = t.size_bits(&cfg);
+        let bits = t.size_bits(&codec);
         assert!(bits > 0);
-        assert_eq!(t.size_bytes(&cfg), bits.div_ceil(8));
+        assert_eq!(t.size_bytes(&codec), bits.div_ceil(8));
+    }
+
+    #[test]
+    fn class_bits_partition_total_size() {
+        let codec = Codec::new(&ArchConfig::paper(4, 4));
+        let mut t = Trace::new();
+        layer(&mut t, VnLayout::row_major(1, 4, 4), VnLayout::row_major(2, 2, 4), 3);
+        t.push(Inst::Store { target: BufTarget::Streaming, hbm_addr: 0, rows: 2 });
+        let (b0, b1, b2, b3) = t.class_bits(&codec);
+        assert_eq!(b0 + b1 + b2 + b3, t.size_bits(&codec), "classes partition the stream");
+        let (c0, c1, c2, c3) = t.class_counts();
+        // Non-empty classes carry bits and vice versa.
+        for (c, b) in [(c0, b0), (c1, b1), (c2, b2), (c3, b3)] {
+            assert_eq!(c == 0, b == 0);
+        }
+    }
+
+    #[test]
+    fn from_insts_preserves_structure() {
+        let mut t = Trace::new();
+        layer(&mut t, VnLayout::row_major(1, 4, 4), VnLayout::row_major(1, 4, 4), 2);
+        layer(&mut t, VnLayout::row_major(1, 4, 4), VnLayout::row_major(2, 2, 4), 1);
+        let rebuilt = Trace::from_insts(t.insts.clone(), t.layer_starts.clone());
+        assert_eq!(rebuilt.len(), t.len());
+        assert_eq!(rebuilt.layer_count(), 2);
+        assert_eq!(rebuilt.layer_range(1), t.layer_range(1));
     }
 
     #[test]

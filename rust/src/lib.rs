@@ -14,6 +14,7 @@
 
 pub mod arch;
 pub mod arith;
+pub mod artifact;
 pub mod functional;
 pub mod isa;
 pub mod layout;

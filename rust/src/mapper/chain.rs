@@ -19,7 +19,7 @@ use crate::workloads::Gemm;
 
 /// A linear chain of GEMM layers: layer i's M×N output is layer i+1's M×K
 /// input (so `layers[i].n == layers[i+1].k` and M is shared).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Chain {
     pub layers: Vec<Gemm>,
 }
@@ -50,7 +50,7 @@ impl Chain {
 }
 
 /// A chain mapping: one decision per layer + the fused trace statistics.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ChainDecision {
     pub per_layer: Vec<Decision>,
     /// Total modeled cycles (sum of layer latencies; layers are serialized

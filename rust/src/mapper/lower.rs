@@ -392,7 +392,7 @@ pub fn lower_gemm(
             });
         }
     }
-    let minisa_bits = trace.size_bits(cfg);
+    let minisa_bits = trace.size_bits(&codec);
     // Micro twin also re-fetches data movement descriptors; dominated by
     // the per-wave stream, already counted.
     LoweredProgram {

@@ -63,7 +63,7 @@ impl MappingChoice {
 }
 
 /// A fully-resolved (mapping, layout) decision with its estimated cost.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Decision {
     pub choice: MappingChoice,
     /// Tab. III order ids for the streamed, stationary and output layouts.

@@ -20,6 +20,25 @@ use crate::perf::PerfReport;
 use crate::util::ceil_div;
 use crate::workloads::Gemm;
 
+thread_local! {
+    /// Per-thread count of mapper searches. Every entry into
+    /// [`search_constrained`] (and therefore [`search`], chain compilation
+    /// and the serving shape cache) bumps it; nothing else does. The
+    /// artifact loading path (`Program::from_artifact`) asserts this
+    /// counter does not move across a load — the literal form of the "zero
+    /// mapper runs at load" guarantee the `.minisa` design promises.
+    /// Thread-local rather than process-global so the assertion cannot be
+    /// tripped by *other* threads legitimately compiling (e.g. parallel
+    /// tests, or a serving leader compiling one session while another
+    /// loads) — compiles and loads both happen on their caller's thread.
+    static SEARCHES: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Mapper searches run so far **on the calling thread**.
+pub fn searches_run() -> u64 {
+    SEARCHES.with(|c| c.get())
+}
+
 /// Search configuration.
 #[derive(Debug, Clone)]
 pub struct MapperOptions {
@@ -301,6 +320,7 @@ pub fn search_constrained(
     opts: &MapperOptions,
     df: Option<Dataflow>,
 ) -> Option<Decision> {
+    SEARCHES.with(|c| c.set(c.get() + 1));
     // A constraint overrides the M/N-heuristic restriction the caller's
     // options might impose: enumerate exactly the requested dataflow.
     let cands = match df {

@@ -39,7 +39,9 @@ use std::sync::Arc;
 
 use crate::arch::config::ArchConfig;
 use crate::arith::{naive_gemm_e, Element};
+use crate::artifact::{Artifact, ArtifactError, WeightsPayload};
 use crate::functional::{FunctionalSim, PlanKey, SimError, WavePlan};
+use crate::isa::encode::Codec;
 use crate::isa::inst::Inst;
 use crate::mapper::exec::execute_program_on;
 use crate::isa::Trace;
@@ -97,40 +99,17 @@ impl Program {
         chain.validate().ok()?;
         let mut decisions = plan_chain_decisions(cfg, chain, opts)?;
         align_boundary_orders(cfg, chain, &mut decisions, opts.minisa);
-
-        let mut layers = Vec::with_capacity(chain.layers.len());
-        let mut fused = Trace::new();
-        let mut standalone_bytes = 0u64;
-        for (g, d) in chain.layers.iter().zip(decisions) {
-            let lowered = lower_gemm(cfg, g, &d.choice, d.i_order, d.w_order, d.o_order);
-            standalone_bytes += lowered.minisa_bytes();
-            fused.splice_layer(&lowered.trace);
-            layers.push(ProgramLayer { gemm: g.clone(), decision: d, lowered });
-        }
-        let trace_elided = fused.elide_interlayer_layouts();
-        let mut compat = 0usize;
-        for i in 1..layers.len() {
-            if boundary_compatible(
-                &layers[i - 1].decision,
-                &layers[i].decision,
-                cfg,
-                (&chain.layers[i - 1], &chain.layers[i]),
-            ) {
-                compat += 1;
-            }
-        }
-        let fused_bytes = fused.size_bytes(cfg);
-        let total_cycles = layers.iter().map(|l| l.decision.report.total_cycles).sum();
-        let plans = compile_plans(cfg, &layers);
+        let built = build_chain(cfg, chain, &decisions);
+        let plans = compile_plans(cfg, &built.layers);
         Some(Program {
             cfg: cfg.clone(),
             chain: chain.clone(),
-            layers,
-            fused,
-            elided: compat.max(trace_elided),
-            fused_bytes,
-            standalone_bytes,
-            total_cycles,
+            layers: built.layers,
+            fused: built.fused,
+            elided: built.elided,
+            fused_bytes: built.fused_bytes,
+            standalone_bytes: built.standalone_bytes,
+            total_cycles: built.total_cycles,
             plans,
         })
     }
@@ -259,6 +238,98 @@ impl Program {
         self.reference(input, weights)
     }
 
+    /// Package this program as a deployable [`Artifact`] whose payload is
+    /// the **encoded** fused MINISA trace — the paper's minimal off-chip
+    /// form — plus the chain spec, the per-layer decisions and an optional
+    /// resident-weights payload. `Program::from_artifact` is the inverse;
+    /// `crate::artifact::Compiler` is the builder front-end over
+    /// [`Self::compile`] + this.
+    pub fn to_artifact(&self, payload: Option<WeightsPayload>) -> Result<Artifact, ArtifactError> {
+        if let Some(p) = &payload {
+            crate::artifact::validate_payload_dims(&self.chain, &p.weights)?;
+        }
+        let codec = Codec::new(&self.cfg);
+        let trace_bytes = codec.encode_all(&self.fused.insts)?;
+        Ok(Artifact {
+            cfg: self.cfg.clone(),
+            chain: self.chain.clone(),
+            decision: self.chain_decision(),
+            layer_starts: self.fused.layer_starts.clone(),
+            inst_count: self.fused.len(),
+            trace_bytes,
+            payload,
+        })
+    }
+
+    /// Rebuild an executable program from a deployable artifact with
+    /// **zero mapper runs**: the encoded stream is decoded back into the
+    /// executable fused trace ([`Codec::decode_stream`] — the decoded
+    /// instructions *are* this program's `fused` field), the per-layer
+    /// staging/schedule metadata is replayed by deterministic lowering from
+    /// the stored decisions (`lower_gemm` — the mapper's *output*, never
+    /// its search), and the wave plans are recompiled locally.
+    ///
+    /// Every load proves byte-level round-trip fidelity: the decoded stream
+    /// must be structurally identical to the re-lowered trace, re-encode to
+    /// exactly the stored bytes, and reproduce the stored elision/byte
+    /// accounting — a corrupted or drifted artifact fails here rather than
+    /// serving wrong addresses.
+    pub fn from_artifact(art: &Artifact) -> Result<Program, ArtifactError> {
+        let cfg = &art.cfg;
+        let chain = &art.chain;
+        if art.decision.per_layer.len() != chain.layers.len() {
+            return Err(ArtifactError::Corrupt(format!(
+                "{} decisions for {} layers",
+                art.decision.per_layer.len(),
+                chain.layers.len()
+            )));
+        }
+        // `from_bytes` already bounds parsed containers; re-check here so a
+        // hand-assembled in-memory Artifact (fields are public) can't make
+        // the re-lowering below loop without bound either.
+        crate::artifact::bound_lowering_work(cfg, chain, &art.decision.per_layer)?;
+        let codec = Codec::new(cfg);
+        // 1. The canonical program: decode the shipped instruction stream.
+        let insts = codec.decode_stream(&art.trace_bytes, art.inst_count)?;
+        let fused = Trace::from_insts(insts, art.layer_starts.clone());
+        // 2. Deterministic re-lowering from the stored decisions — the same
+        //    `build_chain` the compiler ran, so the two paths cannot drift.
+        let built = build_chain(cfg, chain, &art.decision.per_layer);
+        // 3. Fidelity proofs: decoded ≡ re-lowered ≡ stored bytes.
+        if fused.insts != built.fused.insts || fused.layer_starts != built.fused.layer_starts {
+            return Err(ArtifactError::Mismatch(
+                "decoded stream disagrees with deterministic re-lowering".into(),
+            ));
+        }
+        if codec.encode_all(&built.fused.insts)? != art.trace_bytes {
+            return Err(ArtifactError::Mismatch(
+                "re-encoded trace differs from the stored bytes".into(),
+            ));
+        }
+        if built.elided != art.decision.elided
+            || built.fused_bytes != art.decision.fused_bytes
+            || built.standalone_bytes != art.decision.standalone_bytes
+            || built.total_cycles != art.decision.total_cycles
+        {
+            return Err(ArtifactError::Mismatch(
+                "stored accounting (elision/bytes/cycles) disagrees with the stream".into(),
+            ));
+        }
+        // 4. Recompile the wave plans locally (addressing only; no search).
+        let plans = compile_plans(cfg, &built.layers);
+        Ok(Program {
+            cfg: cfg.clone(),
+            chain: chain.clone(),
+            layers: built.layers,
+            fused,
+            elided: built.elided,
+            fused_bytes: built.fused_bytes,
+            standalone_bytes: built.standalone_bytes,
+            total_cycles: built.total_cycles,
+            plans,
+        })
+    }
+
     /// A contiguous row-range view of this program for tile-parallel (fleet)
     /// execution. Rows of a GEMM chain are independent, so a larger
     /// activation can be split into contiguous shards, each executed against
@@ -304,6 +375,56 @@ impl ProgramShard<'_> {
     pub fn output_words(&self) -> std::ops::Range<usize> {
         let nf = self.program.out_features();
         self.rows.start * nf..self.rows.end * nf
+    }
+}
+
+/// Everything derived *deterministically* from finalized per-layer
+/// decisions: the lowered layers, the fused trace with §IV-G2 elision, and
+/// the byte/cycle accounting.
+struct BuiltChain {
+    layers: Vec<ProgramLayer>,
+    fused: Trace,
+    elided: usize,
+    fused_bytes: u64,
+    standalone_bytes: u64,
+    total_cycles: f64,
+}
+
+/// Lower every layer from its finalized decision, fuse, elide and account —
+/// shared by [`Program::compile`] (post-search decisions) and
+/// [`Program::from_artifact`] (stored decisions), so the compile path and
+/// the loader's fidelity proof can never drift apart.
+fn build_chain(cfg: &ArchConfig, chain: &Chain, decisions: &[Decision]) -> BuiltChain {
+    let mut layers = Vec::with_capacity(chain.layers.len());
+    let mut fused = Trace::new();
+    let mut standalone_bytes = 0u64;
+    for (g, d) in chain.layers.iter().zip(decisions) {
+        let lowered = lower_gemm(cfg, g, &d.choice, d.i_order, d.w_order, d.o_order);
+        standalone_bytes += lowered.minisa_bytes();
+        fused.splice_layer(&lowered.trace);
+        layers.push(ProgramLayer { gemm: g.clone(), decision: d.clone(), lowered });
+    }
+    let trace_elided = fused.elide_interlayer_layouts();
+    let mut compat = 0usize;
+    for i in 1..layers.len() {
+        if boundary_compatible(
+            &layers[i - 1].decision,
+            &layers[i].decision,
+            cfg,
+            (&chain.layers[i - 1], &chain.layers[i]),
+        ) {
+            compat += 1;
+        }
+    }
+    let fused_bytes = fused.size_bytes(&Codec::new(cfg));
+    let total_cycles = layers.iter().map(|l| l.decision.report.total_cycles).sum();
+    BuiltChain {
+        layers,
+        fused,
+        elided: compat.max(trace_elided),
+        fused_bytes,
+        standalone_bytes,
+        total_cycles,
     }
 }
 
@@ -620,6 +741,47 @@ mod tests {
         let tall = p.shard_rows(20..23);
         assert_eq!(tall.input_words(), 20 * kf..23 * kf);
         assert_eq!(tall.program.plan_count(), p.plan_count());
+    }
+
+    /// `from_artifact(to_artifact(p))` reproduces the program: identical
+    /// fused stream, plan set, accounting — and executes bit-identically
+    /// with zero runtime plan compiles, without any mapper run.
+    #[test]
+    fn artifact_roundtrip_reproduces_program() {
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("mlp", 8, &[12, 16, 8]);
+        let p = Program::compile(&cfg, &chain, &fast()).unwrap();
+        let art = p.to_artifact(None).unwrap();
+        let searches_before = crate::mapper::search::searches_run();
+        let q = Program::from_artifact(&art).unwrap();
+        assert_eq!(
+            crate::mapper::search::searches_run(),
+            searches_before,
+            "loading must not run the mapper"
+        );
+        assert_eq!(q.fused.insts, p.fused.insts);
+        assert_eq!(q.fused.layer_starts, p.fused.layer_starts);
+        assert_eq!(q.plan_count(), p.plan_count());
+        assert_eq!((q.elided, q.fused_bytes, q.standalone_bytes), (p.elided, p.fused_bytes, p.standalone_bytes));
+        let weights = rand_weights(&chain, 7);
+        let mut rng = Lcg::new(13);
+        let input: Vec<i32> =
+            (0..p.rows() * p.in_features()).map(|_| rng.range(0, 9) as i32 - 4).collect();
+        let mut sim = FunctionalSim::new(&cfg);
+        let got = q.execute_i32(&mut sim, &input, &weights).unwrap();
+        assert_eq!(got, p.reference_i32(&input, &weights));
+        assert_eq!(sim.plan_compiles, 0, "loaded program's plans came precompiled");
+    }
+
+    /// A tampered stream (or accounting) is rejected at load, not served.
+    #[test]
+    fn from_artifact_rejects_drifted_accounting() {
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("mlp", 8, &[12, 8]);
+        let p = Program::compile(&cfg, &chain, &fast()).unwrap();
+        let mut art = p.to_artifact(None).unwrap();
+        art.decision.fused_bytes += 1;
+        assert!(matches!(Program::from_artifact(&art), Err(ArtifactError::Mismatch(_))));
     }
 
     /// `total_cycles` stays the sum of the (possibly re-estimated) per-layer

@@ -1,0 +1,247 @@
+//! Artifact round-trip battery — the acceptance criteria of the
+//! compile/serve redesign, as tests:
+//!
+//! * `compile → save → load → re-encode` is **byte-stable** across
+//!   randomized suite-shaped chains and both dataflows (the container
+//!   serialization is a fixed point, and a loaded program re-emits the
+//!   exact stream it was loaded from);
+//! * a `Program` loaded via `Program::from_artifact` serves
+//!   **bit-identically** to the freshly compiled one — for every `Element`
+//!   backend — with **zero mapper runs** at load (`searches_run()` frozen,
+//!   `program_compiles == 0`, `artifact_loads == 1`) and zero runtime plan
+//!   compiles.
+
+use std::sync::Arc;
+
+use minisa::arch::ArchConfig;
+use minisa::arith::{decode_words, encode_words, ElemType};
+use minisa::artifact::{Artifact, Compiler};
+use minisa::coordinator::serve::{spawn, ArtifactSource, NaiveExecutor, Request};
+use minisa::functional::FunctionalSim;
+use minisa::mapper::chain::Chain;
+use minisa::mapper::search::searches_run;
+use minisa::mapping::Dataflow;
+use minisa::program::Program;
+use minisa::util::prop::forall;
+use minisa::util::Lcg;
+use minisa::with_element;
+use minisa::workloads::Gemm;
+
+fn temp_path(tag: &str, case: usize) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("minisa_{tag}_{}_{case}.minisa", std::process::id()))
+}
+
+/// compile → save → load → re-encode is byte-stable, across randomized
+/// chains (suite-shaped feature ladders, 1–3 layers, every element type).
+#[test]
+fn compile_save_load_reencode_byte_stable() {
+    forall("artifact-byte-stability", 20, |g| {
+        // Case id drawn from the generator (forall takes `Fn`, so no
+        // mutable capture): seeds the weights and names the temp file.
+        let case = g.usize(1, 1_000_000);
+        let (ah, aw) = *g.pick(&[(4usize, 4usize), (4, 8), (8, 8)]);
+        let cfg = ArchConfig::paper(ah, aw);
+        // Suite-shaped small ladders (BConv-like narrow K, NTT-like square,
+        // GPT-like widen/narrow), 1–3 layers.
+        let n_layers = g.usize(1, 3);
+        let widths = [8usize, 12, 16, 20, 24];
+        let mut dims = vec![*g.pick(&widths)];
+        for _ in 0..n_layers {
+            dims.push(*g.pick(&widths));
+        }
+        let m = *g.pick(&[4usize, 8, 10]);
+        let chain = Chain::mlp("prop", m, &dims);
+        let elem = *g.pick(&ElemType::ALL);
+        let mut rng = Lcg::new(case as u64 * 7919 + 5);
+        let weights: Vec<Vec<u64>> =
+            chain.layers.iter().map(|gm| elem.sample_words(&mut rng, gm.k * gm.n)).collect();
+        let art = Compiler::new(&cfg)
+            .elem(elem)
+            .weights(weights)
+            .compile(&chain)
+            .expect("chain compiles");
+        let bytes = art.to_bytes();
+        // Parse → serialize is a fixed point.
+        let back = Artifact::from_bytes(&bytes).expect("parses");
+        assert_eq!(back.to_bytes(), bytes, "container serialization fixed point");
+        // Through the filesystem.
+        let path = temp_path("prop", case);
+        art.save(&path).unwrap();
+        let loaded = Artifact::load(&path).expect("loads");
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.to_bytes(), bytes, "file round-trip fixed point");
+        // Through a Program and back: the loaded executable form re-encodes
+        // to the exact stream it was loaded from.
+        let program = Program::from_artifact(&loaded).expect("loads into a Program");
+        let re = program.to_artifact(loaded.payload.clone()).expect("re-packages");
+        assert_eq!(re.to_bytes(), bytes, "load → re-encode byte-stable");
+    });
+}
+
+/// Byte stability specifically across **both dataflows**: the alternating
+/// 3-boundary MLP compiles layers under WO-S *and* IO-S (asserted), and the
+/// artifact still round-trips exactly.
+#[test]
+fn both_dataflows_roundtrip_byte_stable() {
+    let cfg = ArchConfig::paper(4, 4);
+    let chain = Chain::mlp("alt", 32, &[32, 32, 32, 32]);
+    let art = Compiler::new(&cfg).compile(&chain).unwrap();
+    let program = Program::from_artifact(&art).unwrap();
+    let dfs: Vec<Dataflow> = program.layers.iter().map(|l| l.decision.choice.df).collect();
+    assert!(
+        dfs.contains(&Dataflow::WoS) && dfs.contains(&Dataflow::IoS),
+        "both dataflows present: {dfs:?}"
+    );
+    assert!(program.elided >= 1, "elision survives the trip");
+    let bytes = art.to_bytes();
+    assert_eq!(Artifact::from_bytes(&bytes).unwrap().to_bytes(), bytes);
+    assert_eq!(program.to_artifact(None).unwrap().to_bytes(), bytes);
+}
+
+/// In-process acceptance: for i32 / f32 / Goldilocks, the loaded program
+/// executes bit-identically to the freshly compiled one, with zero mapper
+/// runs at load and zero runtime plan compiles.
+#[test]
+fn loaded_program_executes_bit_identically_in_process() {
+    let cfg = ArchConfig::paper(4, 4);
+    let chain = Chain::mlp("acc", 8, &[12, 16, 8]);
+    // Same deterministic profile as Compiler's default, so `fresh` and the
+    // artifact's program come from identical searches.
+    let opts = minisa::mapper::search::MapperOptions {
+        full_layout_search: false,
+        threads: 1,
+        ..Default::default()
+    };
+    let fresh = Program::compile(&cfg, &chain, &opts).unwrap();
+    for elem in [ElemType::I32, ElemType::F32, ElemType::Goldilocks] {
+        let mut rng = Lcg::new(101);
+        let weight_words: Vec<Vec<u64>> =
+            chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect();
+        let art = Compiler::new(&cfg)
+            .elem(elem)
+            .weights(weight_words.clone())
+            .compile(&chain)
+            .unwrap();
+        let searches_before = searches_run();
+        let loaded = Program::from_artifact(&art).unwrap();
+        assert_eq!(searches_run(), searches_before, "{elem}: load must not run the mapper");
+        assert_eq!(loaded.fused.insts, fresh.fused.insts, "{elem}: same canonical stream");
+        assert_eq!(loaded.plan_count(), fresh.plan_count());
+        let input_words = elem.sample_words(&mut rng, fresh.rows() * fresh.in_features());
+        let identical = with_element!(elem, E => {
+            let w: Vec<Vec<E>> = weight_words.iter().map(|m| decode_words::<E>(m)).collect();
+            let input: Vec<E> = decode_words::<E>(&input_words);
+            let mut sim_fresh: FunctionalSim<E> = FunctionalSim::new(&cfg);
+            let mut sim_loaded: FunctionalSim<E> = FunctionalSim::new(&cfg);
+            let a = fresh.execute(&mut sim_fresh, &input, &w).unwrap();
+            let b = loaded.execute(&mut sim_loaded, &input, &w).unwrap();
+            assert_eq!(sim_loaded.plan_compiles, 0, "{elem}: loaded plans came recompiled-at-load");
+            a == b && b == loaded.reference(&input, &w)
+        });
+        assert!(identical, "{elem}: loaded execution bit-identical to compiled + reference");
+    }
+}
+
+/// Serving acceptance: a session registered from an artifact answers every
+/// request with exactly the bytes the compiled session answers, for every
+/// element backend — and its server never compiles (`program_compiles == 0`,
+/// `artifact_loads == 1`).
+#[test]
+fn artifact_session_matches_compiled_session_every_backend() {
+    for elem in ElemType::ALL {
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("serve", 4, &[8, 12, 8]);
+        let mut rng = Lcg::new(7 + elem as u64);
+        let weight_words: Vec<Vec<u64>> =
+            chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect();
+        let art = Compiler::new(&cfg)
+            .elem(elem)
+            .weights(weight_words.clone())
+            .compile(&chain)
+            .unwrap();
+
+        let (tx_c, rx_c, h_c, server_c) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let (tx_a, rx_a, h_a, server_a) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let pid_c = if elem == ElemType::F32 {
+            let wf: Vec<Vec<f32>> =
+                weight_words.iter().map(|m| decode_words::<f32>(m)).collect();
+            server_c.register_chain(&chain, wf).unwrap()
+        } else {
+            server_c.register_chain_elem(&chain, weight_words.clone(), elem).unwrap()
+        };
+        let searches_before = searches_run();
+        let pid_a = server_a.register(ArtifactSource::Artifact(Box::new(art))).unwrap();
+        assert_eq!(searches_run(), searches_before, "{elem}: registration ran the mapper");
+
+        for id in 0..4u64 {
+            let words = elem.sample_words(&mut rng, 4 * 8);
+            if elem == ElemType::F32 {
+                let input: Vec<f32> = decode_words::<f32>(&words);
+                tx_c.send(Request::for_program(id, pid_c, 4, input.clone())).unwrap();
+                tx_a.send(Request::for_program(id, pid_a, 4, input)).unwrap();
+            } else {
+                tx_c.send(Request::for_program_words(id, pid_c, 4, words.clone())).unwrap();
+                tx_a.send(Request::for_program_words(id, pid_a, 4, words)).unwrap();
+            }
+        }
+        let mut got_c = std::collections::HashMap::new();
+        let mut got_a = std::collections::HashMap::new();
+        for _ in 0..4 {
+            let rc = rx_c.recv().unwrap();
+            assert!(rc.error.is_none(), "{elem}: {:?}", rc.error);
+            got_c.insert(rc.id, (rc.output, rc.output_words));
+            let ra = rx_a.recv().unwrap();
+            assert!(ra.error.is_none(), "{elem}: {:?}", ra.error);
+            got_a.insert(ra.id, (ra.output, ra.output_words));
+        }
+        // f32 outputs compare as bits so the check is truly bit-level.
+        for (id, (out_c, words_c)) in &got_c {
+            let (out_a, words_a) = &got_a[id];
+            let bits = |v: &[f32]| -> Vec<u64> { encode_words::<f32>(v) };
+            assert_eq!(bits(out_a), bits(out_c), "{elem}: request {id} f32 output bits");
+            assert_eq!(words_a, words_c, "{elem}: request {id} word output");
+        }
+        drop(tx_c);
+        drop(tx_a);
+        let stats_c = h_c.join().unwrap();
+        let stats_a = h_a.join().unwrap();
+        assert_eq!(stats_c.program_compiles, 1, "{elem}: compiled session compiles once");
+        assert_eq!(stats_c.artifact_loads, 0);
+        assert_eq!(stats_a.program_compiles, 0, "{elem}: artifact session never compiles");
+        assert_eq!(stats_a.artifact_loads, 1);
+        assert_eq!(stats_a.program_served, 4);
+        assert_eq!(server_a.fleet().plan_compiles(), 0, "{elem}: no runtime plan compiles");
+    }
+}
+
+/// A corrupted container never loads into a Program (checksum layer), and a
+/// container whose *accounting* drifted from its stream is rejected by the
+/// loader's fidelity proof (semantic layer).
+#[test]
+fn corruption_is_rejected_at_both_layers() {
+    let cfg = ArchConfig::paper(4, 4);
+    let chain = Chain::mlp("tamper", 4, &[8, 8]);
+    let art = Compiler::new(&cfg).compile(&chain).unwrap();
+    let bytes = art.to_bytes();
+    // Checksum layer: any flipped body byte fails from_bytes.
+    for idx in [12usize, bytes.len() / 2, bytes.len() - 9] {
+        let mut bad = bytes.clone();
+        bad[idx] ^= 0x10;
+        assert!(Artifact::from_bytes(&bad).is_err(), "flip at {idx} must be caught");
+    }
+    // Semantic layer: valid checksum, lying accounting.
+    let mut lying = art.clone();
+    lying.decision.elided += 1;
+    let relaundered = Artifact::from_bytes(&lying.to_bytes()).unwrap();
+    assert!(Program::from_artifact(&relaundered).is_err(), "accounting drift must be caught");
+    // Semantic layer: stream swapped for a different chain's stream.
+    let other = Compiler::new(&cfg)
+        .compile(&Chain { layers: vec![Gemm::new("o", "t", 4, 8, 8), Gemm::new("p", "t", 4, 8, 8)] })
+        .unwrap();
+    let mut franken = art.clone();
+    franken.trace_bytes = other.trace_bytes.clone();
+    franken.inst_count = other.inst_count;
+    franken.layer_starts = vec![0];
+    let franken = Artifact::from_bytes(&franken.to_bytes()).unwrap();
+    assert!(Program::from_artifact(&franken).is_err(), "foreign stream must be caught");
+}

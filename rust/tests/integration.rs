@@ -47,7 +47,7 @@ fn lowered_traces_roundtrip_through_codec() {
     let prog = lower_gemm(&cfg, &g, &d.choice, d.i_order, d.w_order, d.o_order);
     let codec = Codec::new(&cfg);
     let bytes = codec.encode_all(&prog.trace.insts).expect("encodable");
-    assert_eq!(bytes.len() as u64, prog.trace.size_bytes(&cfg));
+    assert_eq!(bytes.len() as u64, prog.trace.size_bytes(&codec));
     let decoded = codec.decode_n(&bytes, prog.trace.insts.len()).expect("decodable");
     // Execute/memory instructions must decode identically (layout VN size
     // is architectural, checked separately).

@@ -16,9 +16,14 @@
 use std::path::Path;
 
 use minisa::arch::ArchConfig;
+use minisa::arith::ElemType;
+use minisa::artifact::{fnv64, Artifact, Compiler};
 use minisa::isa::encode::Codec;
+use minisa::mapper::chain::Chain;
 use minisa::mapper::lower_gemm;
 use minisa::mapper::search::{search, MapperOptions};
+use minisa::program::Program;
+use minisa::util::Lcg;
 use minisa::workloads::{self, ntt, Gemm};
 
 const GOLDEN_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/isa_golden.txt");
@@ -47,10 +52,30 @@ fn golden_workloads() -> Vec<Gemm> {
     ]
 }
 
-fn fnv64(bytes: &[u8]) -> u64 {
-    bytes
-        .iter()
-        .fold(0xcbf2_9ce4_8422_2325u64, |h, &b| (h ^ b as u64).wrapping_mul(0x100_0000_01b3))
+/// The two artifacts whose **container bytes** the snapshot locks: a 3-layer
+/// alternating MLP with an i32 weights payload, and a bare (weightless)
+/// single-layer scaled ZKP NTT. Deterministic: `opts()` search profile,
+/// fixed weight seed.
+fn golden_artifacts() -> Vec<(&'static str, Artifact)> {
+    let cfg = ArchConfig::paper(4, 4);
+    let mlp = Chain::mlp("golden_mlp", 16, &[16, 24, 16, 8]);
+    let mut rng = Lcg::new(0x9A17);
+    let weights: Vec<Vec<u64>> =
+        mlp.layers.iter().map(|g| ElemType::I32.sample_words(&mut rng, g.k * g.n)).collect();
+    let with_weights = Compiler::new(&cfg)
+        .options(opts())
+        .elem(ElemType::I32)
+        .weights(weights)
+        .compile(&mlp)
+        .expect("golden MLP compiles");
+    let suite = workloads::suite50();
+    let zkp = suite.iter().find(|g| g.name == "zkp_ntt_8192").unwrap();
+    let ntt_chain = Chain { layers: vec![ntt::scaled(zkp, 64)] };
+    let bare = Compiler::new(&cfg)
+        .options(opts())
+        .compile(&ntt_chain)
+        .expect("golden NTT compiles");
+    vec![("golden_mlp_i32", with_weights), ("golden_zkp_ntt_64", bare)]
 }
 
 /// Lower + encode every golden workload and render the snapshot lines.
@@ -85,6 +110,21 @@ fn snapshot() -> String {
             act,
             bytes.len(),
             fnv64(&bytes),
+        ));
+    }
+    // Artifact container bytes: any drift in the wire format, the encoded
+    // stream, or the serialized decisions fails the diff here.
+    for (name, art) in golden_artifacts() {
+        let container = art.to_bytes();
+        assert_eq!(container, art.to_bytes(), "{name}: container deterministic");
+        lines.push(format!(
+            "artifact={} layers={} insts={} trace_bytes={} container_bytes={} fnv={:016x}",
+            name,
+            art.chain.layers.len(),
+            art.inst_count,
+            art.trace_bytes.len(),
+            container.len(),
+            fnv64(&container),
         ));
     }
     lines.join("\n") + "\n"
@@ -137,5 +177,29 @@ fn golden_traces_roundtrip_through_codec() {
         // Byte count agrees with the bit-exact width model.
         let bits: u64 = prog.trace.insts.iter().map(|i| codec.width_bits(i) as u64).sum();
         assert_eq!(bytes.len() as u64, bits.div_ceil(8), "{}: width model", g.name);
+    }
+}
+
+/// The golden artifact containers parse back to equal values, pass their
+/// stream round-trip verification, and load into Programs without a mapper
+/// run — structural lock next to the snapshot's byte lock. (Small chains:
+/// safe for the debug pass.)
+#[test]
+fn golden_artifact_containers_roundtrip() {
+    for (name, art) in golden_artifacts() {
+        let bytes = art.to_bytes();
+        let back = Artifact::from_bytes(&bytes).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(back, art, "{name}: parse(serialize(a)) == a");
+        let check = back.verify().unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(check.insts, art.inst_count, "{name}");
+        let searches_before = minisa::mapper::search::searches_run();
+        let program = Program::from_artifact(&back).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(
+            minisa::mapper::search::searches_run(),
+            searches_before,
+            "{name}: loading must not run the mapper"
+        );
+        assert_eq!(program.fused.len(), art.inst_count, "{name}");
+        assert!(program.plan_count() > 0, "{name}: wave plans recompiled at load");
     }
 }
