@@ -69,6 +69,10 @@ impl Args {
     pub fn bool_flag(&self, k: &str) -> bool {
         self.flags.get(k).map(|v| v == "true" || v == "1").unwrap_or(false)
     }
+
+    pub fn f64_flag(&self, k: &str, default: f64) -> f64 {
+        self.flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
 }
 
 fn load_workloads(args: &Args) -> Vec<Gemm> {
@@ -405,13 +409,52 @@ pub fn cmd_workloads(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Parse the fleet sizing flags shared by the serving commands.
+/// Parse the fleet sizing + admission flags shared by the serving commands.
 fn server_options(args: &Args) -> crate::coordinator::serve::ServerOptions {
+    use crate::coordinator::admission::AdmissionOptions;
     let d = crate::coordinator::serve::ServerOptions::default();
+    let da = AdmissionOptions::default();
     crate::coordinator::serve::ServerOptions {
         devices: args.usize_flag("devices", d.devices).max(1),
         shard_min_rows: args.usize_flag("shard-min-rows", d.shard_min_rows).max(1),
         max_batch: args.usize_flag("max-batch", d.max_batch).max(1),
+        shard_timeout_ms: args.usize_flag("shard-timeout-ms", d.shard_timeout_ms as usize) as u64,
+        admission: AdmissionOptions {
+            rate_per_s: args.f64_flag("rate-limit", da.rate_per_s),
+            burst: args.f64_flag("burst", da.burst),
+            max_in_flight: args.usize_flag("in-flight", da.max_in_flight),
+        },
+    }
+}
+
+/// Parse `--qos` / `--deadline-ms` on the serving commands. The deadline is
+/// relative: it is applied per request at send time, not resolved to one
+/// absolute instant shared by the whole run.
+fn qos_flags(args: &Args) -> anyhow::Result<(crate::coordinator::admission::QosClass, Option<u64>)> {
+    use crate::coordinator::admission::QosClass;
+    let qos = match args.flags.get("qos") {
+        None => QosClass::Interactive,
+        Some(s) => QosClass::parse(s).map_err(anyhow::Error::msg)?,
+    };
+    let deadline_ms = match args.flags.get("deadline-ms") {
+        None => None,
+        Some(v) => {
+            Some(v.parse::<u64>().map_err(|e| anyhow::anyhow!("--deadline-ms '{v}': {e}"))?)
+        }
+    };
+    Ok((qos, deadline_ms))
+}
+
+/// Tag a request with the parsed `--qos`/`--deadline-ms` pair.
+fn tag_request(
+    r: crate::coordinator::serve::Request,
+    qos: crate::coordinator::admission::QosClass,
+    deadline_ms: Option<u64>,
+) -> crate::coordinator::serve::Request {
+    let r = r.with_qos(qos);
+    match deadline_ms {
+        Some(ms) => r.with_deadline_ms(ms),
+        None => r,
     }
 }
 
@@ -529,7 +572,7 @@ pub fn cmd_run(args: &Args) -> anyhow::Result<()> {
         let fleet = Fleet::new(
             &cfg,
             std::sync::Arc::new(NaiveExecutor),
-            FleetOptions { devices, shard_min_rows },
+            FleetOptions { devices, shard_min_rows, ..Default::default() },
         );
         let ww = WordWeights::new(weight_words, elem);
         let rows = program.rows();
@@ -747,6 +790,7 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let cfg = configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(16, 64));
     let requests = args.usize_flag("requests", 64);
     let elem = elem_flag(args, ElemType::F32)?;
+    let (qos, deadline_ms) = qos_flags(args)?;
     let sopts = server_options(args);
     let executor = serving_executor(args);
     let backend = executor.name().to_string();
@@ -756,7 +800,8 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if elem == ElemType::F32 {
         let weight = Arc::new(rng.f32_matrix(64, 64)); // shared → batches by identity
         for id in 0..requests as u64 {
-            tx.send(Request::gemm(id, 64, 64, 64, rng.f32_matrix(64, 64), Arc::clone(&weight)))?;
+            let r = Request::gemm(id, 64, 64, 64, rng.f32_matrix(64, 64), Arc::clone(&weight));
+            tx.send(tag_request(r, qos, deadline_ms))?;
         }
     } else {
         let g = Gemm::new("serve_gemm", "cli", 64, 64, 64);
@@ -765,25 +810,38 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let pid = server.register_chain_elem(&chain, vec![w], elem)?;
         eprintln!("single-GEMM session {pid:?} over {elem}");
         for id in 0..requests as u64 {
-            tx.send(Request::for_program_words(id, pid, 64, elem.sample_words(&mut rng, 64 * 64)))?;
+            let r = Request::for_program_words(id, pid, 64, elem.sample_words(&mut rng, 64 * 64));
+            tx.send(tag_request(r, qos, deadline_ms))?;
         }
     }
     let mut served = 0;
+    let mut dropped = 0; // shed / deadline_exceeded: policy, not failure
     let mut failed = 0;
     let mut lat = Vec::new();
-    while served + failed < requests {
+    while served + dropped + failed < requests {
+        use crate::coordinator::admission::ErrorCode;
         let r = rx.recv()?;
-        if let Some(e) = r.error {
-            eprintln!("request {} failed: {e}", r.id);
-            failed += 1;
-        } else {
-            lat.push(r.service_us);
-            served += 1;
+        match (r.code, r.error) {
+            (Some(ErrorCode::Shed | ErrorCode::DeadlineExceeded), Some(e)) => {
+                eprintln!("request {} dropped: {e}", r.id);
+                dropped += 1;
+            }
+            (_, Some(e)) => {
+                eprintln!("request {} failed: {e}", r.id);
+                failed += 1;
+            }
+            _ => {
+                lat.push(r.service_us);
+                served += 1;
+            }
         }
     }
     drop(tx);
     let stats = h.join().map_err(|_| anyhow::anyhow!("server panicked"))?;
     anyhow::ensure!(failed == 0, "{failed}/{requests} requests failed");
+    if dropped > 0 {
+        println!("{dropped}/{requests} requests shed or expired (typed, by policy)");
+    }
     let wall_us = wall.elapsed().as_secs_f64() * 1e6;
     println!(
         "served {} requests on '{}' in {:.1} ms: p50 {:.1} µs, p99 {:.1} µs, {:.0} req/s, {} batches (max {})",
@@ -797,7 +855,7 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         stats.max_batch,
     );
     if sopts.devices > 1 {
-        println!("{}", server.fleet().report(wall_us).render());
+        println!("{}", server.fleet_report(wall_us).render());
     }
     Ok(())
 }
@@ -883,24 +941,32 @@ pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
         if from_artifact { "recompiled from the loaded stream" } else { "precompiled" },
     );
 
+    let (qos, deadline_ms) = qos_flags(args)?;
     let wall = std::time::Instant::now();
     for id in 0..requests as u64 {
-        if elem == ElemType::F32 {
-            tx.send(Request::for_program(id, pid, m, rng.f32_matrix(m, kf)))?;
+        let r = if elem == ElemType::F32 {
+            Request::for_program(id, pid, m, rng.f32_matrix(m, kf))
         } else {
-            tx.send(Request::for_program_words(
-                id,
-                pid,
-                m,
-                elem.sample_words(&mut rng, m * kf),
-            ))?;
-        }
+            Request::for_program_words(id, pid, m, elem.sample_words(&mut rng, m * kf))
+        };
+        tx.send(tag_request(r, qos, deadline_ms))?;
     }
     let mut lat = Vec::new();
+    let mut dropped = 0; // shed / deadline_exceeded: policy, not failure
     for _ in 0..requests {
+        use crate::coordinator::admission::ErrorCode;
         let r = rx.recv()?;
-        anyhow::ensure!(r.error.is_none(), "request {}: {}", r.id, r.error.unwrap_or_default());
-        lat.push(r.service_us);
+        match (r.code, r.error) {
+            (Some(ErrorCode::Shed | ErrorCode::DeadlineExceeded), Some(e)) => {
+                eprintln!("request {} dropped: {e}", r.id);
+                dropped += 1;
+            }
+            (_, Some(e)) => anyhow::bail!("request {}: {e}", r.id),
+            _ => lat.push(r.service_us),
+        }
+    }
+    if dropped > 0 {
+        println!("{dropped}/{requests} requests shed or expired (typed, by policy)");
     }
     drop(tx);
     let stats = h.join().map_err(|_| anyhow::anyhow!("server panicked"))?;
@@ -930,13 +996,265 @@ pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
         println!("artifact session: 1 load, 0 program compiles, 0 mapper runs ✓");
     }
     if sopts.devices > 1 {
-        let report = server.fleet().report(wall_us);
+        let report = server.fleet_report(wall_us);
         anyhow::ensure!(
             report.plan_compiles() == 0,
             "fleet serving compiled plans at runtime (expected zero)"
         );
         println!("{}", report.render());
     }
+    Ok(())
+}
+
+/// `minisa loadgen` — open-loop Poisson load generator for the serving
+/// front door (EXPERIMENTS.md §Serving robustness).
+///
+/// Drives a mixed-QoS, mixed-element workload at an offered rate that is
+/// independent of service latency (open loop: a slow server does not slow
+/// the arrival process), across three model sessions (f32, saturating i32,
+/// Goldilocks) on a simulated device fleet. Emits `BENCH_serving.json`
+/// (throughput, per-class p50/p99/p999 latency, shed/expired/retried
+/// counts) and enforces the robustness invariants: every request answered
+/// exactly once, and — unless `--overload` — zero Interactive sheds and
+/// zero execution errors.
+///
+/// `--faults scripted` arms a deterministic [`FaultPlan`] (transient
+/// dropout of device 1 plus slow shards); requires the `faults` feature
+/// outside of test builds.
+pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
+    use crate::coordinator::admission::{ErrorCode, QosClass};
+    use crate::coordinator::serve::{spawn_with_options, NaiveExecutor, Request};
+    use std::collections::{HashMap as Map, HashSet};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let cfg = match (args.flags.get("ah"), args.flags.get("aw")) {
+        (Some(_), Some(_)) => configs(args).into_iter().next().unwrap(),
+        _ => ArchConfig::paper(4, 4),
+    };
+    let duration = Duration::from_millis(args.usize_flag("duration-ms", 1000) as u64);
+    let rate = args.f64_flag("rate", 200.0).max(1.0); // offered load, req/s
+    let overload = args.bool_flag("overload");
+    let interactive_deadline_ms = args.usize_flag("deadline-ms", 200) as u64;
+    let sopts = server_options(args);
+    let seed = args.usize_flag("seed", 42) as u64;
+    let mut rng = crate::util::Lcg::new(seed);
+
+    // Loadgen measures the front door, not the backend: always the naive
+    // executor, so runs are deterministic and PJRT noise stays out.
+    let (tx, rx, h, server) = spawn_with_options(&cfg, Arc::new(NaiveExecutor), sopts);
+
+    // Three sessions across distinct element backends; the affinity hash
+    // of each session is a distinct rate-limiter key.
+    let m = 4usize;
+    let dims = [8usize, 12, 8];
+    let chain = Chain::mlp("loadgen", m, &dims);
+    let kf = dims[0];
+    let w_f32: Vec<Vec<f32>> = chain.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect();
+    let pid_f32 = server.register_chain(&chain, w_f32)?;
+    let mut word_session = |elem: ElemType, rng: &mut crate::util::Lcg| {
+        let ws: Vec<Vec<u64>> =
+            chain.layers.iter().map(|g| elem.sample_words(rng, g.k * g.n)).collect();
+        server.register_chain_elem(&chain, ws, elem)
+    };
+    let pid_i32 = word_session(ElemType::I32, &mut rng)?;
+    let pid_gl = word_session(ElemType::Goldilocks, &mut rng)?;
+
+    match args.str_flag("faults", "none").as_str() {
+        "none" => {}
+        "scripted" => {
+            #[cfg(any(test, feature = "faults"))]
+            {
+                use crate::coordinator::fleet::{FaultDropout, FaultPlan};
+                let mut dropouts = Vec::new();
+                if sopts.devices > 1 {
+                    dropouts.push(FaultDropout { device: 1, after_shards: 3, transient: true });
+                }
+                server.fleet().set_fault_plan(FaultPlan {
+                    seed,
+                    dropouts,
+                    slow_prob: 0.05,
+                    slow_ms: 2,
+                    panic_prob: 0.0,
+                });
+                eprintln!("fault plan armed: transient device-1 dropout + 5% slow shards");
+            }
+            #[cfg(not(any(test, feature = "faults")))]
+            anyhow::bail!("--faults scripted requires building with `--features faults`");
+        }
+        other => anyhow::bail!("--faults '{other}' (expected none | scripted)"),
+    }
+
+    // Collector: timestamps every response as it arrives; ends when the
+    // server thread drops its response sender.
+    let collector = std::thread::spawn(move || {
+        let mut got: Vec<(u64, Option<ErrorCode>, Instant)> = Vec::new();
+        while let Ok(r) = rx.recv() {
+            got.push((r.id, r.code, Instant::now()));
+        }
+        got
+    });
+
+    // Open-loop Poisson sender: exponential inter-arrivals at `rate`.
+    let mut sent: Map<u64, (Instant, QosClass)> = Map::new();
+    let start = Instant::now();
+    let mut next_s = 0.0f64;
+    let mut id = 0u64;
+    while start.elapsed() < duration {
+        next_s += -(1.0 - rng.f64()).ln() / rate;
+        let target = start + Duration::from_secs_f64(next_s);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        if start.elapsed() >= duration {
+            break;
+        }
+        // QoS mix: 50% Interactive (tight deadline), 30% Batch (loose
+        // deadline), 20% BestEffort (no deadline).
+        let r = match id % 10 {
+            0..=4 => Request::for_program(id, pid_f32, m, rng.f32_matrix(m, kf))
+                .with_qos(QosClass::Interactive)
+                .with_deadline_ms(interactive_deadline_ms),
+            5..=7 => {
+                let words = ElemType::I32.sample_words(&mut rng, m * kf);
+                Request::for_program_words(id, pid_i32, m, words)
+                    .with_qos(QosClass::Batch)
+                    .with_deadline_ms(interactive_deadline_ms * 4)
+            }
+            _ => {
+                let words = ElemType::Goldilocks.sample_words(&mut rng, m * kf);
+                Request::for_program_words(id, pid_gl, m, words)
+                    .with_qos(QosClass::BestEffort)
+            }
+        };
+        sent.insert(id, (Instant::now(), r.admission.qos));
+        tx.send(r)?;
+        id += 1;
+    }
+    let offered_wall_us = start.elapsed().as_secs_f64() * 1e6;
+    drop(tx); // close the front door; the server drains and exits
+    let stats = h.join().map_err(|_| anyhow::anyhow!("server panicked"))?;
+    let got = collector.join().map_err(|_| anyhow::anyhow!("collector panicked"))?;
+    let wall_us = start.elapsed().as_secs_f64() * 1e6;
+
+    // Exactly-once: every sent id answered once, no strays, no duplicates.
+    let mut seen = HashSet::new();
+    let mut lat: Map<QosClass, Vec<f64>> = Map::new();
+    let (mut ok, mut shed, mut expired, mut errors) = (0u64, 0u64, 0u64, 0u64);
+    let mut interactive_shed = 0u64;
+    for (rid, code, at) in &got {
+        anyhow::ensure!(seen.insert(*rid), "duplicate response for request {rid}");
+        let (sent_at, qos) =
+            *sent.get(rid).ok_or_else(|| anyhow::anyhow!("response for unknown id {rid}"))?;
+        match code {
+            None => {
+                ok += 1;
+                lat.entry(qos)
+                    .or_default()
+                    .push(at.saturating_duration_since(sent_at).as_secs_f64() * 1e6);
+            }
+            Some(ErrorCode::Shed) => {
+                shed += 1;
+                if qos == QosClass::Interactive {
+                    interactive_shed += 1;
+                }
+            }
+            Some(ErrorCode::DeadlineExceeded) => expired += 1,
+            Some(ErrorCode::SessionGone | ErrorCode::Watchdog | ErrorCode::Exec) => errors += 1,
+        }
+    }
+    anyhow::ensure!(
+        got.len() == sent.len(),
+        "{} of {} requests went unanswered",
+        sent.len() - got.len().min(sent.len()),
+        sent.len()
+    );
+    anyhow::ensure!(
+        server.admission().in_flight() == 0,
+        "admission in-flight count leaked: {}",
+        server.admission().in_flight()
+    );
+
+    let mut log = crate::util::bench::BenchLog::new();
+    log.metric("offered_rate_per_s", rate);
+    log.metric("duration_ms", duration.as_millis() as f64);
+    log.metric("devices", sopts.devices as f64);
+    log.metric("sent", sent.len() as f64);
+    log.metric("answered", got.len() as f64);
+    log.metric("succeeded", ok as f64);
+    log.metric("shed", shed as f64);
+    log.metric("expired", expired as f64);
+    log.metric("errors", errors as f64);
+    log.metric("interactive_shed", interactive_shed as f64);
+    log.metric("injected", stats.injected as f64);
+    log.metric("batches", stats.batches as f64);
+    log.metric("throughput_per_s", stats.throughput_per_s(wall_us));
+    for qos in QosClass::ALL {
+        let xs = lat.get(&qos).map(|v| v.as_slice()).unwrap_or(&[]);
+        let key = qos.name().replace('-', "_");
+        log.metric(&format!("{key}_succeeded"), xs.len() as f64);
+        for (tag, p) in [("p50", 50.0), ("p99", 99.0), ("p999", 99.9)] {
+            let v = if xs.is_empty() { 0.0 } else { crate::util::percentile(xs, p) };
+            log.metric(&format!("{key}_{tag}_us"), v);
+        }
+    }
+    if sopts.devices > 1 {
+        let rep = server.fleet_report(wall_us);
+        log.metric("retries", rep.retries() as f64);
+        log.metric("watchdog_trips", rep.watchdog_trips() as f64);
+        log.metric("recoveries", rep.recoveries() as f64);
+        log.metric("steal_wait_mean_us", rep.steal_wait_mean_us());
+        println!("{}", rep.render());
+    }
+    let out = args.str_flag("out", "BENCH_serving.json");
+    log.write_json(&out).map_err(|e| anyhow::anyhow!("{out}: {e}"))?;
+
+    println!(
+        "loadgen: offered {:.0} req/s for {} ms over {} device(s): {} sent, {} ok, \
+         {} shed, {} expired, {} errors, {} injected → {out}",
+        rate,
+        duration.as_millis(),
+        sopts.devices,
+        sent.len(),
+        ok,
+        shed,
+        expired,
+        errors,
+        stats.injected,
+    );
+    let ilat = lat.get(&QosClass::Interactive).map(|v| v.as_slice()).unwrap_or(&[]);
+    if !ilat.is_empty() {
+        println!(
+            "interactive: p50 {:.0} µs, p99 {:.0} µs, p999 {:.0} µs (deadline {} ms)",
+            crate::util::percentile(ilat, 50.0),
+            crate::util::percentile(ilat, 99.0),
+            crate::util::percentile(ilat, 99.9),
+            interactive_deadline_ms,
+        );
+        // Acceptance: Interactive p99 stays bounded by its deadline — a
+        // success answered after the deadline would have been converted to
+        // `deadline_exceeded` at the stitch, so any success latency above
+        // the deadline means a hand-off point failed to drop it. 10 ms of
+        // slack covers collector-thread scheduling between the stitch-time
+        // expiry check and the receive timestamp.
+        anyhow::ensure!(
+            crate::util::percentile(ilat, 99.0) <= (interactive_deadline_ms as f64 + 10.0) * 1e3,
+            "interactive p99 exceeds the {interactive_deadline_ms} ms deadline"
+        );
+    }
+    if !overload {
+        anyhow::ensure!(
+            interactive_shed == 0,
+            "{interactive_shed} Interactive requests shed at low offered load"
+        );
+        anyhow::ensure!(errors == 0, "{errors} requests failed (exec/watchdog/session_gone)");
+    }
+    println!(
+        "every request answered exactly once ✓ ({} offered-load window µs {:.0})",
+        if overload { "overload run" } else { "low-load invariants hold" },
+        offered_wall_us,
+    );
     Ok(())
 }
 
@@ -975,6 +1293,11 @@ pub fn usage() -> &'static str {
                   [--artifact f.minisa] (serve a compiled artifact: hard-\n\
                   fails on any mapper run or program compile)\n\
                   [--devices N --shard-min-rows R --max-batch B]\n\
+       loadgen    open-loop Poisson load generator for the serving front\n\
+                  door; emits BENCH_serving.json and enforces the\n\
+                  robustness invariants (docs/SERVING.md)\n\
+                  [--duration-ms N] [--rate R] [--devices N] [--overload]\n\
+                  [--faults none|scripted] [--deadline-ms N] [--out file]\n\
        animate    cycle-by-cycle NEST/BIRRD/OB animation [--m --k --n --waves]\n\
      \n\
      --elem E selects the element arithmetic backend:\n\
@@ -983,7 +1306,11 @@ pub fn usage() -> &'static str {
        NTT number systems; see EXPERIMENTS.md §Field arithmetic)\n\
      --devices N shards work across a simulated N-device fleet (request-\n\
        parallel work stealing + tile-parallel M-row sharding, bit-identical\n\
-       to one device; see EXPERIMENTS.md §Fleet serving)\n"
+       to one device; see EXPERIMENTS.md §Fleet serving)\n\
+     serving admission flags (serve, serve-model, loadgen):\n\
+       --qos interactive|batch|best-effort  --deadline-ms N (per request)\n\
+       --in-flight N --rate-limit R --burst B (shed policy, docs/SERVING.md)\n\
+       --shard-timeout-ms N (per-shard watchdog; 0 = off)\n"
 }
 
 /// Dispatch. Returns process exit code.
@@ -1018,6 +1345,7 @@ pub fn run(argv: &[String]) -> i32 {
         }
         "serve" => cmd_serve(&args),
         "serve-model" => cmd_serve_model(&args),
+        "loadgen" => cmd_loadgen(&args),
         "help" | "" => {
             println!("{}", usage());
             Ok(())
@@ -1224,6 +1552,58 @@ mod tests {
         art.save(&path).unwrap();
         assert_eq!(run(&argv(&["run", "--artifact", path.to_str().unwrap()])), 1);
         std::fs::remove_file(&path).ok();
+    }
+
+    /// The CI smoke step in miniature: loadgen with scripted faults on a
+    /// fleet must answer every request exactly once, shed no Interactive
+    /// traffic at low offered load, and write the bench JSON.
+    #[test]
+    fn loadgen_scripted_faults_smoke() {
+        let out = std::env::temp_dir()
+            .join(format!("minisa_loadgen_{}.json", std::process::id()));
+        let p = out.to_str().unwrap();
+        assert_eq!(
+            run(&argv(&[
+                "loadgen", "--duration-ms", "200", "--rate", "300", "--devices", "3",
+                "--shard-min-rows", "1", "--faults", "scripted", "--out", p,
+            ])),
+            0
+        );
+        let json = std::fs::read_to_string(&out).unwrap();
+        assert!(json.contains("throughput_per_s"), "{json}");
+        assert!(json.contains("interactive_p99_us"), "{json}");
+        std::fs::remove_file(&out).ok();
+    }
+
+    /// Overload run: a tiny in-flight budget on one device sheds traffic,
+    /// but with `--overload` the command still exits 0 (typed sheds are
+    /// policy, not failure) and every request is answered exactly once.
+    #[test]
+    fn loadgen_overload_sheds_but_answers_everything() {
+        let out = std::env::temp_dir()
+            .join(format!("minisa_loadgen_over_{}.json", std::process::id()));
+        let p = out.to_str().unwrap();
+        assert_eq!(
+            run(&argv(&[
+                "loadgen", "--duration-ms", "150", "--rate", "500", "--in-flight", "2",
+                "--rate-limit", "50", "--burst", "2", "--overload", "--out", p,
+            ])),
+            0
+        );
+        std::fs::remove_file(&out).ok();
+    }
+
+    #[test]
+    fn loadgen_rejects_unknown_fault_schedule() {
+        assert_eq!(run(&argv(&["loadgen", "--duration-ms", "50", "--faults", "chaos"])), 1);
+    }
+
+    #[test]
+    fn serve_rejects_unknown_qos_class() {
+        assert_eq!(
+            run(&argv(&["serve", "--requests", "2", "--qos", "gold", "--ah", "4", "--aw", "4"])),
+            1
+        );
     }
 
     #[test]

@@ -1,0 +1,350 @@
+//! Admission control for the serving front door: per-request deadlines and
+//! QoS classes, a per-session token-bucket rate limiter, and a global
+//! in-flight budget with graduated load shedding.
+//!
+//! The policy (docs/SERVING.md) is deliberately small:
+//!
+//! * Every request carries an [`Admission`] tag — a [`QosClass`] plus an
+//!   optional absolute deadline. Requests whose deadline has passed are
+//!   answered with a typed `deadline_exceeded` error at the next hand-off
+//!   point instead of occupying a device.
+//! * A token bucket per session (keyed by the leader's batch-affinity hash)
+//!   bounds the sustained rate of `Batch`/`BestEffort` traffic.
+//!   `Interactive` traffic is exempt from the rate limiter and only sheds
+//!   at the hard capacity wall.
+//! * A global in-flight budget sheds `BestEffort` first (at half budget),
+//!   then `Batch` (at full budget), then `Interactive` (at twice budget —
+//!   the hard wall that keeps the leader from queueing without bound).
+//!
+//! All limits default to "off" (`rate_per_s = ∞`, `max_in_flight = MAX`)
+//! so a server constructed with `ServerOptions::default()` behaves exactly
+//! like the pre-admission front door.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Quality-of-service class carried by every request. Ordering is strict:
+/// under pressure `BestEffort` sheds before `Batch`, and `Batch` before
+/// `Interactive`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum QosClass {
+    /// Latency-sensitive traffic: exempt from the rate limiter, shed only
+    /// at the hard capacity wall.
+    Interactive,
+    /// Throughput traffic: rate-limited, shed at the full in-flight budget.
+    Batch,
+    /// Scavenger traffic: rate-limited, shed first (at half budget).
+    BestEffort,
+}
+
+impl QosClass {
+    pub const ALL: [QosClass; 3] = [QosClass::Interactive, QosClass::Batch, QosClass::BestEffort];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Batch => "batch",
+            QosClass::BestEffort => "best-effort",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "interactive" => Ok(QosClass::Interactive),
+            "batch" => Ok(QosClass::Batch),
+            "best-effort" | "besteffort" => Ok(QosClass::BestEffort),
+            other => Err(format!(
+                "unknown QoS class '{other}' (expected interactive, batch, best-effort)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for QosClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Per-request admission tag: QoS class plus optional absolute deadline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Admission {
+    pub qos: QosClass,
+    /// Absolute wall-clock deadline; `None` = no deadline.
+    pub deadline: Option<Instant>,
+}
+
+impl Default for Admission {
+    fn default() -> Self {
+        Admission { qos: QosClass::Interactive, deadline: None }
+    }
+}
+
+impl Admission {
+    pub fn new(qos: QosClass) -> Self {
+        Admission { qos, deadline: None }
+    }
+
+    /// Set a deadline `ms` milliseconds from now.
+    pub fn with_deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline = Some(Instant::now() + Duration::from_millis(ms));
+        self
+    }
+
+    /// `true` iff the deadline (if any) has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// Machine-readable error codes on [`super::serve::Response`]. The string
+/// forms are stable (docs/SERVING.md §Error codes) — clients switch on
+/// these, not on the human-readable message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Rejected by admission control (rate limit or in-flight budget).
+    Shed,
+    /// Deadline passed before the result could be produced.
+    DeadlineExceeded,
+    /// The session was unregistered while the request was in flight.
+    SessionGone,
+    /// A shard exceeded the per-shard watchdog and the retry budget ran out.
+    Watchdog,
+    /// Execution failed (validation error, executor error, device panic...).
+    Exec,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::Shed => "shed",
+            ErrorCode::DeadlineExceeded => "deadline_exceeded",
+            ErrorCode::SessionGone => "session_gone",
+            ErrorCode::Watchdog => "watchdog",
+            ErrorCode::Exec => "exec",
+        }
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.as_str())
+    }
+}
+
+/// Admission policy knobs. Defaults disable every limit, preserving the
+/// behavior of a front door without admission control.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionOptions {
+    /// Sustained per-session token refill rate (requests/second) for
+    /// `Batch`/`BestEffort` traffic. `f64::INFINITY` = unlimited.
+    pub rate_per_s: f64,
+    /// Token-bucket capacity (burst size), in requests.
+    pub burst: f64,
+    /// Global in-flight budget: `Batch` sheds at this many admitted
+    /// requests outstanding, `BestEffort` at half, `Interactive` at twice.
+    /// `usize::MAX` = unlimited.
+    pub max_in_flight: usize,
+}
+
+impl Default for AdmissionOptions {
+    fn default() -> Self {
+        AdmissionOptions { rate_per_s: f64::INFINITY, burst: 16.0, max_in_flight: usize::MAX }
+    }
+}
+
+/// Admission verdict for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Admitted; the caller must balance with [`AdmissionController::complete`]
+    /// exactly once when the request is answered.
+    Admit,
+    /// Shed by the rate limiter or the in-flight budget.
+    Shed,
+    /// Dead on arrival: the deadline already passed.
+    Expired,
+}
+
+#[derive(Debug)]
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    fn try_take(&mut self, now: Instant, rate: f64, burst: f64) -> bool {
+        if rate.is_infinite() {
+            return true;
+        }
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * rate).min(burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// The front-door gate: one per [`super::serve::Server`]. Tracks per-session
+/// token buckets and the global count of admitted-but-unanswered requests.
+#[derive(Debug)]
+pub struct AdmissionController {
+    opts: AdmissionOptions,
+    buckets: Mutex<HashMap<u64, TokenBucket>>,
+    in_flight: AtomicUsize,
+}
+
+impl AdmissionController {
+    pub fn new(opts: AdmissionOptions) -> Self {
+        AdmissionController { opts, buckets: Mutex::new(HashMap::new()), in_flight: AtomicUsize::new(0) }
+    }
+
+    /// Admitted-but-unanswered request count.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Shedding threshold for `qos` given the configured budget.
+    fn capacity_for(&self, qos: QosClass) -> usize {
+        let max = self.opts.max_in_flight;
+        if max == usize::MAX {
+            return usize::MAX;
+        }
+        match qos {
+            QosClass::BestEffort => max.div_ceil(2),
+            QosClass::Batch => max,
+            QosClass::Interactive => max.saturating_mul(2),
+        }
+    }
+
+    /// Gate one request for the session identified by `session_key` (the
+    /// leader's batch-affinity hash). On [`Verdict::Admit`] the in-flight
+    /// count is incremented; the caller must call [`Self::complete`] once
+    /// per admitted request when its response is sent.
+    pub fn admit(&self, session_key: u64, adm: &Admission, now: Instant) -> Verdict {
+        if adm.expired(now) {
+            return Verdict::Expired;
+        }
+        // Hard capacity wall first: it applies to every class.
+        if self.in_flight.load(Ordering::Relaxed) >= self.capacity_for(adm.qos) {
+            return Verdict::Shed;
+        }
+        // Rate limiter: Interactive is exempt by policy.
+        if adm.qos != QosClass::Interactive {
+            let mut buckets = self.buckets.lock().unwrap_or_else(|p| p.into_inner());
+            let b = buckets
+                .entry(session_key)
+                .or_insert_with(|| TokenBucket { tokens: self.opts.burst, last: now });
+            if !b.try_take(now, self.opts.rate_per_s, self.opts.burst.max(1.0)) {
+                return Verdict::Shed;
+            }
+        }
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        Verdict::Admit
+    }
+
+    /// Balance `n` admitted requests that have now been answered (success
+    /// or typed error — every admitted request is answered exactly once).
+    pub fn complete(&self, n: usize) {
+        let prev = self.in_flight.fetch_sub(n, Ordering::Relaxed);
+        debug_assert!(prev >= n, "in-flight underflow: {prev} - {n}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn adm(qos: QosClass) -> Admission {
+        Admission::new(qos)
+    }
+
+    #[test]
+    fn defaults_admit_everything() {
+        let c = AdmissionController::new(AdmissionOptions::default());
+        let now = Instant::now();
+        for qos in QosClass::ALL {
+            for _ in 0..1000 {
+                assert_eq!(c.admit(7, &adm(qos), now), Verdict::Admit);
+            }
+        }
+        assert_eq!(c.in_flight(), 3000);
+        c.complete(3000);
+        assert_eq!(c.in_flight(), 0);
+    }
+
+    #[test]
+    fn expired_requests_are_dead_on_arrival() {
+        let c = AdmissionController::new(AdmissionOptions::default());
+        let t0 = Instant::now();
+        let past = Admission { qos: QosClass::Interactive, deadline: Some(t0) };
+        assert_eq!(c.admit(1, &past, t0 + Duration::from_millis(1)), Verdict::Expired);
+        // Not yet expired: admitted.
+        let future =
+            Admission { qos: QosClass::Interactive, deadline: Some(t0 + Duration::from_secs(60)) };
+        assert_eq!(c.admit(1, &future, t0), Verdict::Admit);
+        assert_eq!(c.in_flight(), 1);
+    }
+
+    #[test]
+    fn capacity_sheds_best_effort_then_batch_then_interactive() {
+        let c = AdmissionController::new(AdmissionOptions {
+            max_in_flight: 2,
+            ..Default::default()
+        });
+        let now = Instant::now();
+        // Fill to the BestEffort threshold (ceil(2/2) = 1).
+        assert_eq!(c.admit(1, &adm(QosClass::Interactive), now), Verdict::Admit);
+        assert_eq!(c.admit(1, &adm(QosClass::BestEffort), now), Verdict::Shed);
+        assert_eq!(c.admit(1, &adm(QosClass::Batch), now), Verdict::Admit);
+        // At the full budget (2): Batch sheds, Interactive still admitted.
+        assert_eq!(c.admit(1, &adm(QosClass::Batch), now), Verdict::Shed);
+        assert_eq!(c.admit(1, &adm(QosClass::Interactive), now), Verdict::Admit);
+        assert_eq!(c.admit(1, &adm(QosClass::Interactive), now), Verdict::Admit);
+        // At the hard wall (2 * 2 = 4): even Interactive sheds.
+        assert_eq!(c.in_flight(), 4);
+        assert_eq!(c.admit(1, &adm(QosClass::Interactive), now), Verdict::Shed);
+        // Draining reopens the gate, lowest class last.
+        c.complete(4);
+        assert_eq!(c.admit(1, &adm(QosClass::BestEffort), now), Verdict::Admit);
+    }
+
+    #[test]
+    fn token_bucket_rate_limits_batch_but_not_interactive() {
+        let c = AdmissionController::new(AdmissionOptions {
+            rate_per_s: 10.0,
+            burst: 2.0,
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        // Burst of 2, then the bucket is dry.
+        assert_eq!(c.admit(9, &adm(QosClass::Batch), t0), Verdict::Admit);
+        assert_eq!(c.admit(9, &adm(QosClass::BestEffort), t0), Verdict::Admit);
+        assert_eq!(c.admit(9, &adm(QosClass::Batch), t0), Verdict::Shed);
+        // Interactive is exempt from the rate limiter.
+        assert_eq!(c.admit(9, &adm(QosClass::Interactive), t0), Verdict::Admit);
+        // 100ms refills one token at 10/s.
+        let t1 = t0 + Duration::from_millis(100);
+        assert_eq!(c.admit(9, &adm(QosClass::Batch), t1), Verdict::Admit);
+        assert_eq!(c.admit(9, &adm(QosClass::Batch), t1), Verdict::Shed);
+        // Buckets are per-session: a different key has its own burst.
+        assert_eq!(c.admit(10, &adm(QosClass::Batch), t1), Verdict::Admit);
+    }
+
+    #[test]
+    fn error_codes_are_stable_strings() {
+        assert_eq!(ErrorCode::Shed.as_str(), "shed");
+        assert_eq!(ErrorCode::DeadlineExceeded.as_str(), "deadline_exceeded");
+        assert_eq!(ErrorCode::SessionGone.as_str(), "session_gone");
+        assert_eq!(ErrorCode::Watchdog.as_str(), "watchdog");
+        assert_eq!(ErrorCode::Exec.as_str(), "exec");
+        assert_eq!(QosClass::parse("interactive"), Ok(QosClass::Interactive));
+        assert_eq!(QosClass::parse("best-effort"), Ok(QosClass::BestEffort));
+        assert!(QosClass::parse("gold").is_err());
+    }
+}

@@ -31,6 +31,18 @@
 //! Executor *panics* are contained per shard (the busy slot is restored by
 //! a drop guard, never leaked) and surface as error responses — a panic is
 //! a bad-operand class problem, not a dropout, so it is not retried.
+//!
+//! Graceful degradation (docs/SERVING.md): shards carry a cooperative
+//! watchdog ([`FleetOptions::shard_timeout_ms`]) — a shard that runs past
+//! its budget has its device marked *transiently* failed and is retried on
+//! another device with exponential backoff, at most
+//! [`FleetOptions::retry_budget`] executions before a typed `watchdog:`
+//! error. Transient failures heal: a health probe
+//! ([`FleetOptions::probe_after_ms`]) re-admits the device, so a slow blip
+//! does not permanently shrink the fleet (permanent [`Fleet::fail_device`]
+//! dropouts never rejoin). A deterministic [`FaultPlan`] (compiled under
+//! `#[cfg(any(test, feature = "faults"))]`) scripts dropouts, slow shards
+//! and executor panics off a seeded RNG so all of this is testable.
 
 use std::any::Any;
 use std::collections::{HashMap, VecDeque};
@@ -56,11 +68,27 @@ pub struct FleetOptions {
     /// Minimum activation rows per tile-parallel shard: batches smaller
     /// than `2 × shard_min_rows` never split. 1 allows single-row shards.
     pub shard_min_rows: usize,
+    /// Per-shard watchdog budget in milliseconds; a shard exceeding it has
+    /// its device marked transiently failed and is retried elsewhere.
+    /// 0 disables the watchdog.
+    pub shard_timeout_ms: u64,
+    /// Maximum shard executions (first try + retries) before a typed
+    /// `watchdog:` error is returned instead of retrying forever.
+    pub retry_budget: usize,
+    /// How long a transiently-failed device stays out before a health
+    /// probe re-admits it.
+    pub probe_after_ms: u64,
 }
 
 impl Default for FleetOptions {
     fn default() -> Self {
-        Self { devices: 1, shard_min_rows: 8 }
+        Self {
+            devices: 1,
+            shard_min_rows: 8,
+            shard_timeout_ms: 0,
+            retry_budget: 3,
+            probe_after_ms: 25,
+        }
     }
 }
 
@@ -74,16 +102,68 @@ pub struct DeviceStats {
     pub busy_us: f64,
     pub steals: u64,
     pub requeues: u64,
+    /// Queue time of stolen jobs (submit → steal), the steal-latency column.
+    pub steal_wait_us: f64,
+    /// Shard executions beyond the first attempt (watchdog requeues).
+    pub retries: u64,
+    /// Shards that ran past the watchdog budget on this device.
+    pub watchdog_trips: u64,
+    /// Health-probe re-admissions after a transient failure.
+    pub recoveries: u64,
 }
 
 /// A queued unit of fleet work: one batch's dispatch, bound to whichever
 /// device's worker executes it.
 pub type FleetJob = Box<dyn FnOnce(&Arc<Device>) + Send + 'static>;
 
+/// A [`FleetJob`] plus its enqueue timestamp, for steal-latency accounting.
+struct QueuedJob {
+    job: FleetJob,
+    enqueued: Instant,
+}
+
+/// One scripted dropout in a [`FaultPlan`]: after the fleet has started
+/// `after_shards` shard executions, mark `device` failed (transiently or
+/// permanently).
+#[cfg(any(test, feature = "faults"))]
+#[derive(Debug, Clone)]
+pub struct FaultDropout {
+    pub device: usize,
+    pub after_shards: u64,
+    pub transient: bool,
+}
+
+/// Deterministic fault-injection schedule, keyed off a seeded RNG plus a
+/// global shard counter. Installed with [`Fleet::set_fault_plan`]; every
+/// shard execution passes through [`Fleet::fault_point`], which applies
+/// scripted dropouts at their shard index and draws slow-shard delays and
+/// executor panics from the seeded stream. Compiled only under
+/// `#[cfg(any(test, feature = "faults"))]` — production builds carry a
+/// no-op stub at the call site.
+#[cfg(any(test, feature = "faults"))]
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub dropouts: Vec<FaultDropout>,
+    /// Probability a shard sleeps `slow_ms` before executing.
+    pub slow_prob: f64,
+    pub slow_ms: u64,
+    /// Probability a shard's executor panics (contained and answered as a
+    /// typed error by the shard runner).
+    pub panic_prob: f64,
+}
+
+#[cfg(any(test, feature = "faults"))]
+struct FaultState {
+    plan: FaultPlan,
+    rng: crate::util::Lcg,
+    shards_started: u64,
+}
+
 /// Lock a mutex, clearing poison: fleet bookkeeping must survive executor
 /// panics (the panic itself is contained and answered as an error response;
 /// wedging a stats or queue lock forever would turn it into a hang).
-fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+pub(crate) fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|p| p.into_inner())
 }
 
@@ -100,6 +180,11 @@ pub struct Device {
     /// Dropped out (failure injection). Failed devices execute nothing;
     /// their queued work is stolen by survivors.
     failed: AtomicBool,
+    /// Failure mode: transient failures are re-admitted by the health
+    /// probe after `probe_after_ms`; permanent ones never rejoin.
+    transient: AtomicBool,
+    /// When the failure was recorded (drives the probe timer).
+    failed_at: Mutex<Option<Instant>>,
     stats: Mutex<DeviceStats>,
     /// Runtime wave-plan compiles across this device's simulators — stays 0
     /// when every executed program was compiled ahead of time.
@@ -108,7 +193,7 @@ pub struct Device {
     /// dispatches keeps its seeded plan set resident, which is exactly what
     /// "each device owns its plan cache" means here.
     sims: Mutex<HashMap<ElemType, Box<dyn Any + Send>>>,
-    queue: Mutex<VecDeque<FleetJob>>,
+    queue: Mutex<VecDeque<QueuedJob>>,
 }
 
 impl Device {
@@ -119,6 +204,8 @@ impl Device {
             executor,
             busy: AtomicBool::new(false),
             failed: AtomicBool::new(false),
+            transient: AtomicBool::new(false),
+            failed_at: Mutex::new(None),
             stats: Mutex::new(DeviceStats::default()),
             plan_compiles: AtomicU64::new(0),
             sims: Mutex::new(HashMap::new()),
@@ -132,6 +219,39 @@ impl Device {
 
     pub fn is_failed(&self) -> bool {
         self.failed.load(Ordering::Acquire)
+    }
+
+    /// Record a failure. A permanent failure overrides a transient one;
+    /// a transient mark never downgrades an existing permanent failure.
+    fn mark_failed(&self, transient: bool) {
+        let mut at = lock_clean(&self.failed_at);
+        if self.failed.load(Ordering::Acquire) && !self.transient.load(Ordering::Acquire) {
+            return; // already permanently failed
+        }
+        self.transient.store(transient, Ordering::Release);
+        self.failed.store(true, Ordering::Release);
+        *at = Some(Instant::now());
+    }
+
+    /// Health probe: re-admit a transiently-failed device once it has been
+    /// out for at least `probe_after`. The probe itself is trivial for a
+    /// simulated device (its executor handle is always reachable); the
+    /// timer models the quarantine window a real fleet would use.
+    fn maybe_recover(&self, probe_after: Duration) -> bool {
+        if !self.failed.load(Ordering::Acquire) || !self.transient.load(Ordering::Acquire) {
+            return false;
+        }
+        let mut at = lock_clean(&self.failed_at);
+        match *at {
+            Some(t0) if t0.elapsed() >= probe_after => {
+                *at = None;
+                self.transient.store(false, Ordering::Release);
+                self.failed.store(false, Ordering::Release);
+                lock_clean(&self.stats).recoveries += 1;
+                true
+            }
+            _ => false,
+        }
     }
 
     /// The execution backend this device fronts.
@@ -238,11 +358,17 @@ pub struct Fleet {
     pub cfg: ArchConfig,
     opts: FleetOptions,
     devices: Vec<Arc<Device>>,
-    /// Parked-worker wakeup (paired with `wake`).
-    idle: Mutex<()>,
+    /// Event sequence counter for parked-worker wakeup (paired with
+    /// `wake`): every producer-side event (submit, dropout, shutdown)
+    /// bumps it under the lock, so workers can wait without a timeout and
+    /// still never miss a wakeup (see [`Fleet::wait_for_event`]).
+    idle: Mutex<u64>,
     wake: Condvar,
     shutdown: AtomicBool,
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Scripted fault injection (tests and the `faults` feature only).
+    #[cfg(any(test, feature = "faults"))]
+    faults: Mutex<Option<FaultState>>,
 }
 
 impl Fleet {
@@ -254,10 +380,37 @@ impl Fleet {
             cfg: cfg.clone(),
             opts,
             devices,
-            idle: Mutex::new(()),
+            idle: Mutex::new(0),
             wake: Condvar::new(),
             shutdown: AtomicBool::new(false),
             workers: Mutex::new(Vec::new()),
+            #[cfg(any(test, feature = "faults"))]
+            faults: Mutex::new(None),
+        }
+    }
+
+    /// Publish a wakeup event: bump the sequence under the lock, then wake
+    /// every parked worker. Callers must make their state change (queue
+    /// push, failed flag, shutdown flag) visible *before* calling this.
+    fn wake_all(&self) {
+        *lock_clean(&self.idle) += 1;
+        self.wake.notify_all();
+    }
+
+    /// Snapshot the event sequence. Taken *before* scanning the queues:
+    /// any event published after the snapshot makes `wait_for_event`
+    /// return immediately, so the scan-then-park window cannot lose work.
+    fn event_seq(&self) -> u64 {
+        *lock_clean(&self.idle)
+    }
+
+    /// Park until an event is published after `seen` (or shutdown). No
+    /// timeout: the sequence protocol makes missed wakeups impossible, so
+    /// the idle path does not spin, and shutdown latency is one notify.
+    fn wait_for_event(&self, seen: u64) {
+        let mut g = lock_clean(&self.idle);
+        while *g == seen && !self.shutdown.load(Ordering::Acquire) {
+            g = self.wake.wait(g).unwrap_or_else(|p| p.into_inner());
         }
     }
 
@@ -273,18 +426,46 @@ impl Fleet {
         self.opts
     }
 
-    /// Drop a device (failure injection). Work queued on it is stolen by
-    /// survivors; shards assigned to it requeue; new work routes around it.
-    /// Returns false for an unknown id.
+    /// Drop a device permanently (failure injection). Work queued on it is
+    /// stolen by survivors; shards assigned to it requeue; new work routes
+    /// around it. Returns false for an unknown id.
     pub fn fail_device(&self, id: usize) -> bool {
         match self.devices.get(id) {
             Some(d) => {
-                d.failed.store(true, Ordering::Release);
+                d.mark_failed(false);
                 // Wake everyone: survivors must drain the failed queue.
-                self.wake.notify_all();
+                self.wake_all();
                 true
             }
             None => false,
+        }
+    }
+
+    /// Drop a device transiently: the health probe re-admits it after
+    /// `probe_after_ms`. Returns false for an unknown id.
+    pub fn fail_device_transient(&self, id: usize) -> bool {
+        match self.devices.get(id) {
+            Some(d) => {
+                d.mark_failed(true);
+                self.wake_all();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Run the health probe over every device, re-admitting transient
+    /// failures whose quarantine has elapsed. Called on the routing and
+    /// execution paths — recovery needs no dedicated timer thread because
+    /// a device only matters again when there is work to route to it.
+    pub fn probe_recover(&self) {
+        let probe_after = Duration::from_millis(self.opts.probe_after_ms);
+        let mut any = false;
+        for d in &self.devices {
+            any |= d.maybe_recover(probe_after);
+        }
+        if any {
+            self.wake_all();
         }
     }
 
@@ -299,6 +480,8 @@ impl Fleet {
     pub fn report(&self, window_us: f64) -> FleetReport {
         FleetReport {
             window: window_us,
+            shed: 0,
+            expired: 0,
             devices: self
                 .devices
                 .iter()
@@ -313,6 +496,10 @@ impl Fleet {
                         rows: st.rows,
                         steals: st.steals,
                         requeues: st.requeues,
+                        steal_wait_us: st.steal_wait_us,
+                        retries: st.retries,
+                        watchdog_trips: st.watchdog_trips,
+                        recoveries: st.recoveries,
                         plan_compiles: d.plan_compiles(),
                         failed: d.is_failed(),
                     }
@@ -359,6 +546,7 @@ impl Fleet {
     /// dropped, the job runs inline on the caller so its requests still get
     /// (error) responses instead of hanging in a queue nobody drains.
     pub fn submit(&self, affinity: u64, job: FleetJob) {
+        self.probe_recover();
         let surviving: Vec<&Arc<Device>> =
             self.devices.iter().filter(|d| !d.is_failed()).collect();
         if surviving.is_empty() {
@@ -367,15 +555,15 @@ impl Fleet {
             return;
         }
         let dev = surviving[(affinity % surviving.len() as u64) as usize];
-        lock_clean(&dev.queue).push_back(job);
-        self.wake.notify_all();
+        lock_clean(&dev.queue).push_back(QueuedJob { job, enqueued: Instant::now() });
+        self.wake_all();
     }
 
     /// Pop work for `dev`: own queue first, then steal from any other
     /// device's queue (id order from the right neighbour). A failed device
     /// never takes work. Returns the job plus whether it was stolen and
     /// whether the victim had dropped (a requeue).
-    fn next_job(&self, dev: &Device) -> Option<(FleetJob, bool, bool)> {
+    fn next_job(&self, dev: &Device) -> Option<(QueuedJob, bool, bool)> {
         if dev.is_failed() {
             return None;
         }
@@ -395,6 +583,12 @@ impl Fleet {
 
     fn worker_loop(&self, dev: Arc<Device>) {
         loop {
+            self.probe_recover();
+            // Snapshot the event sequence BEFORE scanning the queues: any
+            // submit that lands after the snapshot bumps the sequence, so
+            // the untimed wait below returns immediately instead of
+            // sleeping on work we failed to observe.
+            let seen = self.event_seq();
             if self.run_next_job(&dev) {
                 continue;
             }
@@ -407,11 +601,7 @@ impl Fleet {
                 }
                 break;
             }
-            // Timed wait: robust to missed wakeups by construction. The
-            // guard (returned on both Ok and poisoned paths) drops at the
-            // end of this block, before the next pass.
-            let parked = lock_clean(&self.idle);
-            let _woke = self.wake.wait_timeout(parked, Duration::from_millis(2));
+            self.wait_for_event(seen);
         }
     }
 
@@ -421,9 +611,11 @@ impl Fleet {
     /// worker (the dispatch protocol inside the job answers its requests
     /// with error responses; this is the backstop).
     fn run_next_job(&self, dev: &Arc<Device>) -> bool {
-        let Some((job, stolen, from_failed)) = self.next_job(dev) else {
+        let Some((queued, stolen, from_failed)) = self.next_job(dev) else {
             return false;
         };
+        let wait_us = queued.enqueued.elapsed().as_secs_f64() * 1e6;
+        let job = queued.job;
         dev.busy.store(true, Ordering::Release);
         let _lease = Lease { dev: Arc::clone(dev), owned: true };
         // A panicking job is contained here as a backstop (the dispatch
@@ -435,6 +627,7 @@ impl Fleet {
         st.dispatches += 1;
         if stolen {
             st.steals += 1;
+            st.steal_wait_us += wait_us;
         }
         if from_failed {
             st.requeues += 1;
@@ -448,7 +641,7 @@ impl Fleet {
     /// execution path — rather than leaking.
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::Release);
-        self.wake.notify_all();
+        self.wake_all();
         let ws: Vec<_> = lock_clean(&self.workers).drain(..).collect();
         for h in ws {
             let _ = h.join();
@@ -456,9 +649,9 @@ impl Fleet {
         for d in &self.devices {
             // Take the whole backlog in one locked step, then execute with
             // the queue lock released.
-            let jobs: Vec<FleetJob> = lock_clean(&d.queue).drain(..).collect();
+            let jobs: Vec<QueuedJob> = lock_clean(&d.queue).drain(..).collect();
             for j in jobs {
-                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| j(d)));
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (j.job)(d)));
             }
         }
     }
@@ -493,11 +686,16 @@ impl Fleet {
         out
     }
 
-    /// Execute one shard with dropout requeue: the assigned device first,
-    /// then the other leased devices, then any surviving device. Executor
-    /// panics are contained (→ `Err`, busy slots restored by the leases) and
-    /// not retried — unlike a dropout, a panic is deterministic in the
-    /// operands. Accounts shard/row/busy stats on the device that ran it.
+    /// Execute one shard with dropout requeue and a bounded retry budget:
+    /// the assigned device first, then the other leased devices, then any
+    /// surviving device. Executor panics are contained (→ `Err`, busy slots
+    /// restored by the leases) and not retried — unlike a dropout, a panic
+    /// is deterministic in the operands. Executor `Err`s are likewise final.
+    /// A shard that runs past the watchdog budget has its device marked
+    /// transiently failed and is retried on the next candidate with
+    /// exponential backoff, up to `retry_budget` executions; then a typed
+    /// `watchdog:` error. Accounts shard/row/busy stats on the executing
+    /// device.
     fn run_one_shard<T, E>(
         &self,
         devs: &[Arc<Device>],
@@ -516,16 +714,32 @@ impl Fleet {
                 candidates.push(d);
             }
         }
+        let watchdog_us = self.opts.shard_timeout_ms as f64 * 1e3; // 0 = disabled
+        let budget = self.opts.retry_budget.max(1);
+        let mut attempts = 0usize;
+        let mut last_trip: Option<anyhow::Error> = None;
         for (ci, dev) in candidates.into_iter().enumerate() {
             if dev.is_failed() {
                 continue;
             }
+            if attempts >= budget {
+                break;
+            }
+            if attempts > 0 {
+                // Exponential backoff between retries, capped at 8ms — long
+                // enough to let a transient blip pass, short enough to stay
+                // well inside interactive deadlines.
+                std::thread::sleep(Duration::from_millis(1u64 << (attempts - 1).min(3)));
+            }
+            attempts += 1;
             let requeued = ci > 0;
             let t0 = Instant::now();
             let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.fault_point(dev);
                 exec(dev, range.clone())
             }));
             let busy = t0.elapsed().as_secs_f64() * 1e6;
+            let tripped = watchdog_us > 0.0 && busy > watchdog_us;
             let mut st = lock_clean(&dev.stats);
             st.shards += 1;
             st.rows += range.len() as u64;
@@ -533,16 +747,55 @@ impl Fleet {
             if requeued {
                 st.requeues += 1;
             }
+            if attempts > 1 {
+                st.retries += 1;
+            }
+            if tripped {
+                st.watchdog_trips += 1;
+            }
             drop(st);
-            return match r {
-                Ok(res) => res,
-                Err(_) => Err(anyhow::anyhow!(
-                    "device {} executor panicked on rows {}..{}",
-                    dev.id,
-                    range.start,
-                    range.end
-                )),
-            };
+            match r {
+                Err(_) => {
+                    return Err(anyhow::anyhow!(
+                        "device {} executor panicked on rows {}..{}",
+                        dev.id,
+                        range.start,
+                        range.end
+                    ))
+                }
+                Ok(Err(e)) => return Err(e), // deterministic executor error: final
+                Ok(Ok(res)) => {
+                    if !tripped {
+                        return Ok(res);
+                    }
+                    // Watchdog trip: the shard completed (the simulated
+                    // executors are cooperative) but far over budget — a
+                    // real fleet would have abandoned it. Quarantine the
+                    // device and requeue on a survivor; with a single
+                    // device there is nowhere better, so keep it serving.
+                    if self.devices.len() > 1 {
+                        dev.mark_failed(true);
+                        self.wake_all();
+                    } else {
+                        return Ok(res);
+                    }
+                    last_trip = Some(anyhow::anyhow!(
+                        "watchdog: device {} exceeded {}ms budget on rows {}..{} ({:.1}ms)",
+                        dev.id,
+                        self.opts.shard_timeout_ms,
+                        range.start,
+                        range.end,
+                        busy / 1e3
+                    ));
+                }
+            }
+        }
+        if let Some(e) = last_trip {
+            return Err(anyhow::anyhow!(
+                "watchdog: retry budget exhausted after {attempts} attempt(s) for rows {}..{}: {e}",
+                range.start,
+                range.end
+            ));
         }
         Err(anyhow::anyhow!(
             "no surviving device for rows {}..{} (all {} devices dropped)",
@@ -717,6 +970,55 @@ impl Fleet {
             dev.executor().gemm(r.len(), k, n, &input[r.start * k..r.end * k], weight)
         })
     }
+
+    // ------------------------------------------------------------------
+    // Deterministic fault injection (tests / `faults` feature).
+    // ------------------------------------------------------------------
+
+    /// Install a [`FaultPlan`]. Replaces any previous plan; faults start
+    /// applying on the next shard execution.
+    #[cfg(any(test, feature = "faults"))]
+    pub fn set_fault_plan(&self, plan: FaultPlan) {
+        let rng = crate::util::Lcg::new(plan.seed);
+        *lock_clean(&self.faults) = Some(FaultState { plan, rng, shards_started: 0 });
+    }
+
+    /// Fault-injection hook, called once per shard execution (inside the
+    /// shard runner's `catch_unwind`, so injected panics are contained the
+    /// same way real executor panics are). No-op without an installed plan.
+    #[cfg(any(test, feature = "faults"))]
+    fn fault_point(&self, dev: &Device) {
+        let (slow_ms, panic_now) = {
+            let mut g = lock_clean(&self.faults);
+            let Some(st) = g.as_mut() else { return };
+            let n = st.shards_started;
+            st.shards_started += 1;
+            for d in &st.plan.dropouts {
+                if d.after_shards == n {
+                    if let Some(victim) = self.devices.get(d.device) {
+                        victim.mark_failed(d.transient);
+                    }
+                }
+            }
+            let slow = st.plan.slow_prob > 0.0 && st.rng.f64() < st.plan.slow_prob;
+            let panic_now = st.plan.panic_prob > 0.0 && st.rng.f64() < st.plan.panic_prob;
+            (if slow { st.plan.slow_ms } else { 0 }, panic_now)
+        };
+        // The faults lock is released before sleeping or panicking: a
+        // panic while holding it would serialize fault draws behind poison
+        // clearing, and a sleep would stall every other shard's draw.
+        if slow_ms > 0 {
+            std::thread::sleep(Duration::from_millis(slow_ms));
+        }
+        if panic_now {
+            panic!("injected executor fault (FaultPlan) on device {}", dev.id);
+        }
+    }
+
+    /// Production stub: fault injection compiles out entirely.
+    #[cfg(not(any(test, feature = "faults")))]
+    #[inline(always)]
+    fn fault_point(&self, _dev: &Device) {}
 }
 
 #[cfg(test)]
@@ -734,7 +1036,11 @@ mod tests {
 
     fn fleet(devices: usize, shard_min_rows: usize) -> Fleet {
         let cfg = ArchConfig::paper(4, 4);
-        Fleet::new(&cfg, Arc::new(NaiveExecutor), FleetOptions { devices, shard_min_rows })
+        Fleet::new(
+            &cfg,
+            Arc::new(NaiveExecutor),
+            FleetOptions { devices, shard_min_rows, ..Default::default() },
+        )
     }
 
     #[test]
@@ -858,6 +1164,134 @@ mod tests {
             assert!(f.claim_idle(usize::MAX, 3).is_empty());
         }
         assert!(f.devices().iter().all(|d| !d.is_busy()), "leases restored availability");
+    }
+
+    #[test]
+    fn transient_failure_recovers_after_probe() {
+        let cfg = ArchConfig::paper(4, 4);
+        let f = Fleet::new(
+            &cfg,
+            Arc::new(NaiveExecutor),
+            FleetOptions { devices: 2, shard_min_rows: 1, probe_after_ms: 5, ..Default::default() },
+        );
+        assert!(f.fail_device_transient(0));
+        assert!(f.devices()[0].is_failed());
+        // Probe before the quarantine elapses: still out.
+        f.probe_recover();
+        assert!(f.devices()[0].is_failed());
+        std::thread::sleep(Duration::from_millis(10));
+        f.probe_recover();
+        assert!(!f.devices()[0].is_failed(), "transient failure healed");
+        assert_eq!(f.devices()[0].stats().recoveries, 1);
+        // Permanent failures never heal.
+        assert!(f.fail_device(1));
+        std::thread::sleep(Duration::from_millis(10));
+        f.probe_recover();
+        assert!(f.devices()[1].is_failed(), "permanent dropout stays out");
+        // And a later transient mark cannot downgrade it.
+        f.fail_device_transient(1);
+        std::thread::sleep(Duration::from_millis(10));
+        f.probe_recover();
+        assert!(f.devices()[1].is_failed());
+    }
+
+    #[test]
+    fn watchdog_trips_retry_on_another_device_bit_exact() {
+        // Device work is made artificially slow with a FaultPlan that hits
+        // (deterministically) every shard; the watchdog quarantines the
+        // slow device and the retry must land bit-exact on a survivor.
+        let cfg = ArchConfig::paper(4, 4);
+        let f = Fleet::new(
+            &cfg,
+            Arc::new(NaiveExecutor),
+            FleetOptions {
+                devices: 2,
+                shard_min_rows: 64, // keep the batch on one shard
+                shard_timeout_ms: 5,
+                retry_budget: 3,
+                probe_after_ms: 1000,
+                ..Default::default()
+            },
+        );
+        let chain = Chain::mlp("wd", 4, &[8, 8]);
+        let p = Program::compile(&f.cfg, &chain, &fast()).unwrap();
+        let mut rng = Lcg::new(11);
+        let ww = WordWeights::new(
+            chain.layers.iter().map(|g| ElemType::I32.sample_words(&mut rng, g.k * g.n)).collect(),
+            ElemType::I32,
+        );
+        let input = ElemType::I32.sample_words(&mut rng, 4 * p.in_features());
+        let want = execute_program_words(&p, 4, &input, &ww).unwrap();
+        f.set_fault_plan(FaultPlan { seed: 1, slow_prob: 1.0, slow_ms: 20, ..Default::default() });
+        // Every execution is slow, so the budget must eventually give up...
+        let e = f.run_program_words(None, &p, 4, &input, &ww).unwrap_err();
+        assert!(e.to_string().starts_with("watchdog:"), "{e}");
+        let trips: u64 = f.devices().iter().map(|d| d.stats().watchdog_trips).sum();
+        assert!(trips >= 1, "watchdog tripped");
+        // ...but with the fault cleared and the devices healed, the same
+        // batch executes cleanly and bit-exact.
+        for d in f.devices() {
+            d.maybe_recover(Duration::from_millis(0));
+        }
+        f.set_fault_plan(FaultPlan { seed: 1, slow_prob: 0.0, ..Default::default() });
+        let got = f.run_program_words(None, &p, 4, &input, &ww).unwrap();
+        assert_eq!(got, want, "post-recovery execution is bit-exact");
+    }
+
+    #[test]
+    fn fault_plan_scripted_dropout_and_panic_are_contained() {
+        let f = fleet(3, 1);
+        let chain = Chain::mlp("fp", 6, &[8, 8]);
+        let p = Program::compile(&f.cfg, &chain, &fast()).unwrap();
+        let mut rng = Lcg::new(12);
+        let ww = WordWeights::new(
+            chain.layers.iter().map(|g| ElemType::Goldilocks.sample_words(&mut rng, g.k * g.n)).collect(),
+            ElemType::Goldilocks,
+        );
+        let input = ElemType::Goldilocks.sample_words(&mut rng, 6 * p.in_features());
+        let want = execute_program_words(&p, 6, &input, &ww).unwrap();
+        // Scripted: drop device 1 permanently before the second shard.
+        f.set_fault_plan(FaultPlan {
+            seed: 3,
+            dropouts: vec![FaultDropout { device: 1, after_shards: 1, transient: false }],
+            ..Default::default()
+        });
+        let got = f.run_program_words(None, &p, 6, &input, &ww).unwrap();
+        assert_eq!(got, want, "dropout mid-stream stays bit-exact");
+        assert!(f.devices()[1].is_failed());
+        // Panic injection: always panics → typed error, busy slots intact.
+        f.set_fault_plan(FaultPlan { seed: 4, panic_prob: 1.0, ..Default::default() });
+        let e = f.run_program_words(None, &p, 6, &input, &ww).unwrap_err();
+        assert!(e.to_string().contains("panicked"), "{e}");
+        assert!(f.devices().iter().all(|d| !d.is_busy()), "no leaked busy slots");
+    }
+
+    #[test]
+    fn workers_shut_down_promptly_without_timed_polls() {
+        let cfg = ArchConfig::paper(4, 4);
+        let f = Arc::new(Fleet::new(
+            &cfg,
+            Arc::new(NaiveExecutor),
+            FleetOptions { devices: 3, shard_min_rows: 1, ..Default::default() },
+        ));
+        f.start_workers();
+        assert!(f.workers_active());
+        // Jobs submitted before shutdown all run (the counter proves no
+        // job is lost in the scan-then-park window).
+        let ran = Arc::new(AtomicU64::new(0));
+        for i in 0..64u64 {
+            let ran = Arc::clone(&ran);
+            f.submit(i, Box::new(move |_d| {
+                ran.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        let t0 = Instant::now();
+        f.shutdown();
+        assert_eq!(ran.load(Ordering::Relaxed), 64);
+        // Bounded shutdown: parked workers wake on the shutdown event, not
+        // on a poll tick. Generous bound to stay robust on loaded CI.
+        assert!(t0.elapsed() < Duration::from_secs(2), "{:?}", t0.elapsed());
+        assert!(!f.workers_active());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! program sessions (compile-once/serve-many, `crate::program`) and ad-hoc
 //! GEMM requests over the PJRT runtime.
 
+pub mod admission;
 pub mod fleet;
 pub mod serve;
 

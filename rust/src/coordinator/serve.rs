@@ -43,8 +43,10 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::time::Instant;
 
-use super::fleet::{Device, Fleet, FleetOptions};
+use super::admission::{Admission, AdmissionController, AdmissionOptions, ErrorCode, QosClass, Verdict};
+use super::fleet::{lock_clean, Device, Fleet, FleetOptions};
 use crate::arch::config::ArchConfig;
 use crate::arith::{decode_words, encode_words, ElemType, Element};
 use crate::artifact::Artifact;
@@ -85,22 +87,45 @@ pub enum Payload {
 pub struct Request {
     pub id: u64,
     pub payload: Payload,
+    /// Admission tag: QoS class plus optional deadline. Constructors default
+    /// to `Interactive` with no deadline — the pre-admission behaviour.
+    pub admission: Admission,
 }
 
 impl Request {
     /// An ad-hoc single-GEMM request.
     pub fn gemm(id: u64, m: usize, k: usize, n: usize, input: Vec<f32>, weight: Arc<Vec<f32>>) -> Self {
-        Self { id, payload: Payload::Gemm { m, k, n, input, weight } }
+        Self { id, payload: Payload::Gemm { m, k, n, input, weight }, admission: Admission::default() }
     }
 
     /// An activation for a registered f32 program.
     pub fn for_program(id: u64, program: ProgramId, rows: usize, input: Vec<f32>) -> Self {
-        Self { id, payload: Payload::Program { program, rows, input } }
+        Self { id, payload: Payload::Program { program, rows, input }, admission: Admission::default() }
     }
 
     /// An activation (canonical words) for an element-typed program session.
     pub fn for_program_words(id: u64, program: ProgramId, rows: usize, input: Vec<u64>) -> Self {
-        Self { id, payload: Payload::ProgramWords { program, rows, input } }
+        Self { id, payload: Payload::ProgramWords { program, rows, input }, admission: Admission::default() }
+    }
+
+    /// Tag this request with a QoS class (default: `Interactive`).
+    pub fn with_qos(mut self, qos: QosClass) -> Self {
+        self.admission.qos = qos;
+        self
+    }
+
+    /// Give this request a deadline `ms` milliseconds from now; past the
+    /// deadline it is answered with a typed `deadline_exceeded` error at the
+    /// next hand-off point instead of occupying a device.
+    pub fn with_deadline_ms(mut self, ms: u64) -> Self {
+        self.admission = self.admission.with_deadline_ms(ms);
+        self
+    }
+
+    /// Replace the whole admission tag.
+    pub fn with_admission(mut self, admission: Admission) -> Self {
+        self.admission = admission;
+        self
     }
 }
 
@@ -129,6 +154,10 @@ pub struct Response {
     /// Set when the request could not be served (unknown program, shape
     /// mismatch, executor failure); `output` is empty then.
     pub error: Option<String>,
+    /// Machine-readable error class when `error` is set; `None` on success.
+    /// The string forms ([`ErrorCode::as_str`]) are stable — clients switch
+    /// on these, not on the human-readable `error` message.
+    pub code: Option<ErrorCode>,
 }
 
 /// Execution backend abstraction.
@@ -357,6 +386,18 @@ pub struct ServeStats {
     pub errors: u64,
     pub total_service_us: f64,
     pub max_batch: usize,
+    /// Requests rejected by admission control (`ErrorCode::Shed`). Not
+    /// counted in `errors`: shedding is policy, not failure.
+    pub shed: u64,
+    /// Requests answered `deadline_exceeded` at any hand-off point
+    /// (admission, batch formation, queue, post-execution stitch).
+    pub expired: u64,
+    /// Requests whose session was unregistered while they were in flight
+    /// (`ErrorCode::SessionGone`); also counted in `errors`.
+    pub session_gone: u64,
+    /// Requests injected into an already-submitted open batch (continuous
+    /// batching) instead of waiting for the next leader cycle.
+    pub injected: u64,
 }
 
 impl ServeStats {
@@ -472,6 +513,14 @@ fn affinity(key: &BatchKey) -> u64 {
     h.finish()
 }
 
+/// A batch submitted to the fleet but not yet claimed by a device worker.
+/// The leader keeps it addressable by [`BatchKey`] so compatible arrivals
+/// inject into it (continuous batching) instead of waiting for the next
+/// leader cycle; the claiming worker `take`s the request list exactly once.
+struct OpenBatch {
+    reqs: Mutex<Option<Vec<Request>>>,
+}
+
 /// Serving-stack sizing knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct ServerOptions {
@@ -483,11 +532,24 @@ pub struct ServerOptions {
     pub shard_min_rows: usize,
     /// Max requests batched per dispatch.
     pub max_batch: usize,
+    /// Per-shard watchdog budget in milliseconds, forwarded to
+    /// [`super::fleet::FleetOptions::shard_timeout_ms`]; 0 disables.
+    pub shard_timeout_ms: u64,
+    /// Front-door admission policy. Defaults disable every limit, so a
+    /// default-constructed server behaves exactly like the pre-admission
+    /// front door.
+    pub admission: AdmissionOptions,
 }
 
 impl Default for ServerOptions {
     fn default() -> Self {
-        Self { devices: 1, shard_min_rows: 8, max_batch: 8 }
+        Self {
+            devices: 1,
+            shard_min_rows: 8,
+            max_batch: 8,
+            shard_timeout_ms: 0,
+            admission: AdmissionOptions::default(),
+        }
     }
 }
 
@@ -509,6 +571,13 @@ pub struct Server {
     pub stats: Mutex<ServeStats>,
     /// Max requests batched per dispatch.
     pub max_batch: usize,
+    /// The front-door gate: deadlines, per-session rate limits, and the
+    /// global in-flight budget with graduated QoS shedding.
+    admission: AdmissionController,
+    /// Submitted-but-unclaimed fleet batches by key — the continuous-
+    /// batching injection surface (`run_fleet` adds compatible arrivals
+    /// here until a device worker claims the batch).
+    open: Mutex<HashMap<BatchKey, Arc<OpenBatch>>>,
 }
 
 impl Server {
@@ -527,7 +596,12 @@ impl Server {
         let fleet = Arc::new(Fleet::new(
             cfg,
             executor,
-            FleetOptions { devices: sopts.devices, shard_min_rows: sopts.shard_min_rows },
+            FleetOptions {
+                devices: sopts.devices,
+                shard_min_rows: sopts.shard_min_rows,
+                shard_timeout_ms: sopts.shard_timeout_ms,
+                ..Default::default()
+            },
         ));
         Self {
             cfg: cfg.clone(),
@@ -538,7 +612,25 @@ impl Server {
             next_program: AtomicU64::new(1),
             stats: Mutex::new(ServeStats::default()),
             max_batch: sopts.max_batch,
+            admission: AdmissionController::new(sopts.admission),
+            open: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// The front-door admission gate (in-flight introspection for tests and
+    /// operational tooling).
+    pub fn admission(&self) -> &AdmissionController {
+        &self.admission
+    }
+
+    /// Fleet utilisation roll-up with the front door's shed/expired counters
+    /// folded in (the fleet itself never sees rejected requests).
+    pub fn fleet_report(&self, window_us: f64) -> crate::perf::FleetReport {
+        let mut rep = self.fleet.report(window_us);
+        let st = self.stats.lock().unwrap();
+        rep.shed = st.shed;
+        rep.expired = st.expired;
+        rep
     }
 
     /// The device fleet executing this server's dispatches (per-device
@@ -688,8 +780,10 @@ impl Server {
     /// Drop a model session, releasing its program and resident weights
     /// (sessions pin potentially large weight matrices, so long-lived
     /// servers must unregister models they stop serving). In-flight
-    /// requests already holding the session finish normally; later
-    /// requests for the id get an `unknown program` error response.
+    /// dispatches already holding the session's `Arc` finish normally;
+    /// requests that reach dispatch after this returns get a typed
+    /// `session_gone` error response (ids that were never registered answer
+    /// `unknown program` instead).
     pub fn unregister(&self, id: ProgramId) -> bool {
         self.sessions.write().unwrap().remove(&id).is_some()
     }
@@ -750,6 +844,30 @@ impl Server {
         batch
     }
 
+    /// Gate one arriving request through admission control: admitted
+    /// requests land in `pending`; shed/expired ones are answered with a
+    /// typed error immediately (they never enter the in-flight count).
+    fn admit_or_reject(
+        &self,
+        r: Request,
+        pending: &mut Vec<Request>,
+        tx: &Sender<Response>,
+    ) -> Result<(), ()> {
+        match self.admission.admit(affinity(&batch_key(&r)), &r.admission, Instant::now()) {
+            Verdict::Admit => {
+                pending.push(r);
+                Ok(())
+            }
+            Verdict::Shed => {
+                let msg = format!("shed: {} request rejected by admission control", r.admission.qos);
+                self.reject(r.id, ErrorCode::Shed, &msg, tx)
+            }
+            Verdict::Expired => {
+                self.reject(r.id, ErrorCode::DeadlineExceeded, "deadline exceeded on arrival", tx)
+            }
+        }
+    }
+
     /// Serve requests pulled from `rx`, sending responses on `tx`, with
     /// dispatch inline on this (leader) thread. Returns when `rx` closes.
     /// Requests batch by [`BatchKey`]: same-program activations stack into
@@ -760,18 +878,26 @@ impl Server {
         loop {
             // Pull at least one request (blocking), then drain greedily.
             match rx.recv() {
-                Ok(r) => pending.push(r),
+                Ok(r) => {
+                    if self.admit_or_reject(r, &mut pending, &tx).is_err() {
+                        return;
+                    }
+                }
                 Err(_) => break,
             }
             while pending.len() < self.max_batch {
                 match rx.try_recv() {
-                    Ok(r) => pending.push(r),
+                    Ok(r) => {
+                        if self.admit_or_reject(r, &mut pending, &tx).is_err() {
+                            return;
+                        }
+                    }
                     Err(_) => break,
                 }
             }
             while !pending.is_empty() {
                 let batch = Self::take_batch(&mut pending, self.max_batch);
-                if self.dispatch(None, &batch, &tx).is_err() {
+                if self.dispatch(None, batch, &tx).is_err() {
                     return; // receiver dropped
                 }
             }
@@ -788,61 +914,215 @@ impl Server {
         let mut pending: Vec<Request> = Vec::new();
         loop {
             match rx.recv() {
-                Ok(r) => pending.push(r),
+                Ok(r) => {
+                    if self.admit_or_inject(r, &mut pending, &tx).is_err() {
+                        return;
+                    }
+                }
                 Err(_) => break,
             }
             while pending.len() < self.max_batch {
                 match rx.try_recv() {
-                    Ok(r) => pending.push(r),
+                    Ok(r) => {
+                        if self.admit_or_inject(r, &mut pending, &tx).is_err() {
+                            return;
+                        }
+                    }
                     Err(_) => break,
                 }
             }
             while !pending.is_empty() {
                 let batch = Self::take_batch(&mut pending, self.max_batch);
-                let key = affinity(&batch_key(&batch[0]));
-                let srv = Arc::clone(self);
-                let txc = tx.clone();
-                self.fleet.submit(
-                    key,
-                    Box::new(move |dev| {
-                        // A send failure means the response receiver is
-                        // gone; remaining jobs drain harmlessly.
-                        let _ = srv.dispatch(Some(dev), &batch, &txc);
-                    }),
-                );
+                self.submit_fleet(batch, &tx);
             }
         }
+    }
+
+    /// Fleet-mode admission: admitted requests first try to join a
+    /// compatible open (submitted but unclaimed) batch — continuous
+    /// batching — and only fall back to `pending` for the next leader cycle.
+    fn admit_or_inject(
+        self: &Arc<Self>,
+        r: Request,
+        pending: &mut Vec<Request>,
+        tx: &Sender<Response>,
+    ) -> Result<(), ()> {
+        let mut staged = Vec::new();
+        self.admit_or_reject(r, &mut staged, tx)?;
+        if let Some(r) = staged.pop() {
+            if let Some(r) = self.try_inject(r) {
+                pending.push(r);
+            }
+        }
+        Ok(())
+    }
+
+    /// Try to add an admitted request to a compatible open batch. Returns
+    /// the request back if no open batch can take it (wrong key, already
+    /// claimed, or full).
+    fn try_inject(&self, r: Request) -> Option<Request> {
+        let key = batch_key(&r);
+        let open = lock_clean(&self.open);
+        if let Some(ob) = open.get(&key) {
+            // Map lock is held, so the claim path (same order: map → batch)
+            // cannot take the list out from under this push.
+            let mut reqs = lock_clean(&ob.reqs);
+            if let Some(v) = reqs.as_mut() {
+                if v.len() < self.max_batch {
+                    v.push(r);
+                    drop(reqs);
+                    drop(open);
+                    self.stats.lock().unwrap().injected += 1;
+                    return None;
+                }
+            }
+        }
+        Some(r)
+    }
+
+    /// Submit one formed batch to the fleet, leaving it open for injection
+    /// until a device worker claims it.
+    fn submit_fleet(self: &Arc<Self>, batch: Vec<Request>, tx: &Sender<Response>) {
+        let bk = batch_key(&batch[0]);
+        let key = affinity(&bk);
+        let ob = Arc::new(OpenBatch { reqs: Mutex::new(Some(batch)) });
+        lock_clean(&self.open).insert(bk, Arc::clone(&ob));
+        let srv = Arc::clone(self);
+        let txc = tx.clone();
+        self.fleet.submit(
+            key,
+            Box::new(move |dev| {
+                // A send failure means the response receiver is gone;
+                // remaining jobs drain harmlessly.
+                if let Some(batch) = srv.claim_open(&bk, &ob) {
+                    let _ = srv.dispatch(Some(dev), batch, &txc);
+                }
+            }),
+        );
+    }
+
+    /// Claim a submitted batch for execution: removes its open-map entry
+    /// (if still current — a newer batch may have replaced it under the
+    /// same key) so later arrivals form a fresh batch, then takes the
+    /// request list exactly once.
+    fn claim_open(&self, bk: &BatchKey, ob: &Arc<OpenBatch>) -> Option<Vec<Request>> {
+        let mut open = lock_clean(&self.open);
+        if let Some(cur) = open.get(bk) {
+            if Arc::ptr_eq(cur, ob) {
+                open.remove(bk);
+            }
+        }
+        // Take while the map lock is held: injectors lock map → batch, so
+        // after this releases no injector can still reach this batch.
+        lock_clean(&ob.reqs).take()
     }
 
     fn dispatch(
         &self,
         dev: Option<&Arc<Device>>,
-        batch: &[Request],
+        batch: Vec<Request>,
         tx: &Sender<Response>,
     ) -> Result<(), ()> {
-        match &batch[0].payload {
-            Payload::Gemm { .. } => self.dispatch_gemm(dev, batch, tx),
-            Payload::Program { .. } => self.dispatch_program(dev, batch, tx),
-            Payload::ProgramWords { .. } => self.dispatch_program_words(dev, batch, tx),
+        // Hand-off point: drop requests whose deadline passed while queued.
+        let now = Instant::now();
+        let (live, dead): (Vec<Request>, Vec<Request>) =
+            batch.into_iter().partition(|r| !r.admission.expired(now));
+        if !dead.is_empty() {
+            let ids: Vec<u64> = dead.iter().map(|r| r.id).collect();
+            self.answer_error(
+                &ids,
+                dead.len(),
+                ErrorCode::DeadlineExceeded,
+                "deadline exceeded in queue",
+                tx,
+            )?;
+        }
+        let Some(first) = live.first() else { return Ok(()) };
+        match &first.payload {
+            Payload::Gemm { .. } => self.dispatch_gemm(dev, &live, tx),
+            Payload::Program { .. } => self.dispatch_program(dev, &live, tx),
+            Payload::ProgramWords { .. } => self.dispatch_program_words(dev, &live, tx),
         }
     }
 
-    /// Answer the given request ids with the same error.
-    fn fail(&self, ids: &[u64], batch_size: usize, msg: &str, tx: &Sender<Response>) -> Result<(), ()> {
-        self.stats.lock().unwrap().errors += ids.len() as u64;
-        for &id in ids {
-            tx.send(Response {
-                id,
-                output: Vec::new(),
-                output_words: Vec::new(),
-                service_us: 0.0,
-                modeled_cycles: 0.0,
-                batch_size,
-                error: Some(msg.to_string()),
-            })
-            .map_err(|_| ())?;
+    /// Bump the stats counter matching an error class.
+    fn account_error(&self, code: ErrorCode, n: u64) {
+        let mut st = self.stats.lock().unwrap();
+        match code {
+            ErrorCode::Shed => st.shed += n,
+            ErrorCode::DeadlineExceeded => st.expired += n,
+            ErrorCode::SessionGone => {
+                st.session_gone += n;
+                st.errors += n;
+            }
+            ErrorCode::Watchdog | ErrorCode::Exec => st.errors += n,
         }
+    }
+
+    fn error_response(id: u64, batch_size: usize, code: ErrorCode, msg: &str) -> Response {
+        Response {
+            id,
+            output: Vec::new(),
+            output_words: Vec::new(),
+            service_us: 0.0,
+            modeled_cycles: 0.0,
+            batch_size,
+            error: Some(msg.to_string()),
+            code: Some(code),
+        }
+    }
+
+    /// Answer *admitted* requests with a typed error, balancing their
+    /// in-flight count.
+    fn answer_error(
+        &self,
+        ids: &[u64],
+        batch_size: usize,
+        code: ErrorCode,
+        msg: &str,
+        tx: &Sender<Response>,
+    ) -> Result<(), ()> {
+        self.account_error(code, ids.len() as u64);
+        for &id in ids {
+            tx.send(Self::error_response(id, batch_size, code, msg)).map_err(|_| ())?;
+        }
+        self.admission.complete(ids.len());
         Ok(())
+    }
+
+    /// Answer a request rejected *before* admission (shed / dead on
+    /// arrival) — it never entered the in-flight count.
+    fn reject(&self, id: u64, code: ErrorCode, msg: &str, tx: &Sender<Response>) -> Result<(), ()> {
+        self.account_error(code, 1);
+        tx.send(Self::error_response(id, 1, code, msg)).map_err(|_| ())
+    }
+
+    /// Fleet errors carry a `watchdog:` prefix when a slow shard exhausted
+    /// the retry budget; surface those under the typed watchdog code.
+    fn exec_code(msg: &str) -> ErrorCode {
+        if msg.starts_with("watchdog") {
+            ErrorCode::Watchdog
+        } else {
+            ErrorCode::Exec
+        }
+    }
+
+    /// Answer the given request ids with the same (execution) error.
+    fn fail(&self, ids: &[u64], batch_size: usize, msg: &str, tx: &Sender<Response>) -> Result<(), ()> {
+        self.answer_error(ids, batch_size, ErrorCode::Exec, msg, tx)
+    }
+
+    /// Classify a request for a session that isn't registered: ids the
+    /// server has handed out before (`next_program` is a monotone counter
+    /// starting at 1) were unregistered mid-flight → typed `session_gone`;
+    /// ids it never issued are plain `unknown program` errors.
+    fn missing_session(&self, pid: ProgramId) -> (ErrorCode, String) {
+        let issued = pid.0 >= 1 && pid.0 < self.next_program.load(Ordering::Relaxed);
+        if issued {
+            (ErrorCode::SessionGone, format!("session {pid:?} was unregistered (session_gone)"))
+        } else {
+            (ErrorCode::Exec, format!("unknown program {pid:?}"))
+        }
     }
 
     fn dispatch_gemm(
@@ -893,7 +1173,8 @@ impl Server {
             Ok(o) => o,
             Err(e) => {
                 let ids: Vec<u64> = valid.iter().map(|r| r.id).collect();
-                return self.fail(&ids, valid.len(), &e.to_string(), tx);
+                let msg = e.to_string();
+                return self.answer_error(&ids, valid.len(), Self::exec_code(&msg), &msg, tx);
             }
         };
         // A backend returning the wrong amount of output must surface as an
@@ -905,14 +1186,28 @@ impl Server {
         }
         let service_us = t0.elapsed().as_secs_f64() * 1e6;
         let modeled = decision.map(|d| d.report.total_cycles).unwrap_or(0.0);
+        // Stitch hand-off point: a deadline that died during execution
+        // answers `deadline_exceeded`, not a result nobody is waiting for.
+        let now = Instant::now();
+        let live_n = valid.iter().filter(|r| !r.admission.expired(now)).count();
         {
             let mut st = self.stats.lock().unwrap();
-            st.served += valid.len() as u64;
+            st.served += live_n as u64;
             st.batches += 1;
-            st.total_service_us += service_us * valid.len() as f64;
+            st.total_service_us += service_us * live_n as f64;
             st.max_batch = st.max_batch.max(valid.len());
         }
         for (bi, r) in valid.iter().enumerate() {
+            if r.admission.expired(now) {
+                self.answer_error(
+                    &[r.id],
+                    valid.len(),
+                    ErrorCode::DeadlineExceeded,
+                    "deadline exceeded during execution",
+                    tx,
+                )?;
+                continue;
+            }
             let resp = Response {
                 id: r.id,
                 output: out[bi * m * n..(bi + 1) * m * n].to_vec(),
@@ -921,9 +1216,11 @@ impl Server {
                 modeled_cycles: modeled,
                 batch_size: valid.len(),
                 error: None,
+                code: None,
             };
             tx.send(resp).map_err(|_| ())?;
         }
+        self.admission.complete(live_n);
         Ok(())
     }
 
@@ -937,7 +1234,8 @@ impl Server {
         let session = self.sessions.read().unwrap().get(pid).cloned();
         let Some(session) = session else {
             let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
-            return self.fail(&ids, batch.len(), &format!("unknown program {pid:?}"), tx);
+            let (code, msg) = self.missing_session(*pid);
+            return self.answer_error(&ids, batch.len(), code, &msg, tx);
         };
         // f32 payloads only serve f32 sessions; element-typed sessions take
         // `ProgramWords` (representations must never mix in a dispatch).
@@ -979,7 +1277,8 @@ impl Server {
         let session = self.sessions.read().unwrap().get(pid).cloned();
         let Some(session) = session else {
             let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
-            return self.fail(&ids, batch.len(), &format!("unknown program {pid:?}"), tx);
+            let (code, msg) = self.missing_session(*pid);
+            return self.answer_error(&ids, batch.len(), code, &msg, tx);
         };
         let SessionWeights::Words(weights) = &session.weights else {
             let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
@@ -1055,7 +1354,8 @@ impl Server {
             Ok(Ok(o)) => o,
             Ok(Err(e)) => {
                 let ids: Vec<u64> = valid.iter().map(|r| r.id).collect();
-                return self.fail(&ids, valid.len(), &e.to_string(), tx);
+                let msg = e.to_string();
+                return self.answer_error(&ids, valid.len(), Self::exec_code(&msg), &msg, tx);
             }
             Err(_) => {
                 let ids: Vec<u64> = valid.iter().map(|r| r.id).collect();
@@ -1070,18 +1370,34 @@ impl Server {
             return self.fail(&ids, valid.len(), &msg, tx);
         }
         let service_us = t0.elapsed().as_secs_f64() * 1e6;
+        // Stitch hand-off point: deadlines that died during execution
+        // answer `deadline_exceeded` instead of a result nobody awaits.
+        let now = Instant::now();
+        let live_n = valid.iter().filter(|r| !r.admission.expired(now)).count();
         {
             let mut st = self.stats.lock().unwrap();
-            st.served += valid.len() as u64;
-            st.program_served += valid.len() as u64;
+            st.served += live_n as u64;
+            st.program_served += live_n as u64;
             st.batches += 1;
-            st.total_service_us += service_us * valid.len() as f64;
+            st.total_service_us += service_us * live_n as f64;
             st.max_batch = st.max_batch.max(valid.len());
         }
         let mut row0 = 0usize;
         for r in &valid {
             let (rows, _) = extract(r);
-            let (output, output_words) = wrap(out[row0 * nf..(row0 + rows) * nf].to_vec());
+            let slice = out[row0 * nf..(row0 + rows) * nf].to_vec();
+            row0 += rows;
+            if r.admission.expired(now) {
+                self.answer_error(
+                    &[r.id],
+                    valid.len(),
+                    ErrorCode::DeadlineExceeded,
+                    "deadline exceeded during execution",
+                    tx,
+                )?;
+                continue;
+            }
+            let (output, output_words) = wrap(slice);
             let resp = Response {
                 id: r.id,
                 output,
@@ -1090,10 +1406,11 @@ impl Server {
                 modeled_cycles: session.program.total_cycles,
                 batch_size: valid.len(),
                 error: None,
+                code: None,
             };
-            row0 += rows;
             tx.send(resp).map_err(|_| ())?;
         }
+        self.admission.complete(live_n);
         Ok(())
     }
 }
@@ -1792,7 +2109,7 @@ mod tests {
     #[test]
     fn fleet_server_matches_single_device_responses() {
         let cfg = ArchConfig::paper(4, 4);
-        let opts = ServerOptions { devices: 3, shard_min_rows: 1, max_batch: 8 };
+        let opts = ServerOptions { devices: 3, shard_min_rows: 1, max_batch: 8, ..Default::default() };
         let (tx, rx, h, server) = spawn_with_options(&cfg, Arc::new(NaiveExecutor), opts);
         let chain = Chain::mlp("mlp", 4, &[8, 12, 8]);
         let mut rng = Lcg::new(19);
@@ -1828,7 +2145,7 @@ mod tests {
     #[test]
     fn fleet_server_answers_errors_from_workers() {
         let cfg = ArchConfig::paper(4, 4);
-        let opts = ServerOptions { devices: 2, shard_min_rows: 4, max_batch: 4 };
+        let opts = ServerOptions { devices: 2, shard_min_rows: 4, max_batch: 4, ..Default::default() };
         let (tx, rx, h, server) = spawn_with_options(&cfg, Arc::new(NaiveExecutor), opts);
         let chain = Chain::mlp("mlp", 2, &[8, 8]);
         let mut rng = Lcg::new(21);
@@ -1857,5 +2174,122 @@ mod tests {
         drop(tx);
         let stats = h.join().unwrap();
         assert_eq!(stats.errors, 2);
+    }
+
+    /// A dead-on-arrival deadline answers a typed `deadline_exceeded`
+    /// response (not an exec error), and live deadlines serve normally.
+    #[test]
+    fn expired_deadline_answers_typed_error() {
+        let cfg = ArchConfig::paper(4, 4);
+        let (tx, rx, h, _srv) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let w = shared_weight(8, 4);
+        tx.send(req(0, 2, 8, 4, 0, &w).with_deadline_ms(0)).unwrap();
+        let r = rx.recv().unwrap();
+        assert_eq!(r.code, Some(ErrorCode::DeadlineExceeded));
+        assert!(r.error.is_some());
+        assert!(r.output.is_empty());
+        // A deadline far in the future serves normally.
+        tx.send(req(1, 2, 8, 4, 1, &w).with_deadline_ms(60_000).with_qos(QosClass::Batch))
+            .unwrap();
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.code, None);
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.expired, 1);
+        assert_eq!(stats.served, 1);
+        assert_eq!(stats.errors, 0, "expiry is policy, not an exec error");
+    }
+
+    /// A dry token bucket sheds rate-limited classes with a typed `shed`
+    /// response while `Interactive` stays exempt; the in-flight gauge
+    /// drains back to zero once everything is answered.
+    #[test]
+    fn rate_limiter_sheds_typed_and_spares_interactive() {
+        let cfg = ArchConfig::paper(4, 4);
+        let opts = ServerOptions {
+            admission: AdmissionOptions { rate_per_s: 0.0, burst: 1.0, ..Default::default() },
+            ..Default::default()
+        };
+        let (tx, rx, h, server) = spawn_with_options(&cfg, Arc::new(NaiveExecutor), opts);
+        let w = shared_weight(8, 4);
+        // One token in the bucket: the first best-effort request spends it,
+        // the second sheds (rate 0 never refills), interactive is exempt.
+        tx.send(req(0, 2, 8, 4, 0, &w).with_qos(QosClass::BestEffort)).unwrap();
+        tx.send(req(1, 2, 8, 4, 1, &w).with_qos(QosClass::BestEffort)).unwrap();
+        tx.send(req(2, 2, 8, 4, 2, &w).with_qos(QosClass::Interactive)).unwrap();
+        let mut by_id = HashMap::new();
+        for _ in 0..3 {
+            let r = rx.recv().unwrap();
+            by_id.insert(r.id, r);
+        }
+        assert!(by_id[&0].error.is_none(), "{:?}", by_id[&0].error);
+        assert_eq!(by_id[&1].code, Some(ErrorCode::Shed));
+        assert!(by_id[&1].error.as_deref().unwrap_or("").contains("shed"));
+        assert!(by_id[&2].error.is_none(), "interactive is exempt from the rate limiter");
+        assert_eq!(server.admission().in_flight(), 0, "every admitted request completed");
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.shed, 1);
+        assert_eq!(stats.served, 2);
+        assert_eq!(stats.errors, 0, "shedding is policy, not an exec error");
+    }
+
+    /// Requests racing `Server::unregister` answer a typed `session_gone`
+    /// error — never a panic or a silent hang — while ids the server never
+    /// issued still answer plain `unknown program`.
+    #[test]
+    fn unregistered_session_answers_session_gone() {
+        let cfg = ArchConfig::paper(4, 4);
+        let (tx, rx, h, server) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let chain = Chain::mlp("mlp", 2, &[8, 8]);
+        let mut rng = Lcg::new(77);
+        let weights: Vec<Vec<f32>> =
+            chain.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect();
+        let pid = server.register_chain(&chain, weights).unwrap();
+        assert!(server.unregister(pid));
+        tx.send(Request::for_program(0, pid, 2, rng.f32_matrix(2, 8))).unwrap();
+        let r = rx.recv().unwrap();
+        assert_eq!(r.code, Some(ErrorCode::SessionGone), "{:?}", r.error);
+        assert!(r.error.as_deref().unwrap_or("").contains("unregistered"));
+        // Never-issued ids are unknown programs, not gone sessions.
+        tx.send(Request::for_program(1, ProgramId(999), 2, vec![0.0; 16])).unwrap();
+        let r = rx.recv().unwrap();
+        assert_eq!(r.code, Some(ErrorCode::Exec));
+        assert!(r.error.as_deref().unwrap_or("").contains("unknown program"));
+        drop(tx);
+        let stats = h.join().unwrap();
+        assert_eq!(stats.session_gone, 1);
+        assert_eq!(stats.errors, 2);
+    }
+
+    /// Continuous batching mechanics: a compatible arrival joins an open
+    /// (submitted but unclaimed) batch, claiming is exactly-once, and a
+    /// claimed batch accepts no further arrivals.
+    #[test]
+    fn continuous_batching_injects_into_open_batches() {
+        let cfg = ArchConfig::paper(4, 4);
+        let server = Arc::new(Server::with_options(
+            &cfg,
+            Arc::new(NaiveExecutor),
+            ServerOptions { devices: 2, ..Default::default() },
+        ));
+        let w = shared_weight(8, 4);
+        let r0 = req(0, 2, 8, 4, 0, &w);
+        let bk = batch_key(&r0);
+        let ob = Arc::new(OpenBatch { reqs: Mutex::new(Some(vec![r0])) });
+        lock_clean(&server.open).insert(bk, Arc::clone(&ob));
+        // Same key: injected.
+        assert!(server.try_inject(req(1, 2, 8, 4, 1, &w)).is_none());
+        // Different weight identity → different key: handed back.
+        let other = shared_weight(8, 4);
+        assert!(server.try_inject(req(2, 2, 8, 4, 2, &other)).is_some());
+        // The claiming worker takes both requests, exactly once.
+        let claimed = server.claim_open(&bk, &ob).unwrap();
+        assert_eq!(claimed.len(), 2);
+        assert!(server.claim_open(&bk, &ob).is_none(), "claim is exactly-once");
+        // After the claim the batch is closed to new arrivals.
+        assert!(server.try_inject(req(3, 2, 8, 4, 3, &w)).is_some());
+        assert_eq!(server.stats.lock().unwrap().injected, 1);
     }
 }

@@ -204,6 +204,15 @@ pub struct DeviceLoad {
     pub steals: u64,
     /// Shards/jobs re-executed here after their assigned device dropped.
     pub requeues: u64,
+    /// Queue time of stolen jobs (submit → steal): how long work waited
+    /// before a neighbour rescued it.
+    pub steal_wait_us: f64,
+    /// Shard executions beyond the first attempt (watchdog requeues).
+    pub retries: u64,
+    /// Shards that ran past the watchdog budget on this device.
+    pub watchdog_trips: u64,
+    /// Health-probe re-admissions after a transient failure.
+    pub recoveries: u64,
     /// Wave plans compiled at runtime by this device's simulators — stays 0
     /// when every executed program was compiled ahead of time.
     pub plan_compiles: u64,
@@ -217,6 +226,12 @@ pub struct DeviceLoad {
 pub struct FleetReport {
     /// Observation window length (same unit as the per-device times).
     pub window: f64,
+    /// Requests shed by admission control over the window (filled by the
+    /// serving layer; 0 for a bare fleet).
+    pub shed: u64,
+    /// Requests answered `deadline_exceeded` over the window (serving
+    /// layer; 0 for a bare fleet).
+    pub expired: u64,
     pub devices: Vec<DeviceLoad>,
 }
 
@@ -230,6 +245,31 @@ impl FleetReport {
     /// compile-once path).
     pub fn plan_compiles(&self) -> u64 {
         self.devices.iter().map(|d| d.plan_compiles).sum()
+    }
+
+    /// Shard retries summed over devices (watchdog requeues).
+    pub fn retries(&self) -> u64 {
+        self.devices.iter().map(|d| d.retries).sum()
+    }
+
+    /// Watchdog trips summed over devices.
+    pub fn watchdog_trips(&self) -> u64 {
+        self.devices.iter().map(|d| d.watchdog_trips).sum()
+    }
+
+    /// Health-probe recoveries summed over devices.
+    pub fn recoveries(&self) -> u64 {
+        self.devices.iter().map(|d| d.recoveries).sum()
+    }
+
+    /// Mean queue time of stolen jobs (µs): the steal-latency headline.
+    /// 0 when nothing was stolen.
+    pub fn steal_wait_mean_us(&self) -> f64 {
+        let steals: u64 = self.devices.iter().map(|d| d.steals).sum();
+        if steals == 0 {
+            return 0.0;
+        }
+        self.devices.iter().map(|d| d.steal_wait_us).sum::<f64>() / steals as f64
     }
 
     /// Fraction of the fleet's aggregate capacity (window × devices) spent
@@ -265,11 +305,11 @@ impl FleetReport {
     pub fn render(&self) -> String {
         let mut s = String::new();
         s.push_str(
-            "fleet: device    busy      stall  dispatches  shards    rows  steals  requeues\n",
+            "fleet: device    busy      stall  dispatches  shards    rows  steals  requeues  retries  wdog  recov\n",
         );
         for d in &self.devices {
             s.push_str(&format!(
-                "fleet: dev{:<3}{} {:>9.1} {:>9.1} {:>11} {:>7} {:>7} {:>7} {:>9}\n",
+                "fleet: dev{:<3}{} {:>9.1} {:>9.1} {:>11} {:>7} {:>7} {:>7} {:>9} {:>8} {:>5} {:>6}\n",
                 d.device,
                 if d.failed { "✗" } else { " " },
                 d.busy,
@@ -279,13 +319,23 @@ impl FleetReport {
                 d.rows,
                 d.steals,
                 d.requeues,
+                d.retries,
+                d.watchdog_trips,
+                d.recoveries,
             ));
         }
         s.push_str(&format!(
-            "fleet: utilization {:.1}%, shard imbalance {:.2}, {} runtime plan compile(s)",
+            "fleet: utilization {:.1}%, shard imbalance {:.2}, {} runtime plan compile(s)\n",
             self.utilization() * 100.0,
             self.imbalance(),
             self.plan_compiles(),
+        ));
+        s.push_str(&format!(
+            "fleet: shed {}, expired {}, retries {}, mean steal wait {:.1} µs",
+            self.shed,
+            self.expired,
+            self.retries(),
+            self.steal_wait_mean_us(),
         ));
         s
     }
@@ -417,6 +467,7 @@ mod tests {
         let rep = FleetReport {
             window: 100.0,
             devices: vec![load(0, 80.0, false), load(1, 40.0, false)],
+            ..Default::default()
         };
         // 120 busy over 200 capacity.
         assert!((rep.utilization() - 0.6).abs() < 1e-12);
@@ -424,6 +475,27 @@ mod tests {
         assert!((rep.imbalance() - 0.25).abs() < 1e-12);
         assert_eq!(rep.plan_compiles(), 0);
         assert!(rep.render().contains("dev0"));
+        assert!(rep.render().contains("shed 0, expired 0"));
+    }
+
+    #[test]
+    fn fleet_report_robustness_columns() {
+        let mut d0 = load(0, 10.0, false);
+        d0.steals = 2;
+        d0.steal_wait_us = 300.0;
+        d0.retries = 1;
+        d0.watchdog_trips = 1;
+        d0.recoveries = 1;
+        let rep = FleetReport { window: 100.0, shed: 3, expired: 2, devices: vec![d0] };
+        assert_eq!(rep.retries(), 1);
+        assert_eq!(rep.watchdog_trips(), 1);
+        assert_eq!(rep.recoveries(), 1);
+        assert!((rep.steal_wait_mean_us() - 150.0).abs() < 1e-9);
+        let r = rep.render();
+        assert!(r.contains("retries"), "{r}");
+        assert!(r.contains("shed 3, expired 2"), "{r}");
+        // No steals → mean wait well-defined at 0.
+        assert_eq!(FleetReport::default().steal_wait_mean_us(), 0.0);
     }
 
     #[test]
@@ -431,6 +503,7 @@ mod tests {
         let rep = FleetReport {
             window: 100.0,
             devices: vec![load(0, 50.0, false), load(1, 0.0, true)],
+            ..Default::default()
         };
         // Survivor alone → perfectly balanced among survivors…
         assert_eq!(rep.imbalance(), 0.0);
@@ -442,7 +515,11 @@ mod tests {
     fn fleet_report_empty_and_idle_edge_cases() {
         assert_eq!(FleetReport::default().utilization(), 0.0);
         assert_eq!(FleetReport::default().imbalance(), 0.0);
-        let idle = FleetReport { window: 10.0, devices: vec![load(0, 0.0, false)] };
+        let idle = FleetReport {
+            window: 10.0,
+            devices: vec![load(0, 0.0, false)],
+            ..Default::default()
+        };
         assert_eq!(idle.utilization(), 0.0);
         assert_eq!(idle.imbalance(), 0.0);
     }

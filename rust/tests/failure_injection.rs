@@ -175,7 +175,7 @@ fn truncated_trace_yields_incomplete_output() {
 fn fleet_dropout_under_concurrent_load_answers_everything_exactly() {
     type G = ModP<Goldilocks>;
     let cfg = ArchConfig::paper(4, 4);
-    let opts = ServerOptions { devices: 3, shard_min_rows: 2, max_batch: 8 };
+    let opts = ServerOptions { devices: 3, shard_min_rows: 2, max_batch: 8, ..Default::default() };
     let (tx, rx, h, server) = spawn_with_options(&cfg, Arc::new(NaiveExecutor), opts);
     let chain = Chain::mlp("stress", 4, &[8, 12, 8]);
     let mut rng = Lcg::new(0xD20);
@@ -285,7 +285,7 @@ fn shard_panic_restores_device_availability() {
     let fleet = Fleet::new(
         &cfg,
         Arc::new(PanicOnMarker),
-        FleetOptions { devices: 2, shard_min_rows: 1 },
+        FleetOptions { devices: 2, shard_min_rows: 1, ..Default::default() },
     );
     let chain = Chain::mlp("panic", 4, &[8, 8]);
     let o = MapperOptions { full_layout_search: false, threads: 1, ..Default::default() };
@@ -316,6 +316,178 @@ fn shard_panic_restores_device_availability() {
         assert!(d.stats().shards >= 1, "device {} reused after the panic", d.id);
         assert!(!d.is_busy());
     }
+}
+
+// ----------------------------------------------------------------------
+// FaultPlan battery: scripted dropout + slow-shard + panic schedules
+// across {SatI32, f32, Goldilocks} × devices ∈ {1, 3, 7}. The `faults`
+// feature is forced on for test builds by the self-dev-dependency in
+// Cargo.toml, so `FaultPlan` is available here.
+// ----------------------------------------------------------------------
+
+use minisa::coordinator::fleet::{FaultDropout, FaultPlan};
+use minisa::coordinator::serve::{Response, ServeStats};
+
+const BATTERY_REQUESTS: u64 = 24;
+const BATTERY_ROWS: usize = 4;
+
+struct StreamResult {
+    got: HashMap<u64, Response>,
+    stats: ServeStats,
+    /// Total rows executed across fleet devices (0 on the inline
+    /// single-device leader, which does not route through the fleet).
+    rows_executed: u64,
+    busy_leak: bool,
+}
+
+/// Serve `BATTERY_REQUESTS` requests of `BATTERY_ROWS` rows each through a
+/// fresh server, optionally under a fault plan. The request payloads are
+/// derived from a fixed seed, so two calls with the same `elem` see an
+/// identical stream — the fault-free single-device call is the bit-exact
+/// reference for every faulted configuration.
+fn run_stream(elem: ElemType, devices: usize, plan: Option<FaultPlan>) -> StreamResult {
+    let cfg = ArchConfig::paper(4, 4);
+    let opts =
+        ServerOptions { devices, shard_min_rows: 1, max_batch: 4, ..Default::default() };
+    let (tx, rx, h, server) = spawn_with_options(&cfg, Arc::new(NaiveExecutor), opts);
+    let chain = Chain::mlp("battery", BATTERY_ROWS, &[8, 12, 8]);
+    let mut rng = Lcg::new(0xBA77E57);
+    let pid = if elem == ElemType::F32 {
+        let ws: Vec<Vec<f32>> =
+            chain.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect();
+        server.register_chain(&chain, ws).unwrap()
+    } else {
+        let ws: Vec<Vec<u64>> =
+            chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect();
+        server.register_chain_elem(&chain, ws, elem).unwrap()
+    };
+    if let Some(p) = plan {
+        server.fleet().set_fault_plan(p);
+    }
+    for id in 0..BATTERY_REQUESTS {
+        let r = if elem == ElemType::F32 {
+            Request::for_program(id, pid, BATTERY_ROWS, rng.f32_matrix(BATTERY_ROWS, 8))
+        } else {
+            let words = elem.sample_words(&mut rng, BATTERY_ROWS * 8);
+            Request::for_program_words(id, pid, BATTERY_ROWS, words)
+        };
+        tx.send(r).unwrap();
+    }
+    let mut got = HashMap::new();
+    for _ in 0..BATTERY_REQUESTS {
+        let r = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("every request answered, no hang");
+        assert!(got.insert(r.id, r).is_none(), "duplicate response");
+    }
+    drop(tx);
+    let stats = h.join().unwrap();
+    let busy_leak = server.fleet().devices().iter().any(|d| d.is_busy());
+    let rows_executed = server.fleet().devices().iter().map(|d| d.stats().rows).sum();
+    StreamResult { got, stats, rows_executed, busy_leak }
+}
+
+/// The scripted schedule: a transient dropout early, a permanent dropout
+/// later (when the fleet is big enough to survive it), slow shards
+/// throughout, and optionally seeded executor panics.
+fn scripted_plan(devices: usize, panics: bool) -> FaultPlan {
+    let mut dropouts = Vec::new();
+    if devices > 1 {
+        dropouts.push(FaultDropout { device: 1, after_shards: 2, transient: true });
+    }
+    if devices > 2 {
+        dropouts.push(FaultDropout { device: 2, after_shards: 6, transient: false });
+    }
+    FaultPlan {
+        seed: 0xFA11,
+        dropouts,
+        slow_prob: 0.2,
+        slow_ms: 1,
+        panic_prob: if panics { 0.15 } else { 0.0 },
+    }
+}
+
+/// The battery proper: for one element type, every fleet size × schedule
+/// combination must answer every request exactly once (success or typed
+/// error), leak no busy slots, conserve rows, and answer all successful
+/// work bit-identical to the fault-free single-device reference.
+fn fault_battery(elem: ElemType) {
+    let reference = run_stream(elem, 1, None);
+    assert_eq!(reference.stats.errors, 0, "fault-free reference must not error");
+    for r in reference.got.values() {
+        assert!(r.error.is_none(), "reference request {}: {:?}", r.id, r.error);
+    }
+
+    for devices in [1usize, 3, 7] {
+        for panics in [false, true] {
+            let r = run_stream(elem, devices, Some(scripted_plan(devices, panics)));
+            let label = format!("{elem} × {devices} devices, panics={panics}");
+            assert_eq!(r.got.len() as u64, BATTERY_REQUESTS, "{label}");
+            assert!(!r.busy_leak, "{label}: leaked busy slot");
+            let mut succeeded = 0u64;
+            for (id, resp) in &r.got {
+                match &resp.error {
+                    None => {
+                        succeeded += 1;
+                        let refr = &reference.got[id];
+                        assert_eq!(resp.output, refr.output, "{label}: request {id}");
+                        assert_eq!(
+                            resp.output_words, refr.output_words,
+                            "{label}: request {id}"
+                        );
+                    }
+                    Some(msg) => {
+                        // Injected panics are the only permitted failure —
+                        // dropouts requeue and slow shards just wait.
+                        assert!(panics, "{label}: unexpected error: {msg}");
+                        assert!(
+                            resp.code.is_some(),
+                            "{label}: untyped error for request {id}: {msg}"
+                        );
+                    }
+                }
+            }
+            if !panics {
+                assert_eq!(
+                    succeeded, BATTERY_REQUESTS,
+                    "{label}: dropout/slow schedules must not fail requests"
+                );
+                assert_eq!(r.stats.errors, 0, "{label}");
+            }
+            if devices > 1 {
+                // Rows conserved: every successful request's rows executed
+                // at least once (panicked attempts may add more).
+                assert!(
+                    r.rows_executed >= succeeded * BATTERY_ROWS as u64,
+                    "{label}: executed {} rows for {} successes",
+                    r.rows_executed,
+                    succeeded
+                );
+                if !panics {
+                    assert_eq!(
+                        r.rows_executed,
+                        BATTERY_REQUESTS * BATTERY_ROWS as u64,
+                        "{label}: dropouts must requeue, not re-execute, work"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fault_battery_sat_i32() {
+    fault_battery(ElemType::I32);
+}
+
+#[test]
+fn fault_battery_f32() {
+    fault_battery(ElemType::F32);
+}
+
+#[test]
+fn fault_battery_goldilocks() {
+    fault_battery(ElemType::Goldilocks);
 }
 
 #[test]

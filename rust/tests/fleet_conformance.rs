@@ -91,7 +91,7 @@ fn sharded_execution_bit_identical_for_all_backends() {
             let fleet = Fleet::new(
                 &cfg,
                 Arc::new(NaiveExecutor),
-                FleetOptions { devices, shard_min_rows },
+                FleetOptions { devices, shard_min_rows, ..Default::default() },
             );
             let ww = WordWeights::new(weights.clone(), elem);
             let input = elem.sample_words(g.rng(), rows * program.in_features());
@@ -118,8 +118,11 @@ fn adversarial_shard_boundaries_stay_exact() {
     for (devices, rows, min_rows) in
         [(7usize, 9usize, 1usize), (7, 9, 1000), (3, 1, 1), (2, 23, 5), (7, 7, 1)]
     {
-        let fleet =
-            Fleet::new(&cfg, Arc::new(NaiveExecutor), FleetOptions { devices, shard_min_rows: min_rows });
+        let fleet = Fleet::new(
+            &cfg,
+            Arc::new(NaiveExecutor),
+            FleetOptions { devices, shard_min_rows: min_rows, ..Default::default() },
+        );
         let ww = WordWeights::new(weights.clone(), elem);
         let input = elem.sample_words(&mut rng, rows * program.in_features());
         let sharded = fleet.run_program_words(None, &program, rows, &input, &ww).unwrap();
@@ -147,7 +150,8 @@ fn fleet_server_serves_bit_exact_with_one_compile() {
         for elem in BACKENDS {
             let cfg = ArchConfig::paper(4, 4);
             let chain = Chain::mlp("conf", 4, &[8, 12, 8]);
-            let opts = ServerOptions { devices, shard_min_rows: 1, max_batch: 8 };
+            let opts =
+                ServerOptions { devices, shard_min_rows: 1, max_batch: 8, ..Default::default() };
             let (tx, rx, h, server) =
                 spawn_with_options(&cfg, Arc::new(NaiveExecutor), opts);
             let mut rng = Lcg::new(1000 + devices as u64 + elem as u64 * 31);
@@ -197,8 +201,11 @@ fn repeated_execution_reuses_device_plan_caches() {
     let mut rng = Lcg::new(7);
     let weights: Vec<Vec<u64>> =
         chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect();
-    let fleet =
-        Fleet::new(&cfg, Arc::new(NaiveExecutor), FleetOptions { devices: 3, shard_min_rows: 1 });
+    let fleet = Fleet::new(
+        &cfg,
+        Arc::new(NaiveExecutor),
+        FleetOptions { devices: 3, shard_min_rows: 1, ..Default::default() },
+    );
     let ww = WordWeights::new(weights, elem);
     let input = elem.sample_words(&mut rng, 12 * program.in_features());
     let first = fleet.run_program_words(None, &program, 12, &input, &ww).unwrap();
