@@ -6,8 +6,19 @@
 //! * trace lowering,
 //! * functional simulation throughput (MACs/s) — **before** (reference
 //!   per-wave interpreter) and **after** (compiled `WavePlan` execution),
+//! * blocked multi-row execution (`BlockSim` + `Program::execute_rows`)
+//!   vs the sequential scalar chunk loop, per element backend — the §Perf
+//!   tentpole's headline MACs/s + rows/s numbers,
+//! * the `ModP::mac_block` delayed-reduction MAC kernel vs the sequential
+//!   Montgomery fold, per field,
 //! * 5-engine pipeline simulation,
 //! * ISA encode throughput.
+//!
+//! Methodology (docs/PERF.md): every timing runs `util::bench::time` with
+//! explicit warmup iterations before the measured ones and reports the
+//! **median** of the sample set (min/mean also recorded); throughput
+//! metrics derive from the median. CI diffs the emitted JSON against the
+//! committed baseline via `tools/bench_regression.py`.
 //!
 //! EXPERIMENTS.md §Perf records the deltas; this binary also emits the
 //! machine-readable `BENCH_hotpath.json` (run from `rust/`:
@@ -76,14 +87,14 @@ fn main() {
     let iv: Vec<i32> = (0..gl.m * gl.k).map(|_| rng.range(0, 15) as i32 - 7).collect();
     let wv: Vec<i32> = (0..gl.k * gl.n).map(|_| rng.range(0, 15) as i32 - 7).collect();
     let macs = gl.macs() as f64;
-    let (ref_out, t_ref) = time(1, 10, || {
+    let (ref_out, t_ref) = time(2, 15, || {
         let mut sim = FunctionalSim::new(&cfg44);
         sim.use_plans = false;
         execute_program_on(&mut sim, &gl, &prog, &iv, &wv).unwrap()
     });
     t_ref.report("funcsim/256x40x88@4x4 (reference)");
     log.record("funcsim/256x40x88@4x4 (reference)", t_ref);
-    let (out, t_plan) = time(1, 10, || execute_program(&cfg44, &gl, &prog, &iv, &wv).unwrap());
+    let (out, t_plan) = time(2, 15, || execute_program(&cfg44, &gl, &prog, &iv, &wv).unwrap());
     t_plan.report("funcsim/256x40x88@4x4 (wave plans)");
     log.record("funcsim/256x40x88@4x4 (wave plans)", t_plan);
     assert_eq!(ref_out, out, "plan path must be bit-identical");
@@ -97,6 +108,7 @@ fn main() {
     );
     log.metric("funcsim_mmacs_per_s_before", rate_before);
     log.metric("funcsim_mmacs_per_s_after", rate_after);
+    log.metric("funcsim_rows_per_s_after", gl.m as f64 / (t_plan.median_ns / 1e9));
     log.metric("funcsim_speedup", t_ref.median_ns / t_plan.median_ns);
 
     // --- Pipeline model ---
@@ -157,6 +169,8 @@ fn main() {
         .unwrap()
     });
 
+    bench_blocked(&mut log);
+
     match log.write_json("BENCH_hotpath.json") {
         Ok(()) => println!("\nwrote BENCH_hotpath.json"),
         Err(e) => eprintln!("\nfailed to write BENCH_hotpath.json: {e}"),
@@ -164,6 +178,78 @@ fn main() {
 
     bench_arith();
     bench_artifact();
+}
+
+/// §Perf tentpole: the blocked multi-row serving executor
+/// ([`execute_program_words_blocked`]: `BlockSim` lanes through
+/// `Program::execute_rows` → `WavePlan::execute_rows`) against the
+/// sequential scalar chunk loop it replaces, per element backend. The two
+/// paths are asserted bit-identical here (the full battery lives in
+/// `tests/plan_equivalence.rs`); the acceptance bar is ≥2x MACs/s on the
+/// Montgomery fields (`blocked_*_vs_scalar_speedup`).
+fn bench_blocked(log: &mut BenchLog) {
+    use minisa::arith::{decode_words, ElemType};
+    use minisa::coordinator::serve::{execute_program_words_blocked, execute_program_words_on};
+    use minisa::functional::{BlockSim, DEFAULT_ROW_BLOCK};
+    use minisa::mapper::chain::Chain;
+    use minisa::program::Program;
+
+    println!("\n--- blocked multi-row execution vs scalar chunk loop ---");
+    let cfg = ArchConfig::paper(4, 4);
+    let o = MapperOptions { full_layout_search: false, threads: 1, ..Default::default() };
+    let chain = Chain::mlp("blk", 8, &[40, 88, 24]);
+    let program = Program::compile(&cfg, &chain, &o).expect("bench chain compiles on 4x4");
+    let m = program.rows();
+    let kf = program.in_features();
+    // Two full blocks of row chunks so the gather loop and the block-refill
+    // boundary are both exercised.
+    let rows = 2 * DEFAULT_ROW_BLOCK * m;
+
+    for elem in [ElemType::Goldilocks, ElemType::BabyBear, ElemType::I32] {
+        minisa::with_element!(elem, E => {
+            let mut rng = Lcg::new(0xB10C);
+            let input = elem.sample_words(&mut rng, rows * kf);
+            let w: Vec<Vec<E>> = chain
+                .layers
+                .iter()
+                .map(|g| decode_words::<E>(&elem.sample_words(&mut rng, g.k * g.n)))
+                .collect();
+            // MAC count of the whole batched request, from a fresh sim (the
+            // blocked path is stats-identical — the battery asserts it).
+            let mut count_sim: FunctionalSim<E> = FunctionalSim::new(&cfg);
+            execute_program_words_on(&mut count_sim, &program, rows, &input, &w).unwrap();
+            let macs = count_sim.stats.macs_used as f64;
+
+            let (scalar_out, t_scalar) = time(2, 15, || {
+                let mut sim: FunctionalSim<E> = FunctionalSim::new(&cfg);
+                execute_program_words_on(&mut sim, &program, rows, &input, &w).unwrap()
+            });
+            t_scalar.report(&format!("funcsim/blocked-{elem} {rows} rows (scalar loop)"));
+            log.record(&format!("funcsim/blocked-{elem} {rows} rows (scalar loop)"), t_scalar);
+            let (blocked_out, t_blocked) = time(2, 15, || {
+                let mut block: BlockSim<E> = BlockSim::new(&cfg);
+                execute_program_words_blocked(&mut block, &program, rows, &input, &w).unwrap()
+            });
+            t_blocked.report(&format!("funcsim/blocked-{elem} {rows} rows (blocked)"));
+            log.record(&format!("funcsim/blocked-{elem} {rows} rows (blocked)"), t_blocked);
+            assert_eq!(scalar_out, blocked_out, "{elem}: blocked path must be bit-identical");
+
+            let rate_scalar = macs / (t_scalar.median_ns / 1e9) / 1e6;
+            let rate_blocked = macs / (t_blocked.median_ns / 1e9) / 1e6;
+            let speedup = t_scalar.median_ns / t_blocked.median_ns;
+            println!(
+                "  {elem}: {rate_scalar:.1} → {rate_blocked:.1} MMAC/s ({speedup:.2}x, \
+                 {rows} rows)"
+            );
+            log.metric(&format!("blocked_{elem}_scalar_mmacs_per_s"), rate_scalar);
+            log.metric(&format!("blocked_{elem}_mmacs_per_s"), rate_blocked);
+            log.metric(
+                &format!("blocked_{elem}_rows_per_s"),
+                rows as f64 / (t_blocked.median_ns / 1e9),
+            );
+            log.metric(&format!("blocked_{elem}_vs_scalar_speedup"), speedup);
+        });
+    }
 }
 
 /// `arith` hot path: the Montgomery mul-accumulate inner loop (what
@@ -213,6 +299,25 @@ fn bench_arith() {
             &format!("arith_{}_mont_mmacs_per_s", F::NAME),
             LEN as f64 / (t_mont.median_ns / 1e9) / 1e6,
         );
+        // Blocked delayed-REDC kernel (`ModP::mac_block`, the backend of
+        // `Element::dot` in the wave hot loop): one REDC per
+        // `DELAYED_MACS`-sized group instead of one per multiply.
+        let (blk_sum, t_blk) =
+            alog.bench(&format!("arith/{} mac_block dot {}", F::NAME, LEN), 3, 200, || {
+                ModP::<F>::mac_block(ModP::<F>::default(), &xm, &ym)
+            });
+        assert_eq!(blk_sum.to_u64(), naive_sum, "{}: mac_block agrees", F::NAME);
+        let blk_speedup = t_mont.median_ns / t_blk.median_ns;
+        println!(
+            "  {}: mac_block {blk_speedup:.2}x vs sequential montgomery (delay group {})",
+            F::NAME,
+            ModP::<F>::DELAYED_MACS
+        );
+        alog.metric(
+            &format!("arith_{}_mac_block_mmacs_per_s", F::NAME),
+            LEN as f64 / (t_blk.median_ns / 1e9) / 1e6,
+        );
+        alog.metric(&format!("arith_{}_mac_block_vs_mont_speedup", F::NAME), blk_speedup);
     }
 
     field_case::<BabyBear>(&mut alog);

@@ -96,6 +96,24 @@ pub trait Element:
     /// accumulation).
     fn acc_add(a: Self::Acc, b: Self::Acc) -> Self::Acc;
 
+    /// Dot product `Σ a[i]·b[i]` from `acc_zero()` — the per-op kernel of
+    /// the wave hot loop ([`crate::functional::WavePlan`]). Contract:
+    /// **bit-identical** to the sequential fold
+    /// `(0..n).fold(acc_zero(), |acc, i| mac(acc, a[i], b[i]))`. Backends
+    /// may override with unrolled or delayed-reduction kernels only where
+    /// reassociating the additions is provably exact (two's-complement or
+    /// modular addition); rounding arithmetic (f32) must keep this
+    /// sequential default. Callers pass equal-length slices; the shorter
+    /// length governs otherwise.
+    #[inline]
+    fn dot(a: &[Self], b: &[Self]) -> Self::Acc {
+        let mut acc = Self::acc_zero();
+        for (&x, &y) in a.iter().zip(b.iter()) {
+            acc = Self::mac(acc, x, y);
+        }
+        acc
+    }
+
     /// Is this accumulator exactly zero? (Orphan-psum legality check.)
     fn acc_is_zero(a: Self::Acc) -> bool;
 
@@ -125,14 +143,41 @@ impl Element for i32 {
         1
     }
 
-    #[inline]
+    #[inline(always)]
     fn mac(acc: i64, a: i32, b: i32) -> i64 {
         acc + a as i64 * b as i64
     }
 
-    #[inline]
+    #[inline(always)]
     fn acc_add(a: i64, b: i64) -> i64 {
         a + b
+    }
+
+    /// 4-wide unrolled dot. Reassociation is exact here: two's-complement
+    /// i64 addition is associative and commutative, so the four partial
+    /// accumulators recombine to the sequential fold bit-for-bit. The
+    /// unrolled lanes use `wrapping_add`, which equals `+` everywhere the
+    /// sequential fold does not overflow i64 (all real operand ranges — an
+    /// overflowing psum would need ~2^32 maximal products) and agrees with
+    /// release-mode wrap semantics when it does.
+    #[inline]
+    fn dot(a: &[i32], b: &[i32]) -> i64 {
+        let n = a.len().min(b.len());
+        let (mut s0, mut s1, mut s2, mut s3) = (0i64, 0i64, 0i64, 0i64);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            s0 = s0.wrapping_add(a[i] as i64 * b[i] as i64);
+            s1 = s1.wrapping_add(a[i + 1] as i64 * b[i + 1] as i64);
+            s2 = s2.wrapping_add(a[i + 2] as i64 * b[i + 2] as i64);
+            s3 = s3.wrapping_add(a[i + 3] as i64 * b[i + 3] as i64);
+            i += 4;
+        }
+        let mut acc = s0.wrapping_add(s1).wrapping_add(s2).wrapping_add(s3);
+        while i < n {
+            acc = acc.wrapping_add(a[i] as i64 * b[i] as i64);
+            i += 1;
+        }
+        acc
     }
 
     #[inline]
@@ -158,6 +203,7 @@ impl Element for i32 {
         word as u32 as i32
     }
 
+    #[inline]
     fn act(f: ActFn, v: i32) -> i32 {
         match f {
             ActFn::None => v,
@@ -189,12 +235,17 @@ impl Element for f32 {
         1.0
     }
 
-    #[inline]
+    // `dot` deliberately NOT overridden: f32 addition is not associative,
+    // so any unroll would change rounding order and break the blocked
+    // path's bit-identity contract. The sequential trait default is the
+    // only legal kernel here.
+
+    #[inline(always)]
     fn mac(acc: f32, a: f32, b: f32) -> f32 {
         acc + a * b
     }
 
-    #[inline]
+    #[inline(always)]
     fn acc_add(a: f32, b: f32) -> f32 {
         a + b
     }
@@ -219,6 +270,7 @@ impl Element for f32 {
         f32::from_bits(word as u32)
     }
 
+    #[inline]
     fn act(f: ActFn, v: f32) -> f32 {
         match f {
             ActFn::None => v,
@@ -476,5 +528,29 @@ mod tests {
     fn encode_decode_words_roundtrip() {
         let xs: Vec<i32> = vec![-3, 0, 7, i32::MIN];
         assert_eq!(decode_words::<i32>(&encode_words::<i32>(&xs)), xs);
+    }
+
+    /// `Element::dot` ≡ the sequential `mac` fold, bit-for-bit, for every
+    /// backend and for lengths straddling every unroll/chunk boundary
+    /// (i32's 4-wide unroll; `ModP::mac_block`'s delayed-REDC chunks — for
+    /// PallasStyle the chunk limit is 4, so 1..=19 crosses it repeatedly).
+    #[test]
+    fn dot_matches_sequential_fold_all_backends() {
+        let mut rng = Lcg::new(0xD07);
+        for elem in ElemType::ALL {
+            for len in 0..=19usize {
+                let wa = elem.sample_words(&mut rng, len);
+                let wb = elem.sample_words(&mut rng, len);
+                with_element!(elem, E => {
+                    let a: Vec<E> = decode_words::<E>(&wa);
+                    let b: Vec<E> = decode_words::<E>(&wb);
+                    let mut seq = E::acc_zero();
+                    for i in 0..len {
+                        seq = E::mac(seq, a[i], b[i]);
+                    }
+                    assert_eq!(E::dot(&a, &b), seq, "{elem} dot len={len}");
+                });
+            }
+        }
     }
 }

@@ -129,6 +129,50 @@ impl PrimeField for PallasStyle {
 pub struct ModP<F: PrimeField>(u64, PhantomData<F>);
 
 impl<F: PrimeField> ModP<F> {
+    /// How many Montgomery products may be summed in a u128 before one
+    /// REDC, with the REDC precondition `t < p·2^64` still provably held:
+    /// each product of representations is `< p²`, so `n` of them sum to
+    /// `< n·p²`, and `n·p² ≤ p·2^64 ⇔ n·p ≤ 2^64` — i.e. `n = ⌊2^64/p⌋`
+    /// (computed as `u64::MAX / P`, off by at most one product's worth of
+    /// slack, always on the safe side). BabyBear: ~9.2e9 (one REDC per
+    /// dot). PallasStyle: 4. Goldilocks: 1 — the bound degenerates to
+    /// REDC-per-product, i.e. exactly the sequential `mac` chain.
+    pub const DELAYED_MACS: usize = {
+        let n = (u64::MAX / F::P) as usize;
+        if n == 0 {
+            1
+        } else {
+            n
+        }
+    };
+
+    /// Fused dot-product kernel with delayed Montgomery reduction:
+    /// `acc + Σ a[i]·b[i]` over Montgomery representations, accumulating up
+    /// to [`Self::DELAYED_MACS`] widening products in a u128 before each
+    /// REDC. **Bit-identical** to folding [`Element::mac`] sequentially:
+    /// both sides compute canonical Montgomery representations (REDC output
+    /// is the unique representative in `[0, p)` given its precondition, and
+    /// field addition of canonical representatives is exact), so delaying
+    /// the reduction changes the number of REDCs executed, never the
+    /// residue they produce. See docs/PERF.md for the bound derivation and
+    /// the autovectorization notes.
+    #[inline]
+    pub fn mac_block(acc: Self, a: &[Self], b: &[Self]) -> Self {
+        let n = a.len().min(b.len());
+        let mut acc = acc;
+        let mut i = 0usize;
+        while i < n {
+            let end = (i + Self::DELAYED_MACS).min(n);
+            let mut t: u128 = 0;
+            while i < end {
+                t += a[i].0 as u128 * b[i].0 as u128;
+                i += 1;
+            }
+            acc = acc + Self(Self::redc(t), PhantomData);
+        }
+        acc
+    }
+
     /// From a canonical residue (values `>= p` are reduced).
     #[inline]
     pub fn new(v: u64) -> Self {
@@ -149,7 +193,10 @@ impl<F: PrimeField> ModP<F> {
     /// branch keeps this exact for `p` within one bit of 2^64 (Goldilocks):
     /// `(t + m·p)/2^64 < 2p` may not fit u64, but `carry` recovers the
     /// 2^64 bit and the subtract folds it back below `p`.
-    #[inline]
+    /// `inline(always)`: this is the innermost operation of the wave hot
+    /// loop and must fuse into the [`Self::mac_block`]/`dot` kernels across
+    /// the generic call boundary for LLVM to see the whole mul/REDC chain.
+    #[inline(always)]
     fn redc(t: u128) -> u64 {
         let m = (t as u64).wrapping_mul(F::NINV);
         let (sum, carry) = t.overflowing_add(m as u128 * F::P as u128);
@@ -183,7 +230,7 @@ impl<F: PrimeField> ModP<F> {
 
 impl<F: PrimeField> std::ops::Add for ModP<F> {
     type Output = Self;
-    #[inline]
+    #[inline(always)]
     fn add(self, rhs: Self) -> Self {
         // a, b < p so a + b < 2p < 2^65: the carry (possible only when p is
         // within one bit of 2^64) marks sums ≥ 2^64, which are always ≥ p.
@@ -212,7 +259,7 @@ impl<F: PrimeField> std::ops::Neg for ModP<F> {
 
 impl<F: PrimeField> std::ops::Mul for ModP<F> {
     type Output = Self;
-    #[inline]
+    #[inline(always)]
     fn mul(self, rhs: Self) -> Self {
         Self(Self::redc(self.0 as u128 * rhs.0 as u128), PhantomData)
     }
@@ -242,14 +289,21 @@ impl<F: PrimeField> Element for ModP<F> {
         Self(F::R, PhantomData)
     }
 
-    #[inline]
+    #[inline(always)]
     fn mac(acc: Self::Acc, a: Self, b: Self) -> Self::Acc {
         acc + a * b
     }
 
-    #[inline]
+    #[inline(always)]
     fn acc_add(a: Self::Acc, b: Self::Acc) -> Self::Acc {
         a + b
+    }
+
+    /// Delayed-REDC dot kernel — see [`ModP::mac_block`] for the bound and
+    /// the bit-identity argument.
+    #[inline]
+    fn dot(a: &[Self], b: &[Self]) -> Self::Acc {
+        Self::mac_block(Self::default(), a, b)
     }
 
     #[inline]
@@ -420,6 +474,82 @@ mod tests {
             assert_eq!(F::P.wrapping_mul(F::NINV.wrapping_neg()), 1, "{} ninv", F::NAME);
             assert_eq!(F::R as u128, (1u128 << 64) % F::P as u128);
             assert_eq!(F::R2 as u128, (F::R as u128 * F::R as u128) % F::P as u128);
+        }
+        check::<BabyBear>();
+        check::<Goldilocks>();
+        check::<PallasStyle>();
+    }
+
+    /// `mac_block` vs two oracles — the sequential `mac` fold (bit-identity
+    /// contract) and a schoolbook `u128 % p` sum (value contract) — across
+    /// lengths that straddle the delayed-reduction chunk boundary. For
+    /// PallasStyle `DELAYED_MACS == 4`, so lengths 1..=21 cross chunk
+    /// boundaries at 4/8/…; for Goldilocks the bound is 1 (sequential
+    /// degeneration); BabyBear never chunks at these lengths.
+    fn mac_block_vs_oracles<F: PrimeField>() {
+        let p = F::P;
+        let mut rng = Lcg::new(0xB10C << 4);
+        for len in 0..=21usize {
+            for round in 0..8 {
+                let acc0 = rng.next_u64() % p;
+                let a: Vec<u64> = (0..len).map(|_| rng.next_u64() % p).collect();
+                let b: Vec<u64> = (0..len).map(|_| rng.next_u64() % p).collect();
+                let fa: Vec<ModP<F>> = a.iter().map(|&x| ModP::new(x)).collect();
+                let fb: Vec<ModP<F>> = b.iter().map(|&x| ModP::new(x)).collect();
+                let facc = ModP::<F>::new(acc0);
+                let blocked = ModP::<F>::mac_block(facc, &fa, &fb);
+                // Bit-identity with the sequential fold (Montgomery words,
+                // not just canonical values).
+                let mut seq = facc;
+                for i in 0..len {
+                    seq = <ModP<F> as Element>::mac(seq, fa[i], fb[i]);
+                }
+                assert_eq!(blocked, seq, "{} len={len} round={round} bit-identity", F::NAME);
+                // Value contract against the schoolbook oracle.
+                let mut want = acc0;
+                for i in 0..len {
+                    want = ((want as u128 + mulmod(a[i], b[i], p) as u128) % p as u128) as u64;
+                }
+                assert_eq!(blocked.to_u64(), want, "{} len={len} round={round} value", F::NAME);
+            }
+        }
+        // Worst-case magnitudes: DELAYED_MACS products of (p−1)² must not
+        // break the REDC precondition (the bound proof, exercised).
+        let lim = ModP::<F>::DELAYED_MACS.min(64);
+        let top: Vec<ModP<F>> = vec![ModP::new(p - 1); lim + 3];
+        let blocked = ModP::<F>::mac_block(ModP::default(), &top, &top);
+        let mut want = 0u64;
+        for _ in 0..lim + 3 {
+            want = ((want as u128 + mulmod(p - 1, p - 1, p) as u128) % p as u128) as u64;
+        }
+        assert_eq!(blocked.to_u64(), want, "{} worst-case magnitudes", F::NAME);
+    }
+
+    #[test]
+    fn mac_block_babybear() {
+        mac_block_vs_oracles::<BabyBear>();
+    }
+
+    #[test]
+    fn mac_block_goldilocks() {
+        assert_eq!(ModP::<Goldilocks>::DELAYED_MACS, 1, "p near 2^64: no delay possible");
+        mac_block_vs_oracles::<Goldilocks>();
+    }
+
+    #[test]
+    fn mac_block_pallas_style() {
+        assert_eq!(ModP::<PallasStyle>::DELAYED_MACS, 4, "62-bit p: 4 products per REDC");
+        mac_block_vs_oracles::<PallasStyle>();
+    }
+
+    #[test]
+    fn delayed_macs_bound_is_safe() {
+        // n·p ≤ 2^64 for the chosen n — the REDC precondition `t < p·2^64`
+        // then holds for any chunk of n products of values < p.
+        fn check<F: PrimeField>() {
+            let n = ModP::<F>::DELAYED_MACS as u128;
+            assert!(n >= 1);
+            assert!(n * F::P as u128 <= 1u128 << 64, "{} delayed bound", F::NAME);
         }
         check::<BabyBear>();
         check::<Goldilocks>();

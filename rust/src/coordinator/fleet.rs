@@ -53,12 +53,12 @@ use std::time::{Duration, Instant};
 
 use crate::arch::config::ArchConfig;
 use crate::arith::ElemType;
-use crate::functional::FunctionalSim;
+use crate::functional::BlockSim;
 use crate::perf::{DeviceLoad, FleetReport};
 use crate::program::Program;
 use crate::with_element;
 
-use super::serve::{execute_program_words_on, TileExecutor, WordWeights};
+use super::serve::{execute_program_words_blocked, TileExecutor, WordWeights};
 
 /// Fleet sizing knobs (a subset of `serve::ServerOptions`).
 #[derive(Debug, Clone, Copy)]
@@ -270,10 +270,11 @@ impl Device {
     }
 
     /// Execute a compiled program on an element-typed activation using this
-    /// device's persistent simulator. The chunked-execution semantics are
-    /// [`execute_program_words_on`] — the same single loop the
+    /// device's persistent block simulator. The chunked-execution semantics
+    /// are [`execute_program_words_blocked`] — the same loop the
     /// throwaway-sim path uses, so the two can never drift apart; this
-    /// method only supplies the per-device simulator and accounts its plan
+    /// method only supplies the per-device simulator (whose lanes keep
+    /// their seeded plan caches warm across requests) and accounts its plan
     /// compiles.
     pub fn run_program_words(
         &self,
@@ -296,14 +297,14 @@ impl Device {
             // execution starts by reloading operands via Load instructions,
             // so interrupted state cannot leak into results.
             let mut sims = lock_clean(&self.sims);
-            let sim: &mut FunctionalSim<E> = sims
+            let block: &mut BlockSim<E> = sims
                 .entry(weights.elem())
-                .or_insert_with(|| Box::new(FunctionalSim::<E>::new(&self.cfg)) as Box<dyn Any + Send>)
-                .downcast_mut::<FunctionalSim<E>>()
+                .or_insert_with(|| Box::new(BlockSim::<E>::new(&self.cfg)) as Box<dyn Any + Send>)
+                .downcast_mut::<BlockSim<E>>()
                 .ok_or_else(|| anyhow::anyhow!("device simulator type confusion"))?;
-            let compiles_before = sim.plan_compiles;
-            let out = execute_program_words_on(sim, program, rows, input, w);
-            let delta = sim.plan_compiles - compiles_before;
+            let compiles_before = block.plan_compiles();
+            let out = execute_program_words_blocked(block, program, rows, input, w);
+            let delta = block.plan_compiles() - compiles_before;
             drop(sims);
             if delta > 0 {
                 self.plan_compiles.fetch_add(delta, Ordering::Relaxed);

@@ -50,7 +50,7 @@ use super::fleet::{lock_clean, Device, Fleet, FleetOptions};
 use crate::arch::config::ArchConfig;
 use crate::arith::{decode_words, encode_words, ElemType, Element};
 use crate::artifact::Artifact;
-use crate::functional::FunctionalSim;
+use crate::functional::{BlockSim, FunctionalSim};
 use crate::mapper::chain::Chain;
 use crate::mapper::search::{search, MapperOptions};
 use crate::mapper::Decision;
@@ -279,18 +279,19 @@ pub fn execute_program_words(
         let w: &[Vec<E>] = weights
             .decoded::<E>()
             .ok_or_else(|| anyhow::anyhow!("WordWeights decoded form does not match its tag"))?;
-        let mut sim: FunctionalSim<E> = FunctionalSim::new(&program.cfg);
-        execute_program_words_on(&mut sim, program, rows, input, w)
+        let mut block: BlockSim<E> = BlockSim::new(&program.cfg);
+        execute_program_words_blocked(&mut block, program, rows, input, w)
     })
 }
 
-/// [`execute_program_words`] against a caller-provided simulator — the one
-/// chunked-execution loop shared by the throwaway-sim path above and the
-/// fleet's persistent per-device simulators
-/// (`super::fleet::Device::run_program_words`), so the chunking/reduce
-/// semantics the fleet-vs-single-device bit-identity invariant rests on
-/// exist exactly once. The simulator must share the program's `ArchConfig`
-/// (`Program::seed_sim` asserts it).
+/// [`execute_program_words`] against a caller-provided **scalar** simulator
+/// — the sequential chunk loop the blocked path
+/// ([`execute_program_words_blocked`]) is proven bit-identical to
+/// (`tests/plan_equivalence.rs`). Kept as the reference oracle for the
+/// equivalence battery and benchmarks; production callers (the serving
+/// front door, fleet devices) route through the blocked executor. The
+/// simulator must share the program's `ArchConfig` (`Program::seed_sim`
+/// asserts it).
 pub fn execute_program_words_on<E: Element>(
     sim: &mut FunctionalSim<E>,
     program: &Program,
@@ -328,6 +329,63 @@ pub fn execute_program_words_on<E: Element>(
         let reduced: Vec<E> = out[..rows_here * nf].iter().map(|&v| E::reduce(v)).collect();
         out_words.extend(encode_words::<E>(&reduced));
         row0 += rows_here;
+    }
+    Ok(out_words)
+}
+
+/// The blocked word-program executor (§Perf tentpole): same chunking and
+/// reduce semantics as [`execute_program_words_on`], but up to
+/// `block.block()` row chunks are gathered per round and executed together
+/// through [`Program::execute_rows`], so every tile's compiled wave plan is
+/// walked once per *block* instead of once per chunk and the inner products
+/// run as lane batches. Bit-identical to the scalar loop — each lane
+/// reproduces exactly one sequential chunk, and lane outputs are reduced and
+/// encoded in chunk order (`tests/plan_equivalence.rs` enforces word-level
+/// equality and `SimStats` equality across all backends).
+pub fn execute_program_words_blocked<E: Element>(
+    block: &mut BlockSim<E>,
+    program: &Program,
+    rows: usize,
+    input: &[u64],
+    w: &[Vec<E>],
+) -> anyhow::Result<Vec<u64>> {
+    let kf = program.in_features();
+    let nf = program.out_features();
+    anyhow::ensure!(
+        input.len() == rows * kf,
+        "activation is {} words, expected {rows}×{kf}",
+        input.len()
+    );
+    anyhow::ensure!(
+        w.len() == program.layer_count(),
+        "program expects {} weight matrices, got {}",
+        program.layer_count(),
+        w.len()
+    );
+    let m = program.rows();
+    let lanes_max = block.block();
+    let mut out_words: Vec<u64> = Vec::with_capacity(rows * nf);
+    let mut row0 = 0usize;
+    let mut chunk_acts: Vec<Vec<E>> = Vec::with_capacity(lanes_max);
+    let mut chunk_rows: Vec<usize> = Vec::with_capacity(lanes_max);
+    while row0 < rows {
+        chunk_acts.clear();
+        chunk_rows.clear();
+        while row0 < rows && chunk_acts.len() < lanes_max {
+            let rows_here = m.min(rows - row0);
+            let mut act: Vec<E> = decode_words::<E>(&input[row0 * kf..(row0 + rows_here) * kf]);
+            act.resize(m * kf, E::zero());
+            chunk_acts.push(act);
+            chunk_rows.push(rows_here);
+            row0 += rows_here;
+        }
+        let outs = program
+            .execute_rows(block, &chunk_acts, w)
+            .map_err(|e| anyhow::anyhow!("functional execution: {e}"))?;
+        for (out, &rows_here) in outs.iter().zip(chunk_rows.iter()) {
+            let reduced: Vec<E> = out[..rows_here * nf].iter().map(|&v| E::reduce(v)).collect();
+            out_words.extend(encode_words::<E>(&reduced));
+        }
     }
     Ok(out_words)
 }

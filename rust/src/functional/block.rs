@@ -1,0 +1,184 @@
+//! Cache-blocked multi-row execution — [`BlockSim`] drives a block of
+//! [`FunctionalSim`] lanes through one shared instruction trace (§Perf
+//! tentpole).
+//!
+//! The serving executors chunk a request's rows into compiled-height
+//! batches and used to replay the program once per chunk: every chunk
+//! re-walked the same wave plans, re-filled the same stationary registers
+//! and re-interpreted the same op arrays, touching the plan's control
+//! arrays O(chunks) times. `BlockSim` holds up to [`DEFAULT_ROW_BLOCK`]
+//! independent simulator lanes — one per chunk — and executes each
+//! `ExecuteStreaming` tile through [`WavePlan::execute_rows`], which walks
+//! the op/slot arrays **once** and applies each op across all lanes. The
+//! plan's control data then stays hot in L1 while only the lanes' operand
+//! data streams, and the per-op inner products become a lane batch the
+//! backend kernels ([`crate::arith::Element::dot`]) chew through
+//! back-to-back.
+//!
+//! Bit-exactness contract: executing a trace across `n` lanes is
+//! lane-for-lane bit-identical — outputs, OB state and `SimStats` — to
+//! executing it on `n` independent `FunctionalSim`s sequentially
+//! (`tests/plan_equivalence.rs` proves it across every element backend).
+//! The one legal divergence is *abort schedules*: if an instruction
+//! errors, all lanes have advanced in lockstep to the failing instruction,
+//! whereas the sequential schedule would never have started later chunks —
+//! the call errors identically in both cases and no outputs are produced.
+
+// Hot-file lint escalation (§Perf CI satellite) — see plan.rs.
+#![deny(clippy::needless_range_loop, clippy::manual_memcpy)]
+
+use crate::arch::config::ArchConfig;
+use crate::arith::Element;
+use crate::isa::inst::Inst;
+
+use super::plan::PlanScratch;
+use super::{FunctionalSim, SimError, SimStats, WavePlan};
+
+/// Default lane count per block. Sized for L1: a lane's hot working set is
+/// one register file + one streamed VN + its slot accumulators (roughly
+/// `regs_len + dot_len + max_slots` elements ≈ a few hundred bytes for
+/// paper-scale 4×4..8×8 configs), so 8 lanes of operand data plus the
+/// shared plan arrays sit comfortably in a 32 KiB L1D while giving the
+/// per-op lane loop enough width to amortize control overhead and keep
+/// SIMD units fed. Re-tune with [`BlockSim::with_block`] + the
+/// `funcsim blocked` cases of `benches/hotpath.rs` (docs/PERF.md).
+pub const DEFAULT_ROW_BLOCK: usize = 8;
+
+/// A block of [`FunctionalSim`] lanes executing one instruction trace in
+/// lockstep. Lanes are created lazily ([`Self::ensure_lanes`]) and reused
+/// across calls — a persistent `BlockSim` (e.g. per fleet device) keeps
+/// every lane's seeded plan cache and scratch arena warm across requests.
+#[derive(Debug, Clone)]
+pub struct BlockSim<E: Element> {
+    cfg: ArchConfig,
+    lanes: Vec<FunctionalSim<E>>,
+    /// Shared multi-lane scratch arena for [`WavePlan::execute_rows`].
+    scratch: PlanScratch<E>,
+    block: usize,
+}
+
+impl<E: Element> BlockSim<E> {
+    pub fn new(cfg: &ArchConfig) -> Self {
+        Self::with_block(cfg, DEFAULT_ROW_BLOCK)
+    }
+
+    /// A block simulator with a non-default lane budget (perf tuning; 0 is
+    /// clamped to 1).
+    pub fn with_block(cfg: &ArchConfig, block: usize) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            lanes: Vec::new(),
+            scratch: PlanScratch::new(),
+            block: block.max(1),
+        }
+    }
+
+    /// Maximum lanes callers should batch per [`Self::exec`] round.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    pub fn cfg(&self) -> &ArchConfig {
+        &self.cfg
+    }
+
+    /// Lanes materialized so far (high-water mark of requested widths).
+    pub fn lane_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Materialize at least `n` lanes. Existing lanes (and their seeded
+    /// plan caches) are kept; a single-chunk request never pays for a full
+    /// block.
+    pub fn ensure_lanes(&mut self, n: usize) {
+        while self.lanes.len() < n {
+            self.lanes.push(FunctionalSim::new(&self.cfg));
+        }
+    }
+
+    /// Mutable access to the first `n` lanes (staging HBM images, seeding
+    /// plans), materializing them as needed.
+    pub fn lanes_mut(&mut self, n: usize) -> &mut [FunctionalSim<E>] {
+        self.ensure_lanes(n);
+        &mut self.lanes[..n]
+    }
+
+    /// Lane `i` (harvesting outputs). Panics if the lane was never
+    /// materialized.
+    pub fn lane(&self, i: usize) -> &FunctionalSim<E> {
+        &self.lanes[i]
+    }
+
+    /// Runtime plan compiles summed over lanes. A seeded program keeps
+    /// this at zero — the compile-once invariant carries through the
+    /// blocked path. (Unseeded traces compile once per *block* on the
+    /// first lane, vs once per chunk sequentially: never more.)
+    pub fn plan_compiles(&self) -> u64 {
+        self.lanes.iter().map(|l| l.plan_compiles).sum()
+    }
+
+    /// Execution statistics summed over all lanes — equals the stats a
+    /// single sequential simulator would accumulate over the same chunks.
+    pub fn stats(&self) -> SimStats {
+        let mut total = SimStats::default();
+        for l in &self.lanes {
+            total.absorb(&l.stats);
+        }
+        total
+    }
+
+    /// Execute one instruction across the first `n` lanes. Non-ES
+    /// instructions run per lane (their work is identical per lane except
+    /// for operand values); `ExecuteStreaming` tiles go through the
+    /// blocked kernel: the wave plan is resolved once on lane 0 (all lanes
+    /// executed the same trace, so their addressing state is identical)
+    /// and [`WavePlan::execute_rows`] applies it across the block.
+    pub fn exec(&mut self, inst: &Inst, n: usize) -> Result<(), SimError> {
+        self.ensure_lanes(n);
+        let lanes = &mut self.lanes[..n];
+        let Inst::ExecuteStreaming(es) = inst else {
+            for sim in lanes.iter_mut() {
+                sim.exec(inst)?;
+            }
+            return Ok(());
+        };
+        // Mirror `FunctionalSim::exec`'s ES arm per lane: stats bump, then
+        // validation, then the mapping lookup — so error kinds and the
+        // stats already accumulated when an error fires match the scalar
+        // path exactly.
+        let mut em = None;
+        for sim in lanes.iter_mut() {
+            sim.stats.n_execute += 1;
+            es.validate(&sim.cfg).map_err(SimError::Invalid)?;
+            em = Some(sim.cur_em.ok_or(SimError::NoMapping)?);
+            sim.last_df = es.df;
+        }
+        let Some(em) = em else {
+            return Ok(()); // n == 0: nothing to execute
+        };
+        if !lanes[0].use_plans {
+            for sim in lanes.iter_mut() {
+                sim.run_tile_reference(&em, es)?;
+            }
+            return Ok(());
+        }
+        let plan: Option<std::sync::Arc<WavePlan>> = lanes[0].resolve_plan(&em, es)?;
+        let Some(plan) = plan else {
+            // Pathological layout class (see `FunctionalSim::resolve_plan`):
+            // reference interpreter per lane, exactly like the scalar path.
+            for sim in lanes.iter_mut() {
+                sim.run_tile_reference(&em, es)?;
+            }
+            return Ok(());
+        };
+        plan.execute_rows(lanes, &mut self.scratch)
+    }
+
+    /// Execute a whole trace across the first `n` lanes.
+    pub fn exec_trace(&mut self, insts: &[Inst], n: usize) -> Result<(), SimError> {
+        for i in insts {
+            self.exec(i, n)?;
+        }
+        Ok(())
+    }
+}

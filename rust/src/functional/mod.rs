@@ -20,6 +20,7 @@
 //! reproduce a naive GEMM exactly, and integration tests additionally
 //! cross-check against the PJRT-executed JAX/Pallas oracle.
 
+pub mod block;
 pub mod plan;
 
 use std::collections::HashMap;
@@ -32,7 +33,8 @@ use crate::isa::inst::{BufTarget, Inst};
 use crate::layout::VnLayout;
 use crate::mapping::{Dataflow, MappingCfg, StreamCfg};
 
-pub use plan::{PlanKey, WavePlan};
+pub use block::{BlockSim, DEFAULT_ROW_BLOCK};
+pub use plan::{PlanKey, PlanScratch, WavePlan};
 
 /// Compiled-plan cache bound: distinct (θ_EM, θ_ES, layouts) tuples per
 /// lowered program are small (one per chunk pattern per tile shape), so the
@@ -109,6 +111,23 @@ impl SimStats {
         }
         self.macs_used as f64 / self.macs_possible as f64
     }
+
+    /// Accumulate another stats record into this one — the roll-up
+    /// [`BlockSim::stats`] and fleet reporting use. Every field is a
+    /// count, so summation is the correct aggregation for all of them.
+    pub fn absorb(&mut self, o: &SimStats) {
+        self.macs_used += o.macs_used;
+        self.macs_possible += o.macs_possible;
+        self.waves += o.waves;
+        self.birrd_adds += o.birrd_adds;
+        self.ob_conflicts += o.ob_conflicts;
+        self.load_words += o.load_words;
+        self.store_words += o.store_words;
+        self.n_layout += o.n_layout;
+        self.n_execute += o.n_execute;
+        self.n_memory += o.n_memory;
+        self.n_activation += o.n_activation;
+    }
 }
 
 /// Pack a tile's VNs into the row-major buffer image `Load` expects:
@@ -168,6 +187,10 @@ pub struct FunctionalSim<E: Element = i32> {
     /// silently un-compile a program — the compile-once invariant. Bounded
     /// by the caller: a program's plan set is small by construction.
     seeded: HashMap<PlanKey, Arc<WavePlan>>,
+    /// Per-sim scratch arena for plan execution (§Perf): flat vectors sized
+    /// to the high-water plan shape, reused across every tile invocation so
+    /// the tile loops allocate nothing.
+    scratch: PlanScratch<E>,
 }
 
 impl<E: Element> FunctionalSim<E> {
@@ -189,6 +212,7 @@ impl<E: Element> FunctionalSim<E> {
             plan_compiles: 0,
             plans: HashMap::new(),
             seeded: HashMap::new(),
+            scratch: PlanScratch::new(),
         }
     }
 
@@ -387,6 +411,28 @@ impl<E: Element> FunctionalSim<E> {
         if !self.use_plans {
             return self.run_tile_reference(em, es);
         }
+        let Some(plan) = self.resolve_plan(em, es)? else {
+            return self.run_tile_reference(em, es);
+        };
+        plan.execute(
+            &mut self.scratch,
+            &self.streaming,
+            &self.stationary,
+            &mut self.ob,
+            &mut self.stats,
+        )
+    }
+
+    /// Resolve (seed-lookup / cache / compile) the [`WavePlan`] for one ES
+    /// invocation. `Ok(None)` marks the illegal-program layout class that
+    /// must run through the reference interpreter instead (see below).
+    /// Shared by [`Self::run_tile`] and the blocked path ([`BlockSim`],
+    /// which resolves once on its first lane for the whole row block).
+    fn resolve_plan(
+        &mut self,
+        em: &MappingCfg,
+        es: &StreamCfg,
+    ) -> Result<Option<Arc<WavePlan>>, SimError> {
         // Layout resolution order matches the reference (stationary, then
         // streamed, then output) so `NoLayout` errors are identical.
         let (sta_layout, str_layout) = match es.df {
@@ -405,7 +451,7 @@ impl<E: Element> FunctionalSim<E> {
         // compiled fill would over-read instead. Delegate to the reference
         // so behavior stays bit-identical for this illegal-program class.
         if sta_layout.vn_size < es.vn_size {
-            return self.run_tile_reference(em, es);
+            return Ok(None);
         }
         let key = PlanKey { em: *em, es: *es, sta_layout, str_layout, o_layout };
         let plan = match self.seeded.get(&key).or_else(|| self.plans.get(&key)) {
@@ -435,7 +481,7 @@ impl<E: Element> FunctionalSim<E> {
                 p
             }
         };
-        plan.execute(&self.streaming, &self.stationary, &mut self.ob, &mut self.stats)
+        Ok(Some(plan))
     }
 
     /// Reference per-wave interpreter (the seed semantics): re-derives

@@ -32,8 +32,16 @@
 //! per-wave interpreter (`FunctionalSim::run_tile` with `use_plans = false`)
 //! exactly — identical outputs, identical `SimStats` (including partial
 //! `macs_used` counts on error paths) and identical `SimError` values raised
-//! at the same (wave, column, row) position. `tests/plan_equivalence.rs` and
-//! the unit tests below enforce this.
+//! at the same (wave, column, row) position, and [`WavePlan::execute_rows`]
+//! reproduces per-lane `execute` exactly (docs/PERF.md). This holds because
+//! both paths share one per-op kernel, [`Element::dot`], whose backend
+//! overrides are individually proven bit-identical to the sequential `mac`
+//! fold. `tests/plan_equivalence.rs` and the unit tests below enforce it.
+
+// Hot-file lint escalation (§Perf CI satellite): the wave loop must never
+// regress into index-by-range iteration or element-wise copies that LLVM
+// won't vectorize.
+#![deny(clippy::needless_range_loop, clippy::manual_memcpy)]
 
 use crate::arch::buffer::{DataBuffer, OutputBuffer};
 use crate::arch::config::ArchConfig;
@@ -41,7 +49,7 @@ use crate::arith::Element;
 use crate::layout::VnLayout;
 use crate::mapping::{Dataflow, MappingCfg, StreamCfg};
 
-use super::{SimError, SimStats};
+use super::{FunctionalSim, SimError, SimStats};
 
 /// Cache key: everything a plan's addressing depends on. Buffer geometry
 /// (depths, width) is fixed per simulator, so it stays out of the key.
@@ -129,6 +137,12 @@ pub struct WavePlan {
     slots: Vec<Slot>,
     /// Largest per-wave slot count (sizes the accumulator scratch).
     max_slots: usize,
+    /// Every op lands in a merged OB slot — no Orphan/Overflow outcomes
+    /// anywhere in the plan. Such a plan can never raise a `SimError`, so
+    /// the blocked multi-lane path needs no early-exit or partial-stats
+    /// bookkeeping; plans with hazards run per lane through the scalar
+    /// interpreter instead (see [`Self::execute_rows`]).
+    pub(super) hazard_free: bool,
 }
 
 impl WavePlan {
@@ -266,6 +280,7 @@ impl WavePlan {
             });
         }
 
+        let hazard_free = ops.iter().all(|op| matches!(op.kind, OpKind::Slot(_)));
         Self {
             vn,
             dot_len: vn.min(str_layout.vn_size),
@@ -277,6 +292,7 @@ impl WavePlan {
             ops,
             slots,
             max_slots,
+            hazard_free,
         }
     }
 
@@ -290,16 +306,23 @@ impl WavePlan {
         self.ops.len()
     }
 
-    /// Execute the plan against live buffer contents. Allocation pattern:
-    /// three scratch vectors per *invocation* (exactly like the reference's
-    /// register fill), zero allocations per wave.
+    /// Execute the plan against live buffer contents through the caller's
+    /// scratch arena. Allocation pattern: **zero** — the arena's flat
+    /// vectors are grown once per plan shape ([`PlanScratch::ensure`]) and
+    /// reused across every tile invocation (extending PR 1's
+    /// allocation-free claim from the wave loop to the whole tile loop;
+    /// previously the register fill and streamed/psum temporaries were
+    /// rebuilt per invocation).
     ///
     /// Generic over the element backend: a plan holds addressing only, so
-    /// one compiled plan executes i32, f32 and prime-field buffers alike
-    /// (`E::mac` per psum, `E::acc_add` into merged slots, zero checks via
-    /// `E::acc_is_zero`).
+    /// one compiled plan executes i32, f32 and prime-field buffers alike.
+    /// The per-op inner product goes through [`Element::dot`] — the same
+    /// kernel the blocked path uses — so backend dot overrides (unrolled
+    /// i32, delayed-REDC Montgomery) apply here identically and the two
+    /// paths cannot diverge.
     pub fn execute<E: Element>(
         &self,
+        scratch: &mut PlanScratch<E>,
         streaming: &DataBuffer<E>,
         stationary: &DataBuffer<E>,
         ob: &mut OutputBuffer<E>,
@@ -312,17 +335,20 @@ impl WavePlan {
         let vn = self.vn;
         let dot_len = self.dot_len;
 
+        scratch.ensure(1, self);
+        let PlanScratch { regs, streamed, slot_acc } = scratch;
+        let regs = &mut regs[..self.regs_len];
+        let streamed = &mut streamed[..dot_len];
+
         // Stationary register fill (double-buffered NEST load).
-        let mut regs: Vec<E> = vec![E::zero(); self.regs_len];
+        regs.iter_mut().for_each(|r| *r = E::zero());
         for f in &self.reg_fills {
             let (dst, src) = (f.dst as usize, f.src as usize);
-            for i in 0..vn {
-                regs[dst + i] = sta_data[src + i * sta_width];
+            for (i, r) in regs[dst..dst + vn].iter_mut().enumerate() {
+                *r = sta_data[src + i * sta_width];
             }
         }
 
-        let mut streamed: Vec<E> = vec![E::zero(); dot_len];
-        let mut slot_acc: Vec<E::Acc> = vec![E::acc_zero(); self.max_slots];
         let mut macs_local: u64 = 0;
 
         for w in &self.waves {
@@ -339,10 +365,7 @@ impl WavePlan {
                 for op in &self.ops[cg.op_start as usize..cg.op_end as usize] {
                     macs_local += vn as u64;
                     let rb = op.reg_base as usize;
-                    let mut psum = E::acc_zero();
-                    for i in 0..dot_len {
-                        psum = E::mac(psum, streamed[i], regs[rb + i]);
-                    }
+                    let psum = E::dot(streamed, &regs[rb..rb + dot_len]);
                     match op.kind {
                         OpKind::Slot(s) => {
                             let cell = &mut slot_acc[s as usize];
@@ -378,6 +401,162 @@ impl WavePlan {
         }
         stats.macs_used += macs_local;
         Ok(())
+    }
+
+    /// Cache-blocked multi-row execution: walk the compiled op/slot arrays
+    /// **once** per wave and apply every op across all `lanes` at each
+    /// step (§Perf tentpole). Each lane is an independent
+    /// [`FunctionalSim`] holding one row-batch's buffer state; the plan —
+    /// and therefore every address, slot and statistic — is identical
+    /// across lanes because all lanes executed the same instruction trace.
+    ///
+    /// Scratch layout (flat, zero allocation per invocation):
+    /// * `regs`: lane-major, lane `l` at `[l·regs_len ..]` — each lane's
+    ///   stationary register file, filled once per invocation;
+    /// * `streamed`: lane-major, lane `l` at `[l·dot_len ..]` — refreshed
+    ///   per column group;
+    /// * `slot_acc`: **slot-major**, slot `s` lane `l` at `[s·n_lanes + l]`
+    ///   — consecutive lanes of one slot are contiguous, so the per-op
+    ///   accumulate loop over lanes is a unit-stride sweep LLVM can
+    ///   autovectorize (docs/PERF.md).
+    ///
+    /// Bit-exactness: each lane's outputs, OB state and `SimStats` equal a
+    /// scalar [`Self::execute`] run on that lane alone. Per-lane work is
+    /// never reordered *within* a lane (the dot product, slot accumulation
+    /// order and OB flush order are exactly the scalar path's), so this
+    /// holds for every backend including f32. Plans with hazard ops — and
+    /// single-lane calls, which blocking cannot help — run each lane
+    /// through the scalar interpreter, preserving error positions and
+    /// partial-stats semantics exactly.
+    pub(super) fn execute_rows<E: Element>(
+        &self,
+        lanes: &mut [FunctionalSim<E>],
+        scratch: &mut PlanScratch<E>,
+    ) -> Result<(), SimError> {
+        if !self.hazard_free || lanes.len() == 1 {
+            for sim in lanes.iter_mut() {
+                self.execute(
+                    &mut sim.scratch,
+                    &sim.streaming,
+                    &sim.stationary,
+                    &mut sim.ob,
+                    &mut sim.stats,
+                )?;
+            }
+            return Ok(());
+        }
+
+        let nl = lanes.len();
+        let vn = self.vn;
+        let dot_len = self.dot_len;
+        scratch.ensure(nl, self);
+        let PlanScratch { regs, streamed, slot_acc } = scratch;
+
+        // Per-lane stationary register fill (each lane's NEST load).
+        for (l, sim) in lanes.iter().enumerate() {
+            let sta_data = sim.stationary.data();
+            let sta_width = sim.stationary.width;
+            let lane_regs = &mut regs[l * self.regs_len..(l + 1) * self.regs_len];
+            lane_regs.iter_mut().for_each(|r| *r = E::zero());
+            for f in &self.reg_fills {
+                let (dst, src) = (f.dst as usize, f.src as usize);
+                for (i, r) in lane_regs[dst..dst + vn].iter_mut().enumerate() {
+                    *r = sta_data[src + i * sta_width];
+                }
+            }
+        }
+
+        // Identical op sequence per lane on the hazard-free path, so the
+        // MAC count is computed once and credited to every lane at the end.
+        let mut macs_local: u64 = 0;
+
+        for w in &self.waves {
+            let wave_slots = &self.slots[w.slot_start as usize..w.slot_end as usize];
+            let ns = wave_slots.len();
+            slot_acc[..ns * nl].iter_mut().for_each(|v| *v = E::acc_zero());
+
+            for cg in &self.col_groups[w.cg_start as usize..w.cg_end as usize] {
+                let base = cg.str_src as usize;
+                for (l, sim) in lanes.iter().enumerate() {
+                    let str_data = sim.streaming.data();
+                    let width = sim.streaming.width;
+                    let lane_str = &mut streamed[l * dot_len..(l + 1) * dot_len];
+                    for (i, s) in lane_str.iter_mut().enumerate() {
+                        *s = str_data[base + i * width];
+                    }
+                }
+                for op in &self.ops[cg.op_start as usize..cg.op_end as usize] {
+                    macs_local += vn as u64;
+                    let rb = op.reg_base as usize;
+                    let OpKind::Slot(s) = op.kind else {
+                        unreachable!("hazard-free plan holds Slot ops only");
+                    };
+                    let cells = &mut slot_acc[s as usize * nl..(s as usize + 1) * nl];
+                    for (l, cell) in cells.iter_mut().enumerate() {
+                        let a = &streamed[l * dot_len..(l + 1) * dot_len];
+                        let b = &regs[l * self.regs_len + rb..l * self.regs_len + rb + dot_len];
+                        *cell = E::acc_add(*cell, E::dot(a, b));
+                    }
+                }
+            }
+
+            // Banked OB flush per lane, in the scalar path's slot order.
+            for (l, sim) in lanes.iter_mut().enumerate() {
+                for (si, slot) in wave_slots.iter().enumerate() {
+                    sim.ob.accumulate(
+                        slot.row as usize,
+                        slot.bank as usize,
+                        slot_acc[si * nl + l],
+                    );
+                }
+                sim.ob.conflicts += w.ob_conflicts as u64;
+                sim.stats.ob_conflicts += w.ob_conflicts as u64;
+                sim.stats.birrd_adds += w.birrd_adds as u64;
+                sim.stats.waves += 1;
+                sim.stats.macs_possible += self.macs_possible_per_wave;
+            }
+        }
+        for sim in lanes.iter_mut() {
+            sim.stats.macs_used += macs_local;
+        }
+        Ok(())
+    }
+}
+
+/// Flat reusable scratch for plan execution — the per-sim arena of the
+/// §Perf tentpole. Sized once per (plan, lane-count) high-water mark by
+/// [`PlanScratch::ensure`]; never shrinks, never allocates inside the tile
+/// loops. [`FunctionalSim`] owns one for its scalar path and
+/// [`super::BlockSim`] owns one shared across its lanes.
+#[derive(Debug, Clone, Default)]
+pub struct PlanScratch<E: Element> {
+    /// Stationary register files, lane-major: `lanes · regs_len`.
+    regs: Vec<E>,
+    /// Streamed-VN gather, lane-major: `lanes · dot_len`.
+    streamed: Vec<E>,
+    /// Per-slot psum accumulators, slot-major: `max_slots · lanes`.
+    slot_acc: Vec<E::Acc>,
+}
+
+impl<E: Element> PlanScratch<E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow (never shrink) to fit `lanes` concurrent lanes of `plan`.
+    fn ensure(&mut self, lanes: usize, plan: &WavePlan) {
+        let regs = lanes * plan.regs_len;
+        if self.regs.len() < regs {
+            self.regs.resize(regs, E::zero());
+        }
+        let streamed = lanes * plan.dot_len;
+        if self.streamed.len() < streamed {
+            self.streamed.resize(streamed, E::zero());
+        }
+        let slots = lanes * plan.max_slots;
+        if self.slot_acc.len() < slots {
+            self.slot_acc.resize(slots, E::acc_zero());
+        }
     }
 }
 

@@ -18,7 +18,7 @@
 use super::lower::{LoweredProgram, StagedOperand, Staging};
 use crate::arch::config::ArchConfig;
 use crate::arith::Element;
-use crate::functional::{pack_image, FunctionalSim, SimError};
+use crate::functional::{pack_image, BlockSim, FunctionalSim, SimError};
 use crate::isa::inst::Inst;
 use crate::mapping::Dataflow;
 use crate::workloads::Gemm;
@@ -127,6 +127,92 @@ pub fn execute_program_on<E: Element>(
     }
     debug_assert_eq!(harvested, prog.harvests.len());
     Ok(out)
+}
+
+/// [`execute_program_on`] across a block of activation batches: lane `l`
+/// executes the program against `ivs[l]` with the shared weights, with
+/// every `ExecuteStreaming` tile running through the blocked multi-row
+/// kernel ([`crate::functional::WavePlan::execute_rows`]). The
+/// weight-operand staging image depends only on `wv`, so it is computed
+/// **once** and broadcast to every lane's HBM; the activation operand is
+/// staged per lane. Bit-exactness: lane `l`'s output and `SimStats` equal
+/// a scalar `execute_program_on` run over `ivs[l]` alone.
+pub fn execute_program_rows_on<E: Element>(
+    block: &mut BlockSim<E>,
+    g: &Gemm,
+    prog: &LoweredProgram,
+    ivs: &[Vec<E>],
+    wv: &[E],
+) -> Result<Vec<Vec<E::Acc>>, SimError> {
+    let nl = ivs.len();
+    if nl == 0 {
+        return Ok(Vec::new());
+    }
+    for iv in ivs {
+        if iv.len() != g.m * g.k {
+            return Err(SimError::Invalid(format!(
+                "input operand is {} elements, expected {}×{}",
+                iv.len(),
+                g.m,
+                g.k
+            )));
+        }
+    }
+    if wv.len() != g.k * g.n {
+        return Err(SimError::Invalid(format!(
+            "weight operand is {} elements, expected {}×{}",
+            wv.len(),
+            g.k,
+            g.n
+        )));
+    }
+    let aw = block.cfg().aw;
+    {
+        let lanes = block.lanes_mut(nl);
+        for s in &prog.staging {
+            // Which logical tensor this staging region holds (mirrors
+            // `stage_image`'s `use_input`): the activation differs per
+            // lane, the weight image is lane-invariant.
+            let stages_activation = matches!(
+                (prog.choice.df, s.operand),
+                (Dataflow::WoS, StagedOperand::Streamed)
+                    | (Dataflow::IoS, StagedOperand::Stationary)
+            );
+            if stages_activation {
+                for (sim, iv) in lanes.iter_mut().zip(ivs) {
+                    let img = stage_image(g, prog.choice.df, s, iv, wv, aw);
+                    debug_assert_eq!(img.len(), s.words);
+                    sim.hbm_write(s.hbm_addr, &img);
+                }
+            } else {
+                let img = stage_image(g, prog.choice.df, s, &ivs[0], wv, aw);
+                debug_assert_eq!(img.len(), s.words);
+                for sim in lanes.iter_mut() {
+                    sim.hbm_write(s.hbm_addr, &img);
+                }
+            }
+        }
+    }
+    let mut outs: Vec<Vec<E::Acc>> = (0..nl).map(|_| vec![E::acc_zero(); g.m * g.n]).collect();
+    let mut harvested = 0usize;
+    for inst in &prog.trace.insts {
+        if matches!(inst, Inst::SetOVNLayout(_)) {
+            if harvested > 0 {
+                for (l, out) in outs.iter_mut().enumerate() {
+                    harvest(block.lane(l), g, prog, harvested - 1, out)?;
+                }
+            }
+            harvested += 1;
+        }
+        block.exec(inst, nl)?;
+    }
+    if harvested > 0 {
+        for (l, out) in outs.iter_mut().enumerate() {
+            harvest(block.lane(l), g, prog, harvested - 1, out)?;
+        }
+    }
+    debug_assert_eq!(harvested, prog.harvests.len());
+    Ok(outs)
 }
 
 fn harvest<E: Element>(

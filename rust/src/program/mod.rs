@@ -40,10 +40,10 @@ use std::sync::Arc;
 use crate::arch::config::ArchConfig;
 use crate::arith::{naive_gemm_e, Element};
 use crate::artifact::{Artifact, ArtifactError, WeightsPayload};
-use crate::functional::{FunctionalSim, PlanKey, SimError, WavePlan};
+use crate::functional::{BlockSim, FunctionalSim, PlanKey, SimError, WavePlan};
 use crate::isa::encode::Codec;
 use crate::isa::inst::Inst;
-use crate::mapper::exec::execute_program_on;
+use crate::mapper::exec::{execute_program_on, execute_program_rows_on};
 use crate::isa::Trace;
 use crate::mapper::chain::{boundary_compatible, Chain, ChainDecision};
 use crate::mapper::lower::LoweredProgram;
@@ -204,6 +204,55 @@ impl Program {
             }
         }
         Ok(out)
+    }
+
+    /// [`Self::execute`] across a block of activation batches (§Perf):
+    /// `inputs[l]` flows through the whole chain on lane `l` of the block
+    /// simulator, with every tile executed by the blocked multi-row kernel
+    /// ([`crate::functional::WavePlan::execute_rows`]) — the compiled wave
+    /// plans are walked once per block instead of once per batch, and the
+    /// weight staging images are built once and broadcast. Lane-for-lane
+    /// bit-identical to sequential [`Self::execute`] calls, with zero plan
+    /// compiles (every lane is seeded); `tests/plan_equivalence.rs`
+    /// enforces both.
+    pub fn execute_rows<E: Element>(
+        &self,
+        block: &mut BlockSim<E>,
+        inputs: &[Vec<E>],
+        weights: &[Vec<E>],
+    ) -> Result<Vec<Vec<E::Acc>>, SimError> {
+        if weights.len() != self.layers.len() {
+            return Err(SimError::Invalid(format!(
+                "program expects {} weight matrices, got {}",
+                self.layers.len(),
+                weights.len()
+            )));
+        }
+        for input in inputs {
+            if input.len() != self.rows() * self.in_features() {
+                return Err(SimError::Invalid(format!(
+                    "activation is {} elements, expected {}×{}",
+                    input.len(),
+                    self.rows(),
+                    self.in_features()
+                )));
+            }
+        }
+        for sim in block.lanes_mut(inputs.len()) {
+            self.seed_sim(sim);
+        }
+        let mut acts: Vec<Vec<E>> = inputs.to_vec();
+        let mut outs: Vec<Vec<E::Acc>> = Vec::new();
+        for (li, l) in self.layers.iter().enumerate() {
+            outs = execute_program_rows_on(block, &l.gemm, &l.lowered, &acts, &weights[li])?;
+            if li + 1 < self.layers.len() {
+                acts = outs
+                    .iter()
+                    .map(|out| out.iter().map(|&v| E::reduce(v)).collect())
+                    .collect();
+            }
+        }
+        Ok(outs)
     }
 
     /// [`Self::execute`] at the default saturating-i32 backend (the

@@ -3,18 +3,37 @@
 //! to the reference per-wave interpreter (`use_plans = false`, the seed
 //! semantics) — same outputs, same `SimStats` (macs_used, birrd_adds,
 //! ob_conflicts, ...), and same `SimError` on illegal programs.
+//!
+//! The §Perf blocked battery extends the chain three ways deep: blocked
+//! multi-row execution (`BlockSim` → `WavePlan::execute_rows`) ≡ the
+//! sequential scalar chunk loop ≡ the pre-plan reference interpreter,
+//! across every element backend × row counts straddling the block
+//! boundary × fleet shard boundaries — words, `SimStats`, and the zero
+//! runtime-plan-compile invariant all equal.
+
+use std::sync::Arc;
 
 use minisa::arch::vn::VnGrid;
 use minisa::arch::ArchConfig;
-use minisa::functional::{pack_image, FunctionalSim, SimError, SimStats};
+use minisa::arith::{decode_words, ElemType};
+use minisa::coordinator::fleet::{Fleet, FleetOptions};
+use minisa::coordinator::serve::{
+    execute_program_words, execute_program_words_blocked, execute_program_words_on, NaiveExecutor,
+    WordWeights,
+};
+use minisa::functional::{pack_image, BlockSim, FunctionalSim, SimError, SimStats, DEFAULT_ROW_BLOCK};
 use minisa::isa::inst::{BufTarget, Inst, LayoutInst};
 use minisa::layout::VnLayout;
+use minisa::mapper::chain::Chain;
 use minisa::mapper::exec::execute_program_on;
 use minisa::mapper::lower_gemm;
+use minisa::mapper::search::MapperOptions;
 use minisa::mapper::MappingChoice;
 use minisa::mapping::{Dataflow, MappingCfg, StreamCfg};
+use minisa::program::Program;
 use minisa::util::prop::forall;
 use minisa::util::Lcg;
+use minisa::with_element;
 use minisa::workloads::Gemm;
 
 /// Run one lowered program through both interpreters; returns
@@ -195,4 +214,101 @@ fn healthy_trace_identical_in_both_modes() {
     assert_eq!(a, Ok(()));
     assert_eq!(a, b);
     assert_eq!(sa, sb);
+}
+
+// ---------------------------------------------------------------------------
+// §Perf blocked multi-row battery
+// ---------------------------------------------------------------------------
+
+/// The battery's shared 3-layer chain, compiled once (plans are
+/// element-independent). M = 2 keeps each chunk small so row counts around
+/// the block boundary stay cheap to sweep.
+fn battery_program() -> (ArchConfig, Chain, Program) {
+    let cfg = ArchConfig::paper(4, 4);
+    let o = MapperOptions { full_layout_search: false, threads: 1, ..Default::default() };
+    let chain = Chain::mlp("battery", 2, &[5, 7, 4]);
+    let p = Program::compile(&cfg, &chain, &o).expect("battery chain compiles on 4x4");
+    (cfg, chain, p)
+}
+
+/// Tentpole equivalence: for every element backend × row counts straddling
+/// the block boundary (1, block−1, block, block+1, 4·block+3 — in rows,
+/// where one "block" is `DEFAULT_ROW_BLOCK` compiled-height chunks), the
+/// blocked executor ≡ the sequential scalar chunk loop ≡ the pre-plan
+/// reference interpreter: identical words, identical `SimStats` (including
+/// MAC counts), and zero runtime plan compiles on the seeded paths.
+#[test]
+fn blocked_rows_equivalence_battery() {
+    let (cfg, chain, program) = battery_program();
+    let kf = program.in_features();
+    let block_rows = DEFAULT_ROW_BLOCK * program.rows();
+    for (ei, elem) in ElemType::ALL.into_iter().enumerate() {
+        for rows in [1, block_rows - 1, block_rows, block_rows + 1, 4 * block_rows + 3] {
+            with_element!(elem, E => {
+                let mut rng = Lcg::new(0xBA77E5 ^ ((ei as u64) << 32) ^ rows as u64);
+                let input = elem.sample_words(&mut rng, rows * kf);
+                let w: Vec<Vec<E>> = chain
+                    .layers
+                    .iter()
+                    .map(|g| decode_words::<E>(&elem.sample_words(&mut rng, g.k * g.n)))
+                    .collect();
+
+                let mut block: BlockSim<E> = BlockSim::new(&cfg);
+                let blocked =
+                    execute_program_words_blocked(&mut block, &program, rows, &input, &w)
+                        .unwrap();
+
+                let mut scalar: FunctionalSim<E> = FunctionalSim::new(&cfg);
+                let seq =
+                    execute_program_words_on(&mut scalar, &program, rows, &input, &w).unwrap();
+
+                let mut reference: FunctionalSim<E> = FunctionalSim::new(&cfg);
+                reference.use_plans = false;
+                let refr =
+                    execute_program_words_on(&mut reference, &program, rows, &input, &w)
+                        .unwrap();
+
+                assert_eq!(blocked, seq, "{elem} rows={rows}: blocked vs scalar words");
+                assert_eq!(seq, refr, "{elem} rows={rows}: scalar vs reference words");
+                assert_eq!(
+                    block.stats(),
+                    scalar.stats,
+                    "{elem} rows={rows}: blocked stats must equal the sequential loop's"
+                );
+                assert_eq!(
+                    scalar.stats, reference.stats,
+                    "{elem} rows={rows}: plan stats must equal the reference interpreter's"
+                );
+                assert_eq!(block.plan_compiles(), 0, "{elem} rows={rows}: blocked is seeded");
+                assert_eq!(scalar.plan_compiles, 0, "{elem} rows={rows}: scalar is seeded");
+            });
+        }
+    }
+}
+
+/// Fleet shard boundaries through the blocked device path: a 3-device fleet
+/// at `shard_min_rows = 1` splits a 4-blocks-plus-3 batch at rows that
+/// align with neither the compiled height nor the block boundary — results
+/// stay bit-identical to single-device execution for every backend, with
+/// zero runtime plan compiles.
+#[test]
+fn blocked_fleet_shard_boundaries() {
+    let (cfg, chain, program) = battery_program();
+    let rows = 4 * DEFAULT_ROW_BLOCK * program.rows() + 3;
+    for elem in ElemType::ALL {
+        let mut rng = Lcg::new(0xF7EE7 ^ elem as u64);
+        let weights: Vec<Vec<u64>> =
+            chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect();
+        let ww = WordWeights::new(weights, elem);
+        let input = elem.sample_words(&mut rng, rows * program.in_features());
+        let fleet = Fleet::new(
+            &cfg,
+            Arc::new(NaiveExecutor),
+            FleetOptions { devices: 3, shard_min_rows: 1, ..Default::default() },
+        );
+        let sharded = fleet.run_program_words(None, &program, rows, &input, &ww).unwrap();
+        let single = execute_program_words(&program, rows, &input, &ww).unwrap();
+        assert_eq!(sharded, single, "{elem}: fleet shards through the blocked path");
+        assert_eq!(fleet.plan_compiles(), 0, "{elem}: zero runtime plan compiles");
+    }
 }

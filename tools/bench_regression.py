@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Bench regression gate for the BENCH_*.json logs (§Perf CI satellite).
+
+Compares the throughput metrics of a freshly-emitted bench log against a
+committed baseline and fails (exit 1) if any metric regresses by more than
+the allowed fraction. Only *throughput* metrics are gated — names containing
+``macs_per_s`` or ``rows_per_s`` (covering the ``_before``/``_after``
+variants), where higher is better — because raw medians and speedup ratios
+are too noisy on shared CI runners to block on individually.
+
+Usage:
+    bench_regression.py BASELINE.json FRESH.json [--max-regress 0.10]
+
+Metrics present only in the fresh log (new benches) pass; metrics present
+only in the baseline (renamed/removed benches) are reported as warnings so
+a rename cannot silently drop coverage.
+
+Stdlib only — the CI image needs nothing beyond python3.
+"""
+
+import argparse
+import json
+import sys
+
+THROUGHPUT_MARKERS = ("macs_per_s", "rows_per_s")
+
+
+def throughput_metrics(log):
+    metrics = log.get("metrics", {})
+    return {
+        name: value
+        for name, value in metrics.items()
+        if any(m in name for m in THROUGHPUT_MARKERS) and isinstance(value, (int, float))
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed baseline BENCH_*.json")
+    ap.add_argument("fresh", help="freshly-emitted BENCH_*.json")
+    ap.add_argument(
+        "--max-regress",
+        type=float,
+        default=0.10,
+        help="maximum allowed fractional throughput drop (default 0.10 = 10%%)",
+    )
+    args = ap.parse_args()
+
+    try:
+        with open(args.baseline) as f:
+            baseline = throughput_metrics(json.load(f))
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: cannot read baseline {args.baseline}: {e}", file=sys.stderr)
+        return 1
+    try:
+        with open(args.fresh) as f:
+            fresh = throughput_metrics(json.load(f))
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: cannot read fresh log {args.fresh}: {e}", file=sys.stderr)
+        return 1
+
+    if not baseline:
+        print(
+            f"warning: baseline {args.baseline} has no throughput metrics; nothing to gate"
+        )
+        return 0
+
+    failures = []
+    for name in sorted(baseline):
+        base = baseline[name]
+        if name not in fresh:
+            print(f"warning: metric {name!r} missing from fresh log (renamed or removed?)")
+            continue
+        if base <= 0:
+            continue  # degenerate baseline sample; cannot compute a ratio
+        now = fresh[name]
+        change = (now - base) / base
+        status = "ok"
+        if change < -args.max_regress:
+            status = "REGRESSED"
+            failures.append((name, base, now, change))
+        print(f"  {name}: {base:.3f} -> {now:.3f} ({change:+.1%}) {status}")
+
+    new = sorted(set(fresh) - set(baseline))
+    for name in new:
+        print(f"  {name}: (new) {fresh[name]:.3f}")
+
+    if failures:
+        print(
+            f"\n{len(failures)} throughput metric(s) regressed more than "
+            f"{args.max_regress:.0%}:",
+            file=sys.stderr,
+        )
+        for name, base, now, change in failures:
+            print(f"  {name}: {base:.3f} -> {now:.3f} ({change:+.1%})", file=sys.stderr)
+        return 1
+    print(f"\nall {len(baseline)} gated metrics within {args.max_regress:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
