@@ -410,6 +410,8 @@ pub fn cmd_workloads(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Parse the fleet sizing + admission flags shared by the serving commands.
+/// `--trace` turns on request tracing (per-stage span histograms,
+/// docs/OBSERVABILITY.md); `--trace-sample N` traces every Nth arrival.
 fn server_options(args: &Args) -> crate::coordinator::serve::ServerOptions {
     use crate::coordinator::admission::AdmissionOptions;
     let d = crate::coordinator::serve::ServerOptions::default();
@@ -424,7 +426,33 @@ fn server_options(args: &Args) -> crate::coordinator::serve::ServerOptions {
             burst: args.f64_flag("burst", da.burst),
             max_in_flight: args.usize_flag("in-flight", da.max_in_flight),
         },
+        tracing: crate::obs::TraceOptions {
+            enabled: args.bool_flag("trace"),
+            sample_every: args.usize_flag("trace-sample", 1).max(1) as u64,
+        },
     }
+}
+
+/// `--metrics-out <path>`: dump the server's full telemetry snapshot
+/// (counters, span histograms, fleet stall gauges) as JSON. Shared by
+/// `serve`, `serve-model` and `loadgen`; validated in CI by
+/// `tools/check_metrics.py` against `tools/metrics_schema.json`.
+fn write_metrics_snapshot(
+    args: &Args,
+    server: &crate::coordinator::serve::Server,
+    wall_us: f64,
+) -> anyhow::Result<()> {
+    if let Some(path) = args.flags.get("metrics-out") {
+        let snap = server.metrics_snapshot(wall_us);
+        std::fs::write(path, snap.to_json()).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        println!(
+            "metrics snapshot → {path} ({} counters, {} gauges, {} histograms)",
+            snap.counters.len(),
+            snap.gauges.len(),
+            snap.histograms.len(),
+        );
+    }
+    Ok(())
 }
 
 /// Parse `--qos` / `--deadline-ms` on the serving commands. The deadline is
@@ -857,6 +885,7 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if sopts.devices > 1 {
         println!("{}", server.fleet_report(wall_us).render());
     }
+    write_metrics_snapshot(args, &server, wall_us)?;
     Ok(())
 }
 
@@ -1003,6 +1032,7 @@ pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
         );
         println!("{}", report.render());
     }
+    write_metrics_snapshot(args, &server, wall_us)?;
     Ok(())
 }
 
@@ -1036,7 +1066,12 @@ pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     let rate = args.f64_flag("rate", 200.0).max(1.0); // offered load, req/s
     let overload = args.bool_flag("overload");
     let interactive_deadline_ms = args.usize_flag("deadline-ms", 200) as u64;
-    let sopts = server_options(args);
+    let mut sopts = server_options(args);
+    // Loadgen always traces (at the `--trace-sample` rate, default every
+    // request) so its metrics snapshot carries the per-stage latency
+    // histograms. Traced serving is bit-identical to untraced serving
+    // (tests/telemetry.rs), so this does not perturb the measurement.
+    sopts.tracing.enabled = true;
     let seed = args.usize_flag("seed", 42) as u64;
     let mut rng = crate::util::Lcg::new(seed);
 
@@ -1139,8 +1174,11 @@ pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     let wall_us = start.elapsed().as_secs_f64() * 1e6;
 
     // Exactly-once: every sent id answered once, no strays, no duplicates.
+    // Per-class latency goes straight into the shared log-scale histogram
+    // (`crate::obs::Histogram`) — the same quantile implementation the
+    // span histograms use, replacing the old sort-a-Vec percentile path.
     let mut seen = HashSet::new();
-    let mut lat: Map<QosClass, Vec<f64>> = Map::new();
+    let mut lat: Map<QosClass, crate::obs::Histogram> = Map::new();
     let (mut ok, mut shed, mut expired, mut errors) = (0u64, 0u64, 0u64, 0u64);
     let mut interactive_shed = 0u64;
     for (rid, code, at) in &got {
@@ -1152,7 +1190,7 @@ pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
                 ok += 1;
                 lat.entry(qos)
                     .or_default()
-                    .push(at.saturating_duration_since(sent_at).as_secs_f64() * 1e6);
+                    .record(at.saturating_duration_since(sent_at).as_secs_f64() * 1e6);
             }
             Some(ErrorCode::Shed) => {
                 shed += 1;
@@ -1191,11 +1229,12 @@ pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     log.metric("batches", stats.batches as f64);
     log.metric("throughput_per_s", stats.throughput_per_s(wall_us));
     for qos in QosClass::ALL {
-        let xs = lat.get(&qos).map(|v| v.as_slice()).unwrap_or(&[]);
+        let h = lat.get(&qos);
+        let n = h.map(|h| h.count()).unwrap_or(0);
         let key = qos.name().replace('-', "_");
-        log.metric(&format!("{key}_succeeded"), xs.len() as f64);
+        log.metric(&format!("{key}_succeeded"), n as f64);
         for (tag, p) in [("p50", 50.0), ("p99", 99.0), ("p999", 99.9)] {
-            let v = if xs.is_empty() { 0.0 } else { crate::util::percentile(xs, p) };
+            let v = if n == 0 { 0.0 } else { h.unwrap().percentile(p) };
             log.metric(&format!("{key}_{tag}_us"), v);
         }
     }
@@ -1209,6 +1248,7 @@ pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     }
     let out = args.str_flag("out", "BENCH_serving.json");
     log.write_json(&out).map_err(|e| anyhow::anyhow!("{out}: {e}"))?;
+    write_metrics_snapshot(args, &server, wall_us)?;
 
     println!(
         "loadgen: offered {:.0} req/s for {} ms over {} device(s): {} sent, {} ok, \
@@ -1223,13 +1263,12 @@ pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
         errors,
         stats.injected,
     );
-    let ilat = lat.get(&QosClass::Interactive).map(|v| v.as_slice()).unwrap_or(&[]);
-    if !ilat.is_empty() {
+    if let Some(ih) = lat.get(&QosClass::Interactive).filter(|h| h.count() > 0) {
         println!(
             "interactive: p50 {:.0} µs, p99 {:.0} µs, p999 {:.0} µs (deadline {} ms)",
-            crate::util::percentile(ilat, 50.0),
-            crate::util::percentile(ilat, 99.0),
-            crate::util::percentile(ilat, 99.9),
+            ih.percentile(50.0),
+            ih.percentile(99.0),
+            ih.percentile(99.9),
             interactive_deadline_ms,
         );
         // Acceptance: Interactive p99 stays bounded by its deadline — a
@@ -1237,9 +1276,10 @@ pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
         // `deadline_exceeded` at the stitch, so any success latency above
         // the deadline means a hand-off point failed to drop it. 10 ms of
         // slack covers collector-thread scheduling between the stitch-time
-        // expiry check and the receive timestamp.
+        // expiry check and the receive timestamp. (Histogram quantiles
+        // clamp to the observed max, so the bound cannot loosen.)
         anyhow::ensure!(
-            crate::util::percentile(ilat, 99.0) <= (interactive_deadline_ms as f64 + 10.0) * 1e3,
+            ih.percentile(99.0) <= (interactive_deadline_ms as f64 + 10.0) * 1e3,
             "interactive p99 exceeds the {interactive_deadline_ms} ms deadline"
         );
     }
@@ -1255,6 +1295,54 @@ pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
         if overload { "overload run" } else { "low-load invariants hold" },
         offered_wall_us,
     );
+    Ok(())
+}
+
+/// `minisa metrics` — run a short fully-traced serving burst and export
+/// the resulting telemetry snapshot (docs/OBSERVABILITY.md): Prometheus
+/// text exposition by default, `--json` for the JSON snapshot document,
+/// `--out <file>` to write to a file instead of stdout. A quick way to see
+/// the whole metric catalog — serving counters, per-stage span histograms
+/// and the fleet stall-accounting gauges — with live values.
+pub fn cmd_metrics(args: &Args) -> anyhow::Result<()> {
+    use crate::coordinator::serve::{spawn_with_options, NaiveExecutor, Request};
+    use std::sync::Arc;
+
+    let cfg = configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(4, 4));
+    let requests = args.usize_flag("requests", 16);
+    let mut sopts = server_options(args);
+    sopts.tracing = crate::obs::TraceOptions::all();
+    let (tx, rx, h, server) = spawn_with_options(&cfg, Arc::new(NaiveExecutor), sopts);
+    let mut rng = crate::util::Lcg::new(args.usize_flag("seed", 42) as u64);
+    let m = 4usize;
+    let dims = [8usize, 12, 8];
+    let chain = Chain::mlp("metrics", m, &dims);
+    let ws: Vec<Vec<f32>> = chain.layers.iter().map(|g| rng.f32_matrix(g.k, g.n)).collect();
+    let pid = server.register_chain(&chain, ws)?;
+    let wall = std::time::Instant::now();
+    for id in 0..requests as u64 {
+        tx.send(Request::for_program(id, pid, m, rng.f32_matrix(m, dims[0])))?;
+    }
+    for _ in 0..requests {
+        let r = rx.recv()?;
+        anyhow::ensure!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+    }
+    drop(tx);
+    h.join().map_err(|_| anyhow::anyhow!("server panicked"))?;
+    let wall_us = wall.elapsed().as_secs_f64() * 1e6;
+    let snap = server.metrics_snapshot(wall_us);
+    let text = if args.bool_flag("json") { snap.to_json() } else { snap.to_prometheus() };
+    match args.flags.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            println!(
+                "{} metric series → {path} ({requests} traced requests served on {})",
+                snap.len(),
+                cfg.name(),
+            );
+        }
+        None => print!("{text}"),
+    }
     Ok(())
 }
 
@@ -1298,6 +1386,9 @@ pub fn usage() -> &'static str {
                   robustness invariants (docs/SERVING.md)\n\
                   [--duration-ms N] [--rate R] [--devices N] [--overload]\n\
                   [--faults none|scripted] [--deadline-ms N] [--out file]\n\
+       metrics    run a short traced serving burst and export the metric\n\
+                  catalog with live values (docs/OBSERVABILITY.md)\n\
+                  [--requests N] [--json] [--out file] [--devices N]\n\
        animate    cycle-by-cycle NEST/BIRRD/OB animation [--m --k --n --waves]\n\
      \n\
      --elem E selects the element arithmetic backend:\n\
@@ -1310,7 +1401,12 @@ pub fn usage() -> &'static str {
      serving admission flags (serve, serve-model, loadgen):\n\
        --qos interactive|batch|best-effort  --deadline-ms N (per request)\n\
        --in-flight N --rate-limit R --burst B (shed policy, docs/SERVING.md)\n\
-       --shard-timeout-ms N (per-shard watchdog; 0 = off)\n"
+       --shard-timeout-ms N (per-shard watchdog; 0 = off)\n\
+     serving telemetry flags (serve, serve-model, loadgen, metrics):\n\
+       --trace (per-request span timelines → serve_stage_* histograms)\n\
+       --trace-sample N (trace every Nth arrival; default 1)\n\
+       --metrics-out f.json (write the full telemetry snapshot as JSON;\n\
+         docs/OBSERVABILITY.md — loadgen always traces)\n"
 }
 
 /// Dispatch. Returns process exit code.
@@ -1346,6 +1442,7 @@ pub fn run(argv: &[String]) -> i32 {
         "serve" => cmd_serve(&args),
         "serve-model" => cmd_serve_model(&args),
         "loadgen" => cmd_loadgen(&args),
+        "metrics" => cmd_metrics(&args),
         "help" | "" => {
             println!("{}", usage());
             Ok(())
@@ -1590,6 +1687,61 @@ mod tests {
             ])),
             0
         );
+        std::fs::remove_file(&out).ok();
+    }
+
+    /// The CI metrics-gate step in miniature: loadgen with `--metrics-out`
+    /// writes a JSON telemetry snapshot carrying the serving counters, the
+    /// per-stage span histograms (loadgen always traces) and the per-device
+    /// modeled stall gauges.
+    #[test]
+    fn loadgen_metrics_out_writes_snapshot() {
+        let dir = std::env::temp_dir();
+        let bench = dir.join(format!("minisa_lg_bench_{}.json", std::process::id()));
+        let snap = dir.join(format!("minisa_lg_snap_{}.json", std::process::id()));
+        assert_eq!(
+            run(&argv(&[
+                "loadgen", "--duration-ms", "200", "--rate", "300", "--devices", "2",
+                "--shard-min-rows", "1", "--out", bench.to_str().unwrap(), "--metrics-out",
+                snap.to_str().unwrap(),
+            ])),
+            0
+        );
+        let json = std::fs::read_to_string(&snap).unwrap();
+        for key in [
+            "serve_served_total",
+            "serve_batches_total",
+            "serve_stage_execute_us",
+            "serve_request_us",
+            "fleet_dev0_micro_fetch_stall_cycles",
+            "fleet_micro_stall_fraction",
+        ] {
+            assert!(json.contains(key), "snapshot missing {key}: {json}");
+        }
+        std::fs::remove_file(&bench).ok();
+        std::fs::remove_file(&snap).ok();
+    }
+
+    #[test]
+    fn metrics_command_exports_both_formats() {
+        let out = std::env::temp_dir()
+            .join(format!("minisa_metrics_{}.prom", std::process::id()));
+        let p = out.to_str().unwrap();
+        assert_eq!(
+            run(&argv(&["metrics", "--requests", "4", "--ah", "4", "--aw", "4", "--out", p])),
+            0
+        );
+        let prom = std::fs::read_to_string(&out).unwrap();
+        assert!(prom.contains("# TYPE serve_served_total counter"), "{prom}");
+        assert!(prom.contains("serve_request_us"), "{prom}");
+        assert_eq!(
+            run(&argv(&[
+                "metrics", "--requests", "4", "--ah", "4", "--aw", "4", "--json", "--out", p,
+            ])),
+            0
+        );
+        let json = std::fs::read_to_string(&out).unwrap();
+        assert!(json.contains("\"counters\""), "{json}");
         std::fs::remove_file(&out).ok();
     }
 

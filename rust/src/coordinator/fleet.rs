@@ -54,7 +54,7 @@ use std::time::{Duration, Instant};
 use crate::arch::config::ArchConfig;
 use crate::arith::ElemType;
 use crate::functional::BlockSim;
-use crate::perf::{DeviceLoad, FleetReport};
+use crate::perf::{DeviceLoad, FleetReport, StallModel};
 use crate::program::Program;
 use crate::with_element;
 
@@ -110,6 +110,14 @@ pub struct DeviceStats {
     pub watchdog_trips: u64,
     /// Health-probe re-admissions after a transient failure.
     pub recoveries: u64,
+    /// NEST waves issued by this device's functional simulators (word
+    /// serving path; executor-backend paths don't expose wave counts).
+    pub waves: u64,
+    /// Live stall accounting: each executed shard charges its row share of
+    /// the program's modeled MINISA and micro-baseline cycles
+    /// ([`crate::program::Program::stall`]). Raw GEMM dispatches carry no
+    /// perf decision and contribute nothing.
+    pub modeled: StallModel,
 }
 
 /// A queued unit of fleet work: one batch's dispatch, bound to whichever
@@ -303,14 +311,32 @@ impl Device {
                 .downcast_mut::<BlockSim<E>>()
                 .ok_or_else(|| anyhow::anyhow!("device simulator type confusion"))?;
             let compiles_before = block.plan_compiles();
+            let waves_before = block.waves();
             let out = execute_program_words_blocked(block, program, rows, input, w);
             let delta = block.plan_compiles() - compiles_before;
+            let waves_delta = block.waves() - waves_before;
             drop(sims);
             if delta > 0 {
                 self.plan_compiles.fetch_add(delta, Ordering::Relaxed);
             }
+            if out.is_ok() {
+                let mut st = lock_clean(&self.stats);
+                st.waves += waves_delta;
+                drop(st);
+                self.note_modeled(program, rows);
+            }
             out
         })
+    }
+
+    /// Live stall accounting: a shard that executed `rows` of `program`
+    /// charges that row share of the program's modeled MINISA and
+    /// micro-baseline cycles to this device ([`StallModel::absorb_scaled`]).
+    /// Called on successful executions only — failed or panicked shards
+    /// completed no modeled work.
+    pub(crate) fn note_modeled(&self, program: &Program, rows: usize) {
+        let frac = rows as f64 / program.rows().max(1) as f64;
+        lock_clean(&self.stats).modeled.absorb_scaled(&program.stall, frac);
     }
 }
 
@@ -502,6 +528,8 @@ impl Fleet {
                         watchdog_trips: st.watchdog_trips,
                         recoveries: st.recoveries,
                         plan_compiles: d.plan_compiles(),
+                        waves: st.waves,
+                        modeled: st.modeled,
                         failed: d.is_failed(),
                     }
                 })
@@ -941,12 +969,16 @@ impl Fleet {
         );
         self.exec_row_sharded(home, rows, program.out_features(), |dev, r| {
             let shard = program.shard_rows(r);
-            dev.executor().run_program(
+            let out = dev.executor().run_program(
                 program,
                 shard.row_count(),
                 &input[shard.input_words()],
                 weights,
-            )
+            )?;
+            // Executor backends don't expose wave counts, but the modeled
+            // stall share is program-derived and applies to any backend.
+            dev.note_modeled(program, shard.row_count());
+            Ok(out)
         })
     }
 
@@ -1101,6 +1133,42 @@ mod tests {
         assert!(rep.devices.iter().map(|d| d.shards).sum::<u64>() >= 4);
         // With 1-row minimum and 3 devices, the 16-row batch sharded.
         assert!(rep.devices.iter().filter(|d| d.shards > 0).count() >= 2, "{rep:?}");
+    }
+
+    #[test]
+    fn fleet_stall_accounting_sums_to_the_program_model() {
+        // Live stall accounting: shards covering exactly the program's row
+        // count charge, in total, exactly the program's modeled cycles —
+        // regardless of how the rows split across devices.
+        let f = fleet(2, 1);
+        let chain = Chain::mlp("stall", 4, &[8, 12, 8]);
+        let p = Program::compile(&f.cfg, &chain, &fast()).unwrap();
+        assert!(p.stall.is_populated());
+        let mut rng = Lcg::new(21);
+        let ww = WordWeights::new(
+            chain.layers.iter().map(|g| ElemType::I32.sample_words(&mut rng, g.k * g.n)).collect(),
+            ElemType::I32,
+        );
+        let input = ElemType::I32.sample_words(&mut rng, 4 * p.in_features());
+        f.run_program_words(None, &p, 4, &input, &ww).unwrap();
+        let rep = f.report(1.0);
+        let m = rep.modeled();
+        assert!(
+            (m.minisa_total_cycles - p.stall.minisa_total_cycles).abs()
+                < 1e-6 * p.stall.minisa_total_cycles.max(1.0),
+            "fleet {} vs program {}",
+            m.minisa_total_cycles,
+            p.stall.minisa_total_cycles
+        );
+        assert!(
+            (m.micro_fetch_stall_cycles - p.stall.micro_fetch_stall_cycles).abs()
+                < 1e-6 * p.stall.micro_fetch_stall_cycles.max(1.0)
+        );
+        // The word path also counts the waves its simulators issued.
+        let waves: u64 = rep.devices.iter().map(|d| d.waves).sum();
+        assert!(waves > 0, "{rep:?}");
+        // The rendered report surfaces the live stall table.
+        assert!(rep.render().contains("micro-fetch-stall"), "{}", rep.render());
     }
 
     #[test]

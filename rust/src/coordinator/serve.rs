@@ -35,6 +35,13 @@
 //!
 //! Built on std::thread + mpsc channels (offline substitute for tokio,
 //! DESIGN.md).
+//!
+//! Telemetry (docs/OBSERVABILITY.md): every front-door counter lives in a
+//! per-server [`MetricsRegistry`] (one relaxed atomic add per event,
+//! handles cached at construction); [`ServerOptions::tracing`] samples
+//! requests into [`RequestTrace`] pipeline spans whose per-stage latencies
+//! feed `serve_stage_*_us` histograms; [`Server::metrics_snapshot`] folds
+//! the fleet's utilisation and live stall accounting in as gauges.
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
@@ -54,6 +61,7 @@ use crate::functional::{BlockSim, FunctionalSim};
 use crate::mapper::chain::Chain;
 use crate::mapper::search::{search, MapperOptions};
 use crate::mapper::Decision;
+use crate::obs::{Counter, Gauge, MetricsRegistry, RequestTrace, Snapshot, Stage, TraceOptions};
 use crate::program::Program;
 use crate::with_element;
 use crate::workloads::Gemm;
@@ -90,22 +98,44 @@ pub struct Request {
     /// Admission tag: QoS class plus optional deadline. Constructors default
     /// to `Interactive` with no deadline — the pre-admission behaviour.
     pub admission: Admission,
+    /// Pipeline trace, populated by the server at arrival when
+    /// [`ServerOptions::tracing`] samples this request; `None` otherwise
+    /// (constructors never set it). Stage marks accumulate as the request
+    /// moves through the pipeline and the finished trace is returned on
+    /// the [`Response`]. Requests rejected before admission (shed / dead on
+    /// arrival) drop their trace with the request.
+    pub trace: Option<RequestTrace>,
 }
 
 impl Request {
     /// An ad-hoc single-GEMM request.
     pub fn gemm(id: u64, m: usize, k: usize, n: usize, input: Vec<f32>, weight: Arc<Vec<f32>>) -> Self {
-        Self { id, payload: Payload::Gemm { m, k, n, input, weight }, admission: Admission::default() }
+        Self {
+            id,
+            payload: Payload::Gemm { m, k, n, input, weight },
+            admission: Admission::default(),
+            trace: None,
+        }
     }
 
     /// An activation for a registered f32 program.
     pub fn for_program(id: u64, program: ProgramId, rows: usize, input: Vec<f32>) -> Self {
-        Self { id, payload: Payload::Program { program, rows, input }, admission: Admission::default() }
+        Self {
+            id,
+            payload: Payload::Program { program, rows, input },
+            admission: Admission::default(),
+            trace: None,
+        }
     }
 
     /// An activation (canonical words) for an element-typed program session.
     pub fn for_program_words(id: u64, program: ProgramId, rows: usize, input: Vec<u64>) -> Self {
-        Self { id, payload: Payload::ProgramWords { program, rows, input }, admission: Admission::default() }
+        Self {
+            id,
+            payload: Payload::ProgramWords { program, rows, input },
+            admission: Admission::default(),
+            trace: None,
+        }
     }
 
     /// Tag this request with a QoS class (default: `Interactive`).
@@ -158,6 +188,10 @@ pub struct Response {
     /// The string forms ([`ErrorCode::as_str`]) are stable — clients switch
     /// on these, not on the human-readable `error` message.
     pub code: Option<ErrorCode>,
+    /// The request's completed pipeline trace (arrival → respond) when it
+    /// was sampled ([`ServerOptions::tracing`]) and answered successfully;
+    /// `None` for untraced requests and error responses.
+    pub trace: Option<RequestTrace>,
 }
 
 /// Execution backend abstraction.
@@ -422,7 +456,10 @@ impl TileExecutor for NaiveExecutor {
     }
 }
 
-/// Routing + batching statistics.
+/// Routing + batching statistics — a point-in-time read model synthesized
+/// by [`Server::stats`] from the server's metrics registry (the registry's
+/// atomic counters are the single telemetry path; this struct is a
+/// convenience view, not separate state).
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
     pub served: u64,
@@ -472,6 +509,73 @@ impl ServeStats {
         } else {
             self.served as f64 / (wall_us / 1e6)
         }
+    }
+}
+
+/// Registry handles for every front-door counter, fetched once at server
+/// construction so the hot path is a single relaxed atomic add per event —
+/// the registry's name-map mutex is never touched while serving.
+struct ServeCounters {
+    served: Counter,
+    program_served: Counter,
+    batches: Counter,
+    mapper_cache_hits: Counter,
+    mapper_cache_misses: Counter,
+    program_compiles: Counter,
+    artifact_loads: Counter,
+    errors: Counter,
+    shed: Counter,
+    expired: Counter,
+    session_gone: Counter,
+    injected: Counter,
+    /// Total service time in integer nanoseconds — a counter rather than a
+    /// float so concurrent accumulation stays exact.
+    service_ns: Counter,
+    max_batch: Gauge,
+}
+
+impl ServeCounters {
+    fn new(reg: &MetricsRegistry) -> Self {
+        Self {
+            served: reg.counter("serve_served_total"),
+            program_served: reg.counter("serve_program_served_total"),
+            batches: reg.counter("serve_batches_total"),
+            mapper_cache_hits: reg.counter("serve_mapper_cache_hits_total"),
+            mapper_cache_misses: reg.counter("serve_mapper_cache_misses_total"),
+            program_compiles: reg.counter("serve_program_compiles_total"),
+            artifact_loads: reg.counter("serve_artifact_loads_total"),
+            errors: reg.counter("serve_errors_total"),
+            shed: reg.counter("serve_shed_total"),
+            expired: reg.counter("serve_expired_total"),
+            session_gone: reg.counter("serve_session_gone_total"),
+            injected: reg.counter("serve_injected_total"),
+            service_ns: reg.counter("serve_service_time_ns_total"),
+            max_batch: reg.gauge("serve_max_batch"),
+        }
+    }
+}
+
+/// Traces pulled off a batch's requests at dispatch time, keyed by request
+/// id. The dispatchers work on shared `&[Request]` slices, so execute /
+/// stitch / respond stage marks go through this owned side table instead of
+/// needing mutable access to the requests. Traces of requests that error
+/// are simply dropped with the table.
+#[derive(Default)]
+struct BatchTraces(Vec<(u64, RequestTrace)>);
+
+impl BatchTraces {
+    fn pull(batch: &mut [Request]) -> Self {
+        Self(batch.iter_mut().filter_map(|r| r.trace.take().map(|t| (r.id, t))).collect())
+    }
+
+    fn mark_all(&mut self, stage: Stage) {
+        for (_, t) in &mut self.0 {
+            t.mark(stage);
+        }
+    }
+
+    fn take(&mut self, id: u64) -> Option<RequestTrace> {
+        self.0.iter().position(|(i, _)| *i == id).map(|p| self.0.remove(p).1)
     }
 }
 
@@ -597,6 +701,11 @@ pub struct ServerOptions {
     /// default-constructed server behaves exactly like the pre-admission
     /// front door.
     pub admission: AdmissionOptions,
+    /// Request tracing policy: disabled by default (zero per-request
+    /// overhead beyond one relaxed sequence increment when enabled with
+    /// sampling). Sampled requests carry a [`RequestTrace`] through the
+    /// pipeline and record per-stage latency histograms on completion.
+    pub tracing: TraceOptions,
 }
 
 impl Default for ServerOptions {
@@ -607,6 +716,7 @@ impl Default for ServerOptions {
             max_batch: 8,
             shard_timeout_ms: 0,
             admission: AdmissionOptions::default(),
+            tracing: TraceOptions::default(),
         }
     }
 }
@@ -626,7 +736,18 @@ pub struct Server {
     /// Registered model sessions (compile-once/serve-many).
     sessions: RwLock<HashMap<ProgramId, Session>>,
     next_program: AtomicU64,
-    pub stats: Mutex<ServeStats>,
+    /// Unified telemetry: every front-door counter lives in this registry
+    /// (read it back as a [`ServeStats`] view via [`Self::stats`], or
+    /// export it via [`Self::metrics_snapshot`]); sampled request traces
+    /// record their per-stage histograms here too.
+    metrics: Arc<MetricsRegistry>,
+    /// Cached registry handles — the serving hot path never touches the
+    /// registry's name map.
+    ctr: ServeCounters,
+    /// Request-tracing policy for this server.
+    tracing: TraceOptions,
+    /// Arrival sequence number driving trace sampling.
+    arrivals: AtomicU64,
     /// Max requests batched per dispatch.
     pub max_batch: usize,
     /// The front-door gate: deadlines, per-session rate limits, and the
@@ -661,6 +782,8 @@ impl Server {
                 ..Default::default()
             },
         ));
+        let metrics = Arc::new(MetricsRegistry::new());
+        let ctr = ServeCounters::new(&metrics);
         Self {
             cfg: cfg.clone(),
             fleet,
@@ -668,7 +791,10 @@ impl Server {
             cache: RwLock::new(HashMap::new()),
             sessions: RwLock::new(HashMap::new()),
             next_program: AtomicU64::new(1),
-            stats: Mutex::new(ServeStats::default()),
+            metrics,
+            ctr,
+            tracing: sopts.tracing,
+            arrivals: AtomicU64::new(0),
             max_batch: sopts.max_batch,
             admission: AdmissionController::new(sopts.admission),
             open: Mutex::new(HashMap::new()),
@@ -685,10 +811,74 @@ impl Server {
     /// folded in (the fleet itself never sees rejected requests).
     pub fn fleet_report(&self, window_us: f64) -> crate::perf::FleetReport {
         let mut rep = self.fleet.report(window_us);
-        let st = self.stats.lock().unwrap();
-        rep.shed = st.shed;
-        rep.expired = st.expired;
+        rep.shed = self.ctr.shed.get();
+        rep.expired = self.ctr.expired.get();
         rep
+    }
+
+    /// Point-in-time serving statistics, read from the metrics registry's
+    /// atomic counters (there is no separate stats state to get out of
+    /// sync with the exporters).
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            served: self.ctr.served.get(),
+            batches: self.ctr.batches.get(),
+            mapper_cache_hits: self.ctr.mapper_cache_hits.get(),
+            mapper_cache_misses: self.ctr.mapper_cache_misses.get(),
+            program_compiles: self.ctr.program_compiles.get(),
+            artifact_loads: self.ctr.artifact_loads.get(),
+            program_served: self.ctr.program_served.get(),
+            errors: self.ctr.errors.get(),
+            total_service_us: self.ctr.service_ns.get() as f64 / 1e3,
+            max_batch: self.ctr.max_batch.get() as usize,
+            shed: self.ctr.shed.get(),
+            expired: self.ctr.expired.get(),
+            session_gone: self.ctr.session_gone.get(),
+            injected: self.ctr.injected.get(),
+        }
+    }
+
+    /// This server's metrics registry — counters, gauges, and (when
+    /// tracing is on) per-stage latency histograms. Exporters and tests
+    /// read from here; [`crate::obs::export`] renders it.
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.metrics
+    }
+
+    /// Full observability snapshot: the registry's counters / gauges /
+    /// stage histograms with the fleet's per-device utilisation and live
+    /// stall accounting folded in as `fleet_dev{i}_*` gauges (including
+    /// the modeled MINISA-vs-micro compute and fetch-stall cycle split —
+    /// the paper's Table I breakdown measured at fleet scale).
+    pub fn metrics_snapshot(&self, window_us: f64) -> Snapshot {
+        let rep = self.fleet_report(window_us);
+        let g = |name: String, v: f64| self.metrics.gauge(&name).set(v);
+        g("fleet_devices".to_string(), rep.devices.len() as f64);
+        for d in &rep.devices {
+            let i = d.device;
+            let dg = |k: &str, v: f64| g(format!("fleet_dev{i}_{k}"), v);
+            dg("busy_us", d.busy);
+            dg("idle_us", d.stall);
+            dg("dispatches", d.dispatches as f64);
+            dg("shards", d.shards as f64);
+            dg("rows", d.rows as f64);
+            dg("steals", d.steals as f64);
+            dg("requeues", d.requeues as f64);
+            dg("retries", d.retries as f64);
+            dg("watchdog_trips", d.watchdog_trips as f64);
+            dg("recoveries", d.recoveries as f64);
+            dg("plan_compiles", d.plan_compiles as f64);
+            dg("waves", d.waves as f64);
+            dg("minisa_compute_cycles", d.modeled.minisa_compute_cycles);
+            dg("minisa_fetch_stall_cycles", d.modeled.minisa_fetch_stall_cycles);
+            dg("micro_compute_cycles", d.modeled.micro_compute_cycles);
+            dg("micro_fetch_stall_cycles", d.modeled.micro_fetch_stall_cycles);
+        }
+        let m = rep.modeled();
+        g("fleet_minisa_stall_fraction".to_string(), m.minisa_stall_fraction());
+        g("fleet_micro_stall_fraction".to_string(), m.micro_stall_fraction());
+        g("fleet_control_speedup".to_string(), m.control_speedup());
+        self.metrics.snapshot()
     }
 
     /// The device fleet executing this server's dispatches (per-device
@@ -743,7 +933,7 @@ impl Server {
                     SessionWeights::Words(Arc::new(WordWeights::new(payload.weights, elem)))
                 };
                 let id = self.insert_session(program, elem, weights);
-                self.stats.lock().unwrap().artifact_loads += 1;
+                self.ctr.artifact_loads.inc();
                 Ok(id)
             }
             ArtifactSource::CompileF32 { chain, weights } => {
@@ -757,7 +947,7 @@ impl Server {
                     ElemType::F32,
                     SessionWeights::F32(Arc::new(weights)),
                 );
-                self.stats.lock().unwrap().program_compiles += 1;
+                self.ctr.program_compiles.inc();
                 Ok(id)
             }
             ArtifactSource::CompileWords { chain, weights, elem } => {
@@ -774,7 +964,7 @@ impl Server {
                     elem,
                     SessionWeights::Words(Arc::new(WordWeights::new(weights, elem))),
                 );
-                self.stats.lock().unwrap().program_compiles += 1;
+                self.ctr.program_compiles.inc();
                 Ok(id)
             }
         }
@@ -848,9 +1038,7 @@ impl Server {
 
     /// Route a shape through the mapper (cached). Hot path: one shared
     /// cache read lock plus a lock-free `OnceLock` read and a single
-    /// `Decision` clone. The stats counter still takes the global stats
-    /// mutex — held for one increment; fold it into atomics if it ever
-    /// shows up in a profile.
+    /// `Decision` clone; the hit/miss counters are relaxed atomic adds.
     pub fn route(&self, m: usize, k: usize, n: usize) -> Option<Decision> {
         let key = (m, k, n);
         let slot = {
@@ -865,7 +1053,7 @@ impl Server {
             }
         };
         if let Some(d) = slot.done.get() {
-            self.stats.lock().unwrap().mapper_cache_hits += 1;
+            self.ctr.mapper_cache_hits.inc();
             return d.clone();
         }
         // In-flight guard: first arrival builds, racers block here and then
@@ -874,10 +1062,10 @@ impl Server {
         // the poison and retry rather than wedging this shape forever.
         let _build = slot.build.lock().unwrap_or_else(|p| p.into_inner());
         if let Some(d) = slot.done.get() {
-            self.stats.lock().unwrap().mapper_cache_hits += 1;
+            self.ctr.mapper_cache_hits.inc();
             return d.clone();
         }
-        self.stats.lock().unwrap().mapper_cache_misses += 1;
+        self.ctr.mapper_cache_misses.inc();
         let g = Gemm::new("serve", "online", m, k, n);
         let d = search(&self.cfg, &g, &self.opts);
         let _ = slot.done.set(d.clone());
@@ -899,6 +1087,11 @@ impl Server {
             }
         }
         *pending = rest;
+        for r in batch.iter_mut() {
+            if let Some(t) = r.trace.as_mut() {
+                t.mark(Stage::Batch);
+            }
+        }
         batch
     }
 
@@ -907,12 +1100,24 @@ impl Server {
     /// typed error immediately (they never enter the in-flight count).
     fn admit_or_reject(
         &self,
-        r: Request,
+        mut r: Request,
         pending: &mut Vec<Request>,
         tx: &Sender<Response>,
     ) -> Result<(), ()> {
+        // Arrival: stamp a trace on sampled requests. Untraced requests pay
+        // exactly one relaxed atomic increment here (and nothing at all
+        // when tracing is off).
+        if self.tracing.enabled {
+            let seq = self.arrivals.fetch_add(1, Ordering::Relaxed);
+            if self.tracing.sample(seq) {
+                r.trace = Some(RequestTrace::start());
+            }
+        }
         match self.admission.admit(affinity(&batch_key(&r)), &r.admission, Instant::now()) {
             Verdict::Admit => {
+                if let Some(t) = r.trace.as_mut() {
+                    t.mark(Stage::Admission);
+                }
                 pending.push(r);
                 Ok(())
             }
@@ -1018,7 +1223,7 @@ impl Server {
     /// Try to add an admitted request to a compatible open batch. Returns
     /// the request back if no open batch can take it (wrong key, already
     /// claimed, or full).
-    fn try_inject(&self, r: Request) -> Option<Request> {
+    fn try_inject(&self, mut r: Request) -> Option<Request> {
         let key = batch_key(&r);
         let open = lock_clean(&self.open);
         if let Some(ob) = open.get(&key) {
@@ -1027,10 +1232,13 @@ impl Server {
             let mut reqs = lock_clean(&ob.reqs);
             if let Some(v) = reqs.as_mut() {
                 if v.len() < self.max_batch {
+                    if let Some(t) = r.trace.as_mut() {
+                        t.mark(Stage::Batch);
+                    }
                     v.push(r);
                     drop(reqs);
                     drop(open);
-                    self.stats.lock().unwrap().injected += 1;
+                    self.ctr.injected.inc();
                     return None;
                 }
             }
@@ -1083,7 +1291,7 @@ impl Server {
     ) -> Result<(), ()> {
         // Hand-off point: drop requests whose deadline passed while queued.
         let now = Instant::now();
-        let (live, dead): (Vec<Request>, Vec<Request>) =
+        let (mut live, dead): (Vec<Request>, Vec<Request>) =
             batch.into_iter().partition(|r| !r.admission.expired(now));
         if !dead.is_empty() {
             let ids: Vec<u64> = dead.iter().map(|r| r.id).collect();
@@ -1095,25 +1303,30 @@ impl Server {
                 tx,
             )?;
         }
+        // Traces leave the requests here: the dispatchers work on shared
+        // request slices, so later stage marks go through this side table.
+        let mut traces = BatchTraces::pull(&mut live);
+        traces.mark_all(Stage::Dispatch);
         let Some(first) = live.first() else { return Ok(()) };
         match &first.payload {
-            Payload::Gemm { .. } => self.dispatch_gemm(dev, &live, tx),
-            Payload::Program { .. } => self.dispatch_program(dev, &live, tx),
-            Payload::ProgramWords { .. } => self.dispatch_program_words(dev, &live, tx),
+            Payload::Gemm { .. } => self.dispatch_gemm(dev, &live, &mut traces, tx),
+            Payload::Program { .. } => self.dispatch_program(dev, &live, &mut traces, tx),
+            Payload::ProgramWords { .. } => {
+                self.dispatch_program_words(dev, &live, &mut traces, tx)
+            }
         }
     }
 
-    /// Bump the stats counter matching an error class.
+    /// Bump the counter matching an error class.
     fn account_error(&self, code: ErrorCode, n: u64) {
-        let mut st = self.stats.lock().unwrap();
         match code {
-            ErrorCode::Shed => st.shed += n,
-            ErrorCode::DeadlineExceeded => st.expired += n,
+            ErrorCode::Shed => self.ctr.shed.add(n),
+            ErrorCode::DeadlineExceeded => self.ctr.expired.add(n),
             ErrorCode::SessionGone => {
-                st.session_gone += n;
-                st.errors += n;
+                self.ctr.session_gone.add(n);
+                self.ctr.errors.add(n);
             }
-            ErrorCode::Watchdog | ErrorCode::Exec => st.errors += n,
+            ErrorCode::Watchdog | ErrorCode::Exec => self.ctr.errors.add(n),
         }
     }
 
@@ -1127,6 +1340,7 @@ impl Server {
             batch_size,
             error: Some(msg.to_string()),
             code: Some(code),
+            trace: None,
         }
     }
 
@@ -1187,6 +1401,7 @@ impl Server {
         &self,
         dev: Option<&Arc<Device>>,
         batch: &[Request],
+        traces: &mut BatchTraces,
         tx: &Sender<Response>,
     ) -> Result<(), ()> {
         let t0 = std::time::Instant::now();
@@ -1242,19 +1457,19 @@ impl Server {
             let msg = format!("executor returned {} elements, expected {}", out.len(), bm * n);
             return self.fail(&ids, valid.len(), &msg, tx);
         }
-        let service_us = t0.elapsed().as_secs_f64() * 1e6;
+        traces.mark_all(Stage::Execute);
+        let elapsed = t0.elapsed();
+        let service_us = elapsed.as_secs_f64() * 1e6;
         let modeled = decision.map(|d| d.report.total_cycles).unwrap_or(0.0);
         // Stitch hand-off point: a deadline that died during execution
         // answers `deadline_exceeded`, not a result nobody is waiting for.
         let now = Instant::now();
+        traces.mark_all(Stage::Stitch);
         let live_n = valid.iter().filter(|r| !r.admission.expired(now)).count();
-        {
-            let mut st = self.stats.lock().unwrap();
-            st.served += live_n as u64;
-            st.batches += 1;
-            st.total_service_us += service_us * live_n as f64;
-            st.max_batch = st.max_batch.max(valid.len());
-        }
+        self.ctr.served.add(live_n as u64);
+        self.ctr.batches.inc();
+        self.ctr.service_ns.add(elapsed.as_nanos() as u64 * live_n as u64);
+        self.ctr.max_batch.set_max(valid.len() as f64);
         for (bi, r) in valid.iter().enumerate() {
             if r.admission.expired(now) {
                 self.answer_error(
@@ -1266,6 +1481,11 @@ impl Server {
                 )?;
                 continue;
             }
+            let trace = traces.take(r.id).map(|mut t| {
+                t.mark(Stage::Respond);
+                t.record_into(&self.metrics);
+                t
+            });
             let resp = Response {
                 id: r.id,
                 output: out[bi * m * n..(bi + 1) * m * n].to_vec(),
@@ -1275,6 +1495,7 @@ impl Server {
                 batch_size: valid.len(),
                 error: None,
                 code: None,
+                trace,
             };
             tx.send(resp).map_err(|_| ())?;
         }
@@ -1286,6 +1507,7 @@ impl Server {
         &self,
         dev: Option<&Arc<Device>>,
         batch: &[Request],
+        traces: &mut BatchTraces,
         tx: &Sender<Response>,
     ) -> Result<(), ()> {
         let Payload::Program { program: pid, .. } = &batch[0].payload else { unreachable!() };
@@ -1309,6 +1531,7 @@ impl Server {
         let program = Arc::clone(&session.program);
         self.dispatch_session_batch(
             batch,
+            traces,
             tx,
             &session,
             "elements",
@@ -1329,6 +1552,7 @@ impl Server {
         &self,
         dev: Option<&Arc<Device>>,
         batch: &[Request],
+        traces: &mut BatchTraces,
         tx: &Sender<Response>,
     ) -> Result<(), ()> {
         let Payload::ProgramWords { program: pid, .. } = &batch[0].payload else { unreachable!() };
@@ -1347,6 +1571,7 @@ impl Server {
         let program = Arc::clone(&session.program);
         self.dispatch_session_batch(
             batch,
+            traces,
             tx,
             &session,
             "words",
@@ -1372,6 +1597,7 @@ impl Server {
     fn dispatch_session_batch<T: Copy>(
         &self,
         batch: &[Request],
+        traces: &mut BatchTraces,
         tx: &Sender<Response>,
         session: &Session,
         unit: &str,
@@ -1427,19 +1653,19 @@ impl Server {
                 format!("executor returned {} {unit}, expected {}", out.len(), total_rows * nf);
             return self.fail(&ids, valid.len(), &msg, tx);
         }
-        let service_us = t0.elapsed().as_secs_f64() * 1e6;
+        traces.mark_all(Stage::Execute);
+        let elapsed = t0.elapsed();
+        let service_us = elapsed.as_secs_f64() * 1e6;
         // Stitch hand-off point: deadlines that died during execution
         // answer `deadline_exceeded` instead of a result nobody awaits.
         let now = Instant::now();
+        traces.mark_all(Stage::Stitch);
         let live_n = valid.iter().filter(|r| !r.admission.expired(now)).count();
-        {
-            let mut st = self.stats.lock().unwrap();
-            st.served += live_n as u64;
-            st.program_served += live_n as u64;
-            st.batches += 1;
-            st.total_service_us += service_us * live_n as f64;
-            st.max_batch = st.max_batch.max(valid.len());
-        }
+        self.ctr.served.add(live_n as u64);
+        self.ctr.program_served.add(live_n as u64);
+        self.ctr.batches.inc();
+        self.ctr.service_ns.add(elapsed.as_nanos() as u64 * live_n as u64);
+        self.ctr.max_batch.set_max(valid.len() as f64);
         let mut row0 = 0usize;
         for r in &valid {
             let (rows, _) = extract(r);
@@ -1456,6 +1682,11 @@ impl Server {
                 continue;
             }
             let (output, output_words) = wrap(slice);
+            let trace = traces.take(r.id).map(|mut t| {
+                t.mark(Stage::Respond);
+                t.record_into(&self.metrics);
+                t
+            });
             let resp = Response {
                 id: r.id,
                 output,
@@ -1465,6 +1696,7 @@ impl Server {
                 batch_size: valid.len(),
                 error: None,
                 code: None,
+                trace,
             };
             tx.send(resp).map_err(|_| ())?;
         }
@@ -1507,8 +1739,7 @@ pub fn spawn_with_options(
         } else {
             srv.run(req_rx, resp_tx);
         }
-        let stats = srv.stats.lock().unwrap();
-        stats.clone()
+        srv.stats()
     });
     (req_tx, resp_rx, handle, server)
 }
@@ -1619,7 +1850,7 @@ mod tests {
         let server = Server::new(&cfg, Arc::new(NaiveExecutor));
         assert!(server.route(64, 40, 24).is_some());
         assert!(server.route(64, 40, 24).is_some());
-        let st = server.stats.lock().unwrap();
+        let st = server.stats();
         assert_eq!(st.mapper_cache_misses, 1);
         assert_eq!(st.mapper_cache_hits, 1);
     }
@@ -1649,7 +1880,7 @@ mod tests {
         });
         assert!(decisions.iter().all(|d| d.is_some()));
         assert!(decisions.windows(2).all(|w| w[0] == w[1]), "identical decisions");
-        let st = server.stats.lock().unwrap();
+        let st = server.stats();
         assert_eq!(st.mapper_cache_misses, 1, "mapper ran once");
         assert_eq!(st.mapper_cache_hits, n_threads - 1);
     }
@@ -1665,7 +1896,7 @@ mod tests {
         let server = Server::new(&cfg, Arc::new(NaiveExecutor));
         assert!(server.route(1 << 20, 1 << 12, 1 << 12).is_none());
         assert!(server.route(1 << 20, 1 << 12, 1 << 12).is_none());
-        let st = server.stats.lock().unwrap();
+        let st = server.stats();
         assert_eq!(st.mapper_cache_misses, 1);
         assert_eq!(st.mapper_cache_hits, 1);
     }
@@ -1796,7 +2027,7 @@ mod tests {
         assert!(server.register_chain(&chain, vec![]).is_err());
         // Wrong size.
         assert!(server.register_chain(&chain, vec![vec![0.0; 7]]).is_err());
-        assert_eq!(server.stats.lock().unwrap().program_compiles, 0);
+        assert_eq!(server.stats().program_compiles, 0);
     }
 
     #[test]
@@ -1986,7 +2217,7 @@ mod tests {
         assert!(server
             .register_chain_elem(&chain, vec![vec![0; 7]], ElemType::BabyBear)
             .is_err());
-        assert_eq!(server.stats.lock().unwrap().program_compiles, 0);
+        assert_eq!(server.stats().program_compiles, 0);
     }
 
     /// An executor that panics when the first input element carries a
@@ -2157,7 +2388,7 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("compiled for 4x8"), "{err}");
-        assert_eq!(server.stats.lock().unwrap().artifact_loads, 0);
+        assert_eq!(server.stats().artifact_loads, 0);
         assert!(server.sessions.read().unwrap().is_empty());
     }
 
@@ -2348,6 +2579,81 @@ mod tests {
         assert!(server.claim_open(&bk, &ob).is_none(), "claim is exactly-once");
         // After the claim the batch is closed to new arrivals.
         assert!(server.try_inject(req(3, 2, 8, 4, 3, &w)).is_some());
-        assert_eq!(server.stats.lock().unwrap().injected, 1);
+        assert_eq!(server.stats().injected, 1);
+    }
+
+    /// Tracing on: sampled responses carry a complete, monotonically
+    /// ordered stage timeline and the registry grows per-stage histograms;
+    /// `sample_every` thins which requests are traced.
+    #[test]
+    fn tracing_records_complete_stage_timelines() {
+        let cfg = ArchConfig::paper(4, 4);
+        let opts = ServerOptions { tracing: TraceOptions::all(), ..Default::default() };
+        let (tx, rx, h, server) = spawn_with_options(&cfg, Arc::new(NaiveExecutor), opts);
+        let w = shared_weight(8, 4);
+        for i in 0..3 {
+            tx.send(req(i, 2, 8, 4, i, &w)).unwrap();
+        }
+        for _ in 0..3 {
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+            let t = r.trace.expect("sample_every=1 traces every request");
+            assert!(t.is_complete(), "stages {:?}", t.stages());
+            assert!(t.is_monotonic());
+            assert!(t.total_us() >= 0.0);
+        }
+        let snap = server.metrics_snapshot(1000.0);
+        // Arrival opens the timeline (no duration); every later stage has
+        // a delta histogram.
+        for stage in &Stage::ALL[1..] {
+            let name = format!("serve_stage_{}_us", stage.name());
+            let hist = snap.histogram(&name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(hist.count, 3, "{name}");
+        }
+        assert_eq!(snap.histogram("serve_request_us").unwrap().count, 3);
+        assert_eq!(snap.counter("serve_served_total"), Some(3));
+        assert!(snap.gauge("fleet_dev0_busy_us").is_some(), "fleet gauges folded in");
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    /// Tracing off (the default): responses carry no trace and the
+    /// registry records no span histograms — the serving path is counter
+    /// increments only.
+    #[test]
+    fn tracing_disabled_leaves_no_span_histograms() {
+        let cfg = ArchConfig::paper(4, 4);
+        let (tx, rx, h, server) = spawn(&cfg, Arc::new(NaiveExecutor));
+        let w = shared_weight(8, 4);
+        tx.send(req(0, 2, 8, 4, 0, &w)).unwrap();
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(r.trace.is_none(), "untraced by default");
+        let snap = server.metrics().snapshot();
+        assert!(snap.histograms.is_empty(), "no span histograms when tracing is off");
+        assert_eq!(snap.counter("serve_served_total"), Some(1));
+        drop(tx);
+        h.join().unwrap();
+    }
+
+    /// `sample_every` traces only every Nth arrival.
+    #[test]
+    fn trace_sampling_thins_traced_requests() {
+        let cfg = ArchConfig::paper(4, 4);
+        let opts = ServerOptions {
+            tracing: TraceOptions { enabled: true, sample_every: 2 },
+            ..Default::default()
+        };
+        let (tx, rx, h, _server) = spawn_with_options(&cfg, Arc::new(NaiveExecutor), opts);
+        let w = shared_weight(8, 4);
+        for i in 0..4 {
+            tx.send(req(i, 2, 8, 4, i, &w)).unwrap();
+            // Serialize arrivals so the sampling sequence is deterministic.
+            let r = rx.recv().unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert_eq!(r.trace.is_some(), i % 2 == 0, "arrival {i}");
+        }
+        drop(tx);
+        h.join().unwrap();
     }
 }

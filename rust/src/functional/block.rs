@@ -117,6 +117,14 @@ impl<E: Element> BlockSim<E> {
         self.lanes.iter().map(|l| l.plan_compiles).sum()
     }
 
+    /// NEST waves issued so far, summed over lanes. The fleet's telemetry
+    /// reads this before/after each execution to charge the wave delta to
+    /// the owning device (`DeviceStats::waves`) — cheaper than a full
+    /// [`Self::stats`] roll-up on that per-dispatch path.
+    pub fn waves(&self) -> u64 {
+        self.lanes.iter().map(|l| l.stats.waves).sum()
+    }
+
     /// Execution statistics summed over all lanes — equals the stats a
     /// single sequential simulator would accumulate over the same chunks.
     pub fn stats(&self) -> SimStats {

@@ -23,6 +23,7 @@ pub mod util;
 pub mod workloads;
 pub mod mapper;
 pub mod microinst;
+pub mod obs;
 pub mod program;
 pub mod perf;
 pub mod baselines;

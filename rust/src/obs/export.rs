@@ -1,0 +1,195 @@
+//! Snapshot exporters — Prometheus text exposition and the JSON snapshot
+//! document (§Observability tentpole; formats in `docs/OBSERVABILITY.md`).
+//!
+//! Both render a [`Snapshot`], never the live registry: exporting is
+//! read-only and costs the hot path nothing. JSON is hand-rolled on the
+//! same helpers as `BenchLog` (no serde in the dependency-free crate) and
+//! is what `--metrics-out` writes and `tools/check_metrics.py` validates.
+
+use crate::util::bench::{json_escape, json_num};
+
+use super::registry::{bucket_hi, HistogramSnapshot, Snapshot};
+
+/// Version tag of the JSON snapshot document, bumped on breaking layout
+/// changes (`tools/metrics_schema.json` pins it).
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// Prometheus text exposition format: counters and gauges as single
+/// samples, histograms as cumulative `_bucket{le=...}` series plus
+/// `_sum`/`_count`/`_min`/`_max` companions.
+pub fn prometheus(s: &Snapshot) -> String {
+    let mut out = String::new();
+    for (name, v) in &s.counters {
+        let name = sanitize(name);
+        out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+    }
+    for (name, v) in &s.gauges {
+        let name = sanitize(name);
+        out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+    }
+    for (name, h) in &s.histograms {
+        let name = sanitize(name);
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        let mut cum = 0u64;
+        for &(i, n) in &h.buckets {
+            cum += n;
+            let hi = bucket_hi(i);
+            if hi.is_finite() {
+                out.push_str(&format!("{name}_bucket{{le=\"{hi}\"}} {cum}\n"));
+            }
+        }
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+        out.push_str(&format!("{name}_sum {}\n", h.sum));
+        out.push_str(&format!("{name}_count {}\n", h.count));
+        if h.count > 0 {
+            out.push_str(&format!("{name}_min {}\n{name}_max {}\n", h.min, h.max));
+        }
+    }
+    out
+}
+
+/// JSON snapshot document:
+///
+/// ```json
+/// {
+///   "schema": 1,
+///   "counters": {"serve_served_total": 12, ...},
+///   "gauges": {"fleet_dev0_busy_us": 812.5, ...},
+///   "histograms": {
+///     "serve_stage_execute_us": {
+///       "count": 12, "sum": 4096.0, "min": 80.1, "max": 912.0,
+///       "p50": 210.2, "p99": 899.0, "p999": 910.0,
+///       "buckets": [[64.0, 3], [76.1, 9]]
+///     }
+///   }
+/// }
+/// ```
+///
+/// Bucket entries are `[inclusive lower bound, count]` pairs for
+/// non-empty buckets, sorted ascending. Percentiles are precomputed from
+/// the buckets (clamped to `[min, max]`) so stdlib-only consumers don't
+/// reimplement the quantile walk.
+pub fn json(s: &Snapshot) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"schema\": {SNAPSHOT_VERSION},\n"));
+    out.push_str("  \"counters\": {");
+    push_entries(&mut out, &s.counters, |v| v.to_string());
+    out.push_str("  },\n  \"gauges\": {");
+    push_entries(&mut out, &s.gauges, |v| json_num(*v));
+    out.push_str("  },\n  \"histograms\": {");
+    push_entries(&mut out, &s.histograms, histogram_json);
+    out.push_str("  }\n}\n");
+    out
+}
+
+/// Render a `name: value` map body with the shared layout (newline per
+/// entry, two-space indent, no trailing comma).
+fn push_entries<V>(out: &mut String, entries: &[(String, V)], render: impl Fn(&V) -> String) {
+    for (i, (name, v)) in entries.iter().enumerate() {
+        let sep = if i + 1 == entries.len() { "" } else { "," };
+        out.push_str(&format!("\n    \"{}\": {}{sep}", json_escape(name), render(v)));
+    }
+    if !entries.is_empty() {
+        out.push('\n');
+    }
+}
+
+fn histogram_json(h: &HistogramSnapshot) -> String {
+    let buckets: Vec<String> = h
+        .buckets
+        .iter()
+        .map(|&(i, n)| format!("[{}, {n}]", json_num(super::registry::bucket_lo(i))))
+        .collect();
+    format!(
+        "{{\"count\": {}, \"sum\": {}, \"min\": {}, \"max\": {}, \
+         \"p50\": {}, \"p99\": {}, \"p999\": {}, \"buckets\": [{}]}}",
+        h.count,
+        json_num(h.sum),
+        json_num(h.min),
+        json_num(h.max),
+        json_num(h.percentile(50.0)),
+        json_num(h.percentile(99.0)),
+        json_num(h.percentile(99.9)),
+        buckets.join(", "),
+    )
+}
+
+/// Prometheus metric names: `[a-zA-Z0-9_:]`, no leading digit.
+fn sanitize(name: &str) -> String {
+    let mut s: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect();
+    if s.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        s.insert(0, '_');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry::MetricsRegistry;
+    use super::*;
+
+    fn sample_snapshot() -> Snapshot {
+        let r = MetricsRegistry::new();
+        r.counter("serve_served_total").add(7);
+        r.gauge("fleet_dev0_busy_us").set(12.5);
+        let h = r.histogram("serve_stage_execute_us");
+        for v in [10.0, 20.0, 400.0] {
+            h.record(v);
+        }
+        r.snapshot()
+    }
+
+    #[test]
+    fn prometheus_renders_all_families() {
+        let text = prometheus(&sample_snapshot());
+        assert!(text.contains("# TYPE serve_served_total counter"), "{text}");
+        assert!(text.contains("serve_served_total 7"), "{text}");
+        assert!(text.contains("# TYPE fleet_dev0_busy_us gauge"), "{text}");
+        assert!(text.contains("# TYPE serve_stage_execute_us histogram"), "{text}");
+        assert!(text.contains("serve_stage_execute_us_bucket{le=\"+Inf\"} 3"), "{text}");
+        assert!(text.contains("serve_stage_execute_us_count 3"), "{text}");
+        // Cumulative bucket counts are non-decreasing.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket{")) {
+            let n: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(n >= last, "{line}");
+            last = n;
+        }
+    }
+
+    #[test]
+    fn json_document_is_parseable_shape() {
+        let doc = json(&sample_snapshot());
+        assert!(doc.contains("\"schema\": 1"), "{doc}");
+        assert!(doc.contains("\"serve_served_total\": 7"), "{doc}");
+        assert!(doc.contains("\"fleet_dev0_busy_us\": 12.5"), "{doc}");
+        assert!(doc.contains("\"p99\":"), "{doc}");
+        assert!(doc.contains("\"buckets\": [["), "{doc}");
+        // Balanced braces/brackets — the structural sanity a hand-rolled
+        // emitter can get wrong.
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count(), "{doc}");
+        assert_eq!(doc.matches('[').count(), doc.matches(']').count(), "{doc}");
+        // No trailing commas before a closing brace.
+        assert!(!doc.contains(",\n  }"), "{doc}");
+        assert!(!doc.contains(",]"), "{doc}");
+    }
+
+    #[test]
+    fn empty_snapshot_exports_cleanly() {
+        let s = Snapshot::default();
+        assert_eq!(prometheus(&s), "");
+        let doc = json(&s);
+        assert!(doc.contains("\"counters\": {"), "{doc}");
+        assert_eq!(doc.matches('{').count(), doc.matches('}').count(), "{doc}");
+    }
+
+    #[test]
+    fn sanitize_prometheus_names() {
+        assert_eq!(sanitize("a-b.c"), "a_b_c");
+        assert_eq!(sanitize("0abc"), "_0abc");
+        assert_eq!(sanitize("ok_name:sub"), "ok_name:sub");
+    }
+}

@@ -1,0 +1,56 @@
+//! Unified telemetry layer (§Observability tentpole, `docs/OBSERVABILITY.md`).
+//!
+//! One instrumentation surface across the serving stack:
+//!
+//! - [`registry`] — lock-light [`MetricsRegistry`] of named atomic
+//!   [`Counter`]s, [`Gauge`]s and log-scale [`Histogram`]s. Handles are
+//!   `Arc`s around plain atomics: fetch once, cache, one relaxed RMW per
+//!   event on the hot path.
+//! - [`span`] — per-request [`RequestTrace`] pipeline timelines (arrival →
+//!   admission → batch → dispatch → execute → stitch → respond), switched
+//!   and sampled by [`TraceOptions`] on `ServerOptions`.
+//! - [`export`] — Prometheus text and JSON snapshot renderers over a
+//!   point-in-time [`Snapshot`].
+//!
+//! Servers own their own `Arc<MetricsRegistry>` (so concurrent tests and
+//! fleets never share counters); [`global`] exists for process-wide
+//! consumers like the `metrics` CLI subcommand.
+
+pub mod export;
+pub mod registry;
+pub mod span;
+
+pub use export::SNAPSHOT_VERSION;
+pub use registry::{
+    Counter, Gauge, Histogram, HistogramSnapshot, MetricsRegistry, Snapshot, BUCKETS, OCTAVES,
+    SUB_BUCKETS,
+};
+pub use span::{RequestTrace, Stage, TraceOptions};
+
+use std::sync::OnceLock;
+
+/// Process-global registry for contexts without a natural owner (CLI
+/// one-shots). The serving stack deliberately does **not** use this — each
+/// `Server` carries its own registry.
+pub fn global() -> &'static MetricsRegistry {
+    static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+/// Point-in-time snapshot of the [`global`] registry.
+pub fn snapshot() -> Snapshot {
+    global().snapshot()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_registry_is_shared() {
+        let c = global().counter("obs_mod_test_total");
+        c.add(2);
+        global().counter("obs_mod_test_total").inc();
+        assert_eq!(snapshot().counter("obs_mod_test_total"), Some(3));
+    }
+}

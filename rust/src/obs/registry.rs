@@ -1,0 +1,525 @@
+//! Lock-light metrics registry — named atomic counters, gauges and
+//! fixed-bucket log-scale histograms (§Observability tentpole).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Hot-path cost**: one relaxed atomic RMW per event. Handles
+//!    ([`Counter`], [`Gauge`], [`Histogram`]) are `Arc`s around plain
+//!    atomics; holders fetch them **once** at registration time and cache
+//!    them, so the registry's name maps are never touched on the serving
+//!    hot path.
+//! 2. **Std-only**: no external metric crates; histograms are fixed-size
+//!    atomic bucket arrays, no allocation after creation.
+//! 3. **Exact under concurrency**: every field is a monotone counter or a
+//!    commutative min/max, so N threads incrementing concurrently sum
+//!    exactly (proven by `tests/telemetry.rs`).
+//!
+//! Entries are created lazily on first request — a registry nobody
+//! recorded into snapshots empty, which is what the tracing-disabled
+//! serving test asserts.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+/// Sub-buckets per power of two. 8 keeps the worst-case quantile
+/// quantization under `2^(1/8) − 1 ≈ 9.1%` of the value, tight enough that
+/// histogram-derived p99s stay faithful for the serving latency gates.
+pub const SUB_BUCKETS: usize = 8;
+/// Octaves covered above 1.0: values up to `2^40` (≈ 1.1e12 — 12 days in
+/// microseconds) land in a finite bucket.
+pub const OCTAVES: usize = 40;
+/// Total bucket count: one underflow bucket `[0, 1)`, `SUB_BUCKETS` per
+/// octave, one overflow bucket `[2^OCTAVES, ∞)`.
+pub const BUCKETS: usize = SUB_BUCKETS * OCTAVES + 2;
+
+/// Monotone event counter. Cloning shares the underlying atomic.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One event: a single relaxed atomic add.
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Last-write or running-max gauge over **non-negative** f64 values,
+/// stored as IEEE-754 bits (the bit pattern of non-negative floats is
+/// order-isomorphic to `u64`, so `fetch_max` on the bits is a float max).
+#[derive(Debug, Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge(Arc::new(AtomicU64::new(0f64.to_bits())))
+    }
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Overwrite the gauge. Negative or NaN values clamp to 0 (the bit
+    /// trick requires non-negative payloads).
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(sanitize(v).to_bits(), Relaxed);
+    }
+
+    /// Running maximum: one relaxed `fetch_max`.
+    #[inline]
+    pub fn set_max(&self, v: f64) {
+        self.0.fetch_max(sanitize(v).to_bits(), Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Relaxed))
+    }
+}
+
+/// Clamp histogram/gauge inputs into the representable domain.
+#[inline]
+fn sanitize(v: f64) -> f64 {
+    if v.is_finite() && v >= 0.0 {
+        v
+    } else if v == f64::INFINITY {
+        f64::MAX
+    } else {
+        0.0
+    }
+}
+
+/// Bucket index for a value: `[0,1)` → 0, then `SUB_BUCKETS` buckets per
+/// octave, everything at or above `2^OCTAVES` in the final bucket.
+#[inline]
+pub fn bucket_index(v: f64) -> usize {
+    let v = sanitize(v);
+    if v < 1.0 {
+        return 0;
+    }
+    let i = (v.log2() * SUB_BUCKETS as f64).floor() as usize + 1;
+    i.min(BUCKETS - 1)
+}
+
+/// Inclusive lower bound of bucket `i`.
+pub fn bucket_lo(i: usize) -> f64 {
+    if i == 0 {
+        0.0
+    } else {
+        2f64.powf((i - 1) as f64 / SUB_BUCKETS as f64)
+    }
+}
+
+/// Exclusive upper bound of bucket `i` (`∞` for the overflow bucket).
+pub fn bucket_hi(i: usize) -> f64 {
+    if i + 1 >= BUCKETS {
+        f64::INFINITY
+    } else {
+        2f64.powf(i as f64 / SUB_BUCKETS as f64)
+    }
+}
+
+struct HistogramInner {
+    count: AtomicU64,
+    /// Sum in thousandths of a unit (integer so a relaxed add suffices;
+    /// nanosecond resolution when the unit is microseconds).
+    sum_milli: AtomicU64,
+    /// Min/max as f64 bits (same trick as [`Gauge`]).
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+    buckets: Vec<AtomicU64>,
+}
+
+/// Fixed-bucket log-scale histogram. Unit-agnostic; the serving layer
+/// records microseconds. Quantiles interpolate within the containing
+/// bucket and clamp to the observed `[min, max]`, so a reported p99 never
+/// exceeds the largest value actually recorded.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramInner>);
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram")
+            .field("count", &self.count())
+            .field("sum", &self.sum())
+            .finish()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        let mut buckets = Vec::with_capacity(BUCKETS);
+        buckets.resize_with(BUCKETS, AtomicU64::default);
+        Histogram(Arc::new(HistogramInner {
+            count: AtomicU64::new(0),
+            sum_milli: AtomicU64::new(0),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(0f64.to_bits()),
+            buckets,
+        }))
+    }
+
+    /// Record one observation: a handful of relaxed atomic RMWs, no locks,
+    /// no allocation. NaN/negative values clamp to 0.
+    pub fn record(&self, v: f64) {
+        let v = sanitize(v);
+        let h = &*self.0;
+        h.count.fetch_add(1, Relaxed);
+        h.sum_milli.fetch_add((v * 1e3) as u64, Relaxed);
+        h.min_bits.fetch_min(v.to_bits(), Relaxed);
+        h.max_bits.fetch_max(v.to_bits(), Relaxed);
+        h.buckets[bucket_index(v)].fetch_add(1, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.0.sum_milli.load(Relaxed) as f64 / 1e3
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        self.sum() / n as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count() == 0 {
+            return f64::NAN;
+        }
+        f64::from_bits(self.0.min_bits.load(Relaxed))
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count() == 0 {
+            return f64::NAN;
+        }
+        f64::from_bits(self.0.max_bits.load(Relaxed))
+    }
+
+    /// Estimated percentile, `p` in `[0, 100]` (the shared implementation
+    /// behind every serving percentile — loadgen's per-class p50/p99/p999
+    /// included). `NaN` on an empty histogram.
+    pub fn percentile(&self, p: f64) -> f64 {
+        self.snapshot().percentile(p)
+    }
+
+    /// Consistent-enough point-in-time copy (relaxed loads; concurrent
+    /// writers may land between field reads, which is fine for reporting).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let h = &*self.0;
+        let count = h.count.load(Relaxed);
+        let buckets: Vec<(usize, u64)> = h
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let n = b.load(Relaxed);
+                (n > 0).then_some((i, n))
+            })
+            .collect();
+        HistogramSnapshot {
+            count,
+            sum: h.sum_milli.load(Relaxed) as f64 / 1e3,
+            min: if count == 0 { f64::NAN } else { f64::from_bits(h.min_bits.load(Relaxed)) },
+            max: if count == 0 { f64::NAN } else { f64::from_bits(h.max_bits.load(Relaxed)) },
+            buckets,
+        }
+    }
+}
+
+/// Point-in-time histogram state: non-empty `(bucket index, count)` pairs
+/// plus the scalar aggregates.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    pub buckets: Vec<(usize, u64)>,
+}
+
+impl HistogramSnapshot {
+    /// Percentile estimate: walk the cumulative bucket counts to the rank,
+    /// interpolate linearly within the containing bucket, clamp to the
+    /// observed `[min, max]`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = (p.clamp(0.0, 100.0) / 100.0) * self.count as f64;
+        let mut cum = 0u64;
+        for &(i, n) in &self.buckets {
+            let next = cum + n;
+            if (next as f64) >= target {
+                let lo = bucket_lo(i);
+                let hi = bucket_hi(i);
+                let frac = if n == 0 { 0.0 } else { (target - cum as f64) / n as f64 };
+                let v = if hi.is_finite() { lo + (hi - lo) * frac } else { lo };
+                return v.clamp(self.min, self.max);
+            }
+            cum = next;
+        }
+        self.max
+    }
+}
+
+/// A named collection of metrics. Name → handle resolution takes a short
+/// mutex (registration is cold); the returned handles are lock-free.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Counter>>,
+    gauges: Mutex<BTreeMap<String, Gauge>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl std::fmt::Debug for MetricsRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.snapshot();
+        f.debug_struct("MetricsRegistry")
+            .field("counters", &s.counters.len())
+            .field("gauges", &s.gauges.len())
+            .field("histograms", &s.histograms.len())
+            .finish()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-create the named counter. Fetch once and cache the handle.
+    pub fn counter(&self, name: &str) -> Counter {
+        self.counters.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        self.gauges.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Histogram {
+        self.histograms.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    /// Names currently registered in each family (sorted).
+    pub fn histogram_names(&self) -> Vec<String> {
+        self.histograms.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Point-in-time copy of every entry, sorted by name per family.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            counters: self
+                .counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            gauges: self
+                .gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            histograms: self
+                .histograms
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+        }
+    }
+}
+
+/// Point-in-time copy of a whole registry — the unit both exporters
+/// ([`crate::obs::export`]) consume.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+}
+
+impl Snapshot {
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.counters.len() + self.gauges.len() + self.histograms.len()
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.histograms.iter().find(|(k, _)| k == name).map(|(_, v)| v)
+    }
+
+    /// JSON snapshot document (`docs/OBSERVABILITY.md` §Export formats).
+    pub fn to_json(&self) -> String {
+        super::export::json(self)
+    }
+
+    /// Prometheus text exposition format.
+    pub fn to_prometheus(&self) -> String {
+        super::export::prometheus(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let r = MetricsRegistry::new();
+        assert!(r.snapshot().is_empty(), "fresh registry must be empty");
+        let c = r.counter("requests_total");
+        c.inc();
+        c.add(4);
+        // Same name → same underlying atomic.
+        assert_eq!(r.counter("requests_total").get(), 5);
+        let g = r.gauge("batch_max");
+        g.set_max(3.0);
+        g.set_max(1.0);
+        assert_eq!(g.get(), 3.0);
+        g.set(2.5);
+        assert_eq!(r.gauge("batch_max").get(), 2.5);
+        let s = r.snapshot();
+        assert_eq!(s.counter("requests_total"), Some(5));
+        assert_eq!(s.gauge("batch_max"), Some(2.5));
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn gauge_clamps_negative_and_nan() {
+        let g = Gauge::new();
+        g.set(-3.0);
+        assert_eq!(g.get(), 0.0);
+        g.set(f64::NAN);
+        assert_eq!(g.get(), 0.0);
+        g.set_max(f64::INFINITY);
+        assert_eq!(g.get(), f64::MAX);
+    }
+
+    #[test]
+    fn bucket_bounds_partition_the_axis() {
+        // Every bucket's hi is the next bucket's lo, lo is monotone, and
+        // bucket_index lands each bound in its own bucket.
+        for i in 0..BUCKETS - 1 {
+            assert!(bucket_lo(i) < bucket_hi(i), "bucket {i}");
+            assert!((bucket_hi(i) - bucket_lo(i + 1)).abs() < 1e-9 * bucket_hi(i).max(1.0));
+        }
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(0.5), 0);
+        assert_eq!(bucket_index(1.0), 1);
+        assert_eq!(bucket_index(f64::NAN), 0);
+        assert_eq!(bucket_index(f64::MAX), BUCKETS - 1);
+        for v in [1.0, 2.0, 3.7, 100.0, 1e6, 3.3e9] {
+            let i = bucket_index(v);
+            assert!(bucket_lo(i) <= v && v < bucket_hi(i), "{v} in bucket {i}");
+        }
+    }
+
+    #[test]
+    fn histogram_aggregates_and_quantiles() {
+        let h = Histogram::new();
+        assert!(h.percentile(50.0).is_nan());
+        assert!(h.min().is_nan() && h.max().is_nan());
+        for v in [10.0, 20.0, 30.0, 40.0, 1000.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 1100.0).abs() < 0.01, "{}", h.sum());
+        assert_eq!(h.min(), 10.0);
+        assert_eq!(h.max(), 1000.0);
+        // p100 clamps to the observed max exactly.
+        assert_eq!(h.percentile(100.0), 1000.0);
+        // p50 lands within one bucket width (≤ ~9.1%) of a middle sample.
+        let p50 = h.percentile(50.0);
+        assert!((18.0..=33.0).contains(&p50), "{p50}");
+        // Quantiles never leave the observed range.
+        assert!(h.percentile(0.0) >= 10.0);
+        assert!(h.percentile(99.9) <= 1000.0);
+    }
+
+    #[test]
+    fn histogram_quantile_error_is_bounded() {
+        // Uniform samples: every estimated percentile stays within one
+        // sub-bucket ratio (9.1%) of the exact order statistic.
+        let h = Histogram::new();
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        for &v in &xs {
+            h.record(v);
+        }
+        for p in [10.0, 50.0, 90.0, 99.0, 99.9] {
+            let exact = crate::util::percentile(&xs, p);
+            let est = h.percentile(p);
+            let err = (est - exact).abs() / exact;
+            assert!(err <= 0.10, "p{p}: exact {exact} est {est} err {err}");
+        }
+    }
+
+    #[test]
+    fn histogram_clamps_pathological_inputs() {
+        let h = Histogram::new();
+        h.record(f64::NAN);
+        h.record(-5.0);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 3);
+        assert!(h.percentile(50.0).is_finite());
+    }
+
+    #[test]
+    fn snapshot_roundtrips_buckets() {
+        let h = Histogram::new();
+        for v in [1.5, 1.6, 300.0] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 3);
+        let total: u64 = s.buckets.iter().map(|&(_, n)| n).sum();
+        assert_eq!(total, 3, "bucket counts must sum to the event count");
+        // Buckets arrive sorted by index (BTree iteration order upstream,
+        // enumerate order here).
+        for w in s.buckets.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Per-request tracing — the serving pipeline timeline (§Observability
+//! tentpole).
+//!
+//! A sampled request carries a [`RequestTrace`]: an arrival origin plus a
+//! monotone list of [`Stage`] marks recorded at every pipeline hand-off
+//! (arrival → admission verdict → batch formation → fleet dispatch →
+//! execute → stitch → respond). Marks are `Instant`s only — tracing never
+//! touches the computation, so traced and untraced serving results are
+//! bit-identical by construction (`tests/telemetry.rs` proves it).
+//!
+//! At respond time the per-stage deltas are folded into the registry's
+//! `serve_stage_*_us` histograms ([`RequestTrace::record_into`]); untraced
+//! requests skip all of this and pay only the counter adds.
+
+use std::time::Instant;
+
+use super::registry::MetricsRegistry;
+
+/// Serving pipeline stages, in hand-off order. Each mark names the stage
+/// that **just completed**: `Admission` is stamped when the admission
+/// verdict lands, `Execute` when the executor returns, and so on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Stage {
+    /// Request received by the serving leader.
+    Arrival,
+    /// Admission verdict (admit / shed / expired) decided.
+    Admission,
+    /// Batch membership decided (batch formed or injected into an open
+    /// batch).
+    Batch,
+    /// A fleet device claimed the batch (single-device mode: dispatch
+    /// entry).
+    Dispatch,
+    /// Executor finished (all shards stitched at the fleet layer).
+    Execute,
+    /// Outputs sliced per request and the stitch-time deadline re-check
+    /// passed.
+    Stitch,
+    /// Response handed to the transport.
+    Respond,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 7] = [
+        Stage::Arrival,
+        Stage::Admission,
+        Stage::Batch,
+        Stage::Dispatch,
+        Stage::Execute,
+        Stage::Stitch,
+        Stage::Respond,
+    ];
+
+    /// Stable lowercase name (metric name component).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Arrival => "arrival",
+            Stage::Admission => "admission",
+            Stage::Batch => "batch",
+            Stage::Dispatch => "dispatch",
+            Stage::Execute => "execute",
+            Stage::Stitch => "stitch",
+            Stage::Respond => "respond",
+        }
+    }
+}
+
+/// Tracing switch carried on `ServerOptions` (must stay `Copy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceOptions {
+    /// Master switch; off means zero tracing work and zero span registry
+    /// entries.
+    pub enabled: bool,
+    /// Sample 1-in-N arrivals (1 = every request). 0 is treated as 1.
+    pub sample_every: u64,
+}
+
+impl Default for TraceOptions {
+    fn default() -> Self {
+        TraceOptions { enabled: false, sample_every: 1 }
+    }
+}
+
+impl TraceOptions {
+    /// All requests traced — what `loadgen` runs with.
+    pub fn all() -> Self {
+        TraceOptions { enabled: true, sample_every: 1 }
+    }
+
+    /// Should the `seq`-th arrival be traced?
+    pub fn sample(&self, seq: u64) -> bool {
+        self.enabled && seq % self.sample_every.max(1) == 0
+    }
+}
+
+/// One request's pipeline timeline: `(stage, mark)` pairs in the order
+/// the stages completed. Timestamps are monotone by construction
+/// (`Instant::now` is monotonic and marks are appended sequentially along
+/// the request's single ownership path).
+#[derive(Debug, Clone)]
+pub struct RequestTrace {
+    events: Vec<(Stage, Instant)>,
+}
+
+impl RequestTrace {
+    /// Start a trace, stamping [`Stage::Arrival`] now.
+    pub fn start() -> Self {
+        RequestTrace { events: vec![(Stage::Arrival, Instant::now())] }
+    }
+
+    /// Stamp `stage` as completed now. Idempotent per stage: a re-mark of
+    /// an already-stamped stage is ignored, so batch-level marks applied
+    /// to every member cannot double-count a request that was re-routed.
+    pub fn mark(&mut self, stage: Stage) {
+        if self.events.iter().any(|&(s, _)| s == stage) {
+            return;
+        }
+        self.events.push((stage, Instant::now()));
+    }
+
+    pub fn events(&self) -> &[(Stage, Instant)] {
+        &self.events
+    }
+
+    /// Stages stamped so far, in completion order.
+    pub fn stages(&self) -> Vec<Stage> {
+        self.events.iter().map(|&(s, _)| s).collect()
+    }
+
+    /// True when every stage of [`Stage::ALL`] is present, in pipeline
+    /// order, with non-decreasing timestamps.
+    pub fn is_complete(&self) -> bool {
+        self.events.len() == Stage::ALL.len()
+            && self.events.iter().map(|&(s, _)| s).eq(Stage::ALL)
+            && self.is_monotonic()
+    }
+
+    /// Timestamps never go backwards.
+    pub fn is_monotonic(&self) -> bool {
+        self.events.windows(2).all(|w| w[0].1 <= w[1].1)
+    }
+
+    /// Per-stage durations in µs: each stamped stage paired with the time
+    /// since the previous mark (the arrival mark opens the timeline and
+    /// carries no duration).
+    pub fn deltas_us(&self) -> Vec<(Stage, f64)> {
+        self.events
+            .windows(2)
+            .map(|w| (w[1].0, w[1].1.duration_since(w[0].1).as_secs_f64() * 1e6))
+            .collect()
+    }
+
+    /// End-to-end latency (arrival → last mark) in µs.
+    pub fn total_us(&self) -> f64 {
+        match (self.events.first(), self.events.last()) {
+            (Some(&(_, a)), Some(&(_, b))) => b.duration_since(a).as_secs_f64() * 1e6,
+            _ => 0.0,
+        }
+    }
+
+    /// Fold this timeline into the registry: one `serve_stage_<name>_us`
+    /// histogram sample per stamped stage plus the end-to-end
+    /// `serve_request_us`. Called once at respond time for traced
+    /// requests; these histograms are the only place span entries appear,
+    /// so a tracing-disabled server registers none of them.
+    pub fn record_into(&self, reg: &MetricsRegistry) {
+        for (stage, us) in self.deltas_us() {
+            reg.histogram(&format!("serve_stage_{}_us", stage.name())).record(us);
+        }
+        if self.events.len() > 1 {
+            reg.histogram("serve_request_us").record(self.total_us());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_respects_switch_and_rate() {
+        let off = TraceOptions::default();
+        assert!(!off.sample(0));
+        let all = TraceOptions::all();
+        assert!(all.sample(0) && all.sample(1) && all.sample(17));
+        let tenth = TraceOptions { enabled: true, sample_every: 10 };
+        let hits = (0..100u64).filter(|&i| tenth.sample(i)).count();
+        assert_eq!(hits, 10);
+        // 0 clamps to 1 rather than dividing by zero.
+        let zero = TraceOptions { enabled: true, sample_every: 0 };
+        assert!(zero.sample(5));
+    }
+
+    #[test]
+    fn full_timeline_is_complete_and_monotonic() {
+        let mut t = RequestTrace::start();
+        for s in &Stage::ALL[1..] {
+            t.mark(*s);
+        }
+        assert!(t.is_complete());
+        assert!(t.is_monotonic());
+        assert_eq!(t.stages(), Stage::ALL.to_vec());
+        assert_eq!(t.deltas_us().len(), Stage::ALL.len() - 1);
+        assert!(t.total_us() >= 0.0);
+    }
+
+    #[test]
+    fn re_marking_a_stage_is_idempotent() {
+        let mut t = RequestTrace::start();
+        t.mark(Stage::Admission);
+        t.mark(Stage::Admission);
+        t.mark(Stage::Batch);
+        t.mark(Stage::Batch);
+        assert_eq!(t.stages(), vec![Stage::Arrival, Stage::Admission, Stage::Batch]);
+        assert!(!t.is_complete());
+    }
+
+    #[test]
+    fn record_into_registers_one_histogram_per_stage() {
+        let reg = MetricsRegistry::new();
+        let mut t = RequestTrace::start();
+        for s in &Stage::ALL[1..] {
+            t.mark(*s);
+        }
+        t.record_into(&reg);
+        let s = reg.snapshot();
+        // Six stage deltas + the end-to-end histogram.
+        assert_eq!(s.histograms.len(), Stage::ALL.len());
+        for stage in &Stage::ALL[1..] {
+            let name = format!("serve_stage_{}_us", stage.name());
+            assert_eq!(s.histogram(&name).map(|h| h.count), Some(1), "{name}");
+        }
+        assert_eq!(s.histogram("serve_request_us").map(|h| h.count), Some(1));
+    }
+
+    #[test]
+    fn partial_timeline_records_partially() {
+        // A shed request never reaches Batch: only the stages it stamped
+        // land in the registry.
+        let reg = MetricsRegistry::new();
+        let mut t = RequestTrace::start();
+        t.mark(Stage::Admission);
+        t.mark(Stage::Respond);
+        t.record_into(&reg);
+        let s = reg.snapshot();
+        assert!(s.histogram("serve_stage_admission_us").is_some());
+        assert!(s.histogram("serve_stage_batch_us").is_none());
+        assert!(s.histogram("serve_stage_respond_us").is_some());
+    }
+}

@@ -182,6 +182,86 @@ pub fn with_micro_instructions(
         .collect()
 }
 
+/// Modeled compute vs instruction-fetch cycle accounting for work executed
+/// under both control regimes: the MINISA encoding actually served and its
+/// micro-instruction twin ([`with_micro_instructions`]). This is the unit
+/// the live stall accounting threads through the fleet — a `Program`
+/// carries one for its whole chain, each `Device` accumulates the share of
+/// it that its shards executed, and [`FleetReport`] rolls the fleet total
+/// back up into the paper's Table I stall breakdown (§Observability
+/// tentpole).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StallModel {
+    /// End-to-end modeled cycles under MINISA control.
+    pub minisa_total_cycles: f64,
+    /// Compute-engine busy cycles under MINISA control.
+    pub minisa_compute_cycles: f64,
+    /// Compute stall cycles attributed to instruction fetch under MINISA.
+    pub minisa_fetch_stall_cycles: f64,
+    /// End-to-end modeled cycles for the micro-instruction twin.
+    pub micro_total_cycles: f64,
+    /// Compute-engine busy cycles for the micro twin.
+    pub micro_compute_cycles: f64,
+    /// Fetch-stall cycles for the micro twin (the paper's 96.9% on 16×256).
+    pub micro_fetch_stall_cycles: f64,
+}
+
+impl StallModel {
+    /// Build from a MINISA report and its micro-twin report.
+    pub fn from_reports(minisa: &PerfReport, micro: &PerfReport) -> Self {
+        StallModel {
+            minisa_total_cycles: minisa.total_cycles,
+            minisa_compute_cycles: minisa.compute_cycles,
+            minisa_fetch_stall_cycles: minisa.stall_instr_cycles,
+            micro_total_cycles: micro.total_cycles,
+            micro_compute_cycles: micro.compute_cycles,
+            micro_fetch_stall_cycles: micro.stall_instr_cycles,
+        }
+    }
+
+    /// Fetch-stall fraction under MINISA control (≈ 0 when the ISA works).
+    pub fn minisa_stall_fraction(&self) -> f64 {
+        if self.minisa_total_cycles == 0.0 {
+            return 0.0;
+        }
+        self.minisa_fetch_stall_cycles / self.minisa_total_cycles
+    }
+
+    /// Fetch-stall fraction of the micro-instruction baseline (the paper's
+    /// 96.9% headline on 16×256).
+    pub fn micro_stall_fraction(&self) -> f64 {
+        if self.micro_total_cycles == 0.0 {
+            return 0.0;
+        }
+        self.micro_fetch_stall_cycles / self.micro_total_cycles
+    }
+
+    /// Modeled end-to-end speedup of MINISA over the micro baseline
+    /// (control-overhead elimination). 0 when nothing was accumulated.
+    pub fn control_speedup(&self) -> f64 {
+        if self.minisa_total_cycles == 0.0 {
+            return 0.0;
+        }
+        self.micro_total_cycles / self.minisa_total_cycles
+    }
+
+    /// True once any work has been accumulated.
+    pub fn is_populated(&self) -> bool {
+        self.minisa_total_cycles > 0.0 || self.micro_total_cycles > 0.0
+    }
+
+    /// Accumulate `frac` of `other` (a shard that executed `frac` of a
+    /// program's rows charges that share of the program's modeled cycles).
+    pub fn absorb_scaled(&mut self, other: &StallModel, frac: f64) {
+        self.minisa_total_cycles += other.minisa_total_cycles * frac;
+        self.minisa_compute_cycles += other.minisa_compute_cycles * frac;
+        self.minisa_fetch_stall_cycles += other.minisa_fetch_stall_cycles * frac;
+        self.micro_total_cycles += other.micro_total_cycles * frac;
+        self.micro_compute_cycles += other.micro_compute_cycles * frac;
+        self.micro_fetch_stall_cycles += other.micro_fetch_stall_cycles * frac;
+    }
+}
+
 /// One device's share of a fleet observation window — the per-device row of
 /// [`FleetReport`]. Times are in the window's unit: wall-clock µs on the
 /// serving path (where devices are simulated and the window is real time),
@@ -216,6 +296,13 @@ pub struct DeviceLoad {
     /// Wave plans compiled at runtime by this device's simulators — stays 0
     /// when every executed program was compiled ahead of time.
     pub plan_compiles: u64,
+    /// NEST waves actually issued by this device's functional simulators.
+    pub waves: u64,
+    /// Modeled compute vs fetch-stall cycles for the shards this device
+    /// executed, under MINISA and the micro baseline (live stall
+    /// accounting; zero when the executed work carried no perf decision,
+    /// e.g. raw GEMM dispatch).
+    pub modeled: StallModel,
     /// Device has dropped out (failure injection).
     pub failed: bool,
 }
@@ -260,6 +347,17 @@ impl FleetReport {
     /// Health-probe recoveries summed over devices.
     pub fn recoveries(&self) -> u64 {
         self.devices.iter().map(|d| d.recoveries).sum()
+    }
+
+    /// Fleet-total modeled stall accounting: every device's accumulated
+    /// [`StallModel`] summed. `micro_stall_fraction()` of this roll-up is
+    /// the paper's Table I stall number measured at fleet scale.
+    pub fn modeled(&self) -> StallModel {
+        let mut m = StallModel::default();
+        for d in &self.devices {
+            m.absorb_scaled(&d.modeled, 1.0);
+        }
+        m
     }
 
     /// Mean queue time of stolen jobs (µs): the steal-latency headline.
@@ -337,6 +435,31 @@ impl FleetReport {
             self.retries(),
             self.steal_wait_mean_us(),
         ));
+        if self.devices.iter().any(|d| d.modeled.is_populated()) {
+            s.push_str(
+                "\nstall: device   minisa-compute  minisa-fetch-stall   micro-compute   micro-fetch-stall  micro-stall%  ctrl-speedup\n",
+            );
+            for d in &self.devices {
+                let m = &d.modeled;
+                s.push_str(&format!(
+                    "stall: dev{:<4} {:>15.0} {:>19.0} {:>15.0} {:>19.0} {:>12.1} {:>13.1}\n",
+                    d.device,
+                    m.minisa_compute_cycles,
+                    m.minisa_fetch_stall_cycles,
+                    m.micro_compute_cycles,
+                    m.micro_fetch_stall_cycles,
+                    m.micro_stall_fraction() * 100.0,
+                    m.control_speedup(),
+                ));
+            }
+            let m = self.modeled();
+            s.push_str(&format!(
+                "stall: fleet micro-baseline fetch-stall {:.1}% of cycles (MINISA {:.1}%), control speedup {:.1}x",
+                m.micro_stall_fraction() * 100.0,
+                m.minisa_stall_fraction() * 100.0,
+                m.control_speedup(),
+            ));
+        }
         s
     }
 }
@@ -456,6 +579,82 @@ mod tests {
         assert_eq!(rep.total_cycles, 0.0);
         assert_eq!(rep.utilization(), 0.0);
         assert_eq!(rep.instr_stall_fraction(), 0.0);
+    }
+
+    #[test]
+    fn stall_model_reproduces_paper_breakdown_on_paper_config() {
+        // Satellite: on the paper-sized 16×256 array, the micro-control
+        // baseline's modeled fetch-stall fraction exceeds 0.9 while the
+        // MINISA encoding's stays negligible — the Table I headline as a
+        // StallModel, the unit the fleet accounting accumulates.
+        let cfg = ArchConfig::paper(16, 256);
+        let tiles =
+            vec![TilePlan { compute_cycles: 16 * 1024, ..Default::default() }; 64];
+        let minisa = simulate(&cfg, &tiles);
+        let micro = simulate(&cfg, &with_micro_instructions(&cfg, &tiles, 16));
+        let m = StallModel::from_reports(&minisa, &micro);
+        assert!(m.micro_stall_fraction() > 0.9, "{}", m.micro_stall_fraction());
+        assert!(m.minisa_stall_fraction() < 0.05, "{}", m.minisa_stall_fraction());
+        assert!(m.control_speedup() > 2.0, "{}", m.control_speedup());
+        assert!(m.is_populated());
+    }
+
+    #[test]
+    fn stall_model_scaled_absorption_is_linear() {
+        let unit = StallModel {
+            minisa_total_cycles: 100.0,
+            minisa_compute_cycles: 90.0,
+            minisa_fetch_stall_cycles: 5.0,
+            micro_total_cycles: 1000.0,
+            micro_compute_cycles: 90.0,
+            micro_fetch_stall_cycles: 900.0,
+        };
+        // Shards covering halves of a program sum back to the whole.
+        let mut acc = StallModel::default();
+        assert!(!acc.is_populated());
+        acc.absorb_scaled(&unit, 0.5);
+        acc.absorb_scaled(&unit, 0.5);
+        assert!((acc.minisa_total_cycles - 100.0).abs() < 1e-9);
+        assert!((acc.micro_fetch_stall_cycles - 900.0).abs() < 1e-9);
+        assert!((acc.micro_stall_fraction() - 0.9).abs() < 1e-9);
+        assert!((acc.control_speedup() - 10.0).abs() < 1e-9);
+        // Empty model divides safely.
+        let empty = StallModel::default();
+        assert_eq!(empty.micro_stall_fraction(), 0.0);
+        assert_eq!(empty.control_speedup(), 0.0);
+    }
+
+    #[test]
+    fn fleet_report_rolls_up_and_renders_stall_columns() {
+        let unit = StallModel {
+            minisa_total_cycles: 100.0,
+            minisa_compute_cycles: 90.0,
+            minisa_fetch_stall_cycles: 2.0,
+            micro_total_cycles: 2000.0,
+            micro_compute_cycles: 90.0,
+            micro_fetch_stall_cycles: 1900.0,
+        };
+        let mut d0 = load(0, 10.0, false);
+        d0.modeled = unit;
+        let mut d1 = load(1, 10.0, false);
+        d1.modeled = unit;
+        let rep =
+            FleetReport { window: 100.0, devices: vec![d0, d1], ..Default::default() };
+        let m = rep.modeled();
+        assert!((m.minisa_total_cycles - 200.0).abs() < 1e-9);
+        assert!((m.micro_stall_fraction() - 0.95).abs() < 1e-9);
+        let r = rep.render();
+        assert!(r.contains("micro-fetch-stall"), "{r}");
+        assert!(r.contains("stall: dev0"), "{r}");
+        assert!(r.contains("fetch-stall 95.0% of cycles"), "{r}");
+        assert!(r.contains("control speedup 20.0x"), "{r}");
+        // No modeled work → no stall table (bare-fleet render unchanged).
+        let bare = FleetReport {
+            window: 100.0,
+            devices: vec![load(0, 1.0, false)],
+            ..Default::default()
+        };
+        assert!(!bare.render().contains("micro-fetch-stall"));
     }
 
     fn load(device: usize, busy: f64, failed: bool) -> DeviceLoad {

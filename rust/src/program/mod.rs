@@ -50,6 +50,7 @@ use crate::mapper::lower::LoweredProgram;
 use crate::mapper::search::{estimate, search_constrained, MapperOptions};
 use crate::mapper::{lower_gemm, Decision};
 use crate::mapping::Dataflow;
+use crate::perf::StallModel;
 use crate::workloads::Gemm;
 
 /// One compiled layer: the workload, its mapping decision and the lowered
@@ -81,6 +82,12 @@ pub struct Program {
     pub standalone_bytes: u64,
     /// Total modeled cycles (layers serialize on the data dependence).
     pub total_cycles: f64,
+    /// Modeled compute vs instruction-fetch cycles for the whole chain
+    /// under MINISA control and its micro-instruction twin — the unit the
+    /// fleet's live stall accounting apportions per dispatched shard
+    /// (derived deterministically from the decisions; deliberately **not**
+    /// part of the artifact accounting or its fidelity checks).
+    pub stall: StallModel,
     /// Wave plans for every (θ_EM, θ_ES, layouts) tuple in the fused trace,
     /// compiled once here and installed into simulators via [`seed_sim`].
     ///
@@ -110,6 +117,7 @@ impl Program {
             fused_bytes: built.fused_bytes,
             standalone_bytes: built.standalone_bytes,
             total_cycles: built.total_cycles,
+            stall: built.stall,
             plans,
         })
     }
@@ -375,6 +383,7 @@ impl Program {
             fused_bytes: built.fused_bytes,
             standalone_bytes: built.standalone_bytes,
             total_cycles: built.total_cycles,
+            stall: built.stall,
             plans,
         })
     }
@@ -437,6 +446,7 @@ struct BuiltChain {
     fused_bytes: u64,
     standalone_bytes: u64,
     total_cycles: f64,
+    stall: StallModel,
 }
 
 /// Lower every layer from its finalized decision, fuse, elide and account —
@@ -447,10 +457,19 @@ fn build_chain(cfg: &ArchConfig, chain: &Chain, decisions: &[Decision]) -> Built
     let mut layers = Vec::with_capacity(chain.layers.len());
     let mut fused = Trace::new();
     let mut standalone_bytes = 0u64;
+    let mut stall = StallModel::default();
     for (g, d) in chain.layers.iter().zip(decisions) {
         let lowered = lower_gemm(cfg, g, &d.choice, d.i_order, d.w_order, d.o_order);
         standalone_bytes += lowered.minisa_bytes();
         fused.splice_layer(&lowered.trace);
+        // Live stall accounting: the same mapping re-costed under
+        // micro-instruction control (closed-form `estimate`, never a mapper
+        // search — the zero-mapper-run loading guarantee holds). A layer
+        // the closed form cannot re-cost contributes its MINISA report
+        // twice, i.e. a neutral stall entry rather than a hole.
+        let micro = estimate(cfg, g, &d.choice, d.i_order, d.o_order, false)
+            .unwrap_or_else(|| d.report.clone());
+        stall.absorb_scaled(&StallModel::from_reports(&d.report, &micro), 1.0);
         layers.push(ProgramLayer { gemm: g.clone(), decision: d.clone(), lowered });
     }
     let trace_elided = fused.elide_interlayer_layouts();
@@ -474,6 +493,7 @@ fn build_chain(cfg: &ArchConfig, chain: &Chain, decisions: &[Decision]) -> Built
         fused_bytes,
         standalone_bytes,
         total_cycles,
+        stall,
     }
 }
 
@@ -812,6 +832,9 @@ mod tests {
         assert_eq!(q.fused.layer_starts, p.fused.layer_starts);
         assert_eq!(q.plan_count(), p.plan_count());
         assert_eq!((q.elided, q.fused_bytes, q.standalone_bytes), (p.elided, p.fused_bytes, p.standalone_bytes));
+        // Stall accounting is re-derived deterministically on load (it is
+        // not stored in the artifact), so the twin programs agree exactly.
+        assert_eq!(q.stall, p.stall);
         let weights = rand_weights(&chain, 7);
         let mut rng = Lcg::new(13);
         let input: Vec<i32> =
@@ -831,6 +854,22 @@ mod tests {
         let mut art = p.to_artifact(None).unwrap();
         art.decision.fused_bytes += 1;
         assert!(matches!(Program::from_artifact(&art), Err(ArtifactError::Mismatch(_))));
+    }
+
+    /// Compiled programs carry the chain's modeled stall accounting: the
+    /// MINISA totals equal the program's `total_cycles` (same per-layer
+    /// reports), and the micro-instruction twin never costs less — it only
+    /// adds instruction traffic to an otherwise identical mapping.
+    #[test]
+    fn program_stall_model_tracks_chain() {
+        let cfg = ArchConfig::paper(4, 8);
+        let chain = Chain::mlp("mlp", 16, &[24, 16, 24]);
+        let p = Program::compile(&cfg, &chain, &fast()).unwrap();
+        assert!(p.stall.is_populated());
+        assert!((p.stall.minisa_total_cycles - p.total_cycles).abs() < 1e-6);
+        assert!(p.stall.micro_total_cycles >= p.stall.minisa_total_cycles);
+        assert!(p.stall.micro_fetch_stall_cycles >= p.stall.minisa_fetch_stall_cycles);
+        assert!(p.stall.control_speedup() >= 1.0);
     }
 
     /// `total_cycles` stays the sum of the (possibly re-estimated) per-layer

@@ -49,7 +49,7 @@ pub fn time<R>(warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> (R, Tim
         last = Some(std::hint::black_box(f()));
         samples.push(t0.elapsed().as_secs_f64() * 1e9);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(f64::total_cmp);
     let t = Timing {
         iters: samples.len(),
         min_ns: samples[0],
@@ -77,8 +77,9 @@ pub struct BenchLog {
     metrics: Vec<(String, f64)>,
 }
 
-/// JSON-safe f64 formatting (NaN/inf are not valid JSON numbers).
-fn json_num(v: f64) -> String {
+/// JSON-safe f64 formatting (NaN/inf are not valid JSON numbers). Shared
+/// with the metrics snapshot exporter (`crate::obs::export`).
+pub(crate) fn json_num(v: f64) -> String {
     if v.is_finite() {
         format!("{v}")
     } else {
@@ -86,7 +87,7 @@ fn json_num(v: f64) -> String {
     }
 }
 
-fn json_escape(s: &str) -> String {
+pub(crate) fn json_escape(s: &str) -> String {
     s.chars()
         .flat_map(|c| match c {
             '"' => "\\\"".chars().collect::<Vec<_>>(),

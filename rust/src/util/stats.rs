@@ -29,7 +29,9 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return f64::NAN;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp, not partial_cmp().unwrap(): a stray NaN in a latency
+    // series must not panic the reporting path (NaNs sort last).
+    v.sort_by(f64::total_cmp);
     if v.len() == 1 {
         return v[0];
     }
@@ -79,6 +81,17 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 0.0);
         assert_eq!(percentile(&xs, 100.0), 10.0);
         assert_eq!(percentile(&xs, 50.0), 5.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_input() {
+        // Regression: the old partial_cmp(..).unwrap() sort panicked on any
+        // NaN sample. NaNs now sort last; finite quantiles stay usable.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(median(&xs), 2.5);
+        assert!(percentile(&xs, 100.0).is_nan());
+        assert!(median(&[f64::NAN]).is_nan());
     }
 
     #[test]

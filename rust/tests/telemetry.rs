@@ -1,0 +1,170 @@
+//! Telemetry integration suite (§Observability tentpole,
+//! docs/OBSERVABILITY.md) — the three guarantees the unified telemetry
+//! layer makes, proven against the real serving stack:
+//!
+//! 1. **Exact under concurrency**: counters and histograms incremented
+//!    from N threads sum exactly — no lost updates, bucket counts always
+//!    sum to the event count.
+//! 2. **Complete, ordered timelines**: a traced request's span covers
+//!    every pipeline stage (arrival → admission → batch → dispatch →
+//!    execute → stitch → respond) with monotonically non-decreasing
+//!    timestamps, and each stage's delta lands in its
+//!    `serve_stage_<name>_us` histogram.
+//! 3. **Tracing is invisible**: serving results are bit-identical with
+//!    tracing on and off, and a tracing-disabled server registers zero
+//!    span histograms.
+
+use std::sync::Arc;
+
+use minisa::arch::ArchConfig;
+use minisa::coordinator::serve::{
+    spawn_with_options, NaiveExecutor, Request, Response, ServerOptions,
+};
+use minisa::obs::{MetricsRegistry, Snapshot, Stage, TraceOptions};
+use minisa::util::Lcg;
+
+/// Serve `n` deterministic ad-hoc GEMM requests (seeded inputs, shared
+/// weight) under the given tracing options; responses sorted by id plus
+/// the server's final telemetry snapshot.
+fn gemm_burst(tracing: TraceOptions, n: usize) -> (Vec<Response>, Snapshot) {
+    let cfg = ArchConfig::paper(4, 4);
+    let opts = ServerOptions { tracing, ..Default::default() };
+    let (tx, rx, h, server) = spawn_with_options(&cfg, Arc::new(NaiveExecutor), opts);
+    let mut rng = Lcg::new(5);
+    let w = Arc::new(rng.f32_matrix(8, 4));
+    for id in 0..n as u64 {
+        tx.send(Request::gemm(id, 4, 8, 4, rng.f32_matrix(4, 8), Arc::clone(&w))).unwrap();
+    }
+    let mut got: Vec<Response> = (0..n).map(|_| rx.recv().unwrap()).collect();
+    drop(tx);
+    h.join().unwrap();
+    got.sort_by_key(|r| r.id);
+    let snap = server.metrics_snapshot(1_000.0);
+    (got, snap)
+}
+
+#[test]
+fn concurrent_counter_and_histogram_updates_sum_exactly() {
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 10_000;
+    let reg = Arc::new(MetricsRegistry::new());
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let reg = Arc::clone(&reg);
+            std::thread::spawn(move || {
+                // Fetch handles once, like the serving hot path does.
+                let c = reg.counter("telemetry_events_total");
+                let h = reg.histogram("telemetry_latency_us");
+                for i in 0..PER_THREAD {
+                    c.inc();
+                    h.record(((t * PER_THREAD + i) % 1000) as f64);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let total = (THREADS * PER_THREAD) as u64;
+    let snap = reg.snapshot();
+    assert_eq!(snap.counter("telemetry_events_total"), Some(total));
+    let hist = snap.histogram("telemetry_latency_us").expect("histogram registered");
+    assert_eq!(hist.count, total, "histogram lost events under concurrency");
+    let bucket_sum: u64 = hist.buckets.iter().map(|&(_, n)| n).sum();
+    assert_eq!(bucket_sum, total, "bucket counts must sum to the event count");
+    assert_eq!(hist.min, 0.0);
+    assert_eq!(hist.max, 999.0);
+}
+
+#[test]
+fn traced_requests_carry_complete_ordered_timelines() {
+    let n = 6;
+    let (got, snap) = gemm_burst(TraceOptions::all(), n);
+    for r in &got {
+        assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+        let t = r.trace.as_ref().unwrap_or_else(|| panic!("request {} untraced", r.id));
+        assert!(t.is_complete(), "request {} timeline incomplete: {:?}", r.id, t.stages());
+        assert!(t.is_monotonic(), "request {} timestamps regressed", r.id);
+        assert_eq!(t.stages(), Stage::ALL.to_vec());
+        // Every delta is a non-negative duration and they sum to the
+        // end-to-end latency.
+        let deltas = t.deltas_us();
+        assert_eq!(deltas.len(), Stage::ALL.len() - 1);
+        let sum: f64 = deltas.iter().map(|&(_, us)| us).sum();
+        assert!((sum - t.total_us()).abs() < 1.0, "deltas {sum} vs total {}", t.total_us());
+    }
+    // Each stage's histogram saw every request (arrival opens the timeline
+    // and has no duration, hence no histogram).
+    for stage in &Stage::ALL[1..] {
+        let name = format!("serve_stage_{}_us", stage.name());
+        let h = snap.histogram(&name).unwrap_or_else(|| panic!("{name} missing"));
+        assert_eq!(h.count, n as u64, "{name}");
+    }
+    assert_eq!(snap.histogram("serve_request_us").map(|h| h.count), Some(n as u64));
+}
+
+#[test]
+fn tracing_is_bitwise_invisible_and_off_means_zero_span_entries() {
+    let n = 5;
+    let (traced, _) = gemm_burst(TraceOptions::all(), n);
+    let (plain, snap_off) = gemm_burst(TraceOptions::default(), n);
+    assert_eq!(traced.len(), plain.len());
+    for (a, b) in traced.iter().zip(&plain) {
+        assert_eq!(a.id, b.id);
+        // Bit-level equality, not float comparison: tracing must not
+        // perturb the computation at all.
+        let abits: Vec<u32> = a.output.iter().map(|v| v.to_bits()).collect();
+        let bbits: Vec<u32> = b.output.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(abits, bbits, "request {} output diverged under tracing", a.id);
+        assert_eq!(a.output_words, b.output_words);
+        assert!(a.trace.is_some(), "traced run lost request {}'s trace", a.id);
+        assert!(b.trace.is_none(), "untraced run grew a trace on request {}", b.id);
+    }
+    // Span histograms are created only by trace recording, so the
+    // tracing-disabled server's registry has none.
+    assert!(
+        snap_off.histograms.is_empty(),
+        "tracing disabled but histograms registered: {:?}",
+        snap_off.histograms.iter().map(|(k, _)| k.clone()).collect::<Vec<_>>()
+    );
+    assert_eq!(snap_off.counter("serve_served_total"), Some(n as u64));
+}
+
+#[test]
+fn sampling_traces_exactly_one_in_n() {
+    let cfg = ArchConfig::paper(4, 4);
+    let opts = ServerOptions {
+        tracing: TraceOptions { enabled: true, sample_every: 3 },
+        ..Default::default()
+    };
+    let (tx, rx, h, _server) = spawn_with_options(&cfg, Arc::new(NaiveExecutor), opts);
+    let mut rng = Lcg::new(11);
+    let w = Arc::new(rng.f32_matrix(8, 4));
+    // Serialized send/recv so arrival order (and thus the sample sequence)
+    // is deterministic.
+    for id in 0..9u64 {
+        tx.send(Request::gemm(id, 4, 8, 4, rng.f32_matrix(4, 8), Arc::clone(&w))).unwrap();
+        let r = rx.recv().unwrap();
+        assert_eq!(r.id, id);
+        assert_eq!(r.trace.is_some(), id % 3 == 0, "request {id}");
+    }
+    drop(tx);
+    let stats = h.join().unwrap();
+    assert_eq!(stats.served, 9);
+}
+
+#[test]
+fn exporters_render_the_live_snapshot() {
+    let (_, snap) = gemm_burst(TraceOptions::all(), 3);
+    let prom = snap.to_prometheus();
+    assert!(prom.contains("# TYPE serve_served_total counter"), "{prom}");
+    assert!(prom.contains("# TYPE serve_request_us histogram"), "{prom}");
+    assert!(prom.contains("serve_request_us_bucket{le=\"+Inf\"} 3"), "{prom}");
+    assert!(prom.contains("# TYPE fleet_dev0_busy_us gauge"), "{prom}");
+    let json = snap.to_json();
+    assert!(json.contains("\"schema\": 1"), "{json}");
+    assert!(json.contains("\"serve_served_total\": 3"), "{json}");
+    assert!(json.contains("\"serve_stage_execute_us\""), "{json}");
+    assert_eq!(json.matches('{').count(), json.matches('}').count(), "{json}");
+    assert_eq!(json.matches('[').count(), json.matches(']').count(), "{json}");
+}

@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Validate a --metrics-out telemetry snapshot against the checked-in schema.
+
+Stdlib-only (CI runners have no pip). Usage:
+
+    python3 tools/check_metrics.py <snapshot.json> [<schema.json>]
+
+The snapshot is what `minisa serve|serve-model|loadgen --metrics-out` and
+`minisa metrics --json` write (docs/OBSERVABILITY.md §Export formats); the
+schema (default: tools/metrics_schema.json next to this script) pins the
+metric catalog — required counters/gauges/histograms, the per-device gauge
+name patterns, and the histogram field layout.
+
+Checks, in order:
+  1. document shape: schema version, counters/gauges/histograms maps
+  2. every required counter present, integer, non-negative
+  3. every required gauge present and numeric; every per-device gauge
+     pattern matched by at least one name (dev0 always exists)
+  4. every required histogram present with every required field, buckets
+     well-formed ([lo, count] pairs, lo ascending, counts summing to
+     `count`, min <= p50 <= p99 <= p999 <= max when non-empty)
+
+Exit 0 when the snapshot conforms; exit 1 with one line per violation.
+"""
+
+import json
+import os
+import re
+import sys
+
+
+def fail(errors):
+    for e in errors:
+        print(f"check_metrics: {e}", file=sys.stderr)
+    print(f"check_metrics: FAIL ({len(errors)} violation(s))", file=sys.stderr)
+    sys.exit(1)
+
+
+def is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_histogram(name, h, fields, errors):
+    if not isinstance(h, dict):
+        errors.append(f"histogram {name}: expected an object, got {type(h).__name__}")
+        return
+    for f in fields:
+        if f not in h:
+            errors.append(f"histogram {name}: missing field '{f}'")
+    buckets = h.get("buckets")
+    count = h.get("count")
+    if not isinstance(count, int) or count < 0:
+        errors.append(f"histogram {name}: count must be a non-negative integer, got {count!r}")
+        return
+    if not isinstance(buckets, list):
+        errors.append(f"histogram {name}: buckets must be a list")
+        return
+    total, last_lo = 0, float("-inf")
+    for i, b in enumerate(buckets):
+        if not (isinstance(b, list) and len(b) == 2 and is_num(b[0]) and isinstance(b[1], int)):
+            errors.append(f"histogram {name}: bucket[{i}] must be [lo, count], got {b!r}")
+            return
+        lo, n = b
+        if lo <= last_lo:
+            errors.append(f"histogram {name}: bucket lower bounds must ascend ({lo} after {last_lo})")
+        if n <= 0:
+            errors.append(f"histogram {name}: bucket[{i}] count must be positive (empty buckets are elided)")
+        last_lo = lo
+        total += n
+    if total != count:
+        errors.append(f"histogram {name}: bucket counts sum to {total}, count says {count}")
+    if count > 0:
+        keys = ("min", "p50", "p99", "p999", "max")
+        qs = [(k, h.get(k)) for k in keys]
+        if all(is_num(v) for _, v in qs):
+            for (ka, a), (kb, b) in zip(qs, qs[1:]):
+                if a > b:
+                    errors.append(f"histogram {name}: {ka} ({a}) > {kb} ({b})")
+        else:
+            errors.append(f"histogram {name}: non-numeric quantile among {'/'.join(keys)}")
+
+
+def main():
+    if len(sys.argv) not in (2, 3):
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    snap_path = sys.argv[1]
+    schema_path = (
+        sys.argv[2]
+        if len(sys.argv) == 3
+        else os.path.join(os.path.dirname(os.path.abspath(__file__)), "metrics_schema.json")
+    )
+    if not os.path.exists(schema_path):
+        fail(
+            [
+                f"schema file {schema_path} not found — it is checked in as "
+                "tools/metrics_schema.json; pass its path explicitly if running "
+                "from an unusual working directory"
+            ]
+        )
+    try:
+        with open(snap_path) as f:
+            snap = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail([f"cannot read snapshot {snap_path}: {e}"])
+    with open(schema_path) as f:
+        schema = json.load(f)
+
+    errors = []
+    if snap.get("schema") != schema.get("schema_version"):
+        errors.append(
+            f"snapshot schema version {snap.get('schema')!r} != "
+            f"expected {schema.get('schema_version')!r}"
+        )
+    counters = snap.get("counters")
+    gauges = snap.get("gauges")
+    histograms = snap.get("histograms")
+    for fam, v in (("counters", counters), ("gauges", gauges), ("histograms", histograms)):
+        if not isinstance(v, dict):
+            errors.append(f"snapshot '{fam}' must be an object, got {type(v).__name__}")
+    if errors:
+        fail(errors)
+
+    for name in schema.get("required_counters", []):
+        v = counters.get(name)
+        if v is None:
+            errors.append(f"missing counter {name}")
+        elif not isinstance(v, int) or v < 0:
+            errors.append(f"counter {name} must be a non-negative integer, got {v!r}")
+
+    for name in schema.get("required_gauges", []):
+        v = gauges.get(name)
+        if v is None:
+            errors.append(f"missing gauge {name}")
+        elif not is_num(v):
+            errors.append(f"gauge {name} must be numeric, got {v!r}")
+    for pat in schema.get("required_gauge_patterns", []):
+        rx = re.compile(pat)
+        if not any(rx.match(name) for name in gauges):
+            errors.append(f"no gauge matches required pattern {pat}")
+
+    fields = schema.get("histogram_fields", [])
+    for name in schema.get("required_histograms", []):
+        h = histograms.get(name)
+        if h is None:
+            errors.append(f"missing histogram {name}")
+        else:
+            check_histogram(name, h, fields, errors)
+
+    if errors:
+        fail(errors)
+    print(
+        f"check_metrics: OK — {len(counters)} counters, {len(gauges)} gauges, "
+        f"{len(histograms)} histograms conform to {os.path.basename(schema_path)}"
+    )
+
+
+if __name__ == "__main__":
+    main()
