@@ -409,15 +409,43 @@ pub fn cmd_workloads(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse `--device-archs 4x4,8x16,...` — one FEATHER+ `ArchConfig` per
+/// fleet device (heterogeneous fleet; docs/SERVING.md §Heterogeneous
+/// fleets). Each entry is `AHxAW` over the paper's buffer geometry.
+fn parse_device_archs(spec: &str) -> anyhow::Result<Vec<ArchConfig>> {
+    let mut out = Vec::new();
+    for tok in spec.split(',') {
+        let t = tok.trim();
+        let (ah, aw) = t
+            .split_once('x')
+            .ok_or_else(|| anyhow::anyhow!("--device-archs '{t}': expected AHxAW (e.g. 4x4)"))?;
+        let ah: usize =
+            ah.trim().parse().map_err(|e| anyhow::anyhow!("--device-archs '{t}': AH: {e}"))?;
+        let aw: usize =
+            aw.trim().parse().map_err(|e| anyhow::anyhow!("--device-archs '{t}': AW: {e}"))?;
+        let cfg = ArchConfig::paper(ah, aw);
+        cfg.validate().map_err(|e| anyhow::anyhow!("--device-archs '{t}': {e}"))?;
+        out.push(cfg);
+    }
+    anyhow::ensure!(!out.is_empty(), "--device-archs: expected at least one AHxAW entry");
+    Ok(out)
+}
+
 /// Parse the fleet sizing + admission flags shared by the serving commands.
 /// `--trace` turns on request tracing (per-stage span histograms,
 /// docs/OBSERVABILITY.md); `--trace-sample N` traces every Nth arrival.
-fn server_options(args: &Args) -> crate::coordinator::serve::ServerOptions {
+/// `--device-archs` builds a heterogeneous fleet (overrides `--devices`).
+fn server_options(args: &Args) -> anyhow::Result<crate::coordinator::serve::ServerOptions> {
     use crate::coordinator::admission::AdmissionOptions;
     let d = crate::coordinator::serve::ServerOptions::default();
     let da = AdmissionOptions::default();
-    crate::coordinator::serve::ServerOptions {
+    let device_archs = match args.flags.get("device-archs") {
+        Some(spec) => parse_device_archs(spec)?,
+        None => Vec::new(),
+    };
+    Ok(crate::coordinator::serve::ServerOptions {
         devices: args.usize_flag("devices", d.devices).max(1),
+        device_archs,
         shard_min_rows: args.usize_flag("shard-min-rows", d.shard_min_rows).max(1),
         max_batch: args.usize_flag("max-batch", d.max_batch).max(1),
         shard_timeout_ms: args.usize_flag("shard-timeout-ms", d.shard_timeout_ms as usize) as u64,
@@ -430,7 +458,7 @@ fn server_options(args: &Args) -> crate::coordinator::serve::ServerOptions {
             enabled: args.bool_flag("trace"),
             sample_every: args.usize_flag("trace-sample", 1).max(1) as u64,
         },
-    }
+    })
 }
 
 /// `--metrics-out <path>`: dump the server's full telemetry snapshot
@@ -819,7 +847,7 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let requests = args.usize_flag("requests", 64);
     let elem = elem_flag(args, ElemType::F32)?;
     let (qos, deadline_ms) = qos_flags(args)?;
-    let sopts = server_options(args);
+    let sopts = server_options(args)?;
     let executor = serving_executor(args);
     let backend = executor.name().to_string();
     let (tx, rx, h, server) = spawn_with_options(&cfg, executor, sopts);
@@ -882,7 +910,7 @@ pub fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         stats.batches,
         stats.max_batch,
     );
-    if sopts.devices > 1 {
+    if server.fleet().device_count() > 1 {
         println!("{}", server.fleet_report(wall_us).render());
     }
     write_metrics_snapshot(args, &server, wall_us)?;
@@ -914,7 +942,7 @@ pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
     };
     let from_artifact = artifact.is_some();
 
-    let sopts = server_options(args);
+    let sopts = server_options(args)?;
     let executor = serving_executor(args);
     let backend = executor.name().to_string();
     let (tx, rx, h, server) = spawn_with_options(&cfg, executor, sopts);
@@ -1024,7 +1052,7 @@ pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
         anyhow::ensure!(stats.artifact_loads == 1, "expected exactly one artifact load");
         println!("artifact session: 1 load, 0 program compiles, 0 mapper runs ✓");
     }
-    if sopts.devices > 1 {
+    if server.fleet().device_count() > 1 {
         let report = server.fleet_report(wall_us);
         anyhow::ensure!(
             report.plan_compiles() == 0,
@@ -1053,7 +1081,7 @@ pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
 /// outside of test builds.
 pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     use crate::coordinator::admission::{ErrorCode, QosClass};
-    use crate::coordinator::serve::{spawn_with_options, NaiveExecutor, Request};
+    use crate::coordinator::serve::{spawn_with_options, ArtifactSource, NaiveExecutor, Request};
     use std::collections::{HashMap as Map, HashSet};
     use std::sync::Arc;
     use std::time::{Duration, Instant};
@@ -1066,12 +1094,13 @@ pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     let rate = args.f64_flag("rate", 200.0).max(1.0); // offered load, req/s
     let overload = args.bool_flag("overload");
     let interactive_deadline_ms = args.usize_flag("deadline-ms", 200) as u64;
-    let mut sopts = server_options(args);
+    let mut sopts = server_options(args)?;
     // Loadgen always traces (at the `--trace-sample` rate, default every
     // request) so its metrics snapshot carries the per-stage latency
     // histograms. Traced serving is bit-identical to untraced serving
     // (tests/telemetry.rs), so this does not perturb the measurement.
     sopts.tracing.enabled = true;
+    let device_archs = sopts.device_archs.clone();
     let seed = args.usize_flag("seed", 42) as u64;
     let mut rng = crate::util::Lcg::new(seed);
 
@@ -1095,6 +1124,34 @@ pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     let pid_i32 = word_session(ElemType::I32, &mut rng)?;
     let pid_gl = word_session(ElemType::Goldilocks, &mut rng)?;
 
+    // Heterogeneous fleets get one extra artifact-backed session per
+    // distinct non-home arch, so predicted-completion-time placement has
+    // real cross-arch work to schedule (each session is only eligible on
+    // its own arch's devices; docs/SERVING.md §Heterogeneous fleets).
+    let mut extra: Vec<crate::coordinator::serve::ProgramId> = Vec::new();
+    {
+        let mut seen: Vec<String> = vec![cfg.name()];
+        for a in &device_archs {
+            if seen.contains(&a.name()) {
+                continue;
+            }
+            seen.push(a.name());
+            let ws: Vec<Vec<u64>> = chain
+                .layers
+                .iter()
+                .map(|g| ElemType::I32.sample_words(&mut rng, g.k * g.n))
+                .collect();
+            let art = crate::artifact::Compiler::new(a)
+                .weights(ws)
+                .compile(&chain)
+                .map_err(|e| anyhow::anyhow!("compile loadgen chain for {}: {e}", a.name()))?;
+            extra.push(server.register(ArtifactSource::Artifact(Box::new(art)))?);
+        }
+        if !extra.is_empty() {
+            eprintln!("heterogeneous fleet: {} extra cross-arch session(s)", extra.len());
+        }
+    }
+
     match args.str_flag("faults", "none").as_str() {
         "none" => {}
         "scripted" => {
@@ -1102,7 +1159,7 @@ pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
             {
                 use crate::coordinator::fleet::{FaultDropout, FaultPlan};
                 let mut dropouts = Vec::new();
-                if sopts.devices > 1 {
+                if server.fleet().device_count() > 1 {
                     dropouts.push(FaultDropout { device: 1, after_shards: 3, transient: true });
                 }
                 server.fleet().set_fault_plan(FaultPlan {
@@ -1157,6 +1214,13 @@ pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
                     .with_qos(QosClass::Batch)
                     .with_deadline_ms(interactive_deadline_ms * 4)
             }
+            8 if !extra.is_empty() => {
+                // Cross-arch traffic: round-robin over the non-home-arch
+                // sessions so every device group stays populated.
+                let pid = extra[(id as usize / 10) % extra.len()];
+                let words = ElemType::I32.sample_words(&mut rng, m * kf);
+                Request::for_program_words(id, pid, m, words).with_qos(QosClass::BestEffort)
+            }
             _ => {
                 let words = ElemType::Goldilocks.sample_words(&mut rng, m * kf);
                 Request::for_program_words(id, pid_gl, m, words)
@@ -1199,7 +1263,12 @@ pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
                 }
             }
             Some(ErrorCode::DeadlineExceeded) => expired += 1,
-            Some(ErrorCode::SessionGone | ErrorCode::Watchdog | ErrorCode::Exec) => errors += 1,
+            Some(
+                ErrorCode::SessionGone
+                | ErrorCode::Watchdog
+                | ErrorCode::NoEligibleDevice
+                | ErrorCode::Exec,
+            ) => errors += 1,
         }
     }
     anyhow::ensure!(
@@ -1217,7 +1286,7 @@ pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
     let mut log = crate::util::bench::BenchLog::new();
     log.metric("offered_rate_per_s", rate);
     log.metric("duration_ms", duration.as_millis() as f64);
-    log.metric("devices", sopts.devices as f64);
+    log.metric("devices", server.fleet().device_count() as f64);
     log.metric("sent", sent.len() as f64);
     log.metric("answered", got.len() as f64);
     log.metric("succeeded", ok as f64);
@@ -1238,12 +1307,32 @@ pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
             log.metric(&format!("{key}_{tag}_us"), v);
         }
     }
-    if sopts.devices > 1 {
+    if server.fleet().device_count() > 1 {
         let rep = server.fleet_report(wall_us);
         log.metric("retries", rep.retries() as f64);
         log.metric("watchdog_trips", rep.watchdog_trips() as f64);
         log.metric("recoveries", rep.recoveries() as f64);
         log.metric("steal_wait_mean_us", rep.steal_wait_mean_us());
+        // Cost-aware scheduling accuracy + shared fetch-channel contention
+        // (docs/OBSERVABILITY.md): predicted-vs-modeled cycle error over
+        // the devices that did work, and the fleet-wide control speedup
+        // under the shared instruction-fetch channel.
+        let errs: Vec<f64> = rep
+            .devices
+            .iter()
+            .filter(|d| d.predicted_cycles > 0.0)
+            .map(|d| d.predict_err())
+            .collect();
+        log.metric(
+            "predict_err_mean",
+            if errs.is_empty() { 0.0 } else { crate::util::mean(&errs) },
+        );
+        let sf = rep.shared_fetch();
+        log.metric("fetch_contention_micro", sf.micro_contention);
+        log.metric("fetch_contention_minisa", sf.minisa_contention);
+        log.metric("fetch_control_speedup", sf.control_speedup());
+        let rows: u64 = rep.devices.iter().map(|d| d.rows).sum();
+        log.metric("rows_per_s", rows as f64 / (wall_us / 1e6).max(1e-9));
         println!("{}", rep.render());
     }
     let out = args.str_flag("out", "BENCH_serving.json");
@@ -1255,7 +1344,7 @@ pub fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
          {} shed, {} expired, {} errors, {} injected → {out}",
         rate,
         duration.as_millis(),
-        sopts.devices,
+        server.fleet().device_count(),
         sent.len(),
         ok,
         shed,
@@ -1310,7 +1399,7 @@ pub fn cmd_metrics(args: &Args) -> anyhow::Result<()> {
 
     let cfg = configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(4, 4));
     let requests = args.usize_flag("requests", 16);
-    let mut sopts = server_options(args);
+    let mut sopts = server_options(args)?;
     sopts.tracing = crate::obs::TraceOptions::all();
     let (tx, rx, h, server) = spawn_with_options(&cfg, Arc::new(NaiveExecutor), sopts);
     let mut rng = crate::util::Lcg::new(args.usize_flag("seed", 42) as u64);

@@ -112,6 +112,10 @@ pub enum ErrorCode {
     SessionGone,
     /// A shard exceeded the per-shard watchdog and the retry budget ran out.
     Watchdog,
+    /// Every device whose arch fingerprint matches the session has dropped
+    /// out of a heterogeneous fleet — the work cannot be placed anywhere
+    /// (arch-incompatible survivors are never used).
+    NoEligibleDevice,
     /// Execution failed (validation error, executor error, device panic...).
     Exec,
 }
@@ -123,6 +127,7 @@ impl ErrorCode {
             ErrorCode::DeadlineExceeded => "deadline_exceeded",
             ErrorCode::SessionGone => "session_gone",
             ErrorCode::Watchdog => "watchdog",
+            ErrorCode::NoEligibleDevice => "no_eligible_device",
             ErrorCode::Exec => "exec",
         }
     }
@@ -342,6 +347,7 @@ mod tests {
         assert_eq!(ErrorCode::DeadlineExceeded.as_str(), "deadline_exceeded");
         assert_eq!(ErrorCode::SessionGone.as_str(), "session_gone");
         assert_eq!(ErrorCode::Watchdog.as_str(), "watchdog");
+        assert_eq!(ErrorCode::NoEligibleDevice.as_str(), "no_eligible_device");
         assert_eq!(ErrorCode::Exec.as_str(), "exec");
         assert_eq!(QosClass::parse("interactive"), Ok(QosClass::Interactive));
         assert_eq!(QosClass::parse("best-effort"), Ok(QosClass::BestEffort));

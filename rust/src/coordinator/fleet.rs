@@ -118,16 +118,29 @@ pub struct DeviceStats {
     /// ([`crate::program::Program::stall`]). Raw GEMM dispatches carry no
     /// perf decision and contribute nothing.
     pub modeled: StallModel,
+    /// Cycles the cost-aware scheduler predicted for the work this device
+    /// actually executed (`sched::predict_cycles` per executed shard) —
+    /// the "predicted" side of the predicted-vs-simulated error that
+    /// `DeviceLoad::predict_err` reports. Raw GEMMs contribute nothing.
+    pub predicted_cycles: f64,
 }
 
 /// A queued unit of fleet work: one batch's dispatch, bound to whichever
 /// device's worker executes it.
 pub type FleetJob = Box<dyn FnOnce(&Arc<Device>) + Send + 'static>;
 
-/// A [`FleetJob`] plus its enqueue timestamp, for steal-latency accounting.
+/// A [`FleetJob`] plus its enqueue timestamp (steal-latency accounting)
+/// and its placement constraints (cost-aware scheduling).
 struct QueuedJob {
     job: FleetJob,
     enqueued: Instant,
+    /// Arch fingerprint this job's session was compiled for: only devices
+    /// with a matching fingerprint may execute it. `None` = unconstrained
+    /// (ad-hoc GEMM work runs anywhere).
+    fingerprint: Option<u64>,
+    /// Scheduler-predicted cycles, charged to the queued device's pending
+    /// load at submit and discharged when the job leaves its queue.
+    cost: u64,
 }
 
 /// One scripted dropout in a [`FaultPlan`]: after the fleet has started
@@ -181,6 +194,9 @@ pub(crate) fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 pub struct Device {
     pub id: usize,
     cfg: ArchConfig,
+    /// Arch fingerprint of `cfg` (`artifact::arch_fingerprint`), cached:
+    /// placement eligibility compares this on every routing decision.
+    fingerprint: u64,
     executor: Arc<dyn TileExecutor>,
     /// Currently executing (advisory: used by tile-parallel claiming to
     /// prefer idle devices; correctness never depends on it).
@@ -202,6 +218,11 @@ pub struct Device {
     /// "each device owns its plan cache" means here.
     sims: Mutex<HashMap<ElemType, Box<dyn Any + Send>>>,
     queue: Mutex<VecDeque<QueuedJob>>,
+    /// Predicted cycles of work queued on (or claimed from) this device —
+    /// the completion-time signal cost-aware placement reads. Charged at
+    /// submit, discharged when a job leaves the queue; advisory only,
+    /// correctness never depends on it.
+    pending: AtomicU64,
 }
 
 impl Device {
@@ -209,6 +230,7 @@ impl Device {
         Self {
             id,
             cfg: cfg.clone(),
+            fingerprint: crate::artifact::arch_fingerprint(cfg),
             executor,
             busy: AtomicBool::new(false),
             failed: AtomicBool::new(false),
@@ -218,7 +240,43 @@ impl Device {
             plan_compiles: AtomicU64::new(0),
             sims: Mutex::new(HashMap::new()),
             queue: Mutex::new(VecDeque::new()),
+            pending: AtomicU64::new(0),
         }
+    }
+
+    /// This device's architecture (fleets may be heterogeneous).
+    pub fn arch(&self) -> &ArchConfig {
+        &self.cfg
+    }
+
+    /// Arch fingerprint of this device's configuration — the placement
+    /// eligibility key (a session may only execute on devices whose
+    /// fingerprint matches its program's).
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Whether work compiled for `fingerprint` may execute here. `None` is
+    /// unconstrained work (ad-hoc GEMMs).
+    pub fn eligible(&self, fingerprint: Option<u64>) -> bool {
+        !fingerprint.is_some_and(|f| f != self.fingerprint)
+    }
+
+    /// Predicted cycles of work currently queued on this device.
+    pub fn pending_cycles(&self) -> u64 {
+        self.pending.load(Ordering::Acquire)
+    }
+
+    fn charge_pending(&self, cycles: u64) {
+        self.pending.fetch_add(cycles, Ordering::AcqRel);
+    }
+
+    fn discharge_pending(&self, cycles: u64) {
+        // Saturating: a shutdown drain or an inline fallback may discharge
+        // a job whose charge went to a different (since-reset) counter.
+        let _ = self.pending.fetch_update(Ordering::AcqRel, Ordering::Acquire, |v| {
+            Some(v.saturating_sub(cycles))
+        });
     }
 
     pub fn is_busy(&self) -> bool {
@@ -331,12 +389,16 @@ impl Device {
 
     /// Live stall accounting: a shard that executed `rows` of `program`
     /// charges that row share of the program's modeled MINISA and
-    /// micro-baseline cycles to this device ([`StallModel::absorb_scaled`]).
-    /// Called on successful executions only — failed or panicked shards
-    /// completed no modeled work.
+    /// micro-baseline cycles to this device ([`StallModel::absorb_scaled`]),
+    /// and the scheduler's prediction for the same shard
+    /// (`sched::predict_cycles`) — the two sides of the per-device
+    /// predicted-vs-simulated error. Called on successful executions only —
+    /// failed or panicked shards completed no modeled work.
     pub(crate) fn note_modeled(&self, program: &Program, rows: usize) {
         let frac = rows as f64 / program.rows().max(1) as f64;
-        lock_clean(&self.stats).modeled.absorb_scaled(&program.stall, frac);
+        let mut st = lock_clean(&self.stats);
+        st.modeled.absorb_scaled(&program.stall, frac);
+        st.predicted_cycles += super::sched::predict_cycles(program, rows);
     }
 }
 
@@ -401,10 +463,27 @@ pub struct Fleet {
 impl Fleet {
     pub fn new(cfg: &ArchConfig, executor: Arc<dyn TileExecutor>, opts: FleetOptions) -> Self {
         let n = opts.devices.max(1);
-        let devices =
-            (0..n).map(|id| Arc::new(Device::new(id, cfg, Arc::clone(&executor)))).collect();
+        Self::with_archs(&vec![cfg.clone(); n], executor, opts)
+    }
+
+    /// A heterogeneous fleet: one device per entry of `archs`, each with
+    /// its own `ArchConfig` (`ServerOptions::device_archs` /
+    /// `--device-archs`). `opts.devices` is ignored — the arch list *is*
+    /// the device list. Device 0's arch doubles as the fleet's default
+    /// `cfg` (ad-hoc GEMM mapping, legacy single-arch callers).
+    pub fn with_archs(
+        archs: &[ArchConfig],
+        executor: Arc<dyn TileExecutor>,
+        opts: FleetOptions,
+    ) -> Self {
+        assert!(!archs.is_empty(), "fleet needs at least one device arch");
+        let devices = archs
+            .iter()
+            .enumerate()
+            .map(|(id, cfg)| Arc::new(Device::new(id, cfg, Arc::clone(&executor))))
+            .collect();
         Self {
-            cfg: cfg.clone(),
+            cfg: archs[0].clone(),
             opts,
             devices,
             idle: Mutex::new(0),
@@ -530,6 +609,9 @@ impl Fleet {
                         plan_compiles: d.plan_compiles(),
                         waves: st.waves,
                         modeled: st.modeled,
+                        group: d.fingerprint,
+                        arch: d.cfg.name(),
+                        predicted_cycles: st.predicted_cycles,
                         failed: d.is_failed(),
                     }
                 })
@@ -569,42 +651,93 @@ impl Fleet {
         }
     }
 
-    /// Enqueue a job, routed by `affinity` (a batch-key hash: same key →
-    /// same device, keeping that device's simulators and plan caches warm).
-    /// Routing considers only surviving devices; if the whole fleet has
-    /// dropped, the job runs inline on the caller so its requests still get
-    /// (error) responses instead of hanging in a queue nobody drains.
+    /// Enqueue an unconstrained job, routed by `affinity` (a batch-key
+    /// hash: same key → same device, keeping that device's simulators and
+    /// plan caches warm). See [`Fleet::submit_eligible`].
     pub fn submit(&self, affinity: u64, job: FleetJob) {
+        self.submit_eligible(affinity, None, 0, job);
+    }
+
+    /// Enqueue a job with placement constraints and a predicted cost.
+    ///
+    /// Routing considers only surviving devices whose arch fingerprint
+    /// matches `fingerprint` (any surviving device when `None`), and picks
+    /// the eligible device predicted to finish this job **earliest**: the
+    /// one with the least pending predicted cycles (eligible devices share
+    /// one arch, so the job itself costs the same everywhere it may run).
+    /// Ties rotate by `affinity`, preserving warm-cache routing while the
+    /// fleet is idle. If no eligible device survives, the job runs inline
+    /// on the caller so its requests still get typed error responses
+    /// instead of hanging in a queue nobody drains.
+    pub fn submit_eligible(
+        &self,
+        affinity: u64,
+        fingerprint: Option<u64>,
+        cost: u64,
+        job: FleetJob,
+    ) {
         self.probe_recover();
-        let surviving: Vec<&Arc<Device>> =
-            self.devices.iter().filter(|d| !d.is_failed()).collect();
-        if surviving.is_empty() {
+        let eligible: Vec<&Arc<Device>> = self
+            .devices
+            .iter()
+            .filter(|d| !d.is_failed() && d.eligible(fingerprint))
+            .collect();
+        if eligible.is_empty() {
             let dev = &self.devices[(affinity % self.devices.len() as u64) as usize];
             job(dev);
             return;
         }
-        let dev = surviving[(affinity % surviving.len() as u64) as usize];
-        lock_clean(&dev.queue).push_back(QueuedJob { job, enqueued: Instant::now() });
+        let start = (affinity % eligible.len() as u64) as usize;
+        let mut best = start;
+        for k in 1..eligible.len() {
+            let i = (start + k) % eligible.len();
+            if eligible[i].pending_cycles() < eligible[best].pending_cycles() {
+                best = i;
+            }
+        }
+        let dev = eligible[best];
+        dev.charge_pending(cost);
+        lock_clean(&dev.queue).push_back(QueuedJob {
+            job,
+            enqueued: Instant::now(),
+            fingerprint,
+            cost,
+        });
         self.wake_all();
     }
 
     /// Pop work for `dev`: own queue first, then steal from any other
     /// device's queue (id order from the right neighbour). A failed device
-    /// never takes work. Returns the job plus whether it was stolen and
+    /// never takes work, and a steal takes only jobs `dev` is **eligible**
+    /// for (matching arch fingerprint) — an incompatible job stays queued
+    /// on its victim for an eligible device to drain. The one exception: a
+    /// *failed* victim's jobs may be rescued by anyone, because a rescued
+    /// job is answered through the execution path (which enforces
+    /// eligibility itself and returns a typed `no eligible device` error
+    /// when the session's arch has no survivor) — refusing it would strand
+    /// its requests forever. Returns the job plus whether it was stolen and
     /// whether the victim had dropped (a requeue).
     fn next_job(&self, dev: &Device) -> Option<(QueuedJob, bool, bool)> {
         if dev.is_failed() {
             return None;
         }
         if let Some(j) = lock_clean(&dev.queue).pop_front() {
+            dev.discharge_pending(j.cost);
             return Some((j, false, false));
         }
         let n = self.devices.len();
         for k in 1..n {
             let victim = &self.devices[(dev.id + k) % n];
-            let job = lock_clean(&victim.queue).pop_front();
-            if let Some(j) = job {
-                return Some((j, true, victim.is_failed()));
+            let victim_failed = victim.is_failed();
+            let mut q = lock_clean(&victim.queue);
+            let pos = q
+                .iter()
+                .position(|j| victim_failed || dev.eligible(j.fingerprint));
+            if let Some(p) = pos {
+                let j = q.remove(p).expect("position is in range");
+                drop(q);
+                victim.discharge_pending(j.cost);
+                return Some((j, true, victim_failed));
             }
         }
         None
@@ -689,15 +822,16 @@ impl Fleet {
     // Tile-parallel sharded execution.
     // ------------------------------------------------------------------
 
-    /// Claim up to `want` idle surviving devices (never `exclude`). Each
-    /// claim flips the busy slot; the returned leases restore it on drop.
-    fn claim_idle(&self, exclude: usize, want: usize) -> Vec<Lease> {
+    /// Claim up to `want` idle surviving devices (never `exclude`), all
+    /// eligible for `fingerprint`. Each claim flips the busy slot; the
+    /// returned leases restore it on drop.
+    fn claim_idle(&self, exclude: usize, want: usize, fingerprint: Option<u64>) -> Vec<Lease> {
         let mut out = Vec::new();
         for d in &self.devices {
             if out.len() >= want {
                 break;
             }
-            if d.id == exclude || d.is_failed() {
+            if d.id == exclude || d.is_failed() || !d.eligible(fingerprint) {
                 continue;
             }
             if d.busy
@@ -730,6 +864,7 @@ impl Fleet {
         devs: &[Arc<Device>],
         first: usize,
         range: Range<usize>,
+        fingerprint: Option<u64>,
         exec: &E,
     ) -> anyhow::Result<Vec<T>>
     where
@@ -746,8 +881,16 @@ impl Fleet {
         let watchdog_us = self.opts.shard_timeout_ms as f64 * 1e3; // 0 = disabled
         let budget = self.opts.retry_budget.max(1);
         let mut attempts = 0usize;
+        let mut ineligible = 0usize;
         let mut last_trip: Option<anyhow::Error> = None;
         for (ci, dev) in candidates.into_iter().enumerate() {
+            if !dev.eligible(fingerprint) {
+                // Wrong arch: this device can never execute this program
+                // (its plans encode another config's addressing) — skip it
+                // even as a last resort.
+                ineligible += 1;
+                continue;
+            }
             if dev.is_failed() {
                 continue;
             }
@@ -826,6 +969,20 @@ impl Fleet {
                 range.end
             ));
         }
+        if let Some(fp) = fingerprint {
+            if ineligible > 0 {
+                // Some devices were skipped for arch mismatch, and every
+                // arch-compatible one has dropped: a typed placement error,
+                // never a silent wrong-arch execution.
+                return Err(anyhow::anyhow!(
+                    "no eligible device for rows {}..{}: every device matching arch fingerprint {:016x} has dropped ({} arch-incompatible device(s) skipped)",
+                    range.start,
+                    range.end,
+                    fp,
+                    ineligible
+                ));
+            }
+        }
         Err(anyhow::anyhow!(
             "no surviving device for rows {}..{} (all {} devices dropped)",
             range.start,
@@ -840,7 +997,8 @@ impl Fleet {
     /// `range.len() × out_width` items), and stitch the outputs back in row
     /// order. With one usable device (or too few rows to split) this is a
     /// plain call on that device — the single-device path and the sharded
-    /// path are the same code.
+    /// path are the same code. Unconstrained, evenly-split variant of
+    /// [`Fleet::exec_row_sharded_weighted`] (ad-hoc GEMMs, no cost model).
     pub fn exec_row_sharded<T, E>(
         &self,
         home: Option<&Arc<Device>>,
@@ -852,13 +1010,39 @@ impl Fleet {
         T: Send,
         E: Fn(&Device, Range<usize>) -> anyhow::Result<Vec<T>> + Sync,
     {
+        self.exec_row_sharded_weighted(home, rows, out_width, None, exec)
+    }
+
+    /// Row-sharded execution with placement constraints and cost-weighted
+    /// row splits. `cost` carries the session's arch fingerprint (only
+    /// matching devices may execute shards — ineligible devices are never
+    /// claimed and never scanned as a fallback) and the program's predicted
+    /// cycles-per-row; the row split then equalizes predicted completion
+    /// time across the claimed devices (`sched::weighted_shards`) instead
+    /// of splitting evenly. `None` = unconstrained even split. Shard
+    /// outputs stitch in ascending row order either way, so the split
+    /// weights can never affect results (bit-identity is pinned by
+    /// `tests/sched_conformance.rs`).
+    pub fn exec_row_sharded_weighted<T, E>(
+        &self,
+        home: Option<&Arc<Device>>,
+        rows: usize,
+        out_width: usize,
+        cost: Option<(u64, f64)>,
+        exec: E,
+    ) -> anyhow::Result<Vec<T>>
+    where
+        T: Send,
+        E: Fn(&Device, Range<usize>) -> anyhow::Result<Vec<T>> + Sync,
+    {
         anyhow::ensure!(!self.devices.is_empty(), "fleet has no devices");
         if rows == 0 {
             return Ok(Vec::new());
         }
+        let fingerprint = cost.map(|(fp, _)| fp);
         let mut leases: Vec<Lease> = Vec::new();
         if let Some(d) = home {
-            if !d.is_failed() {
+            if !d.is_failed() && d.eligible(fingerprint) {
                 // The worker already holds this device; not ours to release.
                 leases.push(Lease { dev: Arc::clone(d), owned: false });
             }
@@ -867,32 +1051,57 @@ impl Fleet {
         // How many shards could this batch even use? Claim at most that.
         let max_useful = plan_shards(rows, self.devices.len(), self.opts.shard_min_rows).len();
         if max_useful > leases.len() {
-            leases.extend(self.claim_idle(exclude, max_useful - leases.len()));
+            leases.extend(self.claim_idle(exclude, max_useful - leases.len(), fingerprint));
         }
         let devlist: Vec<Arc<Device>> = if leases.is_empty() {
             // Home dropped (or absent) and nothing idle to claim: fall back
-            // to the first device — `run_one_shard` skips dropped devices
-            // and scans the whole fleet, so this is only a starting point.
-            vec![Arc::clone(&self.devices[0])]
+            // to the first eligible device — `run_one_shard` skips dropped
+            // and ineligible devices and scans the whole fleet, so this is
+            // only a starting point.
+            let d = self
+                .devices
+                .iter()
+                .find(|d| d.eligible(fingerprint))
+                .unwrap_or(&self.devices[0]);
+            vec![Arc::clone(d)]
         } else {
             leases.iter().map(|l| Arc::clone(&l.dev)).collect()
         };
-        let shards = plan_shards(rows, devlist.len(), self.opts.shard_min_rows);
-        let results: Vec<anyhow::Result<Vec<T>>> = if shards.len() <= 1 {
-            shards
+        // Assign ranges to devices: cost-weighted when a cycle model is in
+        // hand, even otherwise. Either way the ranges are contiguous,
+        // ascending and cover 0..rows — the stitching invariant.
+        let assignments: Vec<(usize, Range<usize>)> = match cost {
+            Some((_, cycles_per_row)) if devlist.len() > 1 => {
+                let preds: Vec<super::sched::DevicePrediction> = devlist
+                    .iter()
+                    .map(|d| super::sched::DevicePrediction {
+                        pending_cycles: d.pending_cycles() as f64,
+                        cycles_per_row,
+                    })
+                    .collect();
+                super::sched::weighted_shards(rows, self.opts.shard_min_rows, &preds)
+            }
+            _ => plan_shards(rows, devlist.len(), self.opts.shard_min_rows)
+                .into_iter()
+                .enumerate()
+                .collect(),
+        };
+        let results: Vec<anyhow::Result<Vec<T>>> = if assignments.len() <= 1 {
+            assignments
                 .iter()
-                .map(|r| self.run_one_shard(&devlist, 0, r.clone(), &exec))
+                .map(|(i, r)| self.run_one_shard(&devlist, *i, r.clone(), fingerprint, &exec))
                 .collect()
         } else {
             let devlist_ref = &devlist;
             let exec_ref = &exec;
             std::thread::scope(|s| {
-                let handles: Vec<_> = shards
+                let handles: Vec<_> = assignments
                     .iter()
-                    .enumerate()
                     .map(|(i, r)| {
-                        let range = r.clone();
-                        s.spawn(move || self.run_one_shard(devlist_ref, i, range, exec_ref))
+                        let (first, range) = (*i, r.clone());
+                        s.spawn(move || {
+                            self.run_one_shard(devlist_ref, first, range, fingerprint, exec_ref)
+                        })
                     })
                     .collect();
                 handles
@@ -906,7 +1115,7 @@ impl Fleet {
             })
         };
         let mut out: Vec<T> = Vec::with_capacity(rows * out_width);
-        for (r, res) in shards.iter().zip(results) {
+        for ((_, r), res) in assignments.iter().zip(results) {
             let v = res?;
             anyhow::ensure!(
                 v.len() == r.len() * out_width,
@@ -945,7 +1154,11 @@ impl Fleet {
             "activation is {} words, expected {rows}×{kf}",
             input.len()
         );
-        self.exec_row_sharded(home, rows, program.out_features(), |dev, r| {
+        let cost = Some((
+            crate::artifact::arch_fingerprint(&program.cfg),
+            super::sched::cycles_per_row(program),
+        ));
+        self.exec_row_sharded_weighted(home, rows, program.out_features(), cost, |dev, r| {
             let shard = program.shard_rows(r);
             dev.run_program_words(program, shard.row_count(), &input[shard.input_words()], weights)
         })
@@ -967,7 +1180,11 @@ impl Fleet {
             "activation is {} elements, expected {rows}×{kf}",
             input.len()
         );
-        self.exec_row_sharded(home, rows, program.out_features(), |dev, r| {
+        let cost = Some((
+            crate::artifact::arch_fingerprint(&program.cfg),
+            super::sched::cycles_per_row(program),
+        ));
+        self.exec_row_sharded_weighted(home, rows, program.out_features(), cost, |dev, r| {
             let shard = program.shard_rows(r);
             let out = dev.executor().run_program(
                 program,
@@ -1226,11 +1443,11 @@ mod tests {
     fn leases_release_busy_slots() {
         let f = fleet(3, 1);
         {
-            let leases = f.claim_idle(usize::MAX, 3);
+            let leases = f.claim_idle(usize::MAX, 3, None);
             assert_eq!(leases.len(), 3);
             assert!(f.devices().iter().all(|d| d.is_busy()));
             // A second claim finds nothing idle.
-            assert!(f.claim_idle(usize::MAX, 3).is_empty());
+            assert!(f.claim_idle(usize::MAX, 3, None).is_empty());
         }
         assert!(f.devices().iter().all(|d| !d.is_busy()), "leases restored availability");
     }
@@ -1361,6 +1578,114 @@ mod tests {
         // on a poll tick. Generous bound to stay robust on loaded CI.
         assert!(t0.elapsed() < Duration::from_secs(2), "{:?}", t0.elapsed());
         assert!(!f.workers_active());
+    }
+
+    fn hetero_fleet(archs: &[ArchConfig]) -> Fleet {
+        Fleet::with_archs(
+            archs,
+            Arc::new(NaiveExecutor),
+            FleetOptions { shard_min_rows: 1, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn with_archs_builds_one_device_per_arch() {
+        let archs = [ArchConfig::paper(4, 4), ArchConfig::paper(4, 8), ArchConfig::paper(4, 4)];
+        let f = hetero_fleet(&archs);
+        assert_eq!(f.device_count(), 3);
+        assert_eq!(f.cfg, archs[0], "device 0's arch is the fleet default");
+        for (d, a) in f.devices().iter().zip(&archs) {
+            assert_eq!(d.arch(), a);
+            assert_eq!(d.fingerprint(), crate::artifact::arch_fingerprint(a));
+        }
+        // Same arch → same fingerprint (devices 0 and 2 form one group).
+        assert_eq!(f.devices()[0].fingerprint(), f.devices()[2].fingerprint());
+        assert_ne!(f.devices()[0].fingerprint(), f.devices()[1].fingerprint());
+        // Eligibility: constrained work only matches its own group;
+        // unconstrained work runs anywhere.
+        let fp0 = f.devices()[0].fingerprint();
+        assert!(f.devices()[0].eligible(Some(fp0)));
+        assert!(!f.devices()[1].eligible(Some(fp0)));
+        assert!(f.devices()[1].eligible(None));
+    }
+
+    /// Regression (ISSUE 9): work stealing used to ignore session/device
+    /// compatibility — a steal from an incompatible device must be refused
+    /// and the job left queued for an eligible device.
+    #[test]
+    fn steal_refuses_incompatible_job_until_victim_fails() {
+        let f = hetero_fleet(&[ArchConfig::paper(4, 4), ArchConfig::paper(4, 8)]);
+        let fp0 = f.devices()[0].fingerprint();
+        let ran = Arc::new(AtomicU64::new(0));
+        let ran_c = Arc::clone(&ran);
+        f.submit_eligible(0, Some(fp0), 100, Box::new(move |_d| {
+            ran_c.fetch_add(1, Ordering::Relaxed);
+        }));
+        // The job landed on device 0 (the only eligible device) and charged
+        // its predicted cost to that queue.
+        assert_eq!(lock_clean(&f.devices()[0].queue).len(), 1);
+        assert_eq!(f.devices()[0].pending_cycles(), 100);
+        // Device 1 (wrong arch) scans for work: the steal must be refused
+        // while the victim is alive — the job stays queued.
+        assert!(f.next_job(&f.devices()[1]).is_none(), "incompatible steal refused");
+        assert_eq!(lock_clean(&f.devices()[0].queue).len(), 1, "job still queued");
+        assert_eq!(ran.load(Ordering::Relaxed), 0);
+        // Once the victim drops, anyone may rescue the job (the execution
+        // path enforces eligibility itself and answers with a typed error),
+        // so its requests are never stranded in a dead queue.
+        f.fail_device(0);
+        let (job, stolen, from_failed) =
+            f.next_job(&f.devices()[1]).expect("rescue from failed victim");
+        assert!(stolen && from_failed);
+        assert_eq!(f.devices()[0].pending_cycles(), 0, "cost discharged on rescue");
+        (job.job)(&f.devices()[1]);
+        assert_eq!(ran.load(Ordering::Relaxed), 1, "rescued job ran");
+    }
+
+    #[test]
+    fn submit_eligible_prefers_least_loaded_eligible_device() {
+        let f = hetero_fleet(&[
+            ArchConfig::paper(4, 4),
+            ArchConfig::paper(4, 4),
+            ArchConfig::paper(4, 8),
+        ]);
+        let fp = f.devices()[0].fingerprint();
+        // Pre-load device 0 with pending predicted work.
+        f.devices()[0].charge_pending(10_000);
+        f.submit_eligible(0, Some(fp), 500, Box::new(|_d| {}));
+        // Device 1 is eligible and idle → the job lands there, not on the
+        // loaded device 0 and never on the wrong-arch device 2.
+        assert_eq!(lock_clean(&f.devices()[1].queue).len(), 1);
+        assert_eq!(f.devices()[1].pending_cycles(), 500);
+        assert_eq!(lock_clean(&f.devices()[2].queue).len(), 0);
+    }
+
+    #[test]
+    fn hetero_sharding_executes_only_on_matching_arch() {
+        // Program compiled for the 4x8 device of a mixed fleet: sharded
+        // execution must only ever touch the matching device, and stays
+        // bit-identical to the single-device reference.
+        let f = hetero_fleet(&[ArchConfig::paper(4, 4), ArchConfig::paper(4, 8)]);
+        let other = ArchConfig::paper(4, 8);
+        let chain = Chain::mlp("hetero", 6, &[8, 8]);
+        let p = Program::compile(&other, &chain, &fast()).unwrap();
+        let mut rng = Lcg::new(31);
+        let ww = WordWeights::new(
+            chain.layers.iter().map(|g| ElemType::I32.sample_words(&mut rng, g.k * g.n)).collect(),
+            ElemType::I32,
+        );
+        let input = ElemType::I32.sample_words(&mut rng, 6 * p.in_features());
+        let got = f.run_program_words(None, &p, 6, &input, &ww).unwrap();
+        let want = execute_program_words(&p, 6, &input, &ww).unwrap();
+        assert_eq!(got, want, "hetero placement is bit-exact");
+        assert_eq!(f.devices()[0].stats().shards, 0, "wrong-arch device untouched");
+        assert!(f.devices()[1].stats().shards >= 1);
+        // Drop the only eligible device: a typed placement error, not a
+        // hang and never a wrong-arch execution.
+        f.fail_device(1);
+        let e = f.run_program_words(None, &p, 6, &input, &ww).unwrap_err();
+        assert!(e.to_string().starts_with("no eligible device"), "{e}");
+        assert_eq!(f.devices()[0].stats().shards, 0, "still untouched after dropout");
     }
 
     #[test]

@@ -6,6 +6,7 @@
 
 pub mod admission;
 pub mod fleet;
+pub mod sched;
 pub mod serve;
 
 use crate::arch::config::ArchConfig;

@@ -1,0 +1,329 @@
+//! Cost-aware scheduling — perf-model-driven placement and row-split
+//! weighting for heterogeneous fleets (§Sched tentpole, ROADMAP item 3).
+//!
+//! The fleet's two dispatch granularities both consult the same cost
+//! model here:
+//!
+//! * **Placement** (request-parallel): [`predict_cycles`] prices a batch
+//!   on a device from the program's compile-time perf model
+//!   ([`Program::total_cycles`], the `perf/` 5-engine pipeline), and the
+//!   fleet routes to the eligible device whose queue finishes earliest
+//!   under the prediction (pending predicted cycles + this batch).
+//!   Eligibility is strict arch-fingerprint equality — a compiled
+//!   program's plans encode one `ArchConfig`'s addressing, so running it
+//!   anywhere else is a correctness error, not a slowdown.
+//! * **Row splitting** (tile-parallel): [`weighted_shards`] replaces the
+//!   even `plan_shards` split with a completion-time waterfill — each
+//!   device's share is sized so all shards are predicted to finish
+//!   together, accounting for the work already queued on each device
+//!   ([`DevicePrediction::pending_cycles`]) and its per-row cost.
+//!
+//! Both functions are pure and deterministic: same inputs → same
+//! placement, which is what lets `tests/sched_conformance.rs` pin the
+//! stitch order and prove bit-identity against single-device execution.
+
+// Hot-file lint escalation (§Perf CI satellite) — see plan.rs.
+#![deny(clippy::needless_range_loop, clippy::manual_memcpy)]
+
+use std::ops::Range;
+
+use crate::program::Program;
+
+/// Predicted cycles to execute `rows` activation rows of `program` on a
+/// device of the program's own arch. Chunked execution replays the whole
+/// compiled chain once per `ceil(rows / m)` chunk of the compiled row
+/// height `m` (`execute_program_words_blocked`), so partial chunks cost a
+/// full pass — the honest step function, not a smooth rate.
+pub fn predict_cycles(program: &Program, rows: usize) -> f64 {
+    if rows == 0 {
+        return 0.0;
+    }
+    let m = program.rows().max(1);
+    program.total_cycles * rows.div_ceil(m) as f64
+}
+
+/// Smooth per-row cycle rate of `program` — the waterfill weight for
+/// [`weighted_shards`] (the step function of [`predict_cycles`] is not
+/// invertible; the rate is its dense-batch limit).
+pub fn cycles_per_row(program: &Program) -> f64 {
+    program.total_cycles / program.rows().max(1) as f64
+}
+
+/// One device's scheduling inputs for [`weighted_shards`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DevicePrediction {
+    /// Predicted cycles of work already queued on (or executing on) the
+    /// device — the completion-time head start it must amortize.
+    pub pending_cycles: f64,
+    /// Predicted cycles per activation row for the program being split
+    /// (uniform across a fingerprint-eligible set, but kept per-device so
+    /// the waterfill generalizes).
+    pub cycles_per_row: f64,
+}
+
+impl DevicePrediction {
+    /// Predicted completion time if this device were handed `rows` rows.
+    fn completion(&self, rows: usize) -> f64 {
+        self.pending_cycles + rows as f64 * self.cycles_per_row.max(0.0)
+    }
+}
+
+/// Split `rows` contiguous activation rows across the devices of `preds`
+/// so that every shard is predicted to **finish at the same time**:
+/// device `d` gets `s_d = (T − pending_d) / cycles_per_row_d` rows, with
+/// the common completion time `T` chosen so the shares sum to `rows`
+/// (devices whose backlog already exceeds `T` get nothing). Returns
+/// `(device_index, row_range)` pairs — indices into `preds` — with ranges
+/// contiguous, ascending, covering `0..rows` exactly and assigned to
+/// devices in ascending index order (the pinned stitch order). Every
+/// returned shard has at least `min_rows` rows unless `rows < min_rows`
+/// (then one shard carries everything). Deterministic: ties break on the
+/// lower device index.
+pub fn weighted_shards(
+    rows: usize,
+    min_rows: usize,
+    preds: &[DevicePrediction],
+) -> Vec<(usize, Range<usize>)> {
+    if rows == 0 || preds.is_empty() {
+        return Vec::new();
+    }
+    let min_rows = min_rows.max(1);
+    let n_max = (rows / min_rows).clamp(1, preds.len());
+    // Candidate devices: the n_max least-loaded (they can absorb the most
+    // rows before the fleet equalizes), ties on index for determinism.
+    let mut order: Vec<usize> = (0..preds.len()).collect();
+    order.sort_by(|&a, &b| {
+        preds[a]
+            .pending_cycles
+            .total_cmp(&preds[b].pending_cycles)
+            .then(a.cmp(&b))
+    });
+    order.truncate(n_max);
+    if order.len() == 1 || rows < 2 * min_rows {
+        // Nothing to split: the whole batch goes to the device that
+        // finishes it earliest.
+        let best = *order
+            .iter()
+            .min_by(|&&a, &&b| {
+                preds[a]
+                    .completion(rows)
+                    .total_cmp(&preds[b].completion(rows))
+                    .then(a.cmp(&b))
+            })
+            .expect("order is non-empty");
+        return vec![(best, 0..rows)];
+    }
+    // Waterfill: with candidates sorted by pending ascending, find the
+    // largest prefix k whose common completion time T_k clears every
+    // member's backlog. Degenerate rates (cycles_per_row ≤ 0) mean "cost
+    // unknown" — fall back to weight 1 so the split degrades to
+    // pending-blind near-even sharing instead of dividing by zero.
+    let rate = |i: usize| {
+        let c = preds[i].cycles_per_row;
+        if c > 0.0 {
+            c
+        } else {
+            1.0
+        }
+    };
+    let mut shares = vec![0.0f64; preds.len()];
+    for k in (1..=order.len()).rev() {
+        let prefix = &order[..k];
+        let inv_sum: f64 = prefix.iter().map(|&i| 1.0 / rate(i)).sum();
+        let load_sum: f64 = prefix.iter().map(|&i| preds[i].pending_cycles / rate(i)).sum();
+        let t = (rows as f64 + load_sum) / inv_sum;
+        let worst = preds[prefix[k - 1]].pending_cycles;
+        if t >= worst || k == 1 {
+            for &i in prefix {
+                shares[i] = ((t - preds[i].pending_cycles) / rate(i)).max(0.0);
+            }
+            break;
+        }
+    }
+    // Integer rounding: floors, then distribute the remainder by largest
+    // fractional part (ties on lower index).
+    let mut ishares: Vec<usize> = shares.iter().map(|s| s.floor() as usize).collect();
+    let assigned: usize = ishares.iter().sum();
+    let mut rem = rows.saturating_sub(assigned);
+    let mut frac_order: Vec<usize> = order.clone();
+    frac_order.sort_by(|&a, &b| {
+        (shares[b] - shares[b].floor())
+            .total_cmp(&(shares[a] - shares[a].floor()))
+            .then(a.cmp(&b))
+    });
+    let mut fi = 0usize;
+    while rem > 0 {
+        ishares[frac_order[fi % frac_order.len()]] += 1;
+        rem -= 1;
+        fi += 1;
+    }
+    // Enforce the per-shard minimum: fold undersized shares into the
+    // current largest share (ties on lower index) until every non-zero
+    // share clears min_rows.
+    loop {
+        let Some(small) = (0..ishares.len())
+            .filter(|&i| ishares[i] > 0 && ishares[i] < min_rows)
+            .min_by_key(|&i| (ishares[i], i))
+        else {
+            break;
+        };
+        let big = (0..ishares.len())
+            .filter(|&i| i != small && ishares[i] > 0)
+            .max_by_key(|&i| (ishares[i], usize::MAX - i));
+        match big {
+            Some(b) => {
+                ishares[b] += ishares[small];
+                ishares[small] = 0;
+            }
+            None => break, // only one non-zero share: keep it whatever its size
+        }
+    }
+    debug_assert_eq!(ishares.iter().sum::<usize>(), rows);
+    // Ranges in ascending device-index order — the pinned stitch order.
+    let mut out = Vec::new();
+    let mut r0 = 0usize;
+    for (i, &s) in ishares.iter().enumerate() {
+        if s == 0 {
+            continue;
+        }
+        out.push((i, r0..r0 + s));
+        r0 += s;
+    }
+    debug_assert_eq!(r0, rows);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::config::ArchConfig;
+    use crate::mapper::chain::Chain;
+    use crate::mapper::search::MapperOptions;
+    use crate::util::prop::forall;
+
+    fn pred(pending: f64, cpr: f64) -> DevicePrediction {
+        DevicePrediction { pending_cycles: pending, cycles_per_row: cpr }
+    }
+
+    fn check_invariants(rows: usize, min_rows: usize, out: &[(usize, Range<usize>)]) {
+        assert!(!out.is_empty());
+        assert_eq!(out[0].1.start, 0);
+        assert_eq!(out.last().unwrap().1.end, rows);
+        for w in out.windows(2) {
+            assert_eq!(w[0].1.end, w[1].1.start, "contiguous");
+            assert!(w[0].0 < w[1].0, "ascending device order (stitch pin)");
+        }
+        let total: usize = out.iter().map(|(_, r)| r.len()).sum();
+        assert_eq!(total, rows, "rows conserved");
+        if out.len() > 1 {
+            for (i, r) in out {
+                assert!(r.len() >= min_rows.max(1), "dev{i} shard {r:?} under min {min_rows}");
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_shards_conserve_rows_under_arbitrary_loads() {
+        forall("weighted-shards-conserve", 256, |g| {
+            let rows = g.usize(1, 300);
+            let min_rows = g.usize(1, 40);
+            let n = g.usize(1, 6);
+            let preds: Vec<DevicePrediction> = (0..n)
+                .map(|_| pred(g.usize(0, 100_000) as f64, g.usize(1, 500) as f64))
+                .collect();
+            let out = weighted_shards(rows, min_rows, &preds);
+            check_invariants(rows, min_rows, &out);
+            for (i, _) in &out {
+                assert!(*i < n, "device index in range");
+            }
+            // Deterministic.
+            assert_eq!(out, weighted_shards(rows, min_rows, &preds));
+        });
+    }
+
+    #[test]
+    fn even_fleet_splits_evenly() {
+        let preds = vec![pred(0.0, 10.0); 4];
+        let out = weighted_shards(100, 1, &preds);
+        assert_eq!(out.len(), 4);
+        for (_, r) in &out {
+            assert_eq!(r.len(), 25);
+        }
+    }
+
+    #[test]
+    fn loaded_device_gets_fewer_rows() {
+        // Device 1 starts 500 cycles behind at 10 cycles/row: it should
+        // get 50 fewer rows than device 0 (waterfill equalization).
+        let preds = vec![pred(0.0, 10.0), pred(500.0, 10.0)];
+        let out = weighted_shards(100, 1, &preds);
+        assert_eq!(out.len(), 2);
+        let s0 = out[0].1.len();
+        let s1 = out[1].1.len();
+        assert_eq!(s0 + s1, 100);
+        assert_eq!(s0 as i64 - s1 as i64, 50, "{out:?}");
+    }
+
+    #[test]
+    fn swamped_device_gets_nothing() {
+        let preds = vec![pred(0.0, 10.0), pred(1e12, 10.0)];
+        let out = weighted_shards(40, 1, &preds);
+        assert_eq!(out, vec![(0, 0..40)]);
+    }
+
+    #[test]
+    fn faster_arch_gets_more_rows() {
+        // Device 1 costs 4× per row: the waterfill gives device 0 ~4× the
+        // rows so both finish together.
+        let preds = vec![pred(0.0, 10.0), pred(0.0, 40.0)];
+        let out = weighted_shards(100, 1, &preds);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].1.len(), 80, "{out:?}");
+        assert_eq!(out[1].1.len(), 20, "{out:?}");
+    }
+
+    #[test]
+    fn min_rows_folds_slivers() {
+        // 10 rows over 3 devices with min 4: no 3-way split exists, the
+        // fold must leave every shard ≥ 4 and conserve rows.
+        let preds = vec![pred(0.0, 10.0); 3];
+        let out = weighted_shards(10, 4, &preds);
+        check_invariants(10, 4, &out);
+        assert!(out.len() <= 2, "{out:?}");
+    }
+
+    #[test]
+    fn tiny_batch_is_one_shard_on_the_earliest_finisher() {
+        let preds = vec![pred(900.0, 10.0), pred(100.0, 10.0), pred(500.0, 10.0)];
+        let out = weighted_shards(3, 8, &preds);
+        assert_eq!(out, vec![(1, 0..3)], "earliest completion wins the whole batch");
+        assert!(weighted_shards(0, 1, &preds).is_empty());
+        assert!(weighted_shards(5, 1, &[]).is_empty());
+    }
+
+    #[test]
+    fn degenerate_rates_fall_back_to_even_sharing() {
+        let preds = vec![pred(0.0, 0.0), pred(0.0, 0.0)];
+        let out = weighted_shards(64, 1, &preds);
+        check_invariants(64, 1, &out);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].1.len(), 32);
+    }
+
+    #[test]
+    fn predict_cycles_charges_whole_chain_passes() {
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("sched", 4, &[8, 8]);
+        let opts = MapperOptions { full_layout_search: false, threads: 1, ..Default::default() };
+        let p = Program::compile(&cfg, &chain, &opts).unwrap();
+        assert_eq!(predict_cycles(&p, 0), 0.0);
+        let one = predict_cycles(&p, 4); // exactly one chunk
+        assert!(one > 0.0);
+        assert_eq!(one, p.total_cycles);
+        // Partial chunks round up: 5 rows = 2 passes, 8 rows = 2 passes.
+        assert_eq!(predict_cycles(&p, 5), 2.0 * p.total_cycles);
+        assert_eq!(predict_cycles(&p, 8), 2.0 * p.total_cycles);
+        // The smooth rate times the chunk height recovers one pass.
+        assert!((cycles_per_row(&p) * 4.0 - p.total_cycles).abs() < 1e-9);
+    }
+}

@@ -684,11 +684,18 @@ struct OpenBatch {
 }
 
 /// Serving-stack sizing knobs.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ServerOptions {
     /// Simulated FEATHER+ devices in the fleet (1 = the classic inline
-    /// single-device leader).
+    /// single-device leader). Ignored when `device_archs` is non-empty.
     pub devices: usize,
+    /// Per-device architectures for a heterogeneous fleet (the CLI's
+    /// `--device-archs 4x4,8x16,...`). Empty means a homogeneous fleet of
+    /// `devices` copies of the server config. When set, the fleet has one
+    /// device per entry and session work is placed only on devices whose
+    /// arch fingerprint matches the session's program (see
+    /// [`super::fleet::Device::eligible`]).
+    pub device_archs: Vec<ArchConfig>,
     /// Minimum activation rows per tile-parallel shard (see
     /// [`super::fleet::FleetOptions::shard_min_rows`]).
     pub shard_min_rows: usize,
@@ -712,6 +719,7 @@ impl Default for ServerOptions {
     fn default() -> Self {
         Self {
             devices: 1,
+            device_archs: Vec::new(),
             shard_min_rows: 8,
             max_batch: 8,
             shard_timeout_ms: 0,
@@ -772,16 +780,21 @@ impl Server {
         executor: Arc<dyn TileExecutor>,
         sopts: ServerOptions,
     ) -> Self {
-        let fleet = Arc::new(Fleet::new(
-            cfg,
-            executor,
-            FleetOptions {
-                devices: sopts.devices,
-                shard_min_rows: sopts.shard_min_rows,
-                shard_timeout_ms: sopts.shard_timeout_ms,
-                ..Default::default()
+        let fopts = FleetOptions {
+            devices: if sopts.device_archs.is_empty() {
+                sopts.devices
+            } else {
+                sopts.device_archs.len()
             },
-        ));
+            shard_min_rows: sopts.shard_min_rows,
+            shard_timeout_ms: sopts.shard_timeout_ms,
+            ..Default::default()
+        };
+        let fleet = Arc::new(if sopts.device_archs.is_empty() {
+            Fleet::new(cfg, executor, fopts)
+        } else {
+            Fleet::with_archs(&sopts.device_archs, executor, fopts)
+        });
         let metrics = Arc::new(MetricsRegistry::new());
         let ctr = ServeCounters::new(&metrics);
         Self {
@@ -873,11 +886,13 @@ impl Server {
             dg("minisa_fetch_stall_cycles", d.modeled.minisa_fetch_stall_cycles);
             dg("micro_compute_cycles", d.modeled.micro_compute_cycles);
             dg("micro_fetch_stall_cycles", d.modeled.micro_fetch_stall_cycles);
+            dg("predict_err", d.predict_err());
         }
         let m = rep.modeled();
         g("fleet_minisa_stall_fraction".to_string(), m.minisa_stall_fraction());
         g("fleet_micro_stall_fraction".to_string(), m.micro_stall_fraction());
         g("fleet_control_speedup".to_string(), m.control_speedup());
+        g("fleet_fetch_contention".to_string(), rep.shared_fetch().micro_contention);
         self.metrics.snapshot()
     }
 
@@ -905,10 +920,14 @@ impl Server {
                 self.register(ArtifactSource::Artifact(Box::new(art)))
             }
             ArtifactSource::Artifact(art) => {
+                // Heterogeneous fleets accept any artifact that at least one
+                // device can execute; placement eligibility then keeps the
+                // session's work on fingerprint-matching devices only.
+                let fp = crate::artifact::arch_fingerprint(&art.cfg);
                 anyhow::ensure!(
-                    art.cfg == self.cfg,
+                    self.fleet.devices().iter().any(|d| d.fingerprint() == fp),
                     "artifact was compiled for {} (fingerprint {:016x}) but this server runs {} \
-                     ({:016x})",
+                     ({:016x}) and no fleet device matches",
                     art.cfg.name(),
                     art.fingerprint(),
                     self.cfg.name(),
@@ -1246,17 +1265,43 @@ impl Server {
         Some(r)
     }
 
+    /// Placement inputs for a batch: the session's arch fingerprint (None
+    /// for ad-hoc GEMMs, which any device serves under the server config)
+    /// and the predicted cycle cost charged against the chosen device's
+    /// queue (see [`super::sched::predict_cycles`]).
+    fn placement_cost(&self, bk: &BatchKey, batch: &[Request]) -> (Option<u64>, u64) {
+        let pid = match bk {
+            BatchKey::Program(pid) | BatchKey::ProgramWords(pid) => *pid,
+            BatchKey::Gemm { .. } => return (None, 0),
+        };
+        // A missing session answers `session_gone` downstream; placement
+        // just falls back to cost-blind routing.
+        let Some(program) = self.program(pid) else { return (None, 0) };
+        let rows: usize = batch
+            .iter()
+            .map(|r| match &r.payload {
+                Payload::Program { rows, .. } | Payload::ProgramWords { rows, .. } => *rows,
+                Payload::Gemm { .. } => 0,
+            })
+            .sum();
+        let fp = crate::artifact::arch_fingerprint(&program.cfg);
+        (Some(fp), super::sched::predict_cycles(&program, rows) as u64)
+    }
+
     /// Submit one formed batch to the fleet, leaving it open for injection
     /// until a device worker claims it.
     fn submit_fleet(self: &Arc<Self>, batch: Vec<Request>, tx: &Sender<Response>) {
         let bk = batch_key(&batch[0]);
         let key = affinity(&bk);
+        let (fingerprint, cost) = self.placement_cost(&bk, &batch);
         let ob = Arc::new(OpenBatch { reqs: Mutex::new(Some(batch)) });
         lock_clean(&self.open).insert(bk, Arc::clone(&ob));
         let srv = Arc::clone(self);
         let txc = tx.clone();
-        self.fleet.submit(
+        self.fleet.submit_eligible(
             key,
+            fingerprint,
+            cost,
             Box::new(move |dev| {
                 // A send failure means the response receiver is gone;
                 // remaining jobs drain harmlessly.
@@ -1326,7 +1371,9 @@ impl Server {
                 self.ctr.session_gone.add(n);
                 self.ctr.errors.add(n);
             }
-            ErrorCode::Watchdog | ErrorCode::Exec => self.ctr.errors.add(n),
+            ErrorCode::Watchdog | ErrorCode::Exec | ErrorCode::NoEligibleDevice => {
+                self.ctr.errors.add(n)
+            }
         }
     }
 
@@ -1370,10 +1417,15 @@ impl Server {
     }
 
     /// Fleet errors carry a `watchdog:` prefix when a slow shard exhausted
-    /// the retry budget; surface those under the typed watchdog code.
+    /// the retry budget; surface those under the typed watchdog code. A
+    /// `no eligible device` prefix means every arch-compatible device has
+    /// dropped out of a heterogeneous fleet — its own typed code so
+    /// clients can distinguish placement starvation from compute faults.
     fn exec_code(msg: &str) -> ErrorCode {
         if msg.starts_with("watchdog") {
             ErrorCode::Watchdog
+        } else if msg.starts_with("no eligible device") {
+            ErrorCode::NoEligibleDevice
         } else {
             ErrorCode::Exec
         }

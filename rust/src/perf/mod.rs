@@ -204,6 +204,12 @@ pub struct StallModel {
     pub micro_compute_cycles: f64,
     /// Fetch-stall cycles for the micro twin (the paper's 96.9% on 16×256).
     pub micro_fetch_stall_cycles: f64,
+    /// Fetch-engine busy cycles under MINISA control — the off-chip
+    /// instruction traffic actually moved, i.e. this work's demand on a
+    /// shared fetch channel ([`SharedFetch`]).
+    pub minisa_fetch_cycles: f64,
+    /// Fetch-engine busy cycles for the micro twin.
+    pub micro_fetch_cycles: f64,
 }
 
 impl StallModel {
@@ -216,6 +222,8 @@ impl StallModel {
             micro_total_cycles: micro.total_cycles,
             micro_compute_cycles: micro.compute_cycles,
             micro_fetch_stall_cycles: micro.stall_instr_cycles,
+            minisa_fetch_cycles: minisa.fetch_cycles,
+            micro_fetch_cycles: micro.fetch_cycles,
         }
     }
 
@@ -259,6 +267,53 @@ impl StallModel {
         self.micro_total_cycles += other.micro_total_cycles * frac;
         self.micro_compute_cycles += other.micro_compute_cycles * frac;
         self.micro_fetch_stall_cycles += other.micro_fetch_stall_cycles * frac;
+        self.minisa_fetch_cycles += other.minisa_fetch_cycles * frac;
+        self.micro_fetch_cycles += other.micro_fetch_cycles * frac;
+    }
+}
+
+/// Shared off-chip instruction-fetch channel model (§ROADMAP item 3, the
+/// cost-aware scheduling tentpole): devices in the same arch group fetch
+/// their control streams over one common off-chip channel, so the channel's
+/// service time is the **sum** of the group's fetch demand while compute
+/// proceeds in parallel per device. A group's makespan under a control
+/// regime is therefore `max(slowest device's standalone cycles, Σ group
+/// fetch cycles)`; the fleet makespan is the max over groups (each group
+/// owns its own channel). Under micro-instruction control the summed fetch
+/// traffic saturates the channel and the fleet makespan collapses onto it —
+/// the paper's per-device fetch-stall headline (96.9% on 16×256) re-emerges
+/// as fleet-scale contention — while MINISA's tiny traces leave the channel
+/// idle and the fleet scales with compute.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SharedFetch {
+    /// Fleet makespan under MINISA control with the shared channel applied.
+    pub minisa_makespan: f64,
+    /// Fleet makespan for the micro twin with the shared channel applied.
+    pub micro_makespan: f64,
+    /// `makespan / standalone makespan` under MINISA (1.0 = the channel
+    /// never binds; MINISA stays ≈ 1 even on wide fleets).
+    pub minisa_contention: f64,
+    /// `makespan / standalone makespan` for the micro twin — grows with the
+    /// number of devices sharing the channel once fetch dominates.
+    pub micro_contention: f64,
+}
+
+impl SharedFetch {
+    /// Fleet-wide modeled speedup of the MINISA encoding over micro-coded
+    /// control with the shared fetch channel applied. At paper scale this
+    /// exceeds the per-device [`StallModel::control_speedup`] because micro
+    /// contends for the channel and MINISA does not. 0 when nothing was
+    /// accumulated.
+    pub fn control_speedup(&self) -> f64 {
+        if self.minisa_makespan == 0.0 {
+            return 0.0;
+        }
+        self.micro_makespan / self.minisa_makespan
+    }
+
+    /// True once any modeled work flowed through the channel.
+    pub fn is_populated(&self) -> bool {
+        self.minisa_makespan > 0.0 || self.micro_makespan > 0.0
     }
 }
 
@@ -303,8 +358,34 @@ pub struct DeviceLoad {
     /// accounting; zero when the executed work carried no perf decision,
     /// e.g. raw GEMM dispatch).
     pub modeled: StallModel,
+    /// Arch-fingerprint group this device belongs to (placement eligibility
+    /// and the shared fetch channel share the grouping); 0 for a bare
+    /// report built outside the fleet.
+    pub group: u64,
+    /// Human-readable arch name ("4x4"); empty for a bare report.
+    pub arch: String,
+    /// Cycles the cost-aware scheduler (`coordinator::sched`) predicted for
+    /// the work this device executed; 0 when cost-aware dispatch was not
+    /// engaged (bare fleet, raw GEMM).
+    pub predicted_cycles: f64,
     /// Device has dropped out (failure injection).
     pub failed: bool,
+}
+
+impl DeviceLoad {
+    /// Relative error of the scheduler's cycle prediction against the
+    /// modeled cycles this device actually executed (wave-scaled MINISA
+    /// model — the "simulated" side of predicted-vs-simulated). The two
+    /// sides differ honestly on partial chunks: prediction charges whole
+    /// chain passes (`ceil(rows / m)`), accounting charges the executed row
+    /// fraction. 0 until both sides have accumulated work.
+    pub fn predict_err(&self) -> f64 {
+        let modeled = self.modeled.minisa_total_cycles;
+        if modeled <= 0.0 || self.predicted_cycles <= 0.0 {
+            return 0.0;
+        }
+        (self.predicted_cycles - modeled).abs() / modeled
+    }
 }
 
 /// Fleet-level roll-up over one observation window: per-device busy/stall
@@ -358,6 +439,45 @@ impl FleetReport {
             m.absorb_scaled(&d.modeled, 1.0);
         }
         m
+    }
+
+    /// Shared instruction-fetch channel roll-up: per arch group, the
+    /// makespan is `max(slowest device standalone, Σ group fetch demand)`;
+    /// the fleet makespan is the max over groups. See [`SharedFetch`].
+    pub fn shared_fetch(&self) -> SharedFetch {
+        let mut groups: Vec<u64> = Vec::new();
+        for d in &self.devices {
+            if d.modeled.is_populated() && !groups.contains(&d.group) {
+                groups.push(d.group);
+            }
+        }
+        let mut sf = SharedFetch::default();
+        let mut minisa_standalone = 0.0f64;
+        let mut micro_standalone = 0.0f64;
+        for g in groups {
+            let mut minisa_max = 0.0f64;
+            let mut minisa_fetch = 0.0f64;
+            let mut micro_max = 0.0f64;
+            let mut micro_fetch = 0.0f64;
+            for d in self.devices.iter().filter(|d| d.group == g) {
+                if !d.modeled.is_populated() {
+                    continue;
+                }
+                minisa_max = minisa_max.max(d.modeled.minisa_total_cycles);
+                micro_max = micro_max.max(d.modeled.micro_total_cycles);
+                minisa_fetch += d.modeled.minisa_fetch_cycles;
+                micro_fetch += d.modeled.micro_fetch_cycles;
+            }
+            sf.minisa_makespan = sf.minisa_makespan.max(minisa_max.max(minisa_fetch));
+            sf.micro_makespan = sf.micro_makespan.max(micro_max.max(micro_fetch));
+            minisa_standalone = minisa_standalone.max(minisa_max);
+            micro_standalone = micro_standalone.max(micro_max);
+        }
+        sf.minisa_contention =
+            if minisa_standalone > 0.0 { sf.minisa_makespan / minisa_standalone } else { 0.0 };
+        sf.micro_contention =
+            if micro_standalone > 0.0 { sf.micro_makespan / micro_standalone } else { 0.0 };
+        sf
     }
 
     /// Mean queue time of stolen jobs (µs): the steal-latency headline.
@@ -459,6 +579,30 @@ impl FleetReport {
                 m.minisa_stall_fraction() * 100.0,
                 m.control_speedup(),
             ));
+            let sf = self.shared_fetch();
+            if sf.is_populated() {
+                s.push_str(&format!(
+                    "\nfetch: shared channel contention {:.2}x micro vs {:.2}x minisa, fleet control speedup {:.1}x",
+                    sf.micro_contention,
+                    sf.minisa_contention,
+                    sf.control_speedup(),
+                ));
+            }
+        }
+        if self.devices.iter().any(|d| d.predicted_cycles > 0.0) {
+            s.push_str(
+                "\nsched: device  arch     predicted-cycles    modeled-cycles  predict-err%\n",
+            );
+            for d in self.devices.iter().filter(|d| d.predicted_cycles > 0.0) {
+                s.push_str(&format!(
+                    "sched: dev{:<4} {:<8} {:>15.0} {:>17.0} {:>13.1}\n",
+                    d.device,
+                    d.arch,
+                    d.predicted_cycles,
+                    d.modeled.minisa_total_cycles,
+                    d.predict_err() * 100.0,
+                ));
+            }
         }
         s
     }
@@ -608,6 +752,8 @@ mod tests {
             micro_total_cycles: 1000.0,
             micro_compute_cycles: 90.0,
             micro_fetch_stall_cycles: 900.0,
+            minisa_fetch_cycles: 2.0,
+            micro_fetch_cycles: 950.0,
         };
         // Shards covering halves of a program sum back to the whole.
         let mut acc = StallModel::default();
@@ -616,6 +762,8 @@ mod tests {
         acc.absorb_scaled(&unit, 0.5);
         assert!((acc.minisa_total_cycles - 100.0).abs() < 1e-9);
         assert!((acc.micro_fetch_stall_cycles - 900.0).abs() < 1e-9);
+        assert!((acc.minisa_fetch_cycles - 2.0).abs() < 1e-9);
+        assert!((acc.micro_fetch_cycles - 950.0).abs() < 1e-9);
         assert!((acc.micro_stall_fraction() - 0.9).abs() < 1e-9);
         assert!((acc.control_speedup() - 10.0).abs() < 1e-9);
         // Empty model divides safely.
@@ -633,6 +781,8 @@ mod tests {
             micro_total_cycles: 2000.0,
             micro_compute_cycles: 90.0,
             micro_fetch_stall_cycles: 1900.0,
+            minisa_fetch_cycles: 3.0,
+            micro_fetch_cycles: 1950.0,
         };
         let mut d0 = load(0, 10.0, false);
         d0.modeled = unit;
@@ -659,6 +809,79 @@ mod tests {
 
     fn load(device: usize, busy: f64, failed: bool) -> DeviceLoad {
         DeviceLoad { device, busy, failed, ..Default::default() }
+    }
+
+    #[test]
+    fn shared_fetch_channel_collapses_micro_but_not_minisa() {
+        // Fleet of 4 paper(16,256) devices, each having executed the same
+        // modeled workload. Micro control is fetch-bound per device, so the
+        // shared channel serializes ~4× the traffic; MINISA's traces leave
+        // the channel idle. The fleet-scale control speedup must exceed the
+        // per-device one — ROADMAP item 3 measured, not asserted by fiat.
+        let cfg = ArchConfig::paper(16, 256);
+        let tiles =
+            vec![TilePlan { compute_cycles: 16 * 1024, ..Default::default() }; 64];
+        let minisa = simulate(&cfg, &tiles);
+        let micro = simulate(&cfg, &with_micro_instructions(&cfg, &tiles, 16));
+        let unit = StallModel::from_reports(&minisa, &micro);
+        let fp = 0xfeed_f00du64;
+        let devices: Vec<DeviceLoad> = (0..4)
+            .map(|i| DeviceLoad {
+                device: i,
+                busy: 10.0,
+                modeled: unit,
+                group: fp,
+                arch: "16x256".into(),
+                ..Default::default()
+            })
+            .collect();
+        let rep = FleetReport { window: 100.0, devices, ..Default::default() };
+        let sf = rep.shared_fetch();
+        assert!(sf.is_populated());
+        // Micro saturates the shared channel: contention grows toward the
+        // device count. MINISA stays channel-unbound.
+        assert!(sf.micro_contention > 2.0, "{}", sf.micro_contention);
+        assert!(sf.minisa_contention < 1.1, "{}", sf.minisa_contention);
+        assert!(
+            sf.control_speedup() > unit.control_speedup(),
+            "fleet {} vs device {}",
+            sf.control_speedup(),
+            unit.control_speedup()
+        );
+        let r = rep.render();
+        assert!(r.contains("shared channel contention"), "{r}");
+        // Empty report: everything divides safely.
+        let empty = FleetReport::default().shared_fetch();
+        assert!(!empty.is_populated());
+        assert_eq!(empty.control_speedup(), 0.0);
+    }
+
+    #[test]
+    fn predict_err_and_sched_render() {
+        let mut d = load(0, 10.0, false);
+        d.arch = "4x4".into();
+        d.predicted_cycles = 110.0;
+        d.modeled.minisa_total_cycles = 100.0;
+        assert!((d.predict_err() - 0.1).abs() < 1e-9);
+        // One-sided accumulation reads as zero error, not a divide blowup.
+        assert_eq!(load(1, 0.0, false).predict_err(), 0.0);
+        let rep = FleetReport {
+            window: 100.0,
+            devices: vec![d, load(1, 5.0, false)],
+            ..Default::default()
+        };
+        let r = rep.render();
+        assert!(r.contains("predict-err%"), "{r}");
+        assert!(r.contains("sched: dev0"), "{r}");
+        // Devices that never saw cost-aware dispatch don't get a row.
+        assert!(!r.contains("sched: dev1"), "{r}");
+        // A bare report renders no sched table at all.
+        let bare = FleetReport {
+            window: 100.0,
+            devices: vec![load(0, 1.0, false)],
+            ..Default::default()
+        };
+        assert!(!bare.render().contains("predict-err%"));
     }
 
     #[test]

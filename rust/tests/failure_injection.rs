@@ -490,6 +490,93 @@ fn fault_battery_goldilocks() {
     fault_battery(ElemType::Goldilocks);
 }
 
+/// Heterogeneous-fleet fault injection (§Sched satellite): in a mixed-arch
+/// fleet exactly one device matches the session's arch fingerprint, and the
+/// scripted schedule drops that device permanently mid-stream. Requests
+/// served before the dropout stay bit-exact; every request after it is
+/// *answered* with the typed `no eligible device` error — no hang — and at
+/// no point does a wrong-arch device execute a row.
+#[test]
+fn hetero_fleet_dropping_only_eligible_device_errors_cleanly() {
+    use minisa::coordinator::admission::ErrorCode;
+    type G = ModP<Goldilocks>;
+    let home = ArchConfig::paper(4, 4);
+    let opts = ServerOptions {
+        device_archs: vec![
+            ArchConfig::paper(4, 4),
+            ArchConfig::paper(4, 8),
+            ArchConfig::paper(4, 8),
+        ],
+        shard_min_rows: 1,
+        max_batch: 4,
+        ..Default::default()
+    };
+    let (tx, rx, h, server) = spawn_with_options(&home, Arc::new(NaiveExecutor), opts);
+    let chain = Chain::mlp("hetero-fault", 4, &[8, 12, 8]);
+    let elem = ElemType::Goldilocks;
+    let mut rng = Lcg::new(0x4E7E);
+    let weights: Vec<Vec<u64>> =
+        chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect();
+    let pid = server.register_chain_elem(&chain, weights.clone(), elem).unwrap();
+    let wg: Vec<Vec<G>> = weights.iter().map(|w| decode_words::<G>(w)).collect();
+    // The session's only eligible device drops permanently after two shards.
+    server.fleet().set_fault_plan(FaultPlan {
+        dropouts: vec![FaultDropout { device: 0, after_shards: 2, transient: false }],
+        ..Default::default()
+    });
+    let n_req = 8u64;
+    let mut successes = 0u64;
+    let mut errors = 0u64;
+    for id in 0..n_req {
+        let input = elem.sample_words(&mut rng, 4 * 8);
+        // Lock-step send/recv: each request is its own batch, so the
+        // dropout lands at a deterministic request boundary.
+        tx.send(Request::for_program_words(id, pid, 4, input.clone())).unwrap();
+        let r = rx.recv_timeout(Duration::from_secs(30)).expect("answered, no hang");
+        assert_eq!(r.id, id);
+        match &r.error {
+            None => {
+                assert_eq!(errors, 0, "no success after the eligible device dropped");
+                successes += 1;
+                use minisa::arith::Element;
+                let mut act: Vec<G> = decode_words::<G>(&input);
+                let mut out = Vec::new();
+                for (g, w) in chain.layers.iter().zip(&wg) {
+                    out = naive_gemm_e::<G>(&act, w, 4, g.k, g.n);
+                    act = out.iter().map(|&v| <G as Element>::reduce(v)).collect();
+                }
+                let expect: Vec<u64> = out.into_iter().map(|v| v.to_u64()).collect();
+                assert_eq!(r.output_words, expect, "request {id} bit-exact before dropout");
+            }
+            Some(msg) => {
+                errors += 1;
+                assert_eq!(
+                    r.code,
+                    Some(ErrorCode::NoEligibleDevice),
+                    "request {id}: typed no_eligible_device, got {:?}: {msg}",
+                    r.code
+                );
+                assert!(
+                    msg.contains("no eligible device"),
+                    "request {id}: scheduler names the cause: {msg}"
+                );
+            }
+        }
+    }
+    drop(tx);
+    let stats = h.join().unwrap();
+    assert!(successes >= 1, "the eligible device served work before dropping");
+    assert!(errors >= 1, "the permanent dropout surfaced as typed errors");
+    assert_eq!(stats.errors, errors);
+    assert!(server.fleet().devices()[0].is_failed());
+    // No misplacement at any point: the arch-incompatible devices never
+    // executed a shard, before or after the dropout.
+    for d in &server.fleet().devices()[1..] {
+        let st = d.stats();
+        assert_eq!((st.shards, st.rows), (0, 0), "device {} is 4x8, session is 4x4", d.id);
+    }
+}
+
 #[test]
 fn bitflip_in_encoded_stream_never_panics() {
     // Decode robustness: flip each byte of the encoded trace and decode —
