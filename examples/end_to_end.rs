@@ -93,10 +93,10 @@ fn main() -> anyhow::Result<()> {
     // Stage 3b: the deployable artifact — the encoded instruction stream
     // as the canonical program. Compile → save → load in-place; the loaded
     // program must execute bit-identically with ZERO mapper runs.
-    let payload = WeightsPayload {
-        elem: ElemType::I32,
-        weights: weights.iter().map(|w| encode_words::<i32>(w)).collect(),
-    };
+    let payload = WeightsPayload::owned(
+        ElemType::I32,
+        weights.iter().map(|w| encode_words::<i32>(w)).collect(),
+    );
     let artifact = program
         .to_artifact(Some(payload))
         .map_err(|e| anyhow::anyhow!("artifact build: {e}"))?;

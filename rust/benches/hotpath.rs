@@ -178,6 +178,7 @@ fn main() {
 
     bench_arith();
     bench_artifact();
+    bench_registry();
 }
 
 /// §Perf tentpole: the blocked multi-row serving executor
@@ -435,5 +436,104 @@ fn bench_artifact() {
     match alog.write_json("BENCH_artifact.json") {
         Ok(()) => println!("wrote BENCH_artifact.json"),
         Err(e) => eprintln!("failed to write BENCH_artifact.json: {e}"),
+    }
+}
+
+/// Registry axis (EXPERIMENTS.md §Registry): what the content-addressed
+/// store buys on the session-bringup path —
+///
+/// * **load vs compile**: `Registry::load` (hash-verified get + zero-copy
+///   decode + `Program::from_artifact`) against a mapper-run
+///   `Program::compile` of the same chain;
+/// * **cold vs warm**: a program-cache miss (full fetch/verify/decode)
+///   against a hit (one `Arc` clone);
+/// * the gated serving-throughput metric: rows/s through the
+///   *cache-loaded* program + shared weights, so a regression anywhere in
+///   the zero-copy pipeline (decode, `WordMatrix` views, `WordWeights`
+///   bridging) trips the §Perf bench gate.
+///
+/// Emits `BENCH_registry.json`.
+fn bench_registry() {
+    use minisa::arith::ElemType;
+    use minisa::artifact::Compiler;
+    use minisa::coordinator::serve::{execute_program_words, WordWeights};
+    use minisa::mapper::chain::Chain;
+    use minisa::program::Program;
+    use minisa::registry::{LoadedWeights, MemBackend, Registry};
+
+    println!("\n--- registry: load vs compile, cold vs warm ---");
+    let mut rlog = BenchLog::new();
+    let cfg = ArchConfig::paper(4, 4);
+    let o = MapperOptions { full_layout_search: false, threads: 1, ..Default::default() };
+    let elem = ElemType::Goldilocks;
+    let chain = Chain::mlp("bench_reg", 32, &[40, 88, 24]);
+    let mut rng = Lcg::new(0x2E6);
+    let weights: Vec<Vec<u64>> = chain
+        .layers
+        .iter()
+        .map(|g| elem.sample_words(&mut rng, g.k * g.n))
+        .collect();
+    let art = Compiler::new(&cfg)
+        .options(o.clone())
+        .elem(elem)
+        .weights(weights)
+        .compile(&chain)
+        .unwrap();
+
+    let (_, t_compile) = rlog.bench("registry/compile 3-layer chain @4x4", 1, 10, || {
+        Program::compile(&cfg, &chain, &o).unwrap()
+    });
+
+    // Cold: every iteration pays the full miss — fetch, hash-verify,
+    // zero-copy decode, deterministic re-lowering (capacity 0 disables the
+    // cache, so no iteration ever hits).
+    let cold = Registry::new(Box::new(MemBackend::new()), 0);
+    let key = cold.put(&art).unwrap();
+    let (_, t_cold) = rlog.bench("registry/load cold (cache disabled)", 1, 10, || {
+        cold.load(key).unwrap()
+    });
+
+    // Warm: the steady state of a fleet bringing up its Nth session of one
+    // content hash — a cache hit is one Arc clone.
+    let warm = Registry::new(Box::new(MemBackend::new()), 4);
+    let wkey = warm.put(&art).unwrap();
+    let (loaded, t_warm) = rlog.bench("registry/load warm (cache hit)", 5, 2000, || {
+        warm.load(wkey).unwrap().0
+    });
+    let cs = warm.cache_stats();
+    assert_eq!(cs.misses, 1, "exactly the arming load misses");
+
+    let load_vs_compile = t_compile.median_ns / t_cold.median_ns;
+    let warm_vs_cold = t_cold.median_ns / t_warm.median_ns;
+    println!(
+        "  load vs compile: {load_vs_compile:.1}x; warm hit vs cold miss: {warm_vs_cold:.1}x"
+    );
+    rlog.metric("registry_compile_median_ms", t_compile.median_ns / 1e6);
+    rlog.metric("registry_cold_load_median_ms", t_cold.median_ns / 1e6);
+    rlog.metric("registry_warm_load_median_us", t_warm.median_ns / 1e3);
+    rlog.metric("registry_load_vs_compile_speedup", load_vs_compile);
+    rlog.metric("registry_warm_vs_cold_speedup", warm_vs_cold);
+
+    // Serving throughput through the cache-loaded session — the gated
+    // metric (rows/s marker): executes the loaded program against the
+    // shared weight allocation exactly as a fleet device would.
+    let rows = 2 * loaded.program.rows();
+    let input = elem.sample_words(&mut rng, rows * loaded.program.in_features());
+    let ww: &WordWeights = match &loaded.weights {
+        LoadedWeights::Words(w) => w,
+        LoadedWeights::F32(_) => unreachable!("bench artifact is word-typed"),
+    };
+    let (out, t_exec) = rlog.bench("registry/exec loaded program", 2, 15, || {
+        execute_program_words(&loaded.program, rows, &input, ww).unwrap()
+    });
+    assert!(!out.is_empty());
+    rlog.metric(
+        "registry_loaded_exec_rows_per_s",
+        rows as f64 / (t_exec.median_ns / 1e9),
+    );
+
+    match rlog.write_json("BENCH_registry.json") {
+        Ok(()) => println!("wrote BENCH_registry.json"),
+        Err(e) => eprintln!("failed to write BENCH_registry.json: {e}"),
     }
 }

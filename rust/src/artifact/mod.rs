@@ -32,6 +32,7 @@
 
 use std::fmt;
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::arch::config::{ArchConfig, HwGen};
 use crate::arith::ElemType;
@@ -52,12 +53,12 @@ pub const MAGIC: [u8; 8] = *b"MINISArt";
 /// recompile rather than guess at a foreign layout.
 pub const VERSION: u16 = 1;
 
-/// FNV-1a 64-bit hash — the container checksum and the arch fingerprint.
-pub fn fnv64(bytes: &[u8]) -> u64 {
-    bytes
-        .iter()
-        .fold(0xcbf2_9ce4_8422_2325u64, |h, &b| (h ^ b as u64).wrapping_mul(0x100_0000_01b3))
-}
+/// FNV-1a 64-bit hash — the container checksum, the arch fingerprint, and
+/// (via [`crate::registry`]) the content address. One implementation for
+/// all three, so a registry key can be recomputed from container bytes with
+/// no second hasher to drift; lives in [`crate::util`], re-exported here
+/// for the historical import path.
+pub use crate::util::fnv64;
 
 /// Everything that can go wrong building, parsing or loading an artifact.
 #[derive(Debug, Clone, PartialEq)]
@@ -107,6 +108,83 @@ impl From<EncodeError> for ArtifactError {
     }
 }
 
+/// One layer's canonical weight words, either owned or borrowed from a
+/// shared container buffer. The borrowed form is what makes
+/// [`Artifact::from_shared`] zero-copy: the matrix is an `(offset, len)`
+/// window into the *container's own bytes* (one `Arc<[u8]>` for the whole
+/// file), so parsing an artifact with an N-million-word payload allocates
+/// nothing for the weights and N loaders of the same blob share one
+/// buffer. Words are read with `u64::from_le_bytes` per access — no
+/// alignment assumption on the backing buffer.
+#[derive(Debug, Clone)]
+pub enum WordMatrix {
+    /// Materialized words (the compile path, and `from_bytes`).
+    Owned(Vec<u64>),
+    /// A window of `len` little-endian u64 words starting at byte `offset`
+    /// of `buf` (the shared container bytes).
+    Shared { buf: Arc<[u8]>, offset: usize, len: usize },
+}
+
+impl WordMatrix {
+    /// Number of weight words.
+    pub fn len(&self) -> usize {
+        match self {
+            WordMatrix::Owned(v) => v.len(),
+            WordMatrix::Shared { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `i`-th canonical word. Panics out of range, like slice indexing.
+    pub fn word(&self, i: usize) -> u64 {
+        match self {
+            WordMatrix::Owned(v) => v[i],
+            WordMatrix::Shared { buf, offset, len } => {
+                assert!(i < *len, "word {i} out of {len}");
+                let at = offset + i * 8;
+                u64::from_le_bytes(buf[at..at + 8].try_into().unwrap())
+            }
+        }
+    }
+
+    /// Iterate the words in order (by value — the shared form has no
+    /// aligned `&[u64]` to lend).
+    pub fn iter(&self) -> impl Iterator<Item = u64> + '_ {
+        (0..self.len()).map(move |i| self.word(i))
+    }
+
+    /// Materialize into an owned word vector (the one deliberate copy).
+    pub fn to_words(&self) -> Vec<u64> {
+        match self {
+            WordMatrix::Owned(v) => v.clone(),
+            WordMatrix::Shared { .. } => self.iter().collect(),
+        }
+    }
+
+    /// Decode into `elem`'s native form straight from the backing buffer —
+    /// no intermediate word vector.
+    pub fn decode<E: crate::arith::Element>(&self) -> Vec<E> {
+        self.iter().map(E::decode).collect()
+    }
+}
+
+/// Content equality — an `Owned` and a `Shared` matrix with the same words
+/// are the same payload (so `from_bytes` ≡ `from_shared` under `==`).
+impl PartialEq for WordMatrix {
+    fn eq(&self, other: &Self) -> bool {
+        self.len() == other.len() && self.iter().eq(other.iter())
+    }
+}
+
+impl From<Vec<u64>> for WordMatrix {
+    fn from(v: Vec<u64>) -> Self {
+        WordMatrix::Owned(v)
+    }
+}
+
 /// Resident weights shipped inside an artifact: one canonical-word matrix
 /// per chain layer, in `elem`'s [`crate::arith::Element::encode`] format.
 /// One representation covers every backend (f32 stores IEEE bits, fields
@@ -115,7 +193,14 @@ impl From<EncodeError> for ArtifactError {
 #[derive(Debug, Clone, PartialEq)]
 pub struct WeightsPayload {
     pub elem: ElemType,
-    pub weights: Vec<Vec<u64>>,
+    pub weights: Vec<WordMatrix>,
+}
+
+impl WeightsPayload {
+    /// Payload over owned word vectors (the compile-side constructor).
+    pub fn owned(elem: ElemType, weights: Vec<Vec<u64>>) -> Self {
+        Self { elem, weights: weights.into_iter().map(WordMatrix::Owned).collect() }
+    }
 }
 
 /// A parsed `.minisa` container. The **encoded trace bytes are the canonical
@@ -235,8 +320,17 @@ impl Artifact {
                 w.u8(elem_tag(p.elem));
                 for m in &p.weights {
                     w.u32(m.len() as u32);
-                    for &word in m {
-                        w.u64(word);
+                    match m {
+                        // The shared window is already the wire encoding —
+                        // copy it through wholesale.
+                        WordMatrix::Shared { buf, offset, len } => {
+                            w.raw(&buf[*offset..offset + len * 8]);
+                        }
+                        WordMatrix::Owned(v) => {
+                            for &word in v {
+                                w.u64(word);
+                            }
+                        }
                     }
                 }
             }
@@ -248,8 +342,35 @@ impl Artifact {
 
     /// Parse and validate a container: magic, version, arch fingerprint,
     /// checksum, and every structural invariant (chain validity, decision
-    /// count, layer-start monotonicity, payload shapes).
+    /// count, layer-start monotonicity, payload shapes). Weight payloads
+    /// come back as [`WordMatrix::Owned`]; use [`Artifact::from_shared`]
+    /// for the zero-copy borrowed form.
     pub fn from_bytes(bytes: &[u8]) -> Result<Artifact, ArtifactError> {
+        Self::parse(bytes, None)
+    }
+
+    /// Zero-copy parse: identical validation to [`Artifact::from_bytes`],
+    /// but the weight payload borrows windows of `bytes` itself
+    /// ([`WordMatrix::Shared`]) instead of materializing word vectors — the
+    /// dominant container section is never copied, and every session loaded
+    /// from the same buffer shares it. This is the decode path behind
+    /// `ArtifactSource::Path` and the registry.
+    pub fn from_shared(bytes: Arc<[u8]>) -> Result<Artifact, ArtifactError> {
+        let view: Arc<[u8]> = Arc::clone(&bytes);
+        Self::parse(&view, Some(bytes))
+    }
+
+    /// Read a container through one shared buffer: a single `fs::read`,
+    /// then [`Artifact::from_shared`] over it (no second copy of the
+    /// payload section).
+    pub fn load_shared(path: &Path) -> Result<Artifact, ArtifactError> {
+        let bytes: Arc<[u8]> = std::fs::read(path)
+            .map_err(|e| ArtifactError::Io(format!("{}: {e}", path.display())))?
+            .into();
+        Self::from_shared(bytes)
+    }
+
+    fn parse(bytes: &[u8], shared: Option<Arc<[u8]>>) -> Result<Artifact, ArtifactError> {
         if bytes.len() < MAGIC.len() + 2 + 8 || bytes[..MAGIC.len()] != MAGIC {
             if bytes.len() >= MAGIC.len() && bytes[..MAGIC.len()] != MAGIC {
                 return Err(ArtifactError::BadMagic);
@@ -330,11 +451,23 @@ impl Artifact {
                             g.name, g.k, g.n
                         )));
                     }
-                    let mut m = Vec::with_capacity(len.min(1 << 20));
-                    for _ in 0..len {
-                        m.push(r.u64()?);
-                    }
-                    weights.push(m);
+                    // Bounds-check and advance past the words either way;
+                    // the shared path then keeps only the window, never the
+                    // materialized vector. Offsets into `r.bytes` (the body
+                    // prefix) are valid into the full shared buffer too.
+                    let offset = r.pos;
+                    let words = r.raw(len.checked_mul(8).ok_or(ArtifactError::Truncated)?)?;
+                    weights.push(match &shared {
+                        Some(buf) => {
+                            WordMatrix::Shared { buf: Arc::clone(buf), offset, len }
+                        }
+                        None => WordMatrix::Owned(
+                            words
+                                .chunks_exact(8)
+                                .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                                .collect(),
+                        ),
+                    });
                 }
                 Some(WeightsPayload { elem, weights })
             }
@@ -458,7 +591,7 @@ pub(crate) fn bound_lowering_work(
 /// and `Program::to_artifact` (the payload actually packaged).
 pub(crate) fn validate_payload_dims(
     chain: &Chain,
-    weights: &[Vec<u64>],
+    weights: &[WordMatrix],
 ) -> Result<(), ArtifactError> {
     if weights.len() != chain.layers.len() {
         return Err(ArtifactError::Mismatch(format!(
@@ -528,15 +661,15 @@ impl Compiler {
     /// artifact's life).
     pub fn compile(&self, chain: &Chain) -> Result<Artifact, ArtifactError> {
         chain.validate().map_err(ArtifactError::Mismatch)?;
-        if let Some(ws) = &self.weights {
-            validate_payload_dims(chain, ws)?;
-        }
-        let program =
-            Program::compile(&self.cfg, chain, &self.opts).ok_or(ArtifactError::Infeasible)?;
         let payload = self
             .weights
             .clone()
-            .map(|weights| WeightsPayload { elem: self.elem, weights });
+            .map(|weights| WeightsPayload::owned(self.elem, weights));
+        if let Some(p) = &payload {
+            validate_payload_dims(chain, &p.weights)?;
+        }
+        let program =
+            Program::compile(&self.cfg, chain, &self.opts).ok_or(ArtifactError::Infeasible)?;
         program.to_artifact(payload)
     }
 }
@@ -732,7 +865,7 @@ fn read_decision(r: &mut ByteReader) -> Result<Decision, ArtifactError> {
 
 /// Stable on-wire tag for an [`ElemType`] (wire compatibility demands these
 /// never change meaning; append only).
-fn elem_tag(e: ElemType) -> u8 {
+pub(crate) fn elem_tag(e: ElemType) -> u8 {
     match e {
         ElemType::I32 => 0,
         ElemType::F32 => 1,
@@ -742,7 +875,7 @@ fn elem_tag(e: ElemType) -> u8 {
     }
 }
 
-fn elem_from_tag(t: u8) -> Result<ElemType, ArtifactError> {
+pub(crate) fn elem_from_tag(t: u8) -> Result<ElemType, ArtifactError> {
     ElemType::ALL
         .iter()
         .copied()
@@ -781,6 +914,35 @@ mod tests {
             assert_eq!(back.to_bytes(), bytes, "serialization is a fixed point");
             assert_eq!(back.fingerprint(), art.fingerprint());
         }
+    }
+
+    /// `from_shared` is the same parse under `==` (WordMatrix equality is
+    /// by content), but its payload borrows the container buffer instead of
+    /// copying it — and re-serializes to the identical bytes.
+    #[test]
+    fn shared_parse_is_zero_copy_and_equal() {
+        let art = small_artifact(true);
+        let bytes: Arc<[u8]> = art.to_bytes().into();
+        let shared = Artifact::from_shared(Arc::clone(&bytes)).unwrap();
+        assert_eq!(shared, art);
+        assert_eq!(shared.to_bytes().as_slice(), &*bytes, "fixed point through the shared path");
+        let payload = shared.payload.as_ref().unwrap();
+        for m in &payload.weights {
+            match m {
+                WordMatrix::Shared { buf, .. } => {
+                    assert!(Arc::ptr_eq(buf, &bytes), "window borrows the one container buffer");
+                }
+                WordMatrix::Owned(_) => panic!("shared parse materialized a weight copy"),
+            }
+        }
+        // Tampered shared buffers fail exactly like owned ones.
+        let mut bad = bytes.to_vec();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x10;
+        assert!(matches!(
+            Artifact::from_shared(bad.into()),
+            Err(ArtifactError::Corrupt(_))
+        ));
     }
 
     #[test]
@@ -877,8 +1039,7 @@ mod tests {
     #[test]
     fn save_rejects_malformed_payload() {
         let mut art = small_artifact(false);
-        art.payload =
-            Some(WeightsPayload { elem: ElemType::I32, weights: vec![vec![1, 2, 3]] });
+        art.payload = Some(WeightsPayload::owned(ElemType::I32, vec![vec![1, 2, 3]]));
         let path =
             std::env::temp_dir().join(format!("minisa_badpay_{}.minisa", std::process::id()));
         let err = art.save(&path).unwrap_err();

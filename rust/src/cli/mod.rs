@@ -11,7 +11,7 @@ use std::path::{Path, PathBuf};
 
 use crate::arch::config::ArchConfig;
 use crate::arith::{decode_words, ElemType, Element};
-use crate::artifact::{Artifact, Compiler};
+use crate::artifact::{Artifact, Compiler, WordMatrix};
 use crate::coordinator::{compare_devices, evaluate_suite, summarize_by_config};
 use crate::functional::FunctionalSim;
 use crate::isa::encode::Codec;
@@ -458,7 +458,30 @@ fn server_options(args: &Args) -> anyhow::Result<crate::coordinator::serve::Serv
             enabled: args.bool_flag("trace"),
             sample_every: args.usize_flag("trace-sample", 1).max(1) as u64,
         },
+        // Attached by the command itself when `--registry` is given (the
+        // command may also need the handle for key resolution up front).
+        registry: None,
     })
+}
+
+/// `--registry <dir>` — open (creating if needed) the on-disk artifact
+/// registry, with `--registry-cache N` bounding the shared program cache.
+fn registry_from_args(
+    args: &Args,
+) -> anyhow::Result<Option<std::sync::Arc<crate::registry::Registry>>> {
+    match args.flags.get("registry") {
+        None => Ok(None),
+        Some(dir) => {
+            let backend = crate::registry::DirBackend::open(Path::new(dir))
+                .map_err(|e| anyhow::anyhow!("--registry {dir}: {e}"))?;
+            let cap = args
+                .usize_flag("registry-cache", crate::registry::DEFAULT_CACHE_CAPACITY);
+            Ok(Some(std::sync::Arc::new(crate::registry::Registry::new(
+                Box::new(backend),
+                cap,
+            ))))
+        }
+    }
 }
 
 /// `--metrics-out <path>`: dump the server's full telemetry snapshot
@@ -545,7 +568,10 @@ pub fn cmd_run(args: &Args) -> anyhow::Result<()> {
     // Either load a deployable artifact (zero mapper runs) or resolve a
     // chain and compile it here.
     let (program, weight_words, elem) = if let Some(path) = args.flags.get("artifact") {
-        let art = Artifact::load(Path::new(path)).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        // One read, one buffer: the payload matrices borrow the container
+        // bytes (`Artifact::from_shared`) instead of copying them.
+        let art =
+            Artifact::load_shared(Path::new(path)).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
         let payload = art.payload.clone().ok_or_else(|| {
             anyhow::anyhow!("{path} carries no weights payload; recompile with weights to run it")
         })?;
@@ -582,14 +608,15 @@ pub fn cmd_run(args: &Args) -> anyhow::Result<()> {
             program.fused_bytes,
             program.elided,
         );
-        (program, weight_words, elem)
+        let weights: Vec<WordMatrix> = weight_words.into_iter().map(WordMatrix::from).collect();
+        (program, weights, elem)
     };
     let cfg = program.cfg.clone();
 
     let input_words = elem.sample_words(&mut rng, program.rows() * program.in_features());
     let t1 = std::time::Instant::now();
     let (exact, plan_compiles, checksum) = with_element!(elem, E => {
-        let w: Vec<Vec<E>> = weight_words.iter().map(|m| decode_words::<E>(m)).collect();
+        let w: Vec<Vec<E>> = weight_words.iter().map(|m| m.decode::<E>()).collect();
         let input: Vec<E> = decode_words::<E>(&input_words);
         let mut sim: FunctionalSim<E> = FunctionalSim::new(&cfg);
         let got = program
@@ -630,7 +657,7 @@ pub fn cmd_run(args: &Args) -> anyhow::Result<()> {
             std::sync::Arc::new(NaiveExecutor),
             FleetOptions { devices, shard_min_rows, ..Default::default() },
         );
-        let ww = WordWeights::new(weight_words, elem);
+        let ww = WordWeights::from_matrices(&weight_words, elem);
         let rows = program.rows();
         let t2 = std::time::Instant::now();
         let sharded = fleet
@@ -762,13 +789,32 @@ pub fn cmd_compile(args: &Args) -> anyhow::Result<()> {
 /// `minisa inspect <artifact>` — header metadata, per-class instruction
 /// counts and encoded bytes, `--disasm` for the full disassembly.
 pub fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
-    let path = args
-        .positional
-        .first()
-        .cloned()
-        .or_else(|| args.flags.get("artifact").cloned())
-        .ok_or_else(|| anyhow::anyhow!("usage: minisa inspect <file.minisa> [--disasm]"))?;
-    let art = Artifact::load(Path::new(&path)).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let (art, path) = if let Some(spec) = args.flags.get("from-registry") {
+        // `--from-registry <key>` — fetch (and fully re-verify: content
+        // hash against key, delta resolution, composed checksum) straight
+        // from the registry instead of a file.
+        let reg = registry_from_args(args)?.ok_or_else(|| {
+            anyhow::anyhow!("--from-registry requires --registry <dir>")
+        })?;
+        let key = reg.find(spec, None).map_err(|e| anyhow::anyhow!("{spec}: {e}"))?;
+        let art = reg.get(key).map_err(|e| anyhow::anyhow!("{key}: {e}"))?;
+        (art, format!("registry:{key}"))
+    } else {
+        let path = args
+            .positional
+            .first()
+            .cloned()
+            .or_else(|| args.flags.get("artifact").cloned())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "usage: minisa inspect <file.minisa> [--disasm] | \
+                     --from-registry <key> --registry <dir>"
+                )
+            })?;
+        let art =
+            Artifact::load(Path::new(&path)).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        (art, path)
+    };
     let check = art.verify().map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
     println!(
         "{path}: MINISA artifact v{} for {} (fingerprint {:016x}), {} B container",
@@ -824,7 +870,7 @@ pub fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
     }
     match &art.payload {
         Some(p) => {
-            let words: usize = p.weights.iter().map(Vec::len).sum();
+            let words: usize = p.weights.iter().map(WordMatrix::len).sum();
             println!("  weights: {} matrices over {} ({words} words)", p.weights.len(), p.elem);
         }
         None => println!("  weights: none (serving this artifact requires a payload)"),
@@ -931,23 +977,50 @@ pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
     use crate::coordinator::serve::{spawn_with_options, ArtifactSource, Request};
 
     let requests = args.usize_flag("requests", 32);
+    let registry = registry_from_args(args)?;
     let artifact = match args.flags.get("artifact") {
         Some(p) => Some(Artifact::load(Path::new(p)).map_err(|e| anyhow::anyhow!("{p}: {e}"))?),
         None => None,
     };
-    let cfg = match &artifact {
+    let model_key = args.flags.get("model-key").cloned();
+    anyhow::ensure!(
+        artifact.is_none() || model_key.is_none(),
+        "--artifact and --model-key are mutually exclusive"
+    );
+    let cfg = match (&artifact, &model_key) {
         // The container pins the architecture; --ah/--aw are ignored.
-        Some(a) => a.cfg.clone(),
-        None => configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(16, 64)),
+        (Some(a), _) => a.cfg.clone(),
+        (None, Some(spec)) => {
+            // Resolve the key up front to adopt the stored artifact's
+            // architecture (the session itself registers through the
+            // server's shared program cache below).
+            let reg = registry.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("--model-key requires --registry <dir>")
+            })?;
+            let key = reg.find(spec, None).map_err(|e| anyhow::anyhow!("{spec}: {e}"))?;
+            reg.get(key).map_err(|e| anyhow::anyhow!("{key}: {e}"))?.cfg
+        }
+        _ => configs(args).into_iter().next().unwrap_or_else(|| ArchConfig::paper(16, 64)),
     };
-    let from_artifact = artifact.is_some();
+    let from_artifact = artifact.is_some() || model_key.is_some();
 
-    let sopts = server_options(args)?;
+    let mut sopts = server_options(args)?;
+    sopts.registry = registry.clone();
     let executor = serving_executor(args);
     let backend = executor.name().to_string();
     let (tx, rx, h, server) = spawn_with_options(&cfg, executor, sopts);
     let mut rng = crate::util::Lcg::new(23);
-    let (pid, elem) = if let Some(art) = artifact {
+    let (pid, elem) = if let Some(spec) = model_key {
+        let searches_before = searches_run();
+        let pid = server.register(ArtifactSource::Registry { key: spec.clone() })?;
+        anyhow::ensure!(
+            searches_run() == searches_before,
+            "registry registration ran the mapper (expected zero mapper runs)"
+        );
+        let elem = server.session_elem(pid).expect("just registered");
+        println!("session {pid:?} loaded from registry key '{spec}'");
+        (pid, elem)
+    } else if let Some(art) = artifact {
         let elem = art.payload.as_ref().map(|p| p.elem).unwrap_or(ElemType::F32);
         let searches_before = searches_run();
         let pid = server.register(ArtifactSource::Artifact(Box::new(art)))?;
@@ -998,9 +1071,34 @@ pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
         if from_artifact { "recompiled from the loaded stream" } else { "precompiled" },
     );
 
+    // `--swap-to <path|key> [--swap-after N]` — hot-swap the session to a
+    // new artifact version after N requests have been admitted, while the
+    // earlier ones are still queued or in flight (the std-only stand-in for
+    // a SIGHUP-style reload trigger). Zero downtime: the server drains
+    // in-flight work against the old version and atomically switches.
+    let swap_to = args.flags.get("swap-to").cloned();
+    let swap_after = args.usize_flag("swap-after", requests / 2);
     let (qos, deadline_ms) = qos_flags(args)?;
     let wall = std::time::Instant::now();
     for id in 0..requests as u64 {
+        if let Some(spec) = &swap_to {
+            if id as usize == swap_after {
+                // A spec that names a file swaps from disk; anything else
+                // resolves through the attached registry (deltas included).
+                let src = if Path::new(spec).is_file() {
+                    ArtifactSource::Path(PathBuf::from(spec))
+                } else {
+                    ArtifactSource::Registry { key: spec.clone() }
+                };
+                server
+                    .swap(pid, src)
+                    .map_err(|e| anyhow::anyhow!("--swap-to {spec}: {e}"))?;
+                println!(
+                    "hot-swapped {pid:?} → '{spec}' after {swap_after} requests (old version \
+                     drains in flight; zero downtime)"
+                );
+            }
+        }
         let r = if elem == ElemType::F32 {
             Request::for_program(id, pid, m, rng.f32_matrix(m, kf))
         } else {
@@ -1045,12 +1143,32 @@ pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
     if from_artifact {
         // The production invariant, enforced (the CI cross-process smoke
         // step serves a file compiled by another process through here).
+        // Swap replacements load too — from a file or the registry, never
+        // the mapper — so expected loads are 1 + completed swaps.
         anyhow::ensure!(
             stats.program_compiles == 0,
             "artifact serving compiled a program (expected zero)"
         );
-        anyhow::ensure!(stats.artifact_loads == 1, "expected exactly one artifact load");
-        println!("artifact session: 1 load, 0 program compiles, 0 mapper runs ✓");
+        let expect_loads = 1 + stats.swaps;
+        anyhow::ensure!(
+            stats.artifact_loads == expect_loads,
+            "expected exactly {expect_loads} artifact load(s), saw {}",
+            stats.artifact_loads
+        );
+        println!(
+            "artifact session: {expect_loads} load(s), 0 program compiles, 0 mapper runs ✓"
+        );
+    }
+    if stats.swaps + stats.swap_failed > 0 {
+        println!(
+            "hot swap: {} completed, {} failed; registry cache: {} hit(s) / {} miss(es), {} \
+             eviction(s)",
+            stats.swaps,
+            stats.swap_failed,
+            stats.registry_hits,
+            stats.registry_misses,
+            stats.registry_evictions,
+        );
     }
     if server.fleet().device_count() > 1 {
         let report = server.fleet_report(wall_us);
@@ -1061,6 +1179,137 @@ pub fn cmd_serve_model(args: &Args) -> anyhow::Result<()> {
         println!("{}", report.render());
     }
     write_metrics_snapshot(args, &server, wall_us)?;
+    Ok(())
+}
+
+/// `minisa registry <list|put|gc|verify|diff>` — operate on a
+/// content-addressed artifact registry (docs/REGISTRY.md). Every verb takes
+/// `--registry <dir>`; keys anywhere a `<spec>` is accepted may be the
+/// exact `<content>-<arch>` key, a content-hash prefix (≥ 4 hex digits), or
+/// a model name.
+pub fn cmd_registry(args: &Args) -> anyhow::Result<()> {
+    use crate::registry::RegistryKey;
+    let usage = "usage: minisa registry <list|put|gc|verify|diff> --registry <dir> [flags]";
+    let reg = registry_from_args(args)?.ok_or_else(|| anyhow::anyhow!("{usage}"))?;
+    let verb = args.positional.first().map(String::as_str).unwrap_or("list");
+    let find = |spec: &str| -> anyhow::Result<RegistryKey> {
+        reg.find(spec, None).map_err(|e| anyhow::anyhow!("{spec}: {e}"))
+    };
+    match verb {
+        "list" => {
+            let entries = reg.list().map_err(|e| anyhow::anyhow!("{e}"))?;
+            let mut t = Table::new(
+                &format!("registry {}", args.str_flag("registry", "?")),
+                &["key", "kind", "model", "bytes", "base"],
+            );
+            let n = entries.len();
+            for e in entries {
+                t.row(vec![
+                    e.key.to_string(),
+                    e.kind.to_string(),
+                    e.model,
+                    e.blob_bytes.to_string(),
+                    e.base.map(|b| format!("{b:016x}")).unwrap_or_else(|| "-".to_string()),
+                ]);
+            }
+            println!("{}", t.render());
+            println!("{n} entr{} ({:?})", if n == 1 { "y" } else { "ies" }, reg.cache_stats());
+        }
+        "put" => {
+            if let Some(p) = args.flags.get("artifact") {
+                // Full artifact from disk: content-addressed, idempotent.
+                let art =
+                    Artifact::load(Path::new(p)).map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
+                let key = reg.put(&art).map_err(|e| anyhow::anyhow!("{p}: {e}"))?;
+                println!("{p} → {key} (full, {} B container)", art.to_bytes().len());
+            } else if let Some(spec) = args.flags.get("delta-of") {
+                // Weights-only delta against a stored base: new weights are
+                // synthesized from `--seed` (the repo's synthetic-weights
+                // discipline — a fine-tune stand-in), stored as the small
+                // delta container, keyed by the *composed* content hash.
+                let base = find(spec)?;
+                let base_art = reg.get(base).map_err(|e| anyhow::anyhow!("{base}: {e}"))?;
+                let elem = base_art
+                    .payload
+                    .as_ref()
+                    .map(|p| p.elem)
+                    .ok_or_else(|| anyhow::anyhow!("{base}: base has no weights payload"))?;
+                let mut rng = crate::util::Lcg::new(args.usize_flag("seed", 424242) as u64);
+                let weights: Vec<Vec<u64>> = base_art
+                    .chain
+                    .layers
+                    .iter()
+                    .map(|g| elem.sample_words(&mut rng, g.k * g.n))
+                    .collect();
+                let key = reg
+                    .put_delta(base, elem, weights)
+                    .map_err(|e| anyhow::anyhow!("{base}: {e}"))?;
+                println!("delta of {base} → {key} (weights-only, base trace reused)");
+            } else {
+                anyhow::bail!(
+                    "registry put: need --artifact <file.minisa> or --delta-of <spec> [--seed N]"
+                );
+            }
+        }
+        "gc" => {
+            let mut pins = Vec::new();
+            if let Some(spec) = args.flags.get("pin") {
+                for s in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                    pins.push(find(s)?);
+                }
+            }
+            let report = reg.gc(&pins).map_err(|e| anyhow::anyhow!("gc: {e}"))?;
+            for k in &report.deleted {
+                println!("deleted {k}");
+            }
+            println!(
+                "gc: kept {} (pinned closure{}), deleted {}",
+                report.kept.len(),
+                if pins.is_empty() { " = everything resolvable" } else { "" },
+                report.deleted.len(),
+            );
+        }
+        "verify" => {
+            let results = reg.verify_all().map_err(|e| anyhow::anyhow!("verify: {e}"))?;
+            let mut bad = 0;
+            for (key, r) in &results {
+                match r {
+                    Ok(check) => println!(
+                        "{key} ok: {} insts, {} B trace, round-trips byte-identically",
+                        check.insts, check.trace_bytes
+                    ),
+                    Err(e) => {
+                        bad += 1;
+                        println!("{key} FAILED: {e}");
+                    }
+                }
+            }
+            println!("verified {} entr{}, {bad} failed", results.len(),
+                if results.len() == 1 { "y" } else { "ies" });
+            anyhow::ensure!(bad == 0, "{bad} registry entr{} failed verification",
+                if bad == 1 { "y" } else { "ies" });
+        }
+        "diff" => {
+            let (a, b) = match &args.positional[1..] {
+                [a, b] => (find(a)?, find(b)?),
+                _ => anyhow::bail!("usage: minisa registry diff <specA> <specB> --registry <dir>"),
+            };
+            let (aa, ab) = (
+                reg.get(a).map_err(|e| anyhow::anyhow!("{a}: {e}"))?,
+                reg.get(b).map_err(|e| anyhow::anyhow!("{b}: {e}"))?,
+            );
+            let lines = crate::registry::diff(&aa, &ab);
+            if lines.is_empty() {
+                println!("{a} and {b}: identical structure (weights not value-compared)");
+            } else {
+                println!("{a} vs {b}:");
+                for l in &lines {
+                    println!("  {l}");
+                }
+            }
+        }
+        other => anyhow::bail!("unknown registry verb '{other}'\n{usage}"),
+    }
     Ok(())
 }
 
@@ -1459,6 +1708,13 @@ pub fn usage() -> &'static str {
                   [--suite|--ntt|--dims as for run] [--elem E] [--out file]\n\
        inspect    inspect a .minisa artifact: header, per-class instruction\n\
                   counts/bytes, round-trip check  <file> [--disasm]\n\
+                  [--from-registry <key> --registry <dir>] (fetch + fully\n\
+                  re-verify from the registry instead of a file)\n\
+       registry   content-addressed artifact registry (docs/REGISTRY.md)\n\
+                  list|put|gc|verify|diff  --registry <dir>\n\
+                  put --artifact f.minisa | put --delta-of <spec> [--seed N]\n\
+                  gc [--pin spec,spec,...]  diff <specA> <specB>\n\
+                  (<spec> = exact key | content-hash prefix | model name)\n\
        bitwidth   Table V ISA bitwidths\n\
        area       Table VI area/power model\n\
        workloads  dump the 50-workload suite CSV [--small]\n\
@@ -1469,6 +1725,10 @@ pub fn usage() -> &'static str {
                   [--dims k0,k1,... | --gpt] [--m N] [--requests N] [--elem E]\n\
                   [--artifact f.minisa] (serve a compiled artifact: hard-\n\
                   fails on any mapper run or program compile)\n\
+                  [--registry <dir> --model-key <spec>] (serve straight from\n\
+                  the registry through the shared program cache)\n\
+                  [--swap-to <path|spec> [--swap-after N]] (zero-downtime\n\
+                  hot swap mid-traffic; deltas resolve against their base)\n\
                   [--devices N --shard-min-rows R --max-batch B]\n\
        loadgen    open-loop Poisson load generator for the serving front\n\
                   door; emits BENCH_serving.json and enforces the\n\
@@ -1530,6 +1790,7 @@ pub fn run(argv: &[String]) -> i32 {
         }
         "serve" => cmd_serve(&args),
         "serve-model" => cmd_serve_model(&args),
+        "registry" => cmd_registry(&args),
         "loadgen" => cmd_loadgen(&args),
         "metrics" => cmd_metrics(&args),
         "help" | "" => {
@@ -1713,6 +1974,74 @@ mod tests {
             0
         );
         std::fs::remove_file(&path).ok();
+    }
+
+    /// The registry pipeline on the CLI: `compile` → `registry put` →
+    /// `serve-model --model-key` (served straight from the store, zero
+    /// compiles on the serving path) → `--swap-to` a stored delta
+    /// mid-traffic → `registry gc --pin` keeps the delta's live base →
+    /// `inspect --from-registry` re-verifies the entry in place.
+    #[test]
+    fn registry_cli_round_trip() {
+        let dir = std::env::temp_dir().join(format!("minisa_reg_cli_{}", std::process::id()));
+        let reg_dir = dir.join("store");
+        std::fs::create_dir_all(&reg_dir).unwrap();
+        let d = reg_dir.to_str().unwrap().to_string();
+        let base_path = dir.join("base.minisa");
+        let bp = base_path.to_str().unwrap().to_string();
+        assert_eq!(
+            run(&argv(&[
+                "compile", "--dims", "8,12,8", "--m", "4", "--elem", "babybear", "--ah", "4",
+                "--aw", "4", "--fast", "--out", &bp,
+            ])),
+            0
+        );
+        assert_eq!(run(&argv(&["registry", "put", "--registry", &d, "--artifact", &bp])), 0);
+        // Recompute the content address the same way `put` did, so the rest
+        // of the test can target entries by exact key.
+        let art = Artifact::load(Path::new(&bp)).unwrap();
+        let (key, _) = crate::registry::RegistryKey::of(&art);
+        let key_s = key.to_string();
+        assert_eq!(
+            run(&argv(&["registry", "put", "--registry", &d, "--delta-of", &key_s, "--seed", "7"])),
+            0
+        );
+        assert_eq!(run(&argv(&["registry", "list", "--registry", &d])), 0);
+        assert_eq!(run(&argv(&["registry", "verify", "--registry", &d])), 0);
+        // Find the delta's key through the library (kind is "delta").
+        let reg = crate::registry::Registry::open_dir(&reg_dir).unwrap();
+        let delta_key = reg
+            .list()
+            .unwrap()
+            .into_iter()
+            .find(|e| e.kind == "delta")
+            .expect("delta entry present")
+            .key
+            .to_string();
+        assert_ne!(delta_key, key_s, "delta must live at a distinct content address");
+        assert_eq!(run(&argv(&["registry", "diff", &key_s, &delta_key, "--registry", &d])), 0);
+        // Serve from the registry and hot-swap to the delta mid-traffic.
+        assert_eq!(
+            run(&argv(&[
+                "serve-model", "--registry", &d, "--model-key", &key_s, "--requests", "8",
+                "--swap-to", &delta_key, "--swap-after", "4",
+            ])),
+            0
+        );
+        // gc pinned to the delta keeps its base alive; both inspect cleanly.
+        assert_eq!(
+            run(&argv(&["registry", "gc", "--registry", &d, "--pin", &delta_key])),
+            0
+        );
+        assert_eq!(
+            run(&argv(&["inspect", "--from-registry", &key_s, "--registry", &d])),
+            0
+        );
+        assert_eq!(
+            run(&argv(&["inspect", "--from-registry", &delta_key, "--registry", &d, "--disasm"])),
+            0
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

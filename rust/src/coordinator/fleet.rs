@@ -528,6 +528,14 @@ impl Fleet {
         &self.devices
     }
 
+    /// Arch fingerprints of every device, in device order (duplicates
+    /// preserved) — the eligibility list registry lookups filter against
+    /// (`registry::Registry::find`): a key is servable here iff its arch
+    /// fingerprint appears in this list.
+    pub fn fingerprints(&self) -> Vec<u64> {
+        self.devices.iter().map(|d| d.fingerprint()).collect()
+    }
+
     pub fn options(&self) -> FleetOptions {
         self.opts
     }

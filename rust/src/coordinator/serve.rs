@@ -44,7 +44,7 @@
 //! the fleet's utilisation and live stall accounting in as gauges.
 
 use std::collections::hash_map::DefaultHasher;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::hash::{Hash, Hasher};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -63,6 +63,7 @@ use crate::mapper::search::{search, MapperOptions};
 use crate::mapper::Decision;
 use crate::obs::{Counter, Gauge, MetricsRegistry, RequestTrace, Snapshot, Stage, TraceOptions};
 use crate::program::Program;
+use crate::registry::{LoadedWeights, Registry};
 use crate::with_element;
 use crate::workloads::Gemm;
 
@@ -274,6 +275,18 @@ impl WordWeights {
             let d: Vec<Vec<E>> = words.iter().map(|m| decode_words::<E>(m)).collect();
             // Explicit per-arm coercion so every dispatch arm yields the
             // same erased type.
+            let erased: Arc<dyn std::any::Any + Send + Sync> = Arc::new(d);
+            erased
+        });
+        Self { decoded, elem, layers }
+    }
+
+    /// Decode straight from container weight matrices (owned or zero-copy
+    /// shared views) without materialising intermediate `Vec<u64>`s.
+    pub fn from_matrices(mats: &[crate::artifact::WordMatrix], elem: ElemType) -> Self {
+        let layers = mats.len();
+        let decoded = with_element!(elem, E => {
+            let d: Vec<Vec<E>> = mats.iter().map(|m| m.decode::<E>()).collect();
             let erased: Arc<dyn std::any::Any + Send + Sync> = Arc::new(d);
             erased
         });
@@ -493,6 +506,20 @@ pub struct ServeStats {
     /// Requests injected into an already-submitted open batch (continuous
     /// batching) instead of waiting for the next leader cycle.
     pub injected: u64,
+    /// Completed zero-downtime session swaps ([`Server::swap`]).
+    pub swaps: u64,
+    /// Swap attempts that failed validation or build; the old session kept
+    /// serving throughout.
+    pub swap_failed: u64,
+    /// Registry program-cache hits observed by this server's
+    /// registrations/swaps (a hit shares the cached allocation; no blob
+    /// read, no decode).
+    pub registry_hits: u64,
+    /// Registry program-cache misses (full verified load + decode).
+    pub registry_misses: u64,
+    /// Registry program-cache LRU evictions triggered by this server's
+    /// loads.
+    pub registry_evictions: u64,
 }
 
 impl ServeStats {
@@ -531,6 +558,11 @@ struct ServeCounters {
     /// Total service time in integer nanoseconds — a counter rather than a
     /// float so concurrent accumulation stays exact.
     service_ns: Counter,
+    swaps: Counter,
+    swap_failed: Counter,
+    registry_hits: Counter,
+    registry_misses: Counter,
+    registry_evictions: Counter,
     max_batch: Gauge,
 }
 
@@ -550,6 +582,11 @@ impl ServeCounters {
             session_gone: reg.counter("serve_session_gone_total"),
             injected: reg.counter("serve_injected_total"),
             service_ns: reg.counter("serve_service_time_ns_total"),
+            swaps: reg.counter("serve_swaps_total"),
+            swap_failed: reg.counter("serve_swap_failed_total"),
+            registry_hits: reg.counter("registry_hits_total"),
+            registry_misses: reg.counter("registry_misses_total"),
+            registry_evictions: reg.counter("registry_evictions_total"),
             max_batch: reg.gauge("serve_max_batch"),
         }
     }
@@ -605,6 +642,44 @@ struct Session {
     weights: SessionWeights,
 }
 
+/// How a session came to be — decides which provenance counter moves
+/// (`artifact_loads` vs `program_compiles`), for registrations and swaps
+/// alike.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SessionOrigin {
+    /// Loaded from a deployable artifact (file, memory, or registry) —
+    /// zero mapper runs.
+    Loaded,
+    /// Compiled here by the chain-aware mapper.
+    Compiled,
+}
+
+/// Why a [`Server::swap`] did not happen. The old session keeps serving in
+/// every case — a failed swap is never a partial swap.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SwapError {
+    /// No session is registered under this id.
+    UnknownProgram(ProgramId),
+    /// Another swap of the same program is already building its
+    /// replacement.
+    InProgress(ProgramId),
+    /// The replacement failed to build or failed validation (shape/element
+    /// compatibility with the running session).
+    Failed(String),
+}
+
+impl std::fmt::Display for SwapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SwapError::UnknownProgram(id) => write!(f, "swap: unknown program {id:?}"),
+            SwapError::InProgress(id) => write!(f, "swap_in_progress: program {id:?}"),
+            SwapError::Failed(m) => write!(f, "swap_failed: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for SwapError {}
+
 /// Where a model session comes from — the single argument of
 /// [`Server::register`]. The canonical deployment path is an [`Artifact`]
 /// (in memory or a `.minisa` file): compiled once anywhere, loaded here with
@@ -616,6 +691,13 @@ pub enum ArtifactSource {
     Artifact(Box<Artifact>),
     /// Load a `.minisa` container from disk.
     Path(PathBuf),
+    /// Resolve and load from the server's attached artifact registry
+    /// ([`ServerOptions::registry`]). `key` is any [`Registry::find`] spec:
+    /// an exact `<content>-<arch>` key, a content-hash prefix, or a model
+    /// name (resolved against the fleet's eligible arch fingerprints).
+    /// Loads go through the shared program cache, so N sessions of one
+    /// content hash share a single decoded weight allocation.
+    Registry { key: String },
     /// Back-compat: compile the chain here, f32 weights
     /// (the former `register_chain`).
     CompileF32 { chain: Chain, weights: Vec<Vec<f32>> },
@@ -713,6 +795,10 @@ pub struct ServerOptions {
     /// sampling). Sampled requests carry a [`RequestTrace`] through the
     /// pipeline and record per-stage latency histograms on completion.
     pub tracing: TraceOptions,
+    /// Artifact registry for [`ArtifactSource::Registry`] sessions and
+    /// registry-sourced swaps. Shared (`Arc`) so several servers — or a
+    /// server and its operational tooling — see one program cache.
+    pub registry: Option<Arc<Registry>>,
 }
 
 impl Default for ServerOptions {
@@ -725,6 +811,7 @@ impl Default for ServerOptions {
             shard_timeout_ms: 0,
             admission: AdmissionOptions::default(),
             tracing: TraceOptions::default(),
+            registry: None,
         }
     }
 }
@@ -765,6 +852,13 @@ pub struct Server {
     /// batching injection surface (`run_fleet` adds compatible arrivals
     /// here until a device worker claims the batch).
     open: Mutex<HashMap<BatchKey, Arc<OpenBatch>>>,
+    /// Attached artifact registry ([`ArtifactSource::Registry`] sessions,
+    /// registry-sourced swaps).
+    registry: Option<Arc<Registry>>,
+    /// Programs with a swap in flight: at most one [`Self::swap`] builds a
+    /// replacement per program at a time; a second attempt is the typed
+    /// [`SwapError::InProgress`], never a queue.
+    swapping: Mutex<HashSet<ProgramId>>,
 }
 
 impl Server {
@@ -811,6 +905,8 @@ impl Server {
             max_batch: sopts.max_batch,
             admission: AdmissionController::new(sopts.admission),
             open: Mutex::new(HashMap::new()),
+            registry: sopts.registry,
+            swapping: Mutex::new(HashSet::new()),
         }
     }
 
@@ -848,6 +944,11 @@ impl Server {
             expired: self.ctr.expired.get(),
             session_gone: self.ctr.session_gone.get(),
             injected: self.ctr.injected.get(),
+            swaps: self.ctr.swaps.get(),
+            swap_failed: self.ctr.swap_failed.get(),
+            registry_hits: self.ctr.registry_hits.get(),
+            registry_misses: self.ctr.registry_misses.get(),
+            registry_evictions: self.ctr.registry_evictions.get(),
         }
     }
 
@@ -913,11 +1014,64 @@ impl Server {
     /// * `CompileF32`/`CompileWords`: compile-on-register back-compat (one
     ///   chain-aware mapper run; `program_compiles` moves).
     pub fn register(&self, src: ArtifactSource) -> anyhow::Result<ProgramId> {
+        let (session, origin) = self.build_session(src)?;
+        let id = self.insert_session(session);
+        match origin {
+            SessionOrigin::Loaded => self.ctr.artifact_loads.inc(),
+            SessionOrigin::Compiled => self.ctr.program_compiles.inc(),
+        }
+        Ok(id)
+    }
+
+    /// Build a [`Session`] from a source without touching the session map —
+    /// the shared back half of [`Self::register`] and [`Self::swap`] (a
+    /// swap must do all of this *off* the serving path, before the atomic
+    /// switch).
+    fn build_session(&self, src: ArtifactSource) -> anyhow::Result<(Session, SessionOrigin)> {
         match src {
             ArtifactSource::Path(path) => {
-                let art = Artifact::load(&path)
+                // One read, shared buffer: parse borrows windows of the
+                // mmap-shaped `Arc<[u8]>` instead of re-reading or copying
+                // the payload (`Artifact::load_shared`).
+                let art = Artifact::load_shared(&path)
                     .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
-                self.register(ArtifactSource::Artifact(Box::new(art)))
+                self.build_session(ArtifactSource::Artifact(Box::new(art)))
+            }
+            ArtifactSource::Registry { key } => {
+                let reg = self.registry.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "ArtifactSource::Registry {key:?} but no registry attached \
+                         (ServerOptions::registry)"
+                    )
+                })?;
+                let eligible = self.fleet.fingerprints();
+                let rkey = reg
+                    .find(&key, Some(&eligible))
+                    .map_err(|e| anyhow::anyhow!("registry find {key:?}: {e}"))?;
+                anyhow::ensure!(
+                    eligible.contains(&rkey.arch),
+                    "registry key {rkey} was compiled for fingerprint {:016x} but no fleet \
+                     device matches",
+                    rkey.arch,
+                );
+                let (loaded, outcome) =
+                    reg.load(rkey).map_err(|e| anyhow::anyhow!("registry load {rkey}: {e}"))?;
+                if outcome.hit {
+                    self.ctr.registry_hits.inc();
+                } else {
+                    self.ctr.registry_misses.inc();
+                }
+                self.ctr.registry_evictions.add(outcome.evicted);
+                let weights = match &loaded.weights {
+                    LoadedWeights::F32(w) => SessionWeights::F32(Arc::clone(w)),
+                    LoadedWeights::Words(w) => SessionWeights::Words(Arc::clone(w)),
+                };
+                let session = Session {
+                    program: Arc::clone(&loaded.program),
+                    elem: loaded.elem,
+                    weights,
+                };
+                Ok((session, SessionOrigin::Loaded))
             }
             ArtifactSource::Artifact(art) => {
                 // Heterogeneous fleets accept any artifact that at least one
@@ -946,14 +1100,16 @@ impl Server {
                     // An f32 payload serves the classic f32 session path
                     // (`Payload::Program`); words are IEEE bit patterns.
                     SessionWeights::F32(Arc::new(
-                        payload.weights.iter().map(|m| decode_words::<f32>(m)).collect(),
+                        payload.weights.iter().map(|m| m.decode::<f32>()).collect(),
                     ))
                 } else {
-                    SessionWeights::Words(Arc::new(WordWeights::new(payload.weights, elem)))
+                    SessionWeights::Words(Arc::new(WordWeights::from_matrices(
+                        &payload.weights,
+                        elem,
+                    )))
                 };
-                let id = self.insert_session(program, elem, weights);
-                self.ctr.artifact_loads.inc();
-                Ok(id)
+                let session = Session { program: Arc::new(program), elem, weights };
+                Ok((session, SessionOrigin::Loaded))
             }
             ArtifactSource::CompileF32 { chain, weights } => {
                 chain.validate().map_err(anyhow::Error::msg)?;
@@ -961,13 +1117,12 @@ impl Server {
                 let program = Program::compile(&self.cfg, &chain, &self.opts).ok_or_else(|| {
                     anyhow::anyhow!("no feasible mapping for chain on {}", self.cfg.name())
                 })?;
-                let id = self.insert_session(
-                    program,
-                    ElemType::F32,
-                    SessionWeights::F32(Arc::new(weights)),
-                );
-                self.ctr.program_compiles.inc();
-                Ok(id)
+                let session = Session {
+                    program: Arc::new(program),
+                    elem: ElemType::F32,
+                    weights: SessionWeights::F32(Arc::new(weights)),
+                };
+                Ok((session, SessionOrigin::Compiled))
             }
             ArtifactSource::CompileWords { chain, weights, elem } => {
                 chain.validate().map_err(anyhow::Error::msg)?;
@@ -978,29 +1133,103 @@ impl Server {
                 // Decode-once: the per-backend form is built here, not per
                 // dispatch (for ModP that is one Montgomery conversion per
                 // weight element — session-sized work).
-                let id = self.insert_session(
-                    program,
+                let session = Session {
+                    program: Arc::new(program),
                     elem,
-                    SessionWeights::Words(Arc::new(WordWeights::new(weights, elem))),
-                );
-                self.ctr.program_compiles.inc();
-                Ok(id)
+                    weights: SessionWeights::Words(Arc::new(WordWeights::new(weights, elem))),
+                };
+                Ok((session, SessionOrigin::Compiled))
             }
         }
     }
 
-    fn insert_session(
-        &self,
-        program: Program,
-        elem: ElemType,
-        weights: SessionWeights,
-    ) -> ProgramId {
+    fn insert_session(&self, session: Session) -> ProgramId {
         let id = ProgramId(self.next_program.fetch_add(1, Ordering::Relaxed));
-        self.sessions
-            .write()
-            .unwrap()
-            .insert(id, Session { program: Arc::new(program), elem, weights });
+        self.sessions.write().unwrap().insert(id, session);
         id
+    }
+
+    /// Zero-downtime hot swap: replace the session behind `id` with a
+    /// freshly built one from `src`, without ever leaving `id`
+    /// unregistered.
+    ///
+    /// The replacement is compiled/loaded entirely **off** the serving path
+    /// (requests keep dispatching against the old session), then validated
+    /// for compatibility — same element type and same in/out feature widths,
+    /// since admitted requests were sized against the old program — and
+    /// only then installed by one atomic map-entry replacement. Dispatchers
+    /// clone the `Session` out of the map before executing, so in-flight
+    /// batches drain against whichever version admitted them and answer
+    /// bit-exact for that version; requests arriving after the switch see
+    /// the new one. No request is ever dropped, duplicated, or answered
+    /// with a swap-attributable error.
+    ///
+    /// Failures are typed ([`SwapError`]) and leave the old session
+    /// serving; `serve_swaps_total` / `serve_swap_failed_total` account the
+    /// outcomes. Provenance counters move exactly as in
+    /// [`Self::register`]: a loaded replacement bumps `artifact_loads`, a
+    /// compiled one bumps `program_compiles` — a swap on the serving path
+    /// never hides mapper work.
+    pub fn swap(&self, id: ProgramId, src: ArtifactSource) -> Result<(), SwapError> {
+        let old = self
+            .sessions
+            .read()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or(SwapError::UnknownProgram(id))?;
+        if !self.swapping.lock().unwrap().insert(id) {
+            // Deliberately not counted as swap_failed: nothing was
+            // attempted, the first swap still owns the outcome.
+            return Err(SwapError::InProgress(id));
+        }
+        let outcome = match self.build_session(src) {
+            Err(e) => Err(SwapError::Failed(e.to_string())),
+            Ok((new, origin)) => {
+                let (op, np) = (&old.program, &new.program);
+                if new.elem != old.elem
+                    || np.in_features() != op.in_features()
+                    || np.out_features() != op.out_features()
+                {
+                    Err(SwapError::Failed(format!(
+                        "replacement is {:?} {}→{}, running session is {:?} {}→{}",
+                        new.elem,
+                        np.in_features(),
+                        np.out_features(),
+                        old.elem,
+                        op.in_features(),
+                        op.out_features(),
+                    )))
+                } else {
+                    match origin {
+                        SessionOrigin::Loaded => self.ctr.artifact_loads.inc(),
+                        SessionOrigin::Compiled => self.ctr.program_compiles.inc(),
+                    }
+                    // The atomic switch: one map-entry replacement under the
+                    // write lock. In-flight dispatches hold clones of the
+                    // old session and drain untouched.
+                    self.sessions.write().unwrap().insert(id, new);
+                    Ok(())
+                }
+            }
+        };
+        self.swapping.lock().unwrap().remove(&id);
+        match &outcome {
+            Ok(()) => self.ctr.swaps.inc(),
+            Err(_) => self.ctr.swap_failed.inc(),
+        }
+        outcome
+    }
+
+    /// Pointer identity of the session's resident weight allocation — lets
+    /// tests and operational tooling *prove* that sessions loaded from one
+    /// registry content hash share a single buffer, and that a swap
+    /// actually changed the serving weights.
+    pub fn weights_ptr(&self, id: ProgramId) -> Option<usize> {
+        self.sessions.read().unwrap().get(&id).map(|s| match &s.weights {
+            SessionWeights::F32(w) => Arc::as_ptr(w) as usize,
+            SessionWeights::Words(w) => Arc::as_ptr(w) as usize,
+        })
     }
 
     /// Register a model chain: runs the chain-aware mapper, fuses the
@@ -2707,5 +2936,119 @@ mod tests {
         }
         drop(tx);
         h.join().unwrap();
+    }
+
+    fn word_artifact(cfg: &ArchConfig, chain: &Chain, elem: ElemType, seed: u64) -> Artifact {
+        use crate::artifact::Compiler;
+        let mut rng = Lcg::new(seed);
+        let weights: Vec<Vec<u64>> =
+            chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect();
+        Compiler::new(cfg).elem(elem).weights(weights).compile(chain).unwrap()
+    }
+
+    /// A successful swap atomically replaces the session (new weight
+    /// allocation, same id) and accounts provenance honestly; validation
+    /// failures are typed and leave the old session untouched.
+    #[test]
+    fn swap_replaces_session_and_validates_compatibility() {
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("mlp", 4, &[8, 8]);
+        let server = Server::new(&cfg, Arc::new(NaiveExecutor));
+        let a = word_artifact(&cfg, &chain, ElemType::I32, 70);
+        let pid = server.register(ArtifactSource::Artifact(Box::new(a))).unwrap();
+        let ptr_before = server.weights_ptr(pid).unwrap();
+        // Incompatible replacement: different element type.
+        let wrong_elem = word_artifact(&cfg, &chain, ElemType::Goldilocks, 71);
+        let err = server.swap(pid, ArtifactSource::Artifact(Box::new(wrong_elem))).unwrap_err();
+        assert!(matches!(err, SwapError::Failed(_)), "{err}");
+        assert_eq!(server.weights_ptr(pid).unwrap(), ptr_before, "old session kept serving");
+        // Incompatible replacement: different feature widths.
+        let wrong_shape =
+            word_artifact(&cfg, &Chain::mlp("mlp", 4, &[8, 12, 12]), ElemType::I32, 72);
+        assert!(server.swap(pid, ArtifactSource::Artifact(Box::new(wrong_shape))).is_err());
+        // Compatible replacement: new weights, same chain shape.
+        let b = word_artifact(&cfg, &chain, ElemType::I32, 73);
+        server.swap(pid, ArtifactSource::Artifact(Box::new(b))).unwrap();
+        assert_ne!(server.weights_ptr(pid).unwrap(), ptr_before, "weights actually swapped");
+        // Unknown id is its own typed error.
+        let c = word_artifact(&cfg, &chain, ElemType::I32, 74);
+        assert_eq!(
+            server.swap(ProgramId(999), ArtifactSource::Artifact(Box::new(c))),
+            Err(SwapError::UnknownProgram(ProgramId(999)))
+        );
+        let st = server.stats();
+        assert_eq!(st.swaps, 1);
+        assert_eq!(st.swap_failed, 2, "unknown-id attempts are not counted as failed swaps");
+        assert_eq!(st.artifact_loads, 2, "register + successful swap");
+        assert_eq!(st.program_compiles, 0, "nothing on this path ran the mapper");
+    }
+
+    /// At most one swap per program builds at a time: a second attempt is
+    /// the typed `swap_in_progress` surface, and it does not consume a
+    /// `swap_failed` count.
+    #[test]
+    fn concurrent_swap_is_typed_in_progress() {
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("mlp", 4, &[8, 8]);
+        let server = Server::new(&cfg, Arc::new(NaiveExecutor));
+        let a = word_artifact(&cfg, &chain, ElemType::I32, 80);
+        let pid = server.register(ArtifactSource::Artifact(Box::new(a))).unwrap();
+        // Hold the guard as a racing swap would.
+        assert!(server.swapping.lock().unwrap().insert(pid));
+        let b = word_artifact(&cfg, &chain, ElemType::I32, 81);
+        assert_eq!(
+            server.swap(pid, ArtifactSource::Artifact(Box::new(b))),
+            Err(SwapError::InProgress(pid))
+        );
+        server.swapping.lock().unwrap().remove(&pid);
+        assert_eq!(server.stats().swap_failed, 0);
+        // Guard released: the swap goes through.
+        let c = word_artifact(&cfg, &chain, ElemType::I32, 82);
+        server.swap(pid, ArtifactSource::Artifact(Box::new(c))).unwrap();
+        assert_eq!(server.stats().swaps, 1);
+    }
+
+    /// Registry-sourced sessions: three registrations of one content hash
+    /// share a single decoded weight allocation (pointer identity), the
+    /// shared cache counts 1 miss + 2 hits, and serving needs zero mapper
+    /// runs.
+    #[test]
+    fn registry_sessions_share_one_weight_allocation() {
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("regmlp", 4, &[8, 8]);
+        let art = word_artifact(&cfg, &chain, ElemType::BabyBear, 90);
+        let registry = Arc::new(crate::registry::Registry::new(
+            Box::new(crate::registry::MemBackend::new()),
+            4,
+        ));
+        let key = registry.put(&art).unwrap();
+        let opts = ServerOptions { registry: Some(Arc::clone(&registry)), ..Default::default() };
+        let server = Server::with_options(&cfg, Arc::new(NaiveExecutor), opts);
+        let p1 = server.register(ArtifactSource::Registry { key: key.to_string() }).unwrap();
+        // Resolve by model name and by content prefix too — all one entry.
+        let p2 = server.register(ArtifactSource::Registry { key: "regmlp".into() }).unwrap();
+        let p3 = server
+            .register(ArtifactSource::Registry {
+                key: format!("{:016x}", key.content)[..8].to_string(),
+            })
+            .unwrap();
+        let ptrs: Vec<usize> =
+            [p1, p2, p3].iter().map(|p| server.weights_ptr(*p).unwrap()).collect();
+        assert_eq!(ptrs[0], ptrs[1], "one decoded buffer behind every session");
+        assert_eq!(ptrs[1], ptrs[2]);
+        let st = server.stats();
+        assert_eq!((st.registry_misses, st.registry_hits), (1, 2));
+        assert_eq!(st.artifact_loads, 3);
+        assert_eq!(st.program_compiles, 0);
+        let snap = server.metrics().snapshot();
+        assert_eq!(snap.counter("registry_hits_total"), Some(2));
+        assert_eq!(snap.counter("registry_misses_total"), Some(1));
+        // No registry attached → typed, descriptive failure.
+        let bare = Server::new(&cfg, Arc::new(NaiveExecutor));
+        let err = bare
+            .register(ArtifactSource::Registry { key: key.to_string() })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no registry attached"), "{err}");
     }
 }

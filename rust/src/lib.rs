@@ -25,6 +25,7 @@ pub mod mapper;
 pub mod microinst;
 pub mod obs;
 pub mod program;
+pub mod registry;
 pub mod perf;
 pub mod baselines;
 pub mod coordinator;

@@ -1,0 +1,268 @@
+//! Storage backends for the artifact registry: a flat keyspace of
+//! `(blob, meta)` pairs behind the backend-agnostic [`RegistryBackend`]
+//! trait (the mirage KV-backend pattern — the registry's logic never knows
+//! whether it is talking to a directory, a test map, or a future object
+//! store).
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::RegistryError;
+
+/// A flat key → (blob, JSON metadata) store. Keys are registry key strings
+/// (`<content:016x>-<arch:016x>`); implementations must be safe for
+/// concurrent `put`/`get`/`delete` from many threads **and** processes:
+/// a `get` racing a `put` or `delete` of the same key returns either the
+/// complete old state, the complete new state, or a miss — never torn
+/// bytes.
+pub trait RegistryBackend: Send + Sync {
+    /// Store a blob and its metadata record under `key` (overwriting both
+    /// atomically with respect to readers).
+    fn put(&self, key: &str, blob: &[u8], meta: &str) -> Result<(), RegistryError>;
+    /// The blob under `key`; `Ok(None)` is the typed miss.
+    fn get(&self, key: &str) -> Result<Option<std::sync::Arc<[u8]>>, RegistryError>;
+    /// The metadata record under `key`; `Ok(None)` is the typed miss.
+    fn meta(&self, key: &str) -> Result<Option<String>, RegistryError>;
+    /// Remove `key`; `Ok(false)` if it was not present.
+    fn delete(&self, key: &str) -> Result<bool, RegistryError>;
+    /// Every key currently present, in unspecified order.
+    fn list(&self) -> Result<Vec<String>, RegistryError>;
+    /// Human-readable location for error messages and `Debug`.
+    fn describe(&self) -> String;
+}
+
+/// Registry keys double as file names, so they must stay inside the store
+/// directory: lowercase hex plus the `-` separator only.
+fn check_key(key: &str) -> Result<(), RegistryError> {
+    let ok = !key.is_empty()
+        && key.len() <= 64
+        && key.chars().all(|c| c.is_ascii_hexdigit() || c == '-');
+    if ok {
+        Ok(())
+    } else {
+        Err(RegistryError::Corrupt(format!("malformed registry key {key:?}")))
+    }
+}
+
+/// Monotonic discriminator for temp-file names, so concurrent writers in
+/// one process never collide on the same temp path.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// On-disk backend: `<root>/<key>.blob` + `<root>/<key>.json`. Writes go
+/// through a temp file in the same directory followed by `rename`, which
+/// is atomic on POSIX — readers see the old blob or the new one, never a
+/// partial write. `put` of the same key is idempotent by construction
+/// (content-addressed keys ⇒ same bytes), so racing writers are harmless.
+pub struct DirBackend {
+    root: PathBuf,
+}
+
+impl DirBackend {
+    /// Open (creating if needed) a registry directory.
+    pub fn open(root: &Path) -> Result<Self, RegistryError> {
+        fs::create_dir_all(root)
+            .map_err(|e| RegistryError::Io(format!("{}: {e}", root.display())))?;
+        Ok(Self { root: root.to_path_buf() })
+    }
+
+    fn blob_path(&self, key: &str) -> PathBuf {
+        self.root.join(format!("{key}.blob"))
+    }
+
+    fn meta_path(&self, key: &str) -> PathBuf {
+        self.root.join(format!("{key}.json"))
+    }
+
+    /// Atomic write: temp file + rename into place.
+    fn write_atomic(&self, target: &Path, bytes: &[u8]) -> Result<(), RegistryError> {
+        let tmp = self.root.join(format!(
+            ".tmp.{}.{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let io = |e: std::io::Error| RegistryError::Io(format!("{}: {e}", target.display()));
+        fs::write(&tmp, bytes).map_err(&io)?;
+        fs::rename(&tmp, target).map_err(|e| {
+            fs::remove_file(&tmp).ok();
+            io(e)
+        })
+    }
+
+    /// A read that treats NotFound as the typed miss.
+    fn read_opt(path: &Path) -> Result<Option<Vec<u8>>, RegistryError> {
+        match fs::read(path) {
+            Ok(b) => Ok(Some(b)),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(RegistryError::Io(format!("{}: {e}", path.display()))),
+        }
+    }
+}
+
+impl RegistryBackend for DirBackend {
+    fn put(&self, key: &str, blob: &[u8], meta: &str) -> Result<(), RegistryError> {
+        check_key(key)?;
+        // Blob first, meta second: a reader that sees the meta record can
+        // rely on the blob already being in place.
+        self.write_atomic(&self.blob_path(key), blob)?;
+        self.write_atomic(&self.meta_path(key), meta.as_bytes())
+    }
+
+    fn get(&self, key: &str) -> Result<Option<std::sync::Arc<[u8]>>, RegistryError> {
+        check_key(key)?;
+        Ok(Self::read_opt(&self.blob_path(key))?.map(Into::into))
+    }
+
+    fn meta(&self, key: &str) -> Result<Option<String>, RegistryError> {
+        check_key(key)?;
+        match Self::read_opt(&self.meta_path(key))? {
+            None => Ok(None),
+            Some(b) => String::from_utf8(b)
+                .map(Some)
+                .map_err(|_| RegistryError::Corrupt(format!("non-UTF8 metadata for {key}"))),
+        }
+    }
+
+    fn delete(&self, key: &str) -> Result<bool, RegistryError> {
+        check_key(key)?;
+        // Meta first (the announcement), blob second; either may already be
+        // gone under a racing delete — NotFound is not an error here.
+        let gone = |e: &std::io::Error| e.kind() == std::io::ErrorKind::NotFound;
+        let meta = match fs::remove_file(self.meta_path(key)) {
+            Ok(()) => true,
+            Err(e) if gone(&e) => false,
+            Err(e) => return Err(RegistryError::Io(format!("{key}: {e}"))),
+        };
+        let blob = match fs::remove_file(self.blob_path(key)) {
+            Ok(()) => true,
+            Err(e) if gone(&e) => false,
+            Err(e) => return Err(RegistryError::Io(format!("{key}: {e}"))),
+        };
+        Ok(meta || blob)
+    }
+
+    fn list(&self) -> Result<Vec<String>, RegistryError> {
+        let rd = fs::read_dir(&self.root)
+            .map_err(|e| RegistryError::Io(format!("{}: {e}", self.root.display())))?;
+        let mut keys = Vec::new();
+        for entry in rd {
+            let entry = entry.map_err(|e| RegistryError::Io(e.to_string()))?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(key) = name.strip_suffix(".blob") {
+                if check_key(key).is_ok() {
+                    keys.push(key.to_string());
+                }
+            }
+        }
+        keys.sort();
+        Ok(keys)
+    }
+
+    fn describe(&self) -> String {
+        self.root.display().to_string()
+    }
+}
+
+/// In-memory backend for tests and ephemeral registries.
+#[derive(Default)]
+pub struct MemBackend {
+    entries: Mutex<HashMap<String, (std::sync::Arc<[u8]>, String)>>,
+}
+
+impl MemBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl RegistryBackend for MemBackend {
+    fn put(&self, key: &str, blob: &[u8], meta: &str) -> Result<(), RegistryError> {
+        check_key(key)?;
+        self.entries
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), (blob.to_vec().into(), meta.to_string()));
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Option<std::sync::Arc<[u8]>>, RegistryError> {
+        check_key(key)?;
+        Ok(self.entries.lock().unwrap().get(key).map(|(b, _)| b.clone()))
+    }
+
+    fn meta(&self, key: &str) -> Result<Option<String>, RegistryError> {
+        check_key(key)?;
+        Ok(self.entries.lock().unwrap().get(key).map(|(_, m)| m.clone()))
+    }
+
+    fn delete(&self, key: &str) -> Result<bool, RegistryError> {
+        check_key(key)?;
+        Ok(self.entries.lock().unwrap().remove(key).is_some())
+    }
+
+    fn list(&self) -> Result<Vec<String>, RegistryError> {
+        let mut keys: Vec<String> = self.entries.lock().unwrap().keys().cloned().collect();
+        keys.sort();
+        Ok(keys)
+    }
+
+    fn describe(&self) -> String {
+        "mem".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("minisa_reg_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn dir_backend_roundtrip_delete_list() {
+        let root = tmp_root("rt");
+        std::fs::remove_dir_all(&root).ok();
+        let b = DirBackend::open(&root).unwrap();
+        let key = "00000000000000aa-00000000000000bb";
+        assert!(b.get(key).unwrap().is_none(), "miss is typed, not an error");
+        b.put(key, &[1, 2, 3], "{\"kind\":\"full\"}").unwrap();
+        assert_eq!(&*b.get(key).unwrap().unwrap(), &[1, 2, 3]);
+        assert_eq!(b.meta(key).unwrap().unwrap(), "{\"kind\":\"full\"}");
+        assert_eq!(b.list().unwrap(), vec![key.to_string()]);
+        assert!(b.delete(key).unwrap());
+        assert!(!b.delete(key).unwrap(), "second delete is a clean no-op");
+        assert!(b.get(key).unwrap().is_none());
+        assert!(b.list().unwrap().is_empty());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn keys_that_escape_the_directory_are_rejected() {
+        let root = tmp_root("esc");
+        std::fs::remove_dir_all(&root).ok();
+        let b = DirBackend::open(&root).unwrap();
+        for bad in ["../evil", "a/b", "", "KEY WITH SPACE", "zz..zz"] {
+            assert!(b.put(bad, &[0], "{}").is_err(), "{bad:?} must be rejected");
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn overwrite_is_atomic_for_readers() {
+        // Single-threaded sanity of the rename path: after overwrite the
+        // new bytes are visible in full (the multi-threaded race is in
+        // tests/registry.rs).
+        let root = tmp_root("ow");
+        std::fs::remove_dir_all(&root).ok();
+        let b = DirBackend::open(&root).unwrap();
+        let key = "0000000000000001-0000000000000002";
+        b.put(key, &[0u8; 64], "{}").unwrap();
+        b.put(key, &[7u8; 64], "{}").unwrap();
+        assert_eq!(&*b.get(key).unwrap().unwrap(), &[7u8; 64][..]);
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

@@ -1,0 +1,230 @@
+//! Capacity-bounded LRU cache of **loaded** programs, shared across every
+//! session (and every fleet device) that serves the same content hash.
+//!
+//! The cache value is the expensive part of `Server::register`: the decoded
+//! [`Program`] (wave plans compiled) plus the weights in their decoded
+//! per-backend form. A hit hands back `Arc`s, so N sessions of one blob
+//! share **one** weight allocation — the zero-copy guarantee the tests
+//! prove by pointer identity. Hit/miss/eviction totals surface in the
+//! serving metrics registry as `registry_{hits,misses,evictions}_total`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::arith::ElemType;
+use crate::coordinator::serve::WordWeights;
+use crate::program::Program;
+
+use super::RegistryKey;
+
+/// Decoded session weights in their serving form — the same split the
+/// server keeps per session (`f32` sessions serve `Payload::Program`,
+/// everything else serves canonical words).
+#[derive(Clone)]
+pub enum LoadedWeights {
+    F32(Arc<Vec<Vec<f32>>>),
+    Words(Arc<WordWeights>),
+}
+
+/// One fully-loaded registry entry: compiled program + decoded weights.
+pub struct LoadedProgram {
+    pub key: RegistryKey,
+    pub program: Arc<Program>,
+    pub elem: ElemType,
+    pub weights: LoadedWeights,
+}
+
+/// Point-in-time cache statistics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub len: usize,
+    pub capacity: usize,
+}
+
+struct Inner {
+    /// Key string → entry.
+    map: HashMap<String, Arc<LoadedProgram>>,
+    /// Recency order, front = least recently used.
+    order: Vec<String>,
+}
+
+/// The LRU itself. All structural state sits behind one mutex (entries are
+/// few and large — contention is on the *contents*, which are `Arc`-shared
+/// outside the lock); the counters are lock-free so hot-path reads of the
+/// stats never serialize against inserts.
+pub struct ProgramCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ProgramCache {
+    /// A cache holding at most `capacity` loaded programs. Capacity 0
+    /// disables caching entirely (every lookup is a miss, nothing is
+    /// retained).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            inner: Mutex::new(Inner { map: HashMap::new(), order: Vec::new() }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up `key`, refreshing its recency on a hit.
+    pub fn get(&self, key: &str) -> Option<Arc<LoadedProgram>> {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.map.get(key).cloned() {
+            Some(v) => {
+                if let Some(at) = inner.order.iter().position(|k| k == key) {
+                    let k = inner.order.remove(at);
+                    inner.order.push(k);
+                }
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) `key`, evicting least-recently-used entries to
+    /// stay within capacity. Returns how many entries were evicted by this
+    /// insert. Under concurrent loads of one key the last writer wins —
+    /// both callers hold complete, valid entries either way.
+    pub fn insert(&self, key: &str, value: Arc<LoadedProgram>) -> u64 {
+        if self.capacity == 0 {
+            return 0;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.insert(key.to_string(), value).is_none() {
+            inner.order.push(key.to_string());
+        } else if let Some(at) = inner.order.iter().position(|k| k == key) {
+            let k = inner.order.remove(at);
+            inner.order.push(k);
+        }
+        let mut evicted = 0;
+        while inner.order.len() > self.capacity {
+            let lru = inner.order.remove(0);
+            inner.map.remove(&lru);
+            evicted += 1;
+        }
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        evicted
+    }
+
+    /// Drop `key` if cached (a gc'd or re-put blob must not serve stale).
+    pub fn invalidate(&self, key: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.remove(key).is_some() {
+            inner.order.retain(|k| k != key);
+        }
+    }
+
+    /// Entries currently resident.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            len: self.len(),
+            capacity: self.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::config::ArchConfig;
+    use crate::mapper::chain::Chain;
+
+    fn entry(tag: u64) -> Arc<LoadedProgram> {
+        // A real (tiny) program so the cache holds what production holds.
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("c", 4, &[4, 4]);
+        let program = crate::program::Program::compile(
+            &cfg,
+            &chain,
+            &crate::mapper::search::MapperOptions {
+                full_layout_search: false,
+                threads: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        Arc::new(LoadedProgram {
+            key: RegistryKey { content: tag, arch: 1 },
+            program: Arc::new(program),
+            elem: ElemType::F32,
+            weights: LoadedWeights::F32(Arc::new(vec![vec![0.0; 16]])),
+        })
+    }
+
+    #[test]
+    fn lru_evicts_oldest_and_counts() {
+        let c = ProgramCache::new(2);
+        assert!(c.get("aa").is_none());
+        c.insert("aa", entry(1));
+        c.insert("bb", entry(2));
+        // Touch aa so bb is the LRU victim.
+        assert!(c.get("aa").is_some());
+        let evicted = c.insert("cc", entry(3));
+        assert_eq!(evicted, 1);
+        assert!(c.get("bb").is_none(), "bb was the least recently used");
+        assert!(c.get("aa").is_some());
+        assert!(c.get("cc").is_some());
+        let s = c.stats();
+        assert_eq!(s.len, 2);
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.capacity, 2);
+        assert!(s.hits >= 3 && s.misses >= 2);
+    }
+
+    #[test]
+    fn hit_shares_the_same_allocation() {
+        let c = ProgramCache::new(4);
+        c.insert("aa", entry(7));
+        let a = c.get("aa").unwrap();
+        let b = c.get("aa").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let (LoadedWeights::F32(wa), LoadedWeights::F32(wb)) = (&a.weights, &b.weights) else {
+            panic!("f32 entry");
+        };
+        assert!(Arc::ptr_eq(wa, wb), "one weight buffer behind every hit");
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let c = ProgramCache::new(0);
+        assert_eq!(c.insert("aa", entry(1)), 0);
+        assert!(c.get("aa").is_none());
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn invalidate_drops_entry() {
+        let c = ProgramCache::new(4);
+        c.insert("aa", entry(1));
+        c.invalidate("aa");
+        assert!(c.get("aa").is_none());
+        assert_eq!(c.len(), 0);
+    }
+}

@@ -1,0 +1,190 @@
+//! Weights-only **delta artifacts** — the fine-tune-redeploy container.
+//!
+//! A delta ships only new canonical weight words plus the content hash of
+//! its base artifact; the base's trace, decisions, and arch section are
+//! reused verbatim at resolve time. Because the compiler is deterministic,
+//! composing `base + delta weights` reproduces, byte for byte, what a full
+//! recompile of the same chain with the new weights would produce — the
+//! delta's key *is* the content hash of that composed container, and
+//! [`super::Registry::resolve`] re-verifies it on every load.
+//!
+//! Wire format (little-endian, `docs/REGISTRY.md`):
+//!
+//! ```text
+//! magic "MINISAdl" | u16 version | u64 base_content | u64 arch_fingerprint
+//! | u64 composed_content | u8 elem_tag | u32 n_layers
+//! | n_layers × (u32 len, len × u64 words) | u64 fnv64 checksum
+//! ```
+
+use crate::arith::ElemType;
+use crate::artifact::{elem_from_tag, elem_tag, fnv64};
+
+use super::RegistryError;
+
+/// Delta container magic.
+pub const DELTA_MAGIC: [u8; 8] = *b"MINISAdl";
+/// Delta wire-format version (same compatibility rule as the artifact
+/// container: readers reject foreign versions).
+pub const DELTA_VERSION: u16 = 1;
+
+/// Layer-count cap: a lying header must fail on the truncated read that
+/// follows, not on an absurd up-front allocation.
+const MAX_LAYERS: usize = 1 << 16;
+
+/// A parsed weights-only delta.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Delta {
+    /// Content hash of the base artifact this delta patches.
+    pub base_content: u64,
+    /// Arch fingerprint — must match the base's (a delta never crosses
+    /// architectures; recompile for that).
+    pub arch: u64,
+    /// Content hash of the *composed* artifact (base + these weights):
+    /// the delta's own registry key, re-verified at resolve.
+    pub composed_content: u64,
+    /// Element type of the replacement weights.
+    pub elem: ElemType,
+    /// One canonical-word matrix per chain layer.
+    pub weights: Vec<Vec<u64>>,
+}
+
+impl Delta {
+    /// Serialize to the delta wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&DELTA_MAGIC);
+        b.extend_from_slice(&DELTA_VERSION.to_le_bytes());
+        b.extend_from_slice(&self.base_content.to_le_bytes());
+        b.extend_from_slice(&self.arch.to_le_bytes());
+        b.extend_from_slice(&self.composed_content.to_le_bytes());
+        b.push(elem_tag(self.elem));
+        b.extend_from_slice(&(self.weights.len() as u32).to_le_bytes());
+        for m in &self.weights {
+            b.extend_from_slice(&(m.len() as u32).to_le_bytes());
+            for &w in m {
+                b.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        let ck = fnv64(&b);
+        b.extend_from_slice(&ck.to_le_bytes());
+        b
+    }
+
+    /// Parse and checksum-validate a delta container.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Delta, RegistryError> {
+        let corrupt = |m: &str| RegistryError::Corrupt(format!("delta: {m}"));
+        if bytes.len() < DELTA_MAGIC.len() + 2 + 8 || bytes[..DELTA_MAGIC.len()] != DELTA_MAGIC {
+            return Err(corrupt("bad magic or truncated"));
+        }
+        let body = bytes.len() - 8;
+        let stored = u64::from_le_bytes(bytes[body..].try_into().unwrap());
+        if fnv64(&bytes[..body]) != stored {
+            return Err(corrupt("checksum mismatch"));
+        }
+        let mut r = DeltaReader { bytes: &bytes[..body], pos: DELTA_MAGIC.len() };
+        let version = u16::from_le_bytes(r.take(2)?.try_into().unwrap());
+        if version != DELTA_VERSION {
+            return Err(corrupt(&format!(
+                "version {version} unsupported (this build reads {DELTA_VERSION})"
+            )));
+        }
+        let base_content = r.u64()?;
+        let arch = r.u64()?;
+        let composed_content = r.u64()?;
+        let elem = elem_from_tag(r.take(1)?[0]).map_err(RegistryError::Artifact)?;
+        let n_layers = u32::from_le_bytes(r.take(4)?.try_into().unwrap()) as usize;
+        if n_layers == 0 || n_layers > MAX_LAYERS {
+            return Err(corrupt(&format!("implausible layer count {n_layers}")));
+        }
+        let mut weights = Vec::with_capacity(n_layers.min(1024));
+        for _ in 0..n_layers {
+            let len = u32::from_le_bytes(r.take(4)?.try_into().unwrap()) as usize;
+            let raw = r.take(len.checked_mul(8).ok_or(corrupt("layer too large"))?)?;
+            weights.push(
+                raw.chunks_exact(8)
+                    .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            );
+        }
+        if r.pos != body {
+            return Err(corrupt("trailing bytes"));
+        }
+        Ok(Delta { base_content, arch, composed_content, elem, weights })
+    }
+
+    /// Cheap header sniff: `Some(base_content)` iff `bytes` starts like a
+    /// delta container (used by gc to chase base links without a full
+    /// parse of every blob).
+    pub fn sniff_base(bytes: &[u8]) -> Option<u64> {
+        if bytes.len() >= DELTA_MAGIC.len() + 2 + 8 && bytes[..DELTA_MAGIC.len()] == DELTA_MAGIC {
+            let at = DELTA_MAGIC.len() + 2;
+            Some(u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap()))
+        } else {
+            None
+        }
+    }
+}
+
+/// Bounds-checked cursor over the checksummed body.
+struct DeltaReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> DeltaReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], RegistryError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| RegistryError::Corrupt("delta: truncated".into()))?;
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64, RegistryError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Delta {
+        Delta {
+            base_content: 0x1111_2222_3333_4444,
+            arch: 0xaaaa_bbbb_cccc_dddd,
+            composed_content: 0x5555_6666_7777_8888,
+            elem: ElemType::Goldilocks,
+            weights: vec![vec![1, 2, 3, 4], vec![5, 6]],
+        }
+    }
+
+    #[test]
+    fn delta_roundtrips() {
+        let d = sample();
+        let bytes = d.to_bytes();
+        let back = Delta::from_bytes(&bytes).unwrap();
+        assert_eq!(back, d);
+        assert_eq!(back.to_bytes(), bytes, "fixed point");
+        assert_eq!(Delta::sniff_base(&bytes), Some(d.base_content));
+        assert_eq!(Delta::sniff_base(b"MINISArt........"), None);
+    }
+
+    #[test]
+    fn delta_tampering_detected() {
+        let bytes = sample().to_bytes();
+        let mut bad = bytes.clone();
+        bad[bytes.len() / 2] ^= 1;
+        assert!(matches!(Delta::from_bytes(&bad), Err(RegistryError::Corrupt(_))));
+        assert!(Delta::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        let mut v = bytes.clone();
+        v[8] = 0x7f; // version byte
+        let body = v.len() - 8;
+        let ck = fnv64(&v[..body]).to_le_bytes();
+        v[body..].copy_from_slice(&ck);
+        assert!(matches!(Delta::from_bytes(&v), Err(RegistryError::Corrupt(_))));
+    }
+}

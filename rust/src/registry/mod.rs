@@ -1,0 +1,839 @@
+//! Content-addressed **artifact registry**: the persistent store and
+//! deployment layer over `.minisa` containers (docs/REGISTRY.md).
+//!
+//! The paper's compiled programs are small and immutable (the encoded
+//! trace *is* the artifact — 35×–4·10⁵× less instruction traffic than
+//! micro-control, Fig. 12), which makes them ideal content-addressed
+//! objects: the registry keys every blob by
+//! `(content_hash, arch_fingerprint)` where the content hash is
+//! [`fnv64`](crate::util::fnv64) over the canonical container bytes —
+//! the same hash the container's own checksum and the arch fingerprint
+//! already use. Every `get` re-verifies the content hash against the key,
+//! so a corrupt or swapped blob is a typed error, never a served program.
+//!
+//! Pieces:
+//!
+//! * [`RegistryBackend`] — flat `put/get/delete/list` keyspace with JSON
+//!   metadata alongside blobs (the mirage KV-backend pattern);
+//!   [`DirBackend`] is the on-disk implementation (atomic tmp+rename
+//!   writes), [`MemBackend`] the in-memory one.
+//! * [`Delta`] — weights-only containers for the fine-tune-redeploy case:
+//!   the stored base's trace/decisions are reused and
+//!   [`Registry::resolve`]/[`Registry::get`] chases the base hash and
+//!   re-verifies the **composed** checksum, so a delta's key is provably
+//!   the content hash of the artifact a full recompile would produce.
+//! * [`ProgramCache`] — a capacity-bounded LRU of loaded programs shared
+//!   across sessions and fleet devices; a hit hands out `Arc`s to one
+//!   decoded weight buffer (zero-copy, pointer-identity provable).
+//! * `gc`/`verify`/`diff`/`list` — the operational surface, exposed by the
+//!   `registry` CLI subcommand.
+
+pub mod backend;
+pub mod cache;
+pub mod delta;
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::arith::ElemType;
+use crate::artifact::{
+    fnv64, Artifact, ArtifactCheck, ArtifactError, WeightsPayload,
+};
+use crate::coordinator::serve::WordWeights;
+use crate::program::Program;
+
+pub use backend::{DirBackend, MemBackend, RegistryBackend};
+pub use cache::{CacheStats, LoadedProgram, LoadedWeights, ProgramCache};
+pub use delta::Delta;
+
+/// Default [`ProgramCache`] capacity for [`Registry::open_dir`].
+pub const DEFAULT_CACHE_CAPACITY: usize = 8;
+
+/// Delta chains may nest (a delta of a delta); resolution follows base
+/// links at most this deep before declaring the store corrupt.
+const MAX_DELTA_DEPTH: usize = 8;
+
+/// A registry address: content hash of the canonical artifact bytes plus
+/// the arch fingerprint the stream was encoded for. String form (file
+/// names, CLI): `<content:016x>-<arch:016x>`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RegistryKey {
+    pub content: u64,
+    pub arch: u64,
+}
+
+impl RegistryKey {
+    /// The key of an artifact, together with the canonical bytes it was
+    /// computed over (so callers hash and serialize exactly once).
+    pub fn of(art: &Artifact) -> (RegistryKey, Vec<u8>) {
+        let bytes = art.to_bytes();
+        let key = RegistryKey { content: fnv64(&bytes), arch: art.fingerprint() };
+        (key, bytes)
+    }
+
+    /// Parse the canonical `<content:016x>-<arch:016x>` form.
+    pub fn parse(s: &str) -> Option<RegistryKey> {
+        let (c, a) = s.split_once('-')?;
+        if c.len() != 16 || a.len() != 16 {
+            return None;
+        }
+        Some(RegistryKey {
+            content: u64::from_str_radix(c, 16).ok()?,
+            arch: u64::from_str_radix(a, 16).ok()?,
+        })
+    }
+}
+
+impl fmt::Display for RegistryKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}-{:016x}", self.content, self.arch)
+    }
+}
+
+/// Everything that can go wrong talking to a registry.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RegistryError {
+    /// The key is not in the store — the *typed miss* (a gc'd or
+    /// never-put key), never a panic.
+    Miss(String),
+    /// A blob or metadata record that cannot be trusted: content hash
+    /// mismatch, undecodable container, malformed key.
+    Corrupt(String),
+    /// A delta whose base (or a link in its base chain) is gone.
+    Dangling { key: String, base: String },
+    /// A name/prefix lookup matched more than one key.
+    Ambiguous(String),
+    /// The artifact under this key has no weights payload, so it cannot be
+    /// loaded into a serving session.
+    NoPayload(String),
+    /// Container-level failure surfaced while parsing or composing.
+    Artifact(ArtifactError),
+    /// Filesystem / backend failure.
+    Io(String),
+}
+
+impl fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RegistryError::Miss(k) => write!(f, "registry miss: {k} not in store"),
+            RegistryError::Corrupt(m) => write!(f, "registry corrupt: {m}"),
+            RegistryError::Dangling { key, base } => {
+                write!(f, "dangling delta {key}: base {base} not in store")
+            }
+            RegistryError::Ambiguous(m) => write!(f, "ambiguous registry lookup: {m}"),
+            RegistryError::NoPayload(k) => {
+                write!(f, "artifact {k} has no weights payload (not servable)")
+            }
+            RegistryError::Artifact(e) => write!(f, "artifact: {e}"),
+            RegistryError::Io(m) => write!(f, "registry io: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+impl From<ArtifactError> for RegistryError {
+    fn from(e: ArtifactError) -> Self {
+        RegistryError::Artifact(e)
+    }
+}
+
+/// What [`Registry::load`] did to satisfy a request — the server folds
+/// this into `registry_{hits,misses,evictions}_total`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheOutcome {
+    /// Served from the shared program cache (no blob read, no decode).
+    pub hit: bool,
+    /// LRU entries evicted by the insert on a miss.
+    pub evicted: u64,
+}
+
+/// One row of [`Registry::list`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegistryEntry {
+    pub key: RegistryKey,
+    /// `"full"` or `"delta"`.
+    pub kind: &'static str,
+    /// Model name recorded at put time (first chain layer's name).
+    pub model: String,
+    pub blob_bytes: usize,
+    /// Immediate base content hash for deltas.
+    pub base: Option<u64>,
+}
+
+/// Result of a [`Registry::gc`] sweep.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GcReport {
+    pub kept: Vec<RegistryKey>,
+    pub deleted: Vec<RegistryKey>,
+}
+
+/// The registry: a [`RegistryBackend`] plus the shared [`ProgramCache`].
+pub struct Registry {
+    backend: Box<dyn RegistryBackend>,
+    cache: ProgramCache,
+}
+
+impl fmt::Debug for Registry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Registry({}, {:?})", self.backend.describe(), self.cache.stats())
+    }
+}
+
+impl Registry {
+    pub fn new(backend: Box<dyn RegistryBackend>, cache_capacity: usize) -> Self {
+        Self { backend, cache: ProgramCache::new(cache_capacity) }
+    }
+
+    /// Open (creating if needed) an on-disk registry with the default
+    /// program-cache capacity.
+    pub fn open_dir(root: &Path) -> Result<Self, RegistryError> {
+        Ok(Self::new(Box::new(DirBackend::open(root)?), DEFAULT_CACHE_CAPACITY))
+    }
+
+    /// Shared program-cache statistics (hits/misses/evictions/len).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Store a full artifact under its content address. Idempotent: the
+    /// key is a pure function of the bytes, and re-putting the same
+    /// content rewrites identical files.
+    pub fn put(&self, art: &Artifact) -> Result<RegistryKey, RegistryError> {
+        let (key, bytes) = RegistryKey::of(art);
+        let meta = meta_json(&key, "full", &model_name(art), art.chain.layers.len(), bytes.len(), None);
+        self.backend.put(&key.to_string(), &bytes, &meta)?;
+        // A re-put after gc must not serve a stale cached program.
+        self.cache.invalidate(&key.to_string());
+        Ok(key)
+    }
+
+    /// Store a weights-only delta against `base`: the composed artifact
+    /// (base trace/decisions + `weights`) is computed here so the returned
+    /// key is the content hash a full recompile of the same chain with
+    /// these weights would produce — but only the weights are stored.
+    pub fn put_delta(
+        &self,
+        base: RegistryKey,
+        elem: ElemType,
+        weights: Vec<Vec<u64>>,
+    ) -> Result<RegistryKey, RegistryError> {
+        let base_art = self.get(base)?;
+        let composed = compose(&base_art, elem, &weights)?;
+        // Only the hash of the composed form is kept; the blob stored below
+        // is the small weights-only delta.
+        let (key, _) = RegistryKey::of(&composed);
+        debug_assert_eq!(key.arch, base.arch, "composition never changes the arch section");
+        let d = Delta {
+            base_content: base.content,
+            arch: base.arch,
+            composed_content: key.content,
+            elem,
+            weights,
+        };
+        let blob = d.to_bytes();
+        let meta = meta_json(
+            &key,
+            "delta",
+            &model_name(&composed),
+            composed.chain.layers.len(),
+            blob.len(),
+            Some(base.content),
+        );
+        self.backend.put(&key.to_string(), &blob, &meta)?;
+        self.cache.invalidate(&key.to_string());
+        Ok(key)
+    }
+
+    /// Fetch and fully verify the artifact under `key`. Full blobs are
+    /// hash-checked against the key and parsed zero-copy
+    /// ([`Artifact::from_shared`]); deltas are resolved against their base
+    /// chain and the **composed** bytes re-hashed against the key. A
+    /// missing key is the typed [`RegistryError::Miss`].
+    pub fn get(&self, key: RegistryKey) -> Result<Artifact, RegistryError> {
+        self.get_at_depth(key, 0)
+    }
+
+    fn get_at_depth(&self, key: RegistryKey, depth: usize) -> Result<Artifact, RegistryError> {
+        if depth > MAX_DELTA_DEPTH {
+            return Err(RegistryError::Corrupt(format!(
+                "delta chain under {key} deeper than {MAX_DELTA_DEPTH}"
+            )));
+        }
+        let ks = key.to_string();
+        let blob = self.backend.get(&ks)?.ok_or(RegistryError::Miss(ks.clone()))?;
+        if blob.len() >= 8 && blob[..8] == crate::artifact::MAGIC {
+            if fnv64(&blob) != key.content {
+                return Err(RegistryError::Corrupt(format!(
+                    "{ks}: blob bytes hash to {:016x}, key says {:016x}",
+                    fnv64(&blob),
+                    key.content
+                )));
+            }
+            let art = Artifact::from_shared(blob)?;
+            if art.fingerprint() != key.arch {
+                return Err(RegistryError::Corrupt(format!(
+                    "{ks}: arch fingerprint {:016x} does not match key",
+                    art.fingerprint()
+                )));
+            }
+            Ok(art)
+        } else {
+            self.resolve(key, &blob, depth)
+        }
+    }
+
+    /// Resolve a delta blob: chase the base hash, compose, and re-verify
+    /// the composed checksum against the key.
+    fn resolve(
+        &self,
+        key: RegistryKey,
+        blob: &[u8],
+        depth: usize,
+    ) -> Result<Artifact, RegistryError> {
+        let ks = key.to_string();
+        let d = Delta::from_bytes(blob)?;
+        if d.composed_content != key.content || d.arch != key.arch {
+            return Err(RegistryError::Corrupt(format!(
+                "{ks}: delta header addresses {:016x}-{:016x}",
+                d.composed_content, d.arch
+            )));
+        }
+        let base_key = RegistryKey { content: d.base_content, arch: d.arch };
+        let base = match self.get_at_depth(base_key, depth + 1) {
+            Err(RegistryError::Miss(_)) => {
+                return Err(RegistryError::Dangling { key: ks, base: base_key.to_string() })
+            }
+            r => r?,
+        };
+        let composed = compose(&base, d.elem, &d.weights)?;
+        let bytes = composed.to_bytes();
+        if fnv64(&bytes) != key.content {
+            return Err(RegistryError::Corrupt(format!(
+                "{ks}: composed artifact hashes to {:016x}, key says {:016x}",
+                fnv64(&bytes),
+                key.content
+            )));
+        }
+        Ok(composed)
+    }
+
+    /// Load `key` into its serving form through the shared
+    /// [`ProgramCache`]: a hit returns the cached `Arc`s (one program, one
+    /// weight buffer, shared by every caller); a miss does the full
+    /// verified get + decode and populates the cache.
+    pub fn load(&self, key: RegistryKey) -> Result<(Arc<LoadedProgram>, CacheOutcome), RegistryError> {
+        let ks = key.to_string();
+        if let Some(hit) = self.cache.get(&ks) {
+            return Ok((hit, CacheOutcome { hit: true, evicted: 0 }));
+        }
+        let art = self.get(key)?;
+        let payload = art.payload.as_ref().ok_or(RegistryError::NoPayload(ks.clone()))?;
+        let elem = payload.elem;
+        let weights = if elem == ElemType::F32 {
+            LoadedWeights::F32(Arc::new(
+                payload.weights.iter().map(|m| m.decode::<f32>()).collect(),
+            ))
+        } else {
+            LoadedWeights::Words(Arc::new(WordWeights::from_matrices(&payload.weights, elem)))
+        };
+        let program = Program::from_artifact(&art)?;
+        let loaded =
+            Arc::new(LoadedProgram { key, program: Arc::new(program), elem, weights });
+        let evicted = self.cache.insert(&ks, Arc::clone(&loaded));
+        Ok((loaded, CacheOutcome { hit: false, evicted }))
+    }
+
+    /// Every entry in the store (sorted by key string), with kind and
+    /// metadata resolved.
+    pub fn list(&self) -> Result<Vec<RegistryEntry>, RegistryError> {
+        let mut out = Vec::new();
+        for ks in self.backend.list()? {
+            let Some(key) = RegistryKey::parse(&ks) else { continue };
+            // A concurrent gc may remove the blob between list and get —
+            // skip vanished keys rather than failing the whole listing.
+            let Some(blob) = self.backend.get(&ks)? else { continue };
+            let base = Delta::sniff_base(&blob);
+            let kind = if base.is_some() { "delta" } else { "full" };
+            let model = self
+                .backend
+                .meta(&ks)?
+                .and_then(|m| json_str_field(&m, "model"))
+                .unwrap_or_default();
+            out.push(RegistryEntry { key, kind, model, blob_bytes: blob.len(), base });
+        }
+        Ok(out)
+    }
+
+    /// Resolve a user-facing spec to one key. Accepted forms, in order:
+    /// the exact `<content>-<arch>` string; a prefix of the content hash
+    /// (≥ 4 hex digits); a model name recorded at put time. With
+    /// `eligible` set (the fleet's device arch fingerprints), only keys an
+    /// eligible device can execute are considered, and a name that exists
+    /// for several eligible arch variants resolves to the variant of the
+    /// *earliest* eligible fingerprint (deterministic cross-arch
+    /// placement); without it, multiple matches are a typed
+    /// [`RegistryError::Ambiguous`].
+    pub fn find(
+        &self,
+        spec: &str,
+        eligible: Option<&[u64]>,
+    ) -> Result<RegistryKey, RegistryError> {
+        if let Some(key) = RegistryKey::parse(spec) {
+            return match self.backend.get(&key.to_string())? {
+                Some(_) => Ok(key),
+                None => Err(RegistryError::Miss(spec.to_string())),
+            };
+        }
+        let entries = self.list()?;
+        let ok = |k: &RegistryKey| eligible.map_or(true, |fps| fps.contains(&k.arch));
+        let spec_lc = spec.to_ascii_lowercase();
+        let by_prefix: Vec<RegistryKey> = if spec_lc.len() >= 4
+            && spec_lc.chars().all(|c| c.is_ascii_hexdigit())
+        {
+            entries
+                .iter()
+                .map(|e| e.key)
+                .filter(|k| ok(k) && format!("{:016x}", k.content).starts_with(&spec_lc))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let mut cands = by_prefix;
+        if cands.is_empty() {
+            cands = entries
+                .iter()
+                .filter(|e| e.model == spec && ok(&e.key))
+                .map(|e| e.key)
+                .collect();
+        }
+        match cands.len() {
+            0 => Err(RegistryError::Miss(spec.to_string())),
+            1 => Ok(cands[0]),
+            _ => {
+                if let Some(fps) = eligible {
+                    // The fleet can run several variants: pick the variant
+                    // of the earliest eligible fingerprint, content as the
+                    // tie-break, so resolution is deterministic.
+                    cands.sort_by_key(|k| {
+                        (fps.iter().position(|&f| f == k.arch).unwrap_or(usize::MAX), k.content)
+                    });
+                    Ok(cands[0])
+                } else {
+                    let list =
+                        cands.iter().map(|k| k.to_string()).collect::<Vec<_>>().join(", ");
+                    Err(RegistryError::Ambiguous(format!("{spec} matches {list}")))
+                }
+            }
+        }
+    }
+
+    /// Garbage-collect the store.
+    ///
+    /// Policy (docs/REGISTRY.md): **dangling deltas** — deltas whose base
+    /// chain is broken — are always deleted; they can never resolve again.
+    /// With an empty pin set nothing else is touched (the safe default:
+    /// every resolvable blob stays). With pins, the live set is the pinned
+    /// keys plus every base transitively reachable from them, and all
+    /// other blobs are deleted.
+    pub fn gc(&self, pins: &[RegistryKey]) -> Result<GcReport, RegistryError> {
+        // Snapshot: content hash → (key, immediate base link).
+        let mut present: HashMap<u64, (RegistryKey, Option<u64>)> = HashMap::new();
+        for ks in self.backend.list()? {
+            let Some(key) = RegistryKey::parse(&ks) else { continue };
+            let Some(blob) = self.backend.get(&ks)? else { continue };
+            present.insert(key.content, (key, Delta::sniff_base(&blob)));
+        }
+        // A delta resolves iff every base link exists and the chain
+        // terminates at a full blob within the depth cap.
+        let chain_ok = |start: u64| -> bool {
+            let mut c = start;
+            for _ in 0..=MAX_DELTA_DEPTH {
+                match present.get(&c) {
+                    None => return false,
+                    Some((_, None)) => return true,
+                    Some((_, Some(base))) => c = *base,
+                }
+            }
+            false
+        };
+        let mut live: HashSet<u64> = HashSet::new();
+        if pins.is_empty() {
+            for (&c, (_, base)) in &present {
+                if base.is_none() || chain_ok(c) {
+                    live.insert(c);
+                }
+            }
+        } else {
+            for pin in pins {
+                let mut c = pin.content;
+                for _ in 0..=MAX_DELTA_DEPTH {
+                    match present.get(&c) {
+                        None => break,
+                        Some((_, base)) => {
+                            live.insert(c);
+                            match base {
+                                None => break,
+                                Some(b) => c = *b,
+                            }
+                        }
+                    }
+                }
+            }
+            // Even under pins, a broken chain can never resolve — its
+            // members are dead regardless of pinning.
+            live.retain(|&c| chain_ok(c));
+        }
+        let mut report = GcReport::default();
+        for (&c, &(key, _)) in &present {
+            if live.contains(&c) {
+                report.kept.push(key);
+            } else {
+                self.backend.delete(&key.to_string())?;
+                self.cache.invalidate(&key.to_string());
+                report.deleted.push(key);
+            }
+        }
+        report.kept.sort();
+        report.deleted.sort();
+        Ok(report)
+    }
+
+    /// Verify every blob in the store: content hash against key, container
+    /// checksums, delta resolution, and the stream round-trip proof
+    /// ([`Artifact::verify`]).
+    pub fn verify_all(&self) -> Result<Vec<(RegistryKey, Result<ArtifactCheck, RegistryError>)>, RegistryError> {
+        let mut out = Vec::new();
+        for ks in self.backend.list()? {
+            let Some(key) = RegistryKey::parse(&ks) else { continue };
+            let r = self.get(key).and_then(|a| a.verify().map_err(RegistryError::Artifact));
+            out.push((key, r));
+        }
+        Ok(out)
+    }
+
+    /// Remove one key (blob + metadata); `Ok(false)` if absent.
+    pub fn delete(&self, key: RegistryKey) -> Result<bool, RegistryError> {
+        self.cache.invalidate(&key.to_string());
+        self.backend.delete(&key.to_string())
+    }
+}
+
+/// Human-readable structural diff between two artifacts — arch, per-layer
+/// dims/mapping decisions, instruction-class counts, payload. One line per
+/// difference; empty means byte-compatible structure (the containers may
+/// still differ in weights — weight *values* are deliberately not diffed,
+/// only their shape and element type).
+pub fn diff(a: &Artifact, b: &Artifact) -> Vec<String> {
+    let mut out = Vec::new();
+    if a.cfg != b.cfg {
+        out.push(format!(
+            "arch: {} ({:016x}) vs {} ({:016x})",
+            a.cfg.name(),
+            a.fingerprint(),
+            b.cfg.name(),
+            b.fingerprint()
+        ));
+    }
+    let (la, lb) = (a.chain.layers.len(), b.chain.layers.len());
+    if la != lb {
+        out.push(format!("layers: {la} vs {lb}"));
+    }
+    for (i, (ga, gb)) in a.chain.layers.iter().zip(&b.chain.layers).enumerate() {
+        if (ga.m, ga.k, ga.n) != (gb.m, gb.k, gb.n) {
+            out.push(format!(
+                "layer {i}: {}×{}×{} vs {}×{}×{}",
+                ga.m, ga.k, ga.n, gb.m, gb.k, gb.n
+            ));
+        }
+    }
+    for (i, (da, db)) in a.decision.per_layer.iter().zip(&b.decision.per_layer).enumerate() {
+        // Formatted comparison: one stable rendering of the mapping choice
+        // covers every field without requiring PartialEq on each.
+        let render = |d: &crate::mapper::Decision| {
+            format!(
+                "df={:?} vn={} tile=({},{},{}) nbc={} dup={} orders=({},{},{})",
+                d.choice.df,
+                d.choice.vn,
+                d.choice.m_t,
+                d.choice.k_t,
+                d.choice.n_t,
+                d.choice.nbc,
+                d.choice.dup,
+                d.i_order,
+                d.w_order,
+                d.o_order,
+            )
+        };
+        let (ra, rb) = (render(da), render(db));
+        if ra != rb {
+            out.push(format!("decision {i}: {ra} vs {rb}"));
+        }
+    }
+    match (a.verify(), b.verify()) {
+        (Ok(ca), Ok(cb)) => {
+            if ca.classes != cb.classes || ca.insts != cb.insts || ca.trace_bytes != cb.trace_bytes
+            {
+                out.push(format!(
+                    "trace: {} insts / {} B, classes {:?} vs {} insts / {} B, classes {:?}",
+                    ca.insts, ca.trace_bytes, ca.classes, cb.insts, cb.trace_bytes, cb.classes
+                ));
+            }
+        }
+        (ra, rb) => {
+            if let Err(e) = ra {
+                out.push(format!("left: verify failed: {e}"));
+            }
+            if let Err(e) = rb {
+                out.push(format!("right: verify failed: {e}"));
+            }
+        }
+    }
+    match (&a.payload, &b.payload) {
+        (Some(pa), Some(pb)) => {
+            if pa.elem != pb.elem {
+                out.push(format!("payload elem: {} vs {}", pa.elem, pb.elem));
+            }
+            let wa: usize = pa.weights.iter().map(|m| m.len()).sum();
+            let wb: usize = pb.weights.iter().map(|m| m.len()).sum();
+            if wa != wb {
+                out.push(format!("payload words: {wa} vs {wb}"));
+            } else if pa.weights != pb.weights {
+                out.push(format!("payload: same shape ({wa} words), different weight values"));
+            }
+        }
+        (Some(_), None) => out.push("payload: present vs none".to_string()),
+        (None, Some(_)) => out.push("payload: none vs present".to_string()),
+        (None, None) => {}
+    }
+    out
+}
+
+/// Compose a base artifact with replacement weights (the delta semantics):
+/// everything but the payload is reused verbatim.
+fn compose(
+    base: &Artifact,
+    elem: ElemType,
+    weights: &[Vec<u64>],
+) -> Result<Artifact, RegistryError> {
+    let payload = WeightsPayload::owned(elem, weights.to_vec());
+    crate::artifact::validate_payload_dims(&base.chain, &payload.weights)?;
+    let mut composed = base.clone();
+    composed.payload = Some(payload);
+    Ok(composed)
+}
+
+/// Model name recorded in metadata: the first chain layer's name (layer
+/// names share the chain's prefix by construction — `Chain::mlp("m", ..)`
+/// names layers `m_l0`, `m_l1`, …).
+fn model_name(art: &Artifact) -> String {
+    let first = &art.chain.layers[0].name;
+    first.split("_l").next().unwrap_or(first).to_string()
+}
+
+/// Hand-rolled metadata record (std-only JSON writing; the reader side
+/// only ever extracts flat string fields via [`json_str_field`]).
+fn meta_json(
+    key: &RegistryKey,
+    kind: &str,
+    model: &str,
+    layers: usize,
+    blob_bytes: usize,
+    base: Option<u64>,
+) -> String {
+    let base = base.map(|b| format!("{b:016x}")).unwrap_or_default();
+    format!(
+        "{{\"key\":\"{key}\",\"kind\":\"{kind}\",\"model\":\"{}\",\"layers\":{layers},\
+         \"blob_bytes\":{blob_bytes},\"base\":\"{base}\",\"content\":\"{:016x}\",\
+         \"arch\":\"{:016x}\"}}",
+        model.replace(['"', '\\'], "_"),
+        key.content,
+        key.arch,
+    )
+}
+
+/// Extract a flat string field from a metadata record. Only handles the
+/// escape-free strings [`meta_json`] writes (names are sanitized at write
+/// time) — not a general JSON parser.
+fn json_str_field(meta: &str, field: &str) -> Option<String> {
+    let tag = format!("\"{field}\":\"");
+    let at = meta.find(&tag)? + tag.len();
+    let rest = &meta[at..];
+    let end = rest.find('"')?;
+    Some(rest[..end].to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::config::ArchConfig;
+    use crate::artifact::Compiler;
+    use crate::mapper::chain::Chain;
+    use crate::util::Lcg;
+
+    fn sample_weights(chain: &Chain, elem: ElemType, seed: u64) -> Vec<Vec<u64>> {
+        let mut rng = Lcg::new(seed);
+        chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect()
+    }
+
+    fn compile(cfg: &ArchConfig, chain: &Chain, elem: ElemType, seed: u64) -> Artifact {
+        Compiler::new(cfg)
+            .elem(elem)
+            .weights(sample_weights(chain, elem, seed))
+            .compile(chain)
+            .unwrap()
+    }
+
+    fn mem_registry() -> Registry {
+        Registry::new(Box::new(MemBackend::new()), 4)
+    }
+
+    #[test]
+    fn put_get_verifies_content_address() {
+        let reg = mem_registry();
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("m", 8, &[8, 8]);
+        let art = compile(&cfg, &chain, ElemType::I32, 3);
+        let key = reg.put(&art).unwrap();
+        assert_eq!(key, reg.put(&art).unwrap(), "content addressing is idempotent");
+        let back = reg.get(key).unwrap();
+        assert_eq!(back, art);
+        assert_eq!(back.to_bytes(), art.to_bytes());
+        // A key that was never put is the typed miss.
+        let missing = RegistryKey { content: 0xdead, arch: key.arch };
+        assert!(matches!(reg.get(missing), Err(RegistryError::Miss(_))));
+    }
+
+    #[test]
+    fn corrupt_blob_is_detected_on_get() {
+        let reg = mem_registry();
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("m", 8, &[8, 8]);
+        let art = compile(&cfg, &chain, ElemType::I32, 4);
+        let key = reg.put(&art).unwrap();
+        // Overwrite the blob under the same key with different (valid
+        // container) bytes: the content hash no longer matches the key.
+        let other = compile(&cfg, &chain, ElemType::I32, 5);
+        reg.backend.put(&key.to_string(), &other.to_bytes(), "{}").unwrap();
+        assert!(matches!(reg.get(key), Err(RegistryError::Corrupt(_))));
+    }
+
+    #[test]
+    fn delta_resolves_and_composed_matches_full_recompile() {
+        let reg = mem_registry();
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("m", 8, &[8, 8]);
+        let elem = ElemType::BabyBear;
+        let base_art = compile(&cfg, &chain, elem, 10);
+        let base = reg.put(&base_art).unwrap();
+        let new_weights = sample_weights(&chain, elem, 11);
+        let dkey = reg.put_delta(base, elem, new_weights.clone()).unwrap();
+        assert_eq!(dkey.arch, base.arch);
+        assert_ne!(dkey.content, base.content);
+        // Resolution re-verifies the composed checksum…
+        let composed = reg.get(dkey).unwrap();
+        // …and the composed bytes are identical to a full recompile of the
+        // same chain with the new weights (deterministic compiler).
+        let full = Compiler::new(&cfg).elem(elem).weights(new_weights).compile(&chain).unwrap();
+        assert_eq!(composed.to_bytes(), full.to_bytes(), "delta ≡ full recompile, byte-exact");
+        // The stored delta blob is weights-only: much smaller than a full
+        // container whose payload dominates… at these tiny sizes just
+        // assert it parses as a delta.
+        let blob = reg.backend.get(&dkey.to_string()).unwrap().unwrap();
+        assert_eq!(Delta::sniff_base(&blob), Some(base.content));
+    }
+
+    #[test]
+    fn dangling_delta_is_typed_and_gc_removes_it() {
+        let reg = mem_registry();
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("m", 8, &[8, 8]);
+        let elem = ElemType::I32;
+        let base = reg.put(&compile(&cfg, &chain, elem, 1)).unwrap();
+        let dkey = reg.put_delta(base, elem, sample_weights(&chain, elem, 2)).unwrap();
+        reg.delete(base).unwrap();
+        assert!(matches!(reg.get(dkey), Err(RegistryError::Dangling { .. })));
+        let report = reg.gc(&[]).unwrap();
+        assert_eq!(report.deleted, vec![dkey], "dangling delta swept");
+        assert!(matches!(reg.get(dkey), Err(RegistryError::Miss(_))));
+    }
+
+    #[test]
+    fn gc_with_pins_keeps_base_closure() {
+        let reg = mem_registry();
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("m", 8, &[8, 8]);
+        let elem = ElemType::I32;
+        let base = reg.put(&compile(&cfg, &chain, elem, 1)).unwrap();
+        let dkey = reg.put_delta(base, elem, sample_weights(&chain, elem, 2)).unwrap();
+        let stray = reg.put(&compile(&cfg, &chain, elem, 9)).unwrap();
+        let report = reg.gc(&[dkey]).unwrap();
+        assert!(report.kept.contains(&dkey), "pinned delta kept");
+        assert!(report.kept.contains(&base), "its base kept (live chain)");
+        assert_eq!(report.deleted, vec![stray], "unpinned blob collected");
+        assert!(reg.get(dkey).is_ok(), "the live chain still resolves after gc");
+    }
+
+    #[test]
+    fn find_resolves_exact_prefix_name_and_eligibility() {
+        let reg = mem_registry();
+        let chain = Chain::mlp("modelx", 8, &[8, 8]);
+        let elem = ElemType::I32;
+        let a44 = compile(&ArchConfig::paper(4, 4), &chain, elem, 1);
+        let a48 = compile(&ArchConfig::paper(4, 8), &chain, elem, 1);
+        let k44 = reg.put(&a44).unwrap();
+        let k48 = reg.put(&a48).unwrap();
+        // Exact key string.
+        assert_eq!(reg.find(&k44.to_string(), None).unwrap(), k44);
+        // Content-hash prefix.
+        let prefix = format!("{:016x}", k48.content)[..8].to_string();
+        assert_eq!(reg.find(&prefix, None).unwrap(), k48);
+        // Name without eligibility: ambiguous across the two arch variants.
+        assert!(matches!(reg.find("modelx", None), Err(RegistryError::Ambiguous(_))));
+        // Name with eligibility: picks the variant the fleet can run.
+        assert_eq!(reg.find("modelx", Some(&[k48.arch])).unwrap(), k48);
+        assert_eq!(reg.find("modelx", Some(&[k44.arch, k48.arch])).unwrap(), k44);
+        // Eligibility excludes everything: typed miss.
+        assert!(matches!(
+            reg.find("modelx", Some(&[0x1234])),
+            Err(RegistryError::Miss(_))
+        ));
+    }
+
+    #[test]
+    fn load_shares_one_allocation_across_callers() {
+        let reg = mem_registry();
+        let cfg = ArchConfig::paper(4, 4);
+        let chain = Chain::mlp("m", 8, &[8, 8]);
+        let art = compile(&cfg, &chain, ElemType::Goldilocks, 6);
+        let key = reg.put(&art).unwrap();
+        let (a, oa) = reg.load(key).unwrap();
+        let (b, ob) = reg.load(key).unwrap();
+        let (c, oc) = reg.load(key).unwrap();
+        assert!(!oa.hit && ob.hit && oc.hit);
+        assert!(Arc::ptr_eq(&a, &b) && Arc::ptr_eq(&b, &c), "one loaded entry");
+        assert!(Arc::ptr_eq(&a.program, &b.program), "one compiled program");
+        let (LoadedWeights::Words(wa), LoadedWeights::Words(wc)) = (&a.weights, &c.weights)
+        else {
+            panic!("field-typed entry");
+        };
+        assert!(Arc::ptr_eq(wa, wc), "one decoded weight buffer across callers");
+        let s = reg.cache_stats();
+        assert_eq!((s.hits, s.misses), (2, 1));
+    }
+
+    #[test]
+    fn meta_json_roundtrips_fields() {
+        let key = RegistryKey { content: 0xab, arch: 0xcd };
+        let m = meta_json(&key, "full", "mlp_demo", 3, 128, None);
+        assert_eq!(json_str_field(&m, "model").unwrap(), "mlp_demo");
+        assert_eq!(json_str_field(&m, "kind").unwrap(), "full");
+        assert_eq!(json_str_field(&m, "base").unwrap(), "");
+        assert!(json_str_field(&m, "nope").is_none());
+        // Quotes in a hostile model name are sanitized, not emitted.
+        let hostile = meta_json(&key, "full", "a\"b", 1, 1, Some(7));
+        assert_eq!(json_str_field(&hostile, "model").unwrap(), "a_b");
+    }
+}

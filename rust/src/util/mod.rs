@@ -17,6 +17,16 @@ pub use prop::Gen;
 pub use rng::Lcg;
 pub use stats::{geomean, mean, median, percentile};
 
+/// FNV-1a 64-bit hash — the one hashing implementation shared by the
+/// `.minisa` container checksum, the arch fingerprint, and the registry's
+/// content addresses (`registry::RegistryKey`). Offset basis and prime per
+/// the FNV reference parameters.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    bytes
+        .iter()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, &b| (h ^ b as u64).wrapping_mul(0x100_0000_01b3))
+}
+
 /// Integer ceiling division.
 #[inline]
 pub fn ceil_div(a: usize, b: usize) -> usize {
@@ -74,6 +84,18 @@ mod tests {
         assert_eq!(round_up(1, 8), 8);
         assert_eq!(round_up(8, 8), 8);
         assert_eq!(round_up(9, 8), 16);
+    }
+
+    /// Known FNV-1a 64-bit vectors (from the FNV reference test suite) —
+    /// the checksum, fingerprint, and registry content hash all depend on
+    /// these exact parameters never drifting.
+    #[test]
+    fn fnv64_known_vectors() {
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv64(b"foobar"), 0x8594_4171_f739_67e8);
+        // Order sensitivity (not a pure XOR of bytes).
+        assert_ne!(fnv64(b"ab"), fnv64(b"ba"));
     }
 
     #[test]

@@ -1,0 +1,323 @@
+//! Registry battery — the acceptance criteria of the content-addressed
+//! artifact registry, as tests:
+//!
+//! * **Zero-downtime hot swap**: a loadgen-style stream is served across a
+//!   [`Server::swap`] to a stored *delta* — every request is answered
+//!   exactly once, bit-exact against whichever artifact version admitted
+//!   it, with zero errors and zero program compiles on the serving path;
+//! * **Zero-copy load**: three sessions registered under one content hash
+//!   share a single decoded weight allocation (pointer identity), with the
+//!   shared program cache reporting exactly one miss;
+//! * **Delta round-trip**: a weights-only delta resolves to bytes
+//!   *identical* to a full recompile of the same chain + weights;
+//! * **Concurrency**: N threads put/get/gc one on-disk store without torn
+//!   blobs; a get of a gc'd key is the typed miss, never a panic or a
+//!   corruption report; the program cache stays within capacity under
+//!   racing loads.
+
+use std::sync::Arc;
+
+use minisa::arch::ArchConfig;
+use minisa::arith::ElemType;
+use minisa::artifact::{Artifact, Compiler};
+use minisa::coordinator::serve::{
+    execute_program_words, spawn_with_options, ArtifactSource, NaiveExecutor, Request,
+    ServerOptions, WordWeights,
+};
+use minisa::mapper::chain::Chain;
+use minisa::program::Program;
+use minisa::registry::{DirBackend, MemBackend, Registry, RegistryError, RegistryKey};
+use minisa::util::Lcg;
+
+fn sample_weights(chain: &Chain, elem: ElemType, seed: u64) -> Vec<Vec<u64>> {
+    let mut rng = Lcg::new(seed);
+    chain.layers.iter().map(|g| elem.sample_words(&mut rng, g.k * g.n)).collect()
+}
+
+fn compile(cfg: &ArchConfig, chain: &Chain, elem: ElemType, seed: u64) -> Artifact {
+    Compiler::new(cfg)
+        .elem(elem)
+        .weights(sample_weights(chain, elem, seed))
+        .compile(chain)
+        .expect("compile")
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("minisa_regtest_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Every request answered exactly once and bit-exact against whichever
+/// artifact version admitted it, across a hot swap from a registry base to
+/// a stored delta — zero errors, zero compiles on the serving path.
+#[test]
+fn hot_swap_is_zero_downtime_and_bit_exact() {
+    let cfg = ArchConfig::paper(4, 4);
+    let elem = ElemType::BabyBear;
+    let chain = Chain::mlp("swapmlp", 4, &[8, 12, 8]);
+    let reg = Arc::new(Registry::new(Box::new(MemBackend::new()), 4));
+
+    let v1 = compile(&cfg, &chain, elem, 11);
+    let base_key = reg.put(&v1).unwrap();
+    let w2 = sample_weights(&chain, elem, 22);
+    let delta_key = reg.put_delta(base_key, elem, w2.clone()).unwrap();
+    assert_ne!(base_key, delta_key);
+
+    // Reference oracle: the exact output stream each version must produce.
+    let prog = Program::from_artifact(&v1).unwrap();
+    let rows = 4usize;
+    let mut rng = Lcg::new(7);
+    let input = elem.sample_words(&mut rng, rows * prog.in_features());
+    let expected1 =
+        execute_program_words(&prog, rows, &input, &WordWeights::new(sample_weights(&chain, elem, 11), elem))
+            .unwrap();
+    let expected2 =
+        execute_program_words(&prog, rows, &input, &WordWeights::new(w2, elem)).unwrap();
+    assert_ne!(expected1, expected2, "versions must be distinguishable");
+
+    let opts = ServerOptions { registry: Some(Arc::clone(&reg)), ..Default::default() };
+    let (tx, rx, handle, server) =
+        spawn_with_options(&cfg, Arc::new(NaiveExecutor), opts);
+    let pid = server
+        .register(ArtifactSource::Registry { key: base_key.to_string() })
+        .unwrap();
+
+    const PRE: u64 = 24;
+    const TOTAL: u64 = 48;
+    for id in 0..PRE {
+        tx.send(Request::for_program_words(id, pid, rows, input.clone())).unwrap();
+    }
+    // Atomic switch: once swap() returns, every later admission is v2.
+    server
+        .swap(pid, ArtifactSource::Registry { key: delta_key.to_string() })
+        .unwrap();
+    for id in PRE..TOTAL {
+        tx.send(Request::for_program_words(id, pid, rows, input.clone())).unwrap();
+    }
+    drop(tx);
+
+    let mut seen = vec![0u32; TOTAL as usize];
+    let (mut n_v1, mut n_v2) = (0u64, 0u64);
+    for resp in rx.iter() {
+        assert!(resp.error.is_none(), "request {} errored: {:?}", resp.id, resp.error);
+        seen[resp.id as usize] += 1;
+        if resp.output_words == expected1 {
+            n_v1 += 1;
+            assert!(resp.id < PRE, "v1 output after the swap returned (id {})", resp.id);
+        } else if resp.output_words == expected2 {
+            n_v2 += 1;
+        } else {
+            panic!("request {} matches neither artifact version", resp.id);
+        }
+    }
+    assert!(seen.iter().all(|&c| c == 1), "every request answered exactly once: {seen:?}");
+    // Both versions actually served (the stream straddled the swap), and
+    // everything sent after the swap admitted against v2.
+    assert!(n_v2 >= TOTAL - PRE, "post-swap requests are all v2 ({n_v1} v1 / {n_v2} v2)");
+
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.served, TOTAL);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.swaps, 1);
+    assert_eq!(stats.swap_failed, 0);
+    assert_eq!(stats.program_compiles, 0, "no compile ever touches the serving path");
+    assert_eq!(stats.artifact_loads, 2, "initial session + swap replacement");
+    assert_eq!(stats.registry_misses, 2, "base load and delta load each miss once");
+}
+
+/// Three sessions registered under one content hash share a single decoded
+/// weight allocation — pointer identity, not just value equality — and the
+/// shared program cache reports exactly one miss.
+#[test]
+fn three_sessions_one_weight_allocation() {
+    let cfg = ArchConfig::paper(4, 4);
+    let elem = ElemType::Goldilocks;
+    let chain = Chain::mlp("shared", 4, &[8, 12, 8]);
+    let reg = Arc::new(Registry::new(Box::new(MemBackend::new()), 4));
+    let key = reg.put(&compile(&cfg, &chain, elem, 33)).unwrap();
+
+    let opts = ServerOptions { registry: Some(Arc::clone(&reg)), ..Default::default() };
+    let (tx, rx, handle, server) = spawn_with_options(&cfg, Arc::new(NaiveExecutor), opts);
+    let pids: Vec<_> = (0..3)
+        .map(|_| server.register(ArtifactSource::Registry { key: key.to_string() }).unwrap())
+        .collect();
+    let ptrs: Vec<_> = pids.iter().map(|&p| server.weights_ptr(p).unwrap()).collect();
+    assert_eq!(ptrs[0], ptrs[1]);
+    assert_eq!(ptrs[1], ptrs[2], "one allocation across all sessions: {ptrs:?}");
+    let cs = reg.cache_stats();
+    assert_eq!((cs.misses, cs.hits), (1, 2));
+
+    // All three sessions serve, bit-identically (same content hash).
+    let prog = server.program(pids[0]).unwrap();
+    let mut rng = Lcg::new(9);
+    let input = elem.sample_words(&mut rng, 4 * prog.in_features());
+    for (i, &p) in pids.iter().enumerate() {
+        tx.send(Request::for_program_words(i as u64, p, 4, input.clone())).unwrap();
+    }
+    drop(tx);
+    let outs: Vec<_> = rx.iter().map(|r| {
+        assert!(r.error.is_none());
+        r.output_words
+    }).collect();
+    assert_eq!(outs.len(), 3);
+    assert_eq!(outs[0], outs[1]);
+    assert_eq!(outs[1], outs[2]);
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.program_compiles, 0);
+    assert_eq!(stats.artifact_loads, 3);
+    assert_eq!((stats.registry_misses, stats.registry_hits), (1, 2));
+}
+
+/// A weights-only delta round-trips to bytes identical to a full recompile
+/// of the same chain + weights — content addressing is a fixed point of
+/// composition.
+#[test]
+fn delta_round_trips_to_full_recompile_bytes() {
+    let cfg = ArchConfig::paper(4, 8);
+    let elem = ElemType::I32;
+    let chain = Chain::mlp("deltamlp", 8, &[8, 16, 8]);
+    let reg = Registry::new(Box::new(MemBackend::new()), 4);
+
+    let base_key = reg.put(&compile(&cfg, &chain, elem, 5)).unwrap();
+    let w2 = sample_weights(&chain, elem, 6);
+    let delta_key = reg.put_delta(base_key, elem, w2.clone()).unwrap();
+
+    let resolved = reg.get(delta_key).unwrap();
+    let full = Compiler::new(&cfg).elem(elem).weights(w2).compile(&chain).unwrap();
+    assert_eq!(resolved.to_bytes(), full.to_bytes(), "delta ≡ full recompile, byte for byte");
+    // And the content address *is* the full recompile's address.
+    let (full_key, _) = RegistryKey::of(&full);
+    assert_eq!(delta_key, full_key);
+}
+
+/// N threads hammer one on-disk store with put/get/gc. No torn blobs: every
+/// get either verifies fully or is the typed miss — never a corruption
+/// report, never a panic.
+#[test]
+fn concurrent_put_get_gc_without_torn_blobs() {
+    let dir = temp_dir("conc");
+    let cfg = ArchConfig::paper(4, 4);
+    let elem = ElemType::BabyBear;
+    // A pool of distinct artifacts (distinct weight seeds → distinct keys).
+    let chain = Chain::mlp("conc", 4, &[8, 12, 8]);
+    let pool: Vec<Artifact> = (0..4).map(|s| compile(&cfg, &chain, elem, 100 + s)).collect();
+    let keys: Vec<RegistryKey> = pool.iter().map(|a| RegistryKey::of(a).0).collect();
+
+    let reg = Arc::new(Registry::new(Box::new(DirBackend::open(&dir).unwrap()), 2));
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            let reg = Arc::clone(&reg);
+            let pool = pool.clone();
+            let keys = keys.clone();
+            std::thread::spawn(move || {
+                for i in 0..20 {
+                    let j = (t + i) % pool.len();
+                    match (t + i) % 3 {
+                        0 => {
+                            reg.put(&pool[j]).unwrap();
+                        }
+                        1 => match reg.get(keys[j]) {
+                            // get() verified the content hash internally.
+                            Ok(art) => assert_eq!(RegistryKey::of(&art).0, keys[j]),
+                            Err(RegistryError::Miss(_)) => {}
+                            Err(e) => panic!("torn or corrupt read: {e}"),
+                        },
+                        _ => {
+                            // Unpinned gc mid-race: deletes nothing that is
+                            // resolvable, must never error.
+                            reg.gc(&[]).unwrap();
+                            // Racing loads keep the LRU within capacity.
+                            match reg.load(keys[j]) {
+                                Ok(_) => {
+                                    let cs = reg.cache_stats();
+                                    assert!(cs.len <= cs.capacity, "LRU overflow: {cs:?}");
+                                }
+                                Err(RegistryError::Miss(_)) => {}
+                                Err(e) => panic!("load hit torn state: {e}"),
+                            }
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // Quiescent store verifies end to end.
+    for (key, check) in reg.verify_all().unwrap() {
+        check.unwrap_or_else(|e| panic!("{key} failed post-race verify: {e}"));
+    }
+    let cs = reg.cache_stats();
+    assert!(cs.len <= cs.capacity);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// gc honors the pinned closure (a pinned delta keeps its base alive), a
+/// get of a gc'd key is the typed miss, and a dangling delta is the typed
+/// error — then gc removes it.
+#[test]
+fn gc_pins_bases_and_misses_are_typed() {
+    let dir = temp_dir("gc");
+    let cfg = ArchConfig::paper(4, 4);
+    let elem = ElemType::Pallas;
+    let chain = Chain::mlp("gcmlp", 4, &[8, 8]);
+    let reg = Registry::new(Box::new(DirBackend::open(&dir).unwrap()), 2);
+
+    let base = reg.put(&compile(&cfg, &chain, elem, 1)).unwrap();
+    let delta = reg.put_delta(base, elem, sample_weights(&chain, elem, 2)).unwrap();
+    let loner = reg.put(&compile(&cfg, &chain, elem, 3)).unwrap();
+
+    // Pinning the delta keeps its transitive base; the loner goes.
+    let report = reg.gc(&[delta]).unwrap();
+    assert_eq!(report.deleted, vec![loner]);
+    assert_eq!(report.kept.len(), 2);
+    assert!(reg.get(base).is_ok());
+    assert!(reg.get(delta).is_ok());
+    match reg.get(loner) {
+        Err(RegistryError::Miss(_)) => {}
+        other => panic!("gc'd key must be the typed miss, got {other:?}"),
+    }
+
+    // Deleting the base under the delta makes the delta dangling — typed,
+    // and the next gc sweeps it.
+    assert!(reg.delete(base).unwrap());
+    match reg.get(delta) {
+        Err(RegistryError::Dangling { .. }) => {}
+        other => panic!("expected Dangling, got {other:?}"),
+    }
+    reg.gc(&[]).unwrap();
+    match reg.get(delta) {
+        Err(RegistryError::Miss(_)) => {}
+        other => panic!("dangling delta must be swept to a miss, got {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Cross-process durability: what one Registry handle puts, a second handle
+/// over the same directory resolves and fully verifies (the CI smoke runs
+/// the same flow across real processes via the CLI).
+#[test]
+fn second_handle_over_same_dir_resolves_deltas() {
+    let dir = temp_dir("dur");
+    let cfg = ArchConfig::paper(4, 4);
+    let elem = ElemType::Goldilocks;
+    let chain = Chain::mlp("dur", 4, &[8, 12, 8]);
+    let (base, delta) = {
+        let reg = Registry::new(Box::new(DirBackend::open(&dir).unwrap()), 2);
+        let base = reg.put(&compile(&cfg, &chain, elem, 41)).unwrap();
+        let delta = reg.put_delta(base, elem, sample_weights(&chain, elem, 42)).unwrap();
+        (base, delta)
+    };
+    let reg2 = Registry::new(Box::new(DirBackend::open(&dir).unwrap()), 2);
+    let art = reg2.get(delta).unwrap();
+    assert_eq!(RegistryKey::of(&art).0, delta);
+    assert!(reg2.get(base).is_ok());
+    let entries = reg2.list().unwrap();
+    assert_eq!(entries.len(), 2);
+    assert!(entries.iter().any(|e| e.kind == "delta" && e.base == Some(base.content)));
+    std::fs::remove_dir_all(&dir).ok();
+}
